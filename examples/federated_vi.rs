@@ -1,0 +1,57 @@
+//! Federated-learning scenario (paper §1: "multiple clients, e.g. a few
+//! hospitals... learn a model collaboratively without sharing local
+//! data"): K clients solve a shared co-coercive VI with *relative-noise*
+//! oracles over the **threaded** coordinator — real worker threads, real
+//! encoded bytes through the allgather transport, replicated state.
+//!
+//! Shows the Theorem-4 regime: under relative noise the adaptive step-size
+//! stays bounded away from zero and the gap falls at the fast rate, while
+//! the same code under absolute noise falls at the O(1/sqrt(T)) rate.
+//!
+//! ```bash
+//! cargo run --release --example federated_vi
+//! ```
+
+use qgenx::config::{ExperimentConfig, Variant};
+use qgenx::coordinator::run_threaded;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "federated".into();
+    cfg.problem.kind = "cocoercive".into();
+    cfg.problem.dim = 256;
+    cfg.workers = 6; // six hospitals
+    cfg.iters = 1500;
+    cfg.eval_every = 150;
+    cfg.algo.variant = Variant::OptimisticDualAveraging; // 1 oracle call/iter
+    cfg.net.latency_s = 20e-3; // WAN latency between hospitals
+    cfg.net.bandwidth_bps = 12.5e6; // 100 Mbit/s uplinks
+
+    for noise in ["relative", "absolute"] {
+        cfg.problem.noise = noise.into();
+        cfg.problem.rel_c = 1.0;
+        cfg.problem.sigma = 0.5;
+        println!("== {noise} noise, K={} clients, OptDA variant, threaded ==", cfg.workers);
+        let run = run_threaded(&cfg)?;
+        let rec = &run.recorder;
+        println!("  iter        gap       gamma    sim-time(s)");
+        let gaps = rec.get("gap").unwrap();
+        let gammas = rec.get("gamma").unwrap();
+        let times = rec.get("sim_time_cum").unwrap();
+        for i in 0..gaps.points.len() {
+            println!(
+                "  {:>6.0}  {:>10.5}  {:>9.4}  {:>10.2}",
+                gaps.points[i].0, gaps.points[i].1, gammas.points[i].1, times.points[i].1
+            );
+        }
+        println!(
+            "  replicas in sync: {} | total bits {:.2e} | level updates {}\n",
+            run.replicas.windows(2).all(|w| w[0] == w[1]),
+            rec.scalar("total_bits").unwrap(),
+            rec.scalar("level_updates").unwrap(),
+        );
+    }
+    println!("note: under relative noise gamma stabilizes (fast O(1/T) regime, Thm 4);");
+    println!("under absolute noise gamma decays ~1/sqrt(t) (order-optimal regime, Thm 3).");
+    Ok(())
+}

@@ -1,0 +1,210 @@
+"""AOT lowering: JAX (L2, calling the L1 Pallas kernels) -> HLO text +
+manifest.json, consumed by the Rust runtime (`rust/src/runtime/`).
+
+HLO *text* is the interchange format, NOT `lowered.compiler_ir().serialize()`:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Environment: QGENX_LM_PRESET=small|medium|large (default small).
+
+`make artifacts` drives this and is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.fused_extragrad import fused_extragrad
+from .kernels.quantize import quantize
+
+# Fixed shapes for the standalone kernel entries.
+QUANT_D = 4096
+QUANT_LEVELS = 16  # s = 14 interior levels (UQ4 alphabet)
+FUSED_D = 4096
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _describe(specs) -> list:
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs]
+
+
+def build_entries(lm_cfg: model.LMConfig, gan_cfg: model.GanConfig):
+    """Return {name: (fn, input_specs, output_specs)} for every artifact."""
+    p_lm = model.lm_param_count(lm_cfg)
+    pg, pd = model.gan_param_counts(gan_cfg)
+    f32, i32 = jnp.float32, jnp.int32
+
+    entries = {}
+
+    # ---- LM ----
+    lm_step = functools.partial(model.lm_step, cfg=lm_cfg)
+    entries["lm_step"] = (
+        lambda params, tokens: lm_step(params, tokens),
+        [_spec((p_lm,), f32), _spec((lm_cfg.batch, lm_cfg.seq), i32)],
+    )
+    lm_loss = functools.partial(model.lm_loss, cfg=lm_cfg)
+    entries["lm_loss"] = (
+        lambda params, tokens: (lm_loss(params, tokens),),
+        [_spec((p_lm,), f32), _spec((lm_cfg.batch, lm_cfg.seq), i32)],
+    )
+
+    # ---- GAN ----
+    b, nz, dd = gan_cfg.batch, gan_cfg.nz, gan_cfg.data_dim
+    entries["gan_disc_step"] = (
+        lambda td, tg, real, z, eps: model.gan_disc_step(td, tg, real, z, eps, gan_cfg),
+        [
+            _spec((pd,), f32),
+            _spec((pg,), f32),
+            _spec((b, dd), f32),
+            _spec((b, nz), f32),
+            _spec((b, 1), f32),
+        ],
+    )
+    entries["gan_gen_step"] = (
+        lambda td, tg, z: model.gan_gen_step(td, tg, z, gan_cfg),
+        [_spec((pd,), f32), _spec((pg,), f32), _spec((b, nz), f32)],
+    )
+    entries["gan_disc_w_step"] = (
+        lambda td, tg, real, z: model.gan_disc_w_step(td, tg, real, z, gan_cfg),
+        [_spec((pd,), f32), _spec((pg,), f32), _spec((b, dd), f32), _spec((b, nz), f32)],
+    )
+    entries["gan_pen_step"] = (
+        lambda td, tg, real, z, eps: model.gan_pen_step(td, tg, real, z, eps, gan_cfg),
+        [
+            _spec((pd,), f32),
+            _spec((pg,), f32),
+            _spec((b, dd), f32),
+            _spec((b, nz), f32),
+            _spec((b, 1), f32),
+        ],
+    )
+    entries["gan_sample"] = (
+        lambda tg, z: (model.generator(tg, z, gan_cfg),),
+        [_spec((pg,), f32), _spec((b, nz), f32)],
+    )
+
+    # ---- L1 kernels as standalone executables ----
+    entries["quantize"] = (
+        lambda v, levels, uniforms, norm: (quantize(v, levels, uniforms, norm),),
+        [
+            _spec((QUANT_D,), f32),
+            _spec((QUANT_LEVELS,), f32),
+            _spec((QUANT_D,), f32),
+            _spec((1,), f32),
+        ],
+    )
+    entries["fused_extragrad"] = (
+        lambda x, y, vb, vh, gammas: fused_extragrad(x, y, vb, vh, gammas),
+        [
+            _spec((FUSED_D,), f32),
+            _spec((FUSED_D,), f32),
+            _spec((FUSED_D,), f32),
+            _spec((FUSED_D,), f32),
+            _spec((2,), f32),
+        ],
+    )
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored; use --out-dir")
+    ap.add_argument("--preset", default=os.environ.get("QGENX_LM_PRESET", "small"))
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    lm_cfg = model.LM_PRESETS[args.preset]
+    gan_cfg = model.GanConfig()
+    entries = build_entries(lm_cfg, gan_cfg)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {
+        "lm": {
+            "preset": args.preset,
+            "params": model.lm_param_count(lm_cfg),
+            **dataclasses.asdict(lm_cfg),
+        },
+        "gan": {
+            "params_g": model.gan_param_counts(gan_cfg)[0],
+            "params_d": model.gan_param_counts(gan_cfg)[1],
+            **dataclasses.asdict(gan_cfg),
+        },
+        "quantize": {"d": QUANT_D, "levels": QUANT_LEVELS},
+        "fused_extragrad": {"d": FUSED_D},
+        "entries": {},
+    }
+
+    for name, (fn, in_specs) in entries.items():
+        if only is not None and name not in only:
+            continue
+        print(f"lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.tree_util.tree_leaves(jax.eval_shape(fn, *in_specs))
+        ]
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": _describe(in_specs),
+            "outputs": out_shapes,
+        }
+        print(f"  -> {path} ({len(text)} chars)")
+
+    # Initial parameters as raw little-endian f32 blobs, so Rust needs no
+    # numpy: params are just byte files.
+    lm_params = model.lm_init(lm_cfg, seed=0)
+    lm_params.tofile(os.path.join(out_dir, "lm_params_init.f32"))
+    tg, td = model.gan_init(gan_cfg, seed=0)
+    tg.tofile(os.path.join(out_dir, "gan_params_g_init.f32"))
+    td.tofile(os.path.join(out_dir, "gan_params_d_init.f32"))
+    manifest["inits"] = {
+        "lm": "lm_params_init.f32",
+        "gan_g": "gan_params_g_init.f32",
+        "gan_d": "gan_params_d_init.f32",
+    }
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest -> {os.path.join(out_dir, 'manifest.json')}")
+
+    # np import is used by model via lm_init; silence linters:
+    _ = np
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: fused Q-GenX iterate update.
+
+One pass over the parameter vector applying the paper's update rule
+(given the already-averaged decoded dual vectors):
+
+    x_half = x - gamma_cur * v_base        # extrapolation leg
+    y_next = y - v_half                    # dual accumulation
+    x_next = gamma_next * y_next           # lazy projection X = gamma Y
+
+Fusing the three avoids two extra HBM round-trips over the model vector —
+on a real TPU this is purely bandwidth-bound (arithmetic intensity ~0.75
+flop/byte), so fusion is worth exactly the 3x traffic reduction.
+Interpret mode on CPU; parity against ``ref.ref_fused_extragrad``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _fused_kernel(gammas_ref, x_ref, y_ref, vb_ref, vh_ref, xh_ref, yn_ref, xn_ref):
+    g_cur = gammas_ref[0]
+    g_next = gammas_ref[1]
+    x = x_ref[...]
+    y = y_ref[...]
+    x_half = x - g_cur * vb_ref[...]
+    y_next = y - vh_ref[...]
+    xh_ref[...] = x_half
+    yn_ref[...] = y_next
+    xn_ref[...] = g_next * y_next
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_extragrad(x, y, v_base, v_half, gammas, *, block=BLOCK):
+    """Apply one fused Q-GenX update.
+
+    Args:
+      x, y: f32[d] current primal / dual iterates (d multiple of block).
+      v_base, v_half: f32[d] averaged dual vectors (1/K sums).
+      gammas: f32[2] = [gamma_t, gamma_{t+1}].
+
+    Returns:
+      (x_half, y_next, x_next), each f32[d].
+    """
+    d = x.shape[0]
+    if d % block != 0:
+        raise ValueError(f"d={d} must be a multiple of block={block}")
+    grid = (d // block,)
+    blk = lambda: pl.BlockSpec((block,), lambda i: (i,))
+    out_shape = jax.ShapeDtypeStruct((d,), jnp.float32)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),  # gammas: replicated
+            blk(),
+            blk(),
+            blk(),
+            blk(),
+        ],
+        out_specs=(blk(), blk(), blk()),
+        out_shape=(out_shape, out_shape, out_shape),
+        interpret=True,
+    )(gammas, x, y, v_base, v_half)

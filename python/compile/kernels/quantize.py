@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: stochastic level quantization (paper Definition 1).
+
+This is the paper's compute hot-spot expressed for the TPU memory
+hierarchy. Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA
+reference (torch_cgx) tiles over threadblocks with the bucket in shared
+memory; here the same schedule is expressed with a `BlockSpec` grid —
+one program instance per block of `BLOCK` coordinates streamed
+HBM -> VMEM, the (tiny) level table replicated into VMEM for every
+instance, and the per-bucket norm delivered as a scalar operand. The bin
+search is branchless (broadcast compare + row sum => one (BLOCK, L) VPU
+op), so the kernel is a single pass over `v` with no gather.
+
+MUST run with interpret=True on CPU PJRT: real TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot execute. Correctness is pinned to
+`ref.ref_quantize` (bit-identical math) by python/tests/test_kernel.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size over the coordinate axis. VMEM budget per instance:
+# v + uniforms + out (3 * BLOCK * 4B) + levels (L * 4B) ~ 48 KiB at
+# BLOCK = 4096, L <= 256 — comfortably inside a TPU core's ~16 MiB VMEM
+# with generous double-buffering headroom.
+BLOCK = 4096
+
+
+def _quantize_kernel(norm_ref, v_ref, u_ref, levels_ref, out_ref):
+    """One block: quantize BLOCK coordinates against the full level table."""
+    v = v_ref[...]  # (BLOCK,)
+    u_rand = u_ref[...]  # (BLOCK,)
+    levels = levels_ref[...]  # (L,)
+    norm = norm_ref[0]
+
+    inv = jnp.where(norm > 0.0, 1.0 / norm, 0.0)
+    mag = jnp.minimum(jnp.abs(v) * inv, 1.0)
+
+    # Branchless bin search: tau = #{interior levels <= mag}, computed as a
+    # (BLOCK, L-2) compare + row-sum — VPU-friendly, no gather.
+    interior = levels[1:-1]
+    tau = jnp.sum(mag[:, None] >= interior[None, :], axis=1).astype(jnp.int32)
+
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (mag - lo) / (hi - lo)
+    up = (u_rand < xi).astype(jnp.int32)
+    sym = tau + up
+    quantized = jnp.sign(v) * norm * levels[sym]
+    out_ref[...] = jnp.where(norm > 0.0, quantized, jnp.zeros_like(v))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def quantize(v, levels, uniforms, norm, *, block=BLOCK):
+    """Quantize a (padded) vector with the Pallas kernel.
+
+    Args:
+      v: f32[d] with d a multiple of ``block`` (pad with zeros if needed —
+        zero coordinates quantize to zero and are wire-free anyway).
+      levels: f32[L] full level sequence (0 ... 1).
+      uniforms: f32[d] U[0,1) randomness.
+      norm: f32[1] scalar norm of the *whole* vector (single bucket; the
+        L2 wrapper loops buckets by calling this per bucket slice or maps
+        over a (nb, bucket) reshape).
+
+    Returns:
+      f32[d] dequantized reconstruction.
+    """
+    d = v.shape[0]
+    if d % block != 0:
+        raise ValueError(f"d={d} must be a multiple of block={block}")
+    grid = (d // block,)
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # norm: replicated scalar
+            pl.BlockSpec((block,), lambda i: (i,)),  # v: streamed blocks
+            pl.BlockSpec((block,), lambda i: (i,)),  # uniforms: streamed
+            pl.BlockSpec(levels.shape, lambda i: (0,)),  # levels: replicated
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(norm, v, uniforms, levels)
+
+
+def quantize_bucketed(v, levels, uniforms, bucket_size):
+    """Bucketed quantization: split ``v`` into ``bucket_size`` buckets, each
+    with its own L2 norm (torch_cgx-style; what the Rust wire path does).
+
+    Pure-jnp orchestration around the kernel: norms are computed at the L2
+    layer, the kernel is vmapped over buckets.
+    """
+    d = v.shape[0]
+    if d % bucket_size != 0:
+        raise ValueError(f"d={d} must be a multiple of bucket_size={bucket_size}")
+    nb = d // bucket_size
+    vb = v.reshape(nb, bucket_size)
+    ub = uniforms.reshape(nb, bucket_size)
+    norms = jnp.linalg.norm(vb, axis=1, keepdims=True)  # (nb, 1)
+
+    def one_bucket(vi, ui, ni):
+        block = min(BLOCK, bucket_size)
+        return quantize(vi, levels, ui, ni, block=block)
+
+    out = jax.vmap(one_bucket, in_axes=(0, 0, 0))(vb, ub, norms)
+    return out.reshape(d)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must agree with its `ref_*` counterpart bit-for-bit under interpret mode
+(same dtype, same math). pytest enforces this (see python/tests).
+
+The quantization reference mirrors Definition 1 of the paper and the Rust
+implementation in `rust/src/quant/quantizer.rs`:
+
+    u_i  = |v_i| / norm                       (norm computed by the caller)
+    tau  = #{ interior levels <= u_i }
+    xi   = (u_i - l_tau) / (l_{tau+1} - l_tau)
+    sym  = tau + 1{ uniform_i < xi }
+    out  = sign(v_i) * norm * levels[sym]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_quantize(v, levels, uniforms, norm):
+    """Stochastically quantize ``v`` against ``levels``.
+
+    Args:
+      v: f32[d] vector to quantize.
+      levels: f32[L] full level sequence including endpoints 0 and 1
+        (L = s + 2, strictly increasing).
+      uniforms: f32[d] i.i.d. U[0,1) randomness (explicit for determinism).
+      norm: f32 scalar, the L^q norm of ``v`` (0 => output all zeros).
+
+    Returns:
+      f32[d] dequantized reconstruction ``Q_l(v)``.
+    """
+    v = jnp.asarray(v, jnp.float32)
+    levels = jnp.asarray(levels, jnp.float32)
+    uniforms = jnp.asarray(uniforms, jnp.float32)
+    norm = jnp.asarray(norm, jnp.float32)
+
+    inv = jnp.where(norm > 0.0, 1.0 / norm, 0.0)
+    mag = jnp.minimum(jnp.abs(v) * inv, 1.0)
+
+    # tau = number of *interior* levels (levels[1:-1]) <= mag; a branchless
+    # bin search via broadcast-compare-sum. Shape: (d,).
+    interior = levels[1:-1]
+    tau = jnp.sum(mag[:, None] >= interior[None, :], axis=1).astype(jnp.int32)
+
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (mag - lo) / (hi - lo)
+    up = (uniforms < xi).astype(jnp.int32)
+    sym = tau + up
+    out = jnp.sign(v) * norm * levels[sym]
+    return jnp.where(norm > 0.0, out, jnp.zeros_like(v))
+
+
+def ref_quantize_symbols(v, levels, uniforms, norm):
+    """Same math as :func:`ref_quantize` but returns the integer symbols
+    (useful for wire-format parity tests against the Rust encoder)."""
+    v = jnp.asarray(v, jnp.float32)
+    levels = jnp.asarray(levels, jnp.float32)
+    uniforms = jnp.asarray(uniforms, jnp.float32)
+    norm = jnp.asarray(norm, jnp.float32)
+    inv = jnp.where(norm > 0.0, 1.0 / norm, 0.0)
+    mag = jnp.minimum(jnp.abs(v) * inv, 1.0)
+    interior = levels[1:-1]
+    tau = jnp.sum(mag[:, None] >= interior[None, :], axis=1).astype(jnp.int32)
+    lo = levels[tau]
+    hi = levels[tau + 1]
+    xi = (mag - lo) / (hi - lo)
+    up = (uniforms < xi).astype(jnp.int32)
+    return jnp.where(norm > 0.0, tau + up, jnp.zeros_like(tau))
+
+
+def ref_fused_extragrad(x, y, v_base, v_half, gamma_cur, gamma_next):
+    """Reference for the fused Q-GenX update kernel (one iteration of the
+    paper's update rule, given already-averaged dual vectors):
+
+        x_half = x - gamma_cur * v_base
+        y_next = y - v_half
+        x_next = gamma_next * y_next
+
+    Returns (x_half, y_next, x_next).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    x_half = x - jnp.float32(gamma_cur) * jnp.asarray(v_base, jnp.float32)
+    y_next = y - jnp.asarray(v_half, jnp.float32)
+    x_next = jnp.float32(gamma_next) * y_next
+    return x_half, y_next, x_next

@@ -1,0 +1,322 @@
+"""L2: the paper's compute graphs in JAX — a tiny-GPT causal LM and a
+WGAN-GP-style 2D GAN — exposed as flat-parameter-vector functions so the
+Rust coordinator can treat every model's dual vector uniformly as f32[P]
+(DESIGN.md §5.2).
+
+Everything here is build-time only: `aot.py` lowers these functions to HLO
+text once; Rust loads and executes them via PJRT. LayerNorm (not BatchNorm)
+throughout, matching the paper's experimental setup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# Flat parameter packing
+# --------------------------------------------------------------------------
+
+
+class Packer:
+    """Maps a list of named shapes to slices of one flat f32 vector."""
+
+    def __init__(self):
+        self.shapes: List[Tuple[str, Tuple[int, ...]]] = []
+        self.offsets: Dict[str, Tuple[int, int, Tuple[int, ...]]] = {}
+        self.total = 0
+
+    def add(self, name: str, shape: Tuple[int, ...]) -> None:
+        size = int(np.prod(shape)) if shape else 1
+        self.offsets[name] = (self.total, size, shape)
+        self.shapes.append((name, shape))
+        self.total += size
+
+    def get(self, flat, name: str):
+        off, size, shape = self.offsets[name]
+        # Static slice: offsets are Python ints, so XLA sees a fixed layout.
+        return flat[off : off + size].reshape(shape)
+
+    def pack(self, arrays: Dict[str, np.ndarray]) -> np.ndarray:
+        flat = np.zeros(self.total, dtype=np.float32)
+        for name, (off, size, _shape) in self.offsets.items():
+            a = np.asarray(arrays[name], dtype=np.float32).reshape(-1)
+            assert a.size == size, f"{name}: {a.size} != {size}"
+            flat[off : off + size] = a
+        return flat
+
+
+# --------------------------------------------------------------------------
+# Tiny-GPT causal language model
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    seq: int = 64
+    d_ff: int = 512
+    batch: int = 8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+LM_PRESETS = {
+    # ~0.8M params: CI / pytest scale.
+    "small": LMConfig(vocab=256, d_model=128, n_layers=2, n_heads=4, seq=64, d_ff=512, batch=8),
+    # ~3.4M params: quick E2E runs.
+    "medium": LMConfig(vocab=256, d_model=256, n_layers=4, n_heads=8, seq=128, d_ff=1024, batch=8),
+    # ~19M params: the recorded E2E experiment.
+    "large": LMConfig(vocab=512, d_model=512, n_layers=6, n_heads=8, seq=128, d_ff=2048, batch=8),
+}
+
+
+def lm_packer(cfg: LMConfig) -> Packer:
+    p = Packer()
+    p.add("embed", (cfg.vocab, cfg.d_model))
+    p.add("pos", (cfg.seq, cfg.d_model))
+    for l in range(cfg.n_layers):
+        p.add(f"l{l}.ln1.g", (cfg.d_model,))
+        p.add(f"l{l}.ln1.b", (cfg.d_model,))
+        p.add(f"l{l}.wq", (cfg.d_model, cfg.d_model))
+        p.add(f"l{l}.wk", (cfg.d_model, cfg.d_model))
+        p.add(f"l{l}.wv", (cfg.d_model, cfg.d_model))
+        p.add(f"l{l}.wo", (cfg.d_model, cfg.d_model))
+        p.add(f"l{l}.ln2.g", (cfg.d_model,))
+        p.add(f"l{l}.ln2.b", (cfg.d_model,))
+        p.add(f"l{l}.w1", (cfg.d_model, cfg.d_ff))
+        p.add(f"l{l}.b1", (cfg.d_ff,))
+        p.add(f"l{l}.w2", (cfg.d_ff, cfg.d_model))
+        p.add(f"l{l}.b2", (cfg.d_model,))
+    p.add("lnf.g", (cfg.d_model,))
+    p.add("lnf.b", (cfg.d_model,))
+    return p
+
+
+def lm_param_count(cfg: LMConfig) -> int:
+    return lm_packer(cfg).total
+
+
+def lm_init(cfg: LMConfig, seed: int = 0) -> np.ndarray:
+    """GPT-2-style init into a flat vector."""
+    rng = np.random.default_rng(seed)
+    p = lm_packer(cfg)
+    arrays = {}
+    for name, (_, _size, shape) in p.offsets.items():
+        if name.endswith(".b") or name.endswith(".b1") or name.endswith(".b2"):
+            arrays[name] = np.zeros(shape, np.float32)
+        elif name.endswith(".g"):
+            arrays[name] = np.ones(shape, np.float32)
+        elif name == "pos":
+            arrays[name] = rng.normal(0, 0.01, shape).astype(np.float32)
+        else:
+            scale = 0.02
+            if name.endswith("wo") or name.endswith("w2"):
+                # residual-branch scaling
+                scale = 0.02 / np.sqrt(2.0 * cfg.n_layers)
+            arrays[name] = rng.normal(0, scale, shape).astype(np.float32)
+    return p.pack(arrays)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def lm_loss(params_flat, tokens, cfg: LMConfig):
+    """Mean next-token cross-entropy. tokens: i32[batch, seq]."""
+    p = lm_packer(cfg)
+    x = p.get(params_flat, "embed")[tokens] + p.get(params_flat, "pos")[None, :, :]
+    b, s, dm = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    causal = jnp.tril(jnp.ones((s, s), bool))
+
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, p.get(params_flat, f"l{l}.ln1.g"), p.get(params_flat, f"l{l}.ln1.b"))
+        q = (h @ p.get(params_flat, f"l{l}.wq")).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        k = (h @ p.get(params_flat, f"l{l}.wk")).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        v = (h @ p.get(params_flat, f"l{l}.wv")).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+        att = jnp.where(causal[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, dm)
+        x = x + o @ p.get(params_flat, f"l{l}.wo")
+
+        h = _layernorm(x, p.get(params_flat, f"l{l}.ln2.g"), p.get(params_flat, f"l{l}.ln2.b"))
+        h = jax.nn.gelu(h @ p.get(params_flat, f"l{l}.w1") + p.get(params_flat, f"l{l}.b1"))
+        x = x + h @ p.get(params_flat, f"l{l}.w2") + p.get(params_flat, f"l{l}.b2")
+
+    x = _layernorm(x, p.get(params_flat, "lnf.g"), p.get(params_flat, "lnf.b"))
+    logits = x @ p.get(params_flat, "embed").T  # tied embedding
+
+    # next-token prediction: predict tokens[:, 1:] from positions [:-1]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    targets = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def lm_step(params_flat, tokens, cfg: LMConfig):
+    """AOT entry: (loss, grads_flat)."""
+    loss, grads = jax.value_and_grad(lm_loss)(params_flat, tokens, cfg)
+    return loss, grads
+
+
+# --------------------------------------------------------------------------
+# WGAN-GP-style 2D GAN (the paper's experiment, CPU-scale substitute)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GanConfig:
+    nz: int = 4  # latent dim
+    hidden: int = 256
+    data_dim: int = 2
+    batch: int = 256
+    gp_lambda: float = 1.0
+
+
+def _mlp_packer(prefix: str, sizes: List[int], p: Packer) -> None:
+    for i in range(len(sizes) - 1):
+        p.add(f"{prefix}.w{i}", (sizes[i], sizes[i + 1]))
+        p.add(f"{prefix}.b{i}", (sizes[i + 1],))
+
+
+def gan_packers(cfg: GanConfig) -> Tuple[Packer, Packer]:
+    pg = Packer()
+    _mlp_packer("g", [cfg.nz, cfg.hidden, cfg.hidden, cfg.data_dim], pg)
+    pd = Packer()
+    _mlp_packer("d", [cfg.data_dim, cfg.hidden, cfg.hidden, 1], pd)
+    return pg, pd
+
+
+def gan_param_counts(cfg: GanConfig) -> Tuple[int, int]:
+    pg, pd = gan_packers(cfg)
+    return pg.total, pd.total
+
+
+def gan_init(cfg: GanConfig, seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    pg, pd = gan_packers(cfg)
+
+    def init_packer(p: Packer):
+        arrays = {}
+        for name, (_, _size, shape) in p.offsets.items():
+            if ".b" in name:
+                arrays[name] = np.zeros(shape, np.float32)
+            else:
+                fan_in = shape[0]
+                arrays[name] = rng.normal(0, 1.0 / np.sqrt(fan_in), shape).astype(np.float32)
+        return p.pack(arrays)
+
+    return init_packer(pg), init_packer(pd)
+
+
+def _mlp(flat, p: Packer, prefix: str, x, n_layers: int = 3):
+    for i in range(n_layers):
+        w = p.get(flat, f"{prefix}.w{i}")
+        b = p.get(flat, f"{prefix}.b{i}")
+        x = x @ w + b
+        if i < n_layers - 1:
+            x = jax.nn.leaky_relu(x, 0.2)
+    return x
+
+
+def generator(theta_g, z, cfg: GanConfig):
+    pg, _ = gan_packers(cfg)
+    return _mlp(theta_g, pg, "g", z)
+
+
+def critic(theta_d, x, cfg: GanConfig):
+    _, pd = gan_packers(cfg)
+    return _mlp(theta_d, pd, "d", x)[..., 0]
+
+
+def gan_disc_loss(theta_d, theta_g, real, z, eps, cfg: GanConfig):
+    """WGAN-GP critic loss: E[D(fake)] − E[D(real)] + λ GP."""
+    fake = generator(theta_g, z, cfg)
+    loss_w = jnp.mean(critic(theta_d, fake, cfg)) - jnp.mean(critic(theta_d, real, cfg))
+    # gradient penalty at interpolates
+    x_hat = eps * real + (1.0 - eps) * fake
+
+    def d_single(xi):
+        return critic(theta_d, xi[None, :], cfg)[0]
+
+    grads = jax.vmap(jax.grad(d_single))(x_hat)
+    gp = jnp.mean((jnp.linalg.norm(grads, axis=-1) - 1.0) ** 2)
+    return loss_w + cfg.gp_lambda * gp
+
+
+def gan_gen_loss(theta_d, theta_g, z, cfg: GanConfig):
+    fake = generator(theta_g, z, cfg)
+    return -jnp.mean(critic(theta_d, fake, cfg))
+
+
+def gan_disc_step(theta_d, theta_g, real, z, eps, cfg: GanConfig):
+    """AOT entry: critic loss + grad wrt theta_d."""
+    loss, grad = jax.value_and_grad(gan_disc_loss)(theta_d, theta_g, real, z, eps, cfg)
+    return loss, grad
+
+
+def gan_gen_step(theta_d, theta_g, z, cfg: GanConfig):
+    """AOT entry: generator loss + grad wrt theta_g."""
+
+    def loss_fn(tg):
+        return gan_gen_loss(theta_d, tg, z, cfg)
+
+    loss, grad = jax.value_and_grad(loss_fn)(theta_g)
+    return loss, grad
+
+
+def gan_disc_w_loss(theta_d, theta_g, real, z, cfg: GanConfig):
+    """Wasserstein part of the critic loss only (no gradient penalty) —
+    lowered separately so the Rust driver can reproduce the paper's
+    GenBP / DiscBP / PenBP timing breakdown (Figure 3)."""
+    fake = generator(theta_g, z, cfg)
+    return jnp.mean(critic(theta_d, fake, cfg)) - jnp.mean(critic(theta_d, real, cfg))
+
+
+def gan_pen_loss(theta_d, theta_g, real, z, eps, cfg: GanConfig):
+    """Gradient-penalty term only (lambda * GP)."""
+    fake = generator(theta_g, z, cfg)
+    x_hat = eps * real + (1.0 - eps) * fake
+
+    def d_single(xi):
+        return critic(theta_d, xi[None, :], cfg)[0]
+
+    grads = jax.vmap(jax.grad(d_single))(x_hat)
+    gp = jnp.mean((jnp.linalg.norm(grads, axis=-1) - 1.0) ** 2)
+    return cfg.gp_lambda * gp
+
+
+def gan_disc_w_step(theta_d, theta_g, real, z, cfg: GanConfig):
+    loss, grad = jax.value_and_grad(gan_disc_w_loss)(theta_d, theta_g, real, z, cfg)
+    return loss, grad
+
+
+def gan_pen_step(theta_d, theta_g, real, z, eps, cfg: GanConfig):
+    loss, grad = jax.value_and_grad(gan_pen_loss)(theta_d, theta_g, real, z, eps, cfg)
+    return loss, grad
+
+
+def ring_of_gaussians(batch: int, seed: int, modes: int = 8, radius: float = 2.0,
+                      sigma: float = 0.05) -> np.ndarray:
+    """The classic 2D GAN benchmark dataset (build-time sampler; the Rust
+    driver has its own identical implementation in train/data.rs)."""
+    rng = np.random.default_rng(seed)
+    which = rng.integers(0, modes, size=batch)
+    angles = 2.0 * np.pi * which / modes
+    centers = np.stack([radius * np.cos(angles), radius * np.sin(angles)], axis=1)
+    return (centers + rng.normal(0, sigma, size=(batch, 2))).astype(np.float32)

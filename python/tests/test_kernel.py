@@ -1,0 +1,204 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer: bit-identical
+agreement with ref.py, plus statistical properties (unbiasedness, variance
+bound) and a hypothesis sweep over shapes/levels/seeds.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quantize import quantize, quantize_bucketed
+from compile.kernels.fused_extragrad import fused_extragrad
+from compile.kernels.ref import (
+    ref_fused_extragrad,
+    ref_quantize,
+    ref_quantize_symbols,
+)
+
+
+def make_levels(s: int) -> np.ndarray:
+    """Uniform levels 0, 1/(s+1), ..., 1 (s interior)."""
+    return np.linspace(0.0, 1.0, s + 2).astype(np.float32)
+
+
+def rand_inputs(d: int, seed: int, scale: float = 1.0):
+    rng = np.random.default_rng(seed)
+    v = (rng.normal(size=d) * scale).astype(np.float32)
+    u = rng.random(size=d).astype(np.float32)
+    return v, u
+
+
+class TestQuantizeKernel:
+    def test_matches_ref_bitexact(self):
+        d = 8192
+        v, u = rand_inputs(d, 0)
+        levels = make_levels(14)
+        norm = np.array([np.linalg.norm(v)], np.float32)
+        out = quantize(jnp.array(v), jnp.array(levels), jnp.array(u), jnp.array(norm))
+        ref = ref_quantize(v, levels, u, norm[0])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_zero_vector(self):
+        d = 4096
+        levels = make_levels(3)
+        v = np.zeros(d, np.float32)
+        u = np.full(d, 0.5, np.float32)
+        norm = np.array([0.0], np.float32)
+        out = quantize(jnp.array(v), jnp.array(levels), jnp.array(u), jnp.array(norm))
+        assert np.all(np.asarray(out) == 0.0)
+
+    def test_values_on_levels_are_fixed_points(self):
+        levels = make_levels(3)  # 0, .25, .5, .75, 1
+        d = 4096
+        v = np.zeros(d, np.float32)
+        v[:5] = [1.0, -0.75, 0.5, 0.25, 0.0]
+        u = np.random.default_rng(1).random(d).astype(np.float32)
+        norm = np.array([1.0], np.float32)  # Linf norm
+        out = np.asarray(
+            quantize(jnp.array(v), jnp.array(levels), jnp.array(u), jnp.array(norm))
+        )
+        np.testing.assert_allclose(out[:5], v[:5], rtol=0, atol=1e-7)
+
+    def test_unbiasedness_montecarlo(self):
+        d = 4096
+        levels = make_levels(4)
+        rng = np.random.default_rng(2)
+        v = rng.normal(size=d).astype(np.float32)
+        norm = np.array([np.linalg.norm(v)], np.float32)
+        acc = np.zeros(d, np.float64)
+        trials = 200
+        for t in range(trials):
+            u = rng.random(size=d).astype(np.float32)
+            out = quantize(jnp.array(v), jnp.array(levels), jnp.array(u), jnp.array(norm))
+            acc += np.asarray(out, np.float64)
+        mean = acc / trials
+        # MC tolerance: bin width * norm / sqrt(trials) * 4
+        tol = 4.0 * 0.2 * float(norm[0]) / np.sqrt(trials) + 1e-3
+        assert np.max(np.abs(mean - v)) < tol
+
+    def test_reconstruction_bounded_by_norm(self):
+        d = 4096
+        v, u = rand_inputs(d, 3, scale=5.0)
+        levels = make_levels(7)
+        norm = np.array([np.linalg.norm(v)], np.float32)
+        out = np.asarray(
+            quantize(jnp.array(v), jnp.array(levels), jnp.array(u), jnp.array(norm))
+        )
+        assert np.max(np.abs(out)) <= float(norm[0]) * (1 + 1e-6)
+
+    def test_symbols_adjacent_to_magnitude(self):
+        # Each coordinate rounds to one of its two bracketing levels.
+        d = 4096
+        v, u = rand_inputs(d, 4)
+        levels = make_levels(6)
+        norm = np.array([np.linalg.norm(v)], np.float32)
+        syms = np.asarray(ref_quantize_symbols(v, levels, u, norm[0]))
+        mag = np.minimum(np.abs(v) / norm[0], 1.0)
+        lo = levels[np.maximum(syms - 1, 0)]
+        hi = levels[np.minimum(syms + 1, len(levels) - 1)]
+        assert np.all(mag >= lo - 1e-6)
+        assert np.all(mag <= hi + 1e-6)
+
+    def test_bucketed_matches_per_bucket_ref(self):
+        d = 4096
+        bucket = 1024
+        v, u = rand_inputs(d, 5)
+        levels = make_levels(14)
+        out = np.asarray(
+            quantize_bucketed(jnp.array(v), jnp.array(levels), jnp.array(u), bucket)
+        )
+        # Use the same f32 norm computation as the wrapper so the
+        # comparison is bit-exact (np.linalg.norm accumulates in f64).
+        norms = np.asarray(jnp.linalg.norm(jnp.array(v).reshape(-1, bucket), axis=1))
+        for bi in range(d // bucket):
+            sl = slice(bi * bucket, (bi + 1) * bucket)
+            ref = np.asarray(ref_quantize(v[sl], levels, u[sl], norms[bi]))
+            np.testing.assert_array_equal(out[sl], ref)
+
+    def test_rejects_non_multiple_of_block(self):
+        levels = make_levels(3)
+        with pytest.raises(ValueError):
+            quantize(
+                jnp.zeros(100), jnp.array(levels), jnp.zeros(100), jnp.array([1.0])
+            )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s=st.integers(min_value=1, max_value=30),
+        seed=st.integers(min_value=0, max_value=10_000),
+        scale=st.floats(min_value=0.01, max_value=100.0),
+        blocks=st.integers(min_value=1, max_value=3),
+    )
+    def test_hypothesis_matches_ref(self, s, seed, scale, blocks):
+        d = 4096 * blocks
+        v, u = rand_inputs(d, seed, scale)
+        # occasionally zero out coordinates (p0 symbol path)
+        v[:: max(1, seed % 17)] = 0.0
+        levels = make_levels(s)
+        norm = np.array([np.linalg.norm(v)], np.float32)
+        out = quantize(jnp.array(v), jnp.array(levels), jnp.array(u), jnp.array(norm))
+        ref = ref_quantize(v, levels, u, norm[0])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=10_000),
+        s=st.integers(min_value=1, max_value=14),
+    )
+    def test_hypothesis_nonuniform_levels(self, seed, s):
+        # exponential level placement, like NUQSGD
+        interior = np.array([2.0 ** -(s - j) for j in range(s)], np.float32)
+        levels = np.concatenate([[0.0], interior, [1.0]]).astype(np.float32)
+        levels = np.unique(levels)  # dedupe if s small
+        d = 4096
+        v, u = rand_inputs(d, seed)
+        norm = np.array([np.linalg.norm(v)], np.float32)
+        out = quantize(jnp.array(v), jnp.array(levels), jnp.array(u), jnp.array(norm))
+        ref = ref_quantize(v, levels, u, norm[0])
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+class TestFusedExtragrad:
+    def test_matches_ref(self):
+        d = 8192
+        rng = np.random.default_rng(7)
+        x, y, vb, vh = (rng.normal(size=d).astype(np.float32) for _ in range(4))
+        g = np.array([0.7, 0.35], np.float32)
+        xh, yn, xn = fused_extragrad(
+            jnp.array(x), jnp.array(y), jnp.array(vb), jnp.array(vh), jnp.array(g)
+        )
+        rxh, ryn, rxn = ref_fused_extragrad(x, y, vb, vh, g[0], g[1])
+        # allclose, not equal: interpret-mode contraction (FMA) differs by
+        # <= 1 ulp from the separate multiply-add in the jnp reference.
+        for a, b in zip((xh, yn, xn), (rxh, ryn, rxn)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6)
+
+    def test_zero_gamma_freezes_x_half(self):
+        d = 4096
+        x = np.ones(d, np.float32)
+        y = np.zeros(d, np.float32)
+        v = np.ones(d, np.float32)
+        g = np.array([0.0, 1.0], np.float32)
+        xh, yn, xn = fused_extragrad(
+            jnp.array(x), jnp.array(y), jnp.array(v), jnp.array(v), jnp.array(g)
+        )
+        np.testing.assert_array_equal(np.asarray(xh), x)
+        np.testing.assert_array_equal(np.asarray(yn), -v)
+        np.testing.assert_array_equal(np.asarray(xn), -v)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=1000))
+    def test_hypothesis_matches_ref(self, seed):
+        d = 4096
+        rng = np.random.default_rng(seed)
+        x, y, vb, vh = (rng.normal(size=d).astype(np.float32) for _ in range(4))
+        g = rng.random(2).astype(np.float32)
+        outs = fused_extragrad(
+            jnp.array(x), jnp.array(y), jnp.array(vb), jnp.array(vh), jnp.array(g)
+        )
+        refs = ref_fused_extragrad(x, y, vb, vh, g[0], g[1])
+        for a, b in zip(outs, refs):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-6, atol=2e-6)

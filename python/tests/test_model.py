@@ -1,0 +1,165 @@
+"""L2 model correctness: shapes, gradient sanity, learnability, GAN losses."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+
+CFG = model.LM_PRESETS["small"]
+
+
+def make_tokens(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq)).astype(np.int32)
+
+
+class TestPacker:
+    def test_roundtrip(self):
+        p = model.Packer()
+        p.add("a", (2, 3))
+        p.add("b", (4,))
+        assert p.total == 10
+        flat = p.pack({"a": np.arange(6).reshape(2, 3), "b": np.ones(4)})
+        a = p.get(jnp.array(flat), "a")
+        assert a.shape == (2, 3)
+        np.testing.assert_array_equal(np.asarray(a), np.arange(6).reshape(2, 3))
+        b = p.get(jnp.array(flat), "b")
+        np.testing.assert_array_equal(np.asarray(b), np.ones(4))
+
+    def test_lm_param_counts_scale_with_preset(self):
+        small = model.lm_param_count(model.LM_PRESETS["small"])
+        medium = model.lm_param_count(model.LM_PRESETS["medium"])
+        large = model.lm_param_count(model.LM_PRESETS["large"])
+        assert small < medium < large
+        assert large > 15_000_000, f"large preset too small: {large}"
+
+
+class TestLM:
+    def test_loss_near_log_vocab_at_init(self):
+        params = model.lm_init(CFG, seed=0)
+        tokens = make_tokens(CFG)
+        loss = float(model.lm_loss(jnp.array(params), jnp.array(tokens), CFG))
+        expected = np.log(CFG.vocab)
+        assert abs(loss - expected) < 0.5, f"init loss {loss} vs log V {expected}"
+
+    def test_step_returns_finite_grads_of_right_shape(self):
+        params = model.lm_init(CFG, seed=1)
+        tokens = make_tokens(CFG, 1)
+        loss, grads = model.lm_step(jnp.array(params), jnp.array(tokens), CFG)
+        assert grads.shape == (model.lm_param_count(CFG),)
+        assert np.isfinite(float(loss))
+        g = np.asarray(grads)
+        assert np.all(np.isfinite(g))
+        assert np.linalg.norm(g) > 0
+
+    def test_sgd_reduces_loss_on_fixed_batch(self):
+        params = jnp.array(model.lm_init(CFG, seed=2))
+        tokens = jnp.array(make_tokens(CFG, 2))
+        step = jax.jit(lambda p, t: model.lm_step(p, t, CFG))
+        loss0, _ = step(params, tokens)
+        lr = 0.5
+        for _ in range(20):
+            _, g = step(params, tokens)
+            params = params - lr * g
+        loss1, _ = step(params, tokens)
+        assert float(loss1) < float(loss0) * 0.9, f"{float(loss0)} -> {float(loss1)}"
+
+    def test_causality(self):
+        # Changing a future token must not change the loss contribution of
+        # earlier positions: compare per-position logits directly.
+        params = jnp.array(model.lm_init(CFG, seed=3))
+        t1 = make_tokens(CFG, 3)
+        t2 = t1.copy()
+        t2[:, -1] = (t2[:, -1] + 1) % CFG.vocab
+
+        def per_pos_nll(tokens):
+            # reuse lm_loss internals by probing the loss with matched
+            # prefixes: losses over [:, :-1] predictions of positions <k
+            # must agree. We check the total loss difference comes only
+            # from the final target.
+            return model.lm_loss(params, jnp.array(tokens), CFG)
+
+        # mask trick: losses with identical prefixes differ only through the
+        # last column's target term, bounded by max |logp| over one token.
+        l1 = float(per_pos_nll(t1))
+        l2 = float(per_pos_nll(t2))
+        n_terms = CFG.batch * (CFG.seq - 1)
+        # Only batch-many target terms can differ:
+        assert abs(l1 - l2) * n_terms <= CFG.batch * 50.0
+
+    def test_deterministic_given_seed(self):
+        p1 = model.lm_init(CFG, seed=7)
+        p2 = model.lm_init(CFG, seed=7)
+        np.testing.assert_array_equal(p1, p2)
+
+
+class TestGAN:
+    CFG = model.GanConfig(batch=64)
+
+    def _inputs(self, seed=0):
+        rng = np.random.default_rng(seed)
+        tg, td = model.gan_init(self.CFG, seed=seed)
+        real = model.ring_of_gaussians(self.CFG.batch, seed)
+        z = rng.normal(size=(self.CFG.batch, self.CFG.nz)).astype(np.float32)
+        eps = rng.random((self.CFG.batch, 1)).astype(np.float32)
+        return jnp.array(td), jnp.array(tg), jnp.array(real), jnp.array(z), jnp.array(eps)
+
+    def test_generator_output_shape(self):
+        td, tg, real, z, eps = self._inputs()
+        fake = model.generator(tg, z, self.CFG)
+        assert fake.shape == (self.CFG.batch, 2)
+        assert np.all(np.isfinite(np.asarray(fake)))
+
+    def test_disc_and_gen_steps_finite(self):
+        td, tg, real, z, eps = self._inputs(1)
+        ld, gd = model.gan_disc_step(td, tg, real, z, eps, self.CFG)
+        lg, gg = model.gan_gen_step(td, tg, z, self.CFG)
+        assert np.isfinite(float(ld)) and np.isfinite(float(lg))
+        assert gd.shape == (model.gan_param_counts(self.CFG)[1],)
+        assert gg.shape == (model.gan_param_counts(self.CFG)[0],)
+        assert np.all(np.isfinite(np.asarray(gd)))
+        assert np.all(np.isfinite(np.asarray(gg)))
+
+    def test_gradient_penalty_active(self):
+        # With lambda = 0 the critic loss differs from lambda = 1.
+        td, tg, real, z, eps = self._inputs(2)
+        cfg0 = model.GanConfig(batch=64, gp_lambda=0.0)
+        cfg1 = model.GanConfig(batch=64, gp_lambda=1.0)
+        l0 = float(model.gan_disc_loss(td, tg, real, z, eps, cfg0))
+        l1 = float(model.gan_disc_loss(td, tg, real, z, eps, cfg1))
+        assert abs(l0 - l1) > 1e-6
+
+    def test_adversarial_steps_move_losses(self):
+        # A few alternating SGD steps: critic Wasserstein estimate grows in
+        # magnitude (it learns to separate real from fake at init).
+        td, tg, real, z, eps = self._inputs(3)
+        disc = jax.jit(lambda d, g, r, zz, e: model.gan_disc_step(d, g, r, zz, e, self.CFG))
+        l_first = None
+        for i in range(30):
+            ld, gd = disc(td, tg, real, z, eps)
+            td = td - 0.05 * gd
+            if l_first is None:
+                l_first = float(ld)
+        l_last = float(disc(td, tg, real, z, eps)[0])
+        assert l_last < l_first, f"critic loss should fall: {l_first} -> {l_last}"
+
+    def test_ring_of_gaussians_geometry(self):
+        data = model.ring_of_gaussians(4000, seed=4, modes=8, radius=2.0, sigma=0.01)
+        r = np.linalg.norm(data, axis=1)
+        assert abs(float(np.mean(r)) - 2.0) < 0.05
+        assert data.shape == (4000, 2)
+
+
+class TestShapesAcrossPresets:
+    @pytest.mark.parametrize("preset", ["small", "medium"])
+    def test_presets_trace(self, preset):
+        cfg = model.LM_PRESETS[preset]
+        p = model.lm_param_count(cfg)
+        tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+        params = jax.ShapeDtypeStruct((p,), jnp.float32)
+        out = jax.eval_shape(lambda pp, tt: model.lm_step(pp, tt, cfg), params, tokens)
+        assert out[0].shape == ()
+        assert out[1].shape == (p,)

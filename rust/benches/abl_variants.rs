@@ -1,0 +1,54 @@
+//! E11 — §3.1 unified variants (Examples 3.1–3.3): Quantized DA vs DE vs
+//! OptDA on the same problem, same budget. Also reports communication
+//! rounds — OptDA does one exchange per iteration (it reuses the previous
+//! half-step query), DE does two.
+
+use qgenx::benchkit::{scaled, Table};
+use qgenx::config::{ExperimentConfig, Variant};
+use qgenx::coordinator::run_experiment;
+
+fn main() {
+    println!("== E11 / §3.1: unified Q-GenX variants (DA / DE / OptDA) ==\n");
+    let mut table = Table::new(&[
+        "variant", "problem", "final gap", "final dist", "rounds", "total bits",
+    ]);
+    let mut csv = Vec::new();
+    for problem in ["quadratic", "bilinear"] {
+        for variant in
+            [Variant::DualAveraging, Variant::DualExtrapolation, Variant::OptimisticDualAveraging]
+        {
+            let mut cfg = ExperimentConfig::default();
+            cfg.problem.kind = problem.into();
+            cfg.problem.dim = 64;
+            cfg.problem.noise = "absolute".into();
+            cfg.problem.sigma = 0.5;
+            cfg.workers = 3;
+            cfg.iters = scaled(3000, 400);
+            cfg.eval_every = cfg.iters;
+            cfg.algo.variant = variant;
+            cfg.algo.gamma0 = 0.3;
+            cfg.seed = 33;
+            let rec = run_experiment(&cfg).unwrap();
+            let row = vec![
+                variant.name().to_string(),
+                problem.to_string(),
+                format!("{:.5}", rec.get("gap").unwrap().last().unwrap()),
+                format!("{:.5}", rec.get("dist").unwrap().last().unwrap()),
+                format!("{:.0}", rec.scalar("rounds").unwrap()),
+                format!("{:.2e}", rec.scalar("total_bits").unwrap()),
+            ];
+            table.row(&row);
+            csv.push(row);
+        }
+    }
+    table.print();
+    println!("\nshape: DE and OptDA handle the skew (bilinear) problem; OptDA matches DE's");
+    println!("quality with half the exchanges; DA is competitive only on the potential problem.");
+    qgenx::benchkit::write_csv(
+        "results/abl_variants.csv",
+        &["variant", "problem", "final_gap", "final_dist", "rounds", "total_bits"],
+        &csv,
+    )
+    .unwrap();
+    println!("csv -> results/abl_variants.csv");
+}

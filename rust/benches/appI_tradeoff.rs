@@ -1,0 +1,90 @@
+//! E9 — Appendix I: the trade-off between the number of iterations to
+//! reach an ε gap and the time per iteration.
+//!
+//! Sweeping the bit budget `s`: more aggressive compression raises ε_Q
+//! (more iterations, `T(ε, ε̄_Q) ∝ (ε̄_Q M² + σ²)²/ε²`) but shrinks Δ
+//! (time/iteration at a given bandwidth). The total wall-clock `T·Δ` is
+//! U-shaped; the optimum depends on the network — we report the sweep at
+//! 1 GbE and 10 GbE to show the optimum moving toward less compression on
+//! the faster network, exactly the Appendix-I discussion.
+
+use qgenx::benchkit::{scaled, Table};
+use qgenx::config::{ExperimentConfig, QuantMode};
+use qgenx::coordinator::run_experiment;
+use qgenx::net::NetModel;
+
+/// Iterations until the ergodic dist falls below `target` (capped).
+fn iters_to_target(cfg: &ExperimentConfig, target: f64) -> (usize, f64, f64) {
+    let rec = run_experiment(cfg).unwrap();
+    let dist = rec.get("dist").unwrap();
+    let times = rec.get("sim_time_cum").unwrap();
+    for (i, (x, y)) in dist.points.iter().enumerate() {
+        if *y <= target {
+            return (*x as usize, times.points[i].1, *y);
+        }
+    }
+    (cfg.iters, times.points.last().unwrap().1, dist.last().unwrap())
+}
+
+fn main() {
+    println!("== E9 / Appendix I: iterations vs time-per-iteration trade-off ==\n");
+    let target = 0.35;
+    let iters_cap = scaled(6000, 800);
+
+    for (net_name, net) in [("1GbE", NetModel::gbe()), ("10GbE", NetModel::ten_gbe())] {
+        println!("-- network: {net_name} --");
+        let mut table = Table::new(&[
+            "mode", "bits/coord", "T(eps)", "sim secs/iter", "total sim secs",
+        ]);
+        let mut csv = Vec::new();
+        let mut best: Option<(String, f64)> = None;
+        for mode in ["s1", "s3", "uq4", "uq8", "fp32"] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.problem.kind = "quadratic".into();
+            // Large-ish d so comm time actually matters.
+            cfg.problem.dim = 512;
+            cfg.problem.noise = "absolute".into();
+            cfg.problem.sigma = 1.0;
+            cfg.workers = 3;
+            cfg.iters = iters_cap;
+            cfg.eval_every = iters_cap / 40;
+            cfg.algo.gamma0 = 0.3;
+            cfg.seed = 9;
+            cfg.quant.mode = QuantMode::parse(mode).unwrap();
+            cfg.net.bandwidth_bps = net.bandwidth_bps;
+            cfg.net.latency_s = net.latency_s;
+            let (t_eps, total_time, reached) = iters_to_target(&cfg, target);
+            let rec = run_experiment(&cfg).unwrap();
+            let bits_per_coord = rec.scalar("bits_per_round_per_worker").unwrap()
+                / cfg.problem.dim as f64;
+            let per_iter = total_time / t_eps.max(1) as f64;
+            let row = vec![
+                mode.to_string(),
+                format!("{bits_per_coord:.2}"),
+                if reached <= target { t_eps.to_string() } else { format!(">{t_eps}") },
+                format!("{:.2e}", per_iter),
+                format!("{total_time:.4}"),
+            ];
+            table.row(&row);
+            csv.push(row);
+            if reached <= target {
+                match &best {
+                    Some((_, bt)) if *bt <= total_time => {}
+                    _ => best = Some((mode.to_string(), total_time)),
+                }
+            }
+        }
+        table.print();
+        if let Some((m, t)) = best {
+            println!("fastest-to-eps on {net_name}: {m} ({t:.4} sim-s)\n");
+        }
+        qgenx::benchkit::write_csv(
+            &format!("results/appI_tradeoff_{net_name}.csv"),
+            &["mode", "bits_per_coord", "t_eps", "secs_per_iter", "total_secs"],
+            &csv,
+        )
+        .unwrap();
+    }
+    println!("paper shape (App. I): compressing harder lowers Δ but raises T(ε); the");
+    println!("best wall-clock sits at an intermediate bit budget that grows with bandwidth.");
+}

@@ -1,0 +1,79 @@
+//! E1 — Figure 1 (left) / Figure 2a: quality-metric evolution during GAN
+//! training for FP32 vs UQ8 vs UQ4.
+//!
+//! Paper claim: "this speedup does not drastically change the performance"
+//! — the three trajectories should overlap (same final quality band) while
+//! the quantized modes put far fewer bits on the wire.
+//!
+//! Substitution (DESIGN.md): CIFAR-10 WGAN-GP + FID → ring-of-Gaussians
+//! WGAN-GP + energy distance. Identical code path, CPU-feasible scale.
+
+use qgenx::benchkit::{scaled, Table};
+use qgenx::net::NetModel;
+use qgenx::runtime::{default_artifacts_dir, Runtime};
+use qgenx::train::{GanMode, GanTrainConfig, GanTrainer};
+
+fn main() {
+    println!("== E1 / Figure 1 (left): FID-analog evolution, FP32 vs UQ8 vs UQ4 ==\n");
+    let Some(dir) = default_artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut rt = Runtime::open(dir).unwrap();
+    let steps = scaled(150, 20);
+
+    let mut curves = Vec::new();
+    for mode in [GanMode::Fp32, GanMode::Uq8, GanMode::Uq4] {
+        let cfg = GanTrainConfig {
+            mode,
+            steps,
+            workers: 3,
+            eval_every: (steps / 6).max(1),
+            ..Default::default()
+        };
+        let mut tr = GanTrainer::new(&mut rt, cfg, NetModel::gbe()).unwrap();
+        let rec = tr.train().unwrap();
+        curves.push((mode, rec, tr.traffic.bits_sent));
+    }
+
+    let mut table = Table::new(&["step", "FP32 ED", "UQ8 ED", "UQ4 ED"]);
+    let n = curves[0].1.get("metric").unwrap().points.len();
+    let mut csv = Vec::new();
+    for i in 0..n {
+        let row = vec![
+            format!("{:.0}", curves[0].1.get("metric").unwrap().points[i].0),
+            format!("{:.4}", curves[0].1.get("metric").unwrap().points[i].1),
+            format!("{:.4}", curves[1].1.get("metric").unwrap().points[i].1),
+            format!("{:.4}", curves[2].1.get("metric").unwrap().points[i].1),
+        ];
+        table.row(&row);
+        csv.push(row);
+    }
+    table.print();
+
+    println!();
+    for (mode, rec, bits) in &curves {
+        let first = rec.get("metric").unwrap().points.first().unwrap().1;
+        let last = rec.get("metric").unwrap().last().unwrap();
+        println!(
+            "{}: energy distance {first:.3} -> {last:.3}, wire {:.1} MB",
+            mode.name(),
+            *bits as f64 / 8e6
+        );
+        assert!(last < first, "{} did not improve the metric", mode.name());
+    }
+    // Quality overlap check: quantized finals within a band of FP32's.
+    let f_fp32 = curves[0].1.get("metric").unwrap().last().unwrap();
+    let f_uq4 = curves[2].1.get("metric").unwrap().last().unwrap();
+    println!(
+        "\nfinal-quality ratio UQ4/FP32 = {:.2} (paper: compression does not degrade quality)",
+        f_uq4 / f_fp32
+    );
+    qgenx::benchkit::write_csv(
+        "results/fig1_gan_quality.csv",
+        &["step", "fp32", "uq8", "uq4"],
+        &csv,
+    )
+    .unwrap();
+    println!("csv -> results/fig1_gan_quality.csv");
+}

@@ -1,0 +1,74 @@
+//! E3 — Figure 2b: accumulated backpropagation + gradient-exchange time
+//! vs training step, per mode. The paper's plot shows three straight lines
+//! with FP32 steepest; the gap between them is the communication saving.
+
+use qgenx::benchkit::{scaled, Table};
+use qgenx::net::NetModel;
+use qgenx::runtime::{default_artifacts_dir, Runtime};
+use qgenx::train::{GanMode, GanTrainConfig, GanTrainer};
+
+fn main() {
+    println!("== E3 / Figure 2b: cumulative backprop + exchange time ==\n");
+    let Some(dir) = default_artifacts_dir() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let mut rt = Runtime::open(dir).unwrap();
+    let steps = scaled(60, 12);
+    let probe = (steps / 6).max(1);
+
+    let mut series: Vec<(GanMode, Vec<(usize, f64)>)> = Vec::new();
+    for mode in [GanMode::Fp32, GanMode::Uq8, GanMode::Uq4] {
+        let cfg = GanTrainConfig {
+            mode,
+            steps,
+            workers: 3,
+            eval_every: steps + 1,
+            ..Default::default()
+        };
+        let mut tr = GanTrainer::new(&mut rt, cfg, NetModel::gbe()).unwrap();
+        for _ in 0..2 {
+            tr.step().unwrap(); // compile warmup, untimed
+        }
+        tr.reset_counters();
+        let mut pts = Vec::new();
+        for t in 1..=steps {
+            tr.step().unwrap();
+            if t % probe == 0 {
+                pts.push((t, tr.phases.total()));
+            }
+        }
+        series.push((mode, pts));
+    }
+
+    let mut table = Table::new(&["step", "FP32 cum (s)", "UQ8 cum (s)", "UQ4 cum (s)"]);
+    let mut csv = Vec::new();
+    for i in 0..series[0].1.len() {
+        let row = vec![
+            series[0].1[i].0.to_string(),
+            format!("{:.3}", series[0].1[i].1),
+            format!("{:.3}", series[1].1[i].1),
+            format!("{:.3}", series[2].1[i].1),
+        ];
+        table.row(&row);
+        csv.push(row);
+    }
+    table.print();
+
+    let fp32 = series[0].1.last().unwrap().1;
+    let uq8 = series[1].1.last().unwrap().1;
+    let uq4 = series[2].1.last().unwrap().1;
+    println!(
+        "\nfinal cumulative time: FP32 {fp32:.3}s, UQ8 {uq8:.3}s ({:.1}% saved), UQ4 {uq4:.3}s ({:.1}% saved)",
+        (1.0 - uq8 / fp32) * 100.0,
+        (1.0 - uq4 / fp32) * 100.0
+    );
+    println!("paper shape (Fig. 2b): three near-linear curves, FP32 on top.");
+    qgenx::benchkit::write_csv(
+        "results/fig2b_cumtime.csv",
+        &["step", "fp32", "uq8", "uq4"],
+        &csv,
+    )
+    .unwrap();
+    println!("csv -> results/fig2b_cumtime.csv");
+}

@@ -1,0 +1,125 @@
+//! §Perf — L3 hot-path microbenchmarks: quantize, entropy-encode, decode,
+//! dequantize, and the whole compressor round-trip, at model-scale d.
+//!
+//! Targets (DESIGN.md §Perf): single-thread quantize+encode ≥ 400 MB/s so
+//! the wire path is never the bottleneck against a 1 GbE (≈ 117 MiB/s)
+//! link; the compressor round trip must cost well below the modeled
+//! network saving it buys.
+
+use qgenx::benchkit::{bench, fmt_secs, fmt_throughput, scaled, Table};
+use qgenx::coding::SymbolCodec;
+use qgenx::config::{LevelScheme, QuantConfig, QuantMode};
+use qgenx::coordinator::Compressor;
+use qgenx::net::NetModel;
+use qgenx::quant::{
+    decode_vector, dequantize, encode_vector, quantize, symbol_probs, Levels, SufficientStats,
+    WireCodec,
+};
+use qgenx::util::Rng;
+
+fn main() {
+    println!("== §Perf: wire-path microbenchmarks ==\n");
+    let d = scaled(4_000_000, 400_000);
+    let bytes = 4 * d;
+    let reps = scaled(10, 3);
+    let mut rng = Rng::seed_from(0x9e7f);
+    let v = rng.gaussian_vec(d, 1.0);
+    let levels = Levels::uniform(14);
+
+    let mut stats = SufficientStats::new(256, 2);
+    stats.observe_bucketed(&v, 1024);
+    let probs = symbol_probs(&stats, &levels);
+
+    let mut table = Table::new(&["stage", "median", "throughput (vs f32 input)"]);
+
+    // quantize
+    let mut q_rng = Rng::seed_from(1);
+    let t = bench("quantize", 1, reps, || {
+        let qv = quantize(&v, &levels, 2, 1024, &mut q_rng).unwrap();
+        std::hint::black_box(qv.symbols.len());
+    });
+    table.row(&["quantize (bucketed L2)".into(), fmt_secs(t.median()), fmt_throughput(bytes, t.median())]);
+
+    let qv = quantize(&v, &levels, 2, 1024, &mut q_rng).unwrap();
+
+    // encode per codec
+    for kind in [SymbolCodec::Fixed, SymbolCodec::EliasGamma, SymbolCodec::Huffman] {
+        let codec = match kind {
+            SymbolCodec::Huffman => WireCodec::new(kind, &levels, Some(&probs)).unwrap(),
+            _ => WireCodec::new(kind, &levels, None).unwrap(),
+        };
+        let t = bench(kind.name(), 1, reps, || {
+            let (b, _) = encode_vector(&qv, &codec).unwrap();
+            std::hint::black_box(b.len());
+        });
+        table.row(&[
+            format!("encode ({})", kind.name()),
+            fmt_secs(t.median()),
+            fmt_throughput(bytes, t.median()),
+        ]);
+        let (wire, _) = encode_vector(&qv, &codec).unwrap();
+        let t = bench("decode", 1, reps, || {
+            let out = decode_vector(&wire, d, 1024, &codec).unwrap();
+            std::hint::black_box(out.symbols.len());
+        });
+        table.row(&[
+            format!("decode ({})", kind.name()),
+            fmt_secs(t.median()),
+            fmt_throughput(bytes, t.median()),
+        ]);
+    }
+
+    // dequantize
+    let t = bench("dequantize", 1, reps, || {
+        let out = dequantize(&qv, &levels);
+        std::hint::black_box(out.len());
+    });
+    table.row(&["dequantize".into(), fmt_secs(t.median()), fmt_throughput(bytes, t.median())]);
+
+    // full compressor round trip (what the coordinator actually runs)
+    let mut comp = Compressor::from_config(
+        &QuantConfig {
+            mode: QuantMode::Quantized { levels: 14 },
+            scheme: LevelScheme::Uniform,
+            codec: SymbolCodec::Huffman,
+            bucket_size: 1024,
+            ..Default::default()
+        },
+        Rng::seed_from(2),
+    )
+    .unwrap();
+    // prime Huffman with real probabilities via one update
+    let _ = comp.compress(&v).unwrap();
+    let mut out = vec![0.0f32; d];
+    let t_rt = bench("roundtrip", 1, reps, || {
+        let (wire, _) = comp.compress(&v).unwrap();
+        comp.decompress(&wire, &mut out).unwrap();
+        std::hint::black_box(out[0]);
+    });
+    table.row(&[
+        "compressor round-trip".into(),
+        fmt_secs(t_rt.median()),
+        fmt_throughput(bytes, t_rt.median()),
+    ]);
+    table.print();
+
+    // Economics: is the codec cheaper than the network saving it buys?
+    let net = NetModel::gbe();
+    let (wire, _) = comp.compress(&v).unwrap();
+    let t_fp32 = net.allgather_time(&[bytes; 3]);
+    let t_q = net.allgather_time(&[wire.len(); 3]);
+    let saving = t_fp32 - t_q;
+    let cost = t_rt.median();
+    println!(
+        "\neconomics at d={d}, K=3, 1GbE: network saving {}/round vs codec cost {}/vector — {}",
+        fmt_secs(saving),
+        fmt_secs(cost),
+        if cost < saving { "PROFITABLE" } else { "NOT profitable at this scale" },
+    );
+    println!(
+        "wire size: {:.2} MB vs {:.2} MB fp32 ({:.1}x)",
+        wire.len() as f64 / 1e6,
+        bytes as f64 / 1e6,
+        bytes as f64 / wire.len() as f64
+    );
+}

@@ -1,0 +1,108 @@
+//! E5 — Theorem 3: under absolute noise Q-GenX with the adaptive step-size
+//! converges at `O(1/√(TK))`. Two checks:
+//!
+//! 1. rate in T: log-log slope of gap vs T ≈ −1/2 (ergodic average);
+//! 2. speedup in K: at fixed T, error shrinks like `1/√K` — "increasing
+//!    the number of processors accelerates convergence".
+
+use qgenx::benchkit::{loglog_slope, scaled, Table};
+use qgenx::config::ExperimentConfig;
+use qgenx::coordinator::run_experiment;
+
+fn cfg_base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.dim = 32;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 2.0;
+    cfg.algo.gamma0 = 0.3;
+    cfg.quant.update_every = 200;
+    cfg
+}
+
+fn mean_dist_at_t(cfg: &ExperimentConfig, seeds: u64) -> f64 {
+    let mut acc = 0.0;
+    for s in 0..seeds {
+        let mut c = cfg.clone();
+        c.seed = 1000 + s;
+        let rec = run_experiment(&c).unwrap();
+        acc += rec.get("dist").unwrap().last().unwrap();
+    }
+    acc / seeds as f64
+}
+
+fn main() {
+    println!("== E5 / Theorem 3: O(1/sqrt(TK)) under absolute noise ==\n");
+    let seeds = scaled(5, 2) as u64;
+
+    // (1) rate in T
+    let ts = if qgenx::benchkit::fast_mode() {
+        vec![250usize, 1000]
+    } else {
+        vec![250usize, 500, 1000, 2000, 4000]
+    };
+    let mut table = Table::new(&["T", "mean dist-to-sol (ergodic)", "gap"]);
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &t in &ts {
+        let mut cfg = cfg_base();
+        cfg.iters = t;
+        cfg.eval_every = t;
+        cfg.workers = 2;
+        let dist = mean_dist_at_t(&cfg, seeds);
+        let mut c1 = cfg.clone();
+        c1.seed = 1000;
+        let gap = run_experiment(&c1).unwrap().get("gap").unwrap().last().unwrap();
+        table.row(&[t.to_string(), format!("{dist:.5}"), format!("{gap:.5}")]);
+        xs.push(t as f64);
+        ys.push(dist);
+    }
+    table.print();
+    // The ergodic average carries the early transient, which flattens the
+    // finite-T slope; fit on the tail (T >= 500) where the stochastic term
+    // dominates.
+    let tail = xs.len().saturating_sub(4).max(0);
+    let slope = loglog_slope(&xs[tail..], &ys[tail..]);
+    println!("\nlog-log slope of dist vs T (tail): {slope:.3}  (Theorem 3 predicts ≈ -0.5)");
+    assert!(
+        slope < -0.2 && slope > -0.9,
+        "rate slope {slope} outside the O(1/sqrt(T)) regime"
+    );
+
+    // (2) K-speedup at fixed T
+    println!("\n-- K-scaling at T = 1500 --");
+    let mut ktab = Table::new(&["K", "mean dist", "vs K=1", "1/sqrt(K) prediction"]);
+    let mut base = 0.0;
+    let mut kx = Vec::new();
+    let mut ky = Vec::new();
+    for &k in &[1usize, 2, 4, 8] {
+        let mut cfg = cfg_base();
+        cfg.iters = scaled(1500, 300);
+        cfg.eval_every = cfg.iters;
+        cfg.workers = k;
+        let dist = mean_dist_at_t(&cfg, seeds);
+        if k == 1 {
+            base = dist;
+        }
+        ktab.row(&[
+            k.to_string(),
+            format!("{dist:.5}"),
+            format!("{:.2}x", base / dist),
+            format!("{:.2}x", (k as f64).sqrt()),
+        ]);
+        kx.push(k as f64);
+        ky.push(dist);
+    }
+    ktab.print();
+    let kslope = loglog_slope(&kx, &ky);
+    println!("\nlog-log slope of dist vs K: {kslope:.3}  (Theorem 3 predicts ≈ -0.5)");
+    assert!(ky[3] < ky[0], "K=8 must beat K=1");
+
+    qgenx::benchkit::write_csv(
+        "results/thm3_rate.csv",
+        &["T", "dist"],
+        &xs.iter().zip(ys.iter()).map(|(x, y)| vec![x.to_string(), y.to_string()]).collect::<Vec<_>>(),
+    )
+    .unwrap();
+    println!("csv -> results/thm3_rate.csv");
+}

@@ -1,0 +1,213 @@
+//! Baselines for the paper's comparisons.
+//!
+//! * [`ExtraGradient`] — Korpelevich (1976) with a fixed step `γ ≤ 1/L`:
+//!   the full-precision, non-adaptive reference.
+//! * [`Sgda`] — stochastic gradient descent-ascent with `γ_t = γ₀/√t`.
+//!   With quantized inputs this *is* QSGDA (Beznosikov et al. 2022, the
+//!   no-variance-reduction method of Figure 4): the caller feeds it
+//!   quantized averaged dual vectors exactly as it feeds Q-GenX.
+//!
+//! Both expose the same feed-the-vectors protocol as
+//! [`crate::algo::QGenX`] so the coordinator and benches can swap
+//! algorithms without touching the communication code.
+
+use crate::util::{axpy, mean_into};
+
+/// Fixed-step extra-gradient (two oracle queries per iteration).
+pub struct ExtraGradient {
+    x: Vec<f32>,
+    x_half: Vec<f32>,
+    x_half_sum: Vec<f64>,
+    gamma: f64,
+    t: usize,
+    mean_buf: Vec<f32>,
+}
+
+impl ExtraGradient {
+    pub fn new(x0: &[f32], gamma: f64) -> Self {
+        let d = x0.len();
+        ExtraGradient {
+            x: x0.to_vec(),
+            x_half: vec![0.0; d],
+            x_half_sum: vec![0.0; d],
+            gamma,
+            t: 0,
+            mean_buf: vec![0.0; d],
+        }
+    }
+
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.t
+    }
+
+    /// Query point for the first leg.
+    pub fn base_query(&self) -> Vec<f32> {
+        self.x.clone()
+    }
+
+    /// First leg: `X_{t+1/2} = X_t − γ ḡ(X_t)`; returns the half point.
+    pub fn extrapolate(&mut self, base_vectors: &[Vec<f32>]) -> Vec<f32> {
+        let refs: Vec<&[f32]> = base_vectors.iter().map(|v| v.as_slice()).collect();
+        mean_into(&refs, &mut self.mean_buf);
+        self.x_half.copy_from_slice(&self.x);
+        axpy(-(self.gamma as f32), &self.mean_buf, &mut self.x_half);
+        self.x_half.clone()
+    }
+
+    /// Second leg: `X_{t+1} = X_t − γ ḡ(X_{t+1/2})`.
+    pub fn update(&mut self, half_vectors: &[Vec<f32>]) {
+        for i in 0..self.x.len() {
+            self.x_half_sum[i] += self.x_half[i] as f64;
+        }
+        let refs: Vec<&[f32]> = half_vectors.iter().map(|v| v.as_slice()).collect();
+        mean_into(&refs, &mut self.mean_buf);
+        axpy(-(self.gamma as f32), &self.mean_buf, &mut self.x);
+        self.t += 1;
+    }
+
+    pub fn ergodic_average(&self) -> Vec<f32> {
+        let t = self.t.max(1) as f64;
+        self.x_half_sum.iter().map(|&s| (s / t) as f32).collect()
+    }
+}
+
+/// (Q)SGDA: `X_{t+1} = X_t − γ_t ḡ(X_t)`, `γ_t = γ₀ / √t`.
+pub struct Sgda {
+    x: Vec<f32>,
+    x_sum: Vec<f64>,
+    gamma0: f64,
+    t: usize,
+    mean_buf: Vec<f32>,
+    /// `γ_t = γ₀/√t` when true, else constant γ₀.
+    decay: bool,
+}
+
+impl Sgda {
+    pub fn new(x0: &[f32], gamma0: f64, decay: bool) -> Self {
+        let d = x0.len();
+        Sgda { x: x0.to_vec(), x_sum: vec![0.0; d], gamma0, t: 0, mean_buf: vec![0.0; d], decay }
+    }
+
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    pub fn gamma(&self) -> f64 {
+        if self.decay {
+            self.gamma0 / ((self.t + 1) as f64).sqrt()
+        } else {
+            self.gamma0
+        }
+    }
+
+    pub fn query(&self) -> Vec<f32> {
+        self.x.clone()
+    }
+
+    /// One step from the `K` (possibly quantized) dual vectors at `X_t`.
+    pub fn update(&mut self, vectors: &[Vec<f32>]) {
+        for i in 0..self.x.len() {
+            self.x_sum[i] += self.x[i] as f64;
+        }
+        let g = self.gamma() as f32;
+        let refs: Vec<&[f32]> = vectors.iter().map(|v| v.as_slice()).collect();
+        mean_into(&refs, &mut self.mean_buf);
+        axpy(-g, &self.mean_buf, &mut self.x);
+        self.t += 1;
+    }
+
+    pub fn ergodic_average(&self) -> Vec<f32> {
+        let t = self.t.max(1) as f64;
+        self.x_sum.iter().map(|&s| (s / t) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{ExactOracle, MonotoneQuadratic, Operator, Oracle, RotationOperator};
+    use crate::util::{dist_sq, Rng};
+    use std::sync::Arc;
+
+    #[test]
+    fn eg_converges_on_quadratic() {
+        let mut rng = Rng::seed_from(1);
+        let op = Arc::new(MonotoneQuadratic::random(10, 0.3, 1.0, &mut rng).unwrap());
+        let xs = op.solution().unwrap();
+        let l = op.lipschitz().unwrap();
+        let mut oracle = ExactOracle::new(op.clone());
+        let x0 = vec![0.0f32; 10];
+        let mut eg = ExtraGradient::new(&x0, 0.5 / l);
+        for _ in 0..2000 {
+            let xq = eg.base_query();
+            let mut g = vec![0.0f32; 10];
+            oracle.sample(&xq, &mut g);
+            let xh = eg.extrapolate(&[g]);
+            let mut gh = vec![0.0f32; 10];
+            oracle.sample(&xh, &mut gh);
+            eg.update(&[gh]);
+        }
+        let r = dist_sq(eg.x(), &xs) / dist_sq(&x0, &xs);
+        assert!(r < 1e-4, "ratio {r}");
+    }
+
+    #[test]
+    fn sgda_converges_on_strongly_monotone_but_not_rotation() {
+        let mut rng = Rng::seed_from(2);
+        let op = Arc::new(MonotoneQuadratic::random(10, 0.5, 1.0, &mut rng).unwrap());
+        let xs = op.solution().unwrap();
+        let mut oracle = ExactOracle::new(op.clone());
+        let x0 = vec![0.0f32; 10];
+        let mut sgda = Sgda::new(&x0, 0.3, true);
+        for _ in 0..4000 {
+            let xq = sgda.query();
+            let mut g = vec![0.0f32; 10];
+            oracle.sample(&xq, &mut g);
+            sgda.update(&[g]);
+        }
+        let r = dist_sq(sgda.x(), &xs) / dist_sq(&x0, &xs);
+        assert!(r < 1e-2, "quadratic ratio {r}");
+
+        // On pure rotation SGDA with decaying steps drifts, EG-style wins.
+        let rot = Arc::new(RotationOperator::new(8, 0.0, 1.0).unwrap());
+        let rs = rot.solution().unwrap();
+        let mut o2 = ExactOracle::new(rot.clone());
+        let z0 = vec![0.0f32; 8];
+        let mut sg = Sgda::new(&z0, 0.3, true);
+        for _ in 0..4000 {
+            let xq = sg.query();
+            let mut g = vec![0.0f32; 8];
+            o2.sample(&xq, &mut g);
+            sg.update(&[g]);
+        }
+        let r_sgda = dist_sq(sg.x(), &rs) / dist_sq(&z0, &rs);
+        // SGDA does not contract on rotation (last iterate no better than start).
+        assert!(r_sgda > 0.5, "sgda rotation ratio {r_sgda}");
+    }
+
+    #[test]
+    fn sgda_gamma_decays() {
+        let mut s = Sgda::new(&[0.0; 2], 1.0, true);
+        let g1 = s.gamma();
+        s.update(&[vec![0.0; 2]]);
+        s.update(&[vec![0.0; 2]]);
+        s.update(&[vec![0.0; 2]]);
+        let g4 = s.gamma();
+        assert!((g1 / g4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ergodic_averages_track_iterates() {
+        let mut eg = ExtraGradient::new(&[1.0, 1.0], 0.1);
+        let z = vec![vec![0.0f32; 2]];
+        for _ in 0..3 {
+            let _ = eg.extrapolate(&z);
+            eg.update(&z);
+        }
+        assert_eq!(eg.ergodic_average(), vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,28 @@
+//! First-order VI algorithms.
+//!
+//! * [`qgenx`] — the paper's contribution: the Q-GenX template
+//!
+//!   ```text
+//!   X_{t+1/2} = X_t − (γ_t/K) Σ_k V̂_{k,t}
+//!   Y_{t+1}   = Y_t − (1/K)  Σ_k V̂_{k,t+1/2}
+//!   X_{t+1}   = γ_{t+1} Y_{t+1}
+//!   ```
+//!
+//!   with the adaptive step-size of Theorems 3/4 and the three unified
+//!   variants (Examples 3.1–3.3) selected by
+//!   [`crate::config::Variant`]: dual averaging (`V̂_t ≡ 0`), dual
+//!   extrapolation (fresh query at `X_t`), optimistic dual averaging
+//!   (reuse of the previous half-step query).
+//! * [`stepsize`] — the adaptive rule
+//!   `γ_t = K (1 + Σ_{i<t} Σ_k ‖V̂_{k,i} − V̂_{k,i+1/2}‖²)^{−1/2}` (shared
+//!   by all variants; never needs σ, c, or β).
+//! * [`baselines`] — full-precision extra-gradient (Korpelevich), SGDA,
+//!   and QSGDA (Beznosikov et al. 2022) for the Figure-4 comparison.
+
+pub mod baselines;
+pub mod qgenx;
+pub mod stepsize;
+
+pub use baselines::{ExtraGradient, Sgda};
+pub use qgenx::{QGenX, QGenXPhase};
+pub use stepsize::AdaptiveStepSize;

@@ -1,0 +1,395 @@
+//! The Q-GenX state machine (Algorithm 1's per-iteration math, § update
+//! rule (Q-GenX)).
+//!
+//! The struct is *communication-agnostic*: callers (the coordinator, the
+//! single-process bench runner) obtain query points from it and feed back
+//! the `K` decoded dual vectors. This keeps the algorithm testable in
+//! isolation and reusable across the threaded and inline execution modes.
+//!
+//! Iteration protocol (enforced by [`QGenXPhase`]):
+//!
+//! 1. [`QGenX::base_query`] → where to evaluate `V_{k,t}` (or `None` for
+//!    the DA/OptDA variants, which need no fresh base query);
+//! 2. [`QGenX::extrapolate`] with the `K` base vectors → `X_{t+1/2}`;
+//! 3. evaluate oracles at `X_{t+1/2}`, feed them to [`QGenX::update`] —
+//!    which advances `Y`, the adaptive step-size and `X_{t+1} = γ_{t+1} Y_{t+1}`,
+//!    and accumulates the ergodic average `X̄_{T+1/2}` that Theorems 3/4
+//!    bound.
+//!
+//! Iterates live in coordinates shifted by `x₀` (the template inequality's
+//! `X_1 = 0` normalization): `X_t^{world} = x₀ + X_t`.
+
+use super::stepsize::AdaptiveStepSize;
+use crate::config::Variant;
+use crate::error::{Error, Result};
+use crate::util::{axpy, mean_into};
+
+/// Protocol phase (guards against out-of-order driving).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QGenXPhase {
+    /// Expecting `extrapolate` (start of iteration t).
+    AwaitBase,
+    /// Expecting `update` with the half-step vectors.
+    AwaitHalf,
+}
+
+/// Q-GenX iterate state for one run.
+pub struct QGenX {
+    variant: Variant,
+    d: usize,
+    k: usize,
+    /// Origin shift x₀ (iterates are stored relative to it).
+    x0: Vec<f32>,
+    /// X_t (shifted).
+    x: Vec<f32>,
+    /// Y_t (dual accumulator, shifted; Y_1 = 0).
+    y: Vec<f32>,
+    /// X_{t+1/2} (shifted).
+    x_half: Vec<f32>,
+    /// Running sum of X_{t+1/2} for the ergodic average.
+    x_half_sum: Vec<f64>,
+    /// V̂_{k,t+1/2} from the previous iteration (OptDA reuse).
+    prev_half: Option<Vec<Vec<f32>>>,
+    /// Base vectors of the current iteration (kept to measure
+    /// ‖V̂_{k,t} − V̂_{k,t+1/2}‖² for the step-size).
+    cur_base: Vec<Vec<f32>>,
+    step: AdaptiveStepSize,
+    t: usize,
+    phase: QGenXPhase,
+    // scratch
+    mean_buf: Vec<f32>,
+}
+
+impl QGenX {
+    /// New run from world-coordinate start `x0` with `k` workers.
+    pub fn new(variant: Variant, x0: &[f32], k: usize, gamma0: f64, adaptive: bool) -> Self {
+        let d = x0.len();
+        QGenX {
+            variant,
+            d,
+            k,
+            x0: x0.to_vec(),
+            x: vec![0.0; d],
+            y: vec![0.0; d],
+            x_half: vec![0.0; d],
+            x_half_sum: vec![0.0; d],
+            prev_half: None,
+            cur_base: Vec::new(),
+            step: AdaptiveStepSize::new(gamma0, k, adaptive),
+            t: 0,
+            phase: QGenXPhase::AwaitBase,
+            mean_buf: vec![0.0; d],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.t
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.step.gamma()
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Current iterate `X_t` in world coordinates.
+    pub fn x_world(&self) -> Vec<f32> {
+        let mut out = self.x0.clone();
+        for i in 0..self.d {
+            out[i] += self.x[i];
+        }
+        out
+    }
+
+    /// Half-step iterate `X_{t+1/2}` in world coordinates (valid after
+    /// [`Self::extrapolate`]).
+    pub fn x_half_world(&self) -> Vec<f32> {
+        let mut out = self.x0.clone();
+        for i in 0..self.d {
+            out[i] += self.x_half[i];
+        }
+        out
+    }
+
+    /// Ergodic average `X̄ = (1/T) Σ X_{t+1/2}` in world coordinates — the
+    /// point Theorems 3/4 certify.
+    pub fn ergodic_average(&self) -> Vec<f32> {
+        let t = self.t.max(1) as f64;
+        let mut out = self.x0.clone();
+        for i in 0..self.d {
+            out[i] += (self.x_half_sum[i] / t) as f32;
+        }
+        out
+    }
+
+    /// Where workers must evaluate the *base* oracle query `V_{k,t}`, if a
+    /// fresh one is needed this iteration:
+    /// * DE → `Some(X_t)` — the classic extra-gradient first leg;
+    /// * DA → `None` (`V̂_{k,t} ≡ 0`);
+    /// * OptDA → `None` (reuses `V̂_{k,t−1/2}` — one oracle call per
+    ///   iteration, half the queries and half the communication).
+    pub fn base_query(&self) -> Option<Vec<f32>> {
+        match self.variant {
+            Variant::DualExtrapolation => Some(self.x_world()),
+            Variant::DualAveraging | Variant::OptimisticDualAveraging => None,
+        }
+    }
+
+    /// Step 1: form `X_{t+1/2} = X_t − (γ_t/K) Σ_k V̂_{k,t}`.
+    ///
+    /// `base_vectors` must be the `K` decoded dual vectors when
+    /// [`Self::base_query`] returned `Some`; pass `&[]` otherwise (the
+    /// variant supplies its own base internally).
+    pub fn extrapolate(&mut self, base_vectors: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if self.phase != QGenXPhase::AwaitBase {
+            return Err(Error::Coordinator("extrapolate called out of phase".into()));
+        }
+        self.cur_base = match self.variant {
+            Variant::DualExtrapolation => {
+                if base_vectors.len() != self.k {
+                    return Err(Error::Coordinator(format!(
+                        "DE variant needs {} base vectors, got {}",
+                        self.k,
+                        base_vectors.len()
+                    )));
+                }
+                base_vectors.to_vec()
+            }
+            Variant::DualAveraging => vec![vec![0.0; self.d]; self.k],
+            Variant::OptimisticDualAveraging => match self.prev_half.take() {
+                Some(prev) => prev,
+                None => vec![vec![0.0; self.d]; self.k], // V̂_{k,1/2} at t = 1
+            },
+        };
+        for v in &self.cur_base {
+            if v.len() != self.d {
+                return Err(Error::Coordinator("base vector dim mismatch".into()));
+            }
+        }
+        let gamma = self.step.gamma();
+        let refs: Vec<&[f32]> = self.cur_base.iter().map(|v| v.as_slice()).collect();
+        mean_into(&refs, &mut self.mean_buf);
+        self.x_half.copy_from_slice(&self.x);
+        axpy(-(gamma as f32), &self.mean_buf, &mut self.x_half);
+        self.phase = QGenXPhase::AwaitHalf;
+        Ok(self.x_half_world())
+    }
+
+    /// Step 2: consume the `K` half-step vectors `V̂_{k,t+1/2}` evaluated at
+    /// `X_{t+1/2}`; advances `Y`, the step-size, and `X_{t+1} = γ_{t+1} Y_{t+1}`.
+    pub fn update(&mut self, half_vectors: &[Vec<f32>]) -> Result<()> {
+        if self.phase != QGenXPhase::AwaitHalf {
+            return Err(Error::Coordinator("update called out of phase".into()));
+        }
+        if half_vectors.len() != self.k {
+            return Err(Error::Coordinator(format!(
+                "need {} half vectors, got {}",
+                self.k,
+                half_vectors.len()
+            )));
+        }
+        for v in half_vectors {
+            if v.len() != self.d {
+                return Err(Error::Coordinator("half vector dim mismatch".into()));
+            }
+        }
+        // Ergodic average accumulates X_{t+1/2}.
+        for i in 0..self.d {
+            self.x_half_sum[i] += self.x_half[i] as f64;
+        }
+        // Y_{t+1} = Y_t − (1/K) Σ V̂_{k,t+1/2}
+        let refs: Vec<&[f32]> = half_vectors.iter().map(|v| v.as_slice()).collect();
+        mean_into(&refs, &mut self.mean_buf);
+        axpy(-1.0, &self.mean_buf, &mut self.y);
+        // Step-size learns Σ_k ‖V̂_{k,t} − V̂_{k,t+1/2}‖².
+        self.step.observe_pairs(&self.cur_base, half_vectors);
+        // X_{t+1} = γ_{t+1} Y_{t+1}
+        let g_next = self.step.gamma() as f32;
+        for i in 0..self.d {
+            self.x[i] = g_next * self.y[i];
+        }
+        if self.variant == Variant::OptimisticDualAveraging {
+            self.prev_half = Some(half_vectors.to_vec());
+        }
+        self.t += 1;
+        self.phase = QGenXPhase::AwaitBase;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{ExactOracle, MonotoneQuadratic, Operator, Oracle};
+    use crate::util::{dist_sq, Rng};
+    use std::sync::Arc;
+
+    /// Drive Q-GenX on an exact oracle for `iters` and return final dist².
+    fn run_exact(variant: Variant, iters: usize, gamma0: f64) -> (f64, f64) {
+        let mut rng = Rng::seed_from(42);
+        let op = Arc::new(MonotoneQuadratic::random(12, 0.3, 1.0, &mut rng).unwrap());
+        let xs = op.solution().unwrap();
+        let x0 = vec![0.0f32; 12];
+        let k = 2;
+        let mut oracles: Vec<ExactOracle> =
+            (0..k).map(|_| ExactOracle::new(op.clone())).collect();
+        let mut state = QGenX::new(variant, &x0, k, gamma0, true);
+        let d0 = dist_sq(&x0, &xs);
+        for _ in 0..iters {
+            let base = if let Some(xq) = state.base_query() {
+                oracles
+                    .iter_mut()
+                    .map(|o| {
+                        let mut g = vec![0.0f32; 12];
+                        o.sample(&xq, &mut g);
+                        g
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            let xh = state.extrapolate(&base).unwrap();
+            let half: Vec<Vec<f32>> = oracles
+                .iter_mut()
+                .map(|o| {
+                    let mut g = vec![0.0f32; 12];
+                    o.sample(&xh, &mut g);
+                    g
+                })
+                .collect();
+            state.update(&half).unwrap();
+        }
+        let avg = state.ergodic_average();
+        (dist_sq(&avg, &xs) / d0.max(1e-12), dist_sq(&state.x_world(), &xs) / d0.max(1e-12))
+    }
+
+    #[test]
+    fn de_variant_converges_on_quadratic() {
+        let (avg_ratio, last_ratio) = run_exact(Variant::DualExtrapolation, 3000, 0.25);
+        assert!(avg_ratio < 1e-2, "ergodic ratio {avg_ratio}");
+        assert!(last_ratio < 1.0, "last-iterate ratio {last_ratio}");
+    }
+
+    #[test]
+    fn da_variant_converges_on_quadratic() {
+        let (avg_ratio, _) = run_exact(Variant::DualAveraging, 3000, 0.25);
+        assert!(avg_ratio < 5e-2, "ergodic ratio {avg_ratio}");
+    }
+
+    #[test]
+    fn optda_variant_converges_on_quadratic() {
+        let (avg_ratio, _) = run_exact(Variant::OptimisticDualAveraging, 3000, 0.25);
+        assert!(avg_ratio < 1e-2, "ergodic ratio {avg_ratio}");
+    }
+
+    #[test]
+    fn de_converges_on_pure_rotation_where_gda_diverges() {
+        use crate::oracle::RotationOperator;
+        let op = Arc::new(RotationOperator::new(8, 0.0, 1.0).unwrap());
+        let xs = op.solution().unwrap();
+        let d = 8;
+        let x0 = vec![0.0f32; d];
+        let mut oracle = ExactOracle::new(op.clone());
+        // Q-GenX (DE)
+        let mut state = QGenX::new(Variant::DualExtrapolation, &x0, 1, 0.3, true);
+        for _ in 0..4000 {
+            let xq = state.base_query().unwrap();
+            let mut g = vec![0.0f32; d];
+            oracle.sample(&xq, &mut g);
+            let xh = state.extrapolate(&[g]).unwrap();
+            let mut gh = vec![0.0f32; d];
+            oracle.sample(&xh, &mut gh);
+            state.update(&[gh]).unwrap();
+        }
+        let avg = state.ergodic_average();
+        let r_eg = dist_sq(&avg, &xs) / dist_sq(&x0, &xs);
+        assert!(r_eg < 0.05, "EG-on-rotation ratio {r_eg}");
+
+        // Plain GDA with the same initial step diverges (or fails to
+        // contract) on the pure rotation.
+        let mut x = x0.clone();
+        let gamma = 0.3f32;
+        for _ in 0..4000 {
+            let mut g = vec![0.0f32; d];
+            oracle.sample(&x, &mut g);
+            for i in 0..d {
+                x[i] -= gamma * g[i];
+            }
+            if !x.iter().all(|v| v.is_finite()) {
+                break;
+            }
+        }
+        let r_gda = if x.iter().all(|v| v.is_finite()) {
+            dist_sq(&x, &xs) / dist_sq(&x0, &xs)
+        } else {
+            f64::INFINITY
+        };
+        assert!(r_gda > 1.0, "GDA unexpectedly converged: {r_gda}");
+    }
+
+    #[test]
+    fn phase_protocol_enforced() {
+        let mut state = QGenX::new(Variant::DualAveraging, &[0.0; 4], 1, 1.0, true);
+        // update before extrapolate -> error
+        assert!(state.update(&[vec![0.0; 4]]).is_err());
+        state.extrapolate(&[]).unwrap();
+        // double extrapolate -> error
+        assert!(state.extrapolate(&[]).is_err());
+        state.update(&[vec![0.0; 4]]).unwrap();
+    }
+
+    #[test]
+    fn dimension_mismatches_rejected() {
+        let mut state = QGenX::new(Variant::DualExtrapolation, &[0.0; 4], 2, 1.0, true);
+        // wrong worker count
+        assert!(state.extrapolate(&[vec![0.0; 4]]).is_err());
+        // wrong dim
+        assert!(state
+            .extrapolate(&[vec![0.0; 3], vec![0.0; 3]])
+            .is_err());
+    }
+
+    #[test]
+    fn da_needs_no_base_query_and_de_does() {
+        let de = QGenX::new(Variant::DualExtrapolation, &[0.0; 2], 1, 1.0, true);
+        assert!(de.base_query().is_some());
+        let da = QGenX::new(Variant::DualAveraging, &[0.0; 2], 1, 1.0, true);
+        assert!(da.base_query().is_none());
+        let opt = QGenX::new(Variant::OptimisticDualAveraging, &[0.0; 2], 1, 1.0, true);
+        assert!(opt.base_query().is_none());
+    }
+
+    #[test]
+    fn x0_shift_is_respected() {
+        // With zero oracle vectors the iterate must stay at x0 exactly.
+        let x0 = vec![3.0f32, -2.0];
+        let mut state = QGenX::new(Variant::DualAveraging, &x0, 1, 1.0, true);
+        for _ in 0..5 {
+            state.extrapolate(&[]).unwrap();
+            state.update(&[vec![0.0; 2]]).unwrap();
+        }
+        assert_eq!(state.x_world(), x0);
+        assert_eq!(state.ergodic_average(), x0);
+    }
+
+    #[test]
+    fn gamma_shrinks_under_noisy_vectors() {
+        let mut state = QGenX::new(Variant::DualExtrapolation, &[0.0; 4], 1, 1.0, true);
+        let g0 = state.gamma();
+        let mut rng = Rng::seed_from(9);
+        for _ in 0..50 {
+            let _ = state.base_query();
+            let b = rng.gaussian_vec(4, 1.0);
+            state.extrapolate(&[b]).unwrap();
+            let h = rng.gaussian_vec(4, 1.0);
+            state.update(&[h]).unwrap();
+        }
+        assert!(state.gamma() < g0 * 0.5, "gamma {} vs {}", state.gamma(), g0);
+    }
+}

@@ -1,0 +1,124 @@
+//! The paper's adaptive step-size (Theorems 3 and 4):
+//!
+//! `γ_t = γ₀ · K · (1 + Σ_{i=1}^{t−1} Σ_{k=1}^K ‖V̂_{k,i} − V̂_{k,i+1/2}‖²)^{−1/2}`
+//!
+//! The same rule achieves `O(1/√(TK))` under absolute noise and `O(1/(KT))`
+//! under relative noise *without knowing which regime it is in* — the
+//! accumulated half-step differences shrink automatically when the noise is
+//! relative (the oracle quiets down near the solution), keeping `γ_t`
+//! bounded away from zero; under absolute noise they grow linearly and
+//! `γ_t ∝ 1/√t` emerges.
+
+/// Adaptive step-size accumulator.
+#[derive(Clone, Debug)]
+pub struct AdaptiveStepSize {
+    /// Base scale γ₀ (multiplies the whole rule; 1.0 in the paper).
+    gamma0: f64,
+    /// Number of workers K.
+    k: usize,
+    /// Accumulated Σ_i Σ_k ‖V̂_{k,i} − V̂_{k,i+1/2}‖².
+    sum_sq: f64,
+    /// If false, behave as a fixed step γ₀ (ablation).
+    adaptive: bool,
+}
+
+impl AdaptiveStepSize {
+    pub fn new(gamma0: f64, k: usize, adaptive: bool) -> Self {
+        assert!(gamma0 > 0.0 && k > 0);
+        AdaptiveStepSize { gamma0, k, sum_sq: 0.0, adaptive }
+    }
+
+    /// Current γ_t (before observing iteration t's vectors).
+    #[inline]
+    pub fn gamma(&self) -> f64 {
+        if self.adaptive {
+            self.gamma0 * self.k as f64 / (1.0 + self.sum_sq).sqrt()
+        } else {
+            self.gamma0
+        }
+    }
+
+    /// Record one iteration's per-worker differences
+    /// `Σ_k ‖V̂_{k,t} − V̂_{k,t+1/2}‖²`.
+    pub fn observe(&mut self, sum_worker_diff_sq: f64) {
+        debug_assert!(sum_worker_diff_sq >= 0.0);
+        self.sum_sq += sum_worker_diff_sq;
+    }
+
+    /// Convenience: accumulate from per-worker vector pairs.
+    pub fn observe_pairs(&mut self, base: &[Vec<f32>], half: &[Vec<f32>]) {
+        assert_eq!(base.len(), half.len());
+        let mut acc = 0.0;
+        for (b, h) in base.iter().zip(half.iter()) {
+            acc += crate::util::dist_sq(b, h);
+        }
+        self.observe(acc);
+    }
+
+    pub fn accumulated(&self) -> f64 {
+        self.sum_sq
+    }
+
+    pub fn workers(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_gamma_is_k_gamma0() {
+        let s = AdaptiveStepSize::new(0.5, 4, true);
+        assert!((s.gamma() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_decays_like_inverse_sqrt_under_constant_noise() {
+        // Constant per-iteration difference c -> gamma_t ~ K/sqrt(ct).
+        let mut s = AdaptiveStepSize::new(1.0, 2, true);
+        let c = 4.0;
+        for _ in 0..10_000 {
+            s.observe(c);
+        }
+        let expect = 2.0 / (1.0 + c * 10_000.0).sqrt();
+        assert!((s.gamma() - expect).abs() < 1e-12);
+        // ratio test for the 1/sqrt(t) law
+        let g1 = s.gamma();
+        for _ in 0..30_000 {
+            s.observe(c);
+        }
+        let g2 = s.gamma();
+        assert!((g1 / g2 - 2.0).abs() < 0.01, "{}", g1 / g2);
+    }
+
+    #[test]
+    fn gamma_stays_bounded_when_noise_vanishes() {
+        // Geometric decay of differences (relative-noise regime): the sum
+        // converges, so gamma_t stays bounded below.
+        let mut s = AdaptiveStepSize::new(1.0, 1, true);
+        let mut diff = 1.0;
+        for _ in 0..1000 {
+            s.observe(diff);
+            diff *= 0.9;
+        }
+        assert!(s.gamma() > 0.25, "gamma collapsed: {}", s.gamma());
+    }
+
+    #[test]
+    fn non_adaptive_is_constant() {
+        let mut s = AdaptiveStepSize::new(0.3, 8, false);
+        s.observe(1e9);
+        assert_eq!(s.gamma(), 0.3);
+    }
+
+    #[test]
+    fn observe_pairs_accumulates_distances() {
+        let mut s = AdaptiveStepSize::new(1.0, 2, true);
+        let base = vec![vec![0.0f32, 0.0], vec![1.0, 1.0]];
+        let half = vec![vec![3.0f32, 4.0], vec![1.0, 1.0]];
+        s.observe_pairs(&base, &half);
+        assert!((s.accumulated() - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,256 @@
+//! Minimal benchmark harness (no `criterion` in the offline image).
+//!
+//! Each `[[bench]]` target is a `harness = false` binary that uses this
+//! module: warmup, fixed repeat count or time budget, median/MAD reporting
+//! and an aligned-table printer so bench output reads like the paper's
+//! tables. Set `QGENX_BENCH_FAST=1` to shrink workloads for smoke runs.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub label: String,
+    pub samples: Vec<f64>, // seconds
+}
+
+impl Timing {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return 0.0;
+        }
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let m = self.median();
+        let mut devs: Vec<f64> = self.samples.iter().map(|x| (x - m).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if devs.is_empty() {
+            0.0
+        } else {
+            devs[devs.len() / 2]
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.samples.iter().sum::<f64>() / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// True when the fast/smoke mode is requested (CI and `make bench-fast`).
+pub fn fast_mode() -> bool {
+    std::env::var("QGENX_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Scale an iteration/size parameter down in fast mode.
+pub fn scaled(n: usize, fast: usize) -> usize {
+    if fast_mode() {
+        fast
+    } else {
+        n
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `reps` measured runs.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing { label: label.to_string(), samples }
+}
+
+/// Time `f` until `budget` elapsed (at least 3 samples).
+pub fn bench_for<F: FnMut()>(label: &str, budget: Duration, mut f: F) -> Timing {
+    // one warmup
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    Timing { label: label.to_string(), samples }
+}
+
+/// Format seconds with a sensible unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Format a throughput given bytes processed per call.
+pub fn fmt_throughput(bytes: usize, secs: f64) -> String {
+    if secs <= 0.0 {
+        return "inf".into();
+    }
+    let bps = bytes as f64 / secs;
+    if bps >= 1e9 {
+        format!("{:.2} GB/s", bps / 1e9)
+    } else if bps >= 1e6 {
+        format!("{:.2} MB/s", bps / 1e6)
+    } else {
+        format!("{:.2} KB/s", bps / 1e3)
+    }
+}
+
+/// Simple aligned table printer (markdown-ish, like the paper's tables).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Write CSV rows alongside the printed table so EXPERIMENTS.md plots have a
+/// machine-readable source. Creates parent dirs.
+pub fn write_csv(path: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = String::new();
+    out.push_str(&headers.join(","));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)
+}
+
+/// Estimate the slope of log(y) vs log(x) by least squares — used by the
+/// rate benches to verify the O(1/sqrt(T)) and O(1/T) exponents.
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let pts: Vec<(f64, f64)> = xs
+        .iter()
+        .zip(ys.iter())
+        .filter(|(x, y)| **x > 0.0 && **y > 0.0)
+        .map(|(x, y)| (x.ln(), y.ln()))
+        .collect();
+    let n = pts.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in pts {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing { label: "x".into(), samples: vec![1.0, 2.0, 3.0, 4.0, 100.0] };
+        assert_eq!(t.median(), 3.0);
+        assert_eq!(t.min(), 1.0);
+        assert!(t.mad() <= 2.0); // robust to the outlier
+    }
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let t = bench("noop", 1, 5, || {
+            std::hint::black_box(42);
+        });
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.median() >= 0.0);
+    }
+
+    #[test]
+    fn loglog_slope_recovers_exponent() {
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64 * 10.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(-0.5)).collect();
+        let s = loglog_slope(&xs, &ys);
+        assert!((s + 0.5).abs() < 1e-9, "slope={s}");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_secs(2.0).contains('s'));
+        assert!(fmt_secs(2e-3).contains("ms"));
+        assert!(fmt_throughput(1_000_000_000, 1.0).contains("GB/s"));
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,238 @@
+//! LSB-first bit writer/reader over byte buffers.
+//!
+//! The wire format packs sub-byte fields (sign bits, prefix codes); both
+//! codecs and the quantizer wire format share these primitives. LSB-first
+//! ordering keeps `write_bits`/`read_bits` branch-light: a 64-bit staging
+//! register is flushed a byte at a time.
+
+use crate::error::{Error, Result};
+
+/// Append-only bit sink backed by `Vec<u8>`.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// staging register, LSB-first
+    acc: u64,
+    /// number of valid bits in `acc`
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0 }
+    }
+
+    /// Total bits written so far.
+    #[inline]
+    pub fn bit_len(&self) -> u64 {
+        (self.buf.len() as u64) * 8 + self.nbits as u64
+    }
+
+    /// Write the low `n` bits of `value` (n <= 57 to keep the staging
+    /// register from overflowing in one call).
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 57, "write_bits supports at most 57 bits per call");
+        debug_assert!(n == 64 || value < (1u64 << n), "value {value} does not fit in {n} bits");
+        self.acc |= value << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Write a full u32 (e.g. the f32 norm bits, C_b = 32).
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        self.write_bits(v as u64 & 0xFFFF_FFFF, 32);
+    }
+
+    /// Write an f32 by bit pattern.
+    #[inline]
+    pub fn write_f32(&mut self, v: f32) {
+        self.write_u32(v.to_bits());
+    }
+
+    /// Flush and return the byte buffer (final partial byte zero-padded).
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xFF) as u8);
+        }
+        self.buf
+    }
+}
+
+/// Bit source over a byte slice (LSB-first, mirror of [`BitWriter`]).
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// next byte index
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    /// Bits consumed so far.
+    pub fn bits_read(&self) -> u64 {
+        (self.pos as u64) * 8 - self.nbits as u64
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.buf.len() {
+            self.acc |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read `n` bits (n <= 57).
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u64> {
+        debug_assert!(n <= 57);
+        if self.nbits < n {
+            self.refill();
+            if self.nbits < n {
+                return Err(Error::Codec(format!(
+                    "bitstream truncated: wanted {n} bits, {} available",
+                    self.nbits
+                )));
+            }
+        }
+        let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+        let v = self.acc & mask;
+        self.acc >>= n;
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool> {
+        Ok(self.read_bits(1)? == 1)
+    }
+
+    #[inline]
+    pub fn read_u32(&mut self) -> Result<u32> {
+        Ok(self.read_bits(32)? as u32)
+    }
+
+    #[inline]
+    pub fn read_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.read_u32()?))
+    }
+
+    /// Peek up to `n` bits without consuming (fewer if the stream ends).
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> (u64, u32) {
+        self.refill();
+        let avail = self.nbits.min(n);
+        let mask = if avail >= 64 { u64::MAX } else { (1u64 << avail) - 1 };
+        (self.acc & mask, avail)
+    }
+
+    /// Consume `n` bits previously peeked.
+    #[inline]
+    pub fn skip_bits(&mut self, n: u32) {
+        debug_assert!(self.nbits >= n);
+        self.acc >>= n;
+        self.nbits -= n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn roundtrip_fixed_patterns() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bit(true);
+        w.write_u32(0xDEAD_BEEF);
+        w.write_f32(3.5);
+        w.write_bits(0x7F, 7);
+        let bytes = w.finish();
+
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert!(r.read_bit().unwrap());
+        assert_eq!(r.read_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.read_f32().unwrap(), 3.5);
+        assert_eq!(r.read_bits(7).unwrap(), 0x7F);
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        let _ = r.read_bits(2).unwrap();
+        // Only padding left; reading 32 bits must fail.
+        assert!(r.read_bits(32).is_err());
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.write_u32(7);
+        assert_eq!(w.bit_len(), 33);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_fields() {
+        forall("bitio roundtrip", 200, |g| {
+            let n_fields = g.usize_in(1, 64);
+            let fields: Vec<(u64, u32)> = (0..n_fields)
+                .map(|_| {
+                    let n = g.usize_in(1, 57) as u32;
+                    let v = g.u64_below(1u64 << n.min(63));
+                    (v & ((1u64 << n) - 1), n)
+                })
+                .collect();
+            let mut w = BitWriter::new();
+            for &(v, n) in &fields {
+                w.write_bits(v, n);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(v, n) in &fields {
+                assert_eq!(r.read_bits(n).unwrap(), v);
+            }
+        });
+    }
+
+    #[test]
+    fn peek_then_skip_matches_read() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b1101_0110, 8);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        let (p, avail) = r.peek_bits(5);
+        assert_eq!(avail, 5);
+        assert_eq!(p, 0b1_0110);
+        r.skip_bits(5);
+        assert_eq!(r.read_bits(3).unwrap(), 0b110);
+    }
+}

@@ -1,0 +1,243 @@
+//! Elias universal integer codes (Elias, 1975).
+//!
+//! Used as Ψ when the symbol distribution is unknown but smaller level
+//! indices are more frequent — the regime the paper inherits from QSGD.
+//! All codes operate on positive integers `n >= 1`; the wire layer maps a
+//! level index `j` to `j + 1`.
+//!
+//! * γ(n): `floor(log2 n)` zeros, then the `floor(log2 n)+1`-bit binary of n
+//!   — `2⌊log n⌋ + 1` bits.
+//! * δ(n): γ(⌊log n⌋+1) then the mantissa — `⌊log n⌋ + 2⌊log(⌊log n⌋+1)⌋ + 1`
+//!   bits, asymptotically shorter than γ.
+//! * ω(n): Elias' recursive code ("recursive coding" in Appendix K).
+
+use super::bitio::{BitReader, BitWriter};
+use crate::error::{Error, Result};
+
+#[inline]
+fn ilog2(n: u64) -> u32 {
+    63 - n.leading_zeros()
+}
+
+/// Encode γ(n), n >= 1.
+pub fn gamma_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1, "Elias gamma needs n >= 1");
+    let nb = ilog2(n);
+    // nb zeros (LSB-first writer: bits come out in write order)
+    w.write_bits(0, nb.min(57));
+    if nb > 57 {
+        w.write_bits(0, nb - 57);
+    }
+    // then the number itself MSB-first: emit the leading 1 then remaining bits.
+    w.write_bit(true);
+    // remaining nb bits, MSB first
+    for i in (0..nb).rev() {
+        w.write_bit((n >> i) & 1 == 1);
+    }
+}
+
+/// Decode γ.
+pub fn gamma_decode(r: &mut BitReader) -> Result<u64> {
+    let mut nb = 0u32;
+    loop {
+        if r.read_bit()? {
+            break;
+        }
+        nb += 1;
+        if nb > 63 {
+            return Err(Error::Codec("gamma: run of zeros too long".into()));
+        }
+    }
+    let mut n = 1u64;
+    for _ in 0..nb {
+        n = (n << 1) | r.read_bit()? as u64;
+    }
+    Ok(n)
+}
+
+/// γ code length in bits.
+pub fn gamma_len(n: u64) -> u64 {
+    assert!(n >= 1);
+    2 * ilog2(n) as u64 + 1
+}
+
+/// Encode δ(n), n >= 1.
+pub fn delta_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    let nb = ilog2(n);
+    gamma_encode(w, nb as u64 + 1);
+    for i in (0..nb).rev() {
+        w.write_bit((n >> i) & 1 == 1);
+    }
+}
+
+/// Decode δ.
+pub fn delta_decode(r: &mut BitReader) -> Result<u64> {
+    let nb = gamma_decode(r)? - 1;
+    if nb > 63 {
+        return Err(Error::Codec("delta: length field too large".into()));
+    }
+    let mut n = 1u64;
+    for _ in 0..nb {
+        n = (n << 1) | r.read_bit()? as u64;
+    }
+    Ok(n)
+}
+
+/// δ code length in bits.
+pub fn delta_len(n: u64) -> u64 {
+    assert!(n >= 1);
+    let nb = ilog2(n) as u64;
+    gamma_len(nb + 1) + nb
+}
+
+/// Encode ω(n) (Elias omega / recursive).
+pub fn omega_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    // Build groups back-to-front.
+    let mut groups: Vec<u64> = Vec::new();
+    let mut k = n;
+    while k > 1 {
+        groups.push(k);
+        k = ilog2(k) as u64;
+    }
+    for g in groups.iter().rev() {
+        let nb = ilog2(*g) + 1;
+        for i in (0..nb).rev() {
+            w.write_bit((*g >> i) & 1 == 1);
+        }
+    }
+    w.write_bit(false); // terminating 0
+}
+
+/// Decode ω.
+pub fn omega_decode(r: &mut BitReader) -> Result<u64> {
+    let mut n = 1u64;
+    loop {
+        if !r.read_bit()? {
+            return Ok(n);
+        }
+        // group of n more bits, first bit was the leading 1
+        if n > 62 {
+            return Err(Error::Codec("omega: group too large".into()));
+        }
+        let mut v = 1u64;
+        for _ in 0..n {
+            v = (v << 1) | r.read_bit()? as u64;
+        }
+        n = v;
+    }
+}
+
+/// ω code length in bits.
+pub fn omega_len(n: u64) -> u64 {
+    assert!(n >= 1);
+    let mut bits = 1u64; // terminator
+    let mut k = n;
+    while k > 1 {
+        bits += ilog2(k) as u64 + 1;
+        k = ilog2(k) as u64;
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn gamma_known_values() {
+        // gamma(1) = "1", gamma(2) = "010", gamma(3)="011" ... lengths 1,3,3,5..
+        assert_eq!(gamma_len(1), 1);
+        assert_eq!(gamma_len(2), 3);
+        assert_eq!(gamma_len(3), 3);
+        assert_eq!(gamma_len(4), 5);
+        assert_eq!(gamma_len(255), 15);
+    }
+
+    #[test]
+    fn roundtrip_small_all_codes() {
+        for n in 1..=1000u64 {
+            let mut w = BitWriter::new();
+            gamma_encode(&mut w, n);
+            delta_encode(&mut w, n);
+            omega_encode(&mut w, n);
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            assert_eq!(gamma_decode(&mut r).unwrap(), n, "gamma {n}");
+            assert_eq!(delta_decode(&mut r).unwrap(), n, "delta {n}");
+            assert_eq!(omega_decode(&mut r).unwrap(), n, "omega {n}");
+        }
+    }
+
+    #[test]
+    fn lengths_match_encodings() {
+        let codecs: [(fn(&mut BitWriter, u64), fn(u64) -> u64); 3] = [
+            (gamma_encode, gamma_len),
+            (delta_encode, delta_len),
+            (omega_encode, omega_len),
+        ];
+        for n in [1u64, 2, 3, 7, 8, 100, 1023, 1024, 1 << 20] {
+            for (enc, len) in codecs {
+                let mut w = BitWriter::new();
+                enc(&mut w, n);
+                assert_eq!(w.bit_len(), len(n), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random_sequences() {
+        // Mixed-codec stream: record codec choices, then decode with them.
+        forall("mixed elias roundtrip", 100, |g| {
+            let k = g.usize_in(1, 200);
+            let items: Vec<(u64, usize)> =
+                (0..k).map(|_| (g.u64_below(1 << 32) + 1, g.usize_in(0, 2))).collect();
+            let mut w = BitWriter::new();
+            for &(n, c) in &items {
+                match c {
+                    0 => gamma_encode(&mut w, n),
+                    1 => delta_encode(&mut w, n),
+                    _ => omega_encode(&mut w, n),
+                }
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(n, c) in &items {
+                let got = match c {
+                    0 => gamma_decode(&mut r).unwrap(),
+                    1 => delta_decode(&mut r).unwrap(),
+                    _ => omega_decode(&mut r).unwrap(),
+                };
+                assert_eq!(got, n);
+            }
+        });
+        forall("gamma stream roundtrip", 100, |g| {
+            let k = g.usize_in(1, 300);
+            let ns: Vec<u64> = (0..k).map(|_| g.u64_below(1 << 40) + 1).collect();
+            let mut w = BitWriter::new();
+            for &n in &ns {
+                gamma_encode(&mut w, n);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &n in &ns {
+                assert_eq!(gamma_decode(&mut r).unwrap(), n);
+            }
+        });
+    }
+
+    #[test]
+    fn delta_beats_gamma_for_large_n() {
+        assert!(delta_len(1 << 30) < gamma_len(1 << 30));
+    }
+
+    #[test]
+    fn decode_garbage_is_error_not_panic() {
+        // all-zero bytes: gamma sees an endless zero run then truncation
+        let bytes = vec![0u8; 4];
+        let mut r = BitReader::new(&bytes);
+        assert!(gamma_decode(&mut r).is_err());
+    }
+}

@@ -1,0 +1,363 @@
+//! Canonical Huffman coding over the quantization-level alphabet.
+//!
+//! The paper (Appendix K) encodes level indices with a Huffman code built
+//! from the symbol probabilities `p_0..p_{s+1}` of Proposition 2, which the
+//! QAda machinery estimates from the weighted CDF. Huffman achieves the
+//! minimum expected code length among per-symbol prefix codes, within one
+//! bit of the source entropy (Cover & Thomas, Thms 5.4.1 & 5.8.1).
+//!
+//! We build *canonical* codes so that only the code-length vector needs to
+//! be shipped to peers when levels are re-optimized (schedule `U`), and
+//! decoding can use the fast canonical per-length first-code method.
+
+use super::bitio::{BitReader, BitWriter};
+use crate::error::{Error, Result};
+
+/// Maximum codeword length we allow (alphabets here are ≤ a few hundred
+/// symbols; 32 is generous and keeps the decoder tables tiny).
+pub const MAX_CODE_LEN: u32 = 32;
+
+/// A canonical Huffman code over symbols `0..n`.
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    /// code length (bits) per symbol; 0 = symbol never occurs (not encodable)
+    lengths: Vec<u32>,
+    /// canonical codeword per symbol, MSB-first value
+    codes: Vec<u64>,
+    /// decode tables: for each length L, (first_code[L], index into
+    /// `symbols_by_code` where codes of length L start)
+    first_code: Vec<u64>,
+    first_index: Vec<usize>,
+    symbols_by_code: Vec<u32>,
+}
+
+impl HuffmanCode {
+    /// Build from (unnormalized) symbol weights. Zero-weight symbols get
+    /// length 0 (unencodable); if fewer than 2 symbols have weight, a
+    /// degenerate 1-bit code is produced so the stream is still decodable.
+    pub fn from_weights(weights: &[f64]) -> Result<Self> {
+        let n = weights.len();
+        if n == 0 {
+            return Err(Error::Codec("huffman: empty alphabet".into()));
+        }
+        if weights.iter().any(|w| !w.is_finite() || *w < 0.0) {
+            return Err(Error::Codec("huffman: weights must be finite and >= 0".into()));
+        }
+        let mut lengths = vec![0u32; n];
+        let live: Vec<usize> = (0..n).filter(|&i| weights[i] > 0.0).collect();
+        match live.len() {
+            0 => {
+                // Nothing ever occurs; emit a trivial code on symbol 0 so
+                // that an (empty) stream round-trips.
+                lengths[0] = 1;
+            }
+            1 => {
+                lengths[live[0]] = 1;
+            }
+            _ => {
+                // Package-merge-free plain Huffman via a tiny binary heap of
+                // (weight, node). Depth-limited alphabets are small; if a
+                // codeword would exceed MAX_CODE_LEN we flatten by weight
+                // clamping (practically unreachable with <=2^20 coords).
+                #[derive(PartialEq)]
+                struct Node {
+                    w: f64,
+                    // tie-break on creation order to make codes deterministic
+                    order: usize,
+                    kind: NodeKind,
+                }
+                #[derive(PartialEq)]
+                enum NodeKind {
+                    Leaf(usize),
+                    Internal(Box<Node>, Box<Node>),
+                }
+                impl Eq for Node {}
+                impl PartialOrd for Node {
+                    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+                        Some(self.cmp(other))
+                    }
+                }
+                impl Ord for Node {
+                    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+                        // BinaryHeap is a max-heap; invert for min-heap.
+                        other
+                            .w
+                            .partial_cmp(&self.w)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(other.order.cmp(&self.order))
+                    }
+                }
+                let mut heap = std::collections::BinaryHeap::new();
+                let mut order = 0usize;
+                for &i in &live {
+                    heap.push(Node { w: weights[i], order, kind: NodeKind::Leaf(i) });
+                    order += 1;
+                }
+                while heap.len() > 1 {
+                    let a = heap.pop().unwrap();
+                    let b = heap.pop().unwrap();
+                    heap.push(Node {
+                        w: a.w + b.w,
+                        order,
+                        kind: NodeKind::Internal(Box::new(a), Box::new(b)),
+                    });
+                    order += 1;
+                }
+                // DFS to assign depths.
+                fn walk(node: &Node, depth: u32, lengths: &mut [u32]) {
+                    match &node.kind {
+                        NodeKind::Leaf(i) => lengths[*i] = depth.max(1),
+                        NodeKind::Internal(a, b) => {
+                            walk(a, depth + 1, lengths);
+                            walk(b, depth + 1, lengths);
+                        }
+                    }
+                }
+                let root = heap.pop().unwrap();
+                walk(&root, 0, &mut lengths);
+                if lengths.iter().any(|&l| l > MAX_CODE_LEN) {
+                    return Err(Error::Codec("huffman: code length overflow".into()));
+                }
+            }
+        }
+        Self::from_lengths(lengths)
+    }
+
+    /// Build the canonical code from a length vector (what peers receive).
+    pub fn from_lengths(lengths: Vec<u32>) -> Result<Self> {
+        let max_len = lengths.iter().copied().max().unwrap_or(0);
+        if max_len == 0 || max_len > MAX_CODE_LEN {
+            return Err(Error::Codec(format!("huffman: invalid max length {max_len}")));
+        }
+        // Kraft check: sum 2^-l <= 1.
+        let kraft: f64 = lengths
+            .iter()
+            .filter(|&&l| l > 0)
+            .map(|&l| 2f64.powi(-(l as i32)))
+            .sum();
+        if kraft > 1.0 + 1e-9 {
+            return Err(Error::Codec(format!("huffman: Kraft inequality violated ({kraft})")));
+        }
+        // Canonical assignment: sort symbols by (length, symbol).
+        let mut symbols: Vec<u32> =
+            (0..lengths.len() as u32).filter(|&i| lengths[i as usize] > 0).collect();
+        symbols.sort_by_key(|&s| (lengths[s as usize], s));
+
+        // Per-length canonical tables:
+        //   first_code[l] = (first_code[l-1] + count[l-1]) << 1
+        let mut count = vec![0u64; (max_len + 2) as usize];
+        for &l in &lengths {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        let mut fc = vec![0u64; (max_len + 2) as usize];
+        let mut fi = vec![0usize; (max_len + 2) as usize];
+        let mut c = 0u64;
+        let mut idx = 0usize;
+        for l in 1..=max_len as usize {
+            c = (c + if l > 1 { count[l - 1] } else { 0 }) << 1;
+            fc[l] = c;
+            fi[l] = idx;
+            idx += count[l] as usize;
+        }
+        // Sentinel so the decoder can compute per-length counts by
+        // difference for l == max_len.
+        fi[max_len as usize + 1] = idx;
+        // Derive per-symbol codes from the canonical table.
+        let mut next = fc.clone();
+        let mut codes = vec![0u64; lengths.len()];
+        for &s in &symbols {
+            let l = lengths[s as usize] as usize;
+            codes[s as usize] = next[l];
+            next[l] += 1;
+        }
+
+        Ok(HuffmanCode {
+            lengths,
+            codes,
+            first_code: fc,
+            first_index: fi,
+            symbols_by_code: symbols,
+        })
+    }
+
+    pub fn alphabet_size(&self) -> usize {
+        self.lengths.len()
+    }
+
+    /// Code length of `symbol` in bits (0 = unencodable).
+    pub fn len_of(&self, symbol: usize) -> u32 {
+        self.lengths[symbol]
+    }
+
+    /// The length vector (ship this to peers on level updates).
+    pub fn lengths(&self) -> &[u32] {
+        &self.lengths
+    }
+
+    /// Expected code length under a probability vector.
+    pub fn expected_len(&self, probs: &[f64]) -> f64 {
+        assert_eq!(probs.len(), self.lengths.len());
+        probs
+            .iter()
+            .zip(self.lengths.iter())
+            .map(|(p, &l)| p * l as f64)
+            .sum()
+    }
+
+    /// Encode one symbol.
+    #[inline]
+    pub fn encode(&self, w: &mut BitWriter, symbol: usize) -> Result<()> {
+        let l = self.lengths[symbol];
+        if l == 0 {
+            return Err(Error::Codec(format!("huffman: symbol {symbol} has no code")));
+        }
+        // MSB-first emission of the canonical code.
+        let code = self.codes[symbol];
+        for i in (0..l).rev() {
+            w.write_bit((code >> i) & 1 == 1);
+        }
+        Ok(())
+    }
+
+    /// Decode one symbol (canonical first-code method).
+    #[inline]
+    pub fn decode(&self, r: &mut BitReader) -> Result<u32> {
+        let mut code = 0u64;
+        let max_len = self.first_code.len() as u32 - 2;
+        for l in 1..=max_len {
+            code = (code << 1) | r.read_bit()? as u64;
+            let count_l = if (l as usize) + 1 < self.first_index.len() {
+                self.first_index[l as usize + 1] - self.first_index[l as usize]
+            } else {
+                self.symbols_by_code.len() - self.first_index[l as usize]
+            };
+            if count_l > 0 {
+                let fc = self.first_code[l as usize];
+                if code >= fc && code < fc + count_l as u64 {
+                    let idx = self.first_index[l as usize] + (code - fc) as usize;
+                    return Ok(self.symbols_by_code[idx]);
+                }
+            }
+        }
+        Err(Error::Codec("huffman: invalid codeword".into()))
+    }
+}
+
+/// Source entropy in bits of a probability vector (0 log 0 := 0).
+pub fn entropy_bits(probs: &[f64]) -> f64 {
+    probs
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.log2())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+    use crate::util::Rng;
+
+    fn roundtrip(code: &HuffmanCode, symbols: &[usize]) {
+        let mut w = BitWriter::new();
+        for &s in symbols {
+            code.encode(&mut w, s).unwrap();
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &s in symbols {
+            assert_eq!(code.decode(&mut r).unwrap() as usize, s);
+        }
+    }
+
+    #[test]
+    fn uniform_weights_give_balanced_code() {
+        let code = HuffmanCode::from_weights(&[1.0; 4]).unwrap();
+        for s in 0..4 {
+            assert_eq!(code.len_of(s), 2);
+        }
+        roundtrip(&code, &[0, 1, 2, 3, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn skewed_weights_give_short_code_to_frequent_symbol() {
+        let code = HuffmanCode::from_weights(&[0.85, 0.05, 0.05, 0.05]).unwrap();
+        assert_eq!(code.len_of(0), 1);
+        assert!(code.len_of(1) >= 2);
+        roundtrip(&code, &[0, 0, 0, 1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn expected_len_within_one_bit_of_entropy() {
+        // Cover & Thomas Thm 5.4.1: H <= E[L] < H + 1.
+        let probs = [0.5, 0.25, 0.125, 0.0625, 0.0625];
+        let code = HuffmanCode::from_weights(&probs).unwrap();
+        let h = entropy_bits(&probs);
+        let el = code.expected_len(&probs);
+        assert!(el >= h - 1e-9, "E[L]={el} H={h}");
+        assert!(el < h + 1.0, "E[L]={el} H={h}");
+        // This dyadic distribution is exactly codable: E[L] == H.
+        assert!((el - h).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let code = HuffmanCode::from_weights(&[3.0, 0.0, 0.0]).unwrap();
+        assert_eq!(code.len_of(0), 1);
+        roundtrip(&code, &[0, 0, 0]);
+    }
+
+    #[test]
+    fn zero_weight_symbol_is_unencodable() {
+        let code = HuffmanCode::from_weights(&[1.0, 0.0, 1.0]).unwrap();
+        let mut w = BitWriter::new();
+        assert!(code.encode(&mut w, 1).is_err());
+    }
+
+    #[test]
+    fn lengths_roundtrip_through_canonical_rebuild() {
+        let code = HuffmanCode::from_weights(&[0.4, 0.3, 0.2, 0.1]).unwrap();
+        let rebuilt = HuffmanCode::from_lengths(code.lengths().to_vec()).unwrap();
+        roundtrip(&rebuilt, &[0, 1, 2, 3, 2, 1, 0]);
+        // Same lengths -> same expected length.
+        let probs = [0.4, 0.3, 0.2, 0.1];
+        assert_eq!(code.expected_len(&probs), rebuilt.expected_len(&probs));
+    }
+
+    #[test]
+    fn kraft_violation_rejected() {
+        assert!(HuffmanCode::from_lengths(vec![1, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn prop_random_weights_roundtrip_and_optimality() {
+        forall("huffman roundtrip", 60, |g| {
+            let n = g.usize_in(2, 64);
+            let weights: Vec<f64> = (0..n).map(|_| g.f64_in(0.001, 1.0)).collect();
+            let code = HuffmanCode::from_weights(&weights).unwrap();
+            // Kraft equality for complete Huffman codes.
+            let kraft: f64 =
+                code.lengths().iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+            assert!(kraft <= 1.0 + 1e-9);
+            // roundtrip a random symbol stream distributed by the weights
+            let mut rng = Rng::seed_from(g.case as u64 + 1);
+            let symbols: Vec<usize> = (0..500).map(|_| rng.categorical(&weights)).collect();
+            roundtrip(&code, &symbols);
+            // E[L] within 1 bit of entropy
+            let total: f64 = weights.iter().sum();
+            let probs: Vec<f64> = weights.iter().map(|w| w / total).collect();
+            let el = code.expected_len(&probs);
+            let h = entropy_bits(&probs);
+            assert!(el < h + 1.0 && el >= h - 1e-9, "E[L]={el} H={h}");
+        });
+    }
+
+    #[test]
+    fn entropy_known_values() {
+        assert!((entropy_bits(&[0.5, 0.5]) - 1.0).abs() < 1e-12);
+        assert!((entropy_bits(&[1.0, 0.0]) - 0.0).abs() < 1e-12);
+        assert!((entropy_bits(&[0.25; 4]) - 2.0).abs() < 1e-12);
+    }
+}

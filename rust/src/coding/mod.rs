@@ -1,0 +1,57 @@
+//! Bit-level IO and entropy coding — the `CODE` half of the paper's
+//! `CODE ∘ Q` pipeline (§3.2, Appendix K).
+//!
+//! A quantized dual vector is a tuple `(‖v‖_q, s, q_ℓ(u))`; the norm is sent
+//! as a 32-bit float (`C_b = 32`), each nonzero coordinate's sign as one
+//! bit, and the level *indices* through a lossless prefix code Ψ:
+//!
+//! * [`elias`] — Elias γ/δ/ω universal codes for the "distribution unknown,
+//!   small symbols more frequent" regime (the QSGD-style baseline);
+//! * [`huffman`] — canonical Huffman built from the QAda symbol
+//!   probabilities of Proposition 2 — the minimum-expected-length prefix
+//!   code when the distribution is known (Cover & Thomas Thm 5.4.1/5.8.1).
+//!
+//! [`bitio`] provides the LSB-first bit writer/reader both codecs share.
+
+pub mod bitio;
+pub mod elias;
+pub mod huffman;
+
+pub use bitio::{BitReader, BitWriter};
+pub use huffman::HuffmanCode;
+
+/// Which prefix code Ψ encodes quantization-level indices on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SymbolCodec {
+    /// Elias gamma on (index+1): universal, no side information.
+    EliasGamma,
+    /// Elias delta on (index+1): better for larger alphabets.
+    EliasDelta,
+    /// Canonical Huffman from estimated symbol probabilities; code lengths
+    /// are shipped once per level-update (schedule `U`), not per message.
+    Huffman,
+    /// Fixed-width ceil(log2(s+2)) bits per symbol (the no-entropy-coding
+    /// ablation; equivalent to what torch_cgx's UQ4/UQ8 put on the wire).
+    Fixed,
+}
+
+impl SymbolCodec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SymbolCodec::EliasGamma => "elias-gamma",
+            SymbolCodec::EliasDelta => "elias-delta",
+            SymbolCodec::Huffman => "huffman",
+            SymbolCodec::Fixed => "fixed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "elias-gamma" | "gamma" => Some(SymbolCodec::EliasGamma),
+            "elias-delta" | "delta" => Some(SymbolCodec::EliasDelta),
+            "huffman" => Some(SymbolCodec::Huffman),
+            "fixed" => Some(SymbolCodec::Fixed),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,451 @@
+//! Typed experiment configuration on top of the [`toml`] subset parser.
+//!
+//! One `ExperimentConfig` drives the whole launcher: which VI problem /
+//! model, how many workers `K`, the quantization mode, the codec, the
+//! network model and the algorithm variant. Every field has a default so a
+//! config file only states what it changes; `ExperimentConfig::default()`
+//! is itself a valid smoke experiment.
+
+pub mod toml;
+
+use crate::coding::SymbolCodec;
+use crate::error::{Error, Result};
+use toml::Doc;
+
+/// Compression mode — FP32 (no compression) or quantized with `s` levels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Full precision: 32 bits/coordinate on the wire, no quantization.
+    Fp32,
+    /// Unbiased stochastic quantization with `s` interior levels
+    /// (UQ4 ≡ s = 14 → 4 bits/symbol fixed-width; UQ8 ≡ s = 254).
+    Quantized { levels: usize },
+}
+
+impl QuantMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fp32" | "full" => Ok(QuantMode::Fp32),
+            "uq4" => Ok(QuantMode::Quantized { levels: 14 }),
+            "uq8" => Ok(QuantMode::Quantized { levels: 254 }),
+            other => {
+                if let Some(n) = other.strip_prefix("s") {
+                    if let Ok(levels) = n.parse::<usize>() {
+                        return Ok(QuantMode::Quantized { levels });
+                    }
+                }
+                Err(Error::Config(format!("unknown quant mode `{other}` (fp32|uq4|uq8|s<N>)")))
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            QuantMode::Fp32 => "fp32".into(),
+            QuantMode::Quantized { levels: 14 } => "uq4".into(),
+            QuantMode::Quantized { levels: 254 } => "uq8".into(),
+            QuantMode::Quantized { levels } => format!("s{levels}"),
+        }
+    }
+}
+
+/// How the interior levels are placed / maintained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LevelScheme {
+    /// Equally spaced (QSGD-style).
+    Uniform,
+    /// Exponentially spaced toward 0 (NUQSGD-style).
+    Exponential,
+    /// QAda: optimized to minimize quantization variance, updated on the
+    /// schedule `U` (paper §3.3).
+    Adaptive,
+}
+
+impl LevelScheme {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uniform" => Ok(LevelScheme::Uniform),
+            "exponential" | "exp" => Ok(LevelScheme::Exponential),
+            "adaptive" | "qada" => Ok(LevelScheme::Adaptive),
+            other => Err(Error::Config(format!("unknown level scheme `{other}`"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LevelScheme::Uniform => "uniform",
+            LevelScheme::Exponential => "exponential",
+            LevelScheme::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Quantization + wire-format configuration.
+#[derive(Clone, Debug)]
+pub struct QuantConfig {
+    pub mode: QuantMode,
+    pub scheme: LevelScheme,
+    /// `q` of the `L^q` normalization; `u32::MAX` = L∞.
+    pub norm_q: u32,
+    /// Bucket size: vectors are quantized in independent buckets of this
+    /// many coordinates (torch_cgx uses 1024). 0 = whole vector.
+    pub bucket_size: usize,
+    pub codec: SymbolCodec,
+    /// Re-optimize adaptive levels every this many iterations (schedule U).
+    pub update_every: usize,
+    /// Histogram bins for the QAda sufficient statistic.
+    pub hist_bins: usize,
+    /// Number of sampled dual vectors J per level update.
+    pub stat_samples: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            mode: QuantMode::Quantized { levels: 14 },
+            scheme: LevelScheme::Adaptive,
+            norm_q: 2,
+            bucket_size: 1024,
+            codec: SymbolCodec::Huffman,
+            update_every: 100,
+            hist_bins: 256,
+            stat_samples: 8,
+        }
+    }
+}
+
+/// Q-GenX variant: which oracle queries feed V̂_{k,t} and V̂_{k,t+1/2}
+/// (paper Examples 3.1–3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Quantized dual averaging (V̂_t ≡ 0).
+    DualAveraging,
+    /// Quantized dual extrapolation (classic extra-gradient queries).
+    DualExtrapolation,
+    /// Quantized optimistic dual averaging (reuses the previous half-step
+    /// query — one oracle call per iteration).
+    OptimisticDualAveraging,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "da" | "dual-averaging" => Ok(Variant::DualAveraging),
+            "de" | "dual-extrapolation" | "extragradient" | "eg" => Ok(Variant::DualExtrapolation),
+            "optda" | "optimistic" => Ok(Variant::OptimisticDualAveraging),
+            other => Err(Error::Config(format!("unknown variant `{other}` (da|de|optda)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::DualAveraging => "da",
+            Variant::DualExtrapolation => "de",
+            Variant::OptimisticDualAveraging => "optda",
+        }
+    }
+}
+
+/// Algorithm configuration.
+#[derive(Clone, Debug)]
+pub struct AlgoConfig {
+    pub variant: Variant,
+    /// Base step scale multiplying the adaptive rule (γ0).
+    pub gamma0: f64,
+    /// Use the paper's adaptive step-size (false = fixed γ0/√T style).
+    pub adaptive_step: bool,
+}
+
+impl Default for AlgoConfig {
+    fn default() -> Self {
+        AlgoConfig { variant: Variant::DualExtrapolation, gamma0: 1.0, adaptive_step: true }
+    }
+}
+
+/// Simulated network (α-β model).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Link bandwidth in bytes/second (default 1 GbE ≈ 117 MiB/s usable).
+    pub bandwidth_bps: f64,
+    /// Per-message latency in seconds (default 50 µs).
+    pub latency_s: f64,
+    /// All-to-all (true, paper's broadcast model) vs star via leader.
+    pub all_to_all: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { bandwidth_bps: 117.0 * 1024.0 * 1024.0, latency_s: 50e-6, all_to_all: true }
+    }
+}
+
+/// VI problem selection.
+#[derive(Clone, Debug)]
+pub struct ProblemConfig {
+    /// bilinear | quadratic | rotation | cocoercive | game
+    pub kind: String,
+    pub dim: usize,
+    /// Absolute-noise stddev σ (Assumption 2).
+    pub sigma: f64,
+    /// Relative-noise factor c (Assumption 3); used by relative oracles.
+    pub rel_c: f64,
+    /// absolute | relative | rcd | player
+    pub noise: String,
+}
+
+impl Default for ProblemConfig {
+    fn default() -> Self {
+        ProblemConfig {
+            kind: "bilinear".into(),
+            dim: 64,
+            sigma: 1.0,
+            rel_c: 1.0,
+            noise: "absolute".into(),
+        }
+    }
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Number of processors K.
+    pub workers: usize,
+    /// Iterations T.
+    pub iters: usize,
+    /// Evaluate the gap every this many iterations.
+    pub eval_every: usize,
+    pub quant: QuantConfig,
+    pub algo: AlgoConfig,
+    pub net: NetConfig,
+    pub problem: ProblemConfig,
+    /// Where benches/drivers write CSV output.
+    pub out_dir: String,
+    /// Directory holding AOT HLO artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 42,
+            workers: 3,
+            iters: 1000,
+            eval_every: 50,
+            quant: QuantConfig::default(),
+            algo: AlgoConfig::default(),
+            net: NetConfig::default(),
+            problem: ProblemConfig::default(),
+            out_dir: "results".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text.
+    pub fn from_toml(src: &str) -> Result<Self> {
+        let doc = Doc::parse(src)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Self> {
+        let doc = Doc::load(path)?;
+        let cfg = Self::from_doc(&doc)?;
+        let unused = doc.unused_keys();
+        if !unused.is_empty() {
+            log::warn!("config {path}: unused keys (typos?): {unused:?}");
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let d = ExperimentConfig::default();
+        let cfg = ExperimentConfig {
+            name: doc.get_str("name", &d.name)?,
+            seed: doc.get_i64("seed", d.seed as i64)? as u64,
+            workers: doc.get_usize("workers", d.workers)?,
+            iters: doc.get_usize("iters", d.iters)?,
+            eval_every: doc.get_usize("eval_every", d.eval_every)?,
+            quant: QuantConfig {
+                mode: QuantMode::parse(&doc.get_str("quant.mode", &d.quant.mode.name())?)?,
+                scheme: LevelScheme::parse(&doc.get_str("quant.scheme", d.quant.scheme.name())?)?,
+                norm_q: {
+                    let q = doc.get_str("quant.norm", "l2")?;
+                    parse_norm(&q)?
+                },
+                bucket_size: doc.get_usize("quant.bucket_size", d.quant.bucket_size)?,
+                codec: SymbolCodec::parse(&doc.get_str("quant.codec", d.quant.codec.name())?)
+                    .ok_or_else(|| Error::Config("bad quant.codec".into()))?,
+                update_every: doc.get_usize("quant.update_every", d.quant.update_every)?,
+                hist_bins: doc.get_usize("quant.hist_bins", d.quant.hist_bins)?,
+                stat_samples: doc.get_usize("quant.stat_samples", d.quant.stat_samples)?,
+            },
+            algo: AlgoConfig {
+                variant: Variant::parse(&doc.get_str("algo.variant", d.algo.variant.name())?)?,
+                gamma0: doc.get_f64("algo.gamma0", d.algo.gamma0)?,
+                adaptive_step: doc.get_bool("algo.adaptive_step", d.algo.adaptive_step)?,
+            },
+            net: NetConfig {
+                bandwidth_bps: doc.get_f64("net.bandwidth_mbps", d.net.bandwidth_bps / 1e6)?
+                    * 1e6,
+                latency_s: doc.get_f64("net.latency_us", d.net.latency_s * 1e6)? * 1e-6,
+                all_to_all: doc.get_bool("net.all_to_all", d.net.all_to_all)?,
+            },
+            problem: ProblemConfig {
+                kind: doc.get_str("problem.kind", &d.problem.kind)?,
+                dim: doc.get_usize("problem.dim", d.problem.dim)?,
+                sigma: doc.get_f64("problem.sigma", d.problem.sigma)?,
+                rel_c: doc.get_f64("problem.rel_c", d.problem.rel_c)?,
+                noise: doc.get_str("problem.noise", &d.problem.noise)?,
+            },
+            out_dir: doc.get_str("out_dir", &d.out_dir)?,
+            artifacts_dir: doc.get_str("artifacts_dir", &d.artifacts_dir)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity checks that catch misconfiguration early.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be >= 1".into()));
+        }
+        if self.iters == 0 {
+            return Err(Error::Config("iters must be >= 1".into()));
+        }
+        if let QuantMode::Quantized { levels } = self.quant.mode {
+            if levels == 0 {
+                return Err(Error::Config("quant levels must be >= 1".into()));
+            }
+            if levels > 65_534 {
+                return Err(Error::Config("quant levels too large (> 65534)".into()));
+            }
+        }
+        if self.quant.hist_bins < 2 {
+            return Err(Error::Config("quant.hist_bins must be >= 2".into()));
+        }
+        if !(self.net.bandwidth_bps > 0.0) {
+            return Err(Error::Config("net.bandwidth must be positive".into()));
+        }
+        if self.problem.dim == 0 {
+            return Err(Error::Config("problem.dim must be >= 1".into()));
+        }
+        if self.algo.gamma0 <= 0.0 {
+            return Err(Error::Config("algo.gamma0 must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Parse "l1" | "l2" | "linf" | "l<q>" into the norm exponent.
+pub fn parse_norm(s: &str) -> Result<u32> {
+    match s {
+        "l1" => Ok(1),
+        "l2" => Ok(2),
+        "linf" | "inf" => Ok(u32::MAX),
+        other => other
+            .strip_prefix('l')
+            .and_then(|n| n.parse::<u32>().ok())
+            .filter(|&q| q >= 1)
+            .ok_or_else(|| Error::Config(format!("bad norm `{other}` (l1|l2|linf|l<q>)"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let src = r#"
+name = "fig4"
+seed = 7
+workers = 8
+iters = 5000
+eval_every = 100
+
+[quant]
+mode = "uq8"
+scheme = "adaptive"
+norm = "linf"
+bucket_size = 512
+codec = "huffman"
+update_every = 250
+
+[algo]
+variant = "optda"
+gamma0 = 0.5
+adaptive_step = true
+
+[net]
+bandwidth_mbps = 125.0
+latency_us = 20.0
+
+[problem]
+kind = "quadratic"
+dim = 1024
+sigma = 0.1
+noise = "relative"
+"#;
+        let cfg = ExperimentConfig::from_toml(src).unwrap();
+        assert_eq!(cfg.name, "fig4");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.quant.mode, QuantMode::Quantized { levels: 254 });
+        assert_eq!(cfg.quant.norm_q, u32::MAX);
+        assert_eq!(cfg.algo.variant, Variant::OptimisticDualAveraging);
+        assert!((cfg.net.bandwidth_bps - 125e6).abs() < 1.0);
+        assert!((cfg.net.latency_s - 20e-6).abs() < 1e-12);
+        assert_eq!(cfg.problem.kind, "quadratic");
+    }
+
+    #[test]
+    fn quant_mode_parsing() {
+        assert_eq!(QuantMode::parse("fp32").unwrap(), QuantMode::Fp32);
+        assert_eq!(QuantMode::parse("uq4").unwrap(), QuantMode::Quantized { levels: 14 });
+        assert_eq!(QuantMode::parse("s31").unwrap(), QuantMode::Quantized { levels: 31 });
+        assert!(QuantMode::parse("zzz").is_err());
+        // name() round-trips
+        for m in ["fp32", "uq4", "uq8", "s31"] {
+            assert_eq!(QuantMode::parse(m).unwrap().name(), m);
+        }
+    }
+
+    #[test]
+    fn norm_parsing() {
+        assert_eq!(parse_norm("l1").unwrap(), 1);
+        assert_eq!(parse_norm("l2").unwrap(), 2);
+        assert_eq!(parse_norm("linf").unwrap(), u32::MAX);
+        assert_eq!(parse_norm("l4").unwrap(), 4);
+        assert!(parse_norm("x").is_err());
+        assert!(parse_norm("l0").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.quant.mode = QuantMode::Quantized { levels: 0 };
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.algo.gamma0 = -1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn variant_parsing_aliases() {
+        assert_eq!(Variant::parse("eg").unwrap(), Variant::DualExtrapolation);
+        assert_eq!(Variant::parse("da").unwrap(), Variant::DualAveraging);
+        assert_eq!(Variant::parse("optimistic").unwrap(), Variant::OptimisticDualAveraging);
+    }
+}

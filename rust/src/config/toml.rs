@@ -1,0 +1,384 @@
+//! Minimal TOML-subset parser (no `serde`/`toml` in the offline image).
+//!
+//! Supports the subset the launcher needs:
+//! * `[section]` and `[section.subsection]` headers
+//! * `key = value` with string (`"..."`), integer, float, boolean values
+//! * homogeneous inline arrays `[1, 2, 3]` / `["a", "b"]`
+//! * `#` comments, blank lines
+//!
+//! Everything is stored in a flat `section.key -> Value` map; typed access
+//! with defaulting lives in [`Doc`]'s getters. Unknown keys are kept so the
+//! launcher can warn about typos (`Doc::unused_keys`).
+
+use crate::error::{Error, Result};
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Array(_) => "array",
+        }
+    }
+}
+
+/// A parsed document: flat map of `section.key` (or bare `key`) to values.
+#[derive(Debug, Default)]
+pub struct Doc {
+    map: BTreeMap<String, Value>,
+    /// keys read at least once (for typo warnings)
+    used: RefCell<BTreeSet<String>>,
+}
+
+impl Doc {
+    /// Parse a TOML-subset string.
+    pub fn parse(src: &str) -> Result<Doc> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| err(lineno, &format!("bad value: {e}")))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if map.insert(full.clone(), value).is_some() {
+                return Err(err(lineno, &format!("duplicate key `{full}`")));
+            }
+        }
+        Ok(Doc { map, used: RefCell::new(BTreeSet::new()) })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Doc> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+        Doc::parse(&src)
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.mark(key);
+        self.map.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(v) => Err(type_err(key, "string", v)),
+        }
+    }
+
+    pub fn get_i64(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Int(i)) => Ok(*i),
+            Some(v) => Err(type_err(key, "integer", v)),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        let v = self.get_i64(key, default as i64)?;
+        if v < 0 {
+            return Err(Error::Config(format!("{key}: must be non-negative, got {v}")));
+        }
+        Ok(v as usize)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(v) => Err(type_err(key, "float", v)),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(Value::Bool(b)) => Ok(*b),
+            Some(v) => Err(type_err(key, "boolean", v)),
+        }
+    }
+
+    pub fn get_f64_array(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Value::Array(xs)) => {
+                let mut out = Vec::with_capacity(xs.len());
+                for x in xs {
+                    match x {
+                        Value::Float(f) => out.push(*f),
+                        Value::Int(i) => out.push(*i as f64),
+                        v => return Err(type_err(key, "float array", v)),
+                    }
+                }
+                Ok(Some(out))
+            }
+            Some(v) => Err(type_err(key, "array", v)),
+        }
+    }
+
+    pub fn get_usize_array(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Value::Array(xs)) => {
+                let mut out = Vec::with_capacity(xs.len());
+                for x in xs {
+                    match x {
+                        Value::Int(i) if *i >= 0 => out.push(*i as usize),
+                        v => return Err(type_err(key, "non-negative int array", v)),
+                    }
+                }
+                Ok(Some(out))
+            }
+            Some(v) => Err(type_err(key, "array", v)),
+        }
+    }
+
+    /// Keys present in the file but never read — likely typos.
+    pub fn unused_keys(&self) -> Vec<String> {
+        let used = self.used.borrow();
+        self.map.keys().filter(|k| !used.contains(*k)).cloned().collect()
+    }
+}
+
+fn err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+fn type_err(key: &str, want: &str, got: &Value) -> Error {
+    Error::Config(format!("{key}: expected {want}, got {}", got.type_name()))
+}
+
+/// Strip a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        if inner.contains('"') {
+            return Err("embedded quote not supported".into());
+        }
+        return Ok(Value::Str(unescape(inner)));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    // numbers (support underscores and exponents)
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse `{s}`"))
+}
+
+fn unescape(s: &str) -> String {
+    s.replace("\\n", "\n").replace("\\t", "\t").replace("\\\\", "\\")
+}
+
+/// Split on commas that are not inside nested brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "bilinear"           # inline comment
+seed = 42
+
+[quant]
+bits = 4
+levels = [0.1, 0.5, 0.9]
+adaptive = true
+norm_q = 2
+
+[net]
+bandwidth_gbps = 1.0
+latency_us = 50.0
+peers = [1, 2, 3]
+label = "1GbE"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get_str("name", "").unwrap(), "bilinear");
+        assert_eq!(doc.get_i64("seed", 0).unwrap(), 42);
+        assert_eq!(doc.get_i64("quant.bits", 0).unwrap(), 4);
+        assert!(doc.get_bool("quant.adaptive", false).unwrap());
+        assert_eq!(doc.get_f64("net.bandwidth_gbps", 0.0).unwrap(), 1.0);
+        assert_eq!(
+            doc.get_f64_array("quant.levels").unwrap().unwrap(),
+            vec![0.1, 0.5, 0.9]
+        );
+        assert_eq!(doc.get_usize_array("net.peers").unwrap().unwrap(), vec![1, 2, 3]);
+        assert_eq!(doc.get_str("net.label", "").unwrap(), "1GbE");
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let doc = Doc::parse("a = 1").unwrap();
+        assert_eq!(doc.get_i64("missing", 7).unwrap(), 7);
+        assert_eq!(doc.get_str("nope", "d").unwrap(), "d");
+        assert!(doc.get_f64_array("arr").unwrap().is_none());
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let doc = Doc::parse("a = \"x\"").unwrap();
+        assert!(doc.get_i64("a", 0).is_err());
+        let doc2 = Doc::parse("b = 3").unwrap();
+        assert!(doc2.get_bool("b", false).is_err());
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x", 0.0).unwrap(), 3.0);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        assert!(Doc::parse("k = \"open").is_err());
+        assert!(Doc::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_exponents() {
+        let doc = Doc::parse("big = 1_000_000\nsmall = 1e-3\nneg = -42").unwrap();
+        assert_eq!(doc.get_i64("big", 0).unwrap(), 1_000_000);
+        assert!((doc.get_f64("small", 0.0).unwrap() - 1e-3).abs() < 1e-12);
+        assert_eq!(doc.get_i64("neg", 0).unwrap(), -42);
+    }
+
+    #[test]
+    fn unused_keys_tracked() {
+        let doc = Doc::parse("a = 1\nb = 2").unwrap();
+        let _ = doc.get_i64("a", 0).unwrap();
+        assert_eq!(doc.unused_keys(), vec!["b".to_string()]);
+    }
+
+    #[test]
+    fn comment_inside_string_preserved() {
+        let doc = Doc::parse("s = \"a # b\"").unwrap();
+        assert_eq!(doc.get_str("s", "").unwrap(), "a # b");
+    }
+
+    #[test]
+    fn nested_section_names() {
+        let doc = Doc::parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(doc.get_i64("a.b.c", 0).unwrap(), 1);
+    }
+}

@@ -1,0 +1,297 @@
+//! Single-threaded simulation of the K-processor system — Algorithm 1 with
+//! every byte of the wire format exercised, but no thread machinery.
+//! Deterministic given the config seed; the workhorse of the benches.
+
+use super::pipeline::Compressor;
+use super::schedule::UpdateSchedule;
+use crate::algo::{QGenX, Sgda};
+use crate::config::{ExperimentConfig, LevelScheme};
+use crate::error::Result;
+use crate::metrics::Recorder;
+use crate::net::{NetModel, TrafficStats};
+use crate::oracle::{build_operator, build_oracle, GapEvaluator, Oracle};
+use crate::util::Rng;
+use std::time::Instant;
+
+/// Run one Q-GenX experiment per the config; returns the metric recorder
+/// with series `gap`, `dist`, `residual`, `gamma`, `bits_cum`,
+/// `sim_time_cum` and summary scalars.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
+    cfg.validate()?;
+    let op = build_operator(&cfg.problem, cfg.seed)?;
+    let d = op.dim();
+    let k = cfg.workers;
+    let root = Rng::seed_from(cfg.seed);
+
+    // K private oracles + K compression endpoints.
+    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+        .collect::<Result<_>>()?;
+    let mut comps: Vec<Compressor> = (0..k)
+        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+        .collect::<Result<_>>()?;
+
+    let adaptive = cfg.quant.scheme == LevelScheme::Adaptive
+        || cfg.quant.codec == crate::coding::SymbolCodec::Huffman;
+    let schedule = if adaptive && comps[0].is_quantized() {
+        UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
+    } else {
+        UpdateSchedule::never()
+    };
+
+    let x0 = vec![0.0f32; d];
+    let mut state = QGenX::new(cfg.algo.variant, &x0, k, cfg.algo.gamma0, cfg.algo.adaptive_step);
+
+    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+    let net = NetModel::from_config(&cfg.net);
+    let mut traffic = TrafficStats::default();
+    let mut rec = Recorder::new();
+
+    // Scratch buffers reused across iterations.
+    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+    let mut g_buf = vec![0.0f32; d];
+
+    for t in 1..=cfg.iters {
+        // (1) Level-update step: exchange sufficient statistics, pool,
+        //     re-optimize — identical on all workers.
+        if schedule.is_update(t) {
+            let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
+            let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
+            traffic.record_allgather(&bits, &net);
+            let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+            for comp in comps.iter_mut() {
+                comp.update_levels(&rank_order)?;
+            }
+        }
+
+        // (2) Base exchange (variant-dependent).
+        let base_vecs: Vec<Vec<f32>> = if let Some(xq) = state.base_query() {
+            let t0 = Instant::now();
+            let mut bits = Vec::with_capacity(k);
+            let mut wires = Vec::with_capacity(k);
+            for w in 0..k {
+                oracles[w].sample(&xq, &mut g_buf);
+                let (bytes, b) = comps[w].compress(&g_buf)?;
+                bits.push(b);
+                wires.push(bytes);
+            }
+            // Everyone decodes everyone (we decode once — identical everywhere).
+            for w in 0..k {
+                comps[w].decompress(&wires[w], &mut decoded[w])?;
+            }
+            traffic.add_compute(t0.elapsed().as_secs_f64());
+            traffic.record_allgather(&bits, &net);
+            decoded.clone()
+        } else {
+            Vec::new()
+        };
+
+        // (3) Extrapolate.
+        let x_half = state.extrapolate(&base_vecs)?;
+
+        // (4) Half-step exchange.
+        let t0 = Instant::now();
+        let mut bits = Vec::with_capacity(k);
+        let mut wires = Vec::with_capacity(k);
+        for w in 0..k {
+            oracles[w].sample(&x_half, &mut g_buf);
+            let (bytes, b) = comps[w].compress(&g_buf)?;
+            bits.push(b);
+            wires.push(bytes);
+        }
+        for w in 0..k {
+            comps[w].decompress(&wires[w], &mut decoded[w])?;
+        }
+        traffic.add_compute(t0.elapsed().as_secs_f64());
+        traffic.record_allgather(&bits, &net);
+        state.update(&decoded)?;
+
+        // (5) Evaluation.
+        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+            let avg = state.ergodic_average();
+            if let Some(ev) = &gap_eval {
+                rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
+                rec.push("dist", t as f64, ev.dist_to_center(&avg));
+            }
+            rec.push("residual", t as f64, op.residual(&avg));
+            rec.push("gamma", t as f64, state.gamma());
+            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+            rec.push("sim_time_cum", t as f64, traffic.total_time());
+        }
+    }
+
+    rec.set_scalar("total_bits", traffic.bits_sent as f64);
+    rec.set_scalar("bits_per_round_per_worker", traffic.bits_per_round_per_worker(k));
+    rec.set_scalar("sim_net_time", traffic.sim_net_time);
+    rec.set_scalar("compute_time", traffic.compute_time);
+    rec.set_scalar("rounds", traffic.rounds as f64);
+    rec.set_scalar("level_updates", comps[0].updates() as f64);
+    rec.set_scalar("epsilon_q", comps[0].epsilon_q(d));
+    Ok(rec)
+}
+
+/// QSGDA baseline (Beznosikov et al. 2022): quantized SGDA with γ_t = γ₀/√t,
+/// same oracles/compressors/network — only the update rule differs
+/// (no extrapolation, no adaptive step). The Figure-4 comparator.
+pub fn run_qsgda_baseline(cfg: &ExperimentConfig) -> Result<Recorder> {
+    cfg.validate()?;
+    let op = build_operator(&cfg.problem, cfg.seed)?;
+    let d = op.dim();
+    let k = cfg.workers;
+    let root = Rng::seed_from(cfg.seed);
+    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+        .collect::<Result<_>>()?;
+    let mut comps: Vec<Compressor> = (0..k)
+        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+        .collect::<Result<_>>()?;
+    let x0 = vec![0.0f32; d];
+    let mut sgda = Sgda::new(&x0, cfg.algo.gamma0, true);
+    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+    let net = NetModel::from_config(&cfg.net);
+    let mut traffic = TrafficStats::default();
+    let mut rec = Recorder::new();
+    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+    let mut g_buf = vec![0.0f32; d];
+
+    for t in 1..=cfg.iters {
+        let xq = sgda.query();
+        let mut bits = Vec::with_capacity(k);
+        let mut wires = Vec::with_capacity(k);
+        for w in 0..k {
+            oracles[w].sample(&xq, &mut g_buf);
+            let (bytes, b) = comps[w].compress(&g_buf)?;
+            bits.push(b);
+            wires.push(bytes);
+        }
+        for w in 0..k {
+            comps[w].decompress(&wires[w], &mut decoded[w])?;
+        }
+        traffic.record_allgather(&bits, &net);
+        sgda.update(&decoded);
+        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+            let avg = sgda.ergodic_average();
+            if let Some(ev) = &gap_eval {
+                rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
+                rec.push("dist", t as f64, ev.dist_to_center(&avg));
+                rec.push("dist_last", t as f64, ev.dist_to_center(sgda.x()));
+            }
+            rec.push("residual", t as f64, op.residual(&avg));
+            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+        }
+    }
+    rec.set_scalar("total_bits", traffic.bits_sent as f64);
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{QuantMode, Variant};
+
+    fn base_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 3;
+        cfg.iters = 400;
+        cfg.eval_every = 100;
+        cfg.problem.kind = "quadratic".into();
+        cfg.problem.dim = 16;
+        cfg.problem.noise = "absolute".into();
+        cfg.problem.sigma = 0.3;
+        cfg.quant.update_every = 100;
+        cfg
+    }
+
+    #[test]
+    fn qgenx_converges_quantized_absolute_noise() {
+        let cfg = base_cfg();
+        let rec = run_experiment(&cfg).unwrap();
+        let gaps = rec.get("gap").unwrap();
+        let first = gaps.points.first().unwrap().1;
+        let last = gaps.last().unwrap();
+        assert!(last < first, "gap should shrink: {first} -> {last}");
+        assert!(rec.scalar("total_bits").unwrap() > 0.0);
+        assert!(rec.scalar("level_updates").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn fp32_and_quantized_converge_similarly_but_quantized_sends_fewer_bits() {
+        let mut cfg = base_cfg();
+        cfg.iters = 600;
+        let rec_q = run_experiment(&cfg).unwrap();
+        cfg.quant.mode = QuantMode::Fp32;
+        let rec_f = run_experiment(&cfg).unwrap();
+        let bits_q = rec_q.scalar("total_bits").unwrap();
+        let bits_f = rec_f.scalar("total_bits").unwrap();
+        assert!(bits_q < bits_f / 3.0, "quantized {bits_q} vs fp32 {bits_f}");
+        // Both reach a small gap.
+        let gq = rec_q.get("gap").unwrap().last().unwrap();
+        let gf = rec_f.get("gap").unwrap().last().unwrap();
+        assert!(gq < 1.0 && gf < 1.0, "gq={gq} gf={gf}");
+    }
+
+    #[test]
+    fn all_variants_run_and_converge() {
+        for v in [Variant::DualAveraging, Variant::DualExtrapolation, Variant::OptimisticDualAveraging] {
+            let mut cfg = base_cfg();
+            cfg.algo.variant = v;
+            cfg.iters = 500;
+            let rec = run_experiment(&cfg).unwrap();
+            let last = rec.get("gap").unwrap().last().unwrap();
+            assert!(last.is_finite(), "variant {v:?} gap {last}");
+        }
+    }
+
+    #[test]
+    fn da_and_optda_send_half_the_rounds_of_de() {
+        let mut cfg = base_cfg();
+        cfg.quant.scheme = LevelScheme::Uniform; // no stat-exchange rounds
+        cfg.algo.variant = Variant::DualExtrapolation;
+        let rec_de = run_experiment(&cfg).unwrap();
+        cfg.algo.variant = Variant::OptimisticDualAveraging;
+        let rec_opt = run_experiment(&cfg).unwrap();
+        let r_de = rec_de.scalar("rounds").unwrap();
+        let r_opt = rec_opt.scalar("rounds").unwrap();
+        assert!((r_de / r_opt - 2.0).abs() < 0.01, "de {r_de} opt {r_opt}");
+    }
+
+    #[test]
+    fn more_workers_reduce_final_error_under_absolute_noise() {
+        // Theorem 3's 1/sqrt(K): K=8 should beat K=1 on the same budget.
+        // Average over seeds — a single run's final gap is itself noisy.
+        let mut d1 = 0.0;
+        let mut d8 = 0.0;
+        for seed in 0..5u64 {
+            let mut cfg = base_cfg();
+            cfg.seed = 1000 + seed;
+            cfg.iters = 1500;
+            cfg.problem.sigma = 2.0;
+            cfg.algo.gamma0 = 0.3;
+            cfg.workers = 1;
+            d1 += run_experiment(&cfg).unwrap().get("dist").unwrap().last().unwrap();
+            cfg.workers = 8;
+            d8 += run_experiment(&cfg).unwrap().get("dist").unwrap().last().unwrap();
+        }
+        assert!(d8 < d1 * 0.8, "K=8 dist {d8} should beat K=1 dist {d1}");
+    }
+
+    #[test]
+    fn qsgda_baseline_runs() {
+        let mut cfg = base_cfg();
+        cfg.iters = 300;
+        let rec = run_qsgda_baseline(&cfg).unwrap();
+        assert!(rec.get("dist").unwrap().last().unwrap().is_finite());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = base_cfg();
+        let a = run_experiment(&cfg).unwrap();
+        let b = run_experiment(&cfg).unwrap();
+        assert_eq!(
+            a.get("gap").unwrap().ys(),
+            b.get("gap").unwrap().ys(),
+            "inline runner must be deterministic"
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! The distributed coordinator — Algorithm 1 of the paper.
+//!
+//! Two execution modes share all of the math:
+//!
+//! * [`inline`] — single-threaded simulation of the `K` processors.
+//!   Deterministic, allocation-light, used by the rate/figure benches where
+//!   thousands of runs are swept.
+//! * [`threaded`] — `K` real worker threads exchanging *actual encoded
+//!   bytes* through the [`crate::net::AllGather`] transport, each holding a
+//!   replicated [`crate::algo::QGenX`] state (data-parallel replication:
+//!   identical decoded vectors ⇒ identical replicas). This is the system
+//!   the examples and the E2E drivers run on.
+//!
+//! Per-iteration protocol (both modes), following Algorithm 1:
+//!
+//! 1. if `t ∈ U` (level-update schedule): workers exchange sufficient
+//!    statistics (histograms, `4·bins` bytes — counted as traffic),
+//!    pool them, and each deterministically re-optimizes the levels and
+//!    rebuilds the Huffman codec (identical inputs ⇒ identical tables).
+//! 2. variant-dependent base exchange (`V̂_{k,t}`): DE quantizes + allgathers
+//!    fresh oracle queries at `X_t`; DA/OptDA send nothing.
+//! 3. extrapolate to `X_{t+1/2}`.
+//! 4. quantize + allgather `V̂_{k,t+1/2}`; everyone updates the replica.
+//!
+//! Timing: compute (oracle + encode + decode) is *measured*; network time
+//! is *modeled* (α-β on the exact encoded byte counts) — see DESIGN.md §5.4.
+
+pub mod inline;
+pub mod pipeline;
+pub mod schedule;
+pub mod threaded;
+
+pub use inline::{run_experiment, run_qsgda_baseline};
+pub use pipeline::Compressor;
+pub use schedule::UpdateSchedule;
+pub use threaded::run_threaded;

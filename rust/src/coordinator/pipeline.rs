@@ -1,0 +1,371 @@
+//! Per-worker compression pipeline: `Q_ℓ` → `CODE` on send,
+//! `DEQ ∘ CODE` on receive, plus the QAda state machine (sufficient
+//! statistics, level re-optimization, codec rebuild).
+//!
+//! One [`Compressor`] instance lives on each worker. Level updates must be
+//! driven identically on every worker (the coordinator exchanges pooled
+//! statistics first) so that all replicas hold the same levels/codec — the
+//! decode side of the wire format depends on them.
+
+use crate::coding::SymbolCodec;
+use crate::config::{LevelScheme, QuantConfig, QuantMode};
+use crate::error::{Error, Result};
+use crate::quant::{
+    decode_vector, dequantize_into, encode_vector, optimize_levels, quantize, symbol_probs,
+    Levels, SufficientStats, WireCodec,
+};
+use crate::util::Rng;
+
+/// A worker's (de)compression endpoint.
+pub enum Compressor {
+    /// Full precision: raw little-endian f32 payloads (32 bits/coordinate).
+    Fp32,
+    /// Quantize + entropy-code per the paper.
+    Quant(Box<QuantCompressor>),
+}
+
+pub struct QuantCompressor {
+    cfg: QuantConfig,
+    levels: Levels,
+    codec: WireCodec,
+    rng: Rng,
+    /// Local sufficient statistics for the *next* level update.
+    stats: SufficientStats,
+    /// Number of level updates performed (J counter).
+    updates: usize,
+}
+
+impl Compressor {
+    /// Build from config; `rng` seeds the quantization randomness (private
+    /// per worker).
+    pub fn from_config(cfg: &QuantConfig, rng: Rng) -> Result<Self> {
+        match cfg.mode {
+            QuantMode::Fp32 => Ok(Compressor::Fp32),
+            QuantMode::Quantized { levels: s } => {
+                let levels = initial_levels(cfg.scheme, s);
+                let codec = build_codec(&levels, cfg.codec, None)?;
+                Ok(Compressor::Quant(Box::new(QuantCompressor {
+                    cfg: cfg.clone(),
+                    levels,
+                    codec,
+                    rng,
+                    stats: SufficientStats::new(cfg.hist_bins, cfg.norm_q),
+                    updates: 0,
+                })))
+            }
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, Compressor::Quant(_))
+    }
+
+    /// Current levels (None for FP32).
+    pub fn levels(&self) -> Option<&Levels> {
+        match self {
+            Compressor::Fp32 => None,
+            Compressor::Quant(q) => Some(&q.levels),
+        }
+    }
+
+    /// Theorem-1 variance factor of the current configuration.
+    pub fn epsilon_q(&self, d: usize) -> f64 {
+        match self {
+            Compressor::Fp32 => 0.0,
+            Compressor::Quant(q) => {
+                let per_bucket = if q.cfg.bucket_size == 0 { d } else { q.cfg.bucket_size.min(d) };
+                crate::quant::epsilon_q(&q.levels, per_bucket, q.cfg.norm_q)
+            }
+        }
+    }
+
+    /// Compress a dual vector; returns (wire bytes, exact payload bits).
+    /// Also feeds the local sufficient statistics (QAda observes the *raw*
+    /// vector, pre-quantization).
+    pub fn compress(&mut self, v: &[f32]) -> Result<(Vec<u8>, u64)> {
+        match self {
+            Compressor::Fp32 => {
+                let mut bytes = Vec::with_capacity(4 * v.len());
+                for &x in v {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+                let bits = 32 * v.len() as u64;
+                Ok((bytes, bits))
+            }
+            Compressor::Quant(q) => {
+                // Sufficient statistics feed (a) QAda level optimization and
+                // (b) Huffman probability refreshes — needed even when the
+                // level placement itself is fixed.
+                if q.cfg.scheme == LevelScheme::Adaptive || q.cfg.codec == SymbolCodec::Huffman {
+                    q.stats.observe_bucketed(v, q.cfg.bucket_size);
+                }
+                let qv =
+                    quantize(v, &q.levels, q.cfg.norm_q, q.cfg.bucket_size, &mut q.rng)?;
+                encode_vector(&qv, &q.codec)
+            }
+        }
+    }
+
+    /// Decompress a peer's wire bytes into `out` (length = d).
+    pub fn decompress(&self, bytes: &[u8], out: &mut [f32]) -> Result<()> {
+        match self {
+            Compressor::Fp32 => {
+                if bytes.len() != 4 * out.len() {
+                    return Err(Error::Codec(format!(
+                        "fp32 payload {} bytes for d = {}",
+                        bytes.len(),
+                        out.len()
+                    )));
+                }
+                for (i, c) in bytes.chunks_exact(4).enumerate() {
+                    out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Ok(())
+            }
+            Compressor::Quant(q) => {
+                let qv = decode_vector(bytes, out.len(), q.cfg.bucket_size, &q.codec)?;
+                dequantize_into(&qv, &q.levels, out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Serialize local sufficient statistics for the stat exchange
+    /// (empty for FP32 / non-adaptive schemes).
+    pub fn stats_payload(&self) -> Vec<u8> {
+        match self {
+            Compressor::Quant(q) if q.cfg.scheme == LevelScheme::Adaptive => q.stats.to_bytes(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Perform the level update from the *rank-ordered list of all workers'
+    /// serialized statistics* (including this worker's own payload).
+    ///
+    /// Pooling exclusively from the serialized (f32-rounded) payloads in a
+    /// fixed order — never from the in-memory f64 accumulator — guarantees
+    /// every replica optimizes from bit-identical inputs and therefore
+    /// lands on bit-identical levels and Huffman tables. Returns true if
+    /// levels actually changed.
+    pub fn update_levels(&mut self, all_stats_rank_order: &[&[u8]]) -> Result<bool> {
+        let q = match self {
+            Compressor::Fp32 => return Ok(false),
+            Compressor::Quant(q) => q,
+        };
+        let adapt_levels = q.cfg.scheme == LevelScheme::Adaptive;
+        let adapt_codec = q.cfg.codec == SymbolCodec::Huffman;
+        if !adapt_levels && !adapt_codec {
+            return Ok(false);
+        }
+        let mut pooled = SufficientStats::new(q.cfg.hist_bins, q.cfg.norm_q);
+        for p in all_stats_rank_order {
+            if !p.is_empty() {
+                pooled.absorb_bytes(p)?;
+            }
+        }
+        if pooled.is_empty() {
+            return Ok(false);
+        }
+        let new_levels = if adapt_levels {
+            optimize_levels(&pooled, q.levels.s(), Some(&q.levels), 8)?
+        } else {
+            q.levels.clone()
+        };
+        let probs = symbol_probs(&pooled, &new_levels);
+        q.codec = build_codec(&new_levels, q.cfg.codec, Some(&probs))?;
+        let changed = new_levels != q.levels;
+        q.levels = new_levels;
+        q.stats.reset();
+        q.updates += 1;
+        Ok(changed)
+    }
+
+    /// Number of level updates performed so far (the `J` of Theorems 3/4).
+    pub fn updates(&self) -> usize {
+        match self {
+            Compressor::Fp32 => 0,
+            Compressor::Quant(q) => q.updates,
+        }
+    }
+}
+
+fn initial_levels(scheme: LevelScheme, s: usize) -> Levels {
+    match scheme {
+        LevelScheme::Uniform => Levels::uniform(s),
+        LevelScheme::Exponential => Levels::exponential(s),
+        // Adaptive starts from exponential (a decent prior for gradient
+        // coordinates) and re-optimizes on schedule. For large alphabets
+        // exponential spacing underflows f32 near zero (2^-s), so fall back
+        // to uniform there.
+        LevelScheme::Adaptive => {
+            if s <= 32 {
+                Levels::exponential(s)
+            } else {
+                Levels::uniform(s)
+            }
+        }
+    }
+}
+
+fn build_codec(levels: &Levels, kind: SymbolCodec, probs: Option<&[f64]>) -> Result<WireCodec> {
+    match kind {
+        SymbolCodec::Huffman => match probs {
+            Some(p) => WireCodec::new(kind, levels, Some(p)),
+            // Before the first stat exchange there is no probability
+            // estimate; bootstrap with a geometric prior over symbols
+            // (favors small levels like gradients do).
+            None => {
+                let n = levels.alphabet_size();
+                let prior: Vec<f64> = (0..n).map(|j| 0.5f64.powi(j.min(60) as i32)).collect();
+                WireCodec::new(kind, levels, Some(&prior))
+            }
+        },
+        _ => WireCodec::new(kind, levels, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_allclose;
+    use crate::util::Rng;
+
+    fn quant_cfg(scheme: LevelScheme, codec: SymbolCodec) -> QuantConfig {
+        QuantConfig {
+            mode: QuantMode::Quantized { levels: 14 },
+            scheme,
+            norm_q: 2,
+            bucket_size: 256,
+            codec,
+            update_every: 50,
+            hist_bins: 128,
+            stat_samples: 8,
+        }
+    }
+
+    #[test]
+    fn fp32_roundtrip_is_exact() {
+        let mut c = Compressor::from_config(
+            &QuantConfig { mode: QuantMode::Fp32, ..Default::default() },
+            Rng::seed_from(1),
+        )
+        .unwrap();
+        let v = Rng::seed_from(2).gaussian_vec(100, 1.0);
+        let (bytes, bits) = c.compress(&v).unwrap();
+        assert_eq!(bits, 3200);
+        let mut out = vec![0.0f32; 100];
+        c.decompress(&bytes, &mut out).unwrap();
+        assert_eq!(v, out);
+        assert_eq!(c.epsilon_q(100), 0.0);
+    }
+
+    #[test]
+    fn quantized_roundtrip_approximates() {
+        for codec in [SymbolCodec::Fixed, SymbolCodec::EliasGamma, SymbolCodec::Huffman] {
+            let mut c = Compressor::from_config(
+                &quant_cfg(LevelScheme::Uniform, codec),
+                Rng::seed_from(3),
+            )
+            .unwrap();
+            let v = Rng::seed_from(4).gaussian_vec(512, 1.0);
+            let (bytes, bits) = c.compress(&v).unwrap();
+            assert!(bits < 32 * 512, "must beat fp32: {bits}");
+            let mut out = vec![0.0f32; 512];
+            c.decompress(&bytes, &mut out).unwrap();
+            // Unbiased noisy reconstruction: close in norm, not exact.
+            let err = crate::util::dist_sq(&v, &out).sqrt();
+            let nv = crate::util::norm2(&v);
+            assert!(err < nv, "err {err} vs ‖v‖ {nv} ({codec:?})");
+        }
+    }
+
+    #[test]
+    fn sender_receiver_pairs_interoperate() {
+        // Worker A compresses; worker B (separate instance, same config)
+        // decompresses — the distributed wire contract.
+        let cfg = quant_cfg(LevelScheme::Exponential, SymbolCodec::EliasGamma);
+        let mut a = Compressor::from_config(&cfg, Rng::seed_from(5)).unwrap();
+        let b = Compressor::from_config(&cfg, Rng::seed_from(6)).unwrap();
+        let v = Rng::seed_from(7).gaussian_vec(300, 2.0);
+        let (bytes, _) = a.compress(&v).unwrap();
+        let mut out = vec![0.0f32; 300];
+        b.decompress(&bytes, &mut out).unwrap();
+        // B's decode must equal A's own decode exactly.
+        let mut out_a = vec![0.0f32; 300];
+        a.decompress(&bytes, &mut out_a).unwrap();
+        assert_allclose(&out, &out_a, 0.0, 0.0);
+    }
+
+    #[test]
+    fn adaptive_update_changes_levels_and_stays_in_sync() {
+        let cfg = quant_cfg(LevelScheme::Adaptive, SymbolCodec::Huffman);
+        let mut a = Compressor::from_config(&cfg, Rng::seed_from(8)).unwrap();
+        let mut b = Compressor::from_config(&cfg, Rng::seed_from(9)).unwrap();
+        let mut rng = Rng::seed_from(10);
+        for _ in 0..20 {
+            let v = rng.gaussian_vec(1024, 1.0);
+            let _ = a.compress(&v).unwrap();
+            let v2 = rng.gaussian_vec(1024, 1.0);
+            let _ = b.compress(&v2).unwrap();
+        }
+        // Exchange stats; both update with the same pooled payloads.
+        let sa = a.stats_payload();
+        let sb = b.stats_payload();
+        assert!(!sa.is_empty());
+        let changed_a = a.update_levels(&[&sa, &sb]).unwrap();
+        let changed_b = b.update_levels(&[&sa, &sb]).unwrap();
+        assert!(changed_a && changed_b);
+        assert_eq!(a.levels().unwrap(), b.levels().unwrap());
+        assert_eq!(a.updates(), 1);
+        // Cross-decode still works after the update.
+        let v = rng.gaussian_vec(1024, 1.0);
+        let (bytes, _) = a.compress(&v).unwrap();
+        let mut out = vec![0.0f32; 1024];
+        b.decompress(&bytes, &mut out).unwrap();
+    }
+
+    #[test]
+    fn adaptive_levels_reduce_wire_size_via_huffman() {
+        let cfg = quant_cfg(LevelScheme::Adaptive, SymbolCodec::Huffman);
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(11)).unwrap();
+        let mut rng = Rng::seed_from(12);
+        let mut before_bits = 0u64;
+        for _ in 0..10 {
+            let v = rng.gaussian_vec(4096, 1.0);
+            let (_, bits) = c.compress(&v).unwrap();
+            before_bits = bits;
+        }
+        let own = c.stats_payload();
+        c.update_levels(&[&own]).unwrap();
+        let v = rng.gaussian_vec(4096, 1.0);
+        let (_, after_bits) = c.compress(&v).unwrap();
+        // With a proper probability model the Huffman stream shrinks
+        // relative to the bootstrap prior (or at worst stays similar).
+        assert!(
+            (after_bits as f64) < before_bits as f64 * 1.1,
+            "after {after_bits} vs before {before_bits}"
+        );
+    }
+
+    #[test]
+    fn fp32_stat_payload_is_empty_and_update_is_noop() {
+        let mut c = Compressor::from_config(
+            &QuantConfig { mode: QuantMode::Fp32, ..Default::default() },
+            Rng::seed_from(13),
+        )
+        .unwrap();
+        assert!(c.stats_payload().is_empty());
+        assert!(!c.update_levels(&[]).unwrap());
+    }
+
+    #[test]
+    fn decompress_validates_length() {
+        let c = Compressor::from_config(
+            &QuantConfig { mode: QuantMode::Fp32, ..Default::default() },
+            Rng::seed_from(14),
+        )
+        .unwrap();
+        let mut out = vec![0.0f32; 4];
+        assert!(c.decompress(&[0u8; 7], &mut out).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! The level-update schedule `U` (paper §3.1: "Let U denote the set of
+//! update steps").
+//!
+//! Quantization levels `ℓ_j` are re-optimized at iterations `t ∈ U`; the
+//! run is thereby partitioned into `J` segments of lengths `T_j`
+//! (`Σ T_j = T`), which is exactly how Theorems 3/4 account for the
+//! per-segment variance bounds `ε_{Q,j}` and code lengths `N_{Q,j}`.
+
+/// Deterministic update schedule: warmup at `t = warmup`, then every
+/// `every` iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateSchedule {
+    /// First update after this many iterations (lets stats accumulate).
+    pub warmup: usize,
+    /// Period between updates; 0 disables updates entirely.
+    pub every: usize,
+}
+
+impl UpdateSchedule {
+    pub fn new(warmup: usize, every: usize) -> Self {
+        UpdateSchedule { warmup, every }
+    }
+
+    /// Never update (fixed-level schemes).
+    pub fn never() -> Self {
+        UpdateSchedule { warmup: 0, every: 0 }
+    }
+
+    /// Is iteration `t` (1-based) an update step?
+    pub fn is_update(&self, t: usize) -> bool {
+        if self.every == 0 {
+            return false;
+        }
+        t >= self.warmup && (t - self.warmup) % self.every == 0
+    }
+
+    /// Segment index `j` (0-based) that iteration `t` falls into.
+    pub fn segment_of(&self, t: usize) -> usize {
+        if self.every == 0 || t < self.warmup {
+            0
+        } else {
+            (t - self.warmup) / self.every + 1
+        }
+    }
+
+    /// Number of updates in a `T`-iteration run.
+    pub fn updates_in(&self, t_total: usize) -> usize {
+        (1..=t_total).filter(|&t| self.is_update(t)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_schedule_never_updates() {
+        let s = UpdateSchedule::never();
+        assert!((1..1000).all(|t| !s.is_update(t)));
+        assert_eq!(s.segment_of(500), 0);
+    }
+
+    #[test]
+    fn periodic_updates_with_warmup() {
+        let s = UpdateSchedule::new(10, 100);
+        assert!(!s.is_update(1));
+        assert!(s.is_update(10));
+        assert!(!s.is_update(11));
+        assert!(s.is_update(110));
+        assert!(s.is_update(210));
+        assert_eq!(s.updates_in(500), 5); // t=10,110,210,310,410
+    }
+
+    #[test]
+    fn segments_partition_the_run() {
+        let s = UpdateSchedule::new(0, 50);
+        assert_eq!(s.segment_of(0), 1);
+        assert_eq!(s.segment_of(49), 1);
+        assert_eq!(s.segment_of(50), 2);
+        assert_eq!(s.segment_of(99), 2);
+    }
+}

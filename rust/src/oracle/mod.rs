@@ -1,0 +1,93 @@
+//! Monotone VI problem suite and stochastic first-order oracles.
+//!
+//! The paper's object of study is the problem `find x* : ⟨A(x*), x − x*⟩ ≥ 0`
+//! for a monotone operator `A`, accessed only through a stochastic oracle
+//! `g(x; ω) = A(x) + U(x; ω)` under either the *absolute* (Assumption 2) or
+//! *relative* (Assumption 3) noise model.
+//!
+//! * [`problems`] — concrete operators: bilinear saddle (skew, the GAN
+//!   surrogate), strongly-monotone / co-coercive quadratics, the rotation
+//!   operator (the classic EG-vs-GDA separator), matrix games.
+//! * [`noise`] — oracles: bounded absolute noise, relative (multiplicative)
+//!   noise, random coordinate descent (Appendix J.1) and random player
+//!   updating (J.2), both of which satisfy Assumption 3 naturally.
+//! * [`gap`] — the restricted gap function `Gap_C` used as the performance
+//!   measure (Proposition 1), with closed forms for affine operators.
+
+pub mod gap;
+pub mod noise;
+pub mod problems;
+
+pub use gap::GapEvaluator;
+pub use noise::{
+    AbsoluteNoiseOracle, ExactOracle, Oracle, RandomPlayerOracle, RcdOracle, RelativeNoiseOracle,
+};
+pub use problems::{
+    BilinearSaddle, CocoerciveQuadratic, MatrixGame, MonotoneQuadratic, Operator, RotationOperator,
+};
+
+use crate::config::ProblemConfig;
+use crate::error::{Error, Result};
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// Build an operator from a [`ProblemConfig`] (the launcher entry point).
+pub fn build_operator(cfg: &ProblemConfig, seed: u64) -> Result<Arc<dyn Operator>> {
+    let mut rng = Rng::seed_from(seed ^ 0x0b5e55ed);
+    match cfg.kind.as_str() {
+        "bilinear" => Ok(Arc::new(BilinearSaddle::random(cfg.dim, 1.0, &mut rng)?)),
+        "quadratic" => Ok(Arc::new(MonotoneQuadratic::random(cfg.dim, 0.1, 1.0, &mut rng)?)),
+        "cocoercive" => Ok(Arc::new(CocoerciveQuadratic::random(cfg.dim, 0.1, 1.0, &mut rng)?)),
+        "rotation" => Ok(Arc::new(RotationOperator::new(cfg.dim, 0.05, 1.0)?)),
+        "game" => Ok(Arc::new(MatrixGame::random(cfg.dim, &mut rng)?)),
+        other => Err(Error::Oracle(format!("unknown problem kind `{other}`"))),
+    }
+}
+
+/// Build a per-worker oracle over an operator from the config's noise model.
+pub fn build_oracle(
+    op: Arc<dyn Operator>,
+    cfg: &ProblemConfig,
+    worker_seed: u64,
+) -> Result<Box<dyn Oracle>> {
+    let rng = Rng::seed_from(worker_seed);
+    match cfg.noise.as_str() {
+        "none" | "exact" => Ok(Box::new(ExactOracle::new(op))),
+        "absolute" => Ok(Box::new(AbsoluteNoiseOracle::new(op, cfg.sigma, rng))),
+        "relative" => Ok(Box::new(RelativeNoiseOracle::new(op, cfg.rel_c, rng))),
+        "rcd" => Ok(Box::new(RcdOracle::new(op, rng))),
+        "player" => Ok(Box::new(RandomPlayerOracle::new(op, 2, rng)?)),
+        other => Err(Error::Oracle(format!("unknown noise model `{other}`"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_operator_all_kinds() {
+        for kind in ["bilinear", "quadratic", "cocoercive", "rotation", "game"] {
+            let cfg = ProblemConfig { kind: kind.into(), dim: 16, ..Default::default() };
+            let op = build_operator(&cfg, 1).unwrap();
+            assert!(op.dim() >= 16);
+        }
+        let bad = ProblemConfig { kind: "nope".into(), ..Default::default() };
+        assert!(build_operator(&bad, 1).is_err());
+    }
+
+    #[test]
+    fn build_oracle_all_noise_models() {
+        let cfg = ProblemConfig { kind: "quadratic".into(), dim: 8, ..Default::default() };
+        let op = build_operator(&cfg, 2).unwrap();
+        for noise in ["none", "absolute", "relative", "rcd", "player"] {
+            let mut c = cfg.clone();
+            c.noise = noise.into();
+            let mut oracle = build_oracle(op.clone(), &c, 3).unwrap();
+            let x = vec![0.5f32; op.dim()];
+            let mut g = vec![0.0f32; op.dim()];
+            oracle.sample(&x, &mut g);
+            assert!(g.iter().all(|v| v.is_finite()), "noise={noise}");
+        }
+    }
+}

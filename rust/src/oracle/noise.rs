@@ -1,0 +1,375 @@
+//! Stochastic first-order oracles `g(x; ω) = A(x) + U(x; ω)`.
+//!
+//! Two noise regimes from the paper:
+//!
+//! * **Absolute** (Assumption 2): `E‖U‖² ≤ σ²` independent of `x` — the
+//!   standard SGD-style oracle. [`AbsoluteNoiseOracle`] adds truncated
+//!   Gaussian noise (truncation keeps the a.s.-boundedness part of the
+//!   assumption honest).
+//! * **Relative** (Assumption 3): `E‖U‖² ≤ c‖A(x)‖²` — the noise *vanishes
+//!   at the solution*, which is what unlocks the fast `O(1/T)` rate of
+//!   Theorem 4. [`RelativeNoiseOracle`] uses Rademacher-modulated
+//!   multiplicative noise; [`RcdOracle`] and [`RandomPlayerOracle`] are the
+//!   paper's Appendix-J examples where relative noise arises structurally.
+
+use super::problems::Operator;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// A stochastic dual-vector oracle bound to one worker (owns its RNG — the
+/// paper's "independent and private stochastic dual vectors").
+pub trait Oracle: Send {
+    fn dim(&self) -> usize;
+
+    /// Draw `g(x; ω)` into `out`.
+    fn sample(&mut self, x: &[f32], out: &mut [f32]);
+
+    /// The underlying deterministic operator.
+    fn operator(&self) -> &dyn Operator;
+}
+
+/// Noise-free oracle: `g = A(x)` (the deterministic baseline).
+pub struct ExactOracle {
+    op: Arc<dyn Operator>,
+}
+
+impl ExactOracle {
+    pub fn new(op: Arc<dyn Operator>) -> Self {
+        ExactOracle { op }
+    }
+}
+
+impl Oracle for ExactOracle {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn sample(&mut self, x: &[f32], out: &mut [f32]) {
+        self.op.apply(x, out);
+    }
+
+    fn operator(&self) -> &dyn Operator {
+        self.op.as_ref()
+    }
+}
+
+/// Absolute noise: `g = A(x) + σ ζ`, ζ i.i.d. truncated standard normal
+/// (|ζ_i| ≤ 5 — so ‖U‖ is a.s. bounded as Assumption 2 requires, while the
+/// first two moments match N(0,1) to < 1e−5).
+pub struct AbsoluteNoiseOracle {
+    op: Arc<dyn Operator>,
+    sigma: f64,
+    rng: Rng,
+}
+
+impl AbsoluteNoiseOracle {
+    pub fn new(op: Arc<dyn Operator>, sigma: f64, rng: Rng) -> Self {
+        AbsoluteNoiseOracle { op, sigma, rng }
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+}
+
+impl Oracle for AbsoluteNoiseOracle {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn sample(&mut self, x: &[f32], out: &mut [f32]) {
+        self.op.apply(x, out);
+        // Per-coordinate sigma scaled so that E||U||^2 = sigma^2 regardless
+        // of dimension (the assumption bounds the *vector* variance).
+        let per_coord = self.sigma / (self.op.dim() as f64).sqrt();
+        for o in out.iter_mut() {
+            let mut z = self.rng.gaussian();
+            while z.abs() > 5.0 {
+                z = self.rng.gaussian();
+            }
+            *o += (z * per_coord) as f32;
+        }
+    }
+
+    fn operator(&self) -> &dyn Operator {
+        self.op.as_ref()
+    }
+}
+
+/// Relative noise: `g_i = A_i(x) (1 + √c ε_i)` with ε_i Rademacher.
+/// Unbiased, and `E‖U‖² = c ‖A(x)‖²` exactly — Assumption 3 with equality.
+pub struct RelativeNoiseOracle {
+    op: Arc<dyn Operator>,
+    c: f64,
+    rng: Rng,
+}
+
+impl RelativeNoiseOracle {
+    pub fn new(op: Arc<dyn Operator>, c: f64, rng: Rng) -> Self {
+        RelativeNoiseOracle { op, c, rng }
+    }
+
+    pub fn c(&self) -> f64 {
+        self.c
+    }
+}
+
+impl Oracle for RelativeNoiseOracle {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn sample(&mut self, x: &[f32], out: &mut [f32]) {
+        self.op.apply(x, out);
+        let amp = self.c.sqrt();
+        for o in out.iter_mut() {
+            let eps: f64 = if self.rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            *o = (*o as f64 * (1.0 + amp * eps)) as f32;
+        }
+    }
+
+    fn operator(&self) -> &dyn Operator {
+        self.op.as_ref()
+    }
+}
+
+/// Random coordinate descent oracle (paper Example J.1):
+/// `g = d · A_{i}(x) e_i` for a uniformly random coordinate `i`.
+/// Unbiased with `E‖g − A‖² = (d − 1)‖A(x)‖²` — relative noise with
+/// `c = d − 1`.
+pub struct RcdOracle {
+    op: Arc<dyn Operator>,
+    rng: Rng,
+    scratch: Vec<f32>,
+}
+
+impl RcdOracle {
+    pub fn new(op: Arc<dyn Operator>, rng: Rng) -> Self {
+        let d = op.dim();
+        RcdOracle { op, rng, scratch: vec![0.0; d] }
+    }
+
+    /// The relative-noise constant this oracle realizes.
+    pub fn rel_c(&self) -> f64 {
+        (self.op.dim() - 1) as f64
+    }
+}
+
+impl Oracle for RcdOracle {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn sample(&mut self, x: &[f32], out: &mut [f32]) {
+        let d = self.op.dim();
+        self.op.apply(x, &mut self.scratch);
+        out.fill(0.0);
+        let i = self.rng.below(d as u64) as usize;
+        out[i] = self.scratch[i] * d as f32;
+    }
+
+    fn operator(&self) -> &dyn Operator {
+        self.op.as_ref()
+    }
+}
+
+/// Random player updating (paper Example J.2): the coordinate space is
+/// split into `players` contiguous blocks; one block is sampled per query
+/// (probability ∝ block size) and its component of `A` returned scaled by
+/// `1/p_i`. Unbiased; variance vanishes at equilibria (Assumption 3).
+pub struct RandomPlayerOracle {
+    op: Arc<dyn Operator>,
+    rng: Rng,
+    /// block boundaries, len = players + 1
+    bounds: Vec<usize>,
+    scratch: Vec<f32>,
+}
+
+impl RandomPlayerOracle {
+    pub fn new(op: Arc<dyn Operator>, players: usize, rng: Rng) -> crate::Result<Self> {
+        let d = op.dim();
+        if players == 0 || players > d {
+            return Err(crate::Error::Oracle(format!(
+                "players {players} must be in 1..={d}"
+            )));
+        }
+        let mut bounds = Vec::with_capacity(players + 1);
+        for p in 0..=players {
+            bounds.push(p * d / players);
+        }
+        Ok(RandomPlayerOracle { op, rng, bounds, scratch: vec![0.0; d] })
+    }
+
+    pub fn players(&self) -> usize {
+        self.bounds.len() - 1
+    }
+}
+
+impl Oracle for RandomPlayerOracle {
+    fn dim(&self) -> usize {
+        self.op.dim()
+    }
+
+    fn sample(&mut self, x: &[f32], out: &mut [f32]) {
+        self.op.apply(x, &mut self.scratch);
+        out.fill(0.0);
+        let players = self.players();
+        let p = self.rng.below(players as u64) as usize;
+        let (lo, hi) = (self.bounds[p], self.bounds[p + 1]);
+        let inv_prob = players as f32; // uniform player selection
+        for i in lo..hi {
+            out[i] = self.scratch[i] * inv_prob;
+        }
+    }
+
+    fn operator(&self) -> &dyn Operator {
+        self.op.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::problems::MonotoneQuadratic;
+    use crate::util::{dist_sq, norm2_sq, Rng};
+
+    fn quad(d: usize, seed: u64) -> Arc<dyn Operator> {
+        let mut rng = Rng::seed_from(seed);
+        Arc::new(MonotoneQuadratic::random(d, 0.3, 1.0, &mut rng).unwrap())
+    }
+
+    /// Estimate E[g], E||U||^2 at a point.
+    fn moments(oracle: &mut dyn Oracle, x: &[f32], trials: usize) -> (Vec<f64>, f64) {
+        let d = oracle.dim();
+        let mut mean = vec![0.0f64; d];
+        let mut var = 0.0f64;
+        let mut a = vec![0.0f32; d];
+        oracle.operator().apply(x, &mut a);
+        let mut g = vec![0.0f32; d];
+        for _ in 0..trials {
+            oracle.sample(x, &mut g);
+            for i in 0..d {
+                mean[i] += g[i] as f64;
+            }
+            var += dist_sq(&g, &a);
+        }
+        for m in mean.iter_mut() {
+            *m /= trials as f64;
+        }
+        (mean, var / trials as f64)
+    }
+
+    fn assert_unbiased(oracle: &mut dyn Oracle, x: &[f32], trials: usize, tol: f64) {
+        let d = oracle.dim();
+        let mut a = vec![0.0f32; d];
+        oracle.operator().apply(x, &mut a);
+        let (mean, _) = moments(oracle, x, trials);
+        for i in 0..d {
+            assert!(
+                (mean[i] - a[i] as f64).abs() < tol,
+                "coordinate {i}: mean {} vs A {}",
+                mean[i],
+                a[i]
+            );
+        }
+    }
+
+    #[test]
+    fn absolute_oracle_unbiased_with_bounded_variance() {
+        let op = quad(8, 1);
+        let mut oracle = AbsoluteNoiseOracle::new(op, 0.7, Rng::seed_from(2));
+        let x = vec![1.0f32; 8];
+        assert_unbiased(&mut oracle, &x, 40_000, 0.03);
+        let (_, var) = moments(&mut oracle, &x, 40_000);
+        let sigma2 = 0.49;
+        assert!((var - sigma2).abs() < 0.05 * sigma2 + 0.01, "var={var} sigma2={sigma2}");
+    }
+
+    #[test]
+    fn relative_oracle_variance_scales_with_operator() {
+        let op = quad(8, 3);
+        let xs = op.solution().unwrap();
+        let mut oracle = RelativeNoiseOracle::new(op.clone(), 0.5, Rng::seed_from(4));
+        // Far from solution: variance = c ||A||^2.
+        let far = vec![3.0f32; 8];
+        let mut a = vec![0.0f32; 8];
+        op.apply(&far, &mut a);
+        let (_, var) = moments(&mut oracle, &far, 20_000);
+        let expect = 0.5 * norm2_sq(&a);
+        assert!((var - expect).abs() < 0.05 * expect, "var={var} expect={expect}");
+        // At the solution: exactly zero noise.
+        let (_, var0) = moments(&mut oracle, &xs, 100);
+        assert!(var0 < 1e-10, "var at solution {var0}");
+        assert_unbiased(&mut oracle, &far, 40_000, 0.1);
+    }
+
+    #[test]
+    fn rcd_oracle_is_unbiased_relative_noise() {
+        let d = 8;
+        let op = quad(d, 5);
+        let mut oracle = RcdOracle::new(op.clone(), Rng::seed_from(6));
+        let x = vec![2.0f32; d];
+        assert_unbiased(&mut oracle, &x, 60_000, 0.15);
+        // E||g - A||^2 = (d-1)||A||^2
+        let mut a = vec![0.0f32; d];
+        op.apply(&x, &mut a);
+        let (_, var) = moments(&mut oracle, &x, 60_000);
+        let expect = (d - 1) as f64 * norm2_sq(&a);
+        assert!((var - expect).abs() < 0.1 * expect, "var={var} expect={expect}");
+        assert!((oracle.rel_c() - (d - 1) as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn player_oracle_unbiased_and_vanishes_at_solution() {
+        let d = 8;
+        let op = quad(d, 7);
+        let xs = op.solution().unwrap();
+        let mut oracle = RandomPlayerOracle::new(op.clone(), 4, Rng::seed_from(8)).unwrap();
+        assert_eq!(oracle.players(), 4);
+        let x = vec![1.5f32; d];
+        assert_unbiased(&mut oracle, &x, 60_000, 0.12);
+        let mut g = vec![0.0f32; d];
+        oracle.sample(&xs, &mut g);
+        assert!(norm2_sq(&g) < 1e-8);
+    }
+
+    #[test]
+    fn player_oracle_rejects_bad_player_count() {
+        let op = quad(4, 9);
+        assert!(RandomPlayerOracle::new(op.clone(), 0, Rng::seed_from(1)).is_err());
+        assert!(RandomPlayerOracle::new(op, 9, Rng::seed_from(1)).is_err());
+    }
+
+    #[test]
+    fn exact_oracle_is_noise_free() {
+        let op = quad(6, 10);
+        let mut oracle = ExactOracle::new(op.clone());
+        let x = vec![0.3f32; 6];
+        let mut g1 = vec![0.0f32; 6];
+        let mut g2 = vec![0.0f32; 6];
+        oracle.sample(&x, &mut g1);
+        oracle.sample(&x, &mut g2);
+        assert_eq!(g1, g2);
+        let mut a = vec![0.0f32; 6];
+        op.apply(&x, &mut a);
+        assert_eq!(g1, a);
+    }
+
+    #[test]
+    fn absolute_noise_is_as_bounded() {
+        // truncation at 5 sigma/sqrt(d) per coordinate
+        let op = quad(4, 11);
+        let mut oracle = AbsoluteNoiseOracle::new(op.clone(), 1.0, Rng::seed_from(12));
+        let x = vec![0.0f32; 4];
+        let mut a = vec![0.0f32; 4];
+        op.apply(&x, &mut a);
+        let mut g = vec![0.0f32; 4];
+        let bound = 5.0 / 2.0; // 5 / sqrt(4)
+        for _ in 0..10_000 {
+            oracle.sample(&x, &mut g);
+            for i in 0..4 {
+                assert!((g[i] - a[i]).abs() as f64 <= bound + 1e-6);
+            }
+        }
+    }
+}

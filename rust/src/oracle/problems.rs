@@ -1,0 +1,538 @@
+//! Concrete monotone operators.
+//!
+//! All problems are constructed *around a known solution* `x*` so that the
+//! benches can report exact distances and gaps. Every operator here is
+//! affine, `A(x) = M (x − x*)`, with the structure of `M` determining the
+//! problem class:
+//!
+//! | operator | `M` | class |
+//! |----------|-----|-------|
+//! | [`BilinearSaddle`] | `[[0, B], [−Bᵀ, 0]]` | monotone, *not* co-coercive (skew) |
+//! | [`MonotoneQuadratic`] | `SᵀS + μI` (sym. PSD) | strongly monotone, co-coercive |
+//! | [`CocoerciveQuadratic`] | sym. PSD with known spectrum | co-coercive with known β = 1/λ_max |
+//! | [`RotationOperator`] | block-diag `[[μ, λ],[−λ, μ]]` | monotone; the classic GDA-divergence example |
+//! | [`MatrixGame`] | saddle of `min_x max_y xᵀCy` on simplices | monotone VI on a compact set |
+
+use crate::error::{Error, Result};
+use crate::util::{matvec, matvec_t, norm2, sub_into, Rng};
+
+/// A (possibly set-valued-free) monotone operator `A : ℝ^d → ℝ^d`.
+pub trait Operator: Send + Sync {
+    fn dim(&self) -> usize;
+
+    /// `out = A(x)`.
+    fn apply(&self, x: &[f32], out: &mut [f32]);
+
+    /// The known solution `x*` when available (all synthetic problems).
+    fn solution(&self) -> Option<Vec<f32>> {
+        None
+    }
+
+    /// Co-coercivity constant β (Assumption 4) when the operator has one.
+    fn cocoercivity(&self) -> Option<f64> {
+        None
+    }
+
+    /// Lipschitz constant of `A` when known (for fixed-step baselines).
+    fn lipschitz(&self) -> Option<f64> {
+        None
+    }
+
+    /// Operator residual `‖A(x)‖₂` — a cheap convergence surrogate.
+    fn residual(&self, x: &[f32]) -> f64 {
+        let mut out = vec![0.0f32; self.dim()];
+        self.apply(x, &mut out);
+        norm2(&out)
+    }
+
+    /// Project `x` onto the feasible set (identity for unconstrained).
+    fn project(&self, _x: &mut [f32]) {}
+}
+
+/// `min_x max_y  (x−x*)ᵀ B (y−y*)` — the canonical convex-concave saddle;
+/// `A(z) = (B(y−y*), −Bᵀ(x−x*))` is monotone (skew) but **not** co-coercive.
+/// This is the structural surrogate for GAN training.
+pub struct BilinearSaddle {
+    /// B is (n, n) row-major; z = (x, y) each of dim n.
+    b: Vec<f32>,
+    n: usize,
+    z_star: Vec<f32>,
+    op_norm: f64,
+}
+
+impl BilinearSaddle {
+    /// Random `B` with entries `N(0, scale²/n)` and random `z*`.
+    pub fn random(dim: usize, scale: f64, rng: &mut Rng) -> Result<Self> {
+        if dim < 2 || dim % 2 != 0 {
+            return Err(Error::Oracle("bilinear needs even dim >= 2".into()));
+        }
+        let n = dim / 2;
+        let b = rng.gaussian_vec(n * n, scale / (n as f64).sqrt());
+        let z_star = rng.gaussian_vec(2 * n, 1.0);
+        let op_norm = estimate_spectral_norm(&b, n, n, rng);
+        Ok(BilinearSaddle { b, n, z_star, op_norm })
+    }
+
+    pub fn half_dim(&self) -> usize {
+        self.n
+    }
+}
+
+impl Operator for BilinearSaddle {
+    fn dim(&self) -> usize {
+        2 * self.n
+    }
+
+    fn apply(&self, z: &[f32], out: &mut [f32]) {
+        let n = self.n;
+        // shifted coordinates
+        let dx: Vec<f32> = (0..n).map(|i| z[i] - self.z_star[i]).collect();
+        let dy: Vec<f32> = (0..n).map(|i| z[n + i] - self.z_star[n + i]).collect();
+        // A = (B dy, -B^T dx)
+        matvec(&self.b, n, n, &dy, &mut out[..n]);
+        let mut tmp = vec![0.0f32; n];
+        matvec_t(&self.b, n, n, &dx, &mut tmp);
+        for i in 0..n {
+            out[n + i] = -tmp[i];
+        }
+    }
+
+    fn solution(&self) -> Option<Vec<f32>> {
+        Some(self.z_star.clone())
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.op_norm)
+    }
+}
+
+/// `A(x) = M (x − x*)` with `M = SᵀS/d + μ I` — gradient of a strongly
+/// convex quadratic: strongly monotone and co-coercive (β = 1/λ_max).
+pub struct MonotoneQuadratic {
+    m: Vec<f32>,
+    d: usize,
+    x_star: Vec<f32>,
+    lambda_max: f64,
+    mu: f64,
+}
+
+impl MonotoneQuadratic {
+    pub fn random(d: usize, mu: f64, scale: f64, rng: &mut Rng) -> Result<Self> {
+        if d == 0 {
+            return Err(Error::Oracle("dim must be >= 1".into()));
+        }
+        // M = (1/d) S^T S * scale + mu I, S (d, d) gaussian.
+        let s = rng.gaussian_vec(d * d, 1.0);
+        let mut m = vec![0.0f32; d * d];
+        for i in 0..d {
+            for j in 0..=i {
+                let mut acc = 0.0f64;
+                for k in 0..d {
+                    acc += (s[k * d + i] as f64) * (s[k * d + j] as f64);
+                }
+                let v = (acc * scale / d as f64) as f32;
+                m[i * d + j] = v;
+                m[j * d + i] = v;
+            }
+        }
+        for i in 0..d {
+            m[i * d + i] += mu as f32;
+        }
+        let x_star = rng.gaussian_vec(d, 1.0);
+        let lambda_max = estimate_spectral_norm(&m, d, d, rng);
+        Ok(MonotoneQuadratic { m, d, x_star, lambda_max, mu })
+    }
+
+    pub fn strong_monotonicity(&self) -> f64 {
+        self.mu
+    }
+}
+
+impl Operator for MonotoneQuadratic {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &[f32], out: &mut [f32]) {
+        let mut dx = vec![0.0f32; self.d];
+        sub_into(x, &self.x_star, &mut dx);
+        matvec(&self.m, self.d, self.d, &dx, out);
+    }
+
+    fn solution(&self) -> Option<Vec<f32>> {
+        Some(self.x_star.clone())
+    }
+
+    fn cocoercivity(&self) -> Option<f64> {
+        Some(1.0 / self.lambda_max)
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.lambda_max)
+    }
+}
+
+/// Symmetric PSD operator with a *known* spectrum, diagonal in a random
+/// orthogonal-ish basis. Used by the Theorem-4 bench where the co-coercivity
+/// constant must be exact, not estimated.
+pub struct CocoerciveQuadratic {
+    /// eigenvalues λ_i ∈ [μ, L]
+    eigs: Vec<f32>,
+    /// Householder vector defining the basis Q = I − 2 w wᵀ.
+    w: Vec<f32>,
+    x_star: Vec<f32>,
+    d: usize,
+    l_max: f64,
+}
+
+impl CocoerciveQuadratic {
+    pub fn random(d: usize, mu: f64, l_max: f64, rng: &mut Rng) -> Result<Self> {
+        if d == 0 {
+            return Err(Error::Oracle("dim must be >= 1".into()));
+        }
+        let eigs: Vec<f32> = (0..d)
+            .map(|i| (mu + (l_max - mu) * (i as f64 / (d.max(2) - 1).max(1) as f64)) as f32)
+            .collect();
+        let mut w = rng.gaussian_vec(d, 1.0);
+        let n = norm2(&w);
+        for v in w.iter_mut() {
+            *v = (*v as f64 / n) as f32;
+        }
+        let x_star = rng.gaussian_vec(d, 1.0);
+        Ok(CocoerciveQuadratic { eigs, w, x_star, d, l_max })
+    }
+
+    /// `out = Q x` with `Q = I − 2wwᵀ` (orthogonal, symmetric).
+    fn householder(&self, x: &[f32], out: &mut [f32]) {
+        let dotp: f64 = x.iter().zip(self.w.iter()).map(|(a, b)| *a as f64 * *b as f64).sum();
+        for i in 0..self.d {
+            out[i] = x[i] - (2.0 * dotp * self.w[i] as f64) as f32;
+        }
+    }
+}
+
+impl Operator for CocoerciveQuadratic {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &[f32], out: &mut [f32]) {
+        // A = Q diag(eigs) Q (x - x*)
+        let mut dx = vec![0.0f32; self.d];
+        sub_into(x, &self.x_star, &mut dx);
+        let mut t = vec![0.0f32; self.d];
+        self.householder(&dx, &mut t);
+        for i in 0..self.d {
+            t[i] *= self.eigs[i];
+        }
+        self.householder(&t, out);
+    }
+
+    fn solution(&self) -> Option<Vec<f32>> {
+        Some(self.x_star.clone())
+    }
+
+    fn cocoercivity(&self) -> Option<f64> {
+        Some(1.0 / self.l_max)
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.l_max)
+    }
+}
+
+/// Block-diagonal rotation-plus-shrink: each 2×2 block is
+/// `[[μ, λ], [−λ, μ]]`. For `μ → 0` plain GDA diverges while EG converges —
+/// the standard separator that motivates extra-gradient.
+pub struct RotationOperator {
+    mu: f32,
+    lambda: f32,
+    d: usize,
+    x_star: Vec<f32>,
+}
+
+impl RotationOperator {
+    pub fn new(d: usize, mu: f64, lambda: f64) -> Result<Self> {
+        if d % 2 != 0 || d == 0 {
+            return Err(Error::Oracle("rotation needs even dim".into()));
+        }
+        let mut rng = Rng::seed_from(0x0707);
+        let x_star = rng.gaussian_vec(d, 1.0);
+        Ok(RotationOperator { mu: mu as f32, lambda: lambda as f32, d, x_star })
+    }
+}
+
+impl Operator for RotationOperator {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn apply(&self, x: &[f32], out: &mut [f32]) {
+        for b in 0..self.d / 2 {
+            let i = 2 * b;
+            let dx = x[i] - self.x_star[i];
+            let dy = x[i + 1] - self.x_star[i + 1];
+            out[i] = self.mu * dx + self.lambda * dy;
+            out[i + 1] = -self.lambda * dx + self.mu * dy;
+        }
+    }
+
+    fn solution(&self) -> Option<Vec<f32>> {
+        Some(self.x_star.clone())
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(((self.mu * self.mu + self.lambda * self.lambda) as f64).sqrt())
+    }
+}
+
+/// Two-player zero-sum matrix game `min_{x∈Δ} max_{y∈Δ} xᵀ C y` as a VI on
+/// the product of simplices: `A(x, y) = (C y, −Cᵀ x)` with simplex
+/// projection. Compact domain; the gap has the exploitability closed form
+/// `max_j (Cᵀx)_j − min_i (C y)_i`.
+pub struct MatrixGame {
+    c: Vec<f32>,
+    n: usize,
+}
+
+impl MatrixGame {
+    pub fn random(dim: usize, rng: &mut Rng) -> Result<Self> {
+        if dim < 2 || dim % 2 != 0 {
+            return Err(Error::Oracle("game needs even dim".into()));
+        }
+        let n = dim / 2;
+        let c = rng.gaussian_vec(n * n, 1.0);
+        Ok(MatrixGame { c, n })
+    }
+
+    /// Exploitability of a strategy profile (equals `Gap_Δ²` for games).
+    pub fn exploitability(&self, z: &[f32]) -> f64 {
+        let n = self.n;
+        let (x, y) = z.split_at(n);
+        let mut cy = vec![0.0f32; n];
+        matvec(&self.c, n, n, y, &mut cy);
+        let mut ctx = vec![0.0f32; n];
+        matvec_t(&self.c, n, n, x, &mut ctx);
+        let best_y = ctx.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let best_x = cy.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+        // x^T C y sandwiched: exploitability = max_y' x^T C y' − min_x' x'^T C y
+        best_y - best_x
+    }
+
+    /// Uniform strategies starting point.
+    pub fn uniform_start(&self) -> Vec<f32> {
+        vec![1.0 / self.n as f32; 2 * self.n]
+    }
+}
+
+impl Operator for MatrixGame {
+    fn dim(&self) -> usize {
+        2 * self.n
+    }
+
+    fn apply(&self, z: &[f32], out: &mut [f32]) {
+        let n = self.n;
+        let (x, y) = z.split_at(n);
+        matvec(&self.c, n, n, y, &mut out[..n]);
+        let mut t = vec![0.0f32; n];
+        matvec_t(&self.c, n, n, x, &mut t);
+        for i in 0..n {
+            out[n + i] = -t[i];
+        }
+    }
+
+    fn project(&self, z: &mut [f32]) {
+        let n = self.n;
+        crate::util::project_simplex(&mut z[..n]);
+        crate::util::project_simplex(&mut z[n..]);
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        // crude bound: max |C_ij| * n
+        let m = self.c.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        Some((m as f64) * self.n as f64)
+    }
+}
+
+/// Power iteration estimate of `‖M‖₂` for an (r, c) row-major matrix
+/// (applies `MᵀM`).
+fn estimate_spectral_norm(m: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> f64 {
+    let mut v = rng.gaussian_vec(cols, 1.0);
+    let mut mv = vec![0.0f32; rows];
+    let mut mtmv = vec![0.0f32; cols];
+    let mut sigma2 = 0.0f64;
+    for _ in 0..50 {
+        let n = norm2(&v);
+        if n == 0.0 {
+            return 0.0;
+        }
+        for x in v.iter_mut() {
+            *x = (*x as f64 / n) as f32;
+        }
+        matvec(m, rows, cols, &v, &mut mv);
+        matvec_t(m, rows, cols, &mv, &mut mtmv);
+        sigma2 = norm2(&mtmv);
+        v.copy_from_slice(&mtmv);
+    }
+    sigma2.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+    use crate::util::{dist_sq, dot};
+
+    fn check_monotone(op: &dyn Operator, rng: &mut Rng, trials: usize) {
+        let d = op.dim();
+        for _ in 0..trials {
+            let x = rng.gaussian_vec(d, 2.0);
+            let y = rng.gaussian_vec(d, 2.0);
+            let mut ax = vec![0.0f32; d];
+            let mut ay = vec![0.0f32; d];
+            op.apply(&x, &mut ax);
+            op.apply(&y, &mut ay);
+            let diff_a: Vec<f32> = ax.iter().zip(ay.iter()).map(|(a, b)| a - b).collect();
+            let diff_x: Vec<f32> = x.iter().zip(y.iter()).map(|(a, b)| a - b).collect();
+            let inner = dot(&diff_a, &diff_x);
+            assert!(inner >= -1e-3 * dist_sq(&x, &y).max(1.0), "monotonicity violated: {inner}");
+        }
+    }
+
+    #[test]
+    fn all_operators_are_monotone() {
+        let mut rng = Rng::seed_from(1);
+        let ops: Vec<Box<dyn Operator>> = vec![
+            Box::new(BilinearSaddle::random(16, 1.0, &mut rng).unwrap()),
+            Box::new(MonotoneQuadratic::random(12, 0.1, 1.0, &mut rng).unwrap()),
+            Box::new(CocoerciveQuadratic::random(12, 0.1, 1.0, &mut rng).unwrap()),
+            Box::new(RotationOperator::new(8, 0.05, 1.0).unwrap()),
+            Box::new(MatrixGame::random(10, &mut rng).unwrap()),
+        ];
+        for op in &ops {
+            check_monotone(op.as_ref(), &mut rng, 30);
+        }
+    }
+
+    #[test]
+    fn solutions_are_zeros_of_operator() {
+        let mut rng = Rng::seed_from(2);
+        let ops: Vec<Box<dyn Operator>> = vec![
+            Box::new(BilinearSaddle::random(16, 1.0, &mut rng).unwrap()),
+            Box::new(MonotoneQuadratic::random(12, 0.1, 1.0, &mut rng).unwrap()),
+            Box::new(CocoerciveQuadratic::random(12, 0.1, 1.0, &mut rng).unwrap()),
+            Box::new(RotationOperator::new(8, 0.05, 1.0).unwrap()),
+        ];
+        for op in &ops {
+            let xs = op.solution().unwrap();
+            assert!(op.residual(&xs) < 1e-4, "residual {}", op.residual(&xs));
+        }
+    }
+
+    #[test]
+    fn bilinear_is_skew_around_solution() {
+        // <A(z), z - z*> = 0 for skew operators.
+        let mut rng = Rng::seed_from(3);
+        let op = BilinearSaddle::random(16, 1.0, &mut rng).unwrap();
+        let zs = op.solution().unwrap();
+        for _ in 0..20 {
+            let z = rng.gaussian_vec(16, 1.0);
+            let mut az = vec![0.0f32; 16];
+            op.apply(&z, &mut az);
+            let dz: Vec<f32> = z.iter().zip(zs.iter()).map(|(a, b)| a - b).collect();
+            assert!(dot(&az, &dz).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn cocoercive_satisfies_assumption4() {
+        // <A(x)-A(y), x-y> >= beta ||A(x)-A(y)||^2
+        let mut rng = Rng::seed_from(4);
+        let op = CocoerciveQuadratic::random(16, 0.2, 2.0, &mut rng).unwrap();
+        let beta = op.cocoercivity().unwrap();
+        forall("cocoercivity", 50, |g| {
+            let x = g.gaussian_vec(16, 2.0);
+            let y = g.gaussian_vec(16, 2.0);
+            let mut ax = vec![0.0f32; 16];
+            let mut ay = vec![0.0f32; 16];
+            op.apply(&x, &mut ax);
+            op.apply(&y, &mut ay);
+            let da: Vec<f32> = ax.iter().zip(ay.iter()).map(|(a, b)| a - b).collect();
+            let dx: Vec<f32> = x.iter().zip(y.iter()).map(|(a, b)| a - b).collect();
+            let lhs = dot(&da, &dx);
+            let rhs = beta * crate::util::norm2_sq(&da);
+            assert!(lhs >= rhs - 1e-3, "lhs={lhs} rhs={rhs}");
+        });
+    }
+
+    #[test]
+    fn quadratic_lipschitz_estimate_is_upper_bound() {
+        let mut rng = Rng::seed_from(5);
+        let op = MonotoneQuadratic::random(16, 0.1, 1.0, &mut rng).unwrap();
+        let l = op.lipschitz().unwrap();
+        for _ in 0..30 {
+            let x = rng.gaussian_vec(16, 1.0);
+            let y = rng.gaussian_vec(16, 1.0);
+            let mut ax = vec![0.0f32; 16];
+            let mut ay = vec![0.0f32; 16];
+            op.apply(&x, &mut ax);
+            op.apply(&y, &mut ay);
+            let num = dist_sq(&ax, &ay).sqrt();
+            let den = dist_sq(&x, &y).sqrt();
+            if den > 1e-9 {
+                assert!(num / den <= l * 1.05, "ratio {} > L {}", num / den, l);
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_blocks_rotate() {
+        let op = RotationOperator::new(4, 0.0, 1.0).unwrap();
+        let xs = op.solution().unwrap();
+        // A at x* + e1 should be (0*1, -1*1) pattern per block: (mu*dx+l*dy, -l*dx+mu*dy)
+        let mut x = xs.clone();
+        x[0] += 1.0;
+        let mut a = vec![0.0f32; 4];
+        op.apply(&x, &mut a);
+        assert!((a[0] - 0.0).abs() < 1e-6);
+        assert!((a[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn game_projection_and_exploitability() {
+        let mut rng = Rng::seed_from(6);
+        let game = MatrixGame::random(8, &mut rng).unwrap();
+        let mut z = game.uniform_start();
+        game.project(&mut z);
+        let e0 = game.exploitability(&z);
+        assert!(e0 >= -1e-6);
+        // Exploitability decreases after a few projected EG steps.
+        let d = game.dim();
+        let gamma = 0.1f32 / game.lipschitz().unwrap() as f32;
+        for _ in 0..200 {
+            let mut a = vec![0.0f32; d];
+            game.apply(&z, &mut a);
+            let mut zh = z.clone();
+            for i in 0..d {
+                zh[i] -= gamma * a[i];
+            }
+            game.project(&mut zh);
+            let mut ah = vec![0.0f32; d];
+            game.apply(&zh, &mut ah);
+            for i in 0..d {
+                z[i] -= gamma * ah[i];
+            }
+            game.project(&mut z);
+        }
+        let e1 = game.exploitability(&z);
+        assert!(e1 < e0 * 0.5, "exploitability did not drop: {e0} -> {e1}");
+    }
+
+    #[test]
+    fn invalid_dims_rejected() {
+        let mut rng = Rng::seed_from(7);
+        assert!(BilinearSaddle::random(7, 1.0, &mut rng).is_err());
+        assert!(RotationOperator::new(5, 0.1, 1.0).is_err());
+        assert!(MatrixGame::random(3, &mut rng).is_err());
+    }
+}

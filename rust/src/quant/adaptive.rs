@@ -1,0 +1,409 @@
+//! QAda — adaptive quantization levels (paper §3.3).
+//!
+//! Instead of heuristic level placement, QAda (i) estimates the
+//! distribution of *normalized* dual-vector coordinates through a cheap
+//! sufficient statistic, (ii) minimizes the quantization variance
+//!
+//! `min_ℓ Σ_i ∫_{ℓ_i}^{ℓ_{i+1}} σ_Q²(u; ℓ) dF̃(u)`   (QAda)
+//!
+//! over the weighted CDF `F̃ = Σ_j λ_j F_j`, `λ_j ∝ ‖g_j‖_q²`, and (iii)
+//! re-solves on the update schedule `U` as the gradient distribution
+//! drifts during training.
+//!
+//! The optimizer is the "update levels one at a time" scheme of Faghri et
+//! al. (2020): coordinate descent where each inner step solves the scalar
+//! first-order condition
+//!
+//! `Σ_{u ∈ (ℓ_{j-1}, ℓ_j)} (u − ℓ_{j-1}) dF̃ = Σ_{u ∈ (ℓ_j, ℓ_{j+1})} (ℓ_{j+1} − u) dF̃`
+//!
+//! by bisection (the residual is monotone in ℓ_j). Each sweep never
+//! increases the objective, so the iteration converges to a stationary
+//! point of (QAda).
+
+use super::levels::Levels;
+use crate::error::{Error, Result};
+use crate::util::{norm_q, Histogram};
+
+/// Sufficient statistics for QAda: a weighted histogram of normalized
+/// coordinate magnitudes, weights `λ_j ∝ ‖g_j‖_q²` (law-of-total-expectation
+/// weighting from the paper's QAda derivation).
+#[derive(Clone, Debug)]
+pub struct SufficientStats {
+    hist: Histogram,
+    q: u32,
+    vectors_seen: usize,
+}
+
+impl SufficientStats {
+    pub fn new(bins: usize, q: u32) -> Self {
+        SufficientStats { hist: Histogram::new(bins), q, vectors_seen: 0 }
+    }
+
+    /// Accumulate one sampled dual vector `g` (one of the J samples).
+    pub fn observe(&mut self, g: &[f32]) {
+        let norm = norm_q(g, self.q);
+        if norm == 0.0 {
+            return;
+        }
+        // λ_j ∝ ‖g_j‖_q²; the histogram normalizes by total mass so the
+        // proportionality constant cancels.
+        self.hist.push_normalized(g, norm, norm * norm);
+        self.vectors_seen += 1;
+    }
+
+    /// Accumulate bucketed: one weight per bucket (matches the bucketed
+    /// quantizer, where each bucket is normalized independently).
+    pub fn observe_bucketed(&mut self, g: &[f32], bucket_size: usize) {
+        let b = if bucket_size == 0 { g.len() } else { bucket_size };
+        for chunk in g.chunks(b) {
+            self.observe(chunk);
+        }
+    }
+
+    /// Merge stats pooled from another worker (leader-side aggregation).
+    pub fn merge(&mut self, other: &SufficientStats) {
+        assert_eq!(self.q, other.q);
+        self.hist.merge(&other.hist);
+        self.vectors_seen += other.vectors_seen;
+    }
+
+    pub fn vectors_seen(&self) -> usize {
+        self.vectors_seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hist.total() == 0.0
+    }
+
+    /// `F̃(u)` — the weighted CDF.
+    pub fn cdf(&self, u: f64) -> f64 {
+        self.hist.cdf(u)
+    }
+
+    /// Serialize the sufficient statistic (bin masses as f32 LE) for the
+    /// inter-worker stat exchange at level-update steps. The whole point of
+    /// sufficient statistics is that this is tiny: `4 × hist_bins` bytes
+    /// regardless of `d`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * self.hist.bins());
+        for &c in self.hist.bin_counts() {
+            out.extend_from_slice(&(c as f32).to_le_bytes());
+        }
+        out
+    }
+
+    /// Pool a peer's serialized statistic into this one.
+    pub fn absorb_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() != 4 * self.hist.bins() {
+            return Err(Error::Quant(format!(
+                "stat payload {} bytes, expected {}",
+                bytes.len(),
+                4 * self.hist.bins()
+            )));
+        }
+        let counts: Vec<f64> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+            .collect();
+        self.hist.add_counts(&counts);
+        self.vectors_seen += 1;
+        Ok(())
+    }
+
+    /// Reset to empty (start of a new schedule segment T_j).
+    pub fn reset(&mut self) {
+        self.hist = Histogram::new(self.hist.bins());
+        self.vectors_seen = 0;
+    }
+
+    /// Probability mass in `[a, b)` under `F̃`.
+    fn mass(&self, a: f64, b: f64) -> f64 {
+        (self.cdf(b) - self.cdf(a)).max(0.0)
+    }
+
+    /// First moment `∫_a^b u dF̃(u)`, approximated from histogram bins
+    /// (mass at bin centers).
+    fn first_moment(&self, a: f64, b: f64) -> f64 {
+        let nb = self.hist.bins();
+        let mut acc = 0.0;
+        for m in 0..nb {
+            let lo = m as f64 / nb as f64;
+            let hi = (m + 1) as f64 / nb as f64;
+            let center = 0.5 * (lo + hi);
+            // overlap fraction of bin [lo,hi) with [a,b)
+            let olo = lo.max(a);
+            let ohi = hi.min(b);
+            if ohi > olo {
+                let frac = (ohi - olo) / (hi - lo);
+                acc += self.hist.pmf(m) * frac * center;
+            }
+        }
+        acc
+    }
+
+    /// The QAda objective: expected per-coordinate quantization variance
+    /// `Σ_bins ∫ σ_Q²(u; ℓ) dF̃(u)` (up to the common `‖v‖²` factor).
+    pub fn objective(&self, levels: &Levels) -> f64 {
+        let nb = self.hist.bins();
+        let mut acc = 0.0;
+        for m in 0..nb {
+            let center = (m as f64 + 0.5) / nb as f64;
+            acc += self.hist.pmf(m) * levels.coord_variance(center);
+        }
+        acc
+    }
+}
+
+/// Proposition 2: symbol occurrence probabilities `p_0..p_{s+1}` under `F̃`
+/// and the stochastic rounding rule:
+///
+/// `p_j = ∫_{ℓ_{j-1}}^{ℓ_j} (u−ℓ_{j-1})/(ℓ_j−ℓ_{j-1}) dF̃
+///      + ∫_{ℓ_j}^{ℓ_{j+1}} (ℓ_{j+1}−u)/(ℓ_{j+1}−ℓ_j) dF̃`.
+pub fn symbol_probs(stats: &SufficientStats, levels: &Levels) -> Vec<f64> {
+    let s = levels.s();
+    let mut probs = vec![0.0f64; s + 2];
+    for j in 0..=(s + 1) {
+        let lj = levels.value(j);
+        let mut p = 0.0;
+        if j > 0 {
+            // rounded *up* to ℓ_j from the bin below
+            let lo = levels.value(j - 1);
+            let w = lj - lo;
+            if w > 0.0 {
+                let m1 = stats.first_moment(lo, lj);
+                let m0 = stats.mass(lo, lj);
+                p += (m1 - lo * m0) / w;
+            }
+        }
+        if j <= s {
+            // rounded *down* to ℓ_j from the bin above
+            let hi = levels.value(j + 1);
+            let w = hi - lj;
+            if w > 0.0 {
+                let m1 = stats.first_moment(lj, hi);
+                let m0 = stats.mass(lj, hi);
+                p += (hi * m0 - m1) / w;
+            }
+        }
+        probs[j] = p.max(0.0);
+    }
+    // Account for mass exactly at 1.0 (CDF convention: mass(ℓ_s, 1) misses
+    // the closed endpoint). Normalize to sum 1.
+    let total: f64 = probs.iter().sum();
+    if total > 0.0 {
+        // Residual mass (e.g. u == 1.0 atoms) goes to the top symbol.
+        let residual = (1.0 - total).max(0.0);
+        probs[s + 1] += residual;
+        let total: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= total;
+        }
+    }
+    probs
+}
+
+/// Solve (QAda) by coordinate-descent sweeps with per-level bisection.
+///
+/// `s` = number of interior levels; `init` seeds the search (uniform if
+/// `None`); `sweeps` full passes (8 is plenty — the objective is smooth and
+/// each scalar solve is exact to bisection tolerance).
+pub fn optimize_levels(
+    stats: &SufficientStats,
+    s: usize,
+    init: Option<&Levels>,
+    sweeps: usize,
+) -> Result<Levels> {
+    if stats.is_empty() {
+        return Err(Error::Quant("QAda: no sufficient statistics observed".into()));
+    }
+    let mut cur: Vec<f64> = match init {
+        Some(l) if l.s() == s => l.interior().to_vec(),
+        _ => Levels::uniform(s).interior().to_vec(),
+    };
+    let eps = 1e-9;
+    for _ in 0..sweeps {
+        for j in 0..s {
+            let lo_bound = if j == 0 { 0.0 } else { cur[j - 1] };
+            let hi_bound = if j + 1 == s { 1.0 } else { cur[j + 1] };
+            if hi_bound - lo_bound < 4.0 * eps {
+                continue;
+            }
+            // residual(l) = ∫_{lo}^{l} (u - lo) dF - ∫_{l}^{hi} (hi' - u) dF
+            // increasing in l; root = optimal ℓ_j given neighbors.
+            let residual = |l: f64| -> f64 {
+                let left = stats.first_moment(lo_bound, l) - lo_bound * stats.mass(lo_bound, l);
+                let right = hi_bound * stats.mass(l, hi_bound) - stats.first_moment(l, hi_bound);
+                left - right
+            };
+            let mut a = lo_bound + eps;
+            let mut b = hi_bound - eps;
+            let (ra, rb) = (residual(a), residual(b));
+            if ra >= 0.0 {
+                cur[j] = a;
+                continue;
+            }
+            if rb <= 0.0 {
+                cur[j] = b;
+                continue;
+            }
+            for _ in 0..40 {
+                let mid = 0.5 * (a + b);
+                if residual(mid) < 0.0 {
+                    a = mid;
+                } else {
+                    b = mid;
+                }
+            }
+            cur[j] = 0.5 * (a + b);
+        }
+    }
+    // Enforce strict monotonicity against numerical ties.
+    for j in 1..s {
+        if cur[j] <= cur[j - 1] {
+            cur[j] = (cur[j - 1] + 1e-7).min(1.0 - 1e-7 * (s - j) as f64);
+        }
+    }
+    Levels::new(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_close;
+    use crate::util::Rng;
+
+    fn gaussian_stats(bins: usize, d: usize, vecs: usize, seed: u64) -> SufficientStats {
+        let mut stats = SufficientStats::new(bins, 2);
+        let mut rng = Rng::seed_from(seed);
+        for _ in 0..vecs {
+            let g = rng.gaussian_vec(d, 1.0);
+            stats.observe(&g);
+        }
+        stats
+    }
+
+    #[test]
+    fn observe_accumulates() {
+        let stats = gaussian_stats(128, 256, 8, 1);
+        assert_eq!(stats.vectors_seen(), 8);
+        assert!(!stats.is_empty());
+        assert!(stats.cdf(1.0) > 0.99);
+    }
+
+    #[test]
+    fn gaussian_coordinates_concentrate_near_zero() {
+        // |N(0,1)| / ||g||_2 with d=1024 concentrates around 1/sqrt(d) ≈ 0.03.
+        let stats = gaussian_stats(512, 1024, 16, 2);
+        assert!(stats.cdf(0.1) > 0.95, "cdf(0.1)={}", stats.cdf(0.1));
+        assert!(stats.cdf(0.01) < 0.6);
+    }
+
+    #[test]
+    fn optimized_levels_beat_uniform_on_skewed_data() {
+        let stats = gaussian_stats(512, 4096, 16, 3);
+        let s = 15;
+        let uniform = Levels::uniform(s);
+        let adapted = optimize_levels(&stats, s, None, 8).unwrap();
+        let obj_u = stats.objective(&uniform);
+        let obj_a = stats.objective(&adapted);
+        assert!(
+            obj_a < obj_u * 0.5,
+            "adaptive {obj_a} should be much below uniform {obj_u}"
+        );
+        // Adapted levels should crowd near zero where the mass is.
+        assert!(adapted.l1() < uniform.l1());
+    }
+
+    #[test]
+    fn optimize_is_monotone_in_objective() {
+        let stats = gaussian_stats(256, 512, 8, 4);
+        let s = 7;
+        let l1 = optimize_levels(&stats, s, None, 1).unwrap();
+        let l8 = optimize_levels(&stats, s, None, 8).unwrap();
+        assert!(stats.objective(&l8) <= stats.objective(&l1) + 1e-12);
+    }
+
+    #[test]
+    fn symbol_probs_sum_to_one_and_match_empirical() {
+        let stats = gaussian_stats(512, 2048, 32, 5);
+        let levels = optimize_levels(&stats, 7, None, 8).unwrap();
+        let probs = symbol_probs(&stats, &levels);
+        assert_eq!(probs.len(), 9);
+        let total: f64 = probs.iter().sum();
+        assert_close(total, 1.0, 1e-9);
+        assert!(probs.iter().all(|&p| p >= 0.0));
+
+        // Empirical check: quantize fresh vectors and compare frequencies.
+        let mut rng = Rng::seed_from(77);
+        let mut counts = vec![0usize; probs.len()];
+        let mut n = 0usize;
+        for _ in 0..64 {
+            let g = rng.gaussian_vec(2048, 1.0);
+            let qv = super::super::quantizer::quantize(&g, &levels, 2, 0, &mut rng).unwrap();
+            for &sym in &qv.symbols {
+                counts[sym as usize] += 1;
+                n += 1;
+            }
+        }
+        for (j, &p) in probs.iter().enumerate() {
+            let emp = counts[j] as f64 / n as f64;
+            assert!(
+                (emp - p).abs() < 0.03 + 0.25 * p,
+                "symbol {j}: empirical {emp} vs predicted {p}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_pools_worker_stats() {
+        let a = gaussian_stats(128, 256, 4, 6);
+        let b = gaussian_stats(128, 256, 4, 7);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.vectors_seen(), 8);
+        // CDF of merge lies between the two.
+        let u = 0.05;
+        let lo = a.cdf(u).min(b.cdf(u));
+        let hi = a.cdf(u).max(b.cdf(u));
+        let m = merged.cdf(u);
+        assert!(m >= lo - 1e-12 && m <= hi + 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_rejected() {
+        let stats = SufficientStats::new(64, 2);
+        assert!(optimize_levels(&stats, 3, None, 4).is_err());
+    }
+
+    #[test]
+    fn bucketed_observation() {
+        let mut stats = SufficientStats::new(64, 2);
+        let mut rng = Rng::seed_from(8);
+        let g = rng.gaussian_vec(1000, 1.0);
+        stats.observe_bucketed(&g, 100);
+        // 10 buckets observed as 10 "vectors".
+        assert_eq!(stats.vectors_seen(), 10);
+    }
+
+    #[test]
+    fn adaptive_levels_reduce_true_quantization_error() {
+        // End-to-end: measured E||Q(v)-v||^2 drops vs uniform levels.
+        use super::super::quantizer::{dequantize, quantize};
+        use crate::util::dist_sq;
+        let stats = gaussian_stats(512, 4096, 8, 9);
+        let s = 7;
+        let uniform = Levels::uniform(s);
+        let adapted = optimize_levels(&stats, s, None, 8).unwrap();
+        let mut rng = Rng::seed_from(10);
+        let mut err_u = 0.0;
+        let mut err_a = 0.0;
+        for _ in 0..30 {
+            let v = rng.gaussian_vec(4096, 1.0);
+            let qu = quantize(&v, &uniform, 2, 0, &mut rng).unwrap();
+            let qa = quantize(&v, &adapted, 2, 0, &mut rng).unwrap();
+            err_u += dist_sq(&v, &dequantize(&qu, &uniform));
+            err_a += dist_sq(&v, &dequantize(&qa, &adapted));
+        }
+        assert!(err_a < 0.5 * err_u, "adaptive {err_a} vs uniform {err_u}");
+    }
+}

@@ -1,0 +1,325 @@
+//! The wire format: `CODE ∘ Q` (§3.2, Appendix K) and its inverse
+//! `DEQ ∘ CODE`.
+//!
+//! Per bucket:  `[‖v‖_q : f32 (C_b = 32)]` then, for each coordinate, the
+//! level-index symbol under Ψ followed by one sign bit *iff* the symbol is
+//! nonzero (a zero reconstructs to 0 and needs no sign — Lemma 3's
+//! `(1 − p_0) d` sign-bit count).
+//!
+//! Ψ options ([`WireCodec`]): fixed-width (torch_cgx UQ4/UQ8), Elias γ/δ on
+//! `symbol + 1` (universal; QSGD-style), or canonical Huffman built from
+//! the Proposition 2 probabilities (minimum expected length; the code
+//! lengths travel with the level update on schedule `U`, not per message).
+//!
+//! The decoder needs `(d, bucket_size, levels, codec)` as side information
+//! — all of which the coordinator distributes at setup / level updates, so
+//! the steady-state wire carries only what Theorem 2 counts.
+
+use super::levels::Levels;
+use super::quantizer::QuantizedVector;
+use crate::coding::{
+    elias, BitReader, BitWriter, HuffmanCode, SymbolCodec,
+};
+use crate::error::{Error, Result};
+
+/// A symbol codec bound to its side information (the Huffman table when Ψ
+/// is Huffman). Construct once per level-update, reuse per message.
+#[derive(Clone, Debug)]
+pub struct WireCodec {
+    pub kind: SymbolCodec,
+    /// Fixed width in bits for `SymbolCodec::Fixed`.
+    fixed_width: u32,
+    /// Huffman table for `SymbolCodec::Huffman`.
+    huffman: Option<HuffmanCode>,
+}
+
+impl WireCodec {
+    /// Build a codec for an alphabet of `s + 2` symbols.
+    pub fn new(kind: SymbolCodec, levels: &Levels, probs: Option<&[f64]>) -> Result<Self> {
+        let n = levels.alphabet_size();
+        let fixed_width = (usize::BITS - (n - 1).leading_zeros()).max(1);
+        let huffman = match kind {
+            SymbolCodec::Huffman => {
+                let probs = probs.ok_or_else(|| {
+                    Error::Codec("huffman codec needs symbol probabilities".into())
+                })?;
+                if probs.len() != n {
+                    return Err(Error::Codec(format!(
+                        "probs length {} != alphabet {n}",
+                        probs.len()
+                    )));
+                }
+                // Floor probabilities so every symbol stays encodable even if
+                // the estimate assigned it zero mass.
+                let floored: Vec<f64> = probs.iter().map(|&p| p.max(1e-9)).collect();
+                Some(HuffmanCode::from_weights(&floored)?)
+            }
+            _ => None,
+        };
+        Ok(WireCodec { kind, fixed_width, huffman })
+    }
+
+    /// Expected bits for one symbol stream under `probs` (diagnostics).
+    pub fn expected_symbol_bits(&self, probs: &[f64]) -> f64 {
+        match self.kind {
+            SymbolCodec::Fixed => self.fixed_width as f64,
+            SymbolCodec::EliasGamma => probs
+                .iter()
+                .enumerate()
+                .map(|(j, p)| p * elias::gamma_len(j as u64 + 1) as f64)
+                .sum(),
+            SymbolCodec::EliasDelta => probs
+                .iter()
+                .enumerate()
+                .map(|(j, p)| p * elias::delta_len(j as u64 + 1) as f64)
+                .sum(),
+            SymbolCodec::Huffman => self.huffman.as_ref().unwrap().expected_len(probs),
+        }
+    }
+
+    #[inline]
+    fn encode_symbol(&self, w: &mut BitWriter, sym: u16) -> Result<()> {
+        match self.kind {
+            SymbolCodec::Fixed => {
+                w.write_bits(sym as u64, self.fixed_width);
+                Ok(())
+            }
+            SymbolCodec::EliasGamma => {
+                elias::gamma_encode(w, sym as u64 + 1);
+                Ok(())
+            }
+            SymbolCodec::EliasDelta => {
+                elias::delta_encode(w, sym as u64 + 1);
+                Ok(())
+            }
+            SymbolCodec::Huffman => self.huffman.as_ref().unwrap().encode(w, sym as usize),
+        }
+    }
+
+    #[inline]
+    fn decode_symbol(&self, r: &mut BitReader) -> Result<u16> {
+        match self.kind {
+            SymbolCodec::Fixed => Ok(r.read_bits(self.fixed_width)? as u16),
+            SymbolCodec::EliasGamma => Ok((elias::gamma_decode(r)? - 1) as u16),
+            SymbolCodec::EliasDelta => Ok((elias::delta_decode(r)? - 1) as u16),
+            SymbolCodec::Huffman => Ok(self.huffman.as_ref().unwrap().decode(r)? as u16),
+        }
+    }
+}
+
+/// `CODE ∘ Q`: serialize a quantized vector. Returns the wire bytes; the
+/// exact bit count (pre-padding) is `bytes.1`.
+pub fn encode_vector(qv: &QuantizedVector, codec: &WireCodec) -> Result<(Vec<u8>, u64)> {
+    // Capacity guess: norms + ~6 bits/coordinate.
+    let mut w = BitWriter::with_capacity(4 * qv.norms.len() + qv.d);
+    let b = qv.bucket_size;
+    for (bi, &norm) in qv.norms.iter().enumerate() {
+        w.write_f32(norm);
+        let lo = bi * b;
+        let hi = ((bi + 1) * b).min(qv.d);
+        if norm == 0.0 {
+            continue; // empty bucket: decoder reconstructs zeros, no symbols
+        }
+        for i in lo..hi {
+            let sym = qv.symbols[i];
+            codec.encode_symbol(&mut w, sym)?;
+            if sym != 0 {
+                w.write_bit(qv.sign_is_neg(i));
+            }
+        }
+    }
+    let bits = w.bit_len();
+    Ok((w.finish(), bits))
+}
+
+/// `DEQ ∘ CODE`: parse wire bytes back into a [`QuantizedVector`].
+pub fn decode_vector(
+    bytes: &[u8],
+    d: usize,
+    bucket_size: usize,
+    codec: &WireCodec,
+) -> Result<QuantizedVector> {
+    let b = if bucket_size == 0 { d } else { bucket_size };
+    let nb = d.div_ceil(b);
+    let mut r = BitReader::new(bytes);
+    let mut norms = Vec::with_capacity(nb);
+    let mut symbols = vec![0u16; d];
+    let mut sign_words = vec![0u64; d.div_ceil(64)];
+    for bi in 0..nb {
+        let norm = r.read_f32()?;
+        if !norm.is_finite() || norm < 0.0 {
+            return Err(Error::Codec(format!("bad bucket norm {norm}")));
+        }
+        norms.push(norm);
+        let lo = bi * b;
+        let hi = ((bi + 1) * b).min(d);
+        if norm == 0.0 {
+            continue;
+        }
+        for i in lo..hi {
+            let sym = codec.decode_symbol(&mut r)?;
+            symbols[i] = sym;
+            if sym != 0 && r.read_bit()? {
+                sign_words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+    Ok(QuantizedVector { d, bucket_size: b, norms, symbols, sign_words })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::adaptive::{symbol_probs, SufficientStats};
+    use crate::quant::quantizer::{dequantize, quantize};
+    use crate::testkit::forall;
+    use crate::util::Rng;
+
+    fn all_codecs(levels: &Levels, probs: &[f64]) -> Vec<WireCodec> {
+        vec![
+            WireCodec::new(SymbolCodec::Fixed, levels, None).unwrap(),
+            WireCodec::new(SymbolCodec::EliasGamma, levels, None).unwrap(),
+            WireCodec::new(SymbolCodec::EliasDelta, levels, None).unwrap(),
+            WireCodec::new(SymbolCodec::Huffman, levels, Some(probs)).unwrap(),
+        ]
+    }
+
+    fn gaussian_probs(levels: &Levels, d: usize) -> Vec<f64> {
+        let mut stats = SufficientStats::new(256, 2);
+        let mut rng = Rng::seed_from(31);
+        for _ in 0..8 {
+            let g = rng.gaussian_vec(d, 1.0);
+            stats.observe(&g);
+        }
+        symbol_probs(&stats, levels)
+    }
+
+    #[test]
+    fn roundtrip_exact_all_codecs() {
+        let levels = Levels::uniform(14);
+        let probs = gaussian_probs(&levels, 512);
+        let mut rng = Rng::seed_from(1);
+        let v = rng.gaussian_vec(512, 1.0);
+        let qv = quantize(&v, &levels, 2, 128, &mut rng).unwrap();
+        for codec in all_codecs(&levels, &probs) {
+            let (bytes, bits) = encode_vector(&qv, &codec).unwrap();
+            assert!(bits as usize <= bytes.len() * 8);
+            let back = decode_vector(&bytes, 512, 128, &codec).unwrap();
+            assert_eq!(qv, back, "codec {:?}", codec.kind);
+            // Dequantized values identical too.
+            assert_eq!(dequantize(&qv, &levels), dequantize(&back, &levels));
+        }
+    }
+
+    #[test]
+    fn huffman_beats_fixed_on_skewed_gradients() {
+        // Gaussian coordinates at large d are overwhelmingly near zero ->
+        // low symbols dominate -> Huffman/Elias crush fixed-width.
+        let levels = Levels::uniform(14);
+        let d = 4096;
+        let probs = gaussian_probs(&levels, d);
+        let mut rng = Rng::seed_from(2);
+        let v = rng.gaussian_vec(d, 1.0);
+        let qv = quantize(&v, &levels, 2, 0, &mut rng).unwrap();
+        let fixed = WireCodec::new(SymbolCodec::Fixed, &levels, None).unwrap();
+        let huff = WireCodec::new(SymbolCodec::Huffman, &levels, Some(&probs)).unwrap();
+        let (_, bits_fixed) = encode_vector(&qv, &fixed).unwrap();
+        let (_, bits_huff) = encode_vector(&qv, &huff).unwrap();
+        assert!(
+            (bits_huff as f64) < 0.75 * bits_fixed as f64,
+            "huffman {bits_huff} vs fixed {bits_fixed}"
+        );
+    }
+
+    #[test]
+    fn wire_is_far_smaller_than_fp32() {
+        let levels = Levels::uniform(14); // UQ4
+        let d = 1 << 14;
+        let mut rng = Rng::seed_from(3);
+        let v = rng.gaussian_vec(d, 1.0);
+        let qv = quantize(&v, &levels, 2, 1024, &mut rng).unwrap();
+        let fixed = WireCodec::new(SymbolCodec::Fixed, &levels, None).unwrap();
+        let (bytes, _) = encode_vector(&qv, &fixed).unwrap();
+        let fp32_bytes = 4 * d;
+        assert!(
+            bytes.len() * 2 < fp32_bytes,
+            "wire {} should be well under fp32 {}",
+            bytes.len(),
+            fp32_bytes
+        );
+    }
+
+    #[test]
+    fn empty_bucket_encodes_compactly() {
+        let levels = Levels::uniform(3);
+        let v = vec![0.0f32; 256];
+        let mut rng = Rng::seed_from(4);
+        let qv = quantize(&v, &levels, 2, 64, &mut rng).unwrap();
+        let codec = WireCodec::new(SymbolCodec::Fixed, &levels, None).unwrap();
+        let (bytes, bits) = encode_vector(&qv, &codec).unwrap();
+        // 4 buckets * 32-bit norms only.
+        assert_eq!(bits, 4 * 32);
+        let back = decode_vector(&bytes, 256, 64, &codec).unwrap();
+        assert!(dequantize(&back, &levels).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn truncated_wire_is_error() {
+        let levels = Levels::uniform(7);
+        let mut rng = Rng::seed_from(5);
+        let v = rng.gaussian_vec(64, 1.0);
+        let qv = quantize(&v, &levels, 2, 0, &mut rng).unwrap();
+        let codec = WireCodec::new(SymbolCodec::EliasGamma, &levels, None).unwrap();
+        let (bytes, _) = encode_vector(&qv, &codec).unwrap();
+        let cut = &bytes[..bytes.len() / 2];
+        assert!(decode_vector(cut, 64, 0, &codec).is_err());
+    }
+
+    #[test]
+    fn huffman_requires_probs() {
+        let levels = Levels::uniform(3);
+        assert!(WireCodec::new(SymbolCodec::Huffman, &levels, None).is_err());
+        assert!(WireCodec::new(SymbolCodec::Huffman, &levels, Some(&[0.5, 0.5])).is_err());
+    }
+
+    #[test]
+    fn expected_symbol_bits_tracks_measured() {
+        let levels = Levels::uniform(14);
+        let d = 8192;
+        let probs = gaussian_probs(&levels, d);
+        let mut rng = Rng::seed_from(6);
+        let v = rng.gaussian_vec(d, 1.0);
+        let qv = quantize(&v, &levels, 2, 0, &mut rng).unwrap();
+        for codec in all_codecs(&levels, &probs) {
+            let (_, bits) = encode_vector(&qv, &codec).unwrap();
+            let nonzeros = d - qv.num_zeros();
+            let predicted = 32.0 + codec.expected_symbol_bits(&probs) * d as f64 + nonzeros as f64;
+            let measured = bits as f64;
+            assert!(
+                (measured - predicted).abs() / predicted < 0.15,
+                "codec {:?}: measured {measured} predicted {predicted}",
+                codec.kind
+            );
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random_everything() {
+        forall("wire roundtrip", 60, |g| {
+            let s = g.usize_in(1, 40);
+            let levels = Levels::new(g.levels(s)).unwrap();
+            let d = g.usize_in(1, 400);
+            let bucket = *g.choose(&[0usize, 3, 50, 333]);
+            let v = g.f32_vec(d, -3.0, 3.0);
+            let uniforms: Vec<f32> = (0..d).map(|_| g.f32_in(0.0, 1.0)).collect();
+            let qv = crate::quant::quantize_with_uniforms(&v, &levels, 2, bucket, &uniforms)
+                .unwrap();
+            let kinds = [SymbolCodec::Fixed, SymbolCodec::EliasGamma, SymbolCodec::EliasDelta];
+            let kind = *g.choose(&kinds);
+            let codec = WireCodec::new(kind, &levels, None).unwrap();
+            let (bytes, _) = encode_vector(&qv, &codec).unwrap();
+            let back = decode_vector(&bytes, d, bucket, &codec).unwrap();
+            assert_eq!(qv, back);
+        });
+    }
+}

@@ -1,0 +1,263 @@
+//! Quantization level sequences (Definition 1).
+//!
+//! A level sequence is `ℓ = (ℓ_0, ℓ_1, …, ℓ_s, ℓ_{s+1})` with
+//! `0 = ℓ_0 < ℓ_1 < … < ℓ_s < ℓ_{s+1} = 1`. We store only the `s` interior
+//! levels; the endpoints are implicit. The alphabet the encoder sees has
+//! `s + 2` symbols (indices `0..=s+1`).
+
+use crate::error::{Error, Result};
+
+/// A validated level sequence.
+#[derive(Clone, Debug)]
+pub struct Levels {
+    /// Interior levels ℓ_1..ℓ_s, strictly increasing, in (0, 1).
+    interior: Vec<f64>,
+    /// Full sequence (0, ℓ_1..ℓ_s, 1) as f32 — the hot-path table.
+    full_f32: Vec<f32>,
+    /// `Some(s + 1)` when the levels are exactly uniform `j/(s+1)`: enables
+    /// the O(1) bin computation on the hot path (§Perf).
+    uniform_denom: Option<f32>,
+}
+
+impl PartialEq for Levels {
+    fn eq(&self, other: &Self) -> bool {
+        self.interior == other.interior
+    }
+}
+
+impl Levels {
+    fn build(interior: Vec<f64>) -> Self {
+        let mut full_f32 = Vec::with_capacity(interior.len() + 2);
+        full_f32.push(0.0);
+        full_f32.extend(interior.iter().map(|&x| x as f32));
+        full_f32.push(1.0);
+        // Detect exact uniform spacing.
+        let s = interior.len();
+        let denom = (s + 1) as f64;
+        let uniform = (0..s).all(|j| interior[j] == (j + 1) as f64 / denom);
+        Levels { interior, full_f32, uniform_denom: uniform.then_some(denom as f32) }
+    }
+
+    /// Build from interior levels, validating Definition 1's ordering.
+    pub fn new(interior: Vec<f64>) -> Result<Self> {
+        if interior.is_empty() {
+            return Err(Error::Quant("need at least one interior level".into()));
+        }
+        let mut prev = 0.0f64;
+        for (i, &l) in interior.iter().enumerate() {
+            if !(l.is_finite() && l > prev && l < 1.0) {
+                return Err(Error::Quant(format!(
+                    "level {i} = {l} violates 0 < ℓ_1 < … < ℓ_s < 1 (prev {prev})"
+                )));
+            }
+            prev = l;
+        }
+        Ok(Levels::build(interior))
+    }
+
+    /// QSGD-style uniform levels: ℓ_j = j / (s + 1).
+    pub fn uniform(s: usize) -> Self {
+        assert!(s >= 1);
+        let interior = (1..=s).map(|j| j as f64 / (s + 1) as f64).collect();
+        Levels::build(interior)
+    }
+
+    /// NUQSGD-style exponential levels: ℓ_j = 2^{-(s + 1 - j)}
+    /// (…, 1/8, 1/4, 1/2 for s = 3).
+    pub fn exponential(s: usize) -> Self {
+        assert!(s >= 1);
+        let interior = (1..=s).map(|j| 2f64.powi(-((s + 1 - j) as i32))).collect();
+        Levels::build(interior)
+    }
+
+    /// Number of interior levels `s`.
+    pub fn s(&self) -> usize {
+        self.interior.len()
+    }
+
+    /// Alphabet size `s + 2` (symbols 0..=s+1 including both endpoints).
+    pub fn alphabet_size(&self) -> usize {
+        self.interior.len() + 2
+    }
+
+    /// Interior levels ℓ_1..ℓ_s.
+    pub fn interior(&self) -> &[f64] {
+        &self.interior
+    }
+
+    /// ℓ_1, the smallest nonzero level (drives the Theorem 1 bound).
+    pub fn l1(&self) -> f64 {
+        self.interior[0]
+    }
+
+    /// Value of level `j` for `j ∈ 0..=s+1` (0 and 1 at the endpoints).
+    #[inline]
+    pub fn value(&self, j: usize) -> f64 {
+        if j == 0 {
+            0.0
+        } else if j <= self.interior.len() {
+            self.interior[j - 1]
+        } else {
+            1.0
+        }
+    }
+
+    /// The full sequence including endpoints — what ships to the L1 kernel.
+    pub fn full(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.interior.len() + 2);
+        v.push(0.0);
+        v.extend_from_slice(&self.interior);
+        v.push(1.0);
+        v
+    }
+
+    /// Full sequence as f32 (the dtype of the Pallas kernel operand and
+    /// the Rust hot-path table).
+    pub fn full_f32(&self) -> Vec<f32> {
+        self.full_f32.clone()
+    }
+
+    /// Borrowed f32 table (hot path; index j in 0..=s+1).
+    #[inline]
+    pub fn table_f32(&self) -> &[f32] {
+        &self.full_f32
+    }
+
+    /// `Some(s+1)` when levels are exactly uniform (O(1) bin math applies).
+    #[inline]
+    pub fn uniform_denom(&self) -> Option<f32> {
+        self.uniform_denom
+    }
+
+    /// `τ(u)`: index of the level with `ℓ_τ <= u < ℓ_{τ+1}` for `u ∈ [0,1)`;
+    /// `u == 1` maps to `s` (so that `τ+1 = s+1` is the top endpoint).
+    /// Binary search over the interior levels: O(log s).
+    #[inline]
+    pub fn bin_of(&self, u: f64) -> usize {
+        debug_assert!((0.0..=1.0).contains(&u), "u={u} out of [0,1]");
+        if u >= 1.0 {
+            return self.interior.len();
+        }
+        // partition_point = count of interior levels <= u.
+        self.interior.partition_point(|&l| l <= u)
+    }
+
+    /// Variance of quantizing a single normalized coordinate `u`:
+    /// `σ_Q²(u; ℓ) = (ℓ_{τ(u)+1} − u)(u − ℓ_{τ(u)})` (Eq. 3.1).
+    #[inline]
+    pub fn coord_variance(&self, u: f64) -> f64 {
+        let t = self.bin_of(u);
+        (self.value(t + 1) - u) * (u - self.value(t))
+    }
+
+    /// `ℓ̄ = max_{1<=j<=s} ℓ_{j+1}/ℓ_j` — the max level ratio of Theorem 1
+    /// (includes the ratio to the top endpoint ℓ_{s+1} = 1).
+    pub fn max_ratio(&self) -> f64 {
+        let mut m: f64 = 1.0;
+        for j in 0..self.interior.len() {
+            let hi = if j + 1 < self.interior.len() { self.interior[j + 1] } else { 1.0 };
+            m = m.max(hi / self.interior[j]);
+        }
+        m
+    }
+
+    /// Dimension threshold `d_th = (2/ℓ_1)^{min(q,2)}` of Theorem 1.
+    pub fn d_threshold(&self, q: u32) -> f64 {
+        let qm = q.min(2) as f64;
+        (2.0 / self.l1()).powf(qm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn uniform_levels_are_evenly_spaced() {
+        let l = Levels::uniform(3);
+        assert_eq!(l.s(), 3);
+        assert_eq!(l.alphabet_size(), 5);
+        let full = l.full();
+        assert_eq!(full, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+    }
+
+    #[test]
+    fn exponential_levels_double() {
+        let l = Levels::exponential(3);
+        assert_eq!(l.full(), vec![0.0, 0.125, 0.25, 0.5, 1.0]);
+        assert!((l.max_ratio() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn new_validates_ordering() {
+        assert!(Levels::new(vec![]).is_err());
+        assert!(Levels::new(vec![0.0]).is_err());
+        assert!(Levels::new(vec![0.5, 0.4]).is_err());
+        assert!(Levels::new(vec![0.5, 0.5]).is_err());
+        assert!(Levels::new(vec![0.5, 1.0]).is_err());
+        assert!(Levels::new(vec![0.2, 0.7]).is_ok());
+    }
+
+    #[test]
+    fn bin_of_brackets_u() {
+        let l = Levels::new(vec![0.25, 0.5, 0.75]).unwrap();
+        assert_eq!(l.bin_of(0.0), 0);
+        assert_eq!(l.bin_of(0.1), 0);
+        assert_eq!(l.bin_of(0.25), 1);
+        assert_eq!(l.bin_of(0.3), 1);
+        assert_eq!(l.bin_of(0.74), 2);
+        assert_eq!(l.bin_of(0.75), 3);
+        assert_eq!(l.bin_of(0.99), 3);
+        assert_eq!(l.bin_of(1.0), 3);
+    }
+
+    #[test]
+    fn prop_bin_brackets() {
+        forall("bin_of brackets u", 200, |g| {
+            let s = g.usize_in(1, 40);
+            let l = Levels::new(g.levels(s)).unwrap();
+            let u = g.f64_in(0.0, 1.0);
+            let t = l.bin_of(u);
+            assert!(l.value(t) <= u || u >= 1.0, "lower bracket");
+            if u < 1.0 {
+                assert!(u < l.value(t + 1), "upper bracket u={u} t={t}");
+            }
+        });
+    }
+
+    #[test]
+    fn coord_variance_zero_at_levels() {
+        let l = Levels::uniform(3);
+        for u in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            assert!(l.coord_variance(u).abs() < 1e-15, "u={u}");
+        }
+        // Max at bin midpoints: (w/2)^2 with w = 0.25.
+        let v = l.coord_variance(0.125);
+        assert!((v - 0.015625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_ratio_uniform() {
+        // For uniform s=3: ratios 2 (0.5/0.25), 1.5, 4/3 -> max 2.
+        let l = Levels::uniform(3);
+        assert!((l.max_ratio() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn d_threshold_formula() {
+        let l = Levels::new(vec![0.5]).unwrap();
+        assert!((l.d_threshold(2) - 16.0).abs() < 1e-9); // (2/0.5)^2
+        assert!((l.d_threshold(1) - 4.0).abs() < 1e-9); // (2/0.5)^1
+        assert!((l.d_threshold(u32::MAX) - 16.0).abs() < 1e-9); // min(q,2)=2
+    }
+
+    #[test]
+    fn full_f32_roundtrip() {
+        let l = Levels::uniform(7);
+        let f = l.full_f32();
+        assert_eq!(f.len(), 9);
+        assert_eq!(f[0], 0.0);
+        assert_eq!(f[8], 1.0);
+    }
+}

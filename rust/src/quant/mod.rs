@@ -1,0 +1,30 @@
+//! Unbiased random quantization of stochastic dual vectors — the `Q` half
+//! of the paper's `CODE ∘ Q` pipeline, plus the QAda adaptive-level
+//! machinery (§3.3) and the Theorem 1 / Theorem 2 bound calculators.
+//!
+//! * [`levels`] — level sequences `ℓ = (0, ℓ_1, …, ℓ_s, 1)` (Definition 1):
+//!   uniform (QSGD-style), exponential (NUQSGD-style), adaptive (QAda).
+//! * [`quantizer`] — `Q_ℓ(v) = ‖v‖_q · s ⊙ [q_ℓ(u_1) … q_ℓ(u_d)]`, its
+//!   deterministic core (explicit uniforms — bit-exact against the Pallas
+//!   kernel), dequantization, and the bucketed variant torch_cgx uses.
+//! * [`encode`] — the wire format: per-bucket `[norm f32][symbol codes +
+//!   sign bits]` under a pluggable Ψ ([`crate::coding::SymbolCodec`]).
+//! * [`adaptive`] — sufficient statistics (weighted histogram of normalized
+//!   coordinates), the (QAda) variance objective, coordinate-descent level
+//!   optimization, Proposition 2 symbol probabilities.
+//! * [`bounds`] — Theorem 1 variance bound `ε_Q`, the QSGD/NUQSGD
+//!   comparison bounds, Theorem 2 expected code length.
+
+pub mod adaptive;
+pub mod bounds;
+pub mod encode;
+pub mod levels;
+pub mod quantizer;
+
+pub use adaptive::{optimize_levels, symbol_probs, SufficientStats};
+pub use bounds::{code_length_bound, epsilon_q, nuqsgd_variance_bound, qsgd_variance_bound};
+pub use encode::{decode_vector, encode_vector, WireCodec};
+pub use levels::Levels;
+pub use quantizer::{
+    dequantize, dequantize_into, quantize, quantize_with_uniforms, QuantizedVector,
+};

@@ -1,0 +1,401 @@
+//! The random quantization function `Q_ℓ` of Definition 1.
+//!
+//! `Q_ℓ(v) = ‖v‖_q · s ⊙ [q_ℓ(u_1), …, q_ℓ(u_d)]` where `u_i = |v_i|/‖v‖_q`
+//! and `q_ℓ(u)` rounds `u` to the bracketing level below with probability
+//! `1 − ξ(u)` and above with probability `ξ(u)`,
+//! `ξ(u) = (u − ℓ_τ)/(ℓ_{τ+1} − ℓ_τ)` — which makes `E[Q_ℓ(v)] = v` exactly
+//! (unbiasedness, Theorem 1).
+//!
+//! The stochastic core is factored as a *pure function of explicit
+//! uniforms* ([`quantize_with_uniforms`]) so the Rust hot path and the
+//! Pallas L1 kernel can be tested for **bit-exact** agreement, not merely
+//! statistical agreement (DESIGN.md §5.3).
+//!
+//! Bucketing: torch_cgx-style — the vector is split into independent
+//! buckets of `bucket_size` coordinates, each with its own norm. This
+//! bounds the dynamic range per bucket and is what the paper's experiments
+//! use (bucket size 1024).
+
+use super::levels::Levels;
+use crate::error::{Error, Result};
+use crate::util::{norm_q, Rng};
+
+/// A quantized dual vector: per-bucket norms + per-coordinate level symbols
+/// and signs. `symbols[i] ∈ 0..=s+1` indexes into the level sequence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedVector {
+    /// Original dimension d.
+    pub d: usize,
+    /// Bucket size B (d for whole-vector quantization).
+    pub bucket_size: usize,
+    /// One `L^q` norm per bucket (`ceil(d / B)` of them).
+    pub norms: Vec<f32>,
+    /// Level index per coordinate.
+    pub symbols: Vec<u16>,
+    /// Sign bit per coordinate (true = negative), packed 64 per word.
+    pub sign_words: Vec<u64>,
+}
+
+impl QuantizedVector {
+    pub fn num_buckets(&self) -> usize {
+        self.norms.len()
+    }
+
+    #[inline]
+    pub fn sign_is_neg(&self, i: usize) -> bool {
+        (self.sign_words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    fn set_sign(sign_words: &mut [u64], i: usize, neg: bool) {
+        if neg {
+            sign_words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+
+    /// Count of zero symbols (maps to `p_0` mass of Theorem 2).
+    pub fn num_zeros(&self) -> usize {
+        self.symbols.iter().filter(|&&s| s == 0).count()
+    }
+}
+
+/// Quantize `v` with fresh randomness from `rng`.
+///
+/// `q` is the norm exponent (`u32::MAX` = L∞); `bucket_size = 0` means one
+/// bucket spanning the whole vector.
+pub fn quantize(
+    v: &[f32],
+    levels: &Levels,
+    q: u32,
+    bucket_size: usize,
+    rng: &mut Rng,
+) -> Result<QuantizedVector> {
+    // §Perf: uniforms are drawn inline per coordinate — materializing a
+    // d-sized temp costs ~2 extra memory passes at model scale.
+    quantize_core(v, levels, q, bucket_size, |_| rng.uniform_f32())
+}
+
+/// Deterministic quantization given explicit uniforms (one per coordinate).
+/// This is the function the Pallas kernel implements; equality tests
+/// between the two layers go through here.
+pub fn quantize_with_uniforms(
+    v: &[f32],
+    levels: &Levels,
+    q: u32,
+    bucket_size: usize,
+    uniforms: &[f32],
+) -> Result<QuantizedVector> {
+    if uniforms.len() != v.len() {
+        return Err(Error::Quant(format!(
+            "need one uniform per coordinate: {} vs {}",
+            uniforms.len(),
+            v.len()
+        )));
+    }
+    quantize_core(v, levels, q, bucket_size, |i| uniforms[i])
+}
+
+/// Shared implementation over a per-coordinate uniform source
+/// (monomorphized per caller — no indirect call in the inner loop).
+#[inline]
+fn quantize_core<F: FnMut(usize) -> f32>(
+    v: &[f32],
+    levels: &Levels,
+    q: u32,
+    bucket_size: usize,
+    mut uniform_at: F,
+) -> Result<QuantizedVector> {
+    if v.is_empty() {
+        return Err(Error::Quant("cannot quantize an empty vector".into()));
+    }
+    let d = v.len();
+    let b = if bucket_size == 0 { d } else { bucket_size };
+    let nb = d.div_ceil(b);
+    let mut norms = Vec::with_capacity(nb);
+    let mut symbols = vec![0u16; d];
+    let mut sign_words = vec![0u64; d.div_ceil(64)];
+
+    for bi in 0..nb {
+        let lo = bi * b;
+        let hi = ((bi + 1) * b).min(d);
+        let bucket = &v[lo..hi];
+        let norm = norm_q(bucket, q);
+        norms.push(norm as f32);
+        if norm == 0.0 {
+            continue; // all-zero bucket: symbols stay 0
+        }
+        // §Perf: the whole inner loop runs in f32 (same dtype as the Pallas
+        // kernel — strengthens cross-layer parity) with an O(1) bin index
+        // for uniform levels and an O(log s) search otherwise.
+        let inv = (1.0 / norm) as f32;
+        let table = levels.table_f32();
+        let s = levels.s();
+        if let Some(denom) = levels.uniform_denom() {
+            // tau = floor(u * (s+1)); xi = frac(u * (s+1)).
+            for i in lo..hi {
+                let x = v[i];
+                let u = (x.abs() * inv).min(1.0);
+                let pos = u * denom;
+                let t = (pos as usize).min(s);
+                let xi = pos - t as f32;
+                let up = uniform_at(i) < xi;
+                let sym = t + up as usize;
+                symbols[i] = sym as u16;
+                QuantizedVector::set_sign(&mut sign_words, i, sym != 0 && x < 0.0);
+            }
+        } else {
+            for i in lo..hi {
+                let x = v[i];
+                let u = (x.abs() * inv).min(1.0);
+                // partition point over the f32 table's interior entries
+                let t = if u >= 1.0 {
+                    s
+                } else {
+                    table[1..=s].partition_point(|&l| l <= u)
+                };
+                let lo_l = table[t];
+                let hi_l = table[t + 1];
+                let xi = if hi_l > lo_l { (u - lo_l) / (hi_l - lo_l) } else { 0.0 };
+                let up = uniform_at(i) < xi;
+                let sym = t + up as usize;
+                symbols[i] = sym as u16;
+                // Signs are canonical: only nonzero symbols carry one (the
+                // wire sends no sign for zeros — Lemma 3).
+                QuantizedVector::set_sign(&mut sign_words, i, sym != 0 && x < 0.0);
+            }
+        }
+    }
+    Ok(QuantizedVector { d, bucket_size: b, norms, symbols, sign_words })
+}
+
+/// Reconstruct the (still unbiased) dequantized vector
+/// `‖v‖_q · s_i · ℓ_{symbols[i]}` per bucket.
+pub fn dequantize(qv: &QuantizedVector, levels: &Levels) -> Vec<f32> {
+    let mut out = vec![0.0f32; qv.d];
+    dequantize_into(qv, levels, &mut out);
+    out
+}
+
+/// In-place variant used on the hot path to avoid allocation.
+pub fn dequantize_into(qv: &QuantizedVector, levels: &Levels, out: &mut [f32]) {
+    assert_eq!(out.len(), qv.d);
+    let b = qv.bucket_size;
+    let table = levels.table_f32();
+    for (bi, &norm) in qv.norms.iter().enumerate() {
+        let lo = bi * b;
+        let hi = ((bi + 1) * b).min(qv.d);
+        if norm == 0.0 {
+            out[lo..hi].fill(0.0);
+            continue;
+        }
+        for i in lo..hi {
+            // §Perf: f32 table lookup + branchless sign application.
+            let mag = norm * table[qv.symbols[i] as usize];
+            let sign_bit = ((qv.sign_words[i / 64] >> (i % 64)) & 1) as u32;
+            out[i] = f32::from_bits(mag.to_bits() ^ (sign_bit << 31));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{assert_close, forall};
+    use crate::util::{dist_sq, norm2_sq, Rng};
+
+    fn roundtrip_dim(qv: &QuantizedVector, levels: &Levels) -> Vec<f32> {
+        dequantize(qv, levels)
+    }
+
+    #[test]
+    fn exact_level_values_are_fixed_points() {
+        // v whose normalized coords all sit exactly on levels -> Q(v) = v
+        // regardless of the uniforms.
+        let levels = Levels::uniform(3); // 0, .25, .5, .75, 1
+        let v = [1.0f32, -0.75, 0.5, 0.25, 0.0];
+        // L_inf norm = 1 so u = |v|.
+        for trial in 0..20 {
+            let mut rng = Rng::seed_from(trial);
+            let qv = quantize(&v, &levels, u32::MAX, 0, &mut rng).unwrap();
+            let back = roundtrip_dim(&qv, &levels);
+            for (a, b) in v.iter().zip(back.iter()) {
+                assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn unbiasedness_montecarlo() {
+        let levels = Levels::uniform(4);
+        let mut rng = Rng::seed_from(7);
+        let v: Vec<f32> = rng.gaussian_vec(32, 1.0);
+        let trials = 20_000;
+        let mut mean = vec![0.0f64; v.len()];
+        for _ in 0..trials {
+            let qv = quantize(&v, &levels, 2, 0, &mut rng).unwrap();
+            let back = dequantize(&qv, &levels);
+            for (m, b) in mean.iter_mut().zip(back.iter()) {
+                *m += *b as f64;
+            }
+        }
+        let norm = crate::util::norm2(&v);
+        for (m, x) in mean.iter().zip(v.iter()) {
+            let est = m / trials as f64;
+            // per-coordinate tolerance ~ 4 sigma of the MC error; coordinate
+            // variance is bounded by (norm * bin_width/2)^2.
+            let tol = 4.0 * 0.5 * norm / (trials as f64).sqrt() + 1e-3;
+            assert!(
+                (est - *x as f64).abs() < tol,
+                "biased coordinate: est {est} true {x} tol {tol}"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_matches_analytic_per_coordinate() {
+        // E[(q(u)-u)^2] = (hi-u)(u-lo) for a single coordinate.
+        let levels = Levels::uniform(1); // levels 0, 0.5, 1
+        let u = 0.3f32;
+        let v = [u, 1.0]; // second coord pins Linf norm to 1
+        let mut rng = Rng::seed_from(3);
+        let trials = 200_000;
+        let mut sq = 0.0f64;
+        for _ in 0..trials {
+            let qv = quantize(&v, &levels, u32::MAX, 0, &mut rng).unwrap();
+            let back = dequantize(&qv, &levels);
+            let e = back[0] as f64 - u as f64;
+            sq += e * e;
+        }
+        let emp = sq / trials as f64;
+        let analytic = (0.5 - 0.3) * (0.3 - 0.0);
+        assert_close(emp, analytic, 5e-4);
+    }
+
+    #[test]
+    fn zero_vector_quantizes_to_zero() {
+        let levels = Levels::uniform(3);
+        let v = [0.0f32; 16];
+        let mut rng = Rng::seed_from(1);
+        let qv = quantize(&v, &levels, 2, 4, &mut rng).unwrap();
+        assert!(dequantize(&qv, &levels).iter().all(|&x| x == 0.0));
+        assert_eq!(qv.num_zeros(), 16);
+    }
+
+    #[test]
+    fn bucketing_isolates_norms() {
+        let levels = Levels::uniform(3);
+        // First bucket tiny values, second bucket huge: with one global norm
+        // the tiny bucket would collapse to 0/ℓ1; with buckets it survives.
+        let mut v = vec![0.001f32; 4];
+        v.extend_from_slice(&[1000.0f32; 4]);
+        let mut rng = Rng::seed_from(5);
+        let qv = quantize(&v, &levels, 2, 4, &mut rng).unwrap();
+        assert_eq!(qv.num_buckets(), 2);
+        assert!(qv.norms[0] < 1.0 && qv.norms[1] > 100.0);
+        let back = dequantize(&qv, &levels);
+        // Relative error within the first bucket is bounded by its own norm.
+        for i in 0..4 {
+            assert!(back[i].abs() <= qv.norms[0] * 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_with_explicit_uniforms() {
+        let levels = Levels::exponential(4);
+        let mut rng = Rng::seed_from(11);
+        let v = rng.gaussian_vec(100, 2.0);
+        let uniforms = rng.uniform_vec(100);
+        let a = quantize_with_uniforms(&v, &levels, 2, 32, &uniforms).unwrap();
+        let b = quantize_with_uniforms(&v, &levels, 2, 32, &uniforms).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn uniform_below_xi_rounds_up() {
+        // u = 0.3 with levels {0,0.5,1}: xi = 0.6. uniform 0.59 -> up (0.5),
+        // uniform 0.61 -> down (0).
+        let levels = Levels::uniform(1);
+        let v = [0.3f32, 1.0];
+        let up = quantize_with_uniforms(&v, &levels, u32::MAX, 0, &[0.59, 0.0]).unwrap();
+        assert_eq!(up.symbols[0], 1);
+        let down = quantize_with_uniforms(&v, &levels, u32::MAX, 0, &[0.61, 0.0]).unwrap();
+        assert_eq!(down.symbols[0], 0);
+    }
+
+    #[test]
+    fn l1_and_l2_norms_supported() {
+        let levels = Levels::uniform(7);
+        let mut rng = Rng::seed_from(13);
+        let v = rng.gaussian_vec(64, 1.0);
+        for q in [1u32, 2, 3, u32::MAX] {
+            let qv = quantize(&v, &levels, q, 0, &mut rng).unwrap();
+            let back = dequantize(&qv, &levels);
+            // Sanity: the per-draw error stays within a few multiples of the
+            // Theorem 1 variance factor for this normalization.
+            let err = dist_sq(&v, &back);
+            let eps = crate::quant::bounds::epsilon_q(&levels, v.len(), q).max(1.0);
+            assert!(err < 4.0 * eps * norm2_sq(&v), "q={q} err {err} eps {eps}");
+        }
+    }
+
+    #[test]
+    fn error_paths() {
+        let levels = Levels::uniform(3);
+        assert!(quantize_with_uniforms(&[], &levels, 2, 0, &[]).is_err());
+        assert!(quantize_with_uniforms(&[1.0], &levels, 2, 0, &[0.5, 0.5]).is_err());
+    }
+
+    #[test]
+    fn prop_symbols_in_alphabet_and_signs_match() {
+        forall("quantizer invariants", 100, |g| {
+            let s = g.usize_in(1, 30);
+            let levels = Levels::new(g.levels(s)).unwrap();
+            let d = g.usize_in(1, 300);
+            let v = g.f32_vec(d, -5.0, 5.0);
+            let bucket = *g.choose(&[0usize, 7, 64, 1024]);
+            let uniforms: Vec<f32> = (0..d).map(|_| g.f32_in(0.0, 1.0)).collect();
+            let q = *g.choose(&[1u32, 2, u32::MAX]);
+            let qv = quantize_with_uniforms(&v, &levels, q, bucket, &uniforms).unwrap();
+            for (i, &sym) in qv.symbols.iter().enumerate() {
+                assert!((sym as usize) < levels.alphabet_size());
+                if v[i] < 0.0 && sym != 0 {
+                    assert!(qv.sign_is_neg(i), "negative coord must keep sign");
+                }
+            }
+            // Reconstruction magnitude never exceeds the bucket norm.
+            let back = dequantize(&qv, &levels);
+            let b = if bucket == 0 { d } else { bucket };
+            for (i, &x) in back.iter().enumerate() {
+                let nb = qv.norms[i / b];
+                assert!(x.abs() <= nb * 1.0 + 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_quantization_error_bounded_by_theorem1() {
+        use crate::quant::bounds::epsilon_q;
+        forall("thm1 per-draw usually holds in expectation", 30, |g| {
+            let s = g.usize_in(1, 15);
+            let levels = Levels::uniform(s);
+            let d = g.usize_in(4, 128);
+            let v = g.gaussian_vec(d, 1.0);
+            if crate::util::norm2_sq(&v) == 0.0 {
+                return;
+            }
+            // Empirical E over 300 draws.
+            let mut rng = Rng::seed_from(g.case as u64 + 99);
+            let mut acc = 0.0;
+            let trials = 300;
+            for _ in 0..trials {
+                let qv = quantize(&v, &levels, 2, 0, &mut rng).unwrap();
+                let back = dequantize(&qv, &levels);
+                acc += dist_sq(&v, &back);
+            }
+            let emp = acc / trials as f64;
+            let bound = epsilon_q(&levels, d, 2) * norm2_sq(&v);
+            // Allow 20% MC slack.
+            assert!(emp <= bound * 1.2 + 1e-9, "emp {emp} > bound {bound}");
+        });
+    }
+}

@@ -1,0 +1,209 @@
+//! Typed view of `artifacts/manifest.json` (emitted by `python/compile/aot.py`).
+
+use super::json::Json;
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// Tensor metadata (shape + dtype string).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_array)
+            .ok_or_else(|| Error::Manifest("tensor missing shape".into()))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| Error::Manifest("bad dim".into())))
+            .collect::<Result<_>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Manifest("tensor missing dtype".into()))?
+            .to_string();
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+/// One AOT entry point.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// LM model metadata.
+#[derive(Clone, Debug)]
+pub struct LmMeta {
+    pub preset: String,
+    pub params: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+}
+
+/// GAN model metadata.
+#[derive(Clone, Debug)]
+pub struct GanMeta {
+    pub params_g: usize,
+    pub params_d: usize,
+    pub nz: usize,
+    pub batch: usize,
+    pub data_dim: usize,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub lm: LmMeta,
+    pub gan: GanMeta,
+    pub quantize_d: usize,
+    pub quantize_levels: usize,
+    pub fused_d: usize,
+    pub entries: std::collections::BTreeMap<String, EntryMeta>,
+    pub lm_init_file: String,
+    pub gan_g_init_file: String,
+    pub gan_d_init_file: String,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let src = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> Result<Self> {
+        let j = Json::parse(src)?;
+        let u = |path: &[&str]| -> Result<usize> {
+            j.at(path)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Manifest(format!("missing {path:?}")))
+        };
+        let s = |path: &[&str]| -> Result<String> {
+            j.at(path)
+                .and_then(Json::as_str)
+                .map(|x| x.to_string())
+                .ok_or_else(|| Error::Manifest(format!("missing {path:?}")))
+        };
+        let lm = LmMeta {
+            preset: s(&["lm", "preset"])?,
+            params: u(&["lm", "params"])?,
+            vocab: u(&["lm", "vocab"])?,
+            d_model: u(&["lm", "d_model"])?,
+            n_layers: u(&["lm", "n_layers"])?,
+            seq: u(&["lm", "seq"])?,
+            batch: u(&["lm", "batch"])?,
+        };
+        let gan = GanMeta {
+            params_g: u(&["gan", "params_g"])?,
+            params_d: u(&["gan", "params_d"])?,
+            nz: u(&["gan", "nz"])?,
+            batch: u(&["gan", "batch"])?,
+            data_dim: u(&["gan", "data_dim"])?,
+        };
+        let mut entries = std::collections::BTreeMap::new();
+        let entries_json = j
+            .get("entries")
+            .and_then(Json::as_object)
+            .ok_or_else(|| Error::Manifest("missing entries".into()))?;
+        for (name, e) in entries_json {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Manifest(format!("{name}: missing file")))?
+                .to_string();
+            let parse_tensors = |key: &str| -> Result<Vec<TensorMeta>> {
+                e.get(key)
+                    .and_then(Json::as_array)
+                    .ok_or_else(|| Error::Manifest(format!("{name}: missing {key}")))?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntryMeta { file, inputs: parse_tensors("inputs")?, outputs: parse_tensors("outputs")? },
+            );
+        }
+        Ok(Manifest {
+            lm,
+            gan,
+            quantize_d: u(&["quantize", "d"])?,
+            quantize_levels: u(&["quantize", "levels"])?,
+            fused_d: u(&["fused_extragrad", "d"])?,
+            entries,
+            lm_init_file: s(&["inits", "lm"])?,
+            gan_g_init_file: s(&["inits", "gan_g"])?,
+            gan_d_init_file: s(&["inits", "gan_d"])?,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries.get(name).ok_or_else(|| {
+            Error::Manifest(format!(
+                "no entry `{name}` in manifest (have: {:?})",
+                self.entries.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "lm": {"preset": "small", "params": 1000, "vocab": 256, "d_model": 128,
+             "n_layers": 2, "n_heads": 4, "seq": 64, "d_ff": 512, "batch": 8},
+      "gan": {"params_g": 100, "params_d": 90, "nz": 4, "hidden": 64,
+              "data_dim": 2, "batch": 256, "gp_lambda": 1.0},
+      "quantize": {"d": 4096, "levels": 16},
+      "fused_extragrad": {"d": 4096},
+      "entries": {
+        "lm_step": {"file": "lm_step.hlo.txt",
+          "inputs": [{"shape": [1000], "dtype": "float32"},
+                     {"shape": [8, 64], "dtype": "int32"}],
+          "outputs": [{"shape": [], "dtype": "float32"},
+                      {"shape": [1000], "dtype": "float32"}]}
+      },
+      "inits": {"lm": "lm.f32", "gan_g": "g.f32", "gan_d": "d.f32"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.lm.preset, "small");
+        assert_eq!(m.lm.params, 1000);
+        assert_eq!(m.gan.params_d, 90);
+        assert_eq!(m.quantize_d, 4096);
+        let e = m.entry("lm_step").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[1].shape, vec![8, 64]);
+        assert_eq!(e.inputs[1].dtype, "int32");
+        assert_eq!(e.outputs[0].numel(), 1);
+        assert!(m.entry("missing").is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        let no_entries = SAMPLE.replace("\"entries\"", "\"nentries\"");
+        assert!(Manifest::parse(&no_entries).is_err());
+    }
+}

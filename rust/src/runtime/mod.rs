@@ -1,0 +1,349 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! The compile path (`make artifacts`) runs Python exactly once; from then
+//! on this module is the only contact point with the model — the request
+//! path is pure Rust + XLA:
+//!
+//! ```text
+//! PjRtClient::cpu()
+//!   └─ HloModuleProto::from_text_file("artifacts/<entry>.hlo.txt")
+//!        └─ XlaComputation::from_proto → client.compile → execute
+//! ```
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! Executables are compiled once and cached; `Runtime` is `Send` but not
+//! `Sync` — give each worker thread its own instance or route through the
+//! leader.
+
+pub mod json;
+pub mod manifest;
+
+pub use manifest::{EntryMeta, Manifest, TensorMeta};
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Input tensor for an execution: f32 or i32, with a shape.
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> Arg<'a> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Arg::F32(data, shape) => {
+                check_len(data.len(), shape)?;
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Arg::I32(data, shape) => {
+                check_len(data.len(), shape)?;
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+fn check_len(len: usize, shape: &[usize]) -> Result<()> {
+    let want: usize = shape.iter().product();
+    if len != want {
+        return Err(Error::Runtime(format!("arg has {len} elements, shape {shape:?} wants {want}")));
+    }
+    Ok(())
+}
+
+/// One loaded artifact set: PJRT client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory produced by `make artifacts`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            dir.display()
+        );
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) the named entry.
+    pub fn prepare(&mut self, entry: &str) -> Result<()> {
+        if self.cache.contains_key(entry) {
+            return Ok(());
+        }
+        let meta = self.manifest.entry(entry)?;
+        let path = self.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `entry` with `args`; returns the flattened f32 contents of
+    /// every output leaf (scalars become length-1 vectors). Integer outputs
+    /// are rejected — all our entry points return f32.
+    pub fn run(&mut self, entry: &str, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        self.prepare(entry)?;
+        let meta = self.manifest.entry(entry)?;
+        if args.len() != meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{entry}: got {} args, manifest says {}",
+                args.len(),
+                meta.inputs.len()
+            )));
+        }
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let exe = self.cache.get(entry).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime(format!("{entry}: empty result")))?;
+        // aot.py lowers with return_tuple=True: single tuple literal.
+        let tuple = first.to_literal_sync()?;
+        let leaves = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(leaves.len());
+        for leaf in leaves {
+            out.push(leaf.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Convenience: run an entry that returns `(scalar, vector)` — the
+    /// shape of every `*_step` training entry.
+    pub fn run_loss_grad(&mut self, entry: &str, args: &[Arg]) -> Result<(f32, Vec<f32>)> {
+        let mut outs = self.run(entry, args)?;
+        if outs.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "{entry}: expected (loss, grads), got {} outputs",
+                outs.len()
+            )));
+        }
+        let grads = outs.pop().unwrap();
+        let loss = outs.pop().unwrap();
+        Ok((loss.first().copied().unwrap_or(f32::NAN), grads))
+    }
+
+    /// Load a raw little-endian f32 blob (e.g. `lm_params_init.f32`).
+    pub fn load_f32_blob(&self, name: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(name))?;
+        if bytes.len() % 4 != 0 {
+            return Err(Error::Runtime(format!("{name}: length {} not multiple of 4", bytes.len())));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Locate the artifacts directory: `$QGENX_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (walking up from cwd).
+pub fn default_artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("QGENX_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are skipped (not
+    /// failed) when the artifacts are absent so `cargo test` stays green in
+    /// a fresh checkout. The Makefile's `test` target builds artifacts
+    /// first, so CI always exercises them.
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir()?;
+        Some(Runtime::open(dir).expect("artifacts exist but failed to open"))
+    }
+
+    #[test]
+    fn open_and_manifest() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(rt.manifest().lm.params > 100_000);
+        assert!(rt.manifest().entry("quantize").is_ok());
+        assert!(rt.manifest().entry("nope").is_err());
+    }
+
+    #[test]
+    fn quantize_artifact_matches_rust_quantizer() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let d = rt.manifest().quantize_d;
+        let nl = rt.manifest().quantize_levels;
+        let mut rng = crate::util::Rng::seed_from(7);
+        let v = rng.gaussian_vec(d, 1.0);
+        let uniforms = rng.uniform_vec(d);
+        // uniform levels 0..1 with nl total points = nl - 2 interior
+        let levels = crate::quant::Levels::uniform(nl - 2);
+        let lv = levels.full_f32();
+        let norm = [crate::util::norm2(&v) as f32];
+
+        let outs = rt
+            .run(
+                "quantize",
+                &[
+                    Arg::F32(&v, &[d]),
+                    Arg::F32(&lv, &[nl]),
+                    Arg::F32(&uniforms, &[d]),
+                    Arg::F32(&norm, &[1]),
+                ],
+            )
+            .unwrap();
+        let hlo_out = &outs[0];
+
+        // Rust-native quantization with the same uniforms.
+        let qv = crate::quant::quantize_with_uniforms(&v, &levels, 2, 0, &uniforms).unwrap();
+        let rust_out = crate::quant::dequantize(&qv, &levels);
+
+        // Cross-layer agreement: identical up to f32-vs-f64 boundary
+        // rounding. Count mismatches; they must be rare and adjacent-level.
+        let mut mismatches = 0;
+        for i in 0..d {
+            let a = hlo_out[i];
+            let b = rust_out[i];
+            if (a - b).abs() > 1e-6 * norm[0] {
+                mismatches += 1;
+                // any disagreement must be one quantization bin
+                let bin = (a - b).abs() / norm[0];
+                assert!(bin < 0.2, "coordinate {i}: {a} vs {b} differ by more than a bin");
+            }
+        }
+        assert!(
+            (mismatches as f64) < 0.001 * d as f64 + 2.0,
+            "{mismatches}/{d} mismatches between HLO and rust quantizers"
+        );
+    }
+
+    #[test]
+    fn lm_step_runs_and_loss_near_log_vocab() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = rt.manifest().clone();
+        let params = rt.load_f32_blob(&m.lm_init_file).unwrap();
+        assert_eq!(params.len(), m.lm.params);
+        let mut rng = crate::util::Rng::seed_from(3);
+        let tokens: Vec<i32> =
+            (0..m.lm.batch * m.lm.seq).map(|_| rng.below(m.lm.vocab as u64) as i32).collect();
+        let (loss, grads) = rt
+            .run_loss_grad(
+                "lm_step",
+                &[
+                    Arg::F32(&params, &[m.lm.params]),
+                    Arg::I32(&tokens, &[m.lm.batch, m.lm.seq]),
+                ],
+            )
+            .unwrap();
+        assert!(loss.is_finite());
+        let logv = (m.lm.vocab as f32).ln();
+        assert!((loss - logv).abs() < 1.0, "loss {loss} vs ln V {logv}");
+        assert_eq!(grads.len(), m.lm.params);
+        assert!(crate::util::norm2(&grads) > 0.0);
+    }
+
+    #[test]
+    fn gan_steps_run() {
+        let Some(mut rt) = runtime() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = rt.manifest().clone();
+        let tg = rt.load_f32_blob(&m.gan_g_init_file).unwrap();
+        let td = rt.load_f32_blob(&m.gan_d_init_file).unwrap();
+        let b = m.gan.batch;
+        let mut rng = crate::util::Rng::seed_from(4);
+        let real = rng.gaussian_vec(b * 2, 1.0);
+        let z = rng.gaussian_vec(b * m.gan.nz, 1.0);
+        let eps = rng.uniform_vec(b);
+        let (ld, gd) = rt
+            .run_loss_grad(
+                "gan_disc_step",
+                &[
+                    Arg::F32(&td, &[m.gan.params_d]),
+                    Arg::F32(&tg, &[m.gan.params_g]),
+                    Arg::F32(&real, &[b, 2]),
+                    Arg::F32(&z, &[b, m.gan.nz]),
+                    Arg::F32(&eps, &[b, 1]),
+                ],
+            )
+            .unwrap();
+        assert!(ld.is_finite());
+        assert_eq!(gd.len(), m.gan.params_d);
+        let (lg, gg) = rt
+            .run_loss_grad(
+                "gan_gen_step",
+                &[
+                    Arg::F32(&td, &[m.gan.params_d]),
+                    Arg::F32(&tg, &[m.gan.params_g]),
+                    Arg::F32(&z, &[b, m.gan.nz]),
+                ],
+            )
+            .unwrap();
+        assert!(lg.is_finite());
+        assert_eq!(gg.len(), m.gan.params_g);
+        // sample
+        let outs = rt
+            .run(
+                "gan_sample",
+                &[Arg::F32(&tg, &[m.gan.params_g]), Arg::F32(&z, &[b, m.gan.nz])],
+            )
+            .unwrap();
+        assert_eq!(outs[0].len(), b * 2);
+    }
+
+    #[test]
+    fn arg_shape_validation() {
+        let a = Arg::F32(&[1.0, 2.0], &[3]);
+        assert!(a.to_literal().is_err());
+        let b = Arg::F32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert!(b.to_literal().is_ok());
+    }
+}

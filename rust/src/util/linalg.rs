@@ -1,0 +1,270 @@
+//! Dense vector kernels used on the coordinator hot path.
+//!
+//! Everything operates on `&[f32]` — the universal representation of a
+//! stochastic dual vector in this crate (see DESIGN.md §5.2). The functions
+//! are deliberately simple and branch-free so that LLVM autovectorizes
+//! them; `perf_hotpath` benches confirm they are memory-bound.
+
+/// `y += alpha * x` (axpy).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y = alpha * x` (overwrite-scale).
+#[inline]
+pub fn scale_into(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi = alpha * xi;
+    }
+}
+
+/// In-place `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Dot product in f64 accumulation (stable for large d).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        acc += (*a as f64) * (*b as f64);
+    }
+    acc
+}
+
+/// Squared Euclidean norm (f64 accumulation).
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for a in x {
+        acc += (*a as f64) * (*a as f64);
+    }
+    acc
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// L1 norm.
+#[inline]
+pub fn norm1(x: &[f32]) -> f64 {
+    x.iter().map(|a| a.abs() as f64).sum()
+}
+
+/// L∞ norm.
+#[inline]
+pub fn norm_inf(x: &[f32]) -> f64 {
+    x.iter().fold(0.0f64, |m, a| m.max(a.abs() as f64))
+}
+
+/// General `L^q` norm for integer `q >= 1`; `q == u32::MAX` denotes L∞.
+/// These are the normalizations Definition 1 of the paper supports.
+pub fn norm_q(x: &[f32], q: u32) -> f64 {
+    match q {
+        1 => norm1(x),
+        2 => norm2(x),
+        u32::MAX => norm_inf(x),
+        q => {
+            let p = q as f64;
+            let mut acc = 0.0f64;
+            // Scale by max for overflow safety at large q.
+            let m = norm_inf(x);
+            if m == 0.0 {
+                return 0.0;
+            }
+            for a in x {
+                acc += ((a.abs() as f64) / m).powf(p);
+            }
+            m * acc.powf(1.0 / p)
+        }
+    }
+}
+
+/// Squared distance ||x - y||_2^2.
+#[inline]
+pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0f64;
+    for (a, b) in x.iter().zip(y.iter()) {
+        let d = (*a as f64) - (*b as f64);
+        acc += d * d;
+    }
+    acc
+}
+
+/// Elementwise sum of `K` vectors scaled by `1/K` — the aggregation step of
+/// Algorithm 1 (`(1/K) Σ_k V̂_k`). Writes into `out`.
+pub fn mean_into(vs: &[&[f32]], out: &mut [f32]) {
+    assert!(!vs.is_empty());
+    let k = vs.len() as f32;
+    out.fill(0.0);
+    for v in vs {
+        debug_assert_eq!(v.len(), out.len());
+        for (o, x) in out.iter_mut().zip(v.iter()) {
+            *o += x;
+        }
+    }
+    for o in out.iter_mut() {
+        *o /= k;
+    }
+}
+
+/// out = x - y.
+#[inline]
+pub fn sub_into(x: &[f32], y: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = x[i] - y[i];
+    }
+}
+
+/// Dense matrix-vector product `out = M x` with `M` row-major `(rows, cols)`.
+pub fn matvec(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        out[r] = dot(row, x) as f32;
+    }
+}
+
+/// Transposed matrix-vector product `out = M^T x`.
+pub fn matvec_t(m: &[f32], rows: usize, cols: usize, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(x.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
+    for r in 0..rows {
+        let row = &m[r * cols..(r + 1) * cols];
+        axpy(x[r], row, out);
+    }
+}
+
+/// Project `x` onto the probability simplex (Duchi et al. 2008 algorithm).
+/// Used by the matrix-game example / oracle.
+pub fn project_simplex(x: &mut [f32]) {
+    let n = x.len();
+    let mut u: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0f64;
+    let mut rho = 0usize;
+    let mut theta = 0.0f64;
+    for (i, &ui) in u.iter().enumerate() {
+        css += ui;
+        let t = (css - 1.0) / (i as f64 + 1.0);
+        if ui - t > 0.0 {
+            rho = i;
+            theta = t;
+        }
+    }
+    let _ = rho;
+    for v in x.iter_mut() {
+        *v = ((*v as f64) - theta).max(0.0) as f32;
+    }
+    // Renormalize tiny drift.
+    let s: f64 = x.iter().map(|&v| v as f64).sum();
+    if s > 0.0 {
+        for v in x.iter_mut() {
+            *v = ((*v as f64) / s) as f32;
+        }
+    } else {
+        let uniform = 1.0 / n as f32;
+        x.fill(uniform);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [1.0, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn norms_match_known_values() {
+        let v = [3.0f32, -4.0];
+        assert!((norm2(&v) - 5.0).abs() < 1e-9);
+        assert!((norm1(&v) - 7.0).abs() < 1e-9);
+        assert!((norm_inf(&v) - 4.0).abs() < 1e-9);
+        assert!((norm_q(&v, 2) - 5.0).abs() < 1e-9);
+        assert!((norm_q(&v, 1) - 7.0).abs() < 1e-9);
+        assert!((norm_q(&v, u32::MAX) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm_q_interpolates() {
+        // L1 >= Lq >= Linf for q in between.
+        let v = [1.0f32, 2.0, -3.0, 0.5];
+        let l1 = norm_q(&v, 1);
+        let l3 = norm_q(&v, 3);
+        let l8 = norm_q(&v, 8);
+        let li = norm_q(&v, u32::MAX);
+        assert!(l1 >= l3 && l3 >= l8 && l8 >= li);
+    }
+
+    #[test]
+    fn mean_into_averages() {
+        let a = [2.0f32, 4.0];
+        let b = [4.0f32, 8.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, [3.0, 6.0]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        // M = [[1,2],[3,4]], x = [1,1] -> [3,7]; M^T [1,1] -> [4,6]
+        let m = [1.0f32, 2.0, 3.0, 4.0];
+        let x = [1.0f32, 1.0];
+        let mut out = [0.0f32; 2];
+        matvec(&m, 2, 2, &x, &mut out);
+        assert_eq!(out, [3.0, 7.0]);
+        matvec_t(&m, 2, 2, &x, &mut out);
+        assert_eq!(out, [4.0, 6.0]);
+    }
+
+    #[test]
+    fn simplex_projection_properties() {
+        let mut x = [0.4f32, 0.3, -1.0, 2.0];
+        project_simplex(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x.iter().all(|&v| v >= 0.0));
+        // Already-a-distribution is (nearly) fixed.
+        let mut y = [0.25f32; 4];
+        project_simplex(&mut y);
+        for v in y {
+            assert!((v - 0.25).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dist_and_dot() {
+        let a = [1.0f32, 2.0];
+        let b = [4.0f32, 6.0];
+        assert!((dist_sq(&a, &b) - 25.0).abs() < 1e-9);
+        assert!((dot(&a, &b) - 16.0).abs() < 1e-9);
+    }
+}

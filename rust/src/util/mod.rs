@@ -1,0 +1,16 @@
+//! Foundation utilities: PRNG, vector math, running statistics.
+//!
+//! The build image is offline and the `rand` crate is unavailable, so
+//! [`rng`] implements xoshiro256++ (Blackman & Vigna) with SplitMix64
+//! seeding and Box-Muller Gaussian sampling. [`linalg`] provides the small
+//! set of dense vector kernels the coordinator hot path needs, and
+//! [`stats`] the running/empirical statistics used by QAda and the bench
+//! harness.
+
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+
+pub use linalg::*;
+pub use rng::Rng;
+pub use stats::{ecdf::WeightedEcdf, Histogram, RunningStats};

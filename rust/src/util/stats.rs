@@ -1,0 +1,333 @@
+//! Running and empirical statistics.
+//!
+//! * [`RunningStats`] — Welford mean/variance, used by the bench harness and
+//!   by the empirical-variance checks against Theorem 1.
+//! * [`Histogram`] — fixed-bin histogram over `[0,1]`, the sufficient
+//!   statistic QAda computes on normalized coordinates ("each processor
+//!   computes sufficient statistics of a parametric distribution").
+//! * [`ecdf::WeightedEcdf`] — the weighted empirical CDF `F̃(u) = Σ_j λ_j F_j(u)`
+//!   of Eq. (QAda), with the λ_j = ‖g_j‖_q² / Σ ‖g_j‖_q² weighting.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct RunningStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        RunningStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.stddev() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// Fixed-width histogram over `[0, 1]` — QAda's sufficient statistic for the
+/// distribution of normalized coordinates `u_i = |v_i| / ‖v‖_q`.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<f64>,
+    total: f64,
+}
+
+impl Histogram {
+    pub fn new(bins: usize) -> Self {
+        assert!(bins > 0);
+        Histogram { counts: vec![0.0; bins], total: 0.0 }
+    }
+
+    pub fn bins(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Add one observation `u ∈ [0,1]` with weight `w`.
+    #[inline]
+    pub fn push_weighted(&mut self, u: f64, w: f64) {
+        let b = ((u * self.counts.len() as f64) as usize).min(self.counts.len() - 1);
+        self.counts[b] += w;
+        self.total += w;
+    }
+
+    pub fn push(&mut self, u: f64) {
+        self.push_weighted(u, 1.0);
+    }
+
+    /// Add every normalized coordinate of `v` (coordinates are normalized by
+    /// `norm`), each with weight `w`. Zero coordinates are included — they
+    /// matter for the `p_0` symbol probability of Theorem 2.
+    pub fn push_normalized(&mut self, v: &[f32], norm: f64, w: f64) {
+        if norm == 0.0 {
+            return;
+        }
+        for &x in v {
+            self.push_weighted((x.abs() as f64 / norm).min(1.0), w);
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    /// Probability mass of bin `b`.
+    pub fn pmf(&self, b: usize) -> f64 {
+        if self.total == 0.0 {
+            0.0
+        } else {
+            self.counts[b] / self.total
+        }
+    }
+
+    /// CDF evaluated at `u` (linear interpolation within the bin).
+    pub fn cdf(&self, u: f64) -> f64 {
+        if self.total == 0.0 {
+            return 0.0;
+        }
+        let u = u.clamp(0.0, 1.0);
+        let nb = self.counts.len() as f64;
+        let pos = u * nb;
+        let b = (pos as usize).min(self.counts.len() - 1);
+        let frac = pos - b as f64;
+        let below: f64 = self.counts[..b].iter().sum();
+        (below + self.counts[b] * frac) / self.total
+    }
+
+    /// Merge another histogram (same bin count) into this one — used when
+    /// the leader pools worker sufficient statistics.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Raw bin masses (for serialization across workers).
+    pub fn bin_counts(&self) -> &[f64] {
+        &self.counts
+    }
+
+    /// Add raw bin masses (deserialization counterpart of `bin_counts`).
+    pub fn add_counts(&mut self, counts: &[f64]) {
+        assert_eq!(counts.len(), self.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(counts.iter()) {
+            *a += b;
+            self.total += b;
+        }
+    }
+
+    /// Empirical quantile (inverse CDF).
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.total == 0.0 {
+            return 0.0;
+        }
+        let target = p.clamp(0.0, 1.0) * self.total;
+        let mut acc = 0.0;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if acc + c >= target && c > 0.0 {
+                let frac = (target - acc) / c;
+                return (b as f64 + frac) / self.counts.len() as f64;
+            }
+            acc += c;
+        }
+        1.0
+    }
+}
+
+pub mod ecdf {
+    //! Weighted empirical CDF over exact sample points (used by tests and by
+    //! the level optimizer when the sample count is small enough to keep
+    //! exactly; the histogram path is the streaming approximation).
+
+    /// Weighted ECDF `F̃(u) = Σ_j λ_j 1{u_j <= u}` over stored samples.
+    #[derive(Clone, Debug, Default)]
+    pub struct WeightedEcdf {
+        /// (value, weight), sorted by value after `finalize`.
+        samples: Vec<(f64, f64)>,
+        total_w: f64,
+        sorted: bool,
+    }
+
+    impl WeightedEcdf {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn push(&mut self, u: f64, w: f64) {
+            self.samples.push((u, w));
+            self.total_w += w;
+            self.sorted = false;
+        }
+
+        pub fn len(&self) -> usize {
+            self.samples.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.samples.is_empty()
+        }
+
+        pub fn finalize(&mut self) {
+            self.samples
+                .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            self.sorted = true;
+        }
+
+        /// CDF at `u`; requires `finalize` first.
+        pub fn cdf(&self, u: f64) -> f64 {
+            assert!(self.sorted, "call finalize() before cdf()");
+            if self.total_w == 0.0 {
+                return 0.0;
+            }
+            // Binary search for the last sample <= u.
+            let mut lo = 0usize;
+            let mut hi = self.samples.len();
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if self.samples[mid].0 <= u {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            let mass: f64 = self.samples[..lo].iter().map(|s| s.1).sum();
+            mass / self.total_w
+        }
+
+        /// Iterate over (value, normalized weight) pairs in sorted order.
+        pub fn iter_normalized(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+            assert!(self.sorted);
+            let t = self.total_w;
+            self.samples.iter().map(move |&(u, w)| (u, w / t))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_stats_known() {
+        let mut s = RunningStats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        // population var is 4 -> sample var = 32/7
+        assert!((s.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn histogram_cdf_monotone_and_bounded() {
+        let mut h = Histogram::new(64);
+        for i in 0..1000 {
+            h.push((i as f64) / 1000.0);
+        }
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let u = i as f64 / 20.0;
+            let c = h.cdf(u);
+            assert!(c >= prev - 1e-12);
+            assert!((0.0..=1.0).contains(&c));
+            prev = c;
+        }
+        assert!((h.cdf(1.0) - 1.0).abs() < 1e-9);
+        // Uniform data -> cdf(u) ~ u
+        assert!((h.cdf(0.5) - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn histogram_quantile_inverts_cdf() {
+        let mut h = Histogram::new(128);
+        for i in 0..10_000 {
+            h.push((i as f64) / 10_000.0);
+        }
+        for p in [0.1, 0.25, 0.5, 0.9] {
+            let q = h.quantile(p);
+            assert!((h.cdf(q) - p).abs() < 0.02, "p={p} q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_pools_mass() {
+        let mut a = Histogram::new(8);
+        let mut b = Histogram::new(8);
+        a.push(0.1);
+        b.push(0.9);
+        a.merge(&b);
+        assert_eq!(a.total(), 2.0);
+        assert!((a.cdf(0.5) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ecdf_weighted() {
+        let mut e = ecdf::WeightedEcdf::new();
+        e.push(0.2, 1.0);
+        e.push(0.8, 3.0);
+        e.finalize();
+        assert!((e.cdf(0.1) - 0.0).abs() < 1e-12);
+        assert!((e.cdf(0.5) - 0.25).abs() < 1e-12);
+        assert!((e.cdf(0.9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_push_normalized_counts_zeros() {
+        let mut h = Histogram::new(4);
+        h.push_normalized(&[0.0, 0.5, 1.0], 1.0, 1.0);
+        assert_eq!(h.total(), 3.0);
+        // zero lands in first bin
+        assert!(h.pmf(0) > 0.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! End-to-end stack tests over the AOT artifacts: HLO ⇄ Rust quantizer
+//! parity, full GAN/LM driver smoke, CLI binary invocation.
+//!
+//! These tests skip (pass vacuously with a note) when `artifacts/` has not
+//! been built; `make test` always builds artifacts first.
+
+use qgenx::net::NetModel;
+use qgenx::runtime::{default_artifacts_dir, Arg, Runtime};
+use qgenx::train::{GanMode, GanTrainConfig, GanTrainer, LmTrainConfig, LmTrainer};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir()?;
+    Some(Runtime::open(dir).expect("artifacts present but unreadable"))
+}
+
+#[test]
+fn pallas_quantize_artifact_agrees_with_rust_hot_path_statistically() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let d = rt.manifest().quantize_d;
+    let nl = rt.manifest().quantize_levels;
+    let levels = qgenx::quant::Levels::uniform(nl - 2);
+    let mut rng = qgenx::util::Rng::seed_from(99);
+
+    // Over several random draws, HLO-vs-Rust disagreements must be rare
+    // (f32 vs f64 boundary rounding only) and one-bin-sized.
+    let mut total_mismatch = 0usize;
+    for trial in 0..5 {
+        let v = rng.gaussian_vec(d, 1.0 + trial as f64 * 0.3);
+        let uniforms = rng.uniform_vec(d);
+        let norm = [qgenx::util::norm2(&v) as f32];
+        let hlo = rt
+            .run(
+                "quantize",
+                &[
+                    Arg::F32(&v, &[d]),
+                    Arg::F32(&levels.full_f32(), &[nl]),
+                    Arg::F32(&uniforms, &[d]),
+                    Arg::F32(&norm, &[1]),
+                ],
+            )
+            .unwrap()
+            .remove(0);
+        let qv = qgenx::quant::quantize_with_uniforms(&v, &levels, 2, 0, &uniforms).unwrap();
+        let rust = qgenx::quant::dequantize(&qv, &levels);
+        for i in 0..d {
+            if (hlo[i] - rust[i]).abs() > 1e-6 * norm[0] {
+                total_mismatch += 1;
+            }
+        }
+    }
+    assert!(
+        total_mismatch <= 5 * d / 1000 + 10,
+        "{total_mismatch} mismatches across 5 draws of d={d}"
+    );
+}
+
+#[test]
+fn gan_full_stack_all_modes() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    for mode in [GanMode::Fp32, GanMode::Uq8, GanMode::Uq4] {
+        let cfg = GanTrainConfig {
+            mode,
+            steps: 5,
+            workers: 2,
+            eval_every: 5,
+            ..Default::default()
+        };
+        let mut tr = GanTrainer::new(&mut rt, cfg, NetModel::gbe()).unwrap();
+        let rec = tr.train().unwrap();
+        assert!(rec.get("metric").unwrap().last().unwrap().is_finite(), "{:?}", mode);
+        assert!(tr.phases.gen_bp > 0.0 && tr.phases.disc_bp > 0.0 && tr.phases.pen_bp > 0.0);
+    }
+}
+
+#[test]
+fn lm_loss_drops_within_twenty_steps() {
+    let Some(mut rt) = runtime() else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let cfg = LmTrainConfig { steps: 20, workers: 2, eval_every: 5, ..Default::default() };
+    let mut tr = LmTrainer::new(&mut rt, cfg, NetModel::gbe()).unwrap();
+    let rec = tr.train().unwrap();
+    let losses = rec.get("loss").unwrap();
+    let first = losses.points.first().unwrap().1;
+    let last = losses.last().unwrap();
+    assert!(last < first, "loss should drop: {first} -> {last}");
+    // Initial loss must be near ln(vocab) — sanity that the artifact and
+    // the init blob match.
+    let vocab = rt.manifest().lm.vocab as f64;
+    assert!((first - vocab.ln()).abs() < 1.0, "init loss {first} vs ln V {}", vocab.ln());
+}
+
+#[test]
+fn cli_binary_info_and_run() {
+    // Drive the actual binary like a user would.
+    let bin = env!("CARGO_BIN_EXE_qgenx");
+    let out = std::process::Command::new(bin).arg("help").output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("USAGE"));
+
+    let out = std::process::Command::new(bin)
+        .args(["run", "--iters", "60", "--workers", "2"])
+        .env("TMPDIR", "/tmp")
+        .current_dir("/tmp")
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "run failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("gap"), "no gap table in output: {stdout}");
+    std::fs::remove_dir_all("/tmp/results").ok();
+
+    let bad = std::process::Command::new(bin).arg("frobnicate").output().unwrap();
+    assert!(!bad.status.success());
+}

@@ -1,0 +1,245 @@
+//! Cross-module integration tests: config file → coordinator → metrics;
+//! threaded vs inline equivalence; wire-format interop under level drift;
+//! failure injection on the transport payloads.
+
+use qgenx::config::{ExperimentConfig, LevelScheme, QuantMode, Variant};
+use qgenx::coordinator::{run_experiment, run_qsgda_baseline, run_threaded, Compressor};
+use qgenx::net::NetModel;
+use qgenx::util::Rng;
+
+fn smoke_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 3;
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    cfg.problem.dim = 16;
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.sigma = 0.3;
+    cfg.quant.update_every = 60;
+    cfg
+}
+
+#[test]
+fn config_file_to_run_to_csv() {
+    let toml = r#"
+name = "itest"
+workers = 2
+iters = 150
+eval_every = 50
+out_dir = "/tmp/qgenx_itest"
+
+[problem]
+kind = "bilinear"
+dim = 32
+sigma = 0.2
+
+[quant]
+mode = "uq4"
+scheme = "adaptive"
+codec = "huffman"
+
+[algo]
+variant = "de"
+gamma0 = 0.5
+"#;
+    let path = "/tmp/qgenx_itest_cfg.toml";
+    std::fs::write(path, toml).unwrap();
+    let cfg = ExperimentConfig::load(path).unwrap();
+    assert_eq!(cfg.name, "itest");
+    assert_eq!(cfg.problem.dim, 32);
+    let rec = run_experiment(&cfg).unwrap();
+    assert!(rec.get("gap").is_some());
+    let csv = format!("{}/itest.csv", cfg.out_dir);
+    rec.to_csv(&csv).unwrap();
+    let contents = std::fs::read_to_string(&csv).unwrap();
+    assert!(contents.lines().count() > 5);
+    std::fs::remove_file(path).ok();
+    std::fs::remove_dir_all(&cfg.out_dir).ok();
+}
+
+#[test]
+fn every_problem_kind_runs_through_the_full_pipeline() {
+    for kind in ["bilinear", "quadratic", "cocoercive", "rotation", "game"] {
+        let mut cfg = smoke_cfg();
+        cfg.problem.kind = kind.into();
+        cfg.iters = 60;
+        let rec = run_experiment(&cfg)
+            .unwrap_or_else(|e| panic!("{kind} failed: {e}"));
+        let r = rec.get("residual").unwrap().last().unwrap();
+        assert!(r.is_finite(), "{kind}: residual {r}");
+    }
+}
+
+#[test]
+fn every_noise_model_runs() {
+    for noise in ["none", "absolute", "relative", "rcd", "player"] {
+        let mut cfg = smoke_cfg();
+        cfg.problem.noise = noise.into();
+        cfg.iters = 60;
+        let rec = run_experiment(&cfg).unwrap_or_else(|e| panic!("{noise} failed: {e}"));
+        assert!(rec.get("gap").unwrap().last().unwrap().is_finite());
+    }
+}
+
+#[test]
+fn every_codec_and_scheme_combination_runs() {
+    for codec in ["fixed", "elias-gamma", "elias-delta", "huffman"] {
+        for scheme in [LevelScheme::Uniform, LevelScheme::Exponential, LevelScheme::Adaptive] {
+            let mut cfg = smoke_cfg();
+            cfg.iters = 40;
+            cfg.quant.codec = qgenx::coding::SymbolCodec::parse(codec).unwrap();
+            cfg.quant.scheme = scheme;
+            cfg.quant.update_every = 15;
+            let rec = run_experiment(&cfg)
+                .unwrap_or_else(|e| panic!("{codec}/{} failed: {e}", scheme.name()));
+            assert!(rec.scalar("total_bits").unwrap() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn threaded_and_inline_agree_on_round_counts_and_convergence() {
+    let cfg = smoke_cfg();
+    let inline = run_experiment(&cfg).unwrap();
+    let threaded = run_threaded(&cfg).unwrap();
+    assert_eq!(
+        inline.scalar("rounds").unwrap(),
+        threaded.recorder.scalar("rounds").unwrap()
+    );
+    // Both converge to a similar gap band (RNG streams interleave
+    // differently, so compare loosely).
+    let gi = inline.get("gap").unwrap().last().unwrap();
+    let gt = threaded.recorder.get("gap").unwrap().last().unwrap();
+    assert!(gi < 1.0 && gt < 1.0, "inline {gi} threaded {gt}");
+}
+
+#[test]
+fn qsgda_baseline_uses_same_bit_budget_per_round() {
+    let mut cfg = smoke_cfg();
+    cfg.quant.scheme = LevelScheme::Uniform;
+    cfg.quant.codec = qgenx::coding::SymbolCodec::Fixed;
+    cfg.algo.variant = Variant::DualAveraging; // one exchange/iter like QSGDA
+    let q = run_experiment(&cfg).unwrap();
+    let s = run_qsgda_baseline(&cfg).unwrap();
+    let bq = q.scalar("total_bits").unwrap();
+    let bs = s.scalar("total_bits").unwrap();
+    assert!((bq - bs).abs() / bq < 0.02, "bit budgets should match: {bq} vs {bs}");
+}
+
+#[test]
+fn compressors_interoperate_after_synchronized_level_updates() {
+    // Two compressors drift through 3 level updates; cross-decoding must
+    // stay exact (the distributed wire contract under schedule U).
+    let mut cfg = qgenx::config::QuantConfig::default();
+    cfg.update_every = 10;
+    let mut a = Compressor::from_config(&cfg, Rng::seed_from(1)).unwrap();
+    let mut b = Compressor::from_config(&cfg, Rng::seed_from(2)).unwrap();
+    let mut rng = Rng::seed_from(3);
+    for round in 0..30 {
+        let va = rng.gaussian_vec(2048, 1.0);
+        let vb = rng.gaussian_vec(2048, 1.0);
+        let (wa, _) = a.compress(&va).unwrap();
+        let (wb, _) = b.compress(&vb).unwrap();
+        // cross-decode: b decodes a's bytes, a decodes b's
+        let mut out_ab = vec![0.0f32; 2048];
+        let mut out_ba = vec![0.0f32; 2048];
+        b.decompress(&wa, &mut out_ab).unwrap();
+        a.decompress(&wb, &mut out_ba).unwrap();
+        // self-decode must equal peer-decode
+        let mut out_aa = vec![0.0f32; 2048];
+        a.decompress(&wa, &mut out_aa).unwrap();
+        assert_eq!(out_aa, out_ab, "round {round}: decode divergence");
+        if round % 10 == 9 {
+            let sa = a.stats_payload();
+            let sb = b.stats_payload();
+            a.update_levels(&[&sa, &sb]).unwrap();
+            b.update_levels(&[&sa, &sb]).unwrap();
+            assert_eq!(a.levels().unwrap(), b.levels().unwrap());
+        }
+    }
+    assert_eq!(a.updates(), 3);
+}
+
+#[test]
+fn corrupted_wire_bytes_are_rejected_not_misdecoded() {
+    let cfg = qgenx::config::QuantConfig::default();
+    let mut c = Compressor::from_config(&cfg, Rng::seed_from(4)).unwrap();
+    let mut rng = Rng::seed_from(5);
+    let v = rng.gaussian_vec(1024, 1.0);
+    let (wire, _) = c.compress(&v).unwrap();
+    let mut out = vec![0.0f32; 1024];
+    // Truncation must error.
+    assert!(c.decompress(&wire[..wire.len() / 3], &mut out).is_err());
+    // Bit flips in the norm field: either an error or a finite decode —
+    // never a panic.
+    let mut corrupted = wire.clone();
+    corrupted[0] ^= 0xFF;
+    corrupted[1] ^= 0xAA;
+    match c.decompress(&corrupted, &mut out) {
+        Ok(()) => assert!(out.iter().all(|x| x.is_finite() || x.is_nan() || x.is_infinite())),
+        Err(_) => {}
+    }
+}
+
+#[test]
+fn fp32_mode_is_bit_exact_through_the_coordinator() {
+    let mut cfg = smoke_cfg();
+    cfg.quant.mode = QuantMode::Fp32;
+    cfg.problem.noise = "none".into();
+    cfg.iters = 400;
+    cfg.algo.gamma0 = 0.3;
+    // Without quantization and without noise, two runs are identical and
+    // converge deterministically.
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.get("dist").unwrap().ys(), b.get("dist").unwrap().ys());
+    let dist = a.get("dist").unwrap();
+    let first = dist.points.first().unwrap().1;
+    let last = dist.last().unwrap();
+    assert!(last < 0.5 * first, "deterministic run should contract: {first} -> {last}");
+}
+
+#[test]
+fn simulated_time_scales_with_bandwidth() {
+    // zero latency + a big payload so bandwidth dominates the model.
+    // rotation: O(d) apply and O(1) construction (quadratic would build an
+    // O(d^2) matrix with O(d^3) work — not viable at d=4096 in debug).
+    let mut slow = smoke_cfg();
+    slow.problem.kind = "rotation".into();
+    slow.problem.dim = 4096;
+    slow.iters = 50;
+    slow.eval_every = 50;
+    slow.net.latency_s = 0.0;
+    slow.net.bandwidth_bps = 1e6;
+    let mut fast = slow.clone();
+    fast.net.bandwidth_bps = 1e9;
+    let t_slow = run_experiment(&slow).unwrap().scalar("sim_net_time").unwrap();
+    let t_fast = run_experiment(&fast).unwrap().scalar("sim_net_time").unwrap();
+    assert!(
+        t_slow > 50.0 * t_fast,
+        "1000x bandwidth should give ~1000x net time: {t_slow} vs {t_fast}"
+    );
+}
+
+#[test]
+fn k_workers_send_k_times_the_bits() {
+    let mut c2 = smoke_cfg();
+    c2.workers = 2;
+    c2.quant.scheme = LevelScheme::Uniform;
+    c2.quant.codec = qgenx::coding::SymbolCodec::Fixed;
+    let mut c4 = c2.clone();
+    c4.workers = 4;
+    let b2 = run_experiment(&c2).unwrap().scalar("total_bits").unwrap();
+    let b4 = run_experiment(&c4).unwrap().scalar("total_bits").unwrap();
+    // all-to-all: bits scale as K(K-1) -> 4*3 / (2*1) = 6x
+    let ratio = b4 / b2;
+    assert!((ratio - 6.0).abs() < 0.2, "K-scaling of traffic: {ratio} (expect 6)");
+}
+
+#[test]
+fn net_model_matches_manual_alpha_beta() {
+    let net = NetModel::new(1e8, 1e-4);
+    let t = net.allgather_time(&[1_000_000, 1_000_000, 1_000_000]);
+    // each sends 2 copies of 1MB at 100MB/s = 0.02s + latency
+    assert!((t - (1e-4 + 0.02)).abs() < 1e-9);
+}
