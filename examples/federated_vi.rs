@@ -15,7 +15,7 @@
 use qgenx::config::{ExperimentConfig, Variant};
 use qgenx::coordinator::run_threaded;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut cfg = ExperimentConfig::default();
     cfg.name = "federated".into();
     cfg.problem.kind = "cocoercive".into();

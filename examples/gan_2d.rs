@@ -14,11 +14,11 @@ use qgenx::net::NetModel;
 use qgenx::runtime::{default_artifacts_dir, Runtime};
 use qgenx::train::{GanMode, GanTrainConfig, GanTrainer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
     let dir = default_artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+        .ok_or("run `make artifacts` first")?;
     let mut rt = Runtime::open(dir)?;
     let net = NetModel::gbe();
 

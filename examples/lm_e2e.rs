@@ -21,11 +21,11 @@ use qgenx::net::NetModel;
 use qgenx::runtime::{default_artifacts_dir, Runtime};
 use qgenx::train::{LmOptimizer, LmTrainConfig, LmTrainer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300);
     let workers: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(3);
     let dir = default_artifacts_dir()
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+        .ok_or("run `make artifacts` first")?;
     let mut rt = Runtime::open(dir)?;
     let preset = rt.manifest().lm.preset.clone();
     let params = rt.manifest().lm.params;
@@ -69,7 +69,9 @@ fn main() -> anyhow::Result<()> {
     );
     rec.to_csv("results/lm_e2e.csv")?;
     println!("csv -> results/lm_e2e.csv");
-    anyhow::ensure!(last < first, "loss did not decrease: {first} -> {last}");
+    if last >= first {
+        return Err(format!("loss did not decrease: {first} -> {last}").into());
+    }
     println!("\nE2E OK: loss {first:.3} -> {last:.3} across {steps} steps");
     Ok(())
 }

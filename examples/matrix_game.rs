@@ -15,7 +15,7 @@ use qgenx::oracle::{MatrixGame, Operator, Oracle, RandomPlayerOracle};
 use qgenx::util::{axpy, mean_into, Rng};
 use std::sync::Arc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n = 32; // actions per player
     let k = 4; // workers
     let t_max = 4000;

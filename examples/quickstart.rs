@@ -9,7 +9,7 @@
 use qgenx::config::{ExperimentConfig, QuantMode};
 use qgenx::coordinator::run_experiment;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Configure straight from code; `ExperimentConfig::load("cfg.toml")`
     // does the same from a file.
     let mut cfg = ExperimentConfig::default();

@@ -1,0 +1,87 @@
+//! Walkthrough: the same Q-GenX experiment over every exchange topology.
+//!
+//! Algorithm 1 assumes a flat all-to-all broadcast; the `topo` subsystem
+//! generalizes the exchange to star (sharded parameter server), ring,
+//! two-level hierarchical, and random-regular gossip graphs — all moving
+//! the *real* encoded wire bytes through the threaded coordinator's
+//! transport. Exact topologies (everything but gossip) reproduce the
+//! full-mesh trajectory bit-for-bit and differ only in modeled cost;
+//! gossip trades exactness for locality, which the consensus-distance
+//! metric quantifies.
+//!
+//! ```bash
+//! cargo run --release --example topologies
+//! ```
+
+use qgenx::config::ExperimentConfig;
+use qgenx::coordinator::run_threaded;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "topologies".into();
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.dim = 64;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 0.5;
+    cfg.workers = 8;
+    cfg.iters = 400;
+    cfg.eval_every = 100;
+
+    println!(
+        "Q-GenX, quadratic VI d={} K={} workers, uq4 adaptive quantization.",
+        cfg.problem.dim, cfg.workers
+    );
+    println!("Same experiment, five exchange topologies (threaded coordinator):\n");
+
+    println!(
+        "{:<14} {:>10} {:>12} {:>14} {:>12} {:>12}",
+        "topology", "final gap", "wire MiB", "sim net ms", "max link KiB", "consensus"
+    );
+    let mut mesh_final: Option<Vec<Vec<f32>>> = None;
+    for kind in ["full-mesh", "star", "ring", "hierarchical", "gossip"] {
+        cfg.topo.kind = kind.into();
+        let run = run_threaded(&cfg)?;
+        let rec = &run.recorder;
+        let gap = rec.get("gap").and_then(|s| s.last()).unwrap_or(f64::NAN);
+        let mib = rec.scalar("total_bits").unwrap_or(0.0) / 8.0 / 1048576.0;
+        // pure modeled α-β network time (compute time excluded)
+        let net_ms = rec.scalar("sim_net_time").unwrap_or(0.0) * 1e3;
+        let link_kib = rec.scalar("max_link_bytes").unwrap_or(0.0) / 1024.0;
+        let consensus = rec
+            .scalar("consensus_dist")
+            .map(|c| format!("{c:.5}"))
+            .unwrap_or_else(|| "exact".into());
+        println!(
+            "{kind:<14} {gap:>10.5} {mib:>12.2} {net_ms:>14.3} {link_kib:>12.1} {consensus:>12}"
+        );
+
+        match kind {
+            "full-mesh" => mesh_final = Some(run.replicas.clone()),
+            "star" | "ring" | "hierarchical" => {
+                // Exactness: aggregation preserves the rank-order mean, so
+                // the replicas are bit-identical to the mesh run's.
+                assert_eq!(
+                    Some(&run.replicas),
+                    mesh_final.as_ref(),
+                    "{kind} diverged from the full-mesh trajectory"
+                );
+            }
+            _ => {}
+        }
+    }
+
+    println!(
+        "\nReading the table:\n\
+         * star/ring/hierarchical reproduce the mesh gap exactly (asserted) while\n\
+           moving fewer bytes — in-network aggregation sends O(b) per NIC, the mesh O(K·b);\n\
+         * the hottest single link shifts with the graph (leader links under\n\
+           hierarchical, uniform chunks under ring);\n\
+         * gossip averages over graph neighborhoods only: cheapest rounds, but the\n\
+           replicas drift apart — `consensus` is the RMS deviation across workers\n\
+           (metrics::consensus_distance), the quantity decentralized-VI analyses bound.\n\
+         \n\
+         Try `[topo]` in a config file (kind/groups/degree/seed) or\n\
+         `qgenx run --topo ring` to sweep these from the CLI."
+    );
+    Ok(())
+}

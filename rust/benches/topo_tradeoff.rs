@@ -1,0 +1,160 @@
+//! E10 — topology × quantizer trade-off over the α-β model.
+//!
+//! The paper's Algorithm 1 fixes one communication pattern (flat
+//! all-to-all); this bench poses the question the topo subsystem opens:
+//! *which exchange graph should carry CODE∘Q traffic, and how does the
+//! answer depend on the quantizer?* Method:
+//!
+//! 1. Compress a representative stochastic dual vector (d = 256K) through
+//!    the real wire format for each quantizer (fp32 / uq8 / uq4) — exact
+//!    encoded bit counts, not estimates.
+//! 2. Sweep K × topology through the per-topology α-β round costs
+//!    ([`qgenx::topo::cost`]) at 1 GbE: per-round wire MiB and modeled
+//!    wall-clock. Aggregating topologies (ring/star/hierarchical) move
+//!    `O(b)` per NIC vs the mesh's `O(K·b)`, so they win once K·b/β
+//!    dominates latency — the table shows the crossover at K ≥ 8, and
+//!    shows it moving with the quantizer (harder compression → smaller b →
+//!    later crossover: CODE∘Q and the graph interact).
+//! 3. End-to-end sanity at small scale: run every topology through the
+//!    inline coordinator on one problem and report gap / bits / time /
+//!    consensus.
+
+use qgenx::benchkit::{fast_mode, scaled, write_csv, Table};
+use qgenx::config::{ExperimentConfig, QuantMode, TopoConfig};
+use qgenx::coordinator::{run_experiment, Compressor};
+use qgenx::net::NetModel;
+use qgenx::topo::{build_collective, Collective, Topology};
+use qgenx::util::Rng;
+
+const TOPOLOGIES: [&str; 5] = ["full-mesh", "star", "ring", "hierarchical", "gossip"];
+
+/// Exact wire bits for one dual vector under `mode` (real CODE∘Q encode).
+fn wire_bits(mode: &str, d: usize) -> u64 {
+    let mut quant = qgenx::config::QuantConfig::default();
+    quant.mode = QuantMode::parse(mode).unwrap();
+    let mut comp = Compressor::from_config(&quant, Rng::seed_from(11)).unwrap();
+    let v = Rng::seed_from(12).gaussian_vec(d, 1.0);
+    let (_, bits) = comp.compress(&v).unwrap();
+    bits
+}
+
+fn topo_for(kind: &str, k: usize) -> Topology {
+    let mut tc = TopoConfig::default();
+    tc.kind = kind.into();
+    Topology::from_config(&tc, k).unwrap()
+}
+
+fn main() {
+    println!("== E10: topology x quantizer trade-off (alpha-beta model, 1 GbE) ==\n");
+    let net = NetModel::gbe();
+    let d = scaled(262_144, 16_384);
+
+    // ---- part 1+2: real encoded sizes through the per-topology cost model
+    let modes = ["fp32", "uq8", "uq4"];
+    let bits: Vec<(&str, u64)> = modes.iter().map(|m| (*m, wire_bits(m, d))).collect();
+    for (m, b) in &bits {
+        println!(
+            "payload [{m}]: {:.2} bits/coord, {:.1} KiB encoded",
+            *b as f64 / d as f64,
+            *b as f64 / 8.0 / 1024.0
+        );
+    }
+    println!();
+
+    let mut csv = Vec::new();
+    let mut mesh_beaten_at_8 = true;
+    for k in [4usize, 8, 16, 32, 64] {
+        let mut table = Table::new(&[
+            "K", "mode", "topology", "MiB/round", "sim ms/round", "x vs mesh",
+        ]);
+        for (mode, b) in &bits {
+            let per_rank = vec![*b; k];
+            let mesh_cost = build_collective(topo_for("full-mesh", k), k)
+                .unwrap()
+                .round_cost(&net, &per_rank);
+            for kind in TOPOLOGIES {
+                let coll = build_collective(topo_for(kind, k), k).unwrap();
+                let c = coll.round_cost(&net, &per_rank);
+                let speedup = mesh_cost.secs / c.secs;
+                let row = vec![
+                    k.to_string(),
+                    mode.to_string(),
+                    kind.to_string(),
+                    format!("{:.2}", c.wire_bits as f64 / 8.0 / 1048576.0),
+                    format!("{:.3}", c.secs * 1e3),
+                    format!("{speedup:.2}"),
+                ];
+                table.row(&row);
+                csv.push(row);
+                if k >= 8 && matches!(kind, "star" | "ring" | "hierarchical") {
+                    mesh_beaten_at_8 &= c.secs < mesh_cost.secs;
+                }
+            }
+        }
+        println!("-- K = {k} --");
+        table.print();
+        println!();
+    }
+    write_csv(
+        "results/topo_tradeoff_model.csv",
+        &["K", "mode", "topology", "mib_per_round", "sim_ms_per_round", "speedup_vs_mesh"],
+        &csv,
+    )
+    .unwrap();
+    if fast_mode() {
+        // The scaled-down payload is latency-bound (ring pays 2(K−1) α
+        // terms), so the crossover claim only holds at full-scale d.
+        println!("acceptance check skipped in QGENX_BENCH_FAST mode (payload too small)");
+    } else {
+        println!(
+            "acceptance: ring/star/hierarchical beat full mesh on modeled wall-clock at K >= 8: {}",
+            if mesh_beaten_at_8 { "YES" } else { "NO" }
+        );
+    }
+
+    // ---- part 3: every topology end-to-end through the coordinator
+    println!("\n-- end-to-end (inline coordinator, quadratic d=256, K=8, uq4) --");
+    let mut table = Table::new(&[
+        "topology", "final gap", "total MiB", "sim net secs", "consensus",
+    ]);
+    let mut csv = Vec::new();
+    for kind in TOPOLOGIES {
+        let mut cfg = ExperimentConfig::default();
+        cfg.problem.kind = "quadratic".into();
+        cfg.problem.dim = 256;
+        cfg.problem.noise = "absolute".into();
+        cfg.problem.sigma = 0.5;
+        cfg.workers = 8;
+        cfg.iters = scaled(600, 120);
+        cfg.eval_every = cfg.iters / 10;
+        cfg.seed = 13;
+        cfg.topo.kind = kind.into();
+        let rec = run_experiment(&cfg).unwrap();
+        let consensus = rec
+            .scalar("consensus_dist")
+            .map(|c| format!("{c:.4}"))
+            .unwrap_or_else(|| "exact".into());
+        let row = vec![
+            kind.to_string(),
+            format!("{:.4}", rec.get("gap").unwrap().last().unwrap()),
+            format!("{:.2}", rec.scalar("total_bits").unwrap() / 8.0 / 1048576.0),
+            format!("{:.4}", rec.scalar("sim_net_time").unwrap()),
+            consensus,
+        ];
+        table.row(&row);
+        csv.push(row);
+    }
+    table.print();
+    write_csv(
+        "results/topo_tradeoff_e2e.csv",
+        &["topology", "final_gap", "total_mib", "sim_net_secs", "consensus"],
+        &csv,
+    )
+    .unwrap();
+    println!(
+        "\npaper shape: the mesh is latency-optimal at small K*b; aggregation topologies\n\
+         win once K*b/beta dominates — and the crossover moves with the quantizer,\n\
+         because CODE∘Q shrinks b but not K. Gossip trades exactness (consensus > 0)\n\
+         for the lowest per-round cost of all."
+    );
+}

@@ -162,6 +162,27 @@ impl Default for AlgoConfig {
     }
 }
 
+/// Communication topology selection (`[topo]` table) — which graph carries
+/// each exchange round; see [`crate::topo::Topology`] for semantics.
+#[derive(Clone, Debug)]
+pub struct TopoConfig {
+    /// `full-mesh` (default, the paper's Algorithm 1) | `star` | `ring` |
+    /// `hierarchical` | `gossip` (plus aliases; see `Topology::from_config`).
+    pub kind: String,
+    /// Hierarchical: number of groups; 0 = auto (`⌈√K⌉`).
+    pub groups: usize,
+    /// Gossip: target neighbor count per node.
+    pub degree: usize,
+    /// Gossip: chord-placement seed; 0 = derived from `degree`.
+    pub seed: u64,
+}
+
+impl Default for TopoConfig {
+    fn default() -> Self {
+        TopoConfig { kind: "full-mesh".into(), groups: 0, degree: 3, seed: 0 }
+    }
+}
+
 /// Simulated network (α-β model).
 #[derive(Clone, Debug)]
 pub struct NetConfig {
@@ -219,6 +240,7 @@ pub struct ExperimentConfig {
     pub quant: QuantConfig,
     pub algo: AlgoConfig,
     pub net: NetConfig,
+    pub topo: TopoConfig,
     pub problem: ProblemConfig,
     /// Where benches/drivers write CSV output.
     pub out_dir: String,
@@ -237,6 +259,7 @@ impl Default for ExperimentConfig {
             quant: QuantConfig::default(),
             algo: AlgoConfig::default(),
             net: NetConfig::default(),
+            topo: TopoConfig::default(),
             problem: ProblemConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
@@ -257,7 +280,7 @@ impl ExperimentConfig {
         let cfg = Self::from_doc(&doc)?;
         let unused = doc.unused_keys();
         if !unused.is_empty() {
-            log::warn!("config {path}: unused keys (typos?): {unused:?}");
+            eprintln!("warning: config {path}: unused keys (typos?): {unused:?}");
         }
         Ok(cfg)
     }
@@ -294,6 +317,33 @@ impl ExperimentConfig {
                     * 1e6,
                 latency_s: doc.get_f64("net.latency_us", d.net.latency_s * 1e6)? * 1e-6,
                 all_to_all: doc.get_bool("net.all_to_all", d.net.all_to_all)?,
+            },
+            topo: {
+                // Back-compat: `net.all_to_all = false` predates the [topo]
+                // table and means "route through a leader"; an explicit
+                // `topo.kind` wins. Note the topo-era star is the *sharded*
+                // parameter server (cheaper than mesh at scale), not the
+                // seed's centralized-leader cost model — warn so the
+                // semantic shift is never silent.
+                let legacy_star = !doc.get_bool("net.all_to_all", true)?
+                    && !doc.contains("topo.kind");
+                if legacy_star {
+                    eprintln!(
+                        "warning: net.all_to_all = false is deprecated; mapping to \
+                         topo.kind = \"star\" (sharded parameter server — costs differ \
+                         from the old leader-star model). Set [topo] kind explicitly."
+                    );
+                }
+                TopoConfig {
+                    kind: if legacy_star {
+                        "star".into()
+                    } else {
+                        doc.get_str("topo.kind", &d.topo.kind)?
+                    },
+                    groups: doc.get_usize("topo.groups", d.topo.groups)?,
+                    degree: doc.get_usize("topo.degree", d.topo.degree)?,
+                    seed: doc.get_i64("topo.seed", d.topo.seed as i64)? as u64,
+                }
             },
             problem: ProblemConfig {
                 kind: doc.get_str("problem.kind", &d.problem.kind)?,
@@ -337,6 +387,9 @@ impl ExperimentConfig {
         if self.algo.gamma0 <= 0.0 {
             return Err(Error::Config("algo.gamma0 must be positive".into()));
         }
+        // Topology must resolve for this worker count (kind known, groups /
+        // degree in range); surfaced at config time, not mid-run.
+        crate::topo::Topology::from_config(&self.topo, self.workers)?;
         Ok(())
     }
 }
@@ -440,6 +493,44 @@ noise = "relative"
         let mut cfg = ExperimentConfig::default();
         cfg.algo.gamma0 = -1.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parses_topo_table_and_validates() {
+        let cfg = ExperimentConfig::from_toml(
+            "workers = 9\n[topo]\nkind = \"hierarchical\"\ngroups = 3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topo.kind, "hierarchical");
+        assert_eq!(cfg.topo.groups, 3);
+        let cfg =
+            ExperimentConfig::from_toml("workers = 8\n[topo]\nkind = \"gossip\"\ndegree = 4\n")
+                .unwrap();
+        assert_eq!(cfg.topo.degree, 4);
+        // default is the paper's full mesh
+        assert_eq!(ExperimentConfig::default().topo.kind, "full-mesh");
+        // bad kind / zero degree rejected at parse time; over-degree clamps
+        assert!(ExperimentConfig::from_toml("[topo]\nkind = \"moebius\"\n").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "workers = 4\n[topo]\nkind = \"gossip\"\ndegree = 0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "workers = 4\n[topo]\nkind = \"gossip\"\ndegree = 9\n"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn legacy_all_to_all_false_maps_to_star() {
+        let cfg = ExperimentConfig::from_toml("[net]\nall_to_all = false\n").unwrap();
+        assert_eq!(cfg.topo.kind, "star");
+        // explicit topo.kind wins over the legacy flag
+        let cfg = ExperimentConfig::from_toml(
+            "[net]\nall_to_all = false\n[topo]\nkind = \"ring\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topo.kind, "ring");
     }
 
     #[test]

@@ -7,17 +7,60 @@ use super::schedule::UpdateSchedule;
 use crate::algo::{QGenX, Sgda};
 use crate::config::{ExperimentConfig, LevelScheme};
 use crate::error::Result;
-use crate::metrics::Recorder;
+use crate::metrics::{consensus_distance, Recorder};
 use crate::net::{NetModel, TrafficStats};
 use crate::oracle::{build_operator, build_oracle, GapEvaluator, Oracle};
+use crate::topo::{build_collective, Collective, LinkTraffic, Topology};
 use crate::util::Rng;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Stat-exchange schedule shared by the exact and gossip runners: active
+/// only when something adapts (level placement or Huffman tables) and the
+/// pipeline is actually quantized.
+fn adaptive_schedule(cfg: &ExperimentConfig, comps: &[Compressor]) -> UpdateSchedule {
+    let adaptive = cfg.quant.scheme == LevelScheme::Adaptive
+        || cfg.quant.codec == crate::coding::SymbolCodec::Huffman;
+    if adaptive && comps[0].is_quantized() {
+        UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
+    } else {
+        UpdateSchedule::never()
+    }
+}
+
+/// Summary scalars shared by the exact and gossip runners — one emission
+/// point so cross-topology CSV columns cannot drift apart.
+fn emit_summary_scalars(
+    rec: &mut Recorder,
+    traffic: &TrafficStats,
+    links: &LinkTraffic,
+    comps: &[Compressor],
+    k: usize,
+    d: usize,
+) {
+    rec.set_scalar("total_bits", traffic.bits_sent as f64);
+    rec.set_scalar("bits_per_round_per_worker", traffic.bits_per_round_per_worker(k));
+    rec.set_scalar("sim_net_time", traffic.sim_net_time);
+    rec.set_scalar("compute_time", traffic.compute_time);
+    rec.set_scalar("rounds", traffic.rounds as f64);
+    rec.set_scalar("level_updates", comps[0].updates() as f64);
+    rec.set_scalar("epsilon_q", comps[0].epsilon_q(d));
+    rec.set_scalar("wire_links", links.links() as f64);
+    rec.set_scalar("max_link_bytes", links.max_link_bytes());
+}
 
 /// Run one Q-GenX experiment per the config; returns the metric recorder
 /// with series `gap`, `dist`, `residual`, `gamma`, `bits_cum`,
-/// `sim_time_cum` and summary scalars.
+/// `sim_time_cum` and summary scalars. The exchange rounds run over the
+/// configured [`Topology`]; inexact (gossip) topologies dispatch to the
+/// neighborhood-averaging runner and additionally record `consensus_dist`.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
     cfg.validate()?;
+    let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
+    let collective = build_collective(topo, cfg.workers)?;
+    if !topo.is_exact() {
+        return run_gossip(cfg, collective);
+    }
     let op = build_operator(&cfg.problem, cfg.seed)?;
     let d = op.dim();
     let k = cfg.workers;
@@ -31,13 +74,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
         .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
         .collect::<Result<_>>()?;
 
-    let adaptive = cfg.quant.scheme == LevelScheme::Adaptive
-        || cfg.quant.codec == crate::coding::SymbolCodec::Huffman;
-    let schedule = if adaptive && comps[0].is_quantized() {
-        UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
-    } else {
-        UpdateSchedule::never()
-    };
+    let schedule = adaptive_schedule(cfg, &comps);
 
     let x0 = vec![0.0f32; d];
     let mut state = QGenX::new(cfg.algo.variant, &x0, k, cfg.algo.gamma0, cfg.algo.adaptive_step);
@@ -45,6 +82,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
     let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
     let net = NetModel::from_config(&cfg.net);
     let mut traffic = TrafficStats::default();
+    let mut links = LinkTraffic::new();
     let mut rec = Recorder::new();
 
     // Scratch buffers reused across iterations.
@@ -80,7 +118,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
                 comps[w].decompress(&wires[w], &mut decoded[w])?;
             }
             traffic.add_compute(t0.elapsed().as_secs_f64());
-            traffic.record_allgather(&bits, &net);
+            collective.record_round(&bits, &net, &mut traffic);
+            links.record(collective.as_ref(), &bits);
             decoded.clone()
         } else {
             Vec::new()
@@ -103,7 +142,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
             comps[w].decompress(&wires[w], &mut decoded[w])?;
         }
         traffic.add_compute(t0.elapsed().as_secs_f64());
-        traffic.record_allgather(&bits, &net);
+        collective.record_round(&bits, &net, &mut traffic);
+        links.record(collective.as_ref(), &bits);
         state.update(&decoded)?;
 
         // (5) Evaluation.
@@ -120,13 +160,158 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
         }
     }
 
-    rec.set_scalar("total_bits", traffic.bits_sent as f64);
-    rec.set_scalar("bits_per_round_per_worker", traffic.bits_per_round_per_worker(k));
-    rec.set_scalar("sim_net_time", traffic.sim_net_time);
-    rec.set_scalar("compute_time", traffic.compute_time);
-    rec.set_scalar("rounds", traffic.rounds as f64);
-    rec.set_scalar("level_updates", comps[0].updates() as f64);
-    rec.set_scalar("epsilon_q", comps[0].epsilon_q(d));
+    emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
+    Ok(rec)
+}
+
+/// Inexact (gossip) runner: `K` genuinely distinct replicas, each
+/// averaging dual vectors over its closed graph neighborhood only. The
+/// exchange still moves real encoded wire bytes (decode is
+/// sender-deterministic, so decoding once per sender is exact); traffic
+/// follows the gossip α-β cost. Level updates stay *global* — the decode
+/// side of the wire format requires identical codecs on every replica, so
+/// the control plane (small, infrequent stat payloads) is pooled full-mesh
+/// while the data plane gossips; see `coordinator::mod` docs.
+fn run_gossip(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result<Recorder> {
+    let op = build_operator(&cfg.problem, cfg.seed)?;
+    let d = op.dim();
+    let k = cfg.workers;
+    let root = Rng::seed_from(cfg.seed);
+    let neigh: Vec<Vec<usize>> = (0..k).map(|r| collective.recipients(r)).collect();
+
+    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+        .collect::<Result<_>>()?;
+    let mut comps: Vec<Compressor> = (0..k)
+        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+        .collect::<Result<_>>()?;
+
+    let schedule = adaptive_schedule(cfg, &comps);
+
+    let x0 = vec![0.0f32; d];
+    let mut states: Vec<QGenX> = neigh
+        .iter()
+        .map(|n| QGenX::new(cfg.algo.variant, &x0, n.len(), cfg.algo.gamma0, cfg.algo.adaptive_step))
+        .collect();
+
+    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+    let net = NetModel::from_config(&cfg.net);
+    let mut traffic = TrafficStats::default();
+    let mut links = LinkTraffic::new();
+    let mut rec = Recorder::new();
+    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+    let mut g_buf = vec![0.0f32; d];
+
+    // Compress every worker's sample, decode once per sender, and hand each
+    // replica its neighborhood view (rank order within the neighborhood).
+    let exchange_views = |queries: &[Vec<f32>],
+                              oracles: &mut [Box<dyn Oracle>],
+                              comps: &mut [Compressor],
+                              decoded: &mut [Vec<f32>],
+                              traffic: &mut TrafficStats,
+                              links: &mut LinkTraffic,
+                              g_buf: &mut [f32]|
+     -> Result<Vec<Vec<Vec<f32>>>> {
+        let t0 = Instant::now();
+        let mut bits = Vec::with_capacity(k);
+        let mut wires = Vec::with_capacity(k);
+        for w in 0..k {
+            oracles[w].sample(&queries[w], g_buf);
+            let (bytes, b) = comps[w].compress(g_buf)?;
+            bits.push(b);
+            wires.push(bytes);
+        }
+        for w in 0..k {
+            comps[w].decompress(&wires[w], &mut decoded[w])?;
+        }
+        traffic.add_compute(t0.elapsed().as_secs_f64());
+        collective.record_round(&bits, &net, traffic);
+        links.record(collective.as_ref(), &bits);
+        Ok(neigh
+            .iter()
+            .map(|n| n.iter().map(|&w| decoded[w].clone()).collect())
+            .collect())
+    };
+
+    for t in 1..=cfg.iters {
+        // (1) Global (full-mesh) stat pooling keeps all codecs identical.
+        if schedule.is_update(t) {
+            let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
+            let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
+            traffic.record_allgather(&bits, &net);
+            let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+            for comp in comps.iter_mut() {
+                comp.update_levels(&rank_order)?;
+            }
+        }
+
+        // (2) Base exchange: each replica queries at its *own* iterate.
+        let base_views: Vec<Vec<Vec<f32>>> = if states[0].base_query().is_some() {
+            let queries: Vec<Vec<f32>> =
+                states.iter().map(|s| s.base_query().expect("DE variant")).collect();
+            exchange_views(
+                &queries,
+                &mut oracles,
+                &mut comps,
+                &mut decoded,
+                &mut traffic,
+                &mut links,
+                &mut g_buf,
+            )?
+        } else {
+            vec![Vec::new(); k]
+        };
+
+        // (3) Per-replica extrapolation to its own half-step point.
+        let x_halves: Vec<Vec<f32>> = states
+            .iter_mut()
+            .zip(base_views.iter())
+            .map(|(s, v)| s.extrapolate(v))
+            .collect::<Result<_>>()?;
+
+        // (4) Half-step exchange at the per-replica half points.
+        let half_views = exchange_views(
+            &x_halves,
+            &mut oracles,
+            &mut comps,
+            &mut decoded,
+            &mut traffic,
+            &mut links,
+            &mut g_buf,
+        )?;
+        for (s, v) in states.iter_mut().zip(half_views.iter()) {
+            s.update(v)?;
+        }
+
+        // (5) Evaluation at the mean ergodic average + consensus tracking.
+        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+            let averages: Vec<Vec<f32>> = states.iter().map(|s| s.ergodic_average()).collect();
+            let mut mean_avg = vec![0.0f32; d];
+            for a in &averages {
+                for (m, &x) in mean_avg.iter_mut().zip(a.iter()) {
+                    *m += x / k as f32;
+                }
+            }
+            let iterates: Vec<Vec<f32>> = states.iter().map(|s| s.x_world()).collect();
+            if let Some(ev) = &gap_eval {
+                rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
+                rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
+            }
+            rec.push("residual", t as f64, op.residual(&mean_avg));
+            rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
+            rec.push("gamma", t as f64, states[0].gamma());
+            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+            rec.push("sim_time_cum", t as f64, traffic.total_time());
+        }
+    }
+
+    // Same scalar set as the exact path (bits_per_round_per_worker is the
+    // mesh-normalized figure Theorems 3/4 reference; under gossip it is a
+    // comparison yardstick, not a per-edge quantity), plus the consensus
+    // scalar only this runner can produce.
+    let final_iterates: Vec<Vec<f32>> = states.iter().map(|s| s.x_world()).collect();
+    emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
+    rec.set_scalar("consensus_dist", consensus_distance(&final_iterates));
     Ok(rec)
 }
 
@@ -281,6 +466,53 @@ mod tests {
         cfg.iters = 300;
         let rec = run_qsgda_baseline(&cfg).unwrap();
         assert!(rec.get("dist").unwrap().last().unwrap().is_finite());
+    }
+
+    #[test]
+    fn exact_topologies_share_one_trajectory_but_not_one_cost() {
+        // Star/ring/hierarchical aggregate the same rank-order mean the mesh
+        // broadcasts, so the iterate trajectory is bit-identical; only the
+        // modeled traffic and time differ.
+        let mut cfg = base_cfg();
+        cfg.workers = 8;
+        cfg.iters = 120;
+        cfg.eval_every = 40;
+        let mesh = run_experiment(&cfg).unwrap();
+        for kind in ["star", "ring", "hierarchical"] {
+            cfg.topo.kind = kind.into();
+            let rec = run_experiment(&cfg).unwrap();
+            assert_eq!(
+                rec.get("gap").unwrap().ys(),
+                mesh.get("gap").unwrap().ys(),
+                "{kind} trajectory must match full mesh bit-for-bit"
+            );
+            assert!(
+                rec.scalar("total_bits").unwrap() < mesh.scalar("total_bits").unwrap(),
+                "{kind} must aggregate below mesh traffic"
+            );
+            assert!(rec.scalar("max_link_bytes").unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn gossip_runs_and_tracks_consensus() {
+        let mut cfg = base_cfg();
+        cfg.workers = 8;
+        cfg.iters = 200;
+        cfg.eval_every = 50;
+        cfg.topo.kind = "gossip".into();
+        cfg.topo.degree = 3;
+        let rec = run_experiment(&cfg).unwrap();
+        let cons = rec.get("consensus_dist").unwrap();
+        assert!(cons.points.iter().all(|(_, y)| y.is_finite()));
+        assert!(rec.scalar("consensus_dist").unwrap().is_finite());
+        assert!(rec.get("gap").unwrap().last().unwrap().is_finite());
+        // neighborhood exchange puts fewer bits on the wire than the mesh
+        cfg.topo.kind = "full-mesh".into();
+        let mesh = run_experiment(&cfg).unwrap();
+        assert!(rec.scalar("total_bits").unwrap() < mesh.scalar("total_bits").unwrap());
+        // replicas genuinely diverge under noise
+        assert!(rec.scalar("consensus_dist").unwrap() > 0.0);
     }
 
     #[test]

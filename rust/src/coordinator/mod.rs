@@ -17,10 +17,33 @@
 //!    statistics (histograms, `4·bins` bytes — counted as traffic),
 //!    pool them, and each deterministically re-optimizes the levels and
 //!    rebuilds the Huffman codec (identical inputs ⇒ identical tables).
-//! 2. variant-dependent base exchange (`V̂_{k,t}`): DE quantizes + allgathers
+//! 2. variant-dependent base exchange (`V̂_{k,t}`): DE quantizes + exchanges
 //!    fresh oracle queries at `X_t`; DA/OptDA send nothing.
 //! 3. extrapolate to `X_{t+1/2}`.
-//! 4. quantize + allgather `V̂_{k,t+1/2}`; everyone updates the replica.
+//! 4. quantize + exchange `V̂_{k,t+1/2}`; everyone updates the replica.
+//!
+//! ## Topology selection
+//!
+//! Both modes route the *data-plane* exchanges (steps 2 and 4) through the
+//! [`crate::topo::Collective`] built from the `[topo]` config table:
+//!
+//! * `full-mesh` (default) — the paper's flat allgather; byte- and
+//!   cost-identical to the pre-topology coordinator.
+//! * `star` / `ring` / `hierarchical` — **exact**: they deliver the same
+//!   rank-order mean via in-network aggregation, so trajectories are
+//!   bit-identical to full mesh while modeled time/traffic follow the
+//!   per-topology α-β formulas in [`crate::topo::cost`].
+//! * `gossip` — **inexact**: each worker averages over its closed graph
+//!   neighborhood, replicas genuinely diverge (tracked as the
+//!   `consensus_dist` series/scalar via
+//!   [`crate::metrics::consensus_distance`]), and the threaded runner skips
+//!   the replica-equality assertion.
+//!
+//! The *control plane* (step 1's stat pooling) is always global and
+//! accounted as a full-mesh round, even under gossip: the decode side of
+//! the wire format requires bit-identical levels + Huffman tables on every
+//! worker, and the stat payloads are small and infrequent. Gossip
+//! decentralizes the data plane only.
 //!
 //! Timing: compute (oracle + encode + decode) is *measured*; network time
 //! is *modeled* (α-β on the exact encoded byte counts) — see DESIGN.md §5.4.

@@ -79,4 +79,48 @@ mod tests {
         assert_eq!(s.segment_of(50), 2);
         assert_eq!(s.segment_of(99), 2);
     }
+
+    #[test]
+    fn zero_warmup_updates_from_the_first_matching_step() {
+        // warmup = 0: every multiple of `every` (including t = 0 if ever
+        // queried) is an update step; the 1-based loop first hits t = every.
+        let s = UpdateSchedule::new(0, 25);
+        assert!(s.is_update(0));
+        assert!(!s.is_update(1));
+        assert!(s.is_update(25));
+        assert!(s.is_update(50));
+        assert_eq!(s.updates_in(100), 4); // 25, 50, 75, 100
+        // every = 1 degenerates to "update at every iteration"
+        let s1 = UpdateSchedule::new(0, 1);
+        assert!((1..=10).all(|t| s1.is_update(t)));
+        assert_eq!(s1.updates_in(10), 10);
+    }
+
+    #[test]
+    fn zero_every_disables_even_with_warmup_set() {
+        let s = UpdateSchedule::new(10, 0);
+        assert!((0..1000).all(|t| !s.is_update(t)));
+        assert_eq!(s.updates_in(1000), 0);
+        // segment mapping collapses to a single segment
+        assert!((0..1000).all(|t| s.segment_of(t) == 0));
+    }
+
+    #[test]
+    fn pre_warmup_steps_map_to_segment_zero() {
+        // t < warmup: never an update, always segment 0; the first update
+        // (t = warmup) opens segment 1.
+        let s = UpdateSchedule::new(100, 50);
+        for t in 0..100 {
+            assert!(!s.is_update(t), "t={t}");
+            assert_eq!(s.segment_of(t), 0, "t={t}");
+        }
+        assert!(s.is_update(100));
+        assert_eq!(s.segment_of(100), 1);
+        assert_eq!(s.segment_of(149), 1);
+        assert_eq!(s.segment_of(150), 2);
+        // warmup beyond the horizon: a run can finish with zero updates
+        let far = UpdateSchedule::new(10_000, 50);
+        assert_eq!(far.updates_in(500), 0);
+        assert_eq!(far.segment_of(500), 0);
+    }
 }

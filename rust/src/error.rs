@@ -1,49 +1,76 @@
 //! Crate-wide error type.
 //!
-//! One `thiserror` enum covering every layer so that `qgenx::Result<T>` can
-//! flow from the config parser through the coordinator to the PJRT runtime
-//! without per-module error plumbing.
+//! One enum covering every layer so that `qgenx::Result<T>` can flow from
+//! the config parser through the coordinator to the PJRT runtime without
+//! per-module error plumbing. `Display`/`std::error::Error` are implemented
+//! by hand — the offline build image has no `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for the qgenx crate.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file could not be parsed or failed validation.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Wire-format / entropy-coding error (truncated stream, bad symbol...).
-    #[error("codec error: {0}")]
     Codec(String),
 
     /// Quantizer misuse (unsorted levels, empty vector, bad `q`...).
-    #[error("quantization error: {0}")]
     Quant(String),
 
     /// Problem / oracle construction error (dimension mismatch etc.).
-    #[error("oracle error: {0}")]
     Oracle(String),
 
     /// Coordinator / transport failure (worker panic, channel closed...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
+    /// Topology construction / collective execution error.
+    Topology(String),
+
     /// PJRT runtime failure (missing artifact, compile/execute error).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact manifest missing or malformed.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// Generic IO error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Error bubbled up from the `xla` crate.
-    #[error("xla error: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Quant(m) => write!(f, "quantization error: {m}"),
+            Error::Oracle(m) => write!(f, "oracle error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -54,3 +81,21 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_layer() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(Error::Topology("bad graph".into()).to_string(), "topology error: bad graph");
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

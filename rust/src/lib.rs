@@ -31,6 +31,7 @@
 //! | [`oracle`] | monotone VI problem suite, absolute/relative noise oracles, restricted gap function |
 //! | [`algo`] | Q-GenX template (DA/DE/OptDA) with adaptive step-size, baselines (EG, SGDA, QSGDA) |
 //! | [`net`] | simulated α-β transport, exact bit accounting |
+//! | [`topo`] | topology-aware collectives: full-mesh / star / ring / hierarchical / gossip exchange graphs, per-topology α-β cost, per-link traffic |
 //! | [`coordinator`] | leader/worker synchronous rounds (Algorithm 1) |
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
 //! | [`train`] | GAN / LM training drivers over the runtime |
@@ -49,6 +50,7 @@ pub mod oracle;
 pub mod quant;
 pub mod runtime;
 pub mod testkit;
+pub mod topo;
 pub mod train;
 pub mod util;
 

@@ -66,7 +66,7 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K]\n\
            lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx]\n\
            info   print the artifact manifest summary\n\
@@ -113,14 +113,18 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     if let Some(m) = flags.get("mode") {
         cfg.quant.mode = QuantMode::parse(m).map_err(|e| e.to_string())?;
     }
+    if let Some(t) = flags.get("topo") {
+        cfg.topo.kind = t.clone();
+    }
     println!(
-        "run: problem={} dim={} K={} T={} mode={} variant={}",
+        "run: problem={} dim={} K={} T={} mode={} variant={} topo={}",
         cfg.problem.kind,
         cfg.problem.dim,
         cfg.workers,
         cfg.iters,
         cfg.quant.mode.name(),
-        cfg.algo.variant.name()
+        cfg.algo.variant.name(),
+        cfg.topo.kind
     );
     let rec = if flags.contains_key("qsgda") {
         qgenx::coordinator::run_qsgda_baseline(&cfg).map_err(|e| e.to_string())?
@@ -135,7 +139,14 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
             println!("  {x:>6.0}  {y:>12.6e}");
         }
     }
-    for key in ["total_bits", "bits_per_round_per_worker", "sim_net_time", "level_updates"] {
+    for key in [
+        "total_bits",
+        "bits_per_round_per_worker",
+        "sim_net_time",
+        "level_updates",
+        "consensus_dist",
+        "max_link_bytes",
+    ] {
         if let Some(v) = rec.scalar(key) {
             println!("  {key} = {v:.3}");
         }

@@ -7,6 +7,43 @@
 use crate::error::Result;
 use std::collections::BTreeMap;
 
+/// Consensus distance across `K` replica iterates — the disagreement
+/// metric for inexact (gossip) topologies, recorded as the
+/// `consensus_dist` series/scalar:
+///
+/// `C({x_r}) = sqrt( (1/K) Σ_r ‖x_r − x̄‖² )`,  `x̄ = (1/K) Σ_r x_r`
+///
+/// i.e. the RMS deviation of the replicas from their mean. Exact
+/// topologies keep replicas bit-identical, so `C ≡ 0`; under gossip, `C`
+/// tracks how far neighborhood averaging has let the replicas drift —
+/// the quantity decentralized-VI analyses (e.g. Beznosikov et al. 2021)
+/// bound via the spectral gap of the communication graph.
+pub fn consensus_distance(replicas: &[Vec<f32>]) -> f64 {
+    let k = replicas.len();
+    if k == 0 {
+        return 0.0;
+    }
+    let d = replicas[0].len();
+    debug_assert!(replicas.iter().all(|r| r.len() == d));
+    let mut mean = vec![0.0f64; d];
+    for r in replicas {
+        for (m, &x) in mean.iter_mut().zip(r.iter()) {
+            *m += x as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= k as f64;
+    }
+    let mut sum_sq = 0.0f64;
+    for r in replicas {
+        for (m, &x) in mean.iter().zip(r.iter()) {
+            let dev = x as f64 - m;
+            sum_sq += dev * dev;
+        }
+    }
+    (sum_sq / k as f64).sqrt()
+}
+
 /// One named scalar series indexed by step.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
@@ -125,6 +162,20 @@ mod tests {
         assert!(contents.contains("a,0,1"));
         assert!(contents.contains("scalar:s,0,2"));
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn consensus_distance_basics() {
+        // identical replicas → zero
+        let same = vec![vec![1.0f32, 2.0]; 4];
+        assert_eq!(consensus_distance(&same), 0.0);
+        // two replicas at ±1 around 0 in one coordinate: RMS deviation = 1
+        let two = vec![vec![1.0f32], vec![-1.0f32]];
+        assert!((consensus_distance(&two) - 1.0).abs() < 1e-12);
+        // scale-equivariant
+        let twox = vec![vec![2.0f32], vec![-2.0f32]];
+        assert!((consensus_distance(&twox) - 2.0).abs() < 1e-12);
+        assert_eq!(consensus_distance(&[]), 0.0);
     }
 
     #[test]

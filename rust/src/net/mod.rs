@@ -15,7 +15,16 @@
 
 pub mod transport;
 
-pub use transport::AllGather;
+pub use transport::{AllGather, PoisonGuard};
+
+/// Exact payload bits → wire bytes (the wire rounds every payload up to a
+/// whole byte). The one place this conversion lives; callers throughout
+/// `train`, `topo` and the coordinators use it instead of hand-rolling
+/// `div_ceil(8)`.
+#[inline]
+pub const fn bits_to_bytes(bits: u64) -> usize {
+    (bits as usize).div_ceil(8)
+}
 
 /// α-β network cost model.
 #[derive(Clone, Copy, Debug)]
@@ -70,21 +79,6 @@ impl NetModel {
             .fold(0.0, f64::max)
     }
 
-    /// Star topology through a leader: gather then broadcast
-    /// (`2(k−1)` sequential messages through the leader's NIC).
-    pub fn star_round_time(&self, bytes: &[usize]) -> f64 {
-        let k = bytes.len();
-        if k <= 1 {
-            return 0.0;
-        }
-        let total: usize = bytes.iter().sum();
-        let max_b = *bytes.iter().max().unwrap();
-        // gather: leader receives (k-1) messages serially; broadcast:
-        // leader sends the aggregate (≈ max_b after aggregation) to k-1.
-        2.0 * self.latency_s
-            + (total - max_b.min(total)) as f64 / self.bandwidth_bps
-            + ((k - 1) * max_b) as f64 / self.bandwidth_bps
-    }
 }
 
 /// Exact traffic accounting for one run.
@@ -104,18 +98,31 @@ pub struct TrafficStats {
 
 impl TrafficStats {
     /// Record one allgather round: each of the `k` peers broadcast its
-    /// payload to `k − 1` others.
+    /// payload to `k − 1` others (full-mesh; topology-aware rounds go
+    /// through [`crate::topo::Collective`], which calls
+    /// [`Self::record_modeled`] with its own α-β cost).
     pub fn record_allgather(&mut self, bits_each: &[u64], model: &NetModel) {
         let k = bits_each.len();
         if k == 0 {
             return;
         }
-        let bytes: Vec<usize> = bits_each.iter().map(|&b| b.div_ceil(8) as usize).collect();
-        for &b in bits_each {
-            self.bits_sent += b * (k.saturating_sub(1)) as u64;
-        }
-        self.messages += (k * k.saturating_sub(1)) as u64;
-        self.sim_net_time += model.allgather_time(&bytes);
+        let bytes: Vec<usize> = bits_each.iter().map(|&b| bits_to_bytes(b)).collect();
+        let wire_bits: u64 =
+            bits_each.iter().map(|&b| b * (k.saturating_sub(1)) as u64).sum();
+        self.record_modeled(
+            wire_bits,
+            (k * k.saturating_sub(1)) as u64,
+            model.allgather_time(&bytes),
+        );
+    }
+
+    /// Record one synchronous round whose wire bits / message count /
+    /// simulated time were computed by an external cost model (the topology
+    /// layer). Bumps `rounds` by one.
+    pub fn record_modeled(&mut self, wire_bits: u64, messages: u64, secs: f64) {
+        self.bits_sent += wire_bits;
+        self.messages += messages;
+        self.sim_net_time += secs;
         self.rounds += 1;
     }
 
@@ -192,10 +199,23 @@ mod tests {
     }
 
     #[test]
-    fn star_slower_than_mesh_for_equal_payloads() {
-        let m = NetModel::new(1e6, 1e-4);
-        let bytes = [1000usize; 4];
-        assert!(m.star_round_time(&bytes) > m.allgather_time(&bytes) * 0.99);
+    fn bits_to_bytes_rounds_up() {
+        assert_eq!(bits_to_bytes(0), 0);
+        assert_eq!(bits_to_bytes(1), 1);
+        assert_eq!(bits_to_bytes(8), 1);
+        assert_eq!(bits_to_bytes(9), 2);
+        assert_eq!(bits_to_bytes(800), 100);
+    }
+
+    #[test]
+    fn record_modeled_accumulates_raw_counts() {
+        let mut s = TrafficStats::default();
+        s.record_modeled(1000, 12, 0.25);
+        s.record_modeled(500, 6, 0.25);
+        assert_eq!(s.bits_sent, 1500);
+        assert_eq!(s.messages, 18);
+        assert_eq!(s.rounds, 2);
+        assert!((s.sim_net_time - 0.5).abs() < 1e-12);
     }
 
     #[test]

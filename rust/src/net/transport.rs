@@ -3,27 +3,41 @@
 //! `K` worker threads each deposit one payload per round and receive
 //! everyone's payloads — the exact communication pattern of Algorithm 1
 //! ("each processor receives stochastic dual vectors from all other
-//! processors"). Implementation: a shared slot array + two-phase barrier
-//! (deposit → read). Payloads are `Vec<u8>` — real encoded wire bytes, so
-//! the transport also measures exact per-round sizes.
+//! processors"). Payloads are `Vec<u8>` — real encoded wire bytes, so the
+//! transport also measures exact per-round sizes. Topology-restricted
+//! delivery (ring/star/tree/gossip) is layered on top by
+//! [`crate::topo::Collective`], which uses this full exchange as the
+//! physical substrate and applies the logical delivery pattern.
 //!
-//! The generation counter catches protocol misuse (a worker calling twice
-//! in one round) in debug builds, and `poisoned` propagates a worker panic
-//! to its peers instead of deadlocking.
+//! Implementation: a two-phase (deposit → read) sense-reversing barrier on
+//! one mutex + condvar. A worker that panics mid-round would leave its
+//! peers blocked forever with a plain `std::sync::Barrier`; instead every
+//! worker holds a [`PoisonGuard`] whose `Drop` during a panic marks the
+//! group poisoned and wakes all waiters, which then return
+//! [`Error::Coordinator`] — the failure propagates instead of deadlocking.
+//! (Clean `Err` returns don't unwind, so the coordinator additionally calls
+//! [`AllGather::poison`] when a worker exits with an error.)
 
-use std::sync::{Arc, Barrier, Mutex};
+use crate::error::{Error, Result};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// One synchronous allgather group of `k` participants.
 pub struct AllGather {
     k: usize,
-    slots: Mutex<Slots>,
-    enter: Barrier,
-    exit: Barrier,
+    state: Mutex<State>,
+    cv: Condvar,
 }
 
-struct Slots {
+struct State {
     payloads: Vec<Option<Arc<Vec<u8>>>>,
+    /// Deposits received this round.
+    deposited: usize,
+    /// Participants that finished reading this round.
+    read: usize,
+    /// Round counter; readers wait on it to flip before re-entering.
     generation: u64,
+    /// Set when any participant panicked; sticky.
+    poisoned: bool,
 }
 
 impl AllGather {
@@ -31,9 +45,14 @@ impl AllGather {
         assert!(k >= 1);
         Arc::new(AllGather {
             k,
-            slots: Mutex::new(Slots { payloads: vec![None; k], generation: 0 }),
-            enter: Barrier::new(k),
-            exit: Barrier::new(k),
+            state: Mutex::new(State {
+                payloads: vec![None; k],
+                deposited: 0,
+                read: 0,
+                generation: 0,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
         })
     }
 
@@ -41,37 +60,105 @@ impl AllGather {
         self.k
     }
 
+    /// RAII handle that poisons the group if dropped during a panic.
+    /// Every worker thread should hold one for the duration of its run.
+    pub fn guard(self: &Arc<Self>) -> PoisonGuard {
+        PoisonGuard(self.clone())
+    }
+
+    /// Mark the group poisoned and wake all waiters.
+    pub fn poison(&self) {
+        let mut s = self.lock();
+        s.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.lock().poisoned
+    }
+
+    /// Deposits outstanding in the current round (diagnostics/tests).
+    pub fn pending_deposits(&self) -> usize {
+        self.lock().deposited
+    }
+
+    /// Lock the state, surviving mutex poisoning (a panicking peer may have
+    /// held the lock; our own `poisoned` flag is the source of truth).
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn wait<'a>(&self, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
+        self.cv.wait(g).unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn poison_err() -> Error {
+        Error::Coordinator("allgather poisoned: a peer worker panicked mid-round".into())
+    }
+
     /// Exchange: worker `rank` contributes `payload`, gets back all `k`
     /// payloads (rank-indexed, including its own). Blocks until everyone
-    /// arrives. Panics on double-deposit within a round.
-    pub fn exchange(&self, rank: usize, payload: Vec<u8>) -> Vec<Arc<Vec<u8>>> {
+    /// arrives. Errors on double-deposit within a round and when the group
+    /// is poisoned by a peer's panic.
+    pub fn exchange(&self, rank: usize, payload: Vec<u8>) -> Result<Vec<Arc<Vec<u8>>>> {
         assert!(rank < self.k);
-        {
-            let mut s = self.slots.lock().unwrap();
-            assert!(
-                s.payloads[rank].is_none(),
-                "worker {rank} deposited twice in one round"
-            );
-            s.payloads[rank] = Some(Arc::new(payload));
+        // Phase 1: deposit, then wait until all k deposits are in.
+        let mut s = self.lock();
+        if s.poisoned {
+            return Err(Self::poison_err());
         }
-        // Wait until all deposits are in.
-        self.enter.wait();
-        let out: Vec<Arc<Vec<u8>>> = {
-            let s = self.slots.lock().unwrap();
-            s.payloads.iter().map(|p| p.clone().expect("slot must be filled")).collect()
-        };
-        // Second barrier: nobody proceeds until everyone has read. After it,
-        // each worker clears only its OWN slot — a leader-side wipe would
-        // race with a fast worker's next-round deposit.
-        let leader = self.exit.wait();
-        {
-            let mut s = self.slots.lock().unwrap();
-            s.payloads[rank] = None;
-            if leader.is_leader() {
-                s.generation += 1;
+        if s.payloads[rank].is_some() {
+            return Err(Error::Coordinator(format!(
+                "worker {rank} deposited twice in one round"
+            )));
+        }
+        s.payloads[rank] = Some(Arc::new(payload));
+        s.deposited += 1;
+        if s.deposited == self.k {
+            self.cv.notify_all();
+        }
+        while s.deposited < self.k && !s.poisoned {
+            s = self.wait(s);
+        }
+        if s.poisoned {
+            return Err(Self::poison_err());
+        }
+        let out: Vec<Arc<Vec<u8>>> =
+            s.payloads.iter().map(|p| p.clone().expect("slot must be filled")).collect();
+        // Phase 2: the last reader resets the slots and flips the
+        // generation; everyone else waits for the flip so a fast worker's
+        // next-round deposit cannot race a slow worker's read.
+        s.read += 1;
+        if s.read == self.k {
+            s.deposited = 0;
+            s.read = 0;
+            for p in s.payloads.iter_mut() {
+                *p = None;
+            }
+            s.generation = s.generation.wrapping_add(1);
+            self.cv.notify_all();
+        } else {
+            let gen = s.generation;
+            while s.generation == gen && !s.poisoned {
+                s = self.wait(s);
+            }
+            if s.poisoned {
+                return Err(Self::poison_err());
             }
         }
-        out
+        Ok(out)
+    }
+}
+
+/// Dropping this during a panic poisons the [`AllGather`] group so peers
+/// blocked in [`AllGather::exchange`] error out instead of deadlocking.
+pub struct PoisonGuard(Arc<AllGather>);
+
+impl Drop for PoisonGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
     }
 }
 
@@ -90,7 +177,7 @@ mod tests {
                 thread::spawn(move || {
                     for round in 0..10u8 {
                         let payload = vec![rank as u8, round];
-                        let got = ag.exchange(rank, payload);
+                        let got = ag.exchange(rank, payload).unwrap();
                         assert_eq!(got.len(), k);
                         for (r, p) in got.iter().enumerate() {
                             assert_eq!(p.as_slice(), &[r as u8, round]);
@@ -108,9 +195,12 @@ mod tests {
     #[test]
     fn single_participant_trivially_exchanges() {
         let ag = AllGather::new(1);
-        let got = ag.exchange(0, vec![7, 7]);
+        let got = ag.exchange(0, vec![7, 7]).unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].as_slice(), &[7, 7]);
+        // and again — generations reset correctly for the next round
+        let got = ag.exchange(0, vec![8]).unwrap();
+        assert_eq!(got[0].as_slice(), &[8]);
     }
 
     #[test]
@@ -123,7 +213,7 @@ mod tests {
                 thread::spawn(move || {
                     for round in 1..6usize {
                         let payload = vec![rank as u8; round * (rank + 1)];
-                        let got = ag.exchange(rank, payload);
+                        let got = ag.exchange(rank, payload).unwrap();
                         assert_eq!(got[0].len(), round);
                         assert_eq!(got[1].len(), round * 2);
                     }
@@ -133,5 +223,60 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn peer_panic_poisons_instead_of_deadlocking() {
+        let k = 3;
+        let ag = AllGather::new(k);
+        let mut handles = Vec::new();
+        // Workers 0 and 2 run normally; worker 1 panics mid-round after a
+        // successful first exchange.
+        for rank in [0usize, 2] {
+            let ag = ag.clone();
+            handles.push(thread::spawn(move || -> Result<()> {
+                let _guard = ag.guard();
+                ag.exchange(rank, vec![rank as u8])?;
+                // Round 2: worker 1 never deposits; this must error out, not hang.
+                ag.exchange(rank, vec![rank as u8])?;
+                Ok(())
+            }));
+        }
+        let crasher = {
+            let ag = ag.clone();
+            thread::spawn(move || {
+                let _guard = ag.guard();
+                ag.exchange(1, vec![1]).unwrap();
+                panic!("simulated oracle failure on worker 1");
+            })
+        };
+        assert!(crasher.join().is_err(), "crasher must panic");
+        for h in handles {
+            let res = h.join().expect("survivors must not panic");
+            let err = res.expect_err("survivors must observe poisoning");
+            assert!(err.to_string().contains("poisoned"), "got: {err}");
+        }
+        assert!(ag.is_poisoned());
+        // Any later round fails fast.
+        assert!(ag.exchange(0, vec![0]).is_err());
+    }
+
+    #[test]
+    fn double_deposit_is_an_error_not_a_panic() {
+        let ag = AllGather::new(2);
+        let ag2 = ag.clone();
+        let t = thread::spawn(move || ag2.exchange(0, vec![0]));
+        // Wait until the spawned thread's rank-0 deposit has actually
+        // landed (a sleep would race on a loaded machine), then deposit on
+        // the same rank — must error immediately.
+        while ag.pending_deposits() == 0 {
+            thread::yield_now();
+        }
+        let err = ag.exchange(0, vec![9]).expect_err("double deposit");
+        assert!(err.to_string().contains("twice"), "got: {err}");
+        // Unblock the waiter so the test ends cleanly.
+        let got = ag.exchange(1, vec![1]).unwrap();
+        assert_eq!(got.len(), 2);
+        t.join().unwrap().unwrap();
     }
 }

@@ -71,12 +71,16 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.json"))?;
         let client = xla::PjRtClient::cpu()?;
-        log::info!(
-            "runtime: platform={} devices={} artifacts={}",
-            client.platform_name(),
-            client.device_count(),
-            dir.display()
-        );
+        // Opt-in banner (the old log::info! was a no-op without a backend;
+        // keep stderr clean by default for benches and piped output).
+        if std::env::var_os("QGENX_VERBOSE").is_some() {
+            eprintln!(
+                "runtime: platform={} devices={} artifacts={}",
+                client.platform_name(),
+                client.device_count(),
+                dir.display()
+            );
+        }
         Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
     }
 

@@ -1,0 +1,401 @@
+//! The [`Collective`] trait: one exchange round of real encoded wire bytes
+//! over a [`Topology`], generalizing the seed's flat `AllGather`.
+//!
+//! Physical vs logical: in-process, every worker's payload lands in the
+//! shared-slot [`AllGather`] transport (that is our wire). The collective
+//! decides (a) which payloads each rank *logically* receives —
+//! [`Collective::recipients`] — (b) what the round costs under the α-β
+//! model — [`Collective::round_cost`] — and (c) how the round's bytes land
+//! on individual directed links — [`Collective::link_loads`], accumulated
+//! by [`LinkTraffic`]. Exact topologies deliver every rank the full `K`
+//! payload set (the simulation's stand-in for in-network aggregation of
+//! the rank-order mean — see the module doc of [`crate::topo`]); gossip
+//! delivers closed neighborhoods only.
+
+use super::cost::{self, RoundCost, AGG_PIGGYBACK_BYTES};
+use super::{gossip_neighbors, Topology};
+use crate::error::Result;
+use crate::net::{bits_to_bytes, AllGather, NetModel, TrafficStats};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// A directed link `(sender, receiver)`.
+pub type Link = (usize, usize);
+
+/// One synchronous exchange round of encoded wire bytes over a topology.
+pub trait Collective: Send + Sync {
+    /// Participants.
+    fn k(&self) -> usize;
+
+    /// The graph this collective runs on.
+    fn topology(&self) -> Topology;
+
+    /// Ranks whose payloads `rank` logically receives this round
+    /// (sorted, always includes `rank` itself).
+    fn recipients(&self, rank: usize) -> Vec<usize>;
+
+    /// α-β cost of one round given everyone's exact payload bits.
+    fn round_cost(&self, model: &NetModel, bits_each: &[u64]) -> RoundCost;
+
+    /// Modeled payload bytes per directed link for one round.
+    fn link_loads(&self, bits_each: &[u64]) -> Vec<(Link, f64)>;
+
+    /// Execute one round through the in-process transport: deposit
+    /// `payload`, block for the barrier, and return the payloads this rank
+    /// logically receives as `(sender, bytes)` plus everyone's exact
+    /// payload bit counts (every rank sees the same `bits` vector, so
+    /// accounting stays replica-identical).
+    fn exchange(
+        &self,
+        transport: &AllGather,
+        rank: usize,
+        payload: Vec<u8>,
+    ) -> Result<(Vec<(usize, Arc<Vec<u8>>)>, Vec<u64>)> {
+        let got = transport.exchange(rank, payload)?;
+        let bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
+        let recv =
+            self.recipients(rank).into_iter().map(|r| (r, got[r].clone())).collect();
+        Ok((recv, bits))
+    }
+
+    /// Record one round into `traffic` (wire bits, messages, modeled time).
+    fn record_round(&self, bits_each: &[u64], model: &NetModel, traffic: &mut TrafficStats) {
+        let c = self.round_cost(model, bits_each);
+        traffic.record_modeled(c.wire_bits, c.messages, c.secs);
+    }
+}
+
+/// Build the collective for a topology over `k` ranks.
+pub fn build_collective(topo: Topology, k: usize) -> Result<Arc<dyn Collective>> {
+    match topo {
+        Topology::Gossip { degree, seed } => {
+            Ok(Arc::new(GossipCollective::new(k, degree, seed)))
+        }
+        _ => Ok(Arc::new(ExactCollective { topo, k })),
+    }
+}
+
+/// Mesh / star / ring / hierarchical: every rank logically receives all `K`
+/// payloads; topologies differ only in cost and link pattern.
+pub struct ExactCollective {
+    topo: Topology,
+    k: usize,
+}
+
+impl Collective for ExactCollective {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    fn recipients(&self, _rank: usize) -> Vec<usize> {
+        (0..self.k).collect()
+    }
+
+    fn round_cost(&self, model: &NetModel, bits_each: &[u64]) -> RoundCost {
+        match self.topo {
+            Topology::FullMesh => cost::full_mesh(model, bits_each),
+            Topology::Star => cost::star(model, bits_each),
+            Topology::Ring => cost::ring(model, bits_each),
+            Topology::Hierarchical { groups } => {
+                cost::hierarchical(model, bits_each, groups)
+            }
+            Topology::Gossip { .. } => unreachable!("gossip uses GossipCollective"),
+        }
+    }
+
+    fn link_loads(&self, bits_each: &[u64]) -> Vec<(Link, f64)> {
+        let k = self.k;
+        if k <= 1 {
+            return Vec::new();
+        }
+        let bytes: Vec<f64> =
+            bits_each.iter().map(|&b| bits_to_bytes(b) as f64).collect();
+        let agg = (bits_each.iter().map(|&b| bits_to_bytes(b)).max().unwrap_or(0)
+            + AGG_PIGGYBACK_BYTES) as f64;
+        let mut out = Vec::new();
+        match self.topo {
+            Topology::FullMesh => {
+                for i in 0..k {
+                    for j in 0..k {
+                        if i != j {
+                            out.push(((i, j), bytes[i]));
+                        }
+                    }
+                }
+            }
+            Topology::Star => {
+                // push: i's foreign shard slice to j; pull: j's aggregated
+                // shard back to i.
+                for i in 0..k {
+                    for j in 0..k {
+                        if i != j {
+                            out.push(((i, j), bytes[i] / k as f64 + agg / k as f64));
+                        }
+                    }
+                }
+            }
+            Topology::Ring => {
+                let per_link = 2.0 * (k - 1) as f64 * agg / k as f64;
+                for i in 0..k {
+                    out.push(((i, (i + 1) % k), per_link));
+                }
+            }
+            Topology::Hierarchical { groups } => {
+                let ranges = super::group_ranges(k, groups);
+                let leaders: Vec<usize> = ranges.iter().map(|r| r.start).collect();
+                for range in &ranges {
+                    let leader = range.start;
+                    for r in range.start + 1..range.end {
+                        out.push(((r, leader), bytes[r])); // up, exact leaf
+                        out.push(((leader, r), agg)); // down, aggregate
+                    }
+                }
+                for &a in &leaders {
+                    for &b in &leaders {
+                        if a != b {
+                            out.push(((a, b), agg));
+                        }
+                    }
+                }
+            }
+            Topology::Gossip { .. } => unreachable!("gossip uses GossipCollective"),
+        }
+        out
+    }
+}
+
+/// Gossip: fixed undirected graph; each rank receives only its closed
+/// neighborhood. Replicas become *neighborhood averages* — inexact by
+/// design; consensus is tracked by [`crate::metrics::consensus_distance`].
+pub struct GossipCollective {
+    k: usize,
+    topo: Topology,
+    /// Closed neighborhoods (sorted, self included).
+    closed: Vec<Vec<usize>>,
+    /// Open degree per rank.
+    degrees: Vec<usize>,
+}
+
+impl GossipCollective {
+    pub fn new(k: usize, degree: usize, seed: u64) -> Self {
+        let open = gossip_neighbors(k, degree, seed);
+        let degrees: Vec<usize> = open.iter().map(|n| n.len()).collect();
+        let closed = open
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut n)| {
+                n.push(i);
+                n.sort_unstable();
+                n
+            })
+            .collect();
+        GossipCollective { k, topo: Topology::Gossip { degree, seed }, closed, degrees }
+    }
+
+    /// Closed neighborhood sizes (the per-worker `K_r` the gossip replicas
+    /// average over).
+    pub fn neighborhood_sizes(&self) -> Vec<usize> {
+        self.closed.iter().map(|n| n.len()).collect()
+    }
+}
+
+impl Collective for GossipCollective {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    fn recipients(&self, rank: usize) -> Vec<usize> {
+        self.closed[rank].clone()
+    }
+
+    fn round_cost(&self, model: &NetModel, bits_each: &[u64]) -> RoundCost {
+        cost::gossip(model, bits_each, &self.degrees)
+    }
+
+    fn link_loads(&self, bits_each: &[u64]) -> Vec<(Link, f64)> {
+        let mut out = Vec::new();
+        for (i, neigh) in self.closed.iter().enumerate() {
+            for &j in neigh {
+                if j != i {
+                    out.push(((i, j), bits_to_bytes(bits_each[i]) as f64));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Accumulated per-directed-link payload bytes across a run — the
+/// per-link half of the traffic accounting (totals live in
+/// [`TrafficStats`]). Answers "which wire is hot under this topology?".
+#[derive(Clone, Debug, Default)]
+pub struct LinkTraffic {
+    loads: BTreeMap<Link, f64>,
+}
+
+impl LinkTraffic {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate one round's link loads.
+    pub fn record(&mut self, coll: &dyn Collective, bits_each: &[u64]) {
+        for (link, bytes) in coll.link_loads(bits_each) {
+            *self.loads.entry(link).or_insert(0.0) += bytes;
+        }
+    }
+
+    /// Number of distinct directed links that carried traffic.
+    pub fn links(&self) -> usize {
+        self.loads.len()
+    }
+
+    /// Total bytes across all links.
+    pub fn total_bytes(&self) -> f64 {
+        self.loads.values().sum()
+    }
+
+    /// Hottest link and its bytes.
+    pub fn hottest(&self) -> Option<(Link, f64)> {
+        self.loads
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(&l, &b)| (l, b))
+    }
+
+    /// Max single-link bytes (0 if no traffic).
+    pub fn max_link_bytes(&self) -> f64 {
+        self.hottest().map(|(_, b)| b).unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopoConfig;
+
+    fn mk(kind: &str, k: usize) -> Arc<dyn Collective> {
+        let mut cfg = TopoConfig::default();
+        cfg.kind = kind.into();
+        let topo = Topology::from_config(&cfg, k).unwrap();
+        build_collective(topo, k).unwrap()
+    }
+
+    #[test]
+    fn mesh_collective_matches_seed_traffic_accounting() {
+        // The full-mesh collective must reproduce record_allgather exactly —
+        // the bit-for-bit compatibility contract with the seed.
+        let model = NetModel::new(1e6, 0.0);
+        let coll = mk("full-mesh", 3);
+        let bits = [800u64, 800, 800];
+        let mut a = TrafficStats::default();
+        let mut b = TrafficStats::default();
+        a.record_allgather(&bits, &model);
+        coll.record_round(&bits, &model, &mut b);
+        assert_eq!(a.bits_sent, b.bits_sent);
+        assert_eq!(a.messages, b.messages);
+        assert_eq!(a.rounds, b.rounds);
+        assert!((a.sim_net_time - b.sim_net_time).abs() < 1e-15);
+    }
+
+    #[test]
+    fn exact_collectives_deliver_everyone() {
+        for kind in ["full-mesh", "star", "ring", "hierarchical"] {
+            let coll = mk(kind, 5);
+            for r in 0..5 {
+                assert_eq!(coll.recipients(r), vec![0, 1, 2, 3, 4], "{kind} rank {r}");
+            }
+            assert!(coll.topology().is_exact());
+        }
+    }
+
+    #[test]
+    fn gossip_delivers_closed_neighborhoods_only() {
+        let coll = mk("gossip", 8);
+        for r in 0..8 {
+            let recv = coll.recipients(r);
+            assert!(recv.contains(&r), "self always included");
+            assert!(recv.len() < 8, "gossip must not be full mesh at k=8");
+            assert!(recv.windows(2).all(|w| w[0] < w[1]), "sorted");
+        }
+        assert!(!coll.topology().is_exact());
+    }
+
+    #[test]
+    fn exchange_filters_by_recipients() {
+        let k = 4;
+        let coll = mk("gossip", k);
+        let transport = AllGather::new(k);
+        let mut handles = Vec::new();
+        for rank in 0..k {
+            let coll = {
+                // rebuild an identical collective per thread (deterministic graph)
+                mk("gossip", k)
+            };
+            let transport = transport.clone();
+            handles.push(std::thread::spawn(move || {
+                let (recv, bits) =
+                    coll.exchange(&transport, rank, vec![rank as u8; rank + 1]).unwrap();
+                assert_eq!(bits.len(), k);
+                for (w, &b) in bits.iter().enumerate() {
+                    assert_eq!(b, 8 * (w as u64 + 1), "exact sizes visible to all");
+                }
+                for (sender, payload) in &recv {
+                    assert_eq!(payload.len(), sender + 1);
+                    assert!(payload.iter().all(|&x| x == *sender as u8));
+                }
+                recv.iter().map(|(s, _)| *s).collect::<Vec<_>>()
+            }));
+        }
+        let views: Vec<Vec<usize>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (r, v) in views.iter().enumerate() {
+            assert_eq!(*v, coll.recipients(r));
+        }
+    }
+
+    #[test]
+    fn link_loads_are_consistent_with_round_totals() {
+        // For topologies whose wire bits are purely byte-modeled, the sum of
+        // link loads ≈ total wire bytes.
+        let model = NetModel::gbe();
+        let bits = vec![8 * 1000u64; 6];
+        for kind in ["full-mesh", "star", "ring", "hierarchical", "gossip"] {
+            let coll = mk(kind, 6);
+            let total: f64 = coll.link_loads(&bits).iter().map(|(_, b)| b).sum();
+            let cost = coll.round_cost(&model, &bits);
+            let wire_bytes = cost.wire_bits as f64 / 8.0;
+            assert!(
+                (total - wire_bytes).abs() / wire_bytes < 0.05,
+                "{kind}: links {total} vs cost {wire_bytes}"
+            );
+        }
+    }
+
+    #[test]
+    fn link_traffic_identifies_hot_links() {
+        let bits = vec![8 * 1000u64; 6];
+        // hierarchical: leader links are hotter than member links
+        let coll = mk("hierarchical", 6);
+        let mut lt = LinkTraffic::new();
+        lt.record(coll.as_ref(), &bits);
+        lt.record(coll.as_ref(), &bits);
+        assert!(lt.links() > 0);
+        let ((a, b), hot) = lt.hottest().unwrap();
+        assert!(hot >= lt.total_bytes() / lt.links() as f64, "hottest >= mean");
+        assert_ne!(a, b);
+        // ring: all k links equal
+        let ring = mk("ring", 6);
+        let mut lr = LinkTraffic::new();
+        lr.record(ring.as_ref(), &bits);
+        assert_eq!(lr.links(), 6);
+        assert!((lr.max_link_bytes() - lr.total_bytes() / 6.0).abs() < 1e-9);
+    }
+}

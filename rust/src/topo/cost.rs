@@ -1,0 +1,306 @@
+//! α-β round cost per topology.
+//!
+//! Shared model assumptions (documented once, used by every formula):
+//!
+//! * Every node has one full-duplex NIC of bandwidth `β` bytes/s; a node's
+//!   concurrent sends serialize over its own NIC while receives overlap.
+//! * Each sequential *phase* of a collective pays the latency `α` once
+//!   (messages inside a phase pipeline).
+//! * The half-step exchange is semantically an **allreduce**: Algorithm 1
+//!   only consumes the rank-order mean of the decoded dual vectors, so
+//!   aggregation-capable topologies forward *aggregates* instead of raw
+//!   payload sets. An aggregate message re-encoded through `CODE ∘ Q` is
+//!   modeled at the size of the largest leaf payload, plus
+//!   [`AGG_PIGGYBACK_BYTES`] for the piggybacked per-worker step-size
+//!   statistic `‖V̂_{k,t} − V̂_{k,t+1/2}‖²` (one f64 — the adaptive
+//!   step-size needs the per-worker sum, which aggregation would otherwise
+//!   destroy).
+//! * The full mesh cannot aggregate (every node needs to *form* the mean
+//!   itself), so it pays `(K−1)·b` per NIC — the seed's
+//!   [`NetModel::allgather_time`], unchanged. This is what ring / star /
+//!   hierarchical beat at scale: their per-NIC traffic is `O(b)` instead of
+//!   `O(K·b)`.
+//!
+//! Exact wire bits are preserved where leaves travel unaggregated (mesh
+//! leaf broadcasts, hierarchical up-links, gossip edges); aggregate
+//! messages are accounted at their modeled byte size.
+
+use crate::net::{bits_to_bytes, NetModel};
+
+/// Bytes added to every aggregate message for the piggybacked per-worker
+/// step-size statistic (one f64).
+pub const AGG_PIGGYBACK_BYTES: usize = 8;
+
+/// Modeled cost of one synchronous exchange round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundCost {
+    /// Simulated wall-clock seconds (α-β model).
+    pub secs: f64,
+    /// Total payload bits put on the wire by all senders.
+    pub wire_bits: u64,
+    /// Point-to-point messages.
+    pub messages: u64,
+}
+
+/// Size (bytes) of an aggregate message: largest leaf payload re-encoded,
+/// plus the piggybacked step-size scalar.
+fn aggregate_bytes(bits_each: &[u64]) -> usize {
+    let max_b = bits_each.iter().map(|&b| bits_to_bytes(b)).max().unwrap_or(0);
+    max_b + AGG_PIGGYBACK_BYTES
+}
+
+/// Full mesh: flat synchronous allgather, no aggregation possible. Every
+/// node serializes `K−1` copies of its payload over its NIC:
+/// `max_i (α + (K−1)·b_i/β)`. Bit-identical accounting to the seed's
+/// `TrafficStats::record_allgather`.
+pub fn full_mesh(model: &NetModel, bits_each: &[u64]) -> RoundCost {
+    let k = bits_each.len();
+    if k <= 1 {
+        return RoundCost::default();
+    }
+    let bytes: Vec<usize> = bits_each.iter().map(|&b| bits_to_bytes(b)).collect();
+    RoundCost {
+        secs: model.allgather_time(&bytes),
+        wire_bits: bits_each.iter().map(|&b| b * (k - 1) as u64).sum(),
+        messages: (k * (k - 1)) as u64,
+    }
+}
+
+/// Ring allreduce (reduce-scatter + allgather of aggregate chunks):
+/// `2(K−1)` pipeline steps, each moving one `b̄/K` chunk per node:
+/// `2(K−1)·(α + (b̄/K)/β)`. Per-NIC traffic `≈ 2b̄` — independent of `K`.
+pub fn ring(model: &NetModel, bits_each: &[u64]) -> RoundCost {
+    let k = bits_each.len();
+    if k <= 1 {
+        return RoundCost::default();
+    }
+    let agg = aggregate_bytes(bits_each) as f64;
+    let chunk = agg / k as f64;
+    let steps = 2 * (k - 1);
+    RoundCost {
+        secs: steps as f64 * (model.latency_s + chunk / model.bandwidth_bps),
+        // every node sends `steps` chunks: k · steps · (agg/k) = steps · agg
+        wire_bits: (8.0 * steps as f64 * agg).round() as u64,
+        messages: (k * steps) as u64,
+    }
+}
+
+/// Star as a *sharded* parameter server (the production deployment: each
+/// worker serves `1/K` of the coordinates). Push: every worker sends its
+/// `K−1` foreign shard slices; pull: every shard server returns its
+/// aggregated shard to `K−1` workers. Two phases:
+/// `2α + ((K−1)/K)·(b_max + b̄)/β`.
+pub fn star(model: &NetModel, bits_each: &[u64]) -> RoundCost {
+    let k = bits_each.len();
+    if k <= 1 {
+        return RoundCost::default();
+    }
+    let agg = aggregate_bytes(bits_each) as f64;
+    let frac = (k - 1) as f64 / k as f64;
+    let max_b = bits_each.iter().map(|&b| bits_to_bytes(b)).max().unwrap_or(0) as f64;
+    let push_secs = model.latency_s + frac * max_b / model.bandwidth_bps;
+    let pull_secs = model.latency_s + frac * agg / model.bandwidth_bps;
+    let push_bytes: f64 = bits_each.iter().map(|&b| bits_to_bytes(b) as f64 * frac).sum();
+    let pull_bytes = (k - 1) as f64 * agg; // k servers × (k−1) pulls × agg/k
+    RoundCost {
+        secs: push_secs + pull_secs,
+        wire_bits: (8.0 * (push_bytes + pull_bytes)).round() as u64,
+        messages: 2 * (k * (k - 1)) as u64,
+    }
+}
+
+/// Centralized single-leader star — the seed's test-only
+/// `NetModel::star_round_time`, absorbed here verbatim: gather `K−1`
+/// payloads serially into the leader, then the leader broadcasts the
+/// aggregate to `K−1` members over its own NIC. Kept as the reference
+/// model for an *unsharded* parameter server (always ≥ the sharded
+/// [`star`], and ≥ the mesh for equal payloads — which is why production
+/// parameter servers shard).
+pub fn centralized_star_time(model: &NetModel, bytes: &[usize]) -> f64 {
+    let k = bytes.len();
+    if k <= 1 {
+        return 0.0;
+    }
+    let total: usize = bytes.iter().sum();
+    let max_b = *bytes.iter().max().unwrap();
+    2.0 * model.latency_s
+        + (total - max_b.min(total)) as f64 / model.bandwidth_bps
+        + ((k - 1) * max_b) as f64 / model.bandwidth_bps
+}
+
+/// Two-level hierarchical reduce-broadcast over contiguous groups
+/// (`groups` groups of `⌈K/G⌉` ranks, first rank of each group leads):
+///
+/// 1. *up* — members send raw payloads to their leader (exact bits), which
+///    aggregates; leader NICs receive in parallel across groups:
+///    `α + max_g(Σ_{members} b_i)/β`;
+/// 2. *across* — the `G` leaders allgather their aggregates:
+///    `α + (G−1)·b̄/β`;
+/// 3. *down* — each leader serializes the global aggregate to its members:
+///    `α + (m_max−1)·b̄/β`.
+pub fn hierarchical(model: &NetModel, bits_each: &[u64], groups: usize) -> RoundCost {
+    let k = bits_each.len();
+    if k <= 1 {
+        return RoundCost::default();
+    }
+    let agg = aggregate_bytes(bits_each) as f64;
+    let mut up_bits: u64 = 0;
+    let mut up_max_bytes = 0usize;
+    let mut max_members = 0usize;
+    let mut n_groups = 0usize;
+    for r in super::group_ranges(k, groups) {
+        let members = r.start + 1..r.end;
+        let member_bytes: usize =
+            bits_each[members.clone()].iter().map(|&b| bits_to_bytes(b)).sum();
+        up_bits += bits_each[members.clone()].iter().sum::<u64>();
+        up_max_bytes = up_max_bytes.max(member_bytes);
+        max_members = max_members.max(members.len());
+        n_groups += 1;
+    }
+    let beta = model.bandwidth_bps;
+    let up_secs = model.latency_s + up_max_bytes as f64 / beta;
+    let across_secs = if n_groups > 1 {
+        model.latency_s + (n_groups - 1) as f64 * agg / beta
+    } else {
+        0.0
+    };
+    let down_secs = if max_members > 0 {
+        model.latency_s + max_members as f64 * agg / beta
+    } else {
+        0.0
+    };
+    let members_total = (k - n_groups) as f64;
+    let across_bytes = (n_groups * n_groups.saturating_sub(1)) as f64 * agg;
+    let down_bytes = members_total * agg;
+    RoundCost {
+        secs: up_secs + across_secs + down_secs,
+        wire_bits: up_bits + (8.0 * (across_bytes + down_bytes)).round() as u64,
+        messages: ((k - n_groups) + n_groups * n_groups.saturating_sub(1) + (k - n_groups))
+            as u64,
+    }
+}
+
+/// Gossip round over a fixed undirected graph: node `i` serializes its
+/// payload to each of its `deg_i` neighbors: `max_i (α + deg_i·b_i/β)`.
+/// Exact bits on every edge (no aggregation — neighbors decode the leaf).
+pub fn gossip(model: &NetModel, bits_each: &[u64], degrees: &[usize]) -> RoundCost {
+    let k = bits_each.len();
+    if k <= 1 {
+        return RoundCost::default();
+    }
+    debug_assert_eq!(degrees.len(), k);
+    let mut secs: f64 = 0.0;
+    let mut wire_bits = 0u64;
+    let mut messages = 0u64;
+    for (i, &b) in bits_each.iter().enumerate() {
+        let deg = degrees[i];
+        let t = model.latency_s
+            + (deg * bits_to_bytes(b)) as f64 / model.bandwidth_bps;
+        secs = secs.max(t);
+        wire_bits += b * deg as u64;
+        messages += deg as u64;
+    }
+    RoundCost { secs, wire_bits, messages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> NetModel {
+        NetModel::new(1e6, 0.0)
+    }
+
+    #[test]
+    fn mesh_matches_seed_allgather_accounting() {
+        let m = model();
+        let bits = [800u64, 800, 800];
+        let c = full_mesh(&m, &bits);
+        assert_eq!(c.wire_bits, 800 * 2 * 3);
+        assert_eq!(c.messages, 6);
+        assert!((c.secs - 2.0 * 100.0 / 1e6).abs() < 1e-12);
+        assert_eq!(full_mesh(&m, &[1234]), RoundCost::default());
+    }
+
+    #[test]
+    fn ring_and_star_beat_mesh_at_k8_bandwidth_bound() {
+        // Large equal payloads, zero latency: aggregation wins.
+        let m = model();
+        let bits = vec![8 * 100_000u64; 8];
+        let mesh = full_mesh(&m, &bits);
+        let ring_c = ring(&m, &bits);
+        let star_c = star(&m, &bits);
+        let hier_c = hierarchical(&m, &bits, 3);
+        assert!(ring_c.secs < mesh.secs, "ring {} mesh {}", ring_c.secs, mesh.secs);
+        assert!(star_c.secs < mesh.secs, "star {} mesh {}", star_c.secs, mesh.secs);
+        assert!(hier_c.secs < mesh.secs, "hier {} mesh {}", hier_c.secs, mesh.secs);
+        // and on total bytes too
+        assert!(ring_c.wire_bits < mesh.wire_bits);
+        assert!(star_c.wire_bits < mesh.wire_bits);
+        assert!(hier_c.wire_bits < mesh.wire_bits);
+    }
+
+    #[test]
+    fn ring_is_latency_bound_at_tiny_payloads() {
+        // 2(K−1) α terms: at small b the mesh's single-phase latency wins —
+        // the trade-off the topo_tradeoff bench surfaces.
+        let m = NetModel::new(1e9, 50e-6);
+        let bits = vec![8 * 64u64; 8];
+        assert!(ring(&m, &bits).secs > full_mesh(&m, &bits).secs);
+    }
+
+    #[test]
+    fn centralized_star_slower_than_mesh_for_equal_payloads() {
+        // The seed's star test, verbatim semantics (absorbed from NetModel).
+        let m = NetModel::new(1e6, 1e-4);
+        let bytes = [1000usize; 4];
+        let mesh_secs = full_mesh(&m, &[8000u64; 4]).secs;
+        assert!(centralized_star_time(&m, &bytes) > mesh_secs * 0.99);
+    }
+
+    #[test]
+    fn sharded_star_beats_centralized_star() {
+        let m = model();
+        let bits = vec![8 * 10_000u64; 8];
+        let bytes = vec![10_000usize; 8];
+        assert!(star(&m, &bits).secs < centralized_star_time(&m, &bytes));
+    }
+
+    #[test]
+    fn hierarchical_handles_uneven_last_group() {
+        let m = model();
+        let bits = vec![800u64; 8]; // G=3 → groups of 3,3,2
+        let c = hierarchical(&m, &bits, 3);
+        // up: 5 member payloads; across: 3·2 aggregates; down: 5 aggregates
+        assert_eq!(c.messages, 5 + 6 + 5);
+        assert!(c.secs > 0.0 && c.wire_bits > 0);
+        // one group degenerates to everything-in-one-group
+        let c1 = hierarchical(&m, &bits, 1);
+        assert_eq!(c1.messages, 7 + 0 + 7);
+    }
+
+    #[test]
+    fn gossip_cost_scales_with_degree() {
+        let m = model();
+        let bits = vec![800u64; 6];
+        let d2 = gossip(&m, &bits, &[2; 6]);
+        let d4 = gossip(&m, &bits, &[4; 6]);
+        assert!((d4.secs / d2.secs - 2.0).abs() < 1e-9);
+        assert_eq!(d2.wire_bits, 800 * 2 * 6);
+        assert_eq!(d4.messages, 24);
+    }
+
+    #[test]
+    fn single_node_rounds_are_free() {
+        let m = model();
+        for c in [
+            full_mesh(&m, &[64]),
+            ring(&m, &[64]),
+            star(&m, &[64]),
+            hierarchical(&m, &[64], 1),
+            gossip(&m, &[64], &[0]),
+        ] {
+            assert_eq!(c, RoundCost::default());
+        }
+    }
+}

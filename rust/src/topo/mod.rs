@@ -1,0 +1,318 @@
+//! Topology-aware collectives: which communication graph carries one
+//! exchange round of Algorithm 1, at what α-β cost.
+//!
+//! The paper's Algorithm 1 states a flat synchronous all-to-all exchange of
+//! encoded dual vectors — one topology, one cost curve. This subsystem
+//! generalizes the exchange over five graphs so the repro can pose the
+//! question the paper cannot: *how does `CODE ∘ Q` interact with the
+//! communication graph?* (cf. Beznosikov et al. 2021/2023 on decentralized
+//! extra-gradient and compression under restricted communication).
+//!
+//! * [`Topology`] — the graph family: full mesh, star (sharded parameter
+//!   server), ring, two-level hierarchical tree, random-regular gossip.
+//! * [`cost`] — per-topology α-β round timing and wire accounting,
+//!   absorbing the seed's test-only `NetModel::star_round_time`
+//!   ([`cost::centralized_star_time`]).
+//! * [`collective`] — the [`Collective`] trait: executes one exchange round
+//!   of *real encoded wire bytes* over the graph (the seed's `AllGather`
+//!   becomes the full-mesh implementation), plus per-link traffic
+//!   accounting ([`LinkTraffic`]).
+//!
+//! ## Exactness
+//!
+//! Mesh, star, ring and hierarchical are **exact**: every worker ends the
+//! round knowing the rank-order mean of all `K` decoded dual vectors
+//! (mesh by flat broadcast, the others by in-network aggregation — valid
+//! because Algorithm 1 consumes only the mean; see `cost` for how the
+//! per-worker step-size statistic survives aggregation). Exact topologies
+//! therefore produce **bit-identical trajectories** and differ only in
+//! modeled time / wire traffic. Gossip is **inexact**: each worker averages
+//! over its closed graph neighborhood only, replicas genuinely diverge, and
+//! [`crate::metrics::consensus_distance`] quantifies by how much.
+
+pub mod collective;
+pub mod cost;
+
+pub use collective::{build_collective, Collective, LinkTraffic};
+pub use cost::{RoundCost, AGG_PIGGYBACK_BYTES};
+
+use crate::config::TopoConfig;
+use crate::error::{Error, Result};
+use crate::util::Rng;
+
+/// Communication graph for one exchange round among `K` workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Flat synchronous all-to-all (the paper's Algorithm 1; the seed's
+    /// only mode). No aggregation: per-NIC traffic `O(K·b)`.
+    FullMesh,
+    /// Sharded parameter server: each worker serves `1/K` of the
+    /// coordinates; push foreign shards, pull aggregated shards.
+    Star,
+    /// Ring allreduce: reduce-scatter + allgather of aggregate chunks.
+    Ring,
+    /// Two-level tree: `groups` contiguous groups, first rank of each
+    /// group leads; reduce up, allgather across leaders, broadcast down.
+    Hierarchical {
+        /// Number of groups (resolved; never 0).
+        groups: usize,
+    },
+    /// Fixed random-regular-ish gossip graph (ring base + seeded chords up
+    /// to `degree`); workers average over closed neighborhoods only.
+    Gossip {
+        /// Target neighbor count per node (resolved to `[2, K−1]`).
+        degree: usize,
+        /// Seed for the chord placement (deterministic graph).
+        seed: u64,
+    },
+}
+
+impl Topology {
+    /// Resolve a topology from the `[topo]` config table for `k` workers.
+    /// Auto values are resolved here: `groups = 0` → `⌈√K⌉`, and explicit
+    /// `groups` is normalized to the *realized* contiguous-partition count
+    /// (e.g. K=5 with `groups = 4` partitions as {0,1},{2,3},{4} → 3);
+    /// gossip `seed = 0` → derived from `degree` (stable across runs);
+    /// gossip `degree` is clamped into `[2, K−1]` (to `K−1` when `K ≤ 3`).
+    /// Out-of-range values are clamped, never errors — only `groups`
+    /// exceeding `K` and `degree = 0` are rejected as likely typos.
+    pub fn from_config(cfg: &TopoConfig, k: usize) -> Result<Topology> {
+        if k == 0 {
+            return Err(Error::Topology("topology needs at least 1 worker".into()));
+        }
+        match cfg.kind.as_str() {
+            "full-mesh" | "mesh" | "all-to-all" | "full" => Ok(Topology::FullMesh),
+            "star" | "ps" | "parameter-server" => Ok(Topology::Star),
+            "ring" => Ok(Topology::Ring),
+            "hierarchical" | "tree" | "two-level" => {
+                let groups = if cfg.groups == 0 {
+                    (k as f64).sqrt().ceil() as usize
+                } else {
+                    cfg.groups
+                };
+                if groups > k {
+                    return Err(Error::Topology(format!(
+                        "topo.groups = {groups} exceeds workers = {k}"
+                    )));
+                }
+                // Normalize to the realized partition count so the field,
+                // the cost model and the link pattern all agree.
+                Ok(Topology::Hierarchical { groups: group_ranges(k, groups.max(1)).len() })
+            }
+            "gossip" | "random-regular" => {
+                if cfg.degree == 0 {
+                    return Err(Error::Topology("topo.degree must be >= 1".into()));
+                }
+                let degree = cfg.degree.max(2).min(k.saturating_sub(1).max(1));
+                let seed =
+                    if cfg.seed == 0 { 0xf0f0_u64 ^ (degree as u64) << 8 } else { cfg.seed };
+                Ok(Topology::Gossip { degree, seed })
+            }
+            other => Err(Error::Topology(format!(
+                "unknown topo.kind `{other}` \
+                 (full-mesh|star|ring|hierarchical|gossip)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::FullMesh => "full-mesh",
+            Topology::Star => "star",
+            Topology::Ring => "ring",
+            Topology::Hierarchical { .. } => "hierarchical",
+            Topology::Gossip { .. } => "gossip",
+        }
+    }
+
+    /// Exact topologies deliver the global rank-order mean to every worker
+    /// (bit-identical trajectories across them); gossip does not.
+    pub fn is_exact(&self) -> bool {
+        !matches!(self, Topology::Gossip { .. })
+    }
+}
+
+/// Contiguous group partition used by the hierarchical topology: `k` ranks
+/// into groups of `⌈k/g⌉`, first rank of each range leads. The single
+/// source of truth for grouping — both the cost model and the per-link
+/// pattern derive from it, so they cannot desynchronize.
+pub fn group_ranges(k: usize, groups: usize) -> Vec<std::ops::Range<usize>> {
+    let g = groups.clamp(1, k.max(1));
+    let m = k.div_ceil(g);
+    let mut out = Vec::with_capacity(g);
+    let mut gi = 0usize;
+    while gi < k {
+        let hi = (gi + m).min(k);
+        out.push(gi..hi);
+        gi = hi;
+    }
+    out
+}
+
+/// Build the gossip graph: ring base (connectivity) plus seeded chords
+/// until nodes reach `degree` neighbors (or no legal chord remains).
+/// Returns *open* neighborhoods, symmetric and sorted. Deterministic in
+/// `(k, degree, seed)`.
+pub fn gossip_neighbors(k: usize, degree: usize, seed: u64) -> Vec<Vec<usize>> {
+    if k <= 1 {
+        return vec![Vec::new(); k];
+    }
+    let degree = degree.max(1).min(k - 1);
+    let mut adj = vec![std::collections::BTreeSet::new(); k];
+    // ring base
+    for i in 0..k {
+        let j = (i + 1) % k;
+        if i != j {
+            adj[i].insert(j);
+            adj[j].insert(i);
+        }
+    }
+    let mut rng = Rng::seed_from(seed ^ (k as u64) << 32 ^ degree as u64);
+    let mut attempts = 0usize;
+    let budget = 64 * k * degree.max(1);
+    while attempts < budget {
+        attempts += 1;
+        if adj.iter().all(|n| n.len() >= degree) {
+            break;
+        }
+        let i = rng.below(k as u64) as usize;
+        let j = rng.below(k as u64) as usize;
+        if i == j || adj[i].contains(&j) || adj[i].len() >= degree || adj[j].len() >= degree {
+            continue;
+        }
+        adj[i].insert(j);
+        adj[j].insert(i);
+    }
+    adj.into_iter().map(|s| s.into_iter().collect()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopoConfig;
+
+    fn cfg(kind: &str) -> TopoConfig {
+        TopoConfig { kind: kind.into(), ..Default::default() }
+    }
+
+    #[test]
+    fn parse_all_kinds_with_aliases() {
+        assert_eq!(Topology::from_config(&cfg("mesh"), 4).unwrap(), Topology::FullMesh);
+        assert_eq!(Topology::from_config(&cfg("all-to-all"), 4).unwrap(), Topology::FullMesh);
+        assert_eq!(Topology::from_config(&cfg("ps"), 4).unwrap(), Topology::Star);
+        assert_eq!(Topology::from_config(&cfg("ring"), 4).unwrap(), Topology::Ring);
+        assert!(matches!(
+            Topology::from_config(&cfg("tree"), 9).unwrap(),
+            Topology::Hierarchical { groups: 3 }
+        ));
+        assert!(matches!(
+            Topology::from_config(&cfg("gossip"), 8).unwrap(),
+            Topology::Gossip { .. }
+        ));
+        assert!(Topology::from_config(&cfg("zzz"), 4).is_err());
+    }
+
+    #[test]
+    fn hierarchical_auto_groups_is_ceil_sqrt_k() {
+        for (k, want) in [(4, 2), (8, 3), (16, 4), (1, 1)] {
+            let Topology::Hierarchical { groups } =
+                Topology::from_config(&cfg("hierarchical"), k).unwrap()
+            else {
+                panic!()
+            };
+            assert_eq!(groups, want, "k={k}");
+        }
+        let mut c = cfg("hierarchical");
+        c.groups = 9;
+        assert!(Topology::from_config(&c, 4).is_err());
+        // explicit groups normalize to the realized partition count:
+        // k=5, groups=4 → {0,1},{2,3},{4} → 3 groups
+        c.groups = 4;
+        let Topology::Hierarchical { groups } = Topology::from_config(&c, 5).unwrap() else {
+            panic!()
+        };
+        assert_eq!(groups, 3);
+    }
+
+    #[test]
+    fn group_ranges_partition_exactly() {
+        assert_eq!(group_ranges(5, 4), vec![0..2, 2..4, 4..5]);
+        assert_eq!(group_ranges(8, 3), vec![0..3, 3..6, 6..8]);
+        assert_eq!(group_ranges(4, 1), vec![0..4]);
+        assert_eq!(group_ranges(3, 3), vec![0..1, 1..2, 2..3]);
+        // ranges cover 0..k with no gaps or overlaps
+        for (k, g) in [(7usize, 3usize), (9, 4), (16, 5), (1, 1)] {
+            let rs = group_ranges(k, g);
+            assert_eq!(rs.first().unwrap().start, 0);
+            assert_eq!(rs.last().unwrap().end, k);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_degree_validation_and_clamping() {
+        let mut c = cfg("gossip");
+        c.degree = 0;
+        assert!(Topology::from_config(&c, 8).is_err());
+        // over-degree clamps to K−1 (never an error — matches the doc)
+        c.degree = 8;
+        let Topology::Gossip { degree, .. } = Topology::from_config(&c, 8).unwrap() else {
+            panic!()
+        };
+        assert_eq!(degree, 7);
+        c.degree = 4;
+        let Topology::Gossip { degree, seed } = Topology::from_config(&c, 8).unwrap() else {
+            panic!()
+        };
+        assert_eq!(degree, 4);
+        assert_ne!(seed, 0);
+        // tiny worker counts: default degree (3) must not be an error
+        c.degree = 3;
+        for k in [2usize, 3] {
+            let Topology::Gossip { degree, .. } = Topology::from_config(&c, k).unwrap() else {
+                panic!()
+            };
+            assert_eq!(degree, k - 1, "k={k}");
+        }
+    }
+
+    #[test]
+    fn gossip_graph_is_symmetric_connected_and_deterministic() {
+        for (k, deg) in [(8usize, 3usize), (12, 4), (5, 2), (16, 5)] {
+            let a = gossip_neighbors(k, deg, 7);
+            let b = gossip_neighbors(k, deg, 7);
+            assert_eq!(a, b, "deterministic for k={k}");
+            // symmetry + no self loops + degree bounds
+            for i in 0..k {
+                assert!(!a[i].contains(&i));
+                assert!(a[i].len() >= 2.min(k - 1), "node {i} under-connected");
+                assert!(a[i].len() <= deg.max(2), "node {i} over degree: {:?}", a[i]);
+                for &j in &a[i] {
+                    assert!(a[j].contains(&i), "edge {i}-{j} not symmetric");
+                }
+            }
+            // connectivity via BFS (ring base guarantees it)
+            let mut seen = vec![false; k];
+            let mut stack = vec![0usize];
+            seen[0] = true;
+            while let Some(i) = stack.pop() {
+                for &j in &a[i] {
+                    if !seen[j] {
+                        seen[j] = true;
+                        stack.push(j);
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "graph disconnected for k={k}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_chords() {
+        let a = gossip_neighbors(16, 5, 1);
+        let b = gossip_neighbors(16, 5, 2);
+        assert_ne!(a, b);
+    }
+}

@@ -268,7 +268,7 @@ impl<'rt> GanTrainer<'rt> {
         self.traffic.add_compute(codec_time);
         self.traffic.record_allgather(&bits, &self.net);
         self.phases.comm += codec_time + self.net.allgather_time(
-            &bits.iter().map(|&b| (b as usize).div_ceil(8)).collect::<Vec<_>>(),
+            &bits.iter().map(|&b| crate::net::bits_to_bytes(b)).collect::<Vec<_>>(),
         );
         let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
         let mut mean = vec![0.0f32; d];

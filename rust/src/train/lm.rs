@@ -175,7 +175,7 @@ impl<'rt> LmTrainer<'rt> {
         self.comm_time += codec
             + self
                 .net
-                .allgather_time(&bits.iter().map(|&b| (b as usize).div_ceil(8)).collect::<Vec<_>>());
+                .allgather_time(&bits.iter().map(|&b| crate::net::bits_to_bytes(b)).collect::<Vec<_>>());
         let refs: Vec<&[f32]> = decoded.iter().map(|v| v.as_slice()).collect();
         let mut mean = vec![0.0f32; d];
         mean_into(&refs, &mut mean);

@@ -1,0 +1,165 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The build image has no network and no XLA shared library, so this crate
+//! provides the exact API surface `qgenx::runtime` consumes — enough to
+//! type-check and to run every code path that does not need a real device.
+//! `PjRtClient::cpu()` fails with a descriptive error, which `runtime`
+//! surfaces as "built against the xla stub"; the artifact-driven tests and
+//! examples already skip themselves when no runtime can be opened.
+//!
+//! Shape bookkeeping (`Literal::vec1` / `reshape`) is implemented for real
+//! because argument validation is exercised by unit tests without a device.
+//!
+//! To build with the real bindings, point the `xla` path dependency in
+//! `rust/Cargo.toml` at an xla-rs checkout; no qgenx source changes needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s public face (Display + std::error).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: built against the offline xla stub (vendor/xla-stub); \
+         link the real xla-rs bindings to execute artifacts"
+    ))
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// Host-side tensor: the stub tracks element count and dims only.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    len: usize,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { len: data.len(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape; validates that the element count is preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.len {
+            return Err(Error(format!(
+                "reshape: literal has {} elements, dims {dims:?} want {want}",
+                self.len
+            )));
+        }
+        Ok(Literal { len: self.len, dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.len
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Decompose a tuple literal into its leaves.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible without a device stack).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_validation() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3]).is_err());
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+    }
+}
