@@ -1,0 +1,82 @@
+//! Walkthrough: local extra-gradient steps with periodic quantized
+//! delta synchronization — the third scenario family next to the exact
+//! and gossip runners.
+//!
+//! With `[local] steps = H`, each worker runs `H` extra-gradient
+//! iterations against its *private* stochastic oracle, then the replicas
+//! exchange quantized **model deltas** over the configured topology and
+//! re-synchronize by averaging. Communication drops from one-to-two dual
+//! rounds per iteration to one delta round per `H` iterations; the cost
+//! is intra-segment replica drift, which the `sync_drift` series tracks.
+//! `H = 1` is exactly the seed algorithm (per-step dual exchange,
+//! bit-for-bit).
+//!
+//! ```bash
+//! cargo run --release --example local_steps
+//! ```
+
+use qgenx::config::ExperimentConfig;
+use qgenx::coordinator::run_threaded;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "local_steps".into();
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.dim = 64;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 0.5;
+    cfg.workers = 8;
+    cfg.iters = 400;
+    cfg.eval_every = 100;
+
+    println!(
+        "Q-GenX, quadratic VI d={} K={} workers, uq4 adaptive quantization.",
+        cfg.problem.dim, cfg.workers
+    );
+    println!("Same iteration budget, varying local steps H (threaded coordinator):\n");
+    println!(
+        "{:<4} {:>10} {:>12} {:>8} {:>14} {:>12}",
+        "H", "final gap", "wire MiB", "syncs", "drift/sync", "sim net ms"
+    );
+
+    let mut prev_bits = f64::INFINITY;
+    for h in [1usize, 2, 4, 8] {
+        cfg.local.steps = h;
+        let run = run_threaded(&cfg)?;
+        let rec = &run.recorder;
+        let gap = rec.get("gap").and_then(|s| s.last()).unwrap_or(f64::NAN);
+        let bits = rec.scalar("total_bits").unwrap_or(0.0);
+        let mib = bits / 8.0 / 1048576.0;
+        let syncs = rec.scalar("syncs").unwrap_or(0.0);
+        let drift = rec.scalar("mean_sync_drift").unwrap_or(0.0);
+        let net_ms = rec.scalar("sim_net_time").unwrap_or(0.0) * 1e3;
+        println!("{h:<4} {gap:>10.5} {mib:>12.3} {syncs:>8.0} {drift:>14.5} {net_ms:>12.3}");
+
+        // Fewer communication rounds at the same iteration budget must put
+        // strictly fewer bits on the wire.
+        assert!(bits < prev_bits, "H = {h} must cut wire traffic");
+        prev_bits = bits;
+
+        // Exact topology: replicas re-converge exactly at the final sync.
+        for r in &run.replicas[1..] {
+            assert_eq!(r, &run.replicas[0], "replicas must agree after the final sync");
+        }
+    }
+
+    println!(
+        "\nReading the table:\n\
+         * H = 1 is the seed per-step dual exchange (two rounds per iteration\n\
+           under dual extrapolation); H >= 2 exchanges one quantized delta per\n\
+           worker per H iterations — wire traffic falls roughly as 1/(2H);\n\
+         * `drift/sync` is the consensus distance the private oracles open up\n\
+           within each local segment; the averaging sync closes it, and the\n\
+           final gap degrades only mildly while the bits plummet;\n\
+         * the delta payloads go through the same CODE∘Q pipeline (and the\n\
+           same [topo] collectives) as the dual exchanges, so local steps,\n\
+           compression, and topology compose as independent axes.\n\
+         \n\
+         Try `[local]` in a config file (steps = H) or `qgenx run --local 8`,\n\
+         and `cargo bench --bench local_steps` for the matched-gap accounting."
+    );
+    Ok(())
+}

@@ -1,0 +1,246 @@
+//! Local-steps execution: `H ≥ 1` extra-gradient iterations on a private
+//! oracle between communication rounds (the "local updates" axis of
+//! communication reduction — Beznosikov et al.'s three pillars, Zhang et
+//! al.'s local GDA — composed with the paper's `CODE ∘ Q` compression).
+//!
+//! [`LocalQGenX`] wraps one replica's [`QGenX`] state (with `K = 1`: the
+//! replica only ever averages its own oracle) plus the synchronization
+//! bookkeeping:
+//!
+//! * [`LocalQGenX::local_round`] — one full extra-gradient iteration
+//!   (base query if the variant needs one, extrapolate, half-step sample,
+//!   update) against the worker's private oracle. No communication.
+//! * [`LocalQGenX::delta`] — the model delta `X_t − X_sync` accumulated
+//!   since the last synchronization; this (not per-step duals) is what the
+//!   replicas quantize and exchange, so the wire cost is one vector per
+//!   worker per sync instead of one or two per iteration.
+//! * [`LocalQGenX::resync`] — move the replica to
+//!   `X_sync + mean(decoded deltas)` via [`QGenX::shift_world`] and open
+//!   the next local segment from there.
+//!
+//! Invariances worth knowing:
+//!
+//! * `resync` does not touch the dual accumulator, the adaptive step-size
+//!   or the ergodic history — each replica keeps *its own* optimizer state
+//!   across syncs (the standard local-update design; resetting state every
+//!   sync destroys the adaptive γ_t schedule).
+//! * The per-replica ergodic average is translated by the consensus
+//!   correction `mean_delta − delta_r`, and those corrections sum to zero
+//!   across replicas — so the *mean* ergodic average the coordinator
+//!   evaluates is unaffected by the resync bookkeeping.
+//! * With exact (all-delivering) sync topologies every replica decodes the
+//!   same payload set, so all replicas compute the **same consensus point**
+//!   ([`LocalQGenX::sync_base`]) bit-for-bit after every sync. The
+//!   replica's own iterate is moved onto it by an origin shift whose f32
+//!   arithmetic can land one rounding ulp away (and differently per
+//!   replica, since each adds a different internal offset) — so
+//!   coordinators that assert replica agreement compare sync bases, not
+//!   raw iterates. Drift *within* a local segment is tracked by the
+//!   coordinator's `sync_drift` series.
+//!
+//! `H = 1` is deliberately *not* expressed through this wrapper: with one
+//! local step between syncs the algorithm communicates every iteration
+//! anyway, and the seed's per-step dual exchange (Algorithm 1) is both
+//! cheaper in state and the trajectory the paper's theorems describe — the
+//! coordinator dispatches `local.steps = 1` to the exact runner, which
+//! reproduces the seed bit-for-bit.
+
+use super::qgenx::QGenX;
+use crate::config::Variant;
+use crate::error::Result;
+use crate::oracle::Oracle;
+
+/// One worker's replica in local-steps mode: a `K = 1` [`QGenX`] plus the
+/// last synchronization point.
+pub struct LocalQGenX {
+    state: QGenX,
+    /// World-coordinate iterate at the last sync (`X_sync`); deltas are
+    /// measured against this and resync rebases it.
+    sync_base: Vec<f32>,
+    /// Local iterations since the last sync (diagnostic).
+    steps_since_sync: usize,
+}
+
+impl LocalQGenX {
+    pub fn new(variant: Variant, x0: &[f32], gamma0: f64, adaptive: bool) -> Self {
+        LocalQGenX {
+            state: QGenX::new(variant, x0, 1, gamma0, adaptive),
+            sync_base: x0.to_vec(),
+            steps_since_sync: 0,
+        }
+    }
+
+    /// One extra-gradient iteration against the private oracle. `g_buf` is
+    /// caller-provided scratch of length `d` (avoids per-step allocation in
+    /// the inner loop — the only allocations left are the `Vec<Vec<f32>>`
+    /// views `QGenX` takes).
+    pub fn local_round(&mut self, oracle: &mut dyn Oracle, g_buf: &mut [f32]) -> Result<()> {
+        let base: Vec<Vec<f32>> = match self.state.base_query() {
+            Some(xq) => {
+                oracle.sample(&xq, g_buf);
+                vec![g_buf.to_vec()]
+            }
+            None => Vec::new(),
+        };
+        let x_half = self.state.extrapolate(&base)?;
+        oracle.sample(&x_half, g_buf);
+        self.state.update(&[g_buf.to_vec()])?;
+        self.steps_since_sync += 1;
+        Ok(())
+    }
+
+    /// Model delta accumulated since the last sync: `X_t − X_sync`.
+    pub fn delta(&self) -> Vec<f32> {
+        let x = self.state.x_world();
+        x.iter().zip(self.sync_base.iter()).map(|(a, b)| a - b).collect()
+    }
+
+    /// Re-synchronize: move to `X_sync + mean_delta` (the average of the
+    /// decoded deltas, computed by the coordinator) and start the next
+    /// local segment there.
+    pub fn resync(&mut self, mean_delta: &[f32]) -> Result<()> {
+        let target: Vec<f32> =
+            self.sync_base.iter().zip(mean_delta.iter()).map(|(b, d)| b + d).collect();
+        self.state.shift_world(&target)?;
+        self.sync_base = target;
+        self.steps_since_sync = 0;
+        Ok(())
+    }
+
+    /// Current iterate in world coordinates.
+    pub fn x_world(&self) -> Vec<f32> {
+        self.state.x_world()
+    }
+
+    /// The consensus point established by the last [`Self::resync`] (the
+    /// starting point of the current local segment). Computed from the
+    /// decoded deltas by identical arithmetic on every replica, so under
+    /// exact sync topologies it is bit-identical across replicas — the
+    /// quantity replica-agreement invariants must compare (the raw
+    /// [`Self::x_world`] can sit one origin-shift rounding ulp off it).
+    pub fn sync_base(&self) -> &[f32] {
+        &self.sync_base
+    }
+
+    /// Per-replica ergodic average (see module docs: the *mean* over
+    /// replicas is invariant under resync bookkeeping).
+    pub fn ergodic_average(&self) -> Vec<f32> {
+        self.state.ergodic_average()
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.state.gamma()
+    }
+
+    pub fn steps_since_sync(&self) -> usize {
+        self.steps_since_sync
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.state.variant()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{ExactOracle, MonotoneQuadratic, Operator};
+    use crate::util::{dist_sq, Rng};
+    use std::sync::Arc;
+
+    fn problem(d: usize) -> Arc<MonotoneQuadratic> {
+        let mut rng = Rng::seed_from(42);
+        Arc::new(MonotoneQuadratic::random(d, 0.3, 1.0, &mut rng).unwrap())
+    }
+
+    #[test]
+    fn delta_tracks_movement_and_resync_rebases() {
+        let d = 8;
+        let op = problem(d);
+        let mut oracle = ExactOracle::new(op.clone());
+        let mut rep = LocalQGenX::new(Variant::DualExtrapolation, &vec![0.5f32; d], 0.3, true);
+        assert_eq!(rep.delta(), vec![0.0f32; d]);
+        let mut g = vec![0.0f32; d];
+        for _ in 0..4 {
+            rep.local_round(&mut oracle, &mut g).unwrap();
+        }
+        assert_eq!(rep.steps_since_sync(), 4);
+        let delta = rep.delta();
+        assert!(delta.iter().any(|&x| x != 0.0), "iterate must have moved");
+        // Resync exactly onto own delta = stay put, but segment restarts.
+        rep.resync(&delta).unwrap();
+        assert_eq!(rep.steps_since_sync(), 0);
+        // The origin shift is f32 arithmetic: the iterate lands on the new
+        // sync base up to a rounding ulp, not exactly.
+        assert!(rep.delta().iter().all(|&x| x.abs() < 1e-5));
+        // Resync onto a different consensus point moves the iterate there.
+        let before = rep.x_world();
+        let shift = vec![0.25f32; d];
+        rep.resync(&shift).unwrap();
+        let after = rep.x_world();
+        for i in 0..d {
+            assert!((after[i] - (before[i] + 0.25)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn two_replicas_converge_under_averaging() {
+        // K = 2 replicas with private exact oracles, H = 5 local steps,
+        // plain (unquantized) delta averaging: the consensus trajectory
+        // should approach the solution.
+        let d = 12;
+        let op = problem(d);
+        let xs = op.solution().unwrap();
+        let x0 = vec![0.0f32; d];
+        let mut reps: Vec<LocalQGenX> = (0..2)
+            .map(|_| LocalQGenX::new(Variant::DualExtrapolation, &x0, 0.25, true))
+            .collect();
+        let mut oracles: Vec<ExactOracle> =
+            (0..2).map(|_| ExactOracle::new(op.clone())).collect();
+        let mut g = vec![0.0f32; d];
+        let d0 = dist_sq(&x0, &xs);
+        for _ in 0..400 {
+            for _ in 0..5 {
+                for (rep, or) in reps.iter_mut().zip(oracles.iter_mut()) {
+                    rep.local_round(or, &mut g).unwrap();
+                }
+            }
+            let deltas: Vec<Vec<f32>> = reps.iter().map(|r| r.delta()).collect();
+            let mean: Vec<f32> = (0..d)
+                .map(|i| deltas.iter().map(|dl| dl[i]).sum::<f32>() / 2.0)
+                .collect();
+            for rep in reps.iter_mut() {
+                rep.resync(&mean).unwrap();
+            }
+            // exact decode on both sides -> replicas are identical post-sync
+            assert_eq!(reps[0].x_world(), reps[1].x_world());
+        }
+        let mut mean_avg = vec![0.0f32; d];
+        for rep in &reps {
+            for (m, &x) in mean_avg.iter_mut().zip(rep.ergodic_average().iter()) {
+                *m += x / 2.0;
+            }
+        }
+        let ratio = dist_sq(&mean_avg, &xs) / d0.max(1e-12);
+        assert!(ratio < 0.05, "local-steps consensus ratio {ratio}");
+    }
+
+    #[test]
+    fn all_variants_drive_local_rounds() {
+        let d = 6;
+        let op = problem(d);
+        for v in
+            [Variant::DualAveraging, Variant::DualExtrapolation, Variant::OptimisticDualAveraging]
+        {
+            let mut oracle = ExactOracle::new(op.clone());
+            let mut rep = LocalQGenX::new(v, &vec![0.0f32; d], 0.5, true);
+            let mut g = vec![0.0f32; d];
+            for _ in 0..3 {
+                rep.local_round(&mut oracle, &mut g).unwrap();
+            }
+            assert!(rep.x_world().iter().all(|x| x.is_finite()));
+            let delta = rep.delta();
+            rep.resync(&delta).unwrap();
+        }
+    }
+}

@@ -16,13 +16,19 @@
 //! * [`stepsize`] — the adaptive rule
 //!   `γ_t = K (1 + Σ_{i<t} Σ_k ‖V̂_{k,i} − V̂_{k,i+1/2}‖²)^{−1/2}` (shared
 //!   by all variants; never needs σ, c, or β).
+//! * [`local`] — local-steps replica wrapper ([`LocalQGenX`]): `H`
+//!   private extra-gradient iterations between communication rounds, with
+//!   quantized model-delta synchronization (the third communication-
+//!   reduction axis next to compression and topology).
 //! * [`baselines`] — full-precision extra-gradient (Korpelevich), SGDA,
 //!   and QSGDA (Beznosikov et al. 2022) for the Figure-4 comparison.
 
 pub mod baselines;
+pub mod local;
 pub mod qgenx;
 pub mod stepsize;
 
 pub use baselines::{ExtraGradient, Sgda};
+pub use local::LocalQGenX;
 pub use qgenx::{QGenX, QGenXPhase};
 pub use stepsize::AdaptiveStepSize;

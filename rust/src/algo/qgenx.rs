@@ -128,6 +128,37 @@ impl QGenX {
         out
     }
 
+    /// Translate the iterate to `target` (world coordinates) by moving the
+    /// origin shift `x₀` — the resynchronization primitive of the
+    /// local-steps mode ([`crate::algo::LocalQGenX`]). The dual accumulator
+    /// `Y`, the adaptive step-size and the iteration counter are untouched
+    /// (they live in shifted coordinates and are translation-invariant);
+    /// the ergodic-average *history* is translated along with the iterate,
+    /// which is exactly what makes the mean ergodic average across replicas
+    /// invariant under consensus averaging (the per-replica corrections
+    /// `mean_delta − delta_r` sum to zero over `r`).
+    ///
+    /// Because the world iterate is re-derived as `x₀ + X` on every read,
+    /// the landing point is exact only up to one f32 rounding ulp — callers
+    /// needing bit-identical agreement across replicas must compare the
+    /// *target* they passed (see [`crate::algo::LocalQGenX::sync_base`]),
+    /// not the post-shift iterate.
+    ///
+    /// Only legal between iterations (phase `AwaitBase`).
+    pub fn shift_world(&mut self, target: &[f32]) -> Result<()> {
+        if self.phase != QGenXPhase::AwaitBase {
+            return Err(Error::Coordinator("shift_world called mid-iteration".into()));
+        }
+        if target.len() != self.d {
+            return Err(Error::Coordinator("shift_world target dim mismatch".into()));
+        }
+        let cur = self.x_world();
+        for i in 0..self.d {
+            self.x0[i] += target[i] - cur[i];
+        }
+        Ok(())
+    }
+
     /// Where workers must evaluate the *base* oracle query `V_{k,t}`, if a
     /// fresh one is needed this iteration:
     /// * DE → `Some(X_t)` — the classic extra-gradient first leg;
@@ -376,6 +407,32 @@ mod tests {
         }
         assert_eq!(state.x_world(), x0);
         assert_eq!(state.ergodic_average(), x0);
+    }
+
+    #[test]
+    fn shift_world_moves_iterate_and_preserves_dynamics() {
+        let mut state = QGenX::new(Variant::DualExtrapolation, &[0.0; 3], 1, 0.5, true);
+        let _ = state.base_query();
+        state.extrapolate(&[vec![1.0, -1.0, 0.5]]).unwrap();
+        state.update(&[vec![0.5, 0.5, 0.5]]).unwrap();
+        let gamma_before = state.gamma();
+        let t_before = state.iteration();
+        let target = vec![2.0f32, -3.0, 0.25];
+        state.shift_world(&target).unwrap();
+        // The shift re-derives x_world from x0 + x, so the landing point is
+        // exact only up to one f32 rounding ulp.
+        for (w, t) in state.x_world().iter().zip(target.iter()) {
+            assert!((w - t).abs() <= 1e-6 * (1.0 + t.abs()), "{w} vs {t}");
+        }
+        assert_eq!(state.gamma(), gamma_before);
+        assert_eq!(state.iteration(), t_before);
+        // mid-iteration shift is rejected
+        let _ = state.base_query();
+        state.extrapolate(&[vec![0.0; 3]]).unwrap();
+        assert!(state.shift_world(&target).is_err());
+        state.update(&[vec![0.0; 3]]).unwrap();
+        // dim mismatch rejected
+        assert!(state.shift_world(&[0.0; 2]).is_err());
     }
 
     #[test]

@@ -95,8 +95,24 @@ pub struct QuantConfig {
     pub update_every: usize,
     /// Histogram bins for the QAda sufficient statistic.
     pub hist_bins: usize,
-    /// Number of sampled dual vectors J per level update.
+    /// Per-segment cap on the vectors (buckets, under bucketing) fed to
+    /// the QAda sufficient statistic in `Compressor::compress` — bounds
+    /// stat upkeep at large `d`. 0 (the default) = unlimited, the
+    /// historical behavior.
     pub stat_samples: usize,
+}
+
+impl QuantConfig {
+    /// True when anything adapts on the update schedule `U` — QAda level
+    /// placement (`scheme == Adaptive`) or the Huffman probability model
+    /// (`codec == Huffman`). The single source of truth for "does this
+    /// pipeline exchange sufficient statistics": `stats_payload`,
+    /// `update_levels` and every runner's stat-round schedule must agree
+    /// on it (they once didn't, and Huffman-with-fixed-levels runs paid
+    /// for stat rounds whose payloads were all empty).
+    pub fn adapts(&self) -> bool {
+        self.scheme == LevelScheme::Adaptive || self.codec == SymbolCodec::Huffman
+    }
 }
 
 impl Default for QuantConfig {
@@ -109,7 +125,7 @@ impl Default for QuantConfig {
             codec: SymbolCodec::Huffman,
             update_every: 100,
             hist_bins: 256,
-            stat_samples: 8,
+            stat_samples: 0,
         }
     }
 }
@@ -183,6 +199,27 @@ impl Default for TopoConfig {
     }
 }
 
+/// Local-steps execution (`[local]` table): each worker runs `steps`
+/// extra-gradient iterations on its private oracle between communication
+/// rounds, then the replicas exchange *quantized model deltas* over the
+/// configured topology and re-synchronize by averaging.
+///
+/// `steps = 1` (the default) is the seed behavior — communication every
+/// iteration via per-step dual exchange, bit-for-bit identical to the
+/// runners predating this table. `steps ≥ 2` engages the delta-sync
+/// runner (`coordinator::inline::run_local` / the threaded local loop).
+#[derive(Clone, Debug)]
+pub struct LocalConfig {
+    /// Local extra-gradient iterations per communication round (H ≥ 1).
+    pub steps: usize,
+}
+
+impl Default for LocalConfig {
+    fn default() -> Self {
+        LocalConfig { steps: 1 }
+    }
+}
+
 /// Simulated network (α-β model).
 #[derive(Clone, Debug)]
 pub struct NetConfig {
@@ -241,6 +278,7 @@ pub struct ExperimentConfig {
     pub algo: AlgoConfig,
     pub net: NetConfig,
     pub topo: TopoConfig,
+    pub local: LocalConfig,
     pub problem: ProblemConfig,
     /// Where benches/drivers write CSV output.
     pub out_dir: String,
@@ -260,6 +298,7 @@ impl Default for ExperimentConfig {
             algo: AlgoConfig::default(),
             net: NetConfig::default(),
             topo: TopoConfig::default(),
+            local: LocalConfig::default(),
             problem: ProblemConfig::default(),
             out_dir: "results".into(),
             artifacts_dir: "artifacts".into(),
@@ -345,6 +384,7 @@ impl ExperimentConfig {
                     seed: doc.get_i64("topo.seed", d.topo.seed as i64)? as u64,
                 }
             },
+            local: LocalConfig { steps: doc.get_usize("local.steps", d.local.steps)? },
             problem: ProblemConfig {
                 kind: doc.get_str("problem.kind", &d.problem.kind)?,
                 dim: doc.get_usize("problem.dim", d.problem.dim)?,
@@ -386,6 +426,9 @@ impl ExperimentConfig {
         }
         if self.algo.gamma0 <= 0.0 {
             return Err(Error::Config("algo.gamma0 must be positive".into()));
+        }
+        if self.local.steps == 0 {
+            return Err(Error::Config("local.steps must be >= 1".into()));
         }
         // Topology must resolve for this worker count (kind known, groups /
         // degree in range); surfaced at config time, not mid-run.
@@ -531,6 +574,34 @@ noise = "relative"
         )
         .unwrap();
         assert_eq!(cfg.topo.kind, "ring");
+    }
+
+    #[test]
+    fn adapts_predicate_covers_levels_and_codec() {
+        let mut q = QuantConfig::default();
+        // default: adaptive levels + huffman
+        assert!(q.adapts());
+        q.scheme = LevelScheme::Uniform;
+        assert!(q.adapts(), "fixed levels + Huffman still refresh the codec");
+        q.codec = SymbolCodec::Fixed;
+        assert!(!q.adapts(), "fully static pipeline");
+        q.scheme = LevelScheme::Adaptive;
+        assert!(q.adapts());
+        // default cap is unlimited (historical behavior)
+        assert_eq!(QuantConfig::default().stat_samples, 0);
+    }
+
+    #[test]
+    fn parses_local_table_and_validates() {
+        // default: one local step = seed per-step dual exchange
+        assert_eq!(ExperimentConfig::default().local.steps, 1);
+        let cfg = ExperimentConfig::from_toml("workers = 4\n[local]\nsteps = 8\n").unwrap();
+        assert_eq!(cfg.local.steps, 8);
+        // steps = 0 rejected at validation time
+        assert!(ExperimentConfig::from_toml("[local]\nsteps = 0\n").is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.local.steps = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -4,10 +4,10 @@
 
 use super::pipeline::Compressor;
 use super::schedule::UpdateSchedule;
-use crate::algo::{QGenX, Sgda};
-use crate::config::{ExperimentConfig, LevelScheme};
+use crate::algo::{LocalQGenX, QGenX, Sgda};
+use crate::config::ExperimentConfig;
 use crate::error::Result;
-use crate::metrics::{consensus_distance, Recorder};
+use crate::metrics::{consensus_distance, Recorder, SyncAccounting};
 use crate::net::{NetModel, TrafficStats};
 use crate::oracle::{build_operator, build_oracle, GapEvaluator, Oracle};
 use crate::topo::{build_collective, Collective, LinkTraffic, Topology};
@@ -19,9 +19,7 @@ use std::time::Instant;
 /// only when something adapts (level placement or Huffman tables) and the
 /// pipeline is actually quantized.
 fn adaptive_schedule(cfg: &ExperimentConfig, comps: &[Compressor]) -> UpdateSchedule {
-    let adaptive = cfg.quant.scheme == LevelScheme::Adaptive
-        || cfg.quant.codec == crate::coding::SymbolCodec::Huffman;
-    if adaptive && comps[0].is_quantized() {
+    if cfg.quant.adapts() && comps[0].is_quantized() {
         UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
     } else {
         UpdateSchedule::never()
@@ -52,12 +50,28 @@ fn emit_summary_scalars(
 /// Run one Q-GenX experiment per the config; returns the metric recorder
 /// with series `gap`, `dist`, `residual`, `gamma`, `bits_cum`,
 /// `sim_time_cum` and summary scalars. The exchange rounds run over the
-/// configured [`Topology`]; inexact (gossip) topologies dispatch to the
-/// neighborhood-averaging runner and additionally record `consensus_dist`.
+/// configured [`Topology`]; the config selects one of three runner
+/// families:
+///
+/// * **exact** (this function's body) — per-step dual exchange over an
+///   exact topology, the seed's Algorithm 1;
+/// * **gossip** ([`run_gossip`]) — inexact topologies: per-step dual
+///   exchange averaged over graph neighborhoods, plus `consensus_dist`;
+/// * **local** ([`run_local`]) — `local.steps ≥ 2`: private extra-gradient
+///   iterations between syncs, quantized model-delta averaging at syncs.
+///
+/// `local.steps = 1` deliberately does *not* engage the delta-sync
+/// machinery: with one local step the algorithm communicates every
+/// iteration anyway, and the per-step dual exchange is the trajectory the
+/// paper's theorems describe — so it runs the exact (or gossip) path,
+/// bit-for-bit identical to the seed.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
     cfg.validate()?;
     let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
     let collective = build_collective(topo, cfg.workers)?;
+    if cfg.local.steps > 1 {
+        return run_local(cfg, collective);
+    }
     if !topo.is_exact() {
         return run_gossip(cfg, collective);
     }
@@ -315,6 +329,162 @@ fn run_gossip(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result
     Ok(rec)
 }
 
+/// Local-steps runner (`local.steps = H ≥ 2`): each worker runs `H`
+/// extra-gradient iterations against its *private* oracle between
+/// communication rounds, then the replicas exchange quantized **model
+/// deltas** (`X_t − X_sync`, one vector per worker per sync — not one or
+/// two duals per iteration) over the configured collective and
+/// re-synchronize by averaging the decoded deltas.
+///
+/// * Exact topologies: every replica averages all `K` decoded deltas, so
+///   replicas are bit-identical immediately after every sync; the
+///   `sync_drift` series tracks how far they diverged *within* each local
+///   segment.
+/// * Gossip: each replica averages deltas over its closed neighborhood
+///   only — replicas drift persistently, tracked by `consensus_dist` just
+///   like [`run_gossip`].
+///
+/// The control plane (stat pooling for QAda / Huffman refreshes) stays
+/// global and fires at the first sync on or after each due point — the
+/// early warmup `update_every.min(10)` the per-step runners also use, then
+/// every `update_every` — because between syncs there is no wire to carry
+/// stats. Note the statistics now describe *delta* coordinates (that is
+/// what the codec compresses in this mode), so the refreshed levels/tables
+/// fit the actual wire distribution.
+fn run_local(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result<Recorder> {
+    let op = build_operator(&cfg.problem, cfg.seed)?;
+    let d = op.dim();
+    let k = cfg.workers;
+    let h = cfg.local.steps;
+    let root = Rng::seed_from(cfg.seed);
+    let neigh: Vec<Vec<usize>> = (0..k).map(|r| collective.recipients(r)).collect();
+
+    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+        .collect::<Result<_>>()?;
+    let mut comps: Vec<Compressor> = (0..k)
+        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+        .collect::<Result<_>>()?;
+
+    let adaptive = cfg.quant.adapts() && comps[0].is_quantized();
+    let update_every = cfg.quant.update_every;
+    // First refresh at the first sync on or after the same early warmup
+    // point the per-step runners use (update_every.min(10)) — without it,
+    // runs shorter than update_every would never refresh at all.
+    let mut next_stat_due = update_every.min(10);
+
+    let x0 = vec![0.0f32; d];
+    let mut replicas: Vec<LocalQGenX> = (0..k)
+        .map(|_| LocalQGenX::new(cfg.algo.variant, &x0, cfg.algo.gamma0, cfg.algo.adaptive_step))
+        .collect();
+
+    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+    let net = NetModel::from_config(&cfg.net);
+    let mut traffic = TrafficStats::default();
+    let mut links = LinkTraffic::new();
+    let mut rec = Recorder::new();
+    let mut sync_acc = SyncAccounting::new();
+    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+    let mut g_buf = vec![0.0f32; d];
+
+    for t in 1..=cfg.iters {
+        // (1) One private extra-gradient iteration per replica — no wire.
+        let t0 = Instant::now();
+        for (rep, oracle) in replicas.iter_mut().zip(oracles.iter_mut()) {
+            rep.local_round(oracle.as_mut(), &mut g_buf)?;
+        }
+        traffic.add_compute(t0.elapsed().as_secs_f64());
+
+        // (2) Synchronization every H local iterations (plus a final sync
+        //     so the run always ends on a consensus point).
+        if t % h == 0 || t == cfg.iters {
+            // (2a) Quantize + exchange the model deltas.
+            let t0 = Instant::now();
+            let mut bits = Vec::with_capacity(k);
+            let mut wires = Vec::with_capacity(k);
+            for w in 0..k {
+                let delta = replicas[w].delta();
+                let (bytes, b) = comps[w].compress(&delta)?;
+                bits.push(b);
+                wires.push(bytes);
+            }
+            for w in 0..k {
+                comps[w].decompress(&wires[w], &mut decoded[w])?;
+            }
+            traffic.add_compute(t0.elapsed().as_secs_f64());
+            let bits_before = traffic.bits_sent;
+            collective.record_round(&bits, &net, &mut traffic);
+            links.record(collective.as_ref(), &bits);
+
+            // (2b) Pre-averaging drift + per-sync bit accounting.
+            let iterates: Vec<Vec<f32>> = replicas.iter().map(|r| r.x_world()).collect();
+            sync_acc.record(
+                &mut rec,
+                t,
+                consensus_distance(&iterates),
+                traffic.bits_sent - bits_before,
+            );
+
+            // (2c) Resync each replica onto its neighborhood-averaged delta
+            //      (all K under exact topologies).
+            for (rep, n) in replicas.iter_mut().zip(neigh.iter()) {
+                let mut mean = vec![0.0f32; d];
+                for &w in n {
+                    for (m, &x) in mean.iter_mut().zip(decoded[w].iter()) {
+                        *m += x / n.len() as f32;
+                    }
+                }
+                rep.resync(&mean)?;
+            }
+
+            // (2d) Control plane: pooled stat exchange at the first sync on
+            //      or after each due point (always full-mesh — the wire
+            //      format needs identical codecs everywhere).
+            if adaptive && update_every != 0 && t >= next_stat_due {
+                let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
+                let stat_bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
+                traffic.record_allgather(&stat_bits, &net);
+                let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                for comp in comps.iter_mut() {
+                    comp.update_levels(&rank_order)?;
+                }
+                next_stat_due = t + update_every;
+            }
+        }
+
+        // (3) Evaluation at the mean ergodic average across replicas.
+        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+            let mut mean_avg = vec![0.0f32; d];
+            for rep in &replicas {
+                for (m, &x) in mean_avg.iter_mut().zip(rep.ergodic_average().iter()) {
+                    *m += x / k as f32;
+                }
+            }
+            let iterates: Vec<Vec<f32>> = replicas.iter().map(|r| r.x_world()).collect();
+            if let Some(ev) = &gap_eval {
+                rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
+                rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
+            }
+            rec.push("residual", t as f64, op.residual(&mean_avg));
+            rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
+            rec.push("gamma", t as f64, replicas[0].gamma());
+            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+            rec.push("sim_time_cum", t as f64, traffic.total_time());
+        }
+    }
+
+    // Final consensus over the *sync bases*: the run ends on a sync, and
+    // the consensus point is computed by identical arithmetic on every
+    // replica — exactly 0 under exact topologies (the raw iterates can sit
+    // an origin-shift rounding ulp off it; see `algo::local` docs).
+    let final_bases: Vec<Vec<f32>> = replicas.iter().map(|r| r.sync_base().to_vec()).collect();
+    emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
+    sync_acc.emit_scalars(&mut rec);
+    rec.set_scalar("local_steps", h as f64);
+    rec.set_scalar("consensus_dist", consensus_distance(&final_bases));
+    Ok(rec)
+}
+
 /// QSGDA baseline (Beznosikov et al. 2022): quantized SGDA with γ_t = γ₀/√t,
 /// same oracles/compressors/network — only the update rule differs
 /// (no extrapolation, no adaptive step). The Figure-4 comparator.
@@ -372,7 +542,7 @@ pub fn run_qsgda_baseline(cfg: &ExperimentConfig) -> Result<Recorder> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{QuantMode, Variant};
+    use crate::config::{LevelScheme, QuantMode, Variant};
 
     fn base_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
@@ -512,6 +682,125 @@ mod tests {
         let mesh = run_experiment(&cfg).unwrap();
         assert!(rec.scalar("total_bits").unwrap() < mesh.scalar("total_bits").unwrap());
         // replicas genuinely diverge under noise
+        assert!(rec.scalar("consensus_dist").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn huffman_with_fixed_levels_actually_refreshes_mid_run() {
+        // Regression for the silent Huffman-refresh no-op: with uniform
+        // (fixed) levels and a Huffman codec, the scheduled stat rounds
+        // used to exchange empty payloads — the pooled stats were empty,
+        // update_levels bailed out early, and `level_updates` stayed 0
+        // even though the run paid the stat-round network cost.
+        let mut cfg = base_cfg();
+        cfg.quant.scheme = LevelScheme::Uniform;
+        cfg.quant.codec = crate::coding::SymbolCodec::Huffman;
+        cfg.iters = 300;
+        let rec = run_experiment(&cfg).unwrap();
+        assert!(
+            rec.scalar("level_updates").unwrap() >= 1.0,
+            "fixed-levels Huffman run must perform at least one real codec refresh"
+        );
+        assert!(rec.get("gap").unwrap().last().unwrap().is_finite());
+    }
+
+    #[test]
+    fn local_steps_one_is_bit_identical_to_seed_exact_runner() {
+        // `local.steps = 1` must not engage the delta-sync machinery: the
+        // run is the seed per-step dual exchange, bit-for-bit, for every
+        // variant.
+        for v in [Variant::DualAveraging, Variant::DualExtrapolation, Variant::OptimisticDualAveraging]
+        {
+            let mut cfg = base_cfg();
+            cfg.algo.variant = v;
+            cfg.iters = 200;
+            let seed_rec = run_experiment(&cfg).unwrap();
+            cfg.local.steps = 1; // explicit, same meaning as the default
+            let local_rec = run_experiment(&cfg).unwrap();
+            assert_eq!(
+                seed_rec.get("gap").unwrap().ys(),
+                local_rec.get("gap").unwrap().ys(),
+                "variant {v:?} trajectory must match the seed bit-for-bit"
+            );
+            assert_eq!(
+                seed_rec.scalar("total_bits"),
+                local_rec.scalar("total_bits"),
+                "variant {v:?} wire bits must match the seed exactly"
+            );
+            assert!(local_rec.scalar("syncs").is_none(), "no delta-sync path at H = 1");
+        }
+    }
+
+    #[test]
+    fn local_steps_converge_and_cut_wire_bits() {
+        let mut cfg = base_cfg();
+        cfg.iters = 600;
+        cfg.eval_every = 150;
+        let exact = run_experiment(&cfg).unwrap();
+        cfg.local.steps = 4;
+        let local = run_experiment(&cfg).unwrap();
+
+        // Still converges on the MonotoneQuadratic.
+        let gaps = local.get("gap").unwrap();
+        let first = gaps.points.first().unwrap().1;
+        let last = gaps.last().unwrap();
+        assert!(last < first, "local-steps gap should shrink: {first} -> {last}");
+        assert!(last < 1.0, "local-steps final gap too large: {last}");
+
+        // Communicating every 4th iteration strictly cuts total wire bits.
+        let bits_local = local.scalar("total_bits").unwrap();
+        let bits_exact = exact.scalar("total_bits").unwrap();
+        assert!(
+            bits_local < bits_exact,
+            "H = 4 must send fewer bits: {bits_local} vs {bits_exact}"
+        );
+
+        // Sync accounting: 600 / 4 syncs, drift accumulates between syncs,
+        // and the final sync leaves the replicas bit-identical.
+        assert_eq!(local.scalar("syncs"), Some(150.0));
+        assert_eq!(local.scalar("local_steps"), Some(4.0));
+        assert!(local.scalar("bits_per_sync").unwrap() > 0.0);
+        let drift = local.get("sync_drift").unwrap();
+        assert!(drift.points.iter().all(|(_, y)| y.is_finite()));
+        assert!(
+            drift.ys().iter().any(|&y| y > 0.0),
+            "private noisy oracles must produce nonzero intra-segment drift"
+        );
+        assert_eq!(
+            local.scalar("consensus_dist"),
+            Some(0.0),
+            "exact topology: replicas must be bit-identical after the final sync"
+        );
+    }
+
+    #[test]
+    fn local_steps_refresh_codecs_even_on_short_runs() {
+        // Regression: the local stat schedule must keep the per-step
+        // runners' early warmup — a run shorter than update_every still
+        // performs a real refresh at the first sync past the warmup point.
+        let mut cfg = base_cfg();
+        cfg.iters = 60; // < update_every (100)
+        cfg.local.steps = 4;
+        let rec = run_experiment(&cfg).unwrap();
+        assert!(
+            rec.scalar("level_updates").unwrap() >= 1.0,
+            "short local runs must still refresh the codec"
+        );
+    }
+
+    #[test]
+    fn local_steps_compose_with_gossip() {
+        let mut cfg = base_cfg();
+        cfg.workers = 8;
+        cfg.iters = 200;
+        cfg.eval_every = 50;
+        cfg.local.steps = 5;
+        cfg.topo.kind = "gossip".into();
+        cfg.topo.degree = 3;
+        let rec = run_experiment(&cfg).unwrap();
+        assert!(rec.get("gap").unwrap().last().unwrap().is_finite());
+        assert_eq!(rec.scalar("syncs"), Some(40.0));
+        // neighborhood averaging never reaches full consensus
         assert!(rec.scalar("consensus_dist").unwrap() > 0.0);
     }
 

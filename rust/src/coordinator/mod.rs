@@ -14,13 +14,37 @@
 //! Per-iteration protocol (both modes), following Algorithm 1:
 //!
 //! 1. if `t ∈ U` (level-update schedule): workers exchange sufficient
-//!    statistics (histograms, `4·bins` bytes — counted as traffic),
-//!    pool them, and each deterministically re-optimizes the levels and
-//!    rebuilds the Huffman codec (identical inputs ⇒ identical tables).
+//!    statistics (histograms; stat wire-format v2 = `u32` vector count +
+//!    `4·bins` bytes of masses — counted as traffic), pool them, and each
+//!    deterministically re-optimizes the levels and rebuilds the Huffman
+//!    codec (identical inputs ⇒ identical tables). The payload is
+//!    non-empty whenever *anything* adapts — QAda level placement or the
+//!    Huffman probability model — matching what `update_levels` consumes.
 //! 2. variant-dependent base exchange (`V̂_{k,t}`): DE quantizes + exchanges
 //!    fresh oracle queries at `X_t`; DA/OptDA send nothing.
 //! 3. extrapolate to `X_{t+1/2}`.
 //! 4. quantize + exchange `V̂_{k,t+1/2}`; everyone updates the replica.
+//!
+//! ## Runner families
+//!
+//! The config selects one of three scenario families, in both execution
+//! modes:
+//!
+//! * **exact** — the protocol above over an exact topology: per-step dual
+//!   exchange, all replicas bit-identical at every step (the seed
+//!   behavior, `local.steps = 1`, non-gossip `[topo]`).
+//! * **gossip** — same per-step protocol, but dual vectors average over
+//!   closed graph neighborhoods only; replicas drift (`consensus_dist`).
+//! * **local** (`local.steps = H ≥ 2`) — `H` private extra-gradient
+//!   iterations per replica between communication rounds, then one
+//!   quantized **model-delta** exchange and a resync by averaging
+//!   (`inline::run_local` / the threaded local loop). Communication drops
+//!   from one-to-two dual rounds per iteration to one delta round per `H`
+//!   iterations; the `sync_drift` / `sync_bits` series and the `syncs` /
+//!   `bits_per_sync` / `mean_sync_drift` scalars account for it. `H = 1`
+//!   deliberately runs the exact (or gossip) family — with communication
+//!   every iteration the per-step dual exchange *is* the algorithm, so the
+//!   seed trajectory is reproduced bit-for-bit.
 //!
 //! ## Topology selection
 //!

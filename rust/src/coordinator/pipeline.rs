@@ -95,9 +95,21 @@ impl Compressor {
             Compressor::Quant(q) => {
                 // Sufficient statistics feed (a) QAda level optimization and
                 // (b) Huffman probability refreshes — needed even when the
-                // level placement itself is fixed.
-                if q.cfg.scheme == LevelScheme::Adaptive || q.cfg.codec == SymbolCodec::Huffman {
-                    q.stats.observe_bucketed(v, q.cfg.bucket_size);
+                // level placement itself is fixed. `stat_samples` caps how
+                // many vectors (buckets, under bucketing) feed the statistic
+                // per schedule segment, so stat upkeep stays O(cap) as `d`
+                // and the segment length grow; 0 = unlimited.
+                if q.cfg.adapts() {
+                    let cap = q.cfg.stat_samples;
+                    if cap == 0 {
+                        q.stats.observe_bucketed(v, q.cfg.bucket_size);
+                    } else if q.stats.vectors_seen() < cap {
+                        let b =
+                            if q.cfg.bucket_size == 0 { v.len() } else { q.cfg.bucket_size };
+                        let room = cap - q.stats.vectors_seen();
+                        let take = room.saturating_mul(b).min(v.len());
+                        q.stats.observe_bucketed(&v[..take], q.cfg.bucket_size);
+                    }
                 }
                 let qv =
                     quantize(v, &q.levels, q.cfg.norm_q, q.cfg.bucket_size, &mut q.rng)?;
@@ -130,11 +142,20 @@ impl Compressor {
         }
     }
 
-    /// Serialize local sufficient statistics for the stat exchange
-    /// (empty for FP32 / non-adaptive schemes).
+    /// Serialize local sufficient statistics for the stat exchange.
+    ///
+    /// Non-empty whenever *anything* adapts on the update schedule: QAda
+    /// level placement (`scheme == Adaptive`) **or** the Huffman
+    /// probability model (`codec == Huffman`, any level scheme) — the same
+    /// condition under which [`Self::update_levels`] consumes the pooled
+    /// payloads (both sides share [`QuantConfig::adapts`]). Gating on the
+    /// scheme alone made Huffman-with-fixed-levels runs pay for stat
+    /// rounds whose payloads were all empty, so the advertised probability
+    /// refresh silently never happened.
+    /// Empty for FP32 and for fully static pipelines.
     pub fn stats_payload(&self) -> Vec<u8> {
         match self {
-            Compressor::Quant(q) if q.cfg.scheme == LevelScheme::Adaptive => q.stats.to_bytes(),
+            Compressor::Quant(q) if q.cfg.adapts() => q.stats.to_bytes(),
             _ => Vec::new(),
         }
     }
@@ -152,11 +173,10 @@ impl Compressor {
             Compressor::Fp32 => return Ok(false),
             Compressor::Quant(q) => q,
         };
-        let adapt_levels = q.cfg.scheme == LevelScheme::Adaptive;
-        let adapt_codec = q.cfg.codec == SymbolCodec::Huffman;
-        if !adapt_levels && !adapt_codec {
+        if !q.cfg.adapts() {
             return Ok(false);
         }
+        let adapt_levels = q.cfg.scheme == LevelScheme::Adaptive;
         let mut pooled = SufficientStats::new(q.cfg.hist_bins, q.cfg.norm_q);
         for p in all_stats_rank_order {
             if !p.is_empty() {
@@ -345,6 +365,77 @@ mod tests {
             (after_bits as f64) < before_bits as f64 * 1.1,
             "after {after_bits} vs before {before_bits}"
         );
+    }
+
+    #[test]
+    fn huffman_fixed_levels_refresh_is_not_a_noop() {
+        // Regression: Huffman with *fixed* (uniform) levels used to return
+        // an empty stats payload, so the scheduled "codec refresh" pooled
+        // nothing and silently kept the bootstrap prior forever.
+        let cfg = quant_cfg(LevelScheme::Uniform, SymbolCodec::Huffman);
+        let mut refreshed = Compressor::from_config(&cfg, Rng::seed_from(21)).unwrap();
+        let mut bootstrap = Compressor::from_config(&cfg, Rng::seed_from(21)).unwrap();
+        let mut rng = Rng::seed_from(22);
+        for _ in 0..12 {
+            let v = rng.gaussian_vec(2048, 1.0);
+            let _ = refreshed.compress(&v).unwrap();
+            let _ = bootstrap.compress(&v).unwrap();
+        }
+        let payload = refreshed.stats_payload();
+        assert!(!payload.is_empty(), "fixed-levels Huffman must ship stats");
+        let changed = refreshed.update_levels(&[&payload]).unwrap();
+        assert!(!changed, "uniform level placement must not move");
+        assert_eq!(refreshed.updates(), 1, "the refresh must count as an update");
+        assert_eq!(refreshed.levels().unwrap(), bootstrap.levels().unwrap());
+        // Identical seeds + identical levels => both compressors consumed
+        // the same uniforms and emit the same symbols for the same input;
+        // any wire-size difference below is purely the rebuilt Huffman
+        // table. With a fitted probability model it must beat the
+        // bootstrap geometric prior on in-distribution data.
+        let v = rng.gaussian_vec(2048, 1.0);
+        let (_, bits_refreshed) = refreshed.compress(&v).unwrap();
+        let (_, bits_bootstrap) = bootstrap.compress(&v).unwrap();
+        assert!(
+            bits_refreshed < bits_bootstrap,
+            "refreshed table must shrink the stream: {bits_refreshed} vs {bits_bootstrap}"
+        );
+    }
+
+    #[test]
+    fn stat_samples_caps_observed_vectors_per_segment() {
+        // The `quant.stat_samples` knob is the per-segment cap on vectors
+        // (buckets) absorbed into the sufficient statistic.
+        let mut cfg = quant_cfg(LevelScheme::Adaptive, SymbolCodec::Huffman);
+        cfg.stat_samples = 3;
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(30)).unwrap();
+        let mut rng = Rng::seed_from(31);
+        for _ in 0..5 {
+            // 512 coords / 256 bucket = 2 buckets per compress
+            let v = rng.gaussian_vec(512, 1.0);
+            let _ = c.compress(&v).unwrap();
+        }
+        // Payload header (wire format v2) carries the pooled vector count.
+        let payload = c.stats_payload();
+        let seen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+        assert_eq!(seen, 3, "cap must stop stat intake exactly at stat_samples");
+        // After an update the segment (and the counter) restarts.
+        c.update_levels(&[&payload]).unwrap();
+        let v = rng.gaussian_vec(512, 1.0);
+        let _ = c.compress(&v).unwrap();
+        let payload = c.stats_payload();
+        let seen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+        assert_eq!(seen, 2, "new segment observes again up to the cap");
+        // cap = 0 means unlimited
+        let mut cfg0 = quant_cfg(LevelScheme::Adaptive, SymbolCodec::Huffman);
+        cfg0.stat_samples = 0;
+        let mut c0 = Compressor::from_config(&cfg0, Rng::seed_from(32)).unwrap();
+        for _ in 0..5 {
+            let v = rng.gaussian_vec(512, 1.0);
+            let _ = c0.compress(&v).unwrap();
+        }
+        let payload = c0.stats_payload();
+        let seen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+        assert_eq!(seen, 10);
     }
 
     #[test]

@@ -29,10 +29,10 @@
 //! | [`coding`] | bit-level IO, Elias γ/δ/ω codes, canonical Huffman |
 //! | [`quant`] | `Q_ℓ` random quantization (Def. 1), wire format (`CODE∘Q`), QAda adaptive levels, Thm-1/Thm-2 bound calculators |
 //! | [`oracle`] | monotone VI problem suite, absolute/relative noise oracles, restricted gap function |
-//! | [`algo`] | Q-GenX template (DA/DE/OptDA) with adaptive step-size, baselines (EG, SGDA, QSGDA) |
+//! | [`algo`] | Q-GenX template (DA/DE/OptDA) with adaptive step-size, local-steps replica wrapper, baselines (EG, SGDA, QSGDA) |
 //! | [`net`] | simulated α-β transport, exact bit accounting |
 //! | [`topo`] | topology-aware collectives: full-mesh / star / ring / hierarchical / gossip exchange graphs, per-topology α-β cost, per-link traffic |
-//! | [`coordinator`] | leader/worker synchronous rounds (Algorithm 1) |
+//! | [`coordinator`] | leader/worker synchronous rounds (Algorithm 1); exact / gossip / local runner families |
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
 //! | [`train`] | GAN / LM training drivers over the runtime |
 //! | [`metrics`] | time-series recorder, CSV emission |

@@ -66,7 +66,7 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K]\n\
            lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx]\n\
            info   print the artifact manifest summary\n\
@@ -116,15 +116,22 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     if let Some(t) = flags.get("topo") {
         cfg.topo.kind = t.clone();
     }
+    if let Some(h) = flags.get("local") {
+        cfg.local.steps = h.parse().map_err(|_| "bad --local")?;
+    }
+    if flags.contains_key("qsgda") && cfg.local.steps > 1 {
+        return Err("--qsgda has no local-steps path; drop --local".into());
+    }
     println!(
-        "run: problem={} dim={} K={} T={} mode={} variant={} topo={}",
+        "run: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={}",
         cfg.problem.kind,
         cfg.problem.dim,
         cfg.workers,
         cfg.iters,
         cfg.quant.mode.name(),
         cfg.algo.variant.name(),
-        cfg.topo.kind
+        cfg.topo.kind,
+        cfg.local.steps
     );
     let rec = if flags.contains_key("qsgda") {
         qgenx::coordinator::run_qsgda_baseline(&cfg).map_err(|e| e.to_string())?

@@ -44,6 +44,49 @@ pub fn consensus_distance(replicas: &[Vec<f32>]) -> f64 {
     (sum_sq / k as f64).sqrt()
 }
 
+/// Per-synchronization accounting for the local-steps runners: how far the
+/// replicas drifted during each local segment (consensus distance of the
+/// iterates *before* the delta averaging) and how many wire bits each sync
+/// round cost. Recorded as the `sync_drift` / `sync_bits` series plus the
+/// `syncs` / `bits_per_sync` / `mean_sync_drift` summary scalars.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SyncAccounting {
+    syncs: u64,
+    bits: u64,
+    drift_sum: f64,
+}
+
+impl SyncAccounting {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sync round at local iteration `t`: `drift` is the
+    /// pre-averaging consensus distance, `bits` the wire bits this round
+    /// put on the network (data plane only — stat rounds are accounted
+    /// separately, as in the other runners).
+    pub fn record(&mut self, rec: &mut Recorder, t: usize, drift: f64, bits: u64) {
+        self.syncs += 1;
+        self.bits += bits;
+        self.drift_sum += drift;
+        rec.push("sync_drift", t as f64, drift);
+        rec.push("sync_bits", t as f64, bits as f64);
+    }
+
+    pub fn syncs(&self) -> u64 {
+        self.syncs
+    }
+
+    /// Emit the summary scalars (call once at the end of a run).
+    pub fn emit_scalars(&self, rec: &mut Recorder) {
+        rec.set_scalar("syncs", self.syncs as f64);
+        if self.syncs > 0 {
+            rec.set_scalar("bits_per_sync", self.bits as f64 / self.syncs as f64);
+            rec.set_scalar("mean_sync_drift", self.drift_sum / self.syncs as f64);
+        }
+    }
+}
+
 /// One named scalar series indexed by step.
 #[derive(Clone, Debug, Default)]
 pub struct Series {
@@ -176,6 +219,26 @@ mod tests {
         let twox = vec![vec![2.0f32], vec![-2.0f32]];
         assert!((consensus_distance(&twox) - 2.0).abs() < 1e-12);
         assert_eq!(consensus_distance(&[]), 0.0);
+    }
+
+    #[test]
+    fn sync_accounting_series_and_scalars() {
+        let mut rec = Recorder::new();
+        let mut acc = SyncAccounting::new();
+        acc.record(&mut rec, 4, 0.5, 1000);
+        acc.record(&mut rec, 8, 1.5, 3000);
+        assert_eq!(acc.syncs(), 2);
+        acc.emit_scalars(&mut rec);
+        assert_eq!(rec.scalar("syncs"), Some(2.0));
+        assert_eq!(rec.scalar("bits_per_sync"), Some(2000.0));
+        assert_eq!(rec.scalar("mean_sync_drift"), Some(1.0));
+        assert_eq!(rec.get("sync_drift").unwrap().xs(), vec![4.0, 8.0]);
+        assert_eq!(rec.get("sync_bits").unwrap().ys(), vec![1000.0, 3000.0]);
+        // empty accounting emits only the count
+        let mut rec2 = Recorder::new();
+        SyncAccounting::new().emit_scalars(&mut rec2);
+        assert_eq!(rec2.scalar("syncs"), Some(0.0));
+        assert_eq!(rec2.scalar("bits_per_sync"), None);
     }
 
     #[test]

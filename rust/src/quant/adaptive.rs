@@ -80,12 +80,19 @@ impl SufficientStats {
         self.hist.cdf(u)
     }
 
-    /// Serialize the sufficient statistic (bin masses as f32 LE) for the
-    /// inter-worker stat exchange at level-update steps. The whole point of
-    /// sufficient statistics is that this is tiny: `4 × hist_bins` bytes
-    /// regardless of `d`.
+    /// Serialize the sufficient statistic for the inter-worker stat
+    /// exchange at level-update steps (wire format v2): a `u32` LE
+    /// vector count followed by the bin masses as f32 LE. The whole point
+    /// of sufficient statistics is that this is tiny: `4 + 4 × hist_bins`
+    /// bytes regardless of `d`.
+    ///
+    /// The count travels with the masses so that pooling from payloads
+    /// ([`Self::absorb_bytes`]) agrees with in-memory pooling
+    /// ([`Self::merge`]) — v1 omitted it and counted one vector per
+    /// absorbed *payload*, silently under-reporting pooled sample sizes.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(4 * self.hist.bins());
+        let mut out = Vec::with_capacity(4 + 4 * self.hist.bins());
+        out.extend_from_slice(&(self.vectors_seen.min(u32::MAX as usize) as u32).to_le_bytes());
         for &c in self.hist.bin_counts() {
             out.extend_from_slice(&(c as f32).to_le_bytes());
         }
@@ -94,19 +101,22 @@ impl SufficientStats {
 
     /// Pool a peer's serialized statistic into this one.
     pub fn absorb_bytes(&mut self, bytes: &[u8]) -> Result<()> {
-        if bytes.len() != 4 * self.hist.bins() {
+        if bytes.len() != 4 + 4 * self.hist.bins() {
             return Err(Error::Quant(format!(
-                "stat payload {} bytes, expected {}",
+                "stat payload {} bytes, expected {} (u32 count + {} bins)",
                 bytes.len(),
-                4 * self.hist.bins()
+                4 + 4 * self.hist.bins(),
+                self.hist.bins()
             )));
         }
-        let counts: Vec<f64> = bytes
+        let (head, body) = bytes.split_at(4);
+        let peer_vectors = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
+        let counts: Vec<f64> = body
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
             .collect();
         self.hist.add_counts(&counts);
-        self.vectors_seen += 1;
+        self.vectors_seen += peer_vectors;
         Ok(())
     }
 
@@ -367,6 +377,36 @@ mod tests {
         let hi = a.cdf(u).max(b.cdf(u));
         let m = merged.cdf(u);
         assert!(m >= lo - 1e-12 && m <= hi + 1e-12);
+    }
+
+    #[test]
+    fn absorb_bytes_matches_merge_exactly() {
+        // Wire-format v2 parity: pooling from serialized payloads must
+        // agree with in-memory `merge` on both the histogram (up to f32
+        // rounding of the masses) and — the v1 bug — the pooled vector
+        // count.
+        let a = gaussian_stats(128, 256, 4, 20);
+        let b = gaussian_stats(128, 256, 7, 21);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        let mut absorbed = SufficientStats::new(128, 2);
+        absorbed.absorb_bytes(&a.to_bytes()).unwrap();
+        absorbed.absorb_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(absorbed.vectors_seen(), merged.vectors_seen());
+        assert_eq!(absorbed.vectors_seen(), 11);
+        for u in [0.01, 0.05, 0.2, 0.8] {
+            assert!(
+                (absorbed.cdf(u) - merged.cdf(u)).abs() < 1e-6,
+                "cdf({u}) diverged: {} vs {}",
+                absorbed.cdf(u),
+                merged.cdf(u)
+            );
+        }
+        // Truncated / oversized payloads are rejected, not misread.
+        let bytes = a.to_bytes();
+        assert_eq!(bytes.len(), 4 + 4 * 128);
+        assert!(absorbed.absorb_bytes(&bytes[..bytes.len() - 4]).is_err());
+        assert!(absorbed.absorb_bytes(&[0u8; 4]).is_err());
     }
 
     #[test]

@@ -107,8 +107,9 @@ impl<'rt> LmTrainer<'rt> {
 
 
     /// QAda level-update step: exchange sufficient statistics (tiny —
-    /// `4·hist_bins` bytes each, counted as traffic) and re-optimize all
-    /// workers' levels from the identical pooled payload list.
+    /// `4 + 4·hist_bins` bytes each under stat wire-format v2, counted as
+    /// traffic) and re-optimize all workers' levels from the identical
+    /// pooled payload list.
     fn maybe_update_levels(&mut self, t: usize) -> Result<()> {
         let every = self.cfg.quant.update_every;
         // Fire at an early warmup step (so short runs still adapt once),
