@@ -1,0 +1,117 @@
+//! Walkthrough: layer-wise heterogeneous quantization (Q-GenX-LW).
+//!
+//! Deep-learning dual vectors concatenate per-layer gradients whose norm
+//! profiles differ by orders of magnitude. With `[quant.layers]` each
+//! layer gets its own level sequence, codec and sufficient statistics; the
+//! v3 stat exchange pools them per layer across workers, and an optional
+//! global bit budget (`budget = B`) lets `quant::alloc` re-split
+//! bits/coordinate by the Theorem-1 variance objective — wide-and-cold
+//! layers surrender bits to narrow-and-hot ones.
+//!
+//! ```bash
+//! cargo run --release --example layerwise
+//! # or, from the CLI (the count form auto-splits at any problem.dim;
+//! # explicit `--layers name:end,…` bounds must fit the configured dim):
+//! qgenx run --layers 3 --iters 600
+//! ```
+
+use qgenx::config::ExperimentConfig;
+use qgenx::coordinator::run_experiment;
+
+fn base() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "layerwise".into();
+    // LM-shaped synthetic oracle: 60% cold "embed", 30% "body", 10% hot
+    // "head", under relative noise so the heterogeneity persists.
+    cfg.problem.kind = "lm-proxy".into();
+    cfg.problem.dim = 640;
+    cfg.problem.noise = "relative".into();
+    cfg.problem.rel_c = 0.5;
+    cfg.workers = 4;
+    cfg.iters = 600;
+    cfg.eval_every = 150;
+    cfg.quant.mode = qgenx::config::QuantMode::parse("uq4").unwrap();
+    cfg.quant.scheme = qgenx::config::LevelScheme::Uniform;
+    cfg.quant.codec = qgenx::coding::SymbolCodec::Fixed;
+    cfg.quant.bucket_size = 64;
+    cfg
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("Q-GenX-LW on the lm-proxy oracle (d = 640, K = 4, 4-bit budget).\n");
+
+    // 1) The regression contract: a one-layer map is the seed pipeline,
+    //    bit for bit.
+    let baseline = run_experiment(&base())?;
+    let mut one = base();
+    one.quant.layers.names = vec!["all".into()];
+    let one_rec = run_experiment(&one)?;
+    assert_eq!(
+        baseline.get("gap").unwrap().ys(),
+        one_rec.get("gap").unwrap().ys(),
+        "single-layer map must reproduce the seed trajectory bit-for-bit"
+    );
+    assert_eq!(baseline.scalar("total_bits"), one_rec.scalar("total_bits"));
+    println!("single-layer map == seed pipeline: identical trajectory and wire bits ✓\n");
+
+    // 2) Layer-wise with a 4-bit/coordinate budget, layers aligned with
+    //    the oracle's blocks.
+    let mut lw = base();
+    lw.quant.layers.names = vec!["embed".into(), "body".into(), "head".into()];
+    lw.quant.layers.bounds = vec![384, 576];
+    lw.quant.layers.budget = 4.0;
+    let lw_rec = run_experiment(&lw)?;
+
+    println!(
+        "{:<12} {:>10} {:>12} {:>10}",
+        "scheme", "final gap", "wire MiB", "eps_q"
+    );
+    for (label, rec) in [("uniform", &baseline), ("layer-wise", &lw_rec)] {
+        println!(
+            "{label:<12} {:>10.5} {:>12.3} {:>10.3}",
+            rec.get("gap").unwrap().last().unwrap(),
+            rec.scalar("total_bits").unwrap() / 8.0 / 1048576.0,
+            rec.scalar("epsilon_q").unwrap(),
+        );
+    }
+    println!();
+    assert_eq!(lw_rec.scalar("layers"), Some(3.0));
+    println!("{:<8} {:>8} {:>12} {:>14}", "layer", "levels", "wire MiB", "eps_q(layer)");
+    for name in ["embed", "body", "head"] {
+        println!(
+            "{name:<8} {:>8.0} {:>12.3} {:>14.3}",
+            lw_rec.scalar(&format!("layer_levels/{name}")).unwrap(),
+            lw_rec.scalar(&format!("layer_bits/{name}")).unwrap() / 8.0 / 1048576.0,
+            lw_rec.scalar(&format!("layer_variance/{name}")).unwrap(),
+        );
+    }
+
+    // The budget is a hard cap on mean symbol bits, so the layer-wise run
+    // cannot meaningfully out-spend uniform UQ4 (small slack: per-layer
+    // frames + sign-bit differences).
+    let bits_u = baseline.scalar("total_bits").unwrap();
+    let bits_l = lw_rec.scalar("total_bits").unwrap();
+    assert!(
+        bits_l <= bits_u * 1.15,
+        "budgeted layer-wise must stay near the uniform wire cost: {bits_l} vs {bits_u}"
+    );
+
+    println!(
+        "\nReading the table:\n\
+         * the allocator (re-run at every level update from the pooled v3\n\
+           per-layer statistics) strips the cold embed block down to few\n\
+           levels and spends the freed bits on the hot head block;\n\
+         * mean symbol bits stay within the 4-bit budget, so the wire cost\n\
+           matches uniform UQ4 while the blended ε_Q drops — variance where\n\
+           the mass is, bits where they matter;\n\
+         * all of it composes with the topo collectives and local steps:\n\
+           try `[topo] kind = \"ring\"` or `[local] steps = 4` on top.\n\
+         \n\
+         Config-file form:  [quant.layers]  names = [\"embed\",\"body\",\"head\"]\n\
+                            bounds = [384, 576]   budget = 4.0\n\
+         plus optional per-layer overrides in [quant.layers.<name>] tables;\n\
+         see docs/CONFIG.md. `cargo bench --bench layerwise_tradeoff` runs\n\
+         the matched-gap accounting on the LM and GAN proxy oracles."
+    );
+    Ok(())
+}

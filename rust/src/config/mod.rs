@@ -80,6 +80,202 @@ impl LevelScheme {
     }
 }
 
+/// Per-layer overrides from a `[quant.layers.<name>]` table; `None` fields
+/// inherit the base `[quant]` value. Only the quantizer knobs the wire
+/// format depends on per layer are overridable (bits via `mode`, level
+/// `scheme`, `codec`, `bucket_size`); the statistic shape (`hist_bins`,
+/// `norm`) and the schedule (`update_every`, `stat_samples`) stay global so
+/// the v3 stat payload is rectangular and all layers update in lockstep.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerOverride {
+    pub mode: Option<QuantMode>,
+    pub scheme: Option<LevelScheme>,
+    pub codec: Option<SymbolCodec>,
+    pub bucket_size: Option<usize>,
+}
+
+impl LayerOverride {
+    pub fn is_empty(&self) -> bool {
+        *self == LayerOverride::default()
+    }
+
+    /// Base `[quant]` config with this layer's overrides applied. The
+    /// returned config is *flat* — its own `layers` table is cleared, since
+    /// it describes one layer of an already-partitioned pipeline.
+    pub fn apply(&self, base: &QuantConfig) -> QuantConfig {
+        let mut cfg = base.clone();
+        cfg.layers = LayersConfig::default();
+        if let Some(m) = self.mode {
+            cfg.mode = m;
+        }
+        if let Some(s) = self.scheme {
+            cfg.scheme = s;
+        }
+        if let Some(c) = self.codec {
+            cfg.codec = c;
+        }
+        if let Some(b) = self.bucket_size {
+            cfg.bucket_size = b;
+        }
+        cfg
+    }
+}
+
+/// Layer-wise quantization (`[quant.layers]` table / `--layers` CLI flag).
+///
+/// Empty `names` (the default) disables layer-wise handling entirely; one
+/// name applies its override to the whole vector through the ordinary
+/// single-codec pipeline (bit-identical machinery to no layer map at all);
+/// two or more names engage the layer-wise compressor: per-layer
+/// levels/codec/statistics, the v3 stat wire format, and — when `budget`
+/// is set — the [`crate::quant::alloc`] bit-budget allocator re-run at
+/// every level update. See `docs/CONFIG.md` for the full reference.
+#[derive(Clone, Debug, Default)]
+pub struct LayersConfig {
+    /// Layer names, in coordinate order. Also the `[quant.layers.<name>]`
+    /// override-table keys and the `layer_bits/<name>` metric suffixes.
+    pub names: Vec<String>,
+    /// Interior split points (`names.len() − 1` strictly increasing
+    /// coordinate offsets). Empty → equal split aligned to the base bucket
+    /// size, resolved once the vector dimension is known.
+    pub bounds: Vec<usize>,
+    /// Global symbol-bit budget per coordinate for the Theorem-1 allocator
+    /// (`quant::alloc`); `0` (default) keeps each layer's configured bits.
+    pub budget: f64,
+    /// Per-layer overrides, parallel to `names` (missing entries = none).
+    pub overrides: Vec<LayerOverride>,
+}
+
+impl LayersConfig {
+    /// True when the layer-wise compressor (≥ 2 layers) is engaged.
+    pub fn enabled(&self) -> bool {
+        self.names.len() >= 2
+    }
+
+    /// Layer `i`'s override (default when none was configured).
+    pub fn override_for(&self, i: usize) -> LayerOverride {
+        self.overrides.get(i).cloned().unwrap_or_default()
+    }
+
+    /// Resolve the partition for dimension `d`; `align` is the boundary
+    /// alignment for the automatic equal split (pass the base bucket size
+    /// so buckets never straddle layers; ignored with explicit bounds).
+    pub fn resolve_map(&self, d: usize, align: usize) -> Result<crate::quant::LayerMap> {
+        if self.bounds.is_empty() {
+            crate::quant::LayerMap::equal_split(self.names.clone(), d, align)
+        } else {
+            crate::quant::LayerMap::new(self.names.clone(), &self.bounds, d)
+        }
+    }
+
+    /// Resolve one flat [`QuantConfig`] per layer from the base config.
+    pub fn resolve_quant(&self, base: &QuantConfig) -> Vec<QuantConfig> {
+        (0..self.names.len()).map(|i| self.override_for(i).apply(base)).collect()
+    }
+
+    /// Dimension-independent sanity checks (called from
+    /// [`ExperimentConfig::validate`] and `Compressor::from_config`).
+    pub fn validate(&self, base: &QuantConfig) -> Result<()> {
+        if self.names.is_empty() {
+            if self.budget != 0.0 || !self.bounds.is_empty() {
+                return Err(Error::Config(
+                    "quant.layers: bounds/budget set without layer names".into(),
+                ));
+            }
+            return Ok(());
+        }
+        if !self.bounds.is_empty() && self.bounds.len() + 1 != self.names.len() {
+            return Err(Error::Config(format!(
+                "quant.layers: {} names need {} bounds (or none for an equal split), got {}",
+                self.names.len(),
+                self.names.len() - 1,
+                self.bounds.len()
+            )));
+        }
+        for w in self.bounds.windows(2) {
+            if w[1] <= w[0] {
+                return Err(Error::Config(format!(
+                    "quant.layers.bounds must be strictly increasing, got {:?}",
+                    self.bounds
+                )));
+            }
+        }
+        if let Some(&0) = self.bounds.first() {
+            return Err(Error::Config("quant.layers.bounds must start above 0".into()));
+        }
+        if self.enabled() && base.mode == QuantMode::Fp32 {
+            return Err(Error::Config(
+                "quant.layers needs a quantized base mode (fp32 has no layer-wise path)".into(),
+            ));
+        }
+        for (i, ov) in self.overrides.iter().enumerate() {
+            if ov.mode == Some(QuantMode::Fp32) {
+                return Err(Error::Config(format!(
+                    "quant.layers.{}: per-layer mode must be quantized, not fp32",
+                    self.names.get(i).map(String::as_str).unwrap_or("?")
+                )));
+            }
+        }
+        if !(self.budget == 0.0 || (2.0..=32.0).contains(&self.budget)) {
+            return Err(Error::Config(format!(
+                "quant.layers.budget = {} (0 = off, else 2..=32 bits/coordinate)",
+                self.budget
+            )));
+        }
+        if self.budget > 0.0 && !self.enabled() {
+            return Err(Error::Config(
+                "quant.layers.budget needs at least two layers to allocate across".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse the `--layers` CLI spec: either a layer count (`--layers 4`,
+    /// equal bucket-aligned split) or explicit named bounds
+    /// (`--layers embed:4096,body:244736,head` — every layer but the last
+    /// carries its end offset; the last ends at `d`).
+    pub fn parse_cli(spec: &str) -> Result<LayersConfig> {
+        if let Ok(n) = spec.parse::<usize>() {
+            if n == 0 {
+                return Err(Error::Config("--layers count must be >= 1".into()));
+            }
+            return Ok(LayersConfig {
+                names: (0..n).map(|i| format!("l{i}")).collect(),
+                ..Default::default()
+            });
+        }
+        let parts: Vec<&str> = spec.split(',').collect();
+        let mut names = Vec::with_capacity(parts.len());
+        let mut bounds = Vec::with_capacity(parts.len().saturating_sub(1));
+        for (i, part) in parts.iter().enumerate() {
+            let part = part.trim();
+            match part.split_once(':') {
+                Some((name, end)) => {
+                    if i + 1 == parts.len() {
+                        return Err(Error::Config(
+                            "--layers: the last layer ends at d; drop its `:end`".into(),
+                        ));
+                    }
+                    names.push(name.trim().to_string());
+                    bounds.push(end.trim().parse::<usize>().map_err(|_| {
+                        Error::Config(format!("--layers: bad end offset in `{part}`"))
+                    })?);
+                }
+                None => {
+                    if i + 1 != parts.len() {
+                        return Err(Error::Config(format!(
+                            "--layers: layer `{part}` needs `name:end` (only the last \
+                             layer's end is implicit)"
+                        )));
+                    }
+                    names.push(part.to_string());
+                }
+            }
+        }
+        Ok(LayersConfig { names, bounds, ..Default::default() })
+    }
+}
+
 /// Quantization + wire-format configuration.
 #[derive(Clone, Debug)]
 pub struct QuantConfig {
@@ -100,18 +296,32 @@ pub struct QuantConfig {
     /// stat upkeep at large `d`. 0 (the default) = unlimited, the
     /// historical behavior.
     pub stat_samples: usize,
+    /// Layer-wise quantization (`[quant.layers]`): named partition of the
+    /// dual vector with per-layer overrides and an optional bit budget.
+    /// Default (no names) = the single-codec pipeline.
+    pub layers: LayersConfig,
 }
 
 impl QuantConfig {
     /// True when anything adapts on the update schedule `U` — QAda level
-    /// placement (`scheme == Adaptive`) or the Huffman probability model
-    /// (`codec == Huffman`). The single source of truth for "does this
-    /// pipeline exchange sufficient statistics": `stats_payload`,
-    /// `update_levels` and every runner's stat-round schedule must agree
-    /// on it (they once didn't, and Huffman-with-fixed-levels runs paid
-    /// for stat rounds whose payloads were all empty).
+    /// placement (`scheme == Adaptive`), the Huffman probability model
+    /// (`codec == Huffman`) on *any* layer, or the layer-wise bit-budget
+    /// allocator (`layers.budget > 0`, which re-runs on pooled stats). The
+    /// single source of truth for "does this pipeline exchange sufficient
+    /// statistics": `stats_payload`, `update_levels` and every runner's
+    /// stat-round schedule must agree on it (they once didn't, and
+    /// Huffman-with-fixed-levels runs paid for stat rounds whose payloads
+    /// were all empty).
     pub fn adapts(&self) -> bool {
-        self.scheme == LevelScheme::Adaptive || self.codec == SymbolCodec::Huffman
+        if self.layers.names.is_empty() {
+            return self.scheme == LevelScheme::Adaptive || self.codec == SymbolCodec::Huffman;
+        }
+        if self.layers.enabled() && self.layers.budget > 0.0 {
+            return true;
+        }
+        self.layers.resolve_quant(self).iter().any(|c| {
+            c.scheme == LevelScheme::Adaptive || c.codec == SymbolCodec::Huffman
+        })
     }
 }
 
@@ -126,6 +336,7 @@ impl Default for QuantConfig {
             update_every: 100,
             hist_bins: 256,
             stat_samples: 0,
+            layers: LayersConfig::default(),
         }
     }
 }
@@ -345,6 +556,7 @@ impl ExperimentConfig {
                 update_every: doc.get_usize("quant.update_every", d.quant.update_every)?,
                 hist_bins: doc.get_usize("quant.hist_bins", d.quant.hist_bins)?,
                 stat_samples: doc.get_usize("quant.stat_samples", d.quant.stat_samples)?,
+                layers: parse_layers(doc)?,
             },
             algo: AlgoConfig {
                 variant: Variant::parse(&doc.get_str("algo.variant", d.algo.variant.name())?)?,
@@ -418,6 +630,15 @@ impl ExperimentConfig {
         if self.quant.hist_bins < 2 {
             return Err(Error::Config("quant.hist_bins must be >= 2".into()));
         }
+        self.quant.layers.validate(&self.quant)?;
+        if !self.quant.layers.names.is_empty() {
+            // The VI runners' dual vector has dimension problem.dim, so the
+            // partition can be resolved (and rejected) at config time.
+            self.quant
+                .layers
+                .resolve_map(self.problem.dim, self.quant.bucket_size)
+                .map_err(|e| Error::Config(format!("quant.layers: {e}")))?;
+        }
         if !(self.net.bandwidth_bps > 0.0) {
             return Err(Error::Config("net.bandwidth must be positive".into()));
         }
@@ -435,6 +656,58 @@ impl ExperimentConfig {
         crate::topo::Topology::from_config(&self.topo, self.workers)?;
         Ok(())
     }
+}
+
+/// Parse the `[quant.layers]` table (+ per-layer `[quant.layers.<name>]`
+/// override tables) into a [`LayersConfig`]. Reserved keys inside
+/// `[quant.layers]`: `names`, `bounds`, `budget`, `count` — a layer may not
+/// use one of these as its name.
+fn parse_layers(doc: &Doc) -> Result<LayersConfig> {
+    let mut names = doc.get_str_array("quant.layers.names")?.unwrap_or_default();
+    let count = doc.get_usize("quant.layers.count", 0)?;
+    if names.is_empty() && count > 0 {
+        names = (0..count).map(|i| format!("l{i}")).collect();
+    } else if !names.is_empty() && count > 0 && count != names.len() {
+        return Err(Error::Config(format!(
+            "quant.layers: count = {count} contradicts {} names",
+            names.len()
+        )));
+    }
+    const RESERVED: [&str; 4] = ["names", "bounds", "budget", "count"];
+    let mut overrides = Vec::with_capacity(names.len());
+    for name in &names {
+        if RESERVED.contains(&name.as_str()) {
+            return Err(Error::Config(format!("quant.layers: `{name}` is a reserved key")));
+        }
+        let key = |k: &str| format!("quant.layers.{name}.{k}");
+        let mode = match doc.get_str(&key("mode"), "")?.as_str() {
+            "" => None,
+            m => Some(QuantMode::parse(m)?),
+        };
+        let scheme = match doc.get_str(&key("scheme"), "")?.as_str() {
+            "" => None,
+            s => Some(LevelScheme::parse(s)?),
+        };
+        let codec = match doc.get_str(&key("codec"), "")?.as_str() {
+            "" => None,
+            c => Some(
+                SymbolCodec::parse(c)
+                    .ok_or_else(|| Error::Config(format!("bad {}", key("codec"))))?,
+            ),
+        };
+        let bucket_size = if doc.contains(&key("bucket_size")) {
+            Some(doc.get_usize(&key("bucket_size"), 0)?)
+        } else {
+            None
+        };
+        overrides.push(LayerOverride { mode, scheme, codec, bucket_size });
+    }
+    Ok(LayersConfig {
+        names,
+        bounds: doc.get_usize_array("quant.layers.bounds")?.unwrap_or_default(),
+        budget: doc.get_f64("quant.layers.budget", 0.0)?,
+        overrides,
+    })
 }
 
 /// Parse "l1" | "l2" | "linf" | "l<q>" into the norm exponent.
@@ -602,6 +875,155 @@ noise = "relative"
         let mut cfg = ExperimentConfig::default();
         cfg.local.steps = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn parses_quant_layers_table_with_overrides() {
+        let src = r#"
+workers = 4
+[problem]
+dim = 512
+
+[quant]
+mode = "uq4"
+bucket_size = 128
+
+[quant.layers]
+names = ["embed", "body", "head"]
+bounds = [128, 384]
+budget = 4.0
+
+[quant.layers.embed]
+mode = "s6"
+codec = "fixed"
+
+[quant.layers.head]
+mode = "uq8"
+scheme = "uniform"
+bucket_size = 64
+"#;
+        let cfg = ExperimentConfig::from_toml(src).unwrap();
+        let l = &cfg.quant.layers;
+        assert!(l.enabled());
+        assert_eq!(l.names, vec!["embed", "body", "head"]);
+        assert_eq!(l.bounds, vec![128, 384]);
+        assert_eq!(l.budget, 4.0);
+        assert_eq!(l.override_for(0).mode, Some(QuantMode::Quantized { levels: 6 }));
+        assert_eq!(l.override_for(0).codec, Some(crate::coding::SymbolCodec::Fixed));
+        assert!(l.override_for(1).is_empty());
+        assert_eq!(l.override_for(2).mode, Some(QuantMode::Quantized { levels: 254 }));
+        assert_eq!(l.override_for(2).scheme, Some(LevelScheme::Uniform));
+        assert_eq!(l.override_for(2).bucket_size, Some(64));
+        // Resolution applies overrides on top of the base [quant].
+        let subs = l.resolve_quant(&cfg.quant);
+        assert_eq!(subs[0].mode, QuantMode::Quantized { levels: 6 });
+        assert_eq!(subs[1].mode, QuantMode::Quantized { levels: 14 });
+        assert_eq!(subs[1].bucket_size, 128);
+        assert_eq!(subs[2].bucket_size, 64);
+        assert!(subs.iter().all(|s| s.layers.names.is_empty()), "sub-configs are flat");
+        // Map resolution at the problem dimension.
+        let map = l.resolve_map(512, cfg.quant.bucket_size).unwrap();
+        assert_eq!(map.dims(), vec![128, 256, 128]);
+        // `count` shorthand.
+        let cfg =
+            ExperimentConfig::from_toml("[quant]\nbucket_size = 16\n[quant.layers]\ncount = 3\n")
+                .unwrap();
+        assert_eq!(cfg.quant.layers.names, vec!["l0", "l1", "l2"]);
+    }
+
+    #[test]
+    fn layers_validation_rejects_bad_tables() {
+        // wrong bounds count
+        assert!(ExperimentConfig::from_toml(
+            "[quant.layers]\nnames = [\"a\", \"b\"]\nbounds = [5, 9]\n"
+        )
+        .is_err());
+        // fp32 base with layers
+        assert!(ExperimentConfig::from_toml(
+            "[quant]\nmode = \"fp32\"\n[quant.layers]\nnames = [\"a\", \"b\"]\n"
+        )
+        .is_err());
+        // per-layer fp32
+        assert!(ExperimentConfig::from_toml(
+            "[quant.layers]\nnames = [\"a\", \"b\"]\n[quant.layers.a]\nmode = \"fp32\"\n"
+        )
+        .is_err());
+        // budget outside 2..=32 (and budget without enough layers)
+        assert!(ExperimentConfig::from_toml(
+            "[quant.layers]\nnames = [\"a\", \"b\"]\nbudget = 1.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[quant.layers]\nnames = [\"a\"]\nbudget = 4.0\n"
+        )
+        .is_err());
+        // budget/bounds without names
+        assert!(ExperimentConfig::from_toml("[quant.layers]\nbudget = 4.0\n").is_err());
+        // bound at/above the problem dimension is caught at config time
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\ndim = 64\n[quant.layers]\nnames = [\"a\", \"b\"]\nbounds = [64]\n"
+        )
+        .is_err());
+        // reserved layer name
+        assert!(ExperimentConfig::from_toml(
+            "[quant.layers]\nnames = [\"bounds\", \"b\"]\nbounds = [8]\n"
+        )
+        .is_err());
+        // contradictory count
+        assert!(ExperimentConfig::from_toml(
+            "[quant.layers]\nnames = [\"a\", \"b\"]\ncount = 3\n"
+        )
+        .is_err());
+        // a valid two-layer split of the default dim (64) still parses
+        let cfg = ExperimentConfig::from_toml(
+            "[quant]\nbucket_size = 16\n[quant.layers]\nnames = [\"a\", \"b\"]\nbounds = [32]\n",
+        )
+        .unwrap();
+        assert!(cfg.quant.layers.enabled());
+    }
+
+    #[test]
+    fn layers_cli_spec_parses() {
+        let l = LayersConfig::parse_cli("4").unwrap();
+        assert_eq!(l.names, vec!["l0", "l1", "l2", "l3"]);
+        assert!(l.bounds.is_empty());
+        let l = LayersConfig::parse_cli("embed:4096, body:244736, head").unwrap();
+        assert_eq!(l.names, vec!["embed", "body", "head"]);
+        assert_eq!(l.bounds, vec![4096, 244736]);
+        assert!(LayersConfig::parse_cli("0").is_err());
+        assert!(LayersConfig::parse_cli("a:10,b:20").is_err(), "last end must be implicit");
+        assert!(LayersConfig::parse_cli("a,b:20,c").is_err(), "interior layers need ends");
+        assert!(LayersConfig::parse_cli("a:x,b").is_err());
+    }
+
+    #[test]
+    fn adapts_accounts_for_layer_overrides_and_budget() {
+        // Fully static base…
+        let mut q = QuantConfig {
+            scheme: LevelScheme::Uniform,
+            codec: SymbolCodec::Fixed,
+            ..Default::default()
+        };
+        assert!(!q.adapts());
+        // …stays static under a static layer map…
+        q.layers.names = vec!["a".into(), "b".into()];
+        assert!(!q.adapts());
+        // …adapts when any layer override adapts…
+        q.layers.overrides =
+            vec![LayerOverride::default(), LayerOverride {
+                codec: Some(SymbolCodec::Huffman),
+                ..Default::default()
+            }];
+        assert!(q.adapts());
+        // …and the bit-budget allocator forces stat exchange on its own.
+        q.layers.overrides.clear();
+        assert!(!q.adapts());
+        q.layers.budget = 4.0;
+        assert!(q.adapts());
+        // An adapting base stays adapting under layers with no overrides.
+        let mut q = QuantConfig::default();
+        q.layers.names = vec!["a".into(), "b".into()];
+        assert!(q.adapts());
     }
 
     #[test]

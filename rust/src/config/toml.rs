@@ -165,6 +165,23 @@ impl Doc {
         }
     }
 
+    pub fn get_str_array(&self, key: &str) -> Result<Option<Vec<String>>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(Value::Array(xs)) => {
+                let mut out = Vec::with_capacity(xs.len());
+                for x in xs {
+                    match x {
+                        Value::Str(s) => out.push(s.clone()),
+                        v => return Err(type_err(key, "string array", v)),
+                    }
+                }
+                Ok(Some(out))
+            }
+            Some(v) => Err(type_err(key, "array", v)),
+        }
+    }
+
     pub fn get_usize_array(&self, key: &str) -> Result<Option<Vec<usize>>> {
         match self.get(key) {
             None => Ok(None),
@@ -322,6 +339,12 @@ label = "1GbE"
         );
         assert_eq!(doc.get_usize_array("net.peers").unwrap().unwrap(), vec![1, 2, 3]);
         assert_eq!(doc.get_str("net.label", "").unwrap(), "1GbE");
+        let named = Doc::parse("names = [\"a\", \"b\"]").unwrap();
+        assert_eq!(
+            named.get_str_array("names").unwrap().unwrap(),
+            vec!["a".to_string(), "b".to_string()]
+        );
+        assert!(Doc::parse("names = [1, 2]").unwrap().get_str_array("names").is_err());
     }
 
     #[test]

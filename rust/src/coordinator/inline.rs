@@ -45,6 +45,10 @@ fn emit_summary_scalars(
     rec.set_scalar("epsilon_q", comps[0].epsilon_q(d));
     rec.set_scalar("wire_links", links.links() as f64);
     rec.set_scalar("max_link_bytes", links.max_link_bytes());
+    // Layer-wise pipelines additionally report per-layer scalars
+    // (layer_bits/<name>, layer_variance/<name>, layer_levels/<name>);
+    // no-op otherwise.
+    comps[0].emit_layer_scalars(rec);
 }
 
 /// Run one Q-GenX experiment per the config; returns the metric recorder
@@ -55,9 +59,9 @@ fn emit_summary_scalars(
 ///
 /// * **exact** (this function's body) — per-step dual exchange over an
 ///   exact topology, the seed's Algorithm 1;
-/// * **gossip** ([`run_gossip`]) — inexact topologies: per-step dual
-///   exchange averaged over graph neighborhoods, plus `consensus_dist`;
-/// * **local** ([`run_local`]) — `local.steps ≥ 2`: private extra-gradient
+/// * **gossip** (the private `run_gossip`) — inexact topologies: per-step
+///   dual exchange averaged over graph neighborhoods, plus `consensus_dist`;
+/// * **local** (the private `run_local`) — `local.steps ≥ 2`: private extra-gradient
 ///   iterations between syncs, quantized model-delta averaging at syncs.
 ///
 /// `local.steps = 1` deliberately does *not* engage the delta-sync
@@ -171,6 +175,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
             rec.push("gamma", t as f64, state.gamma());
             rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
             rec.push("sim_time_cum", t as f64, traffic.total_time());
+            comps[0].record_layer_series(&mut rec, t as f64);
         }
     }
 
@@ -316,6 +321,7 @@ fn run_gossip(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result
             rec.push("gamma", t as f64, states[0].gamma());
             rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
             rec.push("sim_time_cum", t as f64, traffic.total_time());
+            comps[0].record_layer_series(&mut rec, t as f64);
         }
     }
 
@@ -470,6 +476,7 @@ fn run_local(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result<
             rec.push("gamma", t as f64, replicas[0].gamma());
             rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
             rec.push("sim_time_cum", t as f64, traffic.total_time());
+            comps[0].record_layer_series(&mut rec, t as f64);
         }
     }
 
@@ -802,6 +809,105 @@ mod tests {
         assert_eq!(rec.scalar("syncs"), Some(40.0));
         // neighborhood averaging never reaches full consensus
         assert!(rec.scalar("consensus_dist").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn single_layer_map_reproduces_all_three_runners_bit_for_bit() {
+        // The Q-GenX-LW acceptance contract: a one-layer [quant.layers]
+        // map runs the seed machinery — identical trajectories AND
+        // identical wire accounting — for the exact, gossip, and local
+        // runner families.
+        for (kind, h) in [("full-mesh", 1usize), ("gossip", 1), ("full-mesh", 4)] {
+            let mut cfg = base_cfg();
+            cfg.workers = 8;
+            cfg.iters = 160;
+            cfg.eval_every = 40;
+            cfg.topo.kind = kind.into();
+            cfg.local.steps = h;
+            let baseline = run_experiment(&cfg).unwrap();
+            cfg.quant.layers.names = vec!["all".into()];
+            let layered = run_experiment(&cfg).unwrap();
+            assert_eq!(
+                baseline.get("gap").unwrap().ys(),
+                layered.get("gap").unwrap().ys(),
+                "{kind}/H={h}: trajectory must match bit-for-bit"
+            );
+            assert_eq!(
+                baseline.scalar("total_bits"),
+                layered.scalar("total_bits"),
+                "{kind}/H={h}: wire bits must match exactly"
+            );
+            assert!(
+                layered.scalar("layers").is_none(),
+                "one layer must not surface layer-wise metrics"
+            );
+        }
+    }
+
+    #[test]
+    fn layerwise_runner_end_to_end_with_budget() {
+        let mut cfg = base_cfg();
+        cfg.problem.dim = 96;
+        cfg.iters = 300;
+        cfg.quant.bucket_size = 32;
+        cfg.quant.scheme = LevelScheme::Uniform;
+        cfg.quant.codec = crate::coding::SymbolCodec::Fixed;
+        cfg.quant.layers.names = vec!["embed".into(), "body".into(), "head".into()];
+        cfg.quant.layers.bounds = vec![32, 64];
+        cfg.quant.layers.budget = 4.0;
+        let rec = run_experiment(&cfg).unwrap();
+        // Converges, refreshes (the budget forces stat rounds even though
+        // scheme/codec are static), and surfaces per-layer accounting.
+        let gaps = rec.get("gap").unwrap();
+        assert!(gaps.last().unwrap() < gaps.points.first().unwrap().1);
+        assert!(rec.scalar("level_updates").unwrap() >= 1.0);
+        assert_eq!(rec.scalar("layers"), Some(3.0));
+        let mut layer_sum = 0.0;
+        for name in ["embed", "body", "head"] {
+            let bits = rec.scalar(&format!("layer_bits/{name}")).unwrap();
+            assert!(bits > 0.0, "{name} must put bits on the wire");
+            layer_sum += bits;
+            assert!(rec.scalar(&format!("layer_variance/{name}")).unwrap() > 0.0);
+            assert!(rec.scalar(&format!("layer_levels/{name}")).unwrap() >= 1.0);
+            let series = rec.get(&format!("layer_bits/{name}")).unwrap();
+            assert!(series.len() >= 2 && series.last().unwrap() > 0.0);
+        }
+        // Per-layer payload bits are one worker's share (before collective
+        // amplification and framing), so they undercount the global total.
+        assert!(layer_sum < rec.scalar("total_bits").unwrap());
+        // epsilon_q scalar is the dimension-weighted blend — finite, > 0.
+        let eps = rec.scalar("epsilon_q").unwrap();
+        assert!(eps.is_finite() && eps > 0.0);
+    }
+
+    #[test]
+    fn layerwise_composes_with_gossip_and_local_steps() {
+        let mut cfg = base_cfg();
+        cfg.workers = 8;
+        cfg.problem.dim = 48;
+        cfg.iters = 200;
+        cfg.eval_every = 50;
+        cfg.quant.bucket_size = 16;
+        cfg.quant.layers.names = vec!["lo".into(), "hi".into()];
+        cfg.quant.layers.bounds = vec![16];
+        cfg.topo.kind = "gossip".into();
+        cfg.topo.degree = 3;
+        let rec = run_experiment(&cfg).unwrap();
+        assert!(rec.get("gap").unwrap().last().unwrap().is_finite());
+        assert_eq!(rec.scalar("layers"), Some(2.0));
+        assert!(rec.scalar("consensus_dist").unwrap() > 0.0);
+
+        cfg.topo.kind = "full-mesh".into();
+        cfg.local.steps = 4;
+        let rec = run_experiment(&cfg).unwrap();
+        assert!(rec.get("gap").unwrap().last().unwrap().is_finite());
+        assert_eq!(rec.scalar("layers"), Some(2.0));
+        assert_eq!(rec.scalar("syncs"), Some(50.0));
+        assert_eq!(
+            rec.scalar("consensus_dist"),
+            Some(0.0),
+            "exact topology: layer-wise replicas must re-sync exactly"
+        );
     }
 
     #[test]

@@ -14,12 +14,17 @@
 //! Per-iteration protocol (both modes), following Algorithm 1:
 //!
 //! 1. if `t ∈ U` (level-update schedule): workers exchange sufficient
-//!    statistics (histograms; stat wire-format v2 = `u32` vector count +
-//!    `4·bins` bytes of masses — counted as traffic), pool them, and each
-//!    deterministically re-optimizes the levels and rebuilds the Huffman
-//!    codec (identical inputs ⇒ identical tables). The payload is
-//!    non-empty whenever *anything* adapts — QAda level placement or the
-//!    Huffman probability model — matching what `update_levels` consumes.
+//!    statistics (stat wire-format v2 for single-codec pipelines, the
+//!    per-layer v3 for layer-wise pipelines — byte layouts in
+//!    `docs/WIRE.md`; counted as traffic), pool them in rank order, and
+//!    each deterministically re-optimizes levels, rebuilds Huffman
+//!    codecs, and — layer-wise with a bit budget — re-runs the Theorem-1
+//!    allocator (identical inputs ⇒ identical tables and allocations).
+//!    The payload is non-empty whenever *anything* adapts — QAda level
+//!    placement, the Huffman probability model, or the budget allocator —
+//!    matching what `update_levels` consumes
+//!    ([`crate::config::QuantConfig::adapts`] is the single source of
+//!    truth).
 //! 2. variant-dependent base exchange (`V̂_{k,t}`): DE quantizes + exchanges
 //!    fresh oracle queries at `X_t`; DA/OptDA send nothing.
 //! 3. extrapolate to `X_{t+1/2}`.
@@ -65,9 +70,21 @@
 //!
 //! The *control plane* (step 1's stat pooling) is always global and
 //! accounted as a full-mesh round, even under gossip: the decode side of
-//! the wire format requires bit-identical levels + Huffman tables on every
-//! worker, and the stat payloads are small and infrequent. Gossip
-//! decentralizes the data plane only.
+//! the wire format requires bit-identical levels + Huffman tables (and,
+//! layer-wise, bit allocations) on every worker, and the stat payloads are
+//! small and infrequent. Gossip decentralizes the data plane only.
+//!
+//! ## Compression pipeline selection
+//!
+//! Orthogonal to the runner family and topology, `[quant.layers]` selects
+//! the per-worker [`pipeline::Compressor`] shape: FP32, the single-codec
+//! seed pipeline, or layer-wise heterogeneous quantization (Q-GenX-LW —
+//! per-layer levels/codec/statistics with optional Theorem-1 bit-budget
+//! allocation; `docs/CONFIG.md` documents the table, `docs/WIRE.md` the
+//! formats). Every runner records the per-layer `layer_bits/<name>` /
+//! `layer_variance/<name>` series and scalars when the layer-wise pipeline
+//! is active. A single-layer map reproduces the un-layered runs
+//! bit-for-bit in all three families (regression-tested).
 //!
 //! Timing: compute (oracle + encode + decode) is *measured*; network time
 //! is *modeled* (α-β on the exact encoded byte counts) — see DESIGN.md §5.4.

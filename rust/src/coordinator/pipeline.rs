@@ -6,13 +6,30 @@
 //! driven identically on every worker (the coordinator exchanges pooled
 //! statistics first) so that all replicas hold the same levels/codec — the
 //! decode side of the wire format depends on them.
+//!
+//! Three pipeline shapes, selected by the config:
+//!
+//! * **FP32** — raw little-endian f32 payloads, no state.
+//! * **Single-codec** (the seed pipeline) — one level sequence + codec for
+//!   the whole vector; v2 stat payloads. A one-layer `[quant.layers]` map
+//!   resolves to this same machinery (bit-identical by construction).
+//! * **Layer-wise** (Q-GenX-LW, `[quant.layers]` with ≥ 2 names) — the
+//!   vector is partitioned by a [`crate::quant::LayerMap`]; each layer
+//!   carries its own levels/codec/statistics and its wire payload is the
+//!   per-layer `CODE ∘ Q` stream behind a `u32` length frame. Stat rounds
+//!   move the v3 per-layer payload ([`crate::quant::LayerStats`], see
+//!   `docs/WIRE.md`), and — when `[quant.layers] budget` is set — every
+//!   level update re-runs the Theorem-1 bit-budget allocator
+//!   ([`crate::quant::alloc`]) on the pooled per-layer weights before
+//!   re-optimizing levels, so bits follow the norm profile as it drifts.
 
 use crate::coding::SymbolCodec;
-use crate::config::{LevelScheme, QuantConfig, QuantMode};
+use crate::config::{LayersConfig, LevelScheme, QuantConfig, QuantMode};
 use crate::error::{Error, Result};
+use crate::metrics::Recorder;
 use crate::quant::{
-    decode_vector, dequantize_into, encode_vector, optimize_levels, quantize, symbol_probs,
-    Levels, SufficientStats, WireCodec,
+    alloc, decode_vector, dequantize_into, encode_vector, optimize_levels, quantize,
+    symbol_probs, LayerMap, LayerProfile, LayerStats, Levels, SufficientStats, WireCodec,
 };
 use crate::util::Rng;
 
@@ -22,6 +39,8 @@ pub enum Compressor {
     Fp32,
     /// Quantize + entropy-code per the paper.
     Quant(Box<QuantCompressor>),
+    /// Layer-wise heterogeneous quantization (Q-GenX-LW).
+    LayerWise(Box<LayerWiseCompressor>),
 }
 
 pub struct QuantCompressor {
@@ -35,21 +54,61 @@ pub struct QuantCompressor {
     updates: usize,
 }
 
+impl QuantCompressor {
+    /// Feed the sufficient statistic (the caller gates on "does this
+    /// pipeline adapt"). `stat_samples` caps how many vectors (buckets,
+    /// under bucketing) feed the statistic per schedule segment, so stat
+    /// upkeep stays O(cap) as `d` and the segment length grow; 0 =
+    /// unlimited.
+    fn observe_for_stats(&mut self, v: &[f32]) {
+        let cap = self.cfg.stat_samples;
+        if cap == 0 {
+            self.stats.observe_bucketed(v, self.cfg.bucket_size);
+        } else if self.stats.vectors_seen() < cap {
+            let b = if self.cfg.bucket_size == 0 { v.len() } else { self.cfg.bucket_size };
+            let room = cap - self.stats.vectors_seen();
+            let take = room.saturating_mul(b).min(v.len());
+            self.stats.observe_bucketed(&v[..take], self.cfg.bucket_size);
+        }
+    }
+
+    /// `CODE ∘ Q` one vector (or one layer slice) with this state.
+    fn compress_vec(&mut self, v: &[f32]) -> Result<(Vec<u8>, u64)> {
+        let qv = quantize(v, &self.levels, self.cfg.norm_q, self.cfg.bucket_size, &mut self.rng)?;
+        encode_vector(&qv, &self.codec)
+    }
+}
+
 impl Compressor {
     /// Build from config; `rng` seeds the quantization randomness (private
-    /// per worker).
+    /// per worker). A `[quant.layers]` table with ≥ 2 names selects the
+    /// layer-wise pipeline; one name merges its override and runs the
+    /// ordinary single-codec pipeline — bit-identical to no layer map.
     pub fn from_config(cfg: &QuantConfig, rng: Rng) -> Result<Self> {
-        match cfg.mode {
+        cfg.layers.validate(cfg)?;
+        if cfg.layers.enabled() && cfg.mode != QuantMode::Fp32 {
+            return LayerWiseCompressor::from_config(cfg, rng)
+                .map(|lw| Compressor::LayerWise(Box::new(lw)));
+        }
+        // ≤ 1 layer: flatten the (possible) single override and run the
+        // seed pipeline with the caller's rng untouched — the passthrough
+        // that makes a one-layer map reproduce trajectories bit-for-bit.
+        let flat = if cfg.layers.names.len() == 1 {
+            cfg.layers.override_for(0).apply(cfg)
+        } else {
+            cfg.clone()
+        };
+        match flat.mode {
             QuantMode::Fp32 => Ok(Compressor::Fp32),
             QuantMode::Quantized { levels: s } => {
-                let levels = initial_levels(cfg.scheme, s);
-                let codec = build_codec(&levels, cfg.codec, None)?;
+                let levels = initial_levels(flat.scheme, s);
+                let codec = build_codec(&levels, flat.codec, None)?;
                 Ok(Compressor::Quant(Box::new(QuantCompressor {
-                    cfg: cfg.clone(),
+                    stats: SufficientStats::new(flat.hist_bins, flat.norm_q),
+                    cfg: flat,
                     levels,
                     codec,
                     rng,
-                    stats: SufficientStats::new(cfg.hist_bins, cfg.norm_q),
                     updates: 0,
                 })))
             }
@@ -57,18 +116,33 @@ impl Compressor {
     }
 
     pub fn is_quantized(&self) -> bool {
-        matches!(self, Compressor::Quant(_))
+        matches!(self, Compressor::Quant(_) | Compressor::LayerWise(_))
     }
 
-    /// Current levels (None for FP32).
+    pub fn is_layerwise(&self) -> bool {
+        matches!(self, Compressor::LayerWise(_))
+    }
+
+    /// Current levels (None for FP32 and for the layer-wise pipeline,
+    /// which has one sequence *per layer* — see [`Self::layer_levels`]).
     pub fn levels(&self) -> Option<&Levels> {
         match self {
-            Compressor::Fp32 => None,
+            Compressor::Fp32 | Compressor::LayerWise(_) => None,
             Compressor::Quant(q) => Some(&q.levels),
         }
     }
 
-    /// Theorem-1 variance factor of the current configuration.
+    /// Layer `i`'s current level sequence (layer-wise pipelines only).
+    pub fn layer_levels(&self, i: usize) -> Option<&Levels> {
+        match self {
+            Compressor::LayerWise(lw) => lw.subs.get(i).map(|s| &s.levels),
+            _ => None,
+        }
+    }
+
+    /// Theorem-1 variance factor of the current configuration. For the
+    /// layer-wise pipeline this is the dimension-weighted mean of the
+    /// per-layer factors (each at its own bucket size and level count).
     pub fn epsilon_q(&self, d: usize) -> f64 {
         match self {
             Compressor::Fp32 => 0.0,
@@ -76,6 +150,13 @@ impl Compressor {
                 let per_bucket = if q.cfg.bucket_size == 0 { d } else { q.cfg.bucket_size.min(d) };
                 crate::quant::epsilon_q(&q.levels, per_bucket, q.cfg.norm_q)
             }
+            Compressor::LayerWise(lw) => lw
+                .with_map(d, |map| {
+                    Ok((0..map.len())
+                        .map(|i| map.dim(i) as f64 / d as f64 * lw.layer_epsilon(i, map.dim(i)))
+                        .sum())
+                })
+                .unwrap_or(f64::NAN),
         }
     }
 
@@ -95,26 +176,13 @@ impl Compressor {
             Compressor::Quant(q) => {
                 // Sufficient statistics feed (a) QAda level optimization and
                 // (b) Huffman probability refreshes — needed even when the
-                // level placement itself is fixed. `stat_samples` caps how
-                // many vectors (buckets, under bucketing) feed the statistic
-                // per schedule segment, so stat upkeep stays O(cap) as `d`
-                // and the segment length grow; 0 = unlimited.
+                // level placement itself is fixed.
                 if q.cfg.adapts() {
-                    let cap = q.cfg.stat_samples;
-                    if cap == 0 {
-                        q.stats.observe_bucketed(v, q.cfg.bucket_size);
-                    } else if q.stats.vectors_seen() < cap {
-                        let b =
-                            if q.cfg.bucket_size == 0 { v.len() } else { q.cfg.bucket_size };
-                        let room = cap - q.stats.vectors_seen();
-                        let take = room.saturating_mul(b).min(v.len());
-                        q.stats.observe_bucketed(&v[..take], q.cfg.bucket_size);
-                    }
+                    q.observe_for_stats(v);
                 }
-                let qv =
-                    quantize(v, &q.levels, q.cfg.norm_q, q.cfg.bucket_size, &mut q.rng)?;
-                encode_vector(&qv, &q.codec)
+                q.compress_vec(v)
             }
+            Compressor::LayerWise(lw) => lw.compress(v),
         }
     }
 
@@ -139,6 +207,7 @@ impl Compressor {
                 dequantize_into(&qv, &q.levels, out);
                 Ok(())
             }
+            Compressor::LayerWise(lw) => lw.decompress(bytes, out),
         }
     }
 
@@ -152,10 +221,15 @@ impl Compressor {
     /// scheme alone made Huffman-with-fixed-levels runs pay for stat
     /// rounds whose payloads were all empty, so the advertised probability
     /// refresh silently never happened.
-    /// Empty for FP32 and for fully static pipelines.
+    /// Empty for FP32 and for fully static pipelines. Single-codec
+    /// pipelines ship the v2 payload; layer-wise pipelines ship the
+    /// per-layer v3 payload (`docs/WIRE.md`).
     pub fn stats_payload(&self) -> Vec<u8> {
         match self {
             Compressor::Quant(q) if q.cfg.adapts() => q.stats.to_bytes(),
+            Compressor::LayerWise(lw) if lw.adapts => {
+                LayerStats::payload_from(&lw.subs.iter().map(|s| &s.stats).collect::<Vec<_>>())
+            }
             _ => Vec::new(),
         }
     }
@@ -171,6 +245,7 @@ impl Compressor {
     pub fn update_levels(&mut self, all_stats_rank_order: &[&[u8]]) -> Result<bool> {
         let q = match self {
             Compressor::Fp32 => return Ok(false),
+            Compressor::LayerWise(lw) => return lw.update_levels(all_stats_rank_order),
             Compressor::Quant(q) => q,
         };
         if !q.cfg.adapts() {
@@ -205,7 +280,317 @@ impl Compressor {
         match self {
             Compressor::Fp32 => 0,
             Compressor::Quant(q) => q.updates,
+            Compressor::LayerWise(lw) => lw.updates,
         }
+    }
+
+    /// Layer names, in coordinate order (layer-wise pipelines only).
+    pub fn layer_names(&self) -> Option<&[String]> {
+        match self {
+            Compressor::LayerWise(lw) => Some(&lw.layers_cfg.names),
+            _ => None,
+        }
+    }
+
+    /// Cumulative encoded payload bits per layer (framing excluded) —
+    /// the `layer_bits` metric source.
+    pub fn layer_wire_bits(&self) -> Option<&[u64]> {
+        match self {
+            Compressor::LayerWise(lw) => Some(&lw.layer_bits),
+            _ => None,
+        }
+    }
+
+    /// Push the per-layer metric series (`layer_bits/<name>` cumulative
+    /// payload bits, `layer_variance/<name>` current Theorem-1 factor) at
+    /// eval step `t`. No-op for non-layer-wise pipelines, so every runner
+    /// can call it unconditionally.
+    pub fn record_layer_series(&self, rec: &mut Recorder, t: f64) {
+        let Compressor::LayerWise(lw) = self else { return };
+        for (i, name) in lw.layers_cfg.names.iter().enumerate() {
+            rec.push(&format!("layer_bits/{name}"), t, lw.layer_bits[i] as f64);
+            rec.push(&format!("layer_variance/{name}"), t, lw.layer_epsilon_auto(i));
+        }
+    }
+
+    /// Emit the per-layer summary scalars (`layer_bits/<name>`,
+    /// `layer_variance/<name>`, `layer_levels/<name>`, plus the `layers`
+    /// count). No-op for non-layer-wise pipelines.
+    pub fn emit_layer_scalars(&self, rec: &mut Recorder) {
+        let Compressor::LayerWise(lw) = self else { return };
+        rec.set_scalar("layers", lw.subs.len() as f64);
+        for (i, name) in lw.layers_cfg.names.iter().enumerate() {
+            rec.set_scalar(&format!("layer_bits/{name}"), lw.layer_bits[i] as f64);
+            rec.set_scalar(&format!("layer_variance/{name}"), lw.layer_epsilon_auto(i));
+            rec.set_scalar(&format!("layer_levels/{name}"), lw.subs[i].levels.s() as f64);
+        }
+    }
+}
+
+/// Layer-wise compression state: one `(levels, codec, stats, rng)` per
+/// layer of the [`LayerMap`], plus the shared update/allocation machinery.
+///
+/// Wire format of one compressed vector (see `docs/WIRE.md`): per layer,
+/// in map order, `[u32 LE payload byte length][the layer's CODE ∘ Q
+/// payload]`. The frame is needed because each layer's stream is
+/// independently byte-padded; its 32 bits/layer are charged to the
+/// reported bit count. The layer map itself is side information (derived
+/// from the shared config once `d` is known), like `d` and the bucket size
+/// in the single-codec pipeline.
+pub struct LayerWiseCompressor {
+    layers_cfg: LayersConfig,
+    /// Base bucket size — the alignment hint for auto-split maps.
+    base_bucket: usize,
+    norm_q: u32,
+    hist_bins: usize,
+    /// Cached `QuantConfig::adapts()` of the full pipeline: per-layer
+    /// schemes/codecs *and* the bit-budget allocator can demand stat
+    /// exchange.
+    adapts: bool,
+    /// Bits/coordinate for `quant::alloc`; 0 = keep configured widths.
+    budget: f64,
+    subs: Vec<QuantCompressor>,
+    /// Partition, resolved from the first vector's dimension.
+    map: Option<LayerMap>,
+    /// Cumulative encoded payload bits per layer (framing excluded).
+    layer_bits: Vec<u64>,
+    updates: usize,
+}
+
+impl LayerWiseCompressor {
+    fn from_config(cfg: &QuantConfig, rng: Rng) -> Result<Self> {
+        let flat = cfg.layers.resolve_quant(cfg);
+        let mut subs = Vec::with_capacity(flat.len());
+        for (i, c) in flat.into_iter().enumerate() {
+            let QuantMode::Quantized { levels: s } = c.mode else {
+                return Err(Error::Quant(format!(
+                    "layer `{}` resolved to fp32 — layer-wise pipelines are quantized",
+                    cfg.layers.names[i]
+                )));
+            };
+            let levels = initial_levels(c.scheme, s);
+            let codec = build_codec(&levels, c.codec, None)?;
+            subs.push(QuantCompressor {
+                stats: SufficientStats::new(c.hist_bins, c.norm_q),
+                levels,
+                codec,
+                // Deterministic per-layer stream off the worker's rng.
+                rng: rng.fork(i as u64 + 1),
+                cfg: c,
+                updates: 0,
+            });
+        }
+        Ok(LayerWiseCompressor {
+            layers_cfg: cfg.layers.clone(),
+            base_bucket: cfg.bucket_size,
+            norm_q: cfg.norm_q,
+            hist_bins: cfg.hist_bins,
+            adapts: cfg.adapts(),
+            budget: cfg.layers.budget,
+            layer_bits: vec![0; cfg.layers.names.len()],
+            subs,
+            map: None,
+            updates: 0,
+        })
+    }
+
+    /// Run `f` against the partition for dimension `d` — the cached map
+    /// when it matches (the steady state: no clone, no allocation), a
+    /// freshly resolved one before the first compress (e.g. a
+    /// receive-only endpoint). A changed `d` mid-run is a caller bug.
+    fn with_map<R>(&self, d: usize, f: impl FnOnce(&LayerMap) -> Result<R>) -> Result<R> {
+        match &self.map {
+            Some(m) if m.d() == d => f(m),
+            Some(m) => Err(Error::Quant(format!(
+                "layer map resolved for d = {}, got a vector of d = {d}",
+                m.d()
+            ))),
+            None => f(&self.layers_cfg.resolve_map(d, self.base_bucket)?),
+        }
+    }
+
+    fn compress(&mut self, v: &[f32]) -> Result<(Vec<u8>, u64)> {
+        if let Some(m) = &self.map {
+            if m.d() != v.len() {
+                return Err(Error::Quant(format!(
+                    "layer map resolved for d = {}, got a vector of d = {}",
+                    m.d(),
+                    v.len()
+                )));
+            }
+        } else {
+            self.map = Some(self.layers_cfg.resolve_map(v.len(), self.base_bucket)?);
+        }
+        let adapts = self.adapts;
+        let n = self.subs.len();
+        // Capacity guess: ~6 bits/coordinate plus frames.
+        let mut out = Vec::with_capacity(v.len() + 4 * n);
+        let mut total_bits = 0u64;
+        for i in 0..n {
+            // Copy the range out so the map borrow does not overlap the
+            // &mut borrow of the sub-state (§Perf: no per-call map clone).
+            let r = self.map.as_ref().unwrap().range(i);
+            let slice = &v[r];
+            let sub = &mut self.subs[i];
+            if adapts {
+                sub.observe_for_stats(slice);
+            }
+            let (bytes, bits) = sub.compress_vec(slice)?;
+            out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+            out.extend_from_slice(&bytes);
+            total_bits += 32 + bits;
+            self.layer_bits[i] += bits;
+        }
+        Ok((out, total_bits))
+    }
+
+    fn decompress(&self, bytes: &[u8], out: &mut [f32]) -> Result<()> {
+        self.with_map(out.len(), |map| Self::decompress_with(&self.subs, map, bytes, out))
+    }
+
+    fn decompress_with(
+        subs: &[QuantCompressor],
+        map: &LayerMap,
+        bytes: &[u8],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let mut cursor = 0usize;
+        for i in 0..map.len() {
+            if bytes.len() < cursor + 4 {
+                return Err(Error::Codec(format!(
+                    "layer-wise payload truncated at layer {i} frame"
+                )));
+            }
+            let len = u32::from_le_bytes([
+                bytes[cursor],
+                bytes[cursor + 1],
+                bytes[cursor + 2],
+                bytes[cursor + 3],
+            ]) as usize;
+            cursor += 4;
+            if bytes.len() < cursor + len {
+                return Err(Error::Codec(format!(
+                    "layer-wise payload truncated in layer {i} body ({len} framed bytes)"
+                )));
+            }
+            let sub = &subs[i];
+            let qv = decode_vector(
+                &bytes[cursor..cursor + len],
+                map.dim(i),
+                sub.cfg.bucket_size,
+                &sub.codec,
+            )?;
+            dequantize_into(&qv, &sub.levels, map.slice_mut(i, out));
+            cursor += len;
+        }
+        if cursor != bytes.len() {
+            return Err(Error::Codec(format!(
+                "layer-wise payload has {} trailing bytes",
+                bytes.len() - cursor
+            )));
+        }
+        Ok(())
+    }
+
+    /// Pool the rank-ordered v3 payloads and update every layer in
+    /// lockstep: (a) if a bit budget is configured, re-run the Theorem-1
+    /// allocator on the pooled per-layer weights and resize any layer whose
+    /// alphabet moved; (b) re-optimize adaptive level placements and
+    /// rebuild codecs from the pooled per-layer statistics. Identical
+    /// rank-ordered inputs ⇒ identical allocations, levels and tables on
+    /// every worker — the same replication contract as the single-codec
+    /// pipeline, extended to the allocator.
+    fn update_levels(&mut self, all_stats_rank_order: &[&[u8]]) -> Result<bool> {
+        if !self.adapts {
+            return Ok(false);
+        }
+        let n = self.subs.len();
+        let mut pooled = LayerStats::new(n, self.hist_bins, self.norm_q);
+        for p in all_stats_rank_order {
+            if !p.is_empty() {
+                pooled.absorb_bytes(p)?;
+            }
+        }
+        if pooled.is_empty() {
+            return Ok(false);
+        }
+        let mut changed = false;
+        let mut resized = vec![false; n];
+        if self.budget > 0.0 {
+            let map = self.map.as_ref().ok_or_else(|| {
+                Error::Quant("bit-budget allocation before any compressed vector".into())
+            })?;
+            let profiles: Vec<LayerProfile> = (0..n)
+                .map(|i| {
+                    let dim = map.dim(i);
+                    let b = self.subs[i].cfg.bucket_size;
+                    LayerProfile {
+                        weight: pooled.layer(i).total_weight(),
+                        dim,
+                        eff_dim: if b == 0 { dim } else { b.min(dim) },
+                    }
+                })
+                .collect();
+            let allocation = alloc::allocate(&profiles, self.budget, self.norm_q)?;
+            for (i, &s_new) in allocation.levels.iter().enumerate() {
+                let sub = &mut self.subs[i];
+                if let QuantMode::Quantized { levels } = &mut sub.cfg.mode {
+                    if *levels != s_new {
+                        *levels = s_new;
+                        sub.levels = initial_levels(sub.cfg.scheme, s_new);
+                        resized[i] = true;
+                        changed = true;
+                    }
+                }
+            }
+        }
+        for (i, sub) in self.subs.iter_mut().enumerate() {
+            let stats_i = pooled.layer(i);
+            if stats_i.is_empty() {
+                // A layer no worker observed this segment (e.g. an all-zero
+                // slice): keep its fitted state — unless the allocator just
+                // resized it, in which case the codec must be rebuilt for
+                // the new alphabet (a stale width would corrupt the wire).
+                if resized[i] {
+                    sub.codec = build_codec(&sub.levels, sub.cfg.codec, None)?;
+                }
+                sub.stats.reset();
+                continue;
+            }
+            let new_levels = if sub.cfg.scheme == LevelScheme::Adaptive {
+                optimize_levels(stats_i, sub.levels.s(), Some(&sub.levels), 8)?
+            } else {
+                sub.levels.clone()
+            };
+            let probs = symbol_probs(stats_i, &new_levels);
+            sub.codec = build_codec(&new_levels, sub.cfg.codec, Some(&probs))?;
+            if new_levels != sub.levels {
+                changed = true;
+            }
+            sub.levels = new_levels;
+            sub.stats.reset();
+        }
+        self.updates += 1;
+        Ok(changed)
+    }
+
+    /// Theorem-1 factor of layer `i` at width `dim` (its own bucket size
+    /// and level sequence).
+    fn layer_epsilon(&self, i: usize, dim: usize) -> f64 {
+        let sub = &self.subs[i];
+        let b = sub.cfg.bucket_size;
+        let eff = if b == 0 { dim } else { b.min(dim) };
+        crate::quant::epsilon_q(&sub.levels, eff.max(1), sub.cfg.norm_q)
+    }
+
+    /// [`Self::layer_epsilon`] with the width taken from the resolved map
+    /// (bucket-size fallback before the first compress — metrics only).
+    fn layer_epsilon_auto(&self, i: usize) -> f64 {
+        let dim = match &self.map {
+            Some(m) => m.dim(i),
+            None => self.subs[i].cfg.bucket_size.max(1),
+        };
+        self.layer_epsilon(i, dim)
     }
 }
 
@@ -260,7 +645,17 @@ mod tests {
             update_every: 50,
             hist_bins: 128,
             stat_samples: 8,
+            layers: Default::default(),
         }
+    }
+
+    fn layered_cfg(scheme: LevelScheme, codec: SymbolCodec) -> QuantConfig {
+        let mut cfg = quant_cfg(scheme, codec);
+        cfg.stat_samples = 0;
+        cfg.bucket_size = 64;
+        cfg.layers.names = vec!["embed".into(), "body".into(), "head".into()];
+        cfg.layers.bounds = vec![128, 448];
+        cfg
     }
 
     #[test]
@@ -436,6 +831,231 @@ mod tests {
         let payload = c0.stats_payload();
         let seen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
         assert_eq!(seen, 10);
+    }
+
+    #[test]
+    fn single_layer_map_is_bitwise_passthrough() {
+        // The regression contract: a one-layer [quant.layers] map runs the
+        // seed single-codec machinery with the same rng — identical wire
+        // bytes, not merely identical distributions.
+        let base = quant_cfg(LevelScheme::Adaptive, SymbolCodec::Huffman);
+        let mut layered = base.clone();
+        layered.layers.names = vec!["all".into()];
+        let mut a = Compressor::from_config(&base, Rng::seed_from(70)).unwrap();
+        let mut b = Compressor::from_config(&layered, Rng::seed_from(70)).unwrap();
+        assert!(!b.is_layerwise(), "one layer must not engage the layer-wise path");
+        let mut rng = Rng::seed_from(71);
+        for _ in 0..6 {
+            let v = rng.gaussian_vec(700, 1.0);
+            let (wa, bits_a) = a.compress(&v).unwrap();
+            let (wb, bits_b) = b.compress(&v).unwrap();
+            assert_eq!(wa, wb, "wire bytes must match bit-for-bit");
+            assert_eq!(bits_a, bits_b);
+        }
+        // …including through a level update driven by identical payloads.
+        let (pa, pb) = (a.stats_payload(), b.stats_payload());
+        assert_eq!(pa, pb, "one-layer pipelines speak stat wire v2");
+        a.update_levels(&[&pa]).unwrap();
+        b.update_levels(&[&pb]).unwrap();
+        let v = rng.gaussian_vec(700, 1.0);
+        assert_eq!(a.compress(&v).unwrap(), b.compress(&v).unwrap());
+        // A single-layer override still applies (different mode ⇒ it
+        // genuinely reconfigures the flat pipeline).
+        let mut overridden = layered.clone();
+        overridden.layers.overrides =
+            vec![crate::config::LayerOverride {
+                mode: Some(QuantMode::Quantized { levels: 254 }),
+                ..Default::default()
+            }];
+        let c = Compressor::from_config(&overridden, Rng::seed_from(70)).unwrap();
+        assert_eq!(c.levels().unwrap().s(), 254);
+    }
+
+    #[test]
+    fn layerwise_roundtrip_and_cross_worker_decode() {
+        for (scheme, codec) in [
+            (LevelScheme::Uniform, SymbolCodec::Fixed),
+            (LevelScheme::Adaptive, SymbolCodec::Huffman),
+            (LevelScheme::Exponential, SymbolCodec::EliasGamma),
+        ] {
+            let cfg = layered_cfg(scheme, codec);
+            let mut a = Compressor::from_config(&cfg, Rng::seed_from(80)).unwrap();
+            let b = Compressor::from_config(&cfg, Rng::seed_from(81)).unwrap();
+            assert!(a.is_layerwise() && a.is_quantized());
+            let v = Rng::seed_from(82).gaussian_vec(512, 1.5);
+            let (wire, bits) = a.compress(&v).unwrap();
+            // 3 frames of 32 bits are charged on top of the payloads.
+            assert!(bits >= 96 && (bits as usize) < 32 * 512, "bits {bits}");
+            // The receiver (fresh instance, same config, different rng)
+            // decodes to exactly what the sender decodes.
+            let mut out_b = vec![0.0f32; 512];
+            b.decompress(&wire, &mut out_b).unwrap();
+            let mut out_a = vec![0.0f32; 512];
+            a.decompress(&wire, &mut out_a).unwrap();
+            assert_eq!(out_a, out_b, "{scheme:?}/{codec:?}");
+            // Unbiased reconstruction stays within norm.
+            let err = crate::util::dist_sq(&v, &out_a).sqrt();
+            assert!(err < crate::util::norm2(&v), "{scheme:?}/{codec:?} err {err}");
+            // Truncation and trailing garbage are rejected.
+            assert!(b.decompress(&wire[..wire.len() - 1], &mut out_b).is_err());
+            let mut padded = wire.clone();
+            padded.push(0);
+            assert!(b.decompress(&padded, &mut out_b).is_err());
+            // Dimension mismatch against the resolved map errors out.
+            let mut short = vec![0.0f32; 100];
+            assert!(a.decompress(&wire, &mut short).is_err());
+        }
+    }
+
+    #[test]
+    fn layerwise_overrides_give_layers_their_own_wire() {
+        // head at uq8/fixed, embed at s2/fixed: the per-coordinate wire
+        // cost must differ across layers roughly like the symbol widths.
+        let mut cfg = layered_cfg(LevelScheme::Uniform, SymbolCodec::Fixed);
+        cfg.layers.overrides = vec![
+            crate::config::LayerOverride {
+                mode: Some(QuantMode::Quantized { levels: 2 }),
+                ..Default::default()
+            },
+            Default::default(),
+            crate::config::LayerOverride {
+                mode: Some(QuantMode::Quantized { levels: 254 }),
+                ..Default::default()
+            },
+        ];
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(90)).unwrap();
+        let v = Rng::seed_from(91).gaussian_vec(512, 1.0);
+        let _ = c.compress(&v).unwrap();
+        let bits = c.layer_wire_bits().unwrap();
+        // dims 128 / 320 / 64 at 2 / 4 / 8 symbol bits (+ signs + norms).
+        let per_coord: Vec<f64> =
+            bits.iter().zip([128.0, 320.0, 64.0]).map(|(&b, d)| b as f64 / d).collect();
+        assert!(per_coord[0] < per_coord[1] && per_coord[1] < per_coord[2], "{per_coord:?}");
+        assert_eq!(c.layer_names().unwrap(), &["embed", "body", "head"]);
+        assert_eq!(c.layer_levels(0).unwrap().s(), 2);
+        assert_eq!(c.layer_levels(2).unwrap().s(), 254);
+        // Mixed static pipeline: no stats, no updates.
+        assert!(c.stats_payload().is_empty());
+        assert!(!c.update_levels(&[]).unwrap());
+    }
+
+    #[test]
+    fn layerwise_update_keeps_workers_in_lockstep() {
+        let cfg = layered_cfg(LevelScheme::Adaptive, SymbolCodec::Huffman);
+        let mut a = Compressor::from_config(&cfg, Rng::seed_from(100)).unwrap();
+        let mut b = Compressor::from_config(&cfg, Rng::seed_from(101)).unwrap();
+        let mut rng = Rng::seed_from(102);
+        for _ in 0..10 {
+            let _ = a.compress(&rng.gaussian_vec(512, 1.0)).unwrap();
+            let _ = b.compress(&rng.gaussian_vec(512, 1.0)).unwrap();
+        }
+        let (pa, pb) = (a.stats_payload(), b.stats_payload());
+        assert!(!pa.is_empty(), "adaptive layer-wise pipelines ship v3 stats");
+        // v3 header: layer count.
+        assert_eq!(u32::from_le_bytes([pa[0], pa[1], pa[2], pa[3]]), 3);
+        let changed_a = a.update_levels(&[&pa, &pb]).unwrap();
+        let changed_b = b.update_levels(&[&pa, &pb]).unwrap();
+        assert!(changed_a && changed_b);
+        assert_eq!(a.updates(), 1);
+        for i in 0..3 {
+            assert_eq!(
+                a.layer_levels(i).unwrap(),
+                b.layer_levels(i).unwrap(),
+                "layer {i} levels must stay replicated"
+            );
+        }
+        // Cross-decode still exact after the lockstep update.
+        let v = rng.gaussian_vec(512, 1.0);
+        let (wire, _) = a.compress(&v).unwrap();
+        let mut out_a = vec![0.0f32; 512];
+        let mut out_b = vec![0.0f32; 512];
+        a.decompress(&wire, &mut out_a).unwrap();
+        b.decompress(&wire, &mut out_b).unwrap();
+        assert_eq!(out_a, out_b);
+        // A v2-sized (un-layered) payload is rejected, not misread.
+        let v2_payload = vec![0u8; 4 + 4 * 128];
+        assert!(a.update_levels(&[&v2_payload]).is_err());
+    }
+
+    #[test]
+    fn budget_allocator_moves_bits_toward_heavy_layers() {
+        // Layers with wildly different norm mass; uniform scheme + fixed
+        // codec so the only moving part is the allocator.
+        let mut cfg = layered_cfg(LevelScheme::Uniform, SymbolCodec::Fixed);
+        cfg.layers.budget = 4.0;
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(110)).unwrap();
+        assert!(c.is_layerwise());
+        let mut rng = Rng::seed_from(111);
+        let mut wire_before = 0usize;
+        for _ in 0..8 {
+            // embed (128 coords) tiny, body (320) unit, head (64) huge.
+            let mut v = rng.gaussian_vec(128, 0.01);
+            v.extend(rng.gaussian_vec(320, 1.0));
+            v.extend(rng.gaussian_vec(64, 8.0));
+            let (w, _) = c.compress(&v).unwrap();
+            wire_before = w.len();
+        }
+        let p = c.stats_payload();
+        assert!(!p.is_empty(), "budget > 0 must force stat exchange");
+        let changed = c.update_levels(&[&p]).unwrap();
+        assert!(changed, "allocation away from uniform 4-bit must change levels");
+        let s_embed = c.layer_levels(0).unwrap().s();
+        let s_body = c.layer_levels(1).unwrap().s();
+        let s_head = c.layer_levels(2).unwrap().s();
+        assert!(
+            s_head > s_body && s_body >= s_embed,
+            "allocator must follow the mass: embed {s_embed} body {s_body} head {s_head}"
+        );
+        // The budget is respected on the wire: mean symbol bits/coordinate
+        // ≤ 4 → the post-allocation payload is no larger than ~uniform 4-bit
+        // (signs/norms are common to both).
+        let mut v = rng.gaussian_vec(128, 0.01);
+        v.extend(rng.gaussian_vec(320, 1.0));
+        v.extend(rng.gaussian_vec(64, 8.0));
+        let (w, _) = c.compress(&v).unwrap();
+        assert!(
+            w.len() <= wire_before + 8,
+            "post-allocation wire {} vs uniform {}",
+            w.len(),
+            wire_before
+        );
+        // Identical payloads on a second worker reproduce the allocation.
+        let mut c2 = Compressor::from_config(&cfg, Rng::seed_from(112)).unwrap();
+        let mut v2 = rng.gaussian_vec(128, 0.01);
+        v2.extend(rng.gaussian_vec(320, 1.0));
+        v2.extend(rng.gaussian_vec(64, 8.0));
+        let _ = c2.compress(&v2).unwrap();
+        c2.update_levels(&[&p]).unwrap();
+        for i in 0..3 {
+            assert_eq!(c2.layer_levels(i).unwrap(), c.layer_levels(i).unwrap());
+        }
+    }
+
+    #[test]
+    fn layer_metrics_surface_series_and_scalars() {
+        let cfg = layered_cfg(LevelScheme::Uniform, SymbolCodec::Fixed);
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(120)).unwrap();
+        let v = Rng::seed_from(121).gaussian_vec(512, 1.0);
+        let _ = c.compress(&v).unwrap();
+        let mut rec = Recorder::new();
+        c.record_layer_series(&mut rec, 1.0);
+        c.emit_layer_scalars(&mut rec);
+        assert_eq!(rec.scalar("layers"), Some(3.0));
+        for name in ["embed", "body", "head"] {
+            assert!(rec.get(&format!("layer_bits/{name}")).unwrap().last().unwrap() > 0.0);
+            assert!(rec.scalar(&format!("layer_variance/{name}")).unwrap() > 0.0);
+            assert_eq!(rec.scalar(&format!("layer_levels/{name}")), Some(14.0));
+        }
+        // Non-layer-wise pipelines: both calls are silent no-ops.
+        let flat = Compressor::from_config(
+            &quant_cfg(LevelScheme::Uniform, SymbolCodec::Fixed),
+            Rng::seed_from(122),
+        )
+        .unwrap();
+        let mut rec2 = Recorder::new();
+        flat.record_layer_series(&mut rec2, 1.0);
+        flat.emit_layer_scalars(&mut rec2);
+        assert!(rec2.series.is_empty() && rec2.scalars.is_empty());
     }
 
     #[test]

@@ -19,7 +19,8 @@
 //! decode every neighbor.
 //!
 //! Local-steps mode (`local.steps ≥ 2`) swaps the per-iteration protocol
-//! for [`worker_local_loop`]: `H` private extra-gradient iterations, then
+//! for the local worker loop (`worker_local_loop`): `H` private
+//! extra-gradient iterations, then
 //! one quantized model-delta exchange and a resync by averaging. Under
 //! exact topologies replicas drift *within* a segment but re-agree on a
 //! bit-identical consensus point at every sync; the end-of-run invariant
@@ -300,6 +301,7 @@ fn worker_loop(
             rec.push("gamma", t as f64, state.gamma());
             rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
             rec.push("sim_time_cum", t as f64, traffic.total_time());
+            comp.record_layer_series(&mut rec, t as f64);
         }
     }
     if rank == 0 {
@@ -310,6 +312,7 @@ fn worker_loop(
         rec.set_scalar("compute_time", traffic.compute_time);
         rec.set_scalar("wire_links", links.links() as f64);
         rec.set_scalar("max_link_bytes", links.max_link_bytes());
+        comp.emit_layer_scalars(&mut rec);
     }
     Ok((rec, state.x_world()))
 }
@@ -437,6 +440,7 @@ fn worker_local_loop(
                 rec.push("gamma", t as f64, rep.gamma());
                 rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
                 rec.push("sim_time_cum", t as f64, traffic.total_time());
+                comp.record_layer_series(&mut rec, t as f64);
             }
         }
     }
@@ -450,6 +454,7 @@ fn worker_local_loop(
         rec.set_scalar("max_link_bytes", links.max_link_bytes());
         rec.set_scalar("local_steps", h as f64);
         sync_acc.emit_scalars(&mut rec);
+        comp.emit_layer_scalars(&mut rec);
     }
     // Report the final *sync base* as this replica's end state: the run
     // ends on a sync, the consensus point is computed by identical
@@ -606,6 +611,37 @@ mod tests {
         let cons = run.recorder.scalar("consensus_dist").unwrap();
         assert!(cons.is_finite() && cons > 0.0, "gossip replicas must drift: {cons}");
         assert_eq!(run.recorder.scalar("syncs"), Some(40.0));
+    }
+
+    #[test]
+    fn threaded_layerwise_keeps_replicas_identical() {
+        // Layer-wise levels/codecs/allocations update in lockstep from the
+        // pooled v3 payloads, so the exact-topology replication invariant
+        // must hold exactly as it does for the single-codec pipeline.
+        let mut c = cfg();
+        c.iters = 200;
+        c.quant.bucket_size = 4;
+        c.quant.layers.names = vec!["lo".into(), "hi".into()];
+        c.quant.layers.bounds = vec![4];
+        c.quant.layers.budget = 4.0;
+        let run = run_threaded(&c).unwrap();
+        for r in &run.replicas[1..] {
+            assert_eq!(r, &run.replicas[0], "layer-wise replicas must stay bit-identical");
+        }
+        assert_eq!(run.recorder.scalar("layers"), Some(2.0));
+        assert!(run.recorder.scalar("level_updates").unwrap() >= 1.0);
+        assert!(run.recorder.scalar("layer_bits/lo").unwrap() > 0.0);
+        assert!(run.recorder.get("layer_bits/hi").unwrap().len() >= 2);
+        assert!(run.recorder.get("gap").unwrap().last().unwrap().is_finite());
+
+        // And the threaded local-steps loop composes with layers too.
+        c.local.steps = 4;
+        let run = run_threaded(&c).unwrap();
+        for r in &run.replicas[1..] {
+            assert_eq!(r, &run.replicas[0]);
+        }
+        assert_eq!(run.recorder.scalar("syncs"), Some(50.0));
+        assert_eq!(run.recorder.scalar("layers"), Some(2.0));
     }
 
     #[test]

@@ -27,7 +27,7 @@
 //! | [`testkit`] | in-house property-testing harness (no `proptest` offline) |
 //! | [`config`] | TOML-subset parser + typed experiment configuration |
 //! | [`coding`] | bit-level IO, Elias γ/δ/ω codes, canonical Huffman |
-//! | [`quant`] | `Q_ℓ` random quantization (Def. 1), wire format (`CODE∘Q`), QAda adaptive levels, Thm-1/Thm-2 bound calculators |
+//! | [`quant`] | `Q_ℓ` random quantization (Def. 1), wire format (`CODE∘Q`), QAda adaptive levels, layer-wise partition + Theorem-1 bit-budget allocator (Q-GenX-LW), Thm-1/Thm-2 bound calculators |
 //! | [`oracle`] | monotone VI problem suite, absolute/relative noise oracles, restricted gap function |
 //! | [`algo`] | Q-GenX template (DA/DE/OptDA) with adaptive step-size, local-steps replica wrapper, baselines (EG, SGDA, QSGDA) |
 //! | [`net`] | simulated α-β transport, exact bit accounting |
@@ -37,6 +37,10 @@
 //! | [`train`] | GAN / LM training drivers over the runtime |
 //! | [`metrics`] | time-series recorder, CSV emission |
 //! | [`benchkit`] | bench harness (no `criterion` offline) |
+//!
+//! User-facing references: `rust/README.md` (crate tour, scenario
+//! families, bench ↔ theorem map), `docs/CONFIG.md` (every TOML table and
+//! CLI flag), `docs/WIRE.md` (payload and stat wire formats).
 
 pub mod algo;
 pub mod benchkit;

@@ -66,9 +66,9 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H]\n\
-           gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K]\n\
-           lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H] [--layers N|name:end,...,last]\n\
+           gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K] [--layerwise]\n\
+           lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N]\n\
            info   print the artifact manifest summary\n\
            help   this message"
     );
@@ -119,11 +119,20 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     if let Some(h) = flags.get("local") {
         cfg.local.steps = h.parse().map_err(|_| "bad --local")?;
     }
+    if let Some(spec) = flags.get("layers") {
+        // Replace the partition (names + bounds) but keep a config file's
+        // budget — the flag is the quick way to try a different split.
+        let parsed =
+            qgenx::config::LayersConfig::parse_cli(spec).map_err(|e| e.to_string())?;
+        cfg.quant.layers.names = parsed.names;
+        cfg.quant.layers.bounds = parsed.bounds;
+        cfg.quant.layers.overrides.clear();
+    }
     if flags.contains_key("qsgda") && cfg.local.steps > 1 {
         return Err("--qsgda has no local-steps path; drop --local".into());
     }
     println!(
-        "run: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={}",
+        "run: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={} layers={}",
         cfg.problem.kind,
         cfg.problem.dim,
         cfg.workers,
@@ -131,7 +140,12 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
         cfg.quant.mode.name(),
         cfg.algo.variant.name(),
         cfg.topo.kind,
-        cfg.local.steps
+        cfg.local.steps,
+        if cfg.quant.layers.names.is_empty() {
+            "none".to_string()
+        } else {
+            cfg.quant.layers.names.join(",")
+        }
     );
     let rec = if flags.contains_key("qsgda") {
         qgenx::coordinator::run_qsgda_baseline(&cfg).map_err(|e| e.to_string())?
@@ -155,6 +169,11 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
         "max_link_bytes",
     ] {
         if let Some(v) = rec.scalar(key) {
+            println!("  {key} = {v:.3}");
+        }
+    }
+    for (key, v) in &rec.scalars {
+        if key.starts_with("layer_") {
             println!("  {key} = {v:.3}");
         }
     }
@@ -182,9 +201,16 @@ fn cmd_gan(flags: &Flags) -> Result<(), String> {
         steps: flag_usize(flags, "steps", 200),
         workers: flag_usize(flags, "workers", 3),
         eval_every: flag_usize(flags, "eval-every", 20),
+        layerwise: flags.contains_key("layerwise"),
         ..Default::default()
     };
-    println!("gan: mode={} steps={} workers={}", mode.name(), cfg.steps, cfg.workers);
+    println!(
+        "gan: mode={} steps={} workers={} layerwise={}",
+        mode.name(),
+        cfg.steps,
+        cfg.workers,
+        cfg.layerwise
+    );
     let mut tr = GanTrainer::new(&mut rt, cfg, NetModel::gbe()).map_err(|e| e.to_string())?;
     let rec = tr.train().map_err(|e| e.to_string())?;
     println!("  step   energy-distance (FID analog)");
@@ -215,6 +241,12 @@ fn cmd_lm(flags: &Flags) -> Result<(), String> {
     let mut quant = qgenx::config::QuantConfig::default();
     if let Some(m) = flags.get("mode") {
         quant.mode = QuantMode::parse(m).map_err(|e| e.to_string())?;
+    }
+    if let Some(spec) = flags.get("layers") {
+        let parsed =
+            qgenx::config::LayersConfig::parse_cli(spec).map_err(|e| e.to_string())?;
+        quant.layers.names = parsed.names;
+        quant.layers.bounds = parsed.bounds;
     }
     let cfg = LmTrainConfig {
         optimizer,

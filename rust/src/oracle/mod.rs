@@ -23,7 +23,8 @@ pub use noise::{
     AbsoluteNoiseOracle, ExactOracle, Oracle, RandomPlayerOracle, RcdOracle, RelativeNoiseOracle,
 };
 pub use problems::{
-    BilinearSaddle, CocoerciveQuadratic, MatrixGame, MonotoneQuadratic, Operator, RotationOperator,
+    BilinearSaddle, BlockScaledQuadratic, CocoerciveQuadratic, MatrixGame, MonotoneQuadratic,
+    Operator, RotationOperator,
 };
 
 use crate::config::ProblemConfig;
@@ -40,6 +41,10 @@ pub fn build_operator(cfg: &ProblemConfig, seed: u64) -> Result<Arc<dyn Operator
         "cocoercive" => Ok(Arc::new(CocoerciveQuadratic::random(cfg.dim, 0.1, 1.0, &mut rng)?)),
         "rotation" => Ok(Arc::new(RotationOperator::new(cfg.dim, 0.05, 1.0)?)),
         "game" => Ok(Arc::new(MatrixGame::random(cfg.dim, &mut rng)?)),
+        // LM/GAN-shaped block-heterogeneous proxies (layer-wise benches;
+        // runnable without AOT artifacts).
+        "lm-proxy" => Ok(Arc::new(BlockScaledQuadratic::lm_proxy(cfg.dim, &mut rng)?)),
+        "gan-proxy" => Ok(Arc::new(BlockScaledQuadratic::gan_proxy(cfg.dim, &mut rng)?)),
         other => Err(Error::Oracle(format!("unknown problem kind `{other}`"))),
     }
 }
@@ -67,7 +72,9 @@ mod tests {
 
     #[test]
     fn build_operator_all_kinds() {
-        for kind in ["bilinear", "quadratic", "cocoercive", "rotation", "game"] {
+        for kind in
+            ["bilinear", "quadratic", "cocoercive", "rotation", "game", "lm-proxy", "gan-proxy"]
+        {
             let cfg = ProblemConfig { kind: kind.into(), dim: 16, ..Default::default() };
             let op = build_operator(&cfg, 1).unwrap();
             assert!(op.dim() >= 16);

@@ -354,6 +354,120 @@ impl Operator for MatrixGame {
     }
 }
 
+/// Block-scaled diagonal quadratic: `A(x)_i = c_{B(i)} · λ_i · (x_i − x*_i)`
+/// where coordinate `i` belongs to block `B(i)` with scale `c_b` and `λ_i`
+/// sweeps `[0.5, 1.5]` deterministically within each block. Strongly
+/// monotone and co-coercive, with *independent* blocks — so the per-block
+/// dual-norm profile stays heterogeneous along the whole trajectory (under
+/// relative noise it never washes out), exactly the structure layer-wise
+/// quantization exploits.
+///
+/// The [`Self::lm_proxy`] and [`Self::gan_proxy`] constructors mimic the
+/// layer-norm shape of the `train/` drivers' real workloads (a wide
+/// low-norm embedding block vs. a narrow high-norm head; a cooler
+/// generator vs. a hotter critic) so `benches/layerwise_tradeoff.rs` can
+/// exercise the bit-budget allocator without AOT artifacts.
+pub struct BlockScaledQuadratic {
+    /// Per-coordinate coefficient `c_{B(i)} λ_i`.
+    coeff: Vec<f32>,
+    x_star: Vec<f32>,
+    /// Interior block boundaries (fence posts without 0 and d) — mirror
+    /// these into a `[quant.layers] bounds` to align layers with blocks.
+    bounds: Vec<usize>,
+    mu: f64,
+    l_max: f64,
+}
+
+impl BlockScaledQuadratic {
+    /// Build from `(width, scale)` blocks covering `d` coordinates.
+    pub fn new(blocks: &[(usize, f64)], rng: &mut Rng) -> Result<Self> {
+        if blocks.is_empty() || blocks.iter().any(|&(w, c)| w == 0 || !(c > 0.0)) {
+            return Err(Error::Oracle("blocks need positive widths and scales".into()));
+        }
+        let d: usize = blocks.iter().map(|b| b.0).sum();
+        let mut coeff = Vec::with_capacity(d);
+        let mut bounds = Vec::with_capacity(blocks.len() - 1);
+        for &(w, c) in blocks {
+            for i in 0..w {
+                // λ sweeps [0.5, 1.5] across the block.
+                let lambda = 0.5 + i as f64 / (w.max(2) - 1).max(1) as f64;
+                coeff.push((c * lambda) as f32);
+            }
+            bounds.push(coeff.len());
+        }
+        bounds.pop(); // last fence post is d itself
+        let mu = blocks.iter().map(|b| b.1).fold(f64::INFINITY, f64::min) * 0.5;
+        let l_max = blocks.iter().map(|b| b.1).fold(0.0f64, f64::max) * 1.5;
+        let x_star = rng.gaussian_vec(d, 1.0);
+        Ok(BlockScaledQuadratic { coeff, x_star, bounds, mu, l_max })
+    }
+
+    /// LM-shaped: 60% "embed" at scale 0.05, 30% "body" at 1.0, the rest
+    /// "head" at 4.0 (wide-and-cold vs. narrow-and-hot).
+    pub fn lm_proxy(d: usize, rng: &mut Rng) -> Result<Self> {
+        if d < 16 {
+            return Err(Error::Oracle("lm-proxy needs dim >= 16".into()));
+        }
+        let (w0, w1) = (d * 6 / 10, d * 3 / 10);
+        Self::new(&[(w0, 0.05), (w1, 1.0), (d - w0 - w1, 4.0)], rng)
+    }
+
+    /// Interior block bounds of [`Self::lm_proxy`] for dimension `d`.
+    pub fn lm_proxy_bounds(d: usize) -> Vec<usize> {
+        vec![d * 6 / 10, d * 6 / 10 + d * 3 / 10]
+    }
+
+    /// GAN-shaped: a cooler generator half (0.25) and a hotter critic half
+    /// (2.5) — the persistent player asymmetry of WGAN-GP duals.
+    pub fn gan_proxy(d: usize, rng: &mut Rng) -> Result<Self> {
+        if d < 4 || d % 2 != 0 {
+            return Err(Error::Oracle("gan-proxy needs even dim >= 4".into()));
+        }
+        Self::new(&[(d / 2, 0.25), (d / 2, 2.5)], rng)
+    }
+
+    /// Interior block bounds of [`Self::gan_proxy`] for dimension `d`.
+    pub fn gan_proxy_bounds(d: usize) -> Vec<usize> {
+        vec![d / 2]
+    }
+
+    /// Interior block boundaries (for aligning a `LayerMap` with blocks).
+    pub fn block_bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+}
+
+impl Operator for BlockScaledQuadratic {
+    fn dim(&self) -> usize {
+        self.coeff.len()
+    }
+
+    fn apply(&self, x: &[f32], out: &mut [f32]) {
+        for i in 0..self.coeff.len() {
+            out[i] = self.coeff[i] * (x[i] - self.x_star[i]);
+        }
+    }
+
+    fn solution(&self) -> Option<Vec<f32>> {
+        Some(self.x_star.clone())
+    }
+
+    fn cocoercivity(&self) -> Option<f64> {
+        Some(1.0 / self.l_max)
+    }
+
+    fn lipschitz(&self) -> Option<f64> {
+        Some(self.l_max)
+    }
+}
+
+impl BlockScaledQuadratic {
+    /// Strong-monotonicity constant (min coefficient).
+    pub fn strong_monotonicity(&self) -> f64 {
+        self.mu
+    }
+}
+
 /// Power iteration estimate of `‖M‖₂` for an (r, c) row-major matrix
 /// (applies `MᵀM`).
 fn estimate_spectral_norm(m: &[f32], rows: usize, cols: usize, rng: &mut Rng) -> f64 {
@@ -408,6 +522,8 @@ mod tests {
             Box::new(CocoerciveQuadratic::random(12, 0.1, 1.0, &mut rng).unwrap()),
             Box::new(RotationOperator::new(8, 0.05, 1.0).unwrap()),
             Box::new(MatrixGame::random(10, &mut rng).unwrap()),
+            Box::new(BlockScaledQuadratic::lm_proxy(20, &mut rng).unwrap()),
+            Box::new(BlockScaledQuadratic::gan_proxy(12, &mut rng).unwrap()),
         ];
         for op in &ops {
             check_monotone(op.as_ref(), &mut rng, 30);
@@ -422,11 +538,43 @@ mod tests {
             Box::new(MonotoneQuadratic::random(12, 0.1, 1.0, &mut rng).unwrap()),
             Box::new(CocoerciveQuadratic::random(12, 0.1, 1.0, &mut rng).unwrap()),
             Box::new(RotationOperator::new(8, 0.05, 1.0).unwrap()),
+            Box::new(BlockScaledQuadratic::lm_proxy(20, &mut rng).unwrap()),
         ];
         for op in &ops {
             let xs = op.solution().unwrap();
             assert!(op.residual(&xs) < 1e-4, "residual {}", op.residual(&xs));
         }
+    }
+
+    #[test]
+    fn block_scaled_quadratic_is_genuinely_heterogeneous() {
+        let mut rng = Rng::seed_from(8);
+        let d = 1280;
+        let op = BlockScaledQuadratic::lm_proxy(d, &mut rng).unwrap();
+        assert_eq!(op.dim(), d);
+        assert_eq!(op.block_bounds(), &BlockScaledQuadratic::lm_proxy_bounds(d)[..]);
+        assert_eq!(op.block_bounds(), &[768, 1152]);
+        // Per-block dual-norm profile at a generic point: head ≫ body ≫
+        // embed per coordinate — the shape the allocator feeds on.
+        let x = vec![0.0f32; d];
+        let mut a = vec![0.0f32; d];
+        op.apply(&x, &mut a);
+        let rms = |s: &[f32]| {
+            (s.iter().map(|&v| v as f64 * v as f64).sum::<f64>() / s.len() as f64).sqrt()
+        };
+        let (e, rest) = a.split_at(768);
+        let (b, h) = rest.split_at(384);
+        assert!(rms(h) > 2.0 * rms(b), "head {} vs body {}", rms(h), rms(b));
+        assert!(rms(b) > 4.0 * rms(e), "body {} vs embed {}", rms(b), rms(e));
+        // Bounds and invariants.
+        assert!((op.cocoercivity().unwrap() - 1.0 / 6.0).abs() < 1e-12);
+        assert!(op.strong_monotonicity() > 0.0);
+        let gp = BlockScaledQuadratic::gan_proxy(64, &mut rng).unwrap();
+        assert_eq!(gp.block_bounds(), &[32]);
+        assert!(BlockScaledQuadratic::gan_proxy(7, &mut rng).is_err());
+        assert!(BlockScaledQuadratic::lm_proxy(8, &mut rng).is_err());
+        assert!(BlockScaledQuadratic::new(&[(0, 1.0)], &mut rng).is_err());
+        assert!(BlockScaledQuadratic::new(&[(4, 0.0)], &mut rng).is_err());
     }
 
     #[test]

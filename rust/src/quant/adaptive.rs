@@ -32,11 +32,17 @@ pub struct SufficientStats {
     hist: Histogram,
     q: u32,
     vectors_seen: usize,
+    /// Raw norm² mass `Σ_j ‖g_j‖_q²` of the observed vectors (buckets). The
+    /// histogram only keeps the normalized *shape*; the layer-wise
+    /// bit-budget allocator additionally needs this absolute Theorem-1
+    /// weight per layer, so it travels in the v3 stat block
+    /// ([`Self::to_block_v3`]) — the v2 payload predates it.
+    weight_sum: f64,
 }
 
 impl SufficientStats {
     pub fn new(bins: usize, q: u32) -> Self {
-        SufficientStats { hist: Histogram::new(bins), q, vectors_seen: 0 }
+        SufficientStats { hist: Histogram::new(bins), q, vectors_seen: 0, weight_sum: 0.0 }
     }
 
     /// Accumulate one sampled dual vector `g` (one of the J samples).
@@ -49,6 +55,7 @@ impl SufficientStats {
         // proportionality constant cancels.
         self.hist.push_normalized(g, norm, norm * norm);
         self.vectors_seen += 1;
+        self.weight_sum += norm * norm;
     }
 
     /// Accumulate bucketed: one weight per bucket (matches the bucketed
@@ -65,10 +72,19 @@ impl SufficientStats {
         assert_eq!(self.q, other.q);
         self.hist.merge(&other.hist);
         self.vectors_seen += other.vectors_seen;
+        self.weight_sum += other.weight_sum;
     }
 
     pub fn vectors_seen(&self) -> usize {
         self.vectors_seen
+    }
+
+    /// Accumulated norm² mass `Σ_j ‖g_j‖_q²` — the Theorem-1 weight of this
+    /// segment's observations (what `λ_j ∝ ‖g_j‖_q²` sums to before
+    /// normalization). Carried by the v3 stat block only; pooling v2
+    /// payloads ([`Self::absorb_bytes`]) leaves it untouched.
+    pub fn total_weight(&self) -> f64 {
+        self.weight_sum
     }
 
     pub fn is_empty(&self) -> bool {
@@ -120,10 +136,50 @@ impl SufficientStats {
         Ok(())
     }
 
+    /// One per-layer block of the v3 stat payload:
+    /// `[u32 vectors_seen][f32 norm² mass][bins × f32 bin mass]` (all LE) —
+    /// the v2 payload of [`Self::to_bytes`] with the Theorem-1 weight
+    /// spliced in after the count. `8 + 4 × hist_bins` bytes. The framing
+    /// (layer-count header) lives in [`crate::quant::layers::LayerStats`].
+    pub fn to_block_v3(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 4 * self.hist.bins());
+        out.extend_from_slice(&(self.vectors_seen.min(u32::MAX as usize) as u32).to_le_bytes());
+        out.extend_from_slice(&(self.weight_sum as f32).to_le_bytes());
+        for &c in self.hist.bin_counts() {
+            out.extend_from_slice(&(c as f32).to_le_bytes());
+        }
+        out
+    }
+
+    /// Pool one serialized v3 block ([`Self::to_block_v3`]) into this stat.
+    pub fn absorb_block_v3(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() != 8 + 4 * self.hist.bins() {
+            return Err(Error::Quant(format!(
+                "v3 stat block {} bytes, expected {} (count + weight + {} bins)",
+                bytes.len(),
+                8 + 4 * self.hist.bins(),
+                self.hist.bins()
+            )));
+        }
+        let weight = f32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as f64;
+        if !weight.is_finite() || weight < 0.0 {
+            return Err(Error::Quant(format!("bad v3 stat weight {weight}")));
+        }
+        // Count + masses are laid out exactly as v2 once the weight is cut
+        // out; reuse the v2 parser for them.
+        let mut v2 = Vec::with_capacity(4 + 4 * self.hist.bins());
+        v2.extend_from_slice(&bytes[..4]);
+        v2.extend_from_slice(&bytes[8..]);
+        self.absorb_bytes(&v2)?;
+        self.weight_sum += weight;
+        Ok(())
+    }
+
     /// Reset to empty (start of a new schedule segment T_j).
     pub fn reset(&mut self) {
         self.hist = Histogram::new(self.hist.bins());
         self.vectors_seen = 0;
+        self.weight_sum = 0.0;
     }
 
     /// Probability mass in `[a, b)` under `F̃`.
@@ -407,6 +463,29 @@ mod tests {
         assert_eq!(bytes.len(), 4 + 4 * 128);
         assert!(absorbed.absorb_bytes(&bytes[..bytes.len() - 4]).is_err());
         assert!(absorbed.absorb_bytes(&[0u8; 4]).is_err());
+    }
+
+    #[test]
+    fn v3_block_carries_weight_v2_does_not() {
+        let a = gaussian_stats(64, 256, 5, 40);
+        assert!(a.total_weight() > 0.0);
+        // v3 block round-trips count, masses AND weight.
+        let mut s3 = SufficientStats::new(64, 2);
+        s3.absorb_block_v3(&a.to_block_v3()).unwrap();
+        assert_eq!(s3.vectors_seen(), a.vectors_seen());
+        assert!((s3.total_weight() - a.total_weight()).abs() < 1e-4 * a.total_weight());
+        // v2 payload (back-compat, single-layer pipelines) has no weight.
+        let mut s2 = SufficientStats::new(64, 2);
+        s2.absorb_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(s2.vectors_seen(), a.vectors_seen());
+        assert_eq!(s2.total_weight(), 0.0);
+        // Sizes: block = v2 + 4.
+        assert_eq!(a.to_block_v3().len(), a.to_bytes().len() + 4);
+        // Malformed blocks rejected.
+        assert!(s3.absorb_block_v3(&a.to_bytes()).is_err());
+        let mut bad = a.to_block_v3();
+        bad[4..8].copy_from_slice(&f32::NEG_INFINITY.to_le_bytes());
+        assert!(s3.absorb_block_v3(&bad).is_err());
     }
 
     #[test]

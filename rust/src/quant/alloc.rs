@@ -1,0 +1,285 @@
+//! Bit-budget allocation across layers by the Theorem-1 variance objective.
+//!
+//! Given a [`crate::quant::layers::LayerMap`] partition with per-layer
+//! Theorem-1 weights `w_ℓ = Σ_j ‖g_{j,ℓ}‖_q²` (pooled by the v3 stat
+//! exchange), a global budget of `B` symbol bits per coordinate is
+//! redistributed by minimizing the total quantization variance
+//!
+//! `min_{b_1..b_n} Σ_ℓ w_ℓ · ε_Q(uniform(2^{b_ℓ} − 2); d_ℓ^eff, q)`
+//! `s.t. Σ_ℓ d_ℓ · b_ℓ ≤ B · d,  b_ℓ ∈ {2, …, 8}`
+//!
+//! where `ε_Q` is the Theorem-1 variance factor ([`crate::quant::bounds`])
+//! of the densest uniform level sequence that a `b_ℓ`-bit fixed-width
+//! symbol can index (`s = 2^b − 2` interior levels, alphabet `s + 2`), and
+//! `d^eff` is the per-bucket dimension the layer actually quantizes at.
+//! Low-mass layers (frozen embeddings, converged blocks) surrender bits to
+//! high-mass layers (output heads) — the Layer-wise-QODA observation that
+//! matching bits to the per-layer norm profile strictly improves the
+//! variance–bits trade-off.
+//!
+//! The integer program is solved greedily: start every layer at the 2-bit
+//! floor and repeatedly grant one more bit to the layer with the best
+//! variance reduction *per wire bit* until the budget (or the 8-bit cap)
+//! is reached. The per-layer gain `w_ℓ · Δε_Q` is decreasing in `b_ℓ`
+//! (ε_Q is convex-ish in bits over this range), so the greedy solution
+//! matches the LP-relaxation rounding for this separable objective. The
+//! result is a pure function of the inputs — every worker that pools the
+//! same v3 payloads computes the same allocation, which the wire format
+//! requires (the decode side must know every layer's alphabet).
+
+use super::bounds::epsilon_q;
+use super::levels::Levels;
+use crate::error::{Error, Result};
+
+/// Fewest symbol bits a layer can hold: alphabet 4 = 2 interior levels
+/// (Definition 1 needs `s ≥ 1`; `s = 2` keeps the alphabet a power of two).
+pub const MIN_SYMBOL_BITS: u32 = 2;
+
+/// Most symbol bits a layer can be granted: alphabet 256 = 254 interior
+/// levels — the paper's UQ8 operating point.
+pub const MAX_SYMBOL_BITS: u32 = 8;
+
+/// Densest uniform level count a `bits`-wide fixed symbol can index:
+/// `s = 2^bits − 2` interior levels (alphabet `s + 2 = 2^bits`).
+pub fn levels_for_bits(bits: u32) -> usize {
+    (1usize << bits) - 2
+}
+
+/// Fixed-width symbol bits needed for `s` interior levels:
+/// `ceil(log2(s + 2))` — the inverse of [`levels_for_bits`] up to rounding.
+pub fn bits_for_levels(s: usize) -> u32 {
+    (usize::BITS - (s + 1).leading_zeros()).max(1)
+}
+
+/// One layer's allocator input.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerProfile {
+    /// Theorem-1 weight `Σ_j ‖g_{j,ℓ}‖_q²` (pooled norm² mass). All-zero
+    /// weights fall back to `w_ℓ = d_ℓ` — the isotropic prior.
+    pub weight: f64,
+    /// Layer width (coordinates) — the wire cost of one extra bit.
+    pub dim: usize,
+    /// Effective per-bucket dimension the layer quantizes at
+    /// (`min(bucket_size, dim)`; `dim` for whole-layer buckets) — the `d`
+    /// that enters `ε_Q`.
+    pub eff_dim: usize,
+}
+
+/// Allocator outcome: per-layer symbol widths and level counts, plus the
+/// achieved objective value (for diagnostics / benches).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    /// Fixed-width symbol bits per layer, each in
+    /// `[MIN_SYMBOL_BITS, MAX_SYMBOL_BITS]`.
+    pub bits: Vec<u32>,
+    /// Interior level count per layer (`levels_for_bits(bits)`).
+    pub levels: Vec<usize>,
+    /// `Σ_ℓ w_ℓ ε_Q(ℓ)` at the returned allocation.
+    pub objective: f64,
+}
+
+impl Allocation {
+    /// Average symbol bits per coordinate actually used.
+    pub fn mean_bits(&self, dims: &[usize]) -> f64 {
+        let total: usize = dims.iter().sum();
+        let used: usize =
+            self.bits.iter().zip(dims.iter()).map(|(&b, &d)| b as usize * d).sum();
+        used as f64 / total.max(1) as f64
+    }
+}
+
+/// `Σ_ℓ w_ℓ · ε_Q(uniform(2^{b_ℓ} − 2); eff_dim_ℓ, q)` — the objective the
+/// greedy loop descends. Public so benches can score a *uniform* allocation
+/// with the same yardstick.
+pub fn objective(profiles: &[LayerProfile], bits: &[u32], q: u32) -> f64 {
+    assert_eq!(profiles.len(), bits.len());
+    profiles
+        .iter()
+        .zip(bits.iter())
+        .map(|(p, &b)| {
+            p.weight * epsilon_q(&Levels::uniform(levels_for_bits(b)), p.eff_dim.max(1), q)
+        })
+        .sum()
+}
+
+/// Redistribute `budget_bits_per_coord` (averaged over all `d` coordinates)
+/// across the layers. Deterministic in its inputs; ties break toward the
+/// lower layer index.
+pub fn allocate(
+    profiles: &[LayerProfile],
+    budget_bits_per_coord: f64,
+    q: u32,
+) -> Result<Allocation> {
+    if profiles.is_empty() {
+        return Err(Error::Quant("allocator needs at least one layer".into()));
+    }
+    if profiles.iter().any(|p| p.dim == 0) {
+        return Err(Error::Quant("allocator: zero-width layer".into()));
+    }
+    if !(budget_bits_per_coord.is_finite() && budget_bits_per_coord > 0.0) {
+        return Err(Error::Quant(format!(
+            "allocator: bad bit budget {budget_bits_per_coord}"
+        )));
+    }
+    let d_total: usize = profiles.iter().map(|p| p.dim).sum();
+    let budget = budget_bits_per_coord * d_total as f64;
+    let floor_cost = (MIN_SYMBOL_BITS as usize * d_total) as f64;
+    if budget + 1e-9 < floor_cost {
+        return Err(Error::Quant(format!(
+            "bit budget {budget_bits_per_coord:.2}/coord below the \
+             {MIN_SYMBOL_BITS}-bit floor"
+        )));
+    }
+    // Isotropic fallback when no layer has observed mass yet (first
+    // allocation can run before any stat round).
+    let weights: Vec<f64> = if profiles.iter().all(|p| p.weight <= 0.0) {
+        profiles.iter().map(|p| p.dim as f64).collect()
+    } else {
+        profiles.iter().map(|p| p.weight.max(0.0)).collect()
+    };
+    let eps = |i: usize, b: u32| -> f64 {
+        epsilon_q(&Levels::uniform(levels_for_bits(b)), profiles[i].eff_dim.max(1), q)
+    };
+
+    let n = profiles.len();
+    let mut bits = vec![MIN_SYMBOL_BITS; n];
+    let mut used = floor_cost;
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..n {
+            let b = bits[i];
+            if b >= MAX_SYMBOL_BITS {
+                continue;
+            }
+            let cost = profiles[i].dim as f64;
+            if used + cost > budget + 1e-9 {
+                continue;
+            }
+            // Variance reduction per wire bit for granting layer i one bit.
+            let gain = weights[i] * (eps(i, b) - eps(i, b + 1)) / cost;
+            match best {
+                Some((_, g)) if g >= gain => {}
+                _ => best = Some((i, gain)),
+            }
+        }
+        let Some((i, gain)) = best else { break };
+        if gain <= 0.0 {
+            // No upgrade helps (all remaining candidates have zero weight
+            // and the fallback was not triggered) — stop rather than burn
+            // budget on noise.
+            break;
+        }
+        used += profiles[i].dim as f64;
+        bits[i] += 1;
+    }
+
+    let levels = bits.iter().map(|&b| levels_for_bits(b)).collect();
+    let obj = objective(profiles, &bits, q);
+    Ok(Allocation { bits, levels, objective: obj })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prof(weight: f64, dim: usize, eff: usize) -> LayerProfile {
+        LayerProfile { weight, dim, eff_dim: eff }
+    }
+
+    #[test]
+    fn levels_bits_roundtrip() {
+        assert_eq!(levels_for_bits(2), 2);
+        assert_eq!(levels_for_bits(4), 14); // uq4
+        assert_eq!(levels_for_bits(8), 254); // uq8
+        for b in MIN_SYMBOL_BITS..=MAX_SYMBOL_BITS {
+            assert_eq!(bits_for_levels(levels_for_bits(b)), b);
+        }
+        // the wire codec's fixed width for s levels matches bits_for_levels
+        assert_eq!(bits_for_levels(14), 4);
+        assert_eq!(bits_for_levels(254), 8);
+        assert_eq!(bits_for_levels(1), 2);
+    }
+
+    #[test]
+    fn respects_budget_and_floor() {
+        let ps = [prof(1.0, 300, 128), prof(5.0, 100, 100), prof(0.2, 600, 128)];
+        for budget in [2.0, 3.0, 4.0, 6.5, 8.0] {
+            let a = allocate(&ps, budget, 2).unwrap();
+            let d: usize = ps.iter().map(|p| p.dim).sum();
+            let used: usize =
+                a.bits.iter().zip(ps.iter()).map(|(&b, p)| b as usize * p.dim).sum();
+            assert!(used as f64 <= budget * d as f64 + 1e-6, "budget {budget}: used {used}");
+            assert!(a.bits.iter().all(|&b| (MIN_SYMBOL_BITS..=MAX_SYMBOL_BITS).contains(&b)));
+            assert_eq!(a.levels, a.bits.iter().map(|&b| levels_for_bits(b)).collect::<Vec<_>>());
+        }
+        // budget below the floor is a config error
+        assert!(allocate(&ps, 1.5, 2).is_err());
+        assert!(allocate(&ps, 0.0, 2).is_err());
+        assert!(allocate(&[], 4.0, 2).is_err());
+    }
+
+    #[test]
+    fn heavy_layers_win_bits() {
+        // LM-shaped: wide light "embed", medium "body", narrow heavy "head".
+        let ps = [prof(2.0, 768, 128), prof(380.0, 384, 128), prof(2000.0, 128, 128)];
+        let a = allocate(&ps, 4.0, 2).unwrap();
+        assert!(a.bits[2] > a.bits[0], "head {:?} must out-bit embed", a.bits);
+        assert!(a.bits[1] >= a.bits[0], "body must not trail embed: {:?}", a.bits);
+        assert!(a.mean_bits(&[768, 384, 128]) <= 4.0 + 1e-9);
+    }
+
+    #[test]
+    fn beats_uniform_allocation_on_heterogeneous_mass() {
+        let ps = [prof(2.0, 768, 128), prof(380.0, 384, 128), prof(2000.0, 128, 128)];
+        let a = allocate(&ps, 4.0, 2).unwrap();
+        let uniform = objective(&ps, &[4, 4, 4], 2);
+        assert!(
+            a.objective < 0.8 * uniform,
+            "layer-wise {:.3} must beat uniform {:.3}",
+            a.objective,
+            uniform
+        );
+        // On homogeneous mass the greedy solution IS (near-)uniform.
+        let flat = [prof(1.0, 256, 128), prof(1.0, 256, 128)];
+        let f = allocate(&flat, 4.0, 2).unwrap();
+        assert_eq!(f.bits, vec![4, 4]);
+    }
+
+    #[test]
+    fn more_budget_never_hurts() {
+        let ps = [prof(1.0, 100, 100), prof(9.0, 100, 100)];
+        let mut prev = f64::INFINITY;
+        for budget in [2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0] {
+            let a = allocate(&ps, budget, 2).unwrap();
+            assert!(a.objective <= prev + 1e-12, "objective rose at budget {budget}");
+            prev = a.objective;
+        }
+        // Saturates at the cap.
+        let a = allocate(&ps, 100.0, 2).unwrap();
+        assert_eq!(a.bits, vec![MAX_SYMBOL_BITS, MAX_SYMBOL_BITS]);
+    }
+
+    #[test]
+    fn zero_weights_fall_back_to_isotropic() {
+        let ps = [prof(0.0, 512, 128), prof(0.0, 128, 128)];
+        let a = allocate(&ps, 4.0, 2).unwrap();
+        // With w ∝ d the narrow layer still gets at least the floor and the
+        // overall budget is spent (not stuck at the 2-bit floor).
+        assert!(a.mean_bits(&[512, 128]) > 3.0, "fallback must spend budget: {:?}", a.bits);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ps = [prof(3.0, 100, 64), prof(1.0, 300, 64), prof(7.0, 50, 50)];
+        let a = allocate(&ps, 5.0, 2).unwrap();
+        let b = allocate(&ps, 5.0, 2).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_layer_gets_the_whole_budget() {
+        let a = allocate(&[prof(1.0, 1000, 128)], 4.0, 2).unwrap();
+        assert_eq!(a.bits, vec![4]);
+        assert_eq!(a.levels, vec![14]); // uq4
+    }
+}

@@ -1,0 +1,471 @@
+//! Layer-wise partition of the dual vector (Q-GenX-LW).
+//!
+//! Deep-learning dual vectors are concatenations of per-layer gradients
+//! whose norm/variance profiles differ by orders of magnitude (embedding
+//! tables vs. output heads), and layer-wise bit allocation strictly
+//! improves the variance–bits trade-off over one global level sequence
+//! (Nguyen et al. 2025, "Layer-wise Quantization for QODA"; Beznosikov et
+//! al. 2023 frame compression heterogeneity as one of the pillars of
+//! communication-efficient VIs). This module provides the two data types
+//! the layer-wise pipeline is built on:
+//!
+//! * [`LayerMap`] — a validated partition of `0..d` into contiguous named
+//!   layers. Explicit from `[quant.layers]` bounds, or auto-split into
+//!   equal bucket-aligned ranges for the LM/GAN trainers.
+//! * [`LayerStats`] — one [`SufficientStats`] per layer plus the **v3 stat
+//!   wire format** that pools statistics *per layer* across workers
+//!   (`[u32 n_layers][per layer: u32 count + hist_bins × f32 mass]`,
+//!   little-endian). See `docs/WIRE.md` for the byte-layout diagrams and
+//!   the v2→v3 evolution; v2 payloads (no layer header) remain the format
+//!   of single-layer pipelines.
+//!
+//! The bit-budget allocator that redistributes a global bits/coordinate
+//! budget over a [`LayerMap`] lives in [`crate::quant::alloc`]; the
+//! per-layer compression state machine lives in
+//! [`crate::coordinator::pipeline`].
+
+use super::adaptive::SufficientStats;
+use crate::error::{Error, Result};
+use std::ops::Range;
+
+/// A validated partition of the dual vector `0..d` into contiguous,
+/// non-empty, named layers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerMap {
+    names: Vec<String>,
+    /// Fence-post offsets: `bounds[0] = 0 < bounds[1] < … < bounds[n] = d`.
+    bounds: Vec<usize>,
+}
+
+impl LayerMap {
+    /// Build from layer names and *interior* split points (the end offset
+    /// of every layer but the last; the last layer ends at `d`).
+    pub fn new(names: Vec<String>, splits: &[usize], d: usize) -> Result<Self> {
+        if names.is_empty() {
+            return Err(Error::Quant("layer map needs at least one layer".into()));
+        }
+        if splits.len() + 1 != names.len() {
+            return Err(Error::Quant(format!(
+                "layer map: {} names need {} interior bounds, got {}",
+                names.len(),
+                names.len() - 1,
+                splits.len()
+            )));
+        }
+        if d == 0 {
+            return Err(Error::Quant("layer map over an empty vector".into()));
+        }
+        let mut bounds = Vec::with_capacity(names.len() + 1);
+        bounds.push(0);
+        for (i, &b) in splits.iter().enumerate() {
+            if b <= bounds[i] || b >= d {
+                return Err(Error::Quant(format!(
+                    "layer bound {b} (index {i}) violates 0 < b_1 < … < b_n-1 < d = {d}"
+                )));
+            }
+            bounds.push(b);
+        }
+        bounds.push(d);
+        for (i, name) in names.iter().enumerate() {
+            if name.is_empty() {
+                return Err(Error::Quant(format!("layer {i} has an empty name")));
+            }
+            if names[..i].contains(name) {
+                return Err(Error::Quant(format!("duplicate layer name `{name}`")));
+            }
+        }
+        Ok(LayerMap { names, bounds })
+    }
+
+    /// The trivial one-layer map covering the whole vector.
+    pub fn single(d: usize) -> Result<Self> {
+        LayerMap::new(vec!["all".into()], &[], d)
+    }
+
+    /// Auto-split `0..d` into `n` roughly equal layers, preferring
+    /// boundaries on multiples of `align` (pass the quantizer bucket size
+    /// so every bucket but each layer's last is full-width; buckets restart
+    /// per layer, so alignment is an efficiency preference, not a
+    /// correctness requirement). Falls back to the unaligned equal split
+    /// when the grid is too coarse for `n` layers. This is the split the
+    /// LM/GAN trainers and `--layers N` use when no explicit bounds are
+    /// configured.
+    pub fn equal_split(names: Vec<String>, d: usize, align: usize) -> Result<Self> {
+        let n = names.len();
+        if n == 0 {
+            return Err(Error::Quant("layer map needs at least one layer".into()));
+        }
+        if n > d {
+            return Err(Error::Quant(format!("cannot split d = {d} into {n} layers")));
+        }
+        let a = align.max(1);
+        if a > 1 {
+            if let Ok(m) = Self::equal_split_on_grid(names.clone(), d, a) {
+                return Ok(m);
+            }
+        }
+        Self::equal_split_on_grid(names, d, 1)
+    }
+
+    fn equal_split_on_grid(names: Vec<String>, d: usize, a: usize) -> Result<Self> {
+        let n = names.len();
+        let mut splits = Vec::with_capacity(n.saturating_sub(1));
+        let mut prev = 0usize;
+        for i in 1..n {
+            // Ideal boundary, rounded down to the alignment grid, then
+            // pushed forward if that collapsed the layer to zero width.
+            let ideal = i * d / n;
+            let mut b = (ideal / a) * a;
+            if b <= prev {
+                b = prev + a;
+            }
+            if b >= d {
+                return Err(Error::Quant(format!(
+                    "cannot split d = {d} into {n} layers aligned to {a}"
+                )));
+            }
+            splits.push(b);
+            prev = b;
+        }
+        LayerMap::new(names, &splits, d)
+    }
+
+    /// Number of layers.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Total dimension `d`.
+    pub fn d(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.names[i]
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Coordinate range of layer `i`.
+    pub fn range(&self, i: usize) -> Range<usize> {
+        self.bounds[i]..self.bounds[i + 1]
+    }
+
+    /// Width of layer `i`.
+    pub fn dim(&self, i: usize) -> usize {
+        self.bounds[i + 1] - self.bounds[i]
+    }
+
+    /// Per-layer widths.
+    pub fn dims(&self) -> Vec<usize> {
+        (0..self.len()).map(|i| self.dim(i)).collect()
+    }
+
+    /// Layer `i`'s slice of a full-dimension vector.
+    pub fn slice<'a>(&self, i: usize, v: &'a [f32]) -> &'a [f32] {
+        &v[self.range(i)]
+    }
+
+    /// Mutable variant of [`Self::slice`].
+    pub fn slice_mut<'a>(&self, i: usize, v: &'a mut [f32]) -> &'a mut [f32] {
+        &mut v[self.range(i)]
+    }
+}
+
+/// Per-layer sufficient statistics plus the v3 stat wire format.
+///
+/// In-memory this is one [`SufficientStats`] per layer (all with the same
+/// histogram bin count and norm exponent — per-layer overrides cover the
+/// quantizer, not the statistic). On the wire it serializes as
+///
+/// ```text
+/// [u32 n_layers | LE]
+/// layer 0: [u32 vectors_seen][f32 norm² mass][hist_bins × f32 bin mass]   (all LE)
+/// layer 1: …
+/// ```
+///
+/// i.e. a layer-count header followed by one block per layer. The block is
+/// the v2 payload plus one new `f32`: the layer's pooled norm² mass
+/// `Σ_j λ_j = Σ_j ‖g_j‖_q²`, which the bit-budget allocator
+/// ([`crate::quant::alloc`]) needs and which the v2 histogram (normalized
+/// shape only) cannot recover. Pooling from payloads
+/// ([`Self::absorb_bytes`]) agrees with in-memory pooling ([`Self::merge`])
+/// layer by layer. Total size: `4 + n · (8 + 4 · hist_bins)` bytes — still
+/// independent of `d`.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    per: Vec<SufficientStats>,
+    bins: usize,
+}
+
+impl LayerStats {
+    pub fn new(n_layers: usize, hist_bins: usize, q: u32) -> Self {
+        LayerStats {
+            per: (0..n_layers).map(|_| SufficientStats::new(hist_bins, q)).collect(),
+            bins: hist_bins,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.per.len()
+    }
+
+    pub fn layer(&self, i: usize) -> &SufficientStats {
+        &self.per[i]
+    }
+
+    pub fn layer_mut(&mut self, i: usize) -> &mut SufficientStats {
+        &mut self.per[i]
+    }
+
+    /// True when no layer has observed anything.
+    pub fn is_empty(&self) -> bool {
+        self.per.iter().all(|s| s.is_empty())
+    }
+
+    /// Per-layer norm² mass `Σ_j λ_j = Σ_j ‖g_j‖_q²` — the Theorem-1
+    /// weights the bit-budget allocator consumes.
+    pub fn weights(&self) -> Vec<f64> {
+        self.per.iter().map(|s| s.total_weight()).collect()
+    }
+
+    /// In-memory pooling (layer-by-layer [`SufficientStats::merge`]).
+    pub fn merge(&mut self, other: &LayerStats) {
+        assert_eq!(self.per.len(), other.per.len(), "layer count mismatch in merge");
+        for (a, b) in self.per.iter_mut().zip(other.per.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// Serialize to the v3 stat wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        Self::payload_from(&self.per.iter().collect::<Vec<_>>())
+    }
+
+    /// Assemble a v3 payload from borrowed per-layer statistics (the
+    /// layer-wise compressor keeps its stats inside per-layer sub-states;
+    /// this keeps the framing defined in exactly one place).
+    pub fn payload_from(stats: &[&SufficientStats]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + stats.len() * 8);
+        out.extend_from_slice(&(stats.len() as u32).to_le_bytes());
+        for s in stats {
+            out.extend_from_slice(&s.to_block_v3());
+        }
+        out
+    }
+
+    /// Pool a peer's v3 payload into this one. Rejects layer-count or
+    /// length mismatches — the compatibility rule runners rely on: every
+    /// worker derives its layer map and histogram shape from the same
+    /// config, so a mismatch is a deployment error, not data.
+    pub fn absorb_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        let block = 8 + 4 * self.bins;
+        let want = 4 + self.per.len() * block;
+        if bytes.len() != want {
+            return Err(Error::Quant(format!(
+                "v3 stat payload {} bytes, expected {want} ({} layers × {block} + 4)",
+                bytes.len(),
+                self.per.len()
+            )));
+        }
+        let (head, body) = bytes.split_at(4);
+        let n = u32::from_le_bytes([head[0], head[1], head[2], head[3]]) as usize;
+        if n != self.per.len() {
+            return Err(Error::Quant(format!(
+                "v3 stat payload advertises {n} layers, this pipeline has {}",
+                self.per.len()
+            )));
+        }
+        for (i, s) in self.per.iter_mut().enumerate() {
+            s.absorb_block_v3(&body[i * block..(i + 1) * block])?;
+        }
+        Ok(())
+    }
+
+    /// Reset every layer (start of a new schedule segment).
+    pub fn reset(&mut self) {
+        for s in self.per.iter_mut() {
+            s.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+    use crate::util::Rng;
+
+    #[test]
+    fn layer_map_basics() {
+        let m = LayerMap::new(vec!["embed".into(), "body".into(), "head".into()], &[100, 400], 512)
+            .unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.d(), 512);
+        assert_eq!(m.range(0), 0..100);
+        assert_eq!(m.range(1), 100..400);
+        assert_eq!(m.range(2), 400..512);
+        assert_eq!(m.dims(), vec![100, 300, 112]);
+        assert_eq!(m.name(2), "head");
+        let v: Vec<f32> = (0..512).map(|i| i as f32).collect();
+        assert_eq!(m.slice(1, &v).len(), 300);
+        assert_eq!(m.slice(1, &v)[0], 100.0);
+    }
+
+    #[test]
+    fn layer_map_validation() {
+        // wrong bound count
+        assert!(LayerMap::new(vec!["a".into(), "b".into()], &[], 10).is_err());
+        // non-increasing / out-of-range bounds
+        assert!(LayerMap::new(vec!["a".into(), "b".into(), "c".into()], &[5, 5], 10).is_err());
+        assert!(LayerMap::new(vec!["a".into(), "b".into()], &[10], 10).is_err());
+        assert!(LayerMap::new(vec!["a".into(), "b".into()], &[0], 10).is_err());
+        // duplicate / empty names
+        assert!(LayerMap::new(vec!["a".into(), "a".into()], &[5], 10).is_err());
+        assert!(LayerMap::new(vec!["".into()], &[], 10).is_err());
+        // empty vector
+        assert!(LayerMap::single(0).is_err());
+        assert_eq!(LayerMap::single(7).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn equal_split_aligns_to_buckets() {
+        let names: Vec<String> = (0..3).map(|i| format!("l{i}")).collect();
+        let m = LayerMap::equal_split(names, 1000, 128).unwrap();
+        // boundaries land on the bucket grid and partition 0..1000
+        assert_eq!(m.len(), 3);
+        for i in 0..2 {
+            assert_eq!(m.range(i).end % 128, 0, "boundary {} not aligned", m.range(i).end);
+        }
+        assert_eq!(m.d(), 1000);
+        // unaligned split is exact thirds
+        let names: Vec<String> = (0..4).map(|i| format!("l{i}")).collect();
+        let m = LayerMap::equal_split(names, 100, 0).unwrap();
+        assert_eq!(m.dims(), vec![25, 25, 25, 25]);
+        // grid too coarse → falls back to the unaligned equal split
+        let names: Vec<String> = (0..5).map(|i| format!("l{i}")).collect();
+        let m = LayerMap::equal_split(names, 256, 128).unwrap();
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.d(), 256);
+        assert!(m.dims().iter().all(|&w| w > 0));
+        // more layers than coordinates is impossible
+        let names: Vec<String> = (0..5).map(|i| format!("l{i}")).collect();
+        assert!(LayerMap::equal_split(names, 3, 0).is_err());
+    }
+
+    fn observed(bins: usize, layers: &[usize], vecs: usize, seed: u64) -> LayerStats {
+        let mut ls = LayerStats::new(layers.len(), bins, 2);
+        let mut rng = Rng::seed_from(seed);
+        for _ in 0..vecs {
+            for (i, &d) in layers.iter().enumerate() {
+                let g = rng.gaussian_vec(d, 1.0 + i as f64);
+                ls.layer_mut(i).observe(&g);
+            }
+        }
+        ls
+    }
+
+    #[test]
+    fn v3_roundtrip_matches_merge_across_map_shapes() {
+        // The satellite property: to_bytes/absorb_bytes parity with
+        // in-memory merge across layer maps of 1, 3, and ragged sizes.
+        for layers in [vec![64usize], vec![32, 32, 32], vec![1, 200, 7, 64]] {
+            let a = observed(64, &layers, 3, 1000 + layers.len() as u64);
+            let b = observed(64, &layers, 5, 2000 + layers.len() as u64);
+            let mut merged = a.clone();
+            merged.merge(&b);
+            let mut absorbed = LayerStats::new(layers.len(), 64, 2);
+            absorbed.absorb_bytes(&a.to_bytes()).unwrap();
+            absorbed.absorb_bytes(&b.to_bytes()).unwrap();
+            for i in 0..layers.len() {
+                assert_eq!(
+                    absorbed.layer(i).vectors_seen(),
+                    merged.layer(i).vectors_seen(),
+                    "layer {i} pooled count"
+                );
+                for u in [0.01, 0.1, 0.5, 0.9] {
+                    assert!(
+                        (absorbed.layer(i).cdf(u) - merged.layer(i).cdf(u)).abs() < 1e-6,
+                        "layer {i} cdf({u})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_v3_roundtrip_parity() {
+        forall("v3 payload parity with merge", 40, |g| {
+            let n = g.usize_in(1, 6);
+            let bins = *g.choose(&[8usize, 32, 128]);
+            let dims: Vec<usize> = (0..n).map(|_| g.usize_in(1, 100)).collect();
+            let vecs_a = g.usize_in(0, 4);
+            let vecs_b = g.usize_in(1, 4);
+            let a = observed(bins, &dims, vecs_a, g.case as u64 + 31);
+            let b = observed(bins, &dims, vecs_b, g.case as u64 + 77);
+            let mut merged = a.clone();
+            merged.merge(&b);
+            let mut absorbed = LayerStats::new(n, bins, 2);
+            absorbed.absorb_bytes(&a.to_bytes()).unwrap();
+            absorbed.absorb_bytes(&b.to_bytes()).unwrap();
+            let payload = a.to_bytes();
+            assert_eq!(payload.len(), 4 + n * (8 + 4 * bins));
+            for i in 0..n {
+                assert_eq!(absorbed.layer(i).vectors_seen(), merged.layer(i).vectors_seen());
+                for u in [0.05, 0.3, 0.8] {
+                    assert!((absorbed.layer(i).cdf(u) - merged.layer(i).cdf(u)).abs() < 1e-6);
+                }
+                // The v3-only field (pooled norm² mass) survives the wire
+                // up to f32 rounding of each summand.
+                let wm = merged.layer(i).total_weight();
+                let wa = absorbed.layer(i).total_weight();
+                assert!((wa - wm).abs() <= 1e-5 * wm.max(1.0), "layer {i} weight {wa} vs {wm}");
+            }
+        });
+    }
+
+    #[test]
+    fn v3_rejects_mismatched_payloads() {
+        let a = observed(32, &[16, 16], 2, 9);
+        let bytes = a.to_bytes();
+        // truncated
+        let mut sink = LayerStats::new(2, 32, 2);
+        assert!(sink.absorb_bytes(&bytes[..bytes.len() - 1]).is_err());
+        // layer-count mismatch (right length for 3 layers, wrong header)
+        let mut sink3 = LayerStats::new(3, 32, 2);
+        assert!(sink3.absorb_bytes(&bytes).is_err());
+        // bin-count mismatch shows up as a length error
+        let mut sink_bins = LayerStats::new(2, 64, 2);
+        assert!(sink_bins.absorb_bytes(&bytes).is_err());
+        // header forged to a different layer count but same length
+        let mut forged = bytes.clone();
+        forged[0] = 3;
+        assert!(sink.absorb_bytes(&forged).is_err());
+    }
+
+    #[test]
+    fn weights_track_layer_mass() {
+        // Layer 1 observes vectors with ~3x the norm of layer 0 → its
+        // λ-mass (norm²-weighted) must dominate.
+        let mut ls = LayerStats::new(2, 64, 2);
+        let mut rng = Rng::seed_from(5);
+        for _ in 0..8 {
+            let g0 = rng.gaussian_vec(64, 1.0);
+            let g1 = rng.gaussian_vec(64, 3.0);
+            ls.layer_mut(0).observe(&g0);
+            ls.layer_mut(1).observe(&g1);
+        }
+        let w = ls.weights();
+        assert!(w[1] > 4.0 * w[0], "weights {w:?} must reflect norm² mass");
+        assert!(!ls.is_empty());
+        ls.reset();
+        assert!(ls.is_empty());
+        assert_eq!(ls.weights(), vec![0.0, 0.0]);
+    }
+}

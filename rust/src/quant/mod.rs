@@ -1,6 +1,7 @@
 //! Unbiased random quantization of stochastic dual vectors — the `Q` half
 //! of the paper's `CODE ∘ Q` pipeline, plus the QAda adaptive-level
-//! machinery (§3.3) and the Theorem 1 / Theorem 2 bound calculators.
+//! machinery (§3.3), the layer-wise (Q-GenX-LW) partition/allocation
+//! subsystem, and the Theorem 1 / Theorem 2 bound calculators.
 //!
 //! * [`levels`] — level sequences `ℓ = (0, ℓ_1, …, ℓ_s, 1)` (Definition 1):
 //!   uniform (QSGD-style), exponential (NUQSGD-style), adaptive (QAda).
@@ -8,22 +9,38 @@
 //!   deterministic core (explicit uniforms — bit-exact against the Pallas
 //!   kernel), dequantization, and the bucketed variant torch_cgx uses.
 //! * [`encode`] — the wire format: per-bucket `[norm f32][symbol codes +
-//!   sign bits]` under a pluggable Ψ ([`crate::coding::SymbolCodec`]).
+//!   sign bits]` under a pluggable Ψ ([`crate::coding::SymbolCodec`]); see
+//!   `docs/WIRE.md` for the full byte-layout reference.
 //! * [`adaptive`] — sufficient statistics (weighted histogram of normalized
-//!   coordinates), the (QAda) variance objective, coordinate-descent level
-//!   optimization, Proposition 2 symbol probabilities.
+//!   coordinates; v2 payload and the per-layer v3 block), the (QAda)
+//!   variance objective, coordinate-descent level optimization,
+//!   Proposition 2 symbol probabilities.
+//! * [`layers`] — [`LayerMap`]: named contiguous partition of the dual
+//!   vector; [`LayerStats`]: per-layer sufficient statistics and the v3
+//!   stat wire format that pools them across workers.
+//! * [`alloc`] — greedy bit-budget allocator: redistributes a global
+//!   bits/coordinate budget across layers by the Theorem-1 variance
+//!   objective (configured via `[quant.layers] budget`, `docs/CONFIG.md`).
 //! * [`bounds`] — Theorem 1 variance bound `ε_Q`, the QSGD/NUQSGD
 //!   comparison bounds, Theorem 2 expected code length.
+//!
+//! The per-worker state machine that drives all of this — including the
+//! single-layer/FP32 paths and the layer-wise compressor — lives in
+//! [`crate::coordinator::pipeline`].
 
 pub mod adaptive;
+pub mod alloc;
 pub mod bounds;
 pub mod encode;
+pub mod layers;
 pub mod levels;
 pub mod quantizer;
 
 pub use adaptive::{optimize_levels, symbol_probs, SufficientStats};
+pub use alloc::{allocate, Allocation, LayerProfile};
 pub use bounds::{code_length_bound, epsilon_q, nuqsgd_variance_bound, qsgd_variance_bound};
 pub use encode::{decode_vector, encode_vector, WireCodec};
+pub use layers::{LayerMap, LayerStats};
 pub use levels::Levels;
 pub use quantizer::{
     dequantize, dequantize_into, quantize, quantize_with_uniforms, QuantizedVector,

@@ -63,6 +63,20 @@ impl GanMode {
             _ => None,
         }
     }
+
+    /// [`Self::quant_config`] with the game's natural two-layer map
+    /// installed: `gen` = `0..Pg`, `disc` = `Pg..Pg+Pd` (the joint dual
+    /// vector concatenates the players' gradients, whose norm profiles
+    /// differ persistently in WGAN-GP training). FP32 has no layer-wise
+    /// path, so it stays flat.
+    pub fn quant_config_layered(&self, params_g: usize) -> QuantConfig {
+        let mut q = self.quant_config();
+        if q.mode != QuantMode::Fp32 {
+            q.layers.names = vec!["gen".into(), "disc".into()];
+            q.layers.bounds = vec![params_g];
+        }
+        q
+    }
 }
 
 /// GAN training configuration.
@@ -77,6 +91,11 @@ pub struct GanTrainConfig {
     /// Split the critic backward into W-part and GP-part (two artifact
     /// executions) to measure DiscBP and PenBP separately as in Figure 3.
     pub split_penalty: bool,
+    /// Layer-wise quantization over the game's natural two-layer map:
+    /// `gen` = `0..Pg`, `disc` = `Pg..Pg+Pd` (the joint dual vector is the
+    /// concatenation of the two players' gradients, whose norm profiles
+    /// differ persistently in WGAN-GP training).
+    pub layerwise: bool,
 }
 
 impl Default for GanTrainConfig {
@@ -89,6 +108,7 @@ impl Default for GanTrainConfig {
             eval_every: 25,
             seed: 7,
             split_penalty: true,
+            layerwise: false,
         }
     }
 }
@@ -136,7 +156,11 @@ impl<'rt> GanTrainer<'rt> {
         let theta_g = rt.load_f32_blob(&m.gan_g_init_file)?;
         let theta_d = rt.load_f32_blob(&m.gan_d_init_file)?;
         let root = Rng::seed_from(cfg.seed);
-        let qcfg = cfg.mode.quant_config();
+        let qcfg = if cfg.layerwise {
+            cfg.mode.quant_config_layered(theta_g.len())
+        } else {
+            cfg.mode.quant_config()
+        };
         let comps = (0..cfg.workers)
             .map(|w| Compressor::from_config(&qcfg, root.fork(w as u64 + 11)))
             .collect::<Result<Vec<_>>>()?;
@@ -361,6 +385,7 @@ impl<'rt> GanTrainer<'rt> {
         rec.set_scalar("avg_total", tot);
         rec.set_scalar("total_bits", self.traffic.bits_sent as f64);
         rec.set_scalar("comm_time", self.phases.comm);
+        self.comps[0].emit_layer_scalars(&mut rec);
         Ok(rec)
     }
 
@@ -383,6 +408,33 @@ mod tests {
 
     fn trainer_cfg(mode: GanMode, steps: usize) -> GanTrainConfig {
         GanTrainConfig { mode, steps, workers: 2, eval_every: steps, ..Default::default() }
+    }
+
+    #[test]
+    fn layered_quant_config_builds_a_layerwise_compressor() {
+        // No artifacts needed: the gen/disc split must produce a working
+        // layer-wise pipeline at the joint dual dimension.
+        use crate::coordinator::Compressor;
+        use crate::util::Rng;
+        let (pg, pd) = (96usize, 64usize);
+        for mode in [GanMode::Uq4, GanMode::Uq8] {
+            let q = mode.quant_config_layered(pg);
+            assert_eq!(q.layers.names, vec!["gen", "disc"]);
+            assert_eq!(q.layers.bounds, vec![pg]);
+            let mut c = Compressor::from_config(&q, Rng::seed_from(1)).unwrap();
+            assert!(c.is_layerwise());
+            let v = Rng::seed_from(2).gaussian_vec(pg + pd, 1.0);
+            let (wire, _) = c.compress(&v).unwrap();
+            let mut out = vec![0.0f32; pg + pd];
+            c.decompress(&wire, &mut out).unwrap();
+            let bits = c.layer_wire_bits().unwrap();
+            assert!(bits[0] > 0 && bits[1] > 0);
+        }
+        // FP32 has no layer-wise path and must stay flat.
+        let q = GanMode::Fp32.quant_config_layered(pg);
+        assert!(q.layers.names.is_empty());
+        let c = Compressor::from_config(&q, Rng::seed_from(3)).unwrap();
+        assert!(!c.is_layerwise());
     }
 
     #[test]

@@ -268,6 +268,10 @@ impl<'rt> LmTrainer<'rt> {
         rec.set_scalar("grad_time", self.grad_time);
         rec.set_scalar("comm_time", self.comm_time);
         rec.set_scalar("params", self.params.len() as f64);
+        // Layer-wise runs (`quant.layers` / `--layers N`: the parameter
+        // vector auto-splits into equal bucket-aligned ranges) report the
+        // per-layer bit/variance scalars like the VI runners do.
+        self.comps[0].emit_layer_scalars(rec);
     }
 
     /// Held-out loss on a fresh stream.
