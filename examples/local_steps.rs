@@ -15,6 +15,7 @@
 //! cargo run --release --example local_steps
 //! ```
 
+use qgenx::benchkit::example_iters;
 use qgenx::config::ExperimentConfig;
 use qgenx::coordinator::run_threaded;
 
@@ -26,8 +27,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.problem.noise = "absolute".into();
     cfg.problem.sigma = 0.5;
     cfg.workers = 8;
-    cfg.iters = 400;
-    cfg.eval_every = 100;
+    cfg.iters = example_iters(400);
+    cfg.eval_every = (cfg.iters / 4).max(1);
 
     println!(
         "Q-GenX, quadratic VI d={} K={} workers, uq4 adaptive quantization.",

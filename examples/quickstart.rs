@@ -1,13 +1,37 @@
 //! Quickstart: solve a stochastic bilinear saddle-point problem with
 //! Q-GenX on 4 simulated workers with adaptive 4-bit quantization, and
-//! compare the wire traffic against full precision.
+//! compare the wire traffic against full precision — through the
+//! steppable [`Session`] API (`docs/API.md`).
+//!
+//! The quantized run streams its trajectory live through an [`Observer`];
+//! the FP32 comparison run shows the one-shot `run()` form the benches
+//! use. `Session::step()`/`run_to()`/`checkpoint()` give finer control —
+//! see `examples/local_steps.rs` and the API docs.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
 use qgenx::config::{ExperimentConfig, QuantMode};
-use qgenx::coordinator::run_experiment;
+use qgenx::coordinator::{Control, Observer, Session, StepReport};
+
+/// Streams each eval step as it happens (the post-hoc table this example
+/// used to print, turned into a live feed).
+struct Progress;
+
+impl Observer for Progress {
+    fn on_step(&mut self, r: &StepReport) -> Control {
+        if r.evaluated {
+            println!(
+                "  {:>6}  {:>10.5}  {:>10.5}",
+                r.t,
+                r.gap.unwrap_or(f64::NAN),
+                r.gamma
+            );
+        }
+        Control::Continue
+    }
+}
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Configure straight from code; `ExperimentConfig::load("cfg.toml")`
@@ -24,13 +48,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     println!("Q-GenX on a {}-dim bilinear saddle, K = {} workers", cfg.problem.dim, cfg.workers);
     println!("== adaptive 4-bit quantization (UQ4 + QAda + Huffman) ==");
-    let rec_q = run_experiment(&cfg)?;
-    print_trajectory(&rec_q);
+    println!("  iter        gap        gamma");
+    let rec_q = Session::builder(cfg.clone())
+        .observer(Box::new(Progress))
+        .build()?
+        .run()?;
 
     println!("== full precision (FP32) ==");
+    println!("  iter        gap        gamma");
     cfg.quant.mode = QuantMode::Fp32;
-    let rec_f = run_experiment(&cfg)?;
-    print_trajectory(&rec_f);
+    let rec_f = Session::builder(cfg).observer(Box::new(Progress)).build()?.run()?;
 
     let bits_q = rec_q.scalar("total_bits").unwrap();
     let bits_f = rec_f.scalar("total_bits").unwrap();
@@ -45,13 +72,4 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         bits_f / bits_q
     );
     Ok(())
-}
-
-fn print_trajectory(rec: &qgenx::metrics::Recorder) {
-    let gaps = rec.get("gap").expect("gap series");
-    println!("  iter        gap        gamma");
-    let gammas = rec.get("gamma").unwrap();
-    for ((x, g), (_, gm)) in gaps.points.iter().zip(gammas.points.iter()) {
-        println!("  {x:>6.0}  {g:>10.5}  {gm:>10.5}");
-    }
 }

@@ -13,6 +13,7 @@
 //! cargo run --release --example topologies
 //! ```
 
+use qgenx::benchkit::example_iters;
 use qgenx::config::ExperimentConfig;
 use qgenx::coordinator::run_threaded;
 
@@ -24,8 +25,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.problem.noise = "absolute".into();
     cfg.problem.sigma = 0.5;
     cfg.workers = 8;
-    cfg.iters = 400;
-    cfg.eval_every = 100;
+    cfg.iters = example_iters(400);
+    cfg.eval_every = (cfg.iters / 4).max(1);
 
     println!(
         "Q-GenX, quadratic VI d={} K={} workers, uq4 adaptive quantization.",

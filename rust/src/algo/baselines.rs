@@ -14,6 +14,7 @@
 use crate::util::{axpy, mean_into};
 
 /// Fixed-step extra-gradient (two oracle queries per iteration).
+#[derive(Clone)]
 pub struct ExtraGradient {
     x: Vec<f32>,
     x_half: Vec<f32>,
@@ -76,6 +77,7 @@ impl ExtraGradient {
 }
 
 /// (Q)SGDA: `X_{t+1} = X_t − γ_t ḡ(X_t)`, `γ_t = γ₀ / √t`.
+#[derive(Clone)]
 pub struct Sgda {
     x: Vec<f32>,
     x_sum: Vec<f64>,

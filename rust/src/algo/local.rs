@@ -52,6 +52,7 @@ use crate::oracle::Oracle;
 
 /// One worker's replica in local-steps mode: a `K = 1` [`QGenX`] plus the
 /// last synchronization point.
+#[derive(Clone)]
 pub struct LocalQGenX {
     state: QGenX,
     /// World-coordinate iterate at the last sync (`X_sync`); deltas are

@@ -34,6 +34,7 @@ pub enum QGenXPhase {
 }
 
 /// Q-GenX iterate state for one run.
+#[derive(Clone)]
 pub struct QGenX {
     variant: Variant,
     d: usize,

@@ -59,6 +59,18 @@ pub fn fast_mode() -> bool {
     std::env::var("QGENX_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Iteration budget for the runnable examples, overridable for CI smoke
+/// runs: the `examples-smoke` job sets `QGENX_EXAMPLE_ITERS` to a tiny
+/// count so the full example (Session construction, threaded run,
+/// assertions, table) executes on every push without the full-length
+/// sweep.
+pub fn example_iters(default_iters: usize) -> usize {
+    std::env::var("QGENX_EXAMPLE_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_iters)
+}
+
 /// Scale an iteration/size parameter down in fast mode.
 pub fn scaled(n: usize, fast: usize) -> usize {
     if fast_mode() {

@@ -1,549 +1,52 @@
-//! Single-threaded simulation of the K-processor system — Algorithm 1 with
-//! every byte of the wire format exercised, but no thread machinery.
-//! Deterministic given the config seed; the workhorse of the benches.
+//! One-shot inline entry points: the in-process (loopback) execution of
+//! Algorithm 1, packaged as run-to-completion functions.
+//!
+//! These are thin wrappers over [`crate::coordinator::Session`] — the
+//! steppable run engine that owns all `K` oracles and compression
+//! endpoints in one thread. The wrappers exist for the benches and CLI
+//! (thousands of sweep runs want a one-liner) and as the compatibility
+//! surface of the seed API: their trajectories and wire accounting are
+//! bit-identical to the pre-Session runners (regression-tested against a
+//! frozen copy of the seed loops in `tests/session_parity.rs`).
+//!
+//! The config selects one of three runner families (now
+//! `ExchangePolicy` implementations — see `coordinator::policy`):
+//!
+//! * **exact** — per-step dual exchange over an exact topology, the
+//!   seed's Algorithm 1;
+//! * **gossip** — inexact topologies: per-step dual exchange averaged
+//!   over graph neighborhoods, plus `consensus_dist`;
+//! * **local** (`local.steps ≥ 2`) — private extra-gradient iterations
+//!   between syncs, quantized model-delta averaging at syncs.
+//!
+//! `local.steps = 1` deliberately does *not* engage the delta-sync
+//! machinery: with one local step the algorithm communicates every
+//! iteration anyway, and the per-step dual exchange is the trajectory the
+//! paper's theorems describe — so it runs the exact (or gossip) family,
+//! bit-for-bit identical to the seed.
 
-use super::pipeline::Compressor;
-use super::schedule::UpdateSchedule;
-use crate::algo::{LocalQGenX, QGenX, Sgda};
+use super::session::{Algorithm, Session};
 use crate::config::ExperimentConfig;
 use crate::error::Result;
-use crate::metrics::{consensus_distance, Recorder, SyncAccounting};
-use crate::net::{NetModel, TrafficStats};
-use crate::oracle::{build_operator, build_oracle, GapEvaluator, Oracle};
-use crate::topo::{build_collective, Collective, LinkTraffic, Topology};
-use crate::util::Rng;
-use std::sync::Arc;
-use std::time::Instant;
-
-/// Stat-exchange schedule shared by the exact and gossip runners: active
-/// only when something adapts (level placement or Huffman tables) and the
-/// pipeline is actually quantized.
-fn adaptive_schedule(cfg: &ExperimentConfig, comps: &[Compressor]) -> UpdateSchedule {
-    if cfg.quant.adapts() && comps[0].is_quantized() {
-        UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
-    } else {
-        UpdateSchedule::never()
-    }
-}
-
-/// Summary scalars shared by the exact and gossip runners — one emission
-/// point so cross-topology CSV columns cannot drift apart.
-fn emit_summary_scalars(
-    rec: &mut Recorder,
-    traffic: &TrafficStats,
-    links: &LinkTraffic,
-    comps: &[Compressor],
-    k: usize,
-    d: usize,
-) {
-    rec.set_scalar("total_bits", traffic.bits_sent as f64);
-    rec.set_scalar("bits_per_round_per_worker", traffic.bits_per_round_per_worker(k));
-    rec.set_scalar("sim_net_time", traffic.sim_net_time);
-    rec.set_scalar("compute_time", traffic.compute_time);
-    rec.set_scalar("rounds", traffic.rounds as f64);
-    rec.set_scalar("level_updates", comps[0].updates() as f64);
-    rec.set_scalar("epsilon_q", comps[0].epsilon_q(d));
-    rec.set_scalar("wire_links", links.links() as f64);
-    rec.set_scalar("max_link_bytes", links.max_link_bytes());
-    // Layer-wise pipelines additionally report per-layer scalars
-    // (layer_bits/<name>, layer_variance/<name>, layer_levels/<name>);
-    // no-op otherwise.
-    comps[0].emit_layer_scalars(rec);
-}
+use crate::metrics::Recorder;
 
 /// Run one Q-GenX experiment per the config; returns the metric recorder
 /// with series `gap`, `dist`, `residual`, `gamma`, `bits_cum`,
-/// `sim_time_cum` and summary scalars. The exchange rounds run over the
-/// configured [`Topology`]; the config selects one of three runner
-/// families:
-///
-/// * **exact** (this function's body) — per-step dual exchange over an
-///   exact topology, the seed's Algorithm 1;
-/// * **gossip** (the private `run_gossip`) — inexact topologies: per-step
-///   dual exchange averaged over graph neighborhoods, plus `consensus_dist`;
-/// * **local** (the private `run_local`) — `local.steps ≥ 2`: private extra-gradient
-///   iterations between syncs, quantized model-delta averaging at syncs.
-///
-/// `local.steps = 1` deliberately does *not* engage the delta-sync
-/// machinery: with one local step the algorithm communicates every
-/// iteration anyway, and the per-step dual exchange is the trajectory the
-/// paper's theorems describe — so it runs the exact (or gossip) path,
-/// bit-for-bit identical to the seed.
+/// `sim_time_cum` and summary scalars. Equivalent to
+/// `Session::builder(cfg.clone()).build()?.run()` — build a [`Session`]
+/// directly to observe the run mid-flight, stop it early, or checkpoint
+/// it (`docs/API.md`).
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
-    cfg.validate()?;
-    let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
-    let collective = build_collective(topo, cfg.workers)?;
-    if cfg.local.steps > 1 {
-        return run_local(cfg, collective);
-    }
-    if !topo.is_exact() {
-        return run_gossip(cfg, collective);
-    }
-    let op = build_operator(&cfg.problem, cfg.seed)?;
-    let d = op.dim();
-    let k = cfg.workers;
-    let root = Rng::seed_from(cfg.seed);
-
-    // K private oracles + K compression endpoints.
-    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
-        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
-        .collect::<Result<_>>()?;
-    let mut comps: Vec<Compressor> = (0..k)
-        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
-        .collect::<Result<_>>()?;
-
-    let schedule = adaptive_schedule(cfg, &comps);
-
-    let x0 = vec![0.0f32; d];
-    let mut state = QGenX::new(cfg.algo.variant, &x0, k, cfg.algo.gamma0, cfg.algo.adaptive_step);
-
-    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
-    let net = NetModel::from_config(&cfg.net);
-    let mut traffic = TrafficStats::default();
-    let mut links = LinkTraffic::new();
-    let mut rec = Recorder::new();
-
-    // Scratch buffers reused across iterations.
-    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
-    let mut g_buf = vec![0.0f32; d];
-
-    for t in 1..=cfg.iters {
-        // (1) Level-update step: exchange sufficient statistics, pool,
-        //     re-optimize — identical on all workers.
-        if schedule.is_update(t) {
-            let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
-            let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
-            traffic.record_allgather(&bits, &net);
-            let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
-            for comp in comps.iter_mut() {
-                comp.update_levels(&rank_order)?;
-            }
-        }
-
-        // (2) Base exchange (variant-dependent).
-        let base_vecs: Vec<Vec<f32>> = if let Some(xq) = state.base_query() {
-            let t0 = Instant::now();
-            let mut bits = Vec::with_capacity(k);
-            let mut wires = Vec::with_capacity(k);
-            for w in 0..k {
-                oracles[w].sample(&xq, &mut g_buf);
-                let (bytes, b) = comps[w].compress(&g_buf)?;
-                bits.push(b);
-                wires.push(bytes);
-            }
-            // Everyone decodes everyone (we decode once — identical everywhere).
-            for w in 0..k {
-                comps[w].decompress(&wires[w], &mut decoded[w])?;
-            }
-            traffic.add_compute(t0.elapsed().as_secs_f64());
-            collective.record_round(&bits, &net, &mut traffic);
-            links.record(collective.as_ref(), &bits);
-            decoded.clone()
-        } else {
-            Vec::new()
-        };
-
-        // (3) Extrapolate.
-        let x_half = state.extrapolate(&base_vecs)?;
-
-        // (4) Half-step exchange.
-        let t0 = Instant::now();
-        let mut bits = Vec::with_capacity(k);
-        let mut wires = Vec::with_capacity(k);
-        for w in 0..k {
-            oracles[w].sample(&x_half, &mut g_buf);
-            let (bytes, b) = comps[w].compress(&g_buf)?;
-            bits.push(b);
-            wires.push(bytes);
-        }
-        for w in 0..k {
-            comps[w].decompress(&wires[w], &mut decoded[w])?;
-        }
-        traffic.add_compute(t0.elapsed().as_secs_f64());
-        collective.record_round(&bits, &net, &mut traffic);
-        links.record(collective.as_ref(), &bits);
-        state.update(&decoded)?;
-
-        // (5) Evaluation.
-        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
-            let avg = state.ergodic_average();
-            if let Some(ev) = &gap_eval {
-                rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
-                rec.push("dist", t as f64, ev.dist_to_center(&avg));
-            }
-            rec.push("residual", t as f64, op.residual(&avg));
-            rec.push("gamma", t as f64, state.gamma());
-            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
-            rec.push("sim_time_cum", t as f64, traffic.total_time());
-            comps[0].record_layer_series(&mut rec, t as f64);
-        }
-    }
-
-    emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
-    Ok(rec)
-}
-
-/// Inexact (gossip) runner: `K` genuinely distinct replicas, each
-/// averaging dual vectors over its closed graph neighborhood only. The
-/// exchange still moves real encoded wire bytes (decode is
-/// sender-deterministic, so decoding once per sender is exact); traffic
-/// follows the gossip α-β cost. Level updates stay *global* — the decode
-/// side of the wire format requires identical codecs on every replica, so
-/// the control plane (small, infrequent stat payloads) is pooled full-mesh
-/// while the data plane gossips; see `coordinator::mod` docs.
-fn run_gossip(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result<Recorder> {
-    let op = build_operator(&cfg.problem, cfg.seed)?;
-    let d = op.dim();
-    let k = cfg.workers;
-    let root = Rng::seed_from(cfg.seed);
-    let neigh: Vec<Vec<usize>> = (0..k).map(|r| collective.recipients(r)).collect();
-
-    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
-        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
-        .collect::<Result<_>>()?;
-    let mut comps: Vec<Compressor> = (0..k)
-        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
-        .collect::<Result<_>>()?;
-
-    let schedule = adaptive_schedule(cfg, &comps);
-
-    let x0 = vec![0.0f32; d];
-    let mut states: Vec<QGenX> = neigh
-        .iter()
-        .map(|n| QGenX::new(cfg.algo.variant, &x0, n.len(), cfg.algo.gamma0, cfg.algo.adaptive_step))
-        .collect();
-
-    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
-    let net = NetModel::from_config(&cfg.net);
-    let mut traffic = TrafficStats::default();
-    let mut links = LinkTraffic::new();
-    let mut rec = Recorder::new();
-    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
-    let mut g_buf = vec![0.0f32; d];
-
-    // Compress every worker's sample, decode once per sender, and hand each
-    // replica its neighborhood view (rank order within the neighborhood).
-    let exchange_views = |queries: &[Vec<f32>],
-                              oracles: &mut [Box<dyn Oracle>],
-                              comps: &mut [Compressor],
-                              decoded: &mut [Vec<f32>],
-                              traffic: &mut TrafficStats,
-                              links: &mut LinkTraffic,
-                              g_buf: &mut [f32]|
-     -> Result<Vec<Vec<Vec<f32>>>> {
-        let t0 = Instant::now();
-        let mut bits = Vec::with_capacity(k);
-        let mut wires = Vec::with_capacity(k);
-        for w in 0..k {
-            oracles[w].sample(&queries[w], g_buf);
-            let (bytes, b) = comps[w].compress(g_buf)?;
-            bits.push(b);
-            wires.push(bytes);
-        }
-        for w in 0..k {
-            comps[w].decompress(&wires[w], &mut decoded[w])?;
-        }
-        traffic.add_compute(t0.elapsed().as_secs_f64());
-        collective.record_round(&bits, &net, traffic);
-        links.record(collective.as_ref(), &bits);
-        Ok(neigh
-            .iter()
-            .map(|n| n.iter().map(|&w| decoded[w].clone()).collect())
-            .collect())
-    };
-
-    for t in 1..=cfg.iters {
-        // (1) Global (full-mesh) stat pooling keeps all codecs identical.
-        if schedule.is_update(t) {
-            let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
-            let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
-            traffic.record_allgather(&bits, &net);
-            let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
-            for comp in comps.iter_mut() {
-                comp.update_levels(&rank_order)?;
-            }
-        }
-
-        // (2) Base exchange: each replica queries at its *own* iterate.
-        let base_views: Vec<Vec<Vec<f32>>> = if states[0].base_query().is_some() {
-            let queries: Vec<Vec<f32>> =
-                states.iter().map(|s| s.base_query().expect("DE variant")).collect();
-            exchange_views(
-                &queries,
-                &mut oracles,
-                &mut comps,
-                &mut decoded,
-                &mut traffic,
-                &mut links,
-                &mut g_buf,
-            )?
-        } else {
-            vec![Vec::new(); k]
-        };
-
-        // (3) Per-replica extrapolation to its own half-step point.
-        let x_halves: Vec<Vec<f32>> = states
-            .iter_mut()
-            .zip(base_views.iter())
-            .map(|(s, v)| s.extrapolate(v))
-            .collect::<Result<_>>()?;
-
-        // (4) Half-step exchange at the per-replica half points.
-        let half_views = exchange_views(
-            &x_halves,
-            &mut oracles,
-            &mut comps,
-            &mut decoded,
-            &mut traffic,
-            &mut links,
-            &mut g_buf,
-        )?;
-        for (s, v) in states.iter_mut().zip(half_views.iter()) {
-            s.update(v)?;
-        }
-
-        // (5) Evaluation at the mean ergodic average + consensus tracking.
-        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
-            let averages: Vec<Vec<f32>> = states.iter().map(|s| s.ergodic_average()).collect();
-            let mut mean_avg = vec![0.0f32; d];
-            for a in &averages {
-                for (m, &x) in mean_avg.iter_mut().zip(a.iter()) {
-                    *m += x / k as f32;
-                }
-            }
-            let iterates: Vec<Vec<f32>> = states.iter().map(|s| s.x_world()).collect();
-            if let Some(ev) = &gap_eval {
-                rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
-                rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
-            }
-            rec.push("residual", t as f64, op.residual(&mean_avg));
-            rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
-            rec.push("gamma", t as f64, states[0].gamma());
-            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
-            rec.push("sim_time_cum", t as f64, traffic.total_time());
-            comps[0].record_layer_series(&mut rec, t as f64);
-        }
-    }
-
-    // Same scalar set as the exact path (bits_per_round_per_worker is the
-    // mesh-normalized figure Theorems 3/4 reference; under gossip it is a
-    // comparison yardstick, not a per-edge quantity), plus the consensus
-    // scalar only this runner can produce.
-    let final_iterates: Vec<Vec<f32>> = states.iter().map(|s| s.x_world()).collect();
-    emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
-    rec.set_scalar("consensus_dist", consensus_distance(&final_iterates));
-    Ok(rec)
-}
-
-/// Local-steps runner (`local.steps = H ≥ 2`): each worker runs `H`
-/// extra-gradient iterations against its *private* oracle between
-/// communication rounds, then the replicas exchange quantized **model
-/// deltas** (`X_t − X_sync`, one vector per worker per sync — not one or
-/// two duals per iteration) over the configured collective and
-/// re-synchronize by averaging the decoded deltas.
-///
-/// * Exact topologies: every replica averages all `K` decoded deltas, so
-///   replicas are bit-identical immediately after every sync; the
-///   `sync_drift` series tracks how far they diverged *within* each local
-///   segment.
-/// * Gossip: each replica averages deltas over its closed neighborhood
-///   only — replicas drift persistently, tracked by `consensus_dist` just
-///   like [`run_gossip`].
-///
-/// The control plane (stat pooling for QAda / Huffman refreshes) stays
-/// global and fires at the first sync on or after each due point — the
-/// early warmup `update_every.min(10)` the per-step runners also use, then
-/// every `update_every` — because between syncs there is no wire to carry
-/// stats. Note the statistics now describe *delta* coordinates (that is
-/// what the codec compresses in this mode), so the refreshed levels/tables
-/// fit the actual wire distribution.
-fn run_local(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result<Recorder> {
-    let op = build_operator(&cfg.problem, cfg.seed)?;
-    let d = op.dim();
-    let k = cfg.workers;
-    let h = cfg.local.steps;
-    let root = Rng::seed_from(cfg.seed);
-    let neigh: Vec<Vec<usize>> = (0..k).map(|r| collective.recipients(r)).collect();
-
-    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
-        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
-        .collect::<Result<_>>()?;
-    let mut comps: Vec<Compressor> = (0..k)
-        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
-        .collect::<Result<_>>()?;
-
-    let adaptive = cfg.quant.adapts() && comps[0].is_quantized();
-    let update_every = cfg.quant.update_every;
-    // First refresh at the first sync on or after the same early warmup
-    // point the per-step runners use (update_every.min(10)) — without it,
-    // runs shorter than update_every would never refresh at all.
-    let mut next_stat_due = update_every.min(10);
-
-    let x0 = vec![0.0f32; d];
-    let mut replicas: Vec<LocalQGenX> = (0..k)
-        .map(|_| LocalQGenX::new(cfg.algo.variant, &x0, cfg.algo.gamma0, cfg.algo.adaptive_step))
-        .collect();
-
-    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
-    let net = NetModel::from_config(&cfg.net);
-    let mut traffic = TrafficStats::default();
-    let mut links = LinkTraffic::new();
-    let mut rec = Recorder::new();
-    let mut sync_acc = SyncAccounting::new();
-    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
-    let mut g_buf = vec![0.0f32; d];
-
-    for t in 1..=cfg.iters {
-        // (1) One private extra-gradient iteration per replica — no wire.
-        let t0 = Instant::now();
-        for (rep, oracle) in replicas.iter_mut().zip(oracles.iter_mut()) {
-            rep.local_round(oracle.as_mut(), &mut g_buf)?;
-        }
-        traffic.add_compute(t0.elapsed().as_secs_f64());
-
-        // (2) Synchronization every H local iterations (plus a final sync
-        //     so the run always ends on a consensus point).
-        if t % h == 0 || t == cfg.iters {
-            // (2a) Quantize + exchange the model deltas.
-            let t0 = Instant::now();
-            let mut bits = Vec::with_capacity(k);
-            let mut wires = Vec::with_capacity(k);
-            for w in 0..k {
-                let delta = replicas[w].delta();
-                let (bytes, b) = comps[w].compress(&delta)?;
-                bits.push(b);
-                wires.push(bytes);
-            }
-            for w in 0..k {
-                comps[w].decompress(&wires[w], &mut decoded[w])?;
-            }
-            traffic.add_compute(t0.elapsed().as_secs_f64());
-            let bits_before = traffic.bits_sent;
-            collective.record_round(&bits, &net, &mut traffic);
-            links.record(collective.as_ref(), &bits);
-
-            // (2b) Pre-averaging drift + per-sync bit accounting.
-            let iterates: Vec<Vec<f32>> = replicas.iter().map(|r| r.x_world()).collect();
-            sync_acc.record(
-                &mut rec,
-                t,
-                consensus_distance(&iterates),
-                traffic.bits_sent - bits_before,
-            );
-
-            // (2c) Resync each replica onto its neighborhood-averaged delta
-            //      (all K under exact topologies).
-            for (rep, n) in replicas.iter_mut().zip(neigh.iter()) {
-                let mut mean = vec![0.0f32; d];
-                for &w in n {
-                    for (m, &x) in mean.iter_mut().zip(decoded[w].iter()) {
-                        *m += x / n.len() as f32;
-                    }
-                }
-                rep.resync(&mean)?;
-            }
-
-            // (2d) Control plane: pooled stat exchange at the first sync on
-            //      or after each due point (always full-mesh — the wire
-            //      format needs identical codecs everywhere).
-            if adaptive && update_every != 0 && t >= next_stat_due {
-                let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
-                let stat_bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
-                traffic.record_allgather(&stat_bits, &net);
-                let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
-                for comp in comps.iter_mut() {
-                    comp.update_levels(&rank_order)?;
-                }
-                next_stat_due = t + update_every;
-            }
-        }
-
-        // (3) Evaluation at the mean ergodic average across replicas.
-        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
-            let mut mean_avg = vec![0.0f32; d];
-            for rep in &replicas {
-                for (m, &x) in mean_avg.iter_mut().zip(rep.ergodic_average().iter()) {
-                    *m += x / k as f32;
-                }
-            }
-            let iterates: Vec<Vec<f32>> = replicas.iter().map(|r| r.x_world()).collect();
-            if let Some(ev) = &gap_eval {
-                rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
-                rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
-            }
-            rec.push("residual", t as f64, op.residual(&mean_avg));
-            rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
-            rec.push("gamma", t as f64, replicas[0].gamma());
-            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
-            rec.push("sim_time_cum", t as f64, traffic.total_time());
-            comps[0].record_layer_series(&mut rec, t as f64);
-        }
-    }
-
-    // Final consensus over the *sync bases*: the run ends on a sync, and
-    // the consensus point is computed by identical arithmetic on every
-    // replica — exactly 0 under exact topologies (the raw iterates can sit
-    // an origin-shift rounding ulp off it; see `algo::local` docs).
-    let final_bases: Vec<Vec<f32>> = replicas.iter().map(|r| r.sync_base().to_vec()).collect();
-    emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
-    sync_acc.emit_scalars(&mut rec);
-    rec.set_scalar("local_steps", h as f64);
-    rec.set_scalar("consensus_dist", consensus_distance(&final_bases));
-    Ok(rec)
+    Session::builder(cfg.clone()).build()?.run()
 }
 
 /// QSGDA baseline (Beznosikov et al. 2022): quantized SGDA with γ_t = γ₀/√t,
 /// same oracles/compressors/network — only the update rule differs
-/// (no extrapolation, no adaptive step). The Figure-4 comparator.
+/// (no extrapolation, no adaptive step). The Figure-4 comparator, folded
+/// into the session engine as an algorithm policy
+/// ([`Algorithm::Sgda`]); always accounted as a full-mesh round.
 pub fn run_qsgda_baseline(cfg: &ExperimentConfig) -> Result<Recorder> {
-    cfg.validate()?;
-    let op = build_operator(&cfg.problem, cfg.seed)?;
-    let d = op.dim();
-    let k = cfg.workers;
-    let root = Rng::seed_from(cfg.seed);
-    let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
-        .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
-        .collect::<Result<_>>()?;
-    let mut comps: Vec<Compressor> = (0..k)
-        .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
-        .collect::<Result<_>>()?;
-    let x0 = vec![0.0f32; d];
-    let mut sgda = Sgda::new(&x0, cfg.algo.gamma0, true);
-    let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
-    let net = NetModel::from_config(&cfg.net);
-    let mut traffic = TrafficStats::default();
-    let mut rec = Recorder::new();
-    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
-    let mut g_buf = vec![0.0f32; d];
-
-    for t in 1..=cfg.iters {
-        let xq = sgda.query();
-        let mut bits = Vec::with_capacity(k);
-        let mut wires = Vec::with_capacity(k);
-        for w in 0..k {
-            oracles[w].sample(&xq, &mut g_buf);
-            let (bytes, b) = comps[w].compress(&g_buf)?;
-            bits.push(b);
-            wires.push(bytes);
-        }
-        for w in 0..k {
-            comps[w].decompress(&wires[w], &mut decoded[w])?;
-        }
-        traffic.record_allgather(&bits, &net);
-        sgda.update(&decoded);
-        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
-            let avg = sgda.ergodic_average();
-            if let Some(ev) = &gap_eval {
-                rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
-                rec.push("dist", t as f64, ev.dist_to_center(&avg));
-                rec.push("dist_last", t as f64, ev.dist_to_center(sgda.x()));
-            }
-            rec.push("residual", t as f64, op.residual(&avg));
-            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
-        }
-    }
-    rec.set_scalar("total_bits", traffic.bits_sent as f64);
-    Ok(rec)
+    Session::builder(cfg.clone()).algorithm(Algorithm::Sgda).build()?.run()
 }
 
 #[cfg(test)]

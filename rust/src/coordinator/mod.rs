@@ -1,100 +1,95 @@
-//! The distributed coordinator — Algorithm 1 of the paper.
+//! The distributed coordinator — Algorithm 1 of the paper, behind one
+//! steppable run API.
 //!
-//! Two execution modes share all of the math:
+//! ## Architecture: Session → ExchangePolicy → RoundEngine
 //!
-//! * [`inline`] — single-threaded simulation of the `K` processors.
-//!   Deterministic, allocation-light, used by the rate/figure benches where
-//!   thousands of runs are swept.
-//! * [`threaded`] — `K` real worker threads exchanging *actual encoded
-//!   bytes* through the [`crate::net::AllGather`] transport, each holding a
-//!   replicated [`crate::algo::QGenX`] state (data-parallel replication:
-//!   identical decoded vectors ⇒ identical replicas). This is the system
-//!   the examples and the E2E drivers run on.
+//! * [`Session`] ([`session`]) — the public run API: a builder
+//!   (`Session::builder(cfg).oracle(..).collective(..).observer(..)`)
+//!   that validates once and yields a steppable state machine —
+//!   `step() -> StepReport`, `run_to(t)`, `checkpoint()`/`resume()`, and
+//!   the [`Observer`] trait for streaming metrics and early-stop
+//!   predicates. Full surface: `docs/API.md`.
+//! * `ExchangePolicy` ([`policy`]) — one implementation per runner
+//!   family: **exact** (per-step dual exchange, replicas bit-identical),
+//!   **gossip** (neighborhood-averaged duals, replicas drift,
+//!   `consensus_dist`), **local** (`local.steps = H ≥ 2`: private
+//!   extra-gradient segments + quantized model-delta syncs), plus the
+//!   QSGDA baseline as an algorithm policy. The seed implemented these as
+//!   six hand-copied loops; each is now written once.
+//! * `RoundEngine` ([`engine`]) — the shared round primitives every
+//!   policy drives: stat-exchange step (pooled sufficient statistics,
+//!   lockstep level/codec refresh), base / extrapolated dual exchange,
+//!   delta exchange, traffic + per-link accounting, and the *single*
+//!   stat-schedule predicate both execution modes share.
 //!
-//! Per-iteration protocol (both modes), following Algorithm 1:
+//! Two execution modes are two engine *fabrics*, not two implementations:
 //!
-//! 1. if `t ∈ U` (level-update schedule): workers exchange sufficient
-//!    statistics (stat wire-format v2 for single-codec pipelines, the
-//!    per-layer v3 for layer-wise pipelines — byte layouts in
-//!    `docs/WIRE.md`; counted as traffic), pool them in rank order, and
-//!    each deterministically re-optimizes levels, rebuilds Huffman
+//! * **loopback** — all `K` endpoints in one thread (the inline
+//!   simulation; deterministic, allocation-light, used by the
+//!   rate/figure benches where thousands of runs are swept). Supports
+//!   `checkpoint()`/`resume()`.
+//! * **transport** — one rank per OS thread over the
+//!   [`crate::net::AllGather`] barrier, real encoded bytes on the wire
+//!   ([`SessionBuilder::transport`]).
+//!
+//! The one-shot wrappers — [`run_experiment`], [`run_threaded`],
+//! [`run_qsgda_baseline`] — survive as thin `Session` consumers with
+//! trajectories and wire accounting bit-identical to the pre-Session
+//! runners (`tests/session_parity.rs` pins this against a frozen copy of
+//! the seed loops).
+//!
+//! ## Per-iteration protocol (all families, both fabrics)
+//!
+//! 1. if `t ∈ U` (level-update schedule; for the local family, first sync
+//!    on/after each due point): workers exchange sufficient statistics
+//!    (stat wire-format v2, or v3 for layer-wise pipelines — byte layouts
+//!    in `docs/WIRE.md`; counted as traffic), pool them in rank order,
+//!    and each deterministically re-optimizes levels, rebuilds Huffman
 //!    codecs, and — layer-wise with a bit budget — re-runs the Theorem-1
-//!    allocator (identical inputs ⇒ identical tables and allocations).
-//!    The payload is non-empty whenever *anything* adapts — QAda level
-//!    placement, the Huffman probability model, or the budget allocator —
-//!    matching what `update_levels` consumes
-//!    ([`crate::config::QuantConfig::adapts`] is the single source of
-//!    truth).
-//! 2. variant-dependent base exchange (`V̂_{k,t}`): DE quantizes + exchanges
-//!    fresh oracle queries at `X_t`; DA/OptDA send nothing.
+//!    allocator. [`crate::config::QuantConfig::adapts`] (× "is the
+//!    pipeline quantized") is the single gating predicate, evaluated in
+//!    one place — the engine.
+//! 2. variant-dependent base exchange (`V̂_{k,t}`): DE quantizes +
+//!    exchanges fresh oracle queries at `X_t`; DA/OptDA send nothing.
 //! 3. extrapolate to `X_{t+1/2}`.
-//! 4. quantize + exchange `V̂_{k,t+1/2}`; everyone updates the replica.
-//!
-//! ## Runner families
-//!
-//! The config selects one of three scenario families, in both execution
-//! modes:
-//!
-//! * **exact** — the protocol above over an exact topology: per-step dual
-//!   exchange, all replicas bit-identical at every step (the seed
-//!   behavior, `local.steps = 1`, non-gossip `[topo]`).
-//! * **gossip** — same per-step protocol, but dual vectors average over
-//!   closed graph neighborhoods only; replicas drift (`consensus_dist`).
-//! * **local** (`local.steps = H ≥ 2`) — `H` private extra-gradient
-//!   iterations per replica between communication rounds, then one
-//!   quantized **model-delta** exchange and a resync by averaging
-//!   (`inline::run_local` / the threaded local loop). Communication drops
-//!   from one-to-two dual rounds per iteration to one delta round per `H`
-//!   iterations; the `sync_drift` / `sync_bits` series and the `syncs` /
-//!   `bits_per_sync` / `mean_sync_drift` scalars account for it. `H = 1`
-//!   deliberately runs the exact (or gossip) family — with communication
-//!   every iteration the per-step dual exchange *is* the algorithm, so the
-//!   seed trajectory is reproduced bit-for-bit.
+//! 4. quantize + exchange `V̂_{k,t+1/2}`; update the replica(s). (The
+//!    local family replaces 2–4 with `H` private iterations + one delta
+//!    sync; the SGDA policy with a single exchange at `X_t`.)
 //!
 //! ## Topology selection
 //!
-//! Both modes route the *data-plane* exchanges (steps 2 and 4) through the
-//! [`crate::topo::Collective`] built from the `[topo]` config table:
-//!
-//! * `full-mesh` (default) — the paper's flat allgather; byte- and
-//!   cost-identical to the pre-topology coordinator.
-//! * `star` / `ring` / `hierarchical` — **exact**: they deliver the same
-//!   rank-order mean via in-network aggregation, so trajectories are
-//!   bit-identical to full mesh while modeled time/traffic follow the
-//!   per-topology α-β formulas in [`crate::topo::cost`].
-//! * `gossip` — **inexact**: each worker averages over its closed graph
-//!   neighborhood, replicas genuinely diverge (tracked as the
-//!   `consensus_dist` series/scalar via
-//!   [`crate::metrics::consensus_distance`]), and the threaded runner skips
-//!   the replica-equality assertion.
-//!
-//! The *control plane* (step 1's stat pooling) is always global and
-//! accounted as a full-mesh round, even under gossip: the decode side of
-//! the wire format requires bit-identical levels + Huffman tables (and,
-//! layer-wise, bit allocations) on every worker, and the stat payloads are
-//! small and infrequent. Gossip decentralizes the data plane only.
+//! The data-plane exchanges route through the [`crate::topo::Collective`]
+//! built from the `[topo]` table: `full-mesh` (the paper's flat
+//! allgather), `star`/`ring`/`hierarchical` (exact in-network
+//! aggregation — bit-identical trajectories at lower modeled cost), or
+//! `gossip` (inexact neighborhood averaging). The *control plane* (stat
+//! pooling) is always global and accounted full-mesh: the decode side of
+//! the wire format requires bit-identical codecs on every worker.
 //!
 //! ## Compression pipeline selection
 //!
-//! Orthogonal to the runner family and topology, `[quant.layers]` selects
-//! the per-worker [`pipeline::Compressor`] shape: FP32, the single-codec
-//! seed pipeline, or layer-wise heterogeneous quantization (Q-GenX-LW —
-//! per-layer levels/codec/statistics with optional Theorem-1 bit-budget
-//! allocation; `docs/CONFIG.md` documents the table, `docs/WIRE.md` the
-//! formats). Every runner records the per-layer `layer_bits/<name>` /
-//! `layer_variance/<name>` series and scalars when the layer-wise pipeline
-//! is active. A single-layer map reproduces the un-layered runs
-//! bit-for-bit in all three families (regression-tested).
+//! Orthogonal to family and topology, `[quant.layers]` selects the
+//! per-worker [`pipeline::Compressor`] shape: FP32, the single-codec seed
+//! pipeline, or layer-wise heterogeneous quantization (Q-GenX-LW). Every
+//! family records the per-layer series/scalars when layer-wise is active.
 //!
 //! Timing: compute (oracle + encode + decode) is *measured*; network time
-//! is *modeled* (α-β on the exact encoded byte counts) — see DESIGN.md §5.4.
+//! is *modeled* (α-β on the exact encoded byte counts). Measured times
+//! are exempt from the bit-for-bit reproducibility contract.
 
+pub mod engine;
 pub mod inline;
 pub mod pipeline;
+pub mod policy;
 pub mod schedule;
+pub mod session;
 pub mod threaded;
 
+pub use engine::{pool_local_stats, OracleFactory};
 pub use inline::{run_experiment, run_qsgda_baseline};
 pub use pipeline::Compressor;
 pub use schedule::UpdateSchedule;
-pub use threaded::run_threaded;
+pub use session::{
+    Algorithm, Checkpoint, Control, Observer, Session, SessionBuilder, StepReport, StopAtGap,
+};
+pub use threaded::{run_threaded, ThreadedRun};

@@ -34,6 +34,7 @@ use crate::quant::{
 use crate::util::Rng;
 
 /// A worker's (de)compression endpoint.
+#[derive(Clone)]
 pub enum Compressor {
     /// Full precision: raw little-endian f32 payloads (32 bits/coordinate).
     Fp32,
@@ -43,6 +44,7 @@ pub enum Compressor {
     LayerWise(Box<LayerWiseCompressor>),
 }
 
+#[derive(Clone)]
 pub struct QuantCompressor {
     cfg: QuantConfig,
     levels: Levels,
@@ -337,6 +339,7 @@ impl Compressor {
 /// reported bit count. The layer map itself is side information (derived
 /// from the shared config once `d` is known), like `d` and the bucket size
 /// in the single-codec pipeline.
+#[derive(Clone)]
 pub struct LayerWiseCompressor {
     layers_cfg: LayersConfig,
     /// Base bucket size — the alignment hint for auto-split maps.

@@ -1,0 +1,577 @@
+//! `ExchangePolicy`: the per-iteration protocol of one runner family,
+//! expressed against the [`super::engine::RoundEngine`] primitives.
+//!
+//! The seed implemented Algorithm 1 six times — exact, gossip and local
+//! loops, hand-copied for the inline and threaded coordinators, plus a
+//! QSGDA baseline with its own exchange loop. Each family is now **one**
+//! implementation, driven by the [`crate::coordinator::Session`] state
+//! machine over either fabric:
+//!
+//! * `ExactPolicy` — per-step dual exchange over an exact topology; one
+//!   replica state (shared under loopback, replicated per rank under
+//!   transport — identical decoded views keep them bit-identical).
+//! * `GossipPolicy` — per-step dual exchange averaged over closed graph
+//!   neighborhoods; one genuinely distinct replica per owned rank.
+//! * `LocalPolicy` — `H` private extra-gradient iterations per replica
+//!   between quantized model-delta syncs (`local.steps ≥ 2`), composing
+//!   with both exact and gossip delta averaging.
+//! * `SgdaPolicy` — the QSGDA comparator (Beznosikov et al. 2022) as an
+//!   *algorithm policy* over the same engine: one exchange per iteration
+//!   at `X_t`, `γ_t = γ₀/√t`, no extrapolation, no stat rounds — not a
+//!   fourth hand-rolled runner. Always accounted as a full-mesh round
+//!   (the Figure-4 comparison baseline ignores `[topo]`, as the seed did).
+//!
+//! Metric parity: each policy records exactly the series/scalars its
+//! pre-Session runner recorded — the loopback fabric reproduces the inline
+//! runner's recorder, transport rank 0 the threaded runner's — so the
+//! wrappers in [`super::inline`] / [`super::threaded`] are bit-compatible
+//! with the seed (regression-tested in `tests/session_parity.rs`).
+
+use super::engine::{Query, RoundEngine};
+use super::session::StepReport;
+use crate::algo::{LocalQGenX, QGenX, Sgda};
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::metrics::{consensus_distance, Recorder, SyncAccounting};
+use crate::oracle::GapEvaluator;
+use std::time::Instant;
+
+/// One runner family's per-iteration protocol (see module docs).
+pub(crate) trait ExchangePolicy: Send {
+    /// Advance one iteration (`t` is 1-based; `last` marks `t == iters`).
+    fn step(
+        &mut self,
+        t: usize,
+        last: bool,
+        eng: &mut RoundEngine,
+        rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()>;
+
+    /// Record the eval-step metrics (called when `t % eval_every == 0` or
+    /// on the last iteration). Under the transport fabric this may run a
+    /// diagnostic barrier — every rank evaluates at the same steps.
+    fn eval(
+        &mut self,
+        t: usize,
+        eng: &mut RoundEngine,
+        rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()>;
+
+    /// Emit the end-of-run summary scalars.
+    fn finish(&mut self, eng: &mut RoundEngine, rec: &mut Recorder) -> Result<()>;
+
+    /// Current adaptive step-size γ_t.
+    fn gamma(&self) -> f64;
+
+    /// This endpoint's final replica state — the quantity the threaded
+    /// replication invariant compares (sync bases for the local family).
+    fn replica(&self) -> Vec<f32>;
+
+    fn clone_box(&self) -> Box<dyn ExchangePolicy>;
+}
+
+/// The inline runners' summary scalar set (loopback fabric).
+fn emit_loopback_summary(rec: &mut Recorder, eng: &RoundEngine) {
+    rec.set_scalar("total_bits", eng.traffic.bits_sent as f64);
+    rec.set_scalar("bits_per_round_per_worker", eng.traffic.bits_per_round_per_worker(eng.k));
+    rec.set_scalar("sim_net_time", eng.traffic.sim_net_time);
+    rec.set_scalar("compute_time", eng.traffic.compute_time);
+    rec.set_scalar("rounds", eng.traffic.rounds as f64);
+    rec.set_scalar("level_updates", eng.comps[0].updates() as f64);
+    rec.set_scalar("epsilon_q", eng.comps[0].epsilon_q(eng.d));
+    rec.set_scalar("wire_links", eng.links.links() as f64);
+    rec.set_scalar("max_link_bytes", eng.links.max_link_bytes());
+    eng.comps[0].emit_layer_scalars(rec);
+}
+
+/// The threaded workers' rank-0 summary scalar set (transport fabric).
+fn emit_transport_summary(rec: &mut Recorder, eng: &RoundEngine) {
+    rec.set_scalar("total_bits", eng.traffic.bits_sent as f64);
+    rec.set_scalar("rounds", eng.traffic.rounds as f64);
+    rec.set_scalar("level_updates", eng.comps[0].updates() as f64);
+    rec.set_scalar("sim_net_time", eng.traffic.sim_net_time);
+    rec.set_scalar("compute_time", eng.traffic.compute_time);
+    rec.set_scalar("wire_links", eng.links.links() as f64);
+    rec.set_scalar("max_link_bytes", eng.links.max_link_bytes());
+    eng.comps[0].emit_layer_scalars(rec);
+}
+
+fn gap_eval_for(eng: &RoundEngine) -> Option<GapEvaluator> {
+    if eng.is_metrics_rank() {
+        GapEvaluator::around_solution(eng.op.as_ref(), 2.0)
+    } else {
+        None
+    }
+}
+
+/// Push the shared per-eval diagnostics (γ_t, cumulative bits/time, layer
+/// series) on the metrics rank.
+fn push_step_diagnostics(rec: &mut Recorder, eng: &RoundEngine, tf: f64, gamma: f64) {
+    rec.push("gamma", tf, gamma);
+    rec.push("bits_cum", tf, eng.traffic.bits_sent as f64);
+    rec.push("sim_time_cum", tf, eng.traffic.total_time());
+    eng.comps[0].record_layer_series(rec, tf);
+}
+
+// ---------------------------------------------------------------- exact --
+
+/// Exact topologies: every rank consumes all `K` decoded duals, so one
+/// [`QGenX`] replica per endpoint stays bit-identical everywhere.
+#[derive(Clone)]
+pub(crate) struct ExactPolicy {
+    state: QGenX,
+    gap_eval: Option<GapEvaluator>,
+}
+
+impl ExactPolicy {
+    pub(crate) fn new(cfg: &ExperimentConfig, eng: &RoundEngine) -> Self {
+        let x0 = vec![0.0f32; eng.d];
+        // recv[0] is all K under exact topologies — the replica averages
+        // every worker's dual, in both fabrics.
+        let state = QGenX::new(
+            cfg.algo.variant,
+            &x0,
+            eng.recv[0].len(),
+            cfg.algo.gamma0,
+            cfg.algo.adaptive_step,
+        );
+        ExactPolicy { state, gap_eval: gap_eval_for(eng) }
+    }
+}
+
+impl ExchangePolicy for ExactPolicy {
+    fn step(
+        &mut self,
+        t: usize,
+        _last: bool,
+        eng: &mut RoundEngine,
+        _rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        rep.level_update = eng.maybe_per_step_stat(t)?;
+        // The decode buffer is consumed by reference, as the seed runner
+        // did — no per-iteration K×d clone on the hottest loop.
+        let x_half = if let Some(xq) = self.state.base_query() {
+            eng.dual_exchange(Query::Shared(&xq))?;
+            self.state.extrapolate(&eng.decoded)?
+        } else {
+            self.state.extrapolate(&[])?
+        };
+        eng.dual_exchange(Query::Shared(&x_half))?;
+        self.state.update(&eng.decoded)?;
+        Ok(())
+    }
+
+    fn eval(
+        &mut self,
+        t: usize,
+        eng: &mut RoundEngine,
+        rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        let tf = t as f64;
+        let avg = self.state.ergodic_average();
+        if let Some(ev) = &self.gap_eval {
+            let gap = ev.gap(eng.op.as_ref(), &avg);
+            let dist = ev.dist_to_center(&avg);
+            rec.push("gap", tf, gap);
+            rec.push("dist", tf, dist);
+            rep.gap = Some(gap);
+            rep.dist = Some(dist);
+        }
+        if eng.is_loopback() {
+            let res = eng.op.residual(&avg);
+            rec.push("residual", tf, res);
+            rep.residual = Some(res);
+        }
+        if eng.is_metrics_rank() {
+            push_step_diagnostics(rec, eng, tf, self.state.gamma());
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, eng: &mut RoundEngine, rec: &mut Recorder) -> Result<()> {
+        if eng.is_loopback() {
+            emit_loopback_summary(rec, eng);
+        } else if eng.is_metrics_rank() {
+            emit_transport_summary(rec, eng);
+        }
+        Ok(())
+    }
+
+    fn gamma(&self) -> f64 {
+        self.state.gamma()
+    }
+
+    fn replica(&self) -> Vec<f32> {
+        self.state.x_world()
+    }
+
+    fn clone_box(&self) -> Box<dyn ExchangePolicy> {
+        Box::new(self.clone())
+    }
+}
+
+// --------------------------------------------------------------- gossip --
+
+/// Inexact (gossip) topologies: one genuinely distinct replica per owned
+/// rank, each averaging duals over its closed neighborhood only. Level
+/// updates stay global (the wire format needs identical codecs), so the
+/// control plane pools full-mesh while the data plane gossips.
+#[derive(Clone)]
+pub(crate) struct GossipPolicy {
+    states: Vec<QGenX>,
+    gap_eval: Option<GapEvaluator>,
+}
+
+impl GossipPolicy {
+    pub(crate) fn new(cfg: &ExperimentConfig, eng: &RoundEngine) -> Self {
+        let x0 = vec![0.0f32; eng.d];
+        let states = eng
+            .recv
+            .iter()
+            .map(|n| {
+                QGenX::new(cfg.algo.variant, &x0, n.len(), cfg.algo.gamma0, cfg.algo.adaptive_step)
+            })
+            .collect();
+        GossipPolicy { states, gap_eval: gap_eval_for(eng) }
+    }
+}
+
+impl ExchangePolicy for GossipPolicy {
+    fn step(
+        &mut self,
+        t: usize,
+        _last: bool,
+        eng: &mut RoundEngine,
+        _rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        rep.level_update = eng.maybe_per_step_stat(t)?;
+        // Base exchange: each replica queries at its *own* iterate.
+        let base_views: Vec<Vec<Vec<f32>>> = if self.states[0].base_query().is_some() {
+            let queries: Vec<Vec<f32>> =
+                self.states.iter().map(|s| s.base_query().expect("DE variant")).collect();
+            eng.dual_exchange(Query::PerOwned(&queries))?;
+            (0..self.states.len()).map(|i| eng.view_of(i)).collect()
+        } else {
+            vec![Vec::new(); self.states.len()]
+        };
+        let x_halves: Vec<Vec<f32>> = self
+            .states
+            .iter_mut()
+            .zip(base_views.iter())
+            .map(|(s, v)| s.extrapolate(v))
+            .collect::<Result<_>>()?;
+        eng.dual_exchange(Query::PerOwned(&x_halves))?;
+        for (i, s) in self.states.iter_mut().enumerate() {
+            s.update(&eng.view_of(i))?;
+        }
+        Ok(())
+    }
+
+    fn eval(
+        &mut self,
+        t: usize,
+        eng: &mut RoundEngine,
+        rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        let tf = t as f64;
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+            self.states.iter().map(|s| (s.x_world(), s.ergodic_average())).collect();
+        if let Some((iterates, mean_avg)) = eng.cross_view(&pairs)? {
+            if let Some(ev) = &self.gap_eval {
+                let gap = ev.gap(eng.op.as_ref(), &mean_avg);
+                let dist = ev.dist_to_center(&mean_avg);
+                rec.push("gap", tf, gap);
+                rec.push("dist", tf, dist);
+                rep.gap = Some(gap);
+                rep.dist = Some(dist);
+            }
+            if eng.is_loopback() {
+                let res = eng.op.residual(&mean_avg);
+                rec.push("residual", tf, res);
+                rep.residual = Some(res);
+            }
+            let cons = consensus_distance(&iterates);
+            rec.push("consensus_dist", tf, cons);
+            rep.consensus = Some(cons);
+        }
+        if eng.is_metrics_rank() {
+            push_step_diagnostics(rec, eng, tf, self.states[0].gamma());
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, eng: &mut RoundEngine, rec: &mut Recorder) -> Result<()> {
+        if eng.is_loopback() {
+            // bits_per_round_per_worker stays the mesh-normalized yardstick
+            // of Theorems 3/4, plus the consensus scalar only this family
+            // produces (transport: the run_threaded wrapper sets it from
+            // the collected replicas, as the seed did).
+            let final_iterates: Vec<Vec<f32>> = self.states.iter().map(|s| s.x_world()).collect();
+            emit_loopback_summary(rec, eng);
+            rec.set_scalar("consensus_dist", consensus_distance(&final_iterates));
+        } else if eng.is_metrics_rank() {
+            emit_transport_summary(rec, eng);
+        }
+        Ok(())
+    }
+
+    fn gamma(&self) -> f64 {
+        self.states[0].gamma()
+    }
+
+    fn replica(&self) -> Vec<f32> {
+        self.states[0].x_world()
+    }
+
+    fn clone_box(&self) -> Box<dyn ExchangePolicy> {
+        Box::new(self.clone())
+    }
+}
+
+// ---------------------------------------------------------------- local --
+
+/// Local-steps family (`local.steps = H ≥ 2`): `H` private extra-gradient
+/// iterations per replica, then one quantized model-delta exchange and a
+/// resync by (neighborhood-)averaging. See `algo::local` for the replica
+/// invariances and why agreement is asserted on sync bases.
+#[derive(Clone)]
+pub(crate) struct LocalPolicy {
+    reps: Vec<LocalQGenX>,
+    sync_acc: SyncAccounting,
+    gap_eval: Option<GapEvaluator>,
+    h: usize,
+}
+
+impl LocalPolicy {
+    pub(crate) fn new(cfg: &ExperimentConfig, eng: &RoundEngine) -> Self {
+        let x0 = vec![0.0f32; eng.d];
+        let reps = eng
+            .owned
+            .iter()
+            .map(|_| {
+                LocalQGenX::new(cfg.algo.variant, &x0, cfg.algo.gamma0, cfg.algo.adaptive_step)
+            })
+            .collect();
+        LocalPolicy {
+            reps,
+            sync_acc: SyncAccounting::new(),
+            gap_eval: gap_eval_for(eng),
+            h: cfg.local.steps,
+        }
+    }
+}
+
+impl ExchangePolicy for LocalPolicy {
+    fn step(
+        &mut self,
+        t: usize,
+        last: bool,
+        eng: &mut RoundEngine,
+        rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        // (1) One private extra-gradient iteration per owned replica.
+        let t0 = Instant::now();
+        for (i, r) in self.reps.iter_mut().enumerate() {
+            eng.local_round(i, r)?;
+        }
+        eng.traffic.add_compute(t0.elapsed().as_secs_f64());
+
+        // (2) Delta synchronization every H iterations (plus a final sync
+        //     so the run always ends on a consensus point).
+        if t % self.h == 0 || last {
+            rep.synced = true;
+            let deltas: Vec<Vec<f32>> = self.reps.iter().map(|r| r.delta()).collect();
+            let round_bits = eng.vector_exchange(&deltas)?;
+
+            if eng.is_metrics_rank() {
+                // Pre-averaging drift. Loopback measures the raw iterates;
+                // transport rank 0 measures the *decoded* deltas it already
+                // holds (no extra barrier; common sync base cancels) — the
+                // same split the seed's two local runners had.
+                let drift = if eng.is_loopback() {
+                    let iterates: Vec<Vec<f32>> = self.reps.iter().map(|r| r.x_world()).collect();
+                    consensus_distance(&iterates)
+                } else {
+                    consensus_distance(&eng.view_of(0))
+                };
+                self.sync_acc.record(rec, t, drift, round_bits);
+            }
+
+            // Resync each replica onto its neighborhood-averaged delta
+            // (all K under exact topologies).
+            for (i, r) in self.reps.iter_mut().enumerate() {
+                let n = &eng.recv[i];
+                let mut mean = vec![0.0f32; eng.d];
+                for &w in n {
+                    for (m, &x) in mean.iter_mut().zip(eng.decoded[w].iter()) {
+                        *m += x / n.len() as f32;
+                    }
+                }
+                r.resync(&mean)?;
+            }
+
+            // Control plane: pooled stat exchange at the first sync on or
+            // after each due point.
+            rep.level_update = eng.maybe_local_stat(t)?;
+        }
+        Ok(())
+    }
+
+    fn eval(
+        &mut self,
+        t: usize,
+        eng: &mut RoundEngine,
+        rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        let tf = t as f64;
+        let pairs: Vec<(Vec<f32>, Vec<f32>)> =
+            self.reps.iter().map(|r| (r.x_world(), r.ergodic_average())).collect();
+        if let Some((iterates, mean_avg)) = eng.cross_view(&pairs)? {
+            if let Some(ev) = &self.gap_eval {
+                let gap = ev.gap(eng.op.as_ref(), &mean_avg);
+                let dist = ev.dist_to_center(&mean_avg);
+                rec.push("gap", tf, gap);
+                rec.push("dist", tf, dist);
+                rep.gap = Some(gap);
+                rep.dist = Some(dist);
+            }
+            if eng.is_loopback() {
+                let res = eng.op.residual(&mean_avg);
+                rec.push("residual", tf, res);
+                rep.residual = Some(res);
+            }
+            let cons = consensus_distance(&iterates);
+            rec.push("consensus_dist", tf, cons);
+            rep.consensus = Some(cons);
+        }
+        if eng.is_metrics_rank() {
+            push_step_diagnostics(rec, eng, tf, self.reps[0].gamma());
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self, eng: &mut RoundEngine, rec: &mut Recorder) -> Result<()> {
+        if eng.is_loopback() {
+            // Final consensus over the *sync bases*: the run ends on a
+            // sync, and the consensus point is computed by identical
+            // arithmetic on every replica (see `algo::local`).
+            let bases: Vec<Vec<f32>> = self.reps.iter().map(|r| r.sync_base().to_vec()).collect();
+            emit_loopback_summary(rec, eng);
+            self.sync_acc.emit_scalars(rec);
+            rec.set_scalar("local_steps", self.h as f64);
+            rec.set_scalar("consensus_dist", consensus_distance(&bases));
+        } else if eng.is_metrics_rank() {
+            emit_transport_summary(rec, eng);
+            rec.set_scalar("local_steps", self.h as f64);
+            self.sync_acc.emit_scalars(rec);
+        }
+        Ok(())
+    }
+
+    fn gamma(&self) -> f64 {
+        self.reps[0].gamma()
+    }
+
+    fn replica(&self) -> Vec<f32> {
+        self.reps[0].sync_base().to_vec()
+    }
+
+    fn clone_box(&self) -> Box<dyn ExchangePolicy> {
+        Box::new(self.clone())
+    }
+}
+
+// ----------------------------------------------------------------- sgda --
+
+/// QSGDA baseline (Beznosikov et al. 2022): quantized SGDA with
+/// `γ_t = γ₀/√t` — same oracles/compressors/network, only the update rule
+/// differs (no extrapolation, no adaptive step, no stat rounds). The
+/// Figure-4 comparator, always accounted as a full-mesh round.
+#[derive(Clone)]
+pub(crate) struct SgdaPolicy {
+    sgda: Sgda,
+    gap_eval: Option<GapEvaluator>,
+}
+
+impl SgdaPolicy {
+    pub(crate) fn new(cfg: &ExperimentConfig, eng: &RoundEngine) -> Self {
+        let x0 = vec![0.0f32; eng.d];
+        SgdaPolicy { sgda: Sgda::new(&x0, cfg.algo.gamma0, true), gap_eval: gap_eval_for(eng) }
+    }
+}
+
+impl ExchangePolicy for SgdaPolicy {
+    fn step(
+        &mut self,
+        _t: usize,
+        _last: bool,
+        eng: &mut RoundEngine,
+        _rec: &mut Recorder,
+        _rep: &mut StepReport,
+    ) -> Result<()> {
+        let xq = self.sgda.query();
+        eng.dual_exchange(Query::Shared(&xq))?;
+        self.sgda.update(&eng.decoded);
+        Ok(())
+    }
+
+    fn eval(
+        &mut self,
+        t: usize,
+        eng: &mut RoundEngine,
+        rec: &mut Recorder,
+        rep: &mut StepReport,
+    ) -> Result<()> {
+        if !eng.is_metrics_rank() {
+            return Ok(());
+        }
+        let tf = t as f64;
+        let avg = self.sgda.ergodic_average();
+        if let Some(ev) = &self.gap_eval {
+            let gap = ev.gap(eng.op.as_ref(), &avg);
+            let dist = ev.dist_to_center(&avg);
+            rec.push("gap", tf, gap);
+            rec.push("dist", tf, dist);
+            rec.push("dist_last", tf, ev.dist_to_center(self.sgda.x()));
+            rep.gap = Some(gap);
+            rep.dist = Some(dist);
+        }
+        if eng.is_loopback() {
+            let res = eng.op.residual(&avg);
+            rec.push("residual", tf, res);
+            rep.residual = Some(res);
+        }
+        rec.push("bits_cum", tf, eng.traffic.bits_sent as f64);
+        Ok(())
+    }
+
+    fn finish(&mut self, eng: &mut RoundEngine, rec: &mut Recorder) -> Result<()> {
+        // Deliberately the seed baseline's single scalar: keeping the
+        // `--qsgda` CLI/bench output identical is part of the fold-in
+        // contract.
+        if eng.is_metrics_rank() {
+            rec.set_scalar("total_bits", eng.traffic.bits_sent as f64);
+        }
+        Ok(())
+    }
+
+    fn gamma(&self) -> f64 {
+        self.sgda.gamma()
+    }
+
+    fn replica(&self) -> Vec<f32> {
+        self.sgda.x().to_vec()
+    }
+
+    fn clone_box(&self) -> Box<dyn ExchangePolicy> {
+        Box::new(self.clone())
+    }
+}

@@ -1,0 +1,708 @@
+//! The steppable run API: one [`Session`] behind every runner family.
+//!
+//! A `Session` is a validated, resumable state machine for one Q-GenX (or
+//! QSGDA-baseline) run. Where the seed exposed only run-to-completion
+//! functions, a session can be observed mid-flight, stopped early,
+//! checkpointed, and embedded as a library:
+//!
+//! ```no_run
+//! use qgenx::config::ExperimentConfig;
+//! use qgenx::coordinator::Session;
+//!
+//! # fn main() -> qgenx::Result<()> {
+//! let cfg = ExperimentConfig::default();
+//! let mut session = Session::builder(cfg).build()?;
+//! while !session.done() {
+//!     let report = session.step()?;
+//!     if report.evaluated {
+//!         println!("t={} gap={:?} bits={}", report.t, report.gap, report.bits_cum);
+//!     }
+//! }
+//! let recorder = session.into_recorder();
+//! # let _ = recorder; Ok(())
+//! # }
+//! ```
+//!
+//! Internally the session drives one `ExchangePolicy` ([`super::policy`])
+//! (exact / gossip / local / SGDA — selected from the config) over the
+//! shared [`super::engine::RoundEngine`]. The legacy entry points
+//! ([`super::inline::run_experiment`], [`super::threaded::run_threaded`],
+//! [`super::inline::run_qsgda_baseline`]) are thin wrappers over this
+//! type with bit-identical trajectories and wire bytes (regression-tested
+//! against the pre-Session loops in `tests/session_parity.rs`).
+//! `docs/API.md` documents the full surface and the migration table.
+
+use super::engine::{Fabric, OracleFactory, RoundEngine};
+use super::policy::{ExactPolicy, ExchangePolicy, GossipPolicy, LocalPolicy, SgdaPolicy};
+use crate::config::ExperimentConfig;
+use crate::error::{Error, Result};
+use crate::metrics::Recorder;
+use crate::net::AllGather;
+use crate::oracle::{Oracle, Operator};
+use crate::topo::{build_collective, Collective, Topology};
+use std::sync::Arc;
+
+/// Algorithm driven by the session: the paper's Q-GenX template (exact /
+/// gossip / local families per the config) or the QSGDA baseline.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Algorithm {
+    #[default]
+    QGenX,
+    /// QSGDA (Beznosikov et al. 2022), the Figure-4 comparator — an
+    /// algorithm policy over the same engine, accounted full-mesh.
+    Sgda,
+}
+
+/// Observer verdict after each step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Control {
+    Continue,
+    /// Stop the run: the session finalizes its summary scalars over the
+    /// partial trajectory and refuses further steps.
+    Stop,
+}
+
+/// Streaming hook into a running session. Installed via
+/// [`SessionBuilder::observer`]; called after **every** iteration with the
+/// per-iteration [`StepReport`] (metric fields are `Some` only on eval
+/// steps), and once at finalization with the completed [`Recorder`].
+///
+/// Early stop: return [`Control::Stop`] to end the run after the current
+/// iteration — traffic accounting and summary scalars stay consistent
+/// with the truncated trajectory. In a transport-fabric group (threaded
+/// execution) a stop decision must be replicated deterministically on
+/// every rank, or the peers deadlock at the next barrier; gap-threshold
+/// observers belong on loopback sessions (rank 0 is the only rank that
+/// sees the gap).
+pub trait Observer: Send {
+    fn on_step(&mut self, report: &StepReport) -> Control {
+        let _ = report;
+        Control::Continue
+    }
+
+    /// Called once when the session finalizes (run completed or stopped).
+    fn on_finish(&mut self, rec: &Recorder) {
+        let _ = rec;
+    }
+}
+
+/// Convenience observer: stop once an eval step's gap falls below a
+/// threshold. (Loopback sessions; see the [`Observer`] docs.)
+pub struct StopAtGap(pub f64);
+
+impl Observer for StopAtGap {
+    fn on_step(&mut self, report: &StepReport) -> Control {
+        match report.gap {
+            Some(g) if g <= self.0 => Control::Stop,
+            _ => Control::Continue,
+        }
+    }
+}
+
+/// Per-iteration report returned by [`Session::step`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepReport {
+    /// Iteration just completed (1-based).
+    pub t: usize,
+    /// Configured total iterations.
+    pub iters: usize,
+    /// Adaptive step-size γ after this iteration.
+    pub gamma: f64,
+    /// Wire bits this iteration added (data + stat rounds).
+    pub round_bits: u64,
+    /// Cumulative wire bits.
+    pub bits_cum: u64,
+    /// Synchronous rounds completed so far.
+    pub rounds: u64,
+    /// Did a pooled stat exchange (level update) fire this iteration?
+    pub level_update: bool,
+    /// Local family: did this iteration end with a delta sync?
+    pub synced: bool,
+    /// Was this an eval step (gap/dist/... computed)?
+    pub evaluated: bool,
+    /// Restricted gap at the evaluation point (eval steps, metrics rank).
+    pub gap: Option<f64>,
+    /// Distance to the gap ball's center (eval steps, metrics rank).
+    pub dist: Option<f64>,
+    /// Operator residual at the evaluation point (eval steps, loopback).
+    pub residual: Option<f64>,
+    /// Consensus distance across replicas (gossip/local eval steps).
+    pub consensus: Option<f64>,
+    /// `true` once the configured final iteration has completed.
+    pub done: bool,
+    /// `true` when an observer stopped the run at this step.
+    pub stopped: bool,
+}
+
+/// A deep copy of a paused session's full state — algorithm iterates,
+/// compressor levels/codecs/RNGs, oracle noise streams, traffic and
+/// recorder — from which [`Session::resume`] continues **bit-for-bit**
+/// (deterministic series and wire accounting; measured wall-clock times
+/// are exempt). Loopback sessions only: a transport rank cannot be
+/// meaningfully checkpointed without its peer group.
+pub struct Checkpoint {
+    cfg: ExperimentConfig,
+    eng: RoundEngine,
+    policy: Box<dyn ExchangePolicy>,
+    rec: Recorder,
+    t: usize,
+    finalized: bool,
+    stopped: bool,
+}
+
+/// Builder for [`Session`]: configure once, validate once.
+pub struct SessionBuilder {
+    cfg: ExperimentConfig,
+    algorithm: Algorithm,
+    observers: Vec<Box<dyn Observer>>,
+    oracle_factory: Option<Box<OracleFactory>>,
+    collective: Option<Arc<dyn Collective>>,
+    transport: Option<(Arc<AllGather>, usize)>,
+}
+
+impl SessionBuilder {
+    /// Select the driven algorithm (default: the config's Q-GenX family).
+    pub fn algorithm(mut self, algorithm: Algorithm) -> Self {
+        self.algorithm = algorithm;
+        self
+    }
+
+    /// Install a streaming [`Observer`] (repeatable).
+    pub fn observer(mut self, obs: Box<dyn Observer>) -> Self {
+        self.observers.push(obs);
+        self
+    }
+
+    /// Override the per-rank oracle construction (defaults to the config's
+    /// noise model with the seed's per-worker seed derivation).
+    pub fn oracle<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(usize, Arc<dyn Operator>, &ExperimentConfig) -> Result<Box<dyn Oracle>>
+            + Send
+            + Sync
+            + 'static,
+    {
+        self.oracle_factory = Some(Box::new(factory));
+        self
+    }
+
+    /// Override the exchange collective (defaults to the one built from
+    /// the `[topo]` table; the QSGDA baseline defaults to full mesh).
+    pub fn collective(mut self, collective: Arc<dyn Collective>) -> Self {
+        self.collective = Some(collective);
+        self
+    }
+
+    /// Attach this session as rank `rank` of a `K`-thread transport group
+    /// (the threaded execution mode): real encoded bytes move through the
+    /// shared [`AllGather`] barrier. Every rank of the group must build a
+    /// session against the same transport and step in lockstep —
+    /// [`super::threaded::run_threaded`] is the packaged form.
+    pub fn transport(mut self, transport: Arc<AllGather>, rank: usize) -> Self {
+        self.transport = Some((transport, rank));
+        self
+    }
+
+    /// Validate the configuration and construct the steppable session.
+    pub fn build(self) -> Result<Session> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        if let Some((transport, rank)) = &self.transport {
+            if transport.peers() != cfg.workers {
+                return Err(Error::Coordinator(format!(
+                    "transport group has {} peers but cfg.workers = {}",
+                    transport.peers(),
+                    cfg.workers
+                )));
+            }
+            if *rank >= cfg.workers {
+                return Err(Error::Coordinator(format!("rank {rank} out of range")));
+            }
+        }
+        // The QSGDA baseline ignores `[topo]` (always full-mesh-accounted,
+        // as the seed's run_qsgda_baseline was); Q-GenX builds the
+        // configured topology.
+        let (topo, collective) = match (&self.collective, self.algorithm) {
+            (Some(c), _) => (c.topology(), c.clone()),
+            (None, Algorithm::Sgda) => {
+                (Topology::FullMesh, build_collective(Topology::FullMesh, cfg.workers)?)
+            }
+            (None, Algorithm::QGenX) => {
+                let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
+                (topo, build_collective(topo, cfg.workers)?)
+            }
+        };
+        let fabric = match self.transport {
+            Some((transport, rank)) => Fabric::Transport { transport, rank },
+            None => Fabric::Loopback,
+        };
+        let eng = RoundEngine::new(&cfg, fabric, collective, self.oracle_factory.as_deref())?;
+        let policy: Box<dyn ExchangePolicy> = match self.algorithm {
+            Algorithm::Sgda => Box::new(SgdaPolicy::new(&cfg, &eng)),
+            Algorithm::QGenX => {
+                if cfg.local.steps > 1 {
+                    Box::new(LocalPolicy::new(&cfg, &eng))
+                } else if !topo.is_exact() {
+                    Box::new(GossipPolicy::new(&cfg, &eng))
+                } else {
+                    Box::new(ExactPolicy::new(&cfg, &eng))
+                }
+            }
+        };
+        Ok(Session {
+            cfg,
+            eng,
+            policy,
+            rec: Recorder::new(),
+            observers: self.observers,
+            t: 0,
+            finalized: false,
+            stopped: false,
+        })
+    }
+}
+
+/// A steppable, observable, checkpointable run (see module docs).
+pub struct Session {
+    cfg: ExperimentConfig,
+    eng: RoundEngine,
+    policy: Box<dyn ExchangePolicy>,
+    rec: Recorder,
+    observers: Vec<Box<dyn Observer>>,
+    /// Completed iterations.
+    t: usize,
+    finalized: bool,
+    stopped: bool,
+}
+
+impl Session {
+    /// Start configuring a session.
+    pub fn builder(cfg: ExperimentConfig) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            algorithm: Algorithm::QGenX,
+            observers: Vec::new(),
+            oracle_factory: None,
+            collective: None,
+            transport: None,
+        }
+    }
+
+    /// Completed iterations.
+    pub fn iteration(&self) -> usize {
+        self.t
+    }
+
+    /// Configured total iterations.
+    pub fn iters(&self) -> usize {
+        self.cfg.iters
+    }
+
+    /// Has the run completed (or been stopped by an observer)?
+    pub fn done(&self) -> bool {
+        self.stopped || self.t >= self.cfg.iters
+    }
+
+    /// The metrics recorded so far.
+    pub fn recorder(&self) -> &Recorder {
+        &self.rec
+    }
+
+    /// This endpoint's current replica state (the threaded replication
+    /// invariant compares these; sync bases for the local family).
+    pub fn replica(&self) -> Vec<f32> {
+        self.policy.replica()
+    }
+
+    /// Advance one iteration of Algorithm 1 (stat round if due, base /
+    /// half-step dual exchanges or local segment + delta sync, state
+    /// update, eval-step metrics) and report it. Errors once [`Self::done`].
+    pub fn step(&mut self) -> Result<StepReport> {
+        if self.done() {
+            return Err(Error::Coordinator(format!(
+                "session already {} at t = {}",
+                if self.stopped { "stopped" } else { "completed" },
+                self.t
+            )));
+        }
+        let t = self.t + 1;
+        let last = t == self.cfg.iters;
+        let mut rep = StepReport { t, iters: self.cfg.iters, ..StepReport::default() };
+        let bits_before = self.eng.traffic.bits_sent;
+        self.policy.step(t, last, &mut self.eng, &mut self.rec, &mut rep)?;
+        let eval_now = t % self.cfg.eval_every.max(1) == 0 || last;
+        if eval_now {
+            self.policy.eval(t, &mut self.eng, &mut self.rec, &mut rep)?;
+            rep.evaluated = true;
+        }
+        self.t = t;
+        rep.gamma = self.policy.gamma();
+        rep.round_bits = self.eng.traffic.bits_sent - bits_before;
+        rep.bits_cum = self.eng.traffic.bits_sent;
+        rep.rounds = self.eng.traffic.rounds;
+        rep.done = last;
+        let mut stop = false;
+        for obs in self.observers.iter_mut() {
+            if obs.on_step(&rep) == Control::Stop {
+                stop = true;
+            }
+        }
+        if stop && !last {
+            self.stopped = true;
+            rep.stopped = true;
+        }
+        if last || self.stopped {
+            self.finalize()?;
+        }
+        Ok(rep)
+    }
+
+    /// Run until iteration `target` (clamped to the configured total),
+    /// the configured end, or an observer stop — whichever comes first.
+    /// Returns the last step's report (`None` if no step ran).
+    pub fn run_to(&mut self, target: usize) -> Result<Option<StepReport>> {
+        let target = target.min(self.cfg.iters);
+        let mut last = None;
+        while self.t < target && !self.stopped {
+            last = Some(self.step()?);
+        }
+        Ok(last)
+    }
+
+    /// Run to completion and return the recorder — the one-shot form the
+    /// legacy wrappers use.
+    pub fn run(mut self) -> Result<Recorder> {
+        self.run_to(self.cfg.iters)?;
+        self.finalize()?;
+        Ok(self.rec)
+    }
+
+    /// Emit the end-of-run summary scalars over the trajectory so far and
+    /// notify observers. Idempotent; called automatically at the last
+    /// iteration, on an observer stop, and by [`Self::into_recorder`].
+    fn finalize(&mut self) -> Result<()> {
+        if self.finalized {
+            return Ok(());
+        }
+        self.policy.finish(&mut self.eng, &mut self.rec)?;
+        self.finalized = true;
+        for obs in self.observers.iter_mut() {
+            obs.on_finish(&self.rec);
+        }
+        Ok(())
+    }
+
+    /// Consume the session, finalizing if needed, and yield the recorder.
+    pub fn into_recorder(mut self) -> Recorder {
+        // Finalization over a partial run only emits summary scalars; it
+        // cannot fail in practice (no wire rounds), but keep the recorder
+        // usable either way.
+        let _ = self.finalize();
+        self.rec
+    }
+
+    /// Deep-copy the full run state for a later bit-for-bit [`Self::resume`].
+    /// Loopback sessions only (observers are not captured — re-attach them
+    /// on the resumed session).
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        if !self.eng.is_loopback() {
+            return Err(Error::Coordinator(
+                "checkpoint requires an in-process (loopback) session; a transport rank \
+                 cannot be checkpointed without its peer group"
+                    .into(),
+            ));
+        }
+        Ok(Checkpoint {
+            cfg: self.cfg.clone(),
+            eng: self.eng.clone(),
+            policy: self.policy.clone_box(),
+            rec: self.rec.clone(),
+            t: self.t,
+            finalized: self.finalized,
+            stopped: self.stopped,
+        })
+    }
+
+    /// Rebuild a session from a [`Checkpoint`]; the continuation matches an
+    /// uninterrupted run bit-for-bit on every deterministic series and on
+    /// the wire accounting.
+    pub fn resume(cp: Checkpoint) -> Session {
+        Session {
+            cfg: cp.cfg,
+            eng: cp.eng,
+            policy: cp.policy,
+            rec: cp.rec,
+            observers: Vec::new(),
+            t: cp.t,
+            finalized: cp.finalized,
+            stopped: cp.stopped,
+        }
+    }
+
+    /// Attach an observer to a running (e.g. freshly resumed) session.
+    pub fn observe(&mut self, obs: Box<dyn Observer>) {
+        self.observers.push(obs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::inline::run_experiment;
+    use crate::coordinator::threaded::run_threaded;
+
+    fn base_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 3;
+        cfg.iters = 200;
+        cfg.eval_every = 50;
+        cfg.problem.kind = "quadratic".into();
+        cfg.problem.dim = 12;
+        cfg.problem.noise = "absolute".into();
+        cfg.problem.sigma = 0.3;
+        cfg.quant.update_every = 60;
+        cfg
+    }
+
+    fn family_cfg(family: &str) -> ExperimentConfig {
+        let mut cfg = base_cfg();
+        match family {
+            "exact" => {}
+            "gossip" => {
+                cfg.workers = 6;
+                cfg.topo.kind = "gossip".into();
+                cfg.topo.degree = 2;
+            }
+            "local" => cfg.local.steps = 4,
+            other => panic!("unknown family {other}"),
+        }
+        cfg
+    }
+
+    #[test]
+    fn stepping_matches_one_shot_run_bit_for_bit() {
+        for family in ["exact", "gossip", "local"] {
+            let cfg = family_cfg(family);
+            let whole = run_experiment(&cfg).unwrap();
+            let mut session = Session::builder(cfg).build().unwrap();
+            while !session.done() {
+                session.step().unwrap();
+            }
+            let stepped = session.into_recorder();
+            assert_eq!(
+                whole.get("gap").unwrap().ys(),
+                stepped.get("gap").unwrap().ys(),
+                "{family}: stepped trajectory must match the one-shot run"
+            );
+            assert_eq!(whole.scalar("total_bits"), stepped.scalar("total_bits"), "{family}");
+            assert_eq!(whole.scalar("rounds"), stepped.scalar("rounds"), "{family}");
+        }
+    }
+
+    #[test]
+    fn step_reports_stream_per_iteration_state() {
+        let cfg = base_cfg();
+        let mut session = Session::builder(cfg.clone()).build().unwrap();
+        let r1 = session.step().unwrap();
+        assert_eq!(r1.t, 1);
+        assert!(!r1.evaluated && r1.gap.is_none());
+        assert!(r1.round_bits > 0 && r1.bits_cum == r1.round_bits);
+        assert!(r1.gamma > 0.0);
+        let mut evals = 0;
+        let mut last = r1;
+        while !session.done() {
+            last = session.step().unwrap();
+            if last.evaluated {
+                evals += 1;
+                assert!(last.gap.is_some() && last.residual.is_some());
+            }
+        }
+        assert!(last.done);
+        assert_eq!(evals, cfg.iters / cfg.eval_every);
+        assert_eq!(last.bits_cum, session.recorder().scalar("total_bits").unwrap() as u64);
+        // stepping past the end is a contract violation
+        assert!(session.step().is_err());
+    }
+
+    #[test]
+    fn observer_early_stop_truncates_consistently() {
+        // Threshold chosen to trip on an early eval step.
+        let cfg = base_cfg();
+        let full = run_experiment(&cfg).unwrap();
+        let first_gap = full.get("gap").unwrap().points[0].1;
+        let mut session =
+            Session::builder(cfg.clone()).observer(Box::new(StopAtGap(first_gap))).build().unwrap();
+        while !session.done() {
+            session.step().unwrap();
+        }
+        assert!(session.iteration() < cfg.iters, "must stop before the end");
+        assert_eq!(session.iteration(), cfg.eval_every, "stops at the first eval step");
+        let rec = session.into_recorder();
+        // Fewer rounds recorded than the full run, and the accounting is
+        // consistent: the rounds/bits scalars describe the truncated
+        // trajectory exactly.
+        assert!(rec.scalar("rounds").unwrap() < full.scalar("rounds").unwrap());
+        assert_eq!(rec.get("gap").unwrap().len(), 1);
+        assert_eq!(
+            rec.scalar("total_bits").unwrap(),
+            rec.get("bits_cum").unwrap().last().unwrap(),
+            "summary scalars must describe the truncated run"
+        );
+        // The partial trajectory is a prefix of the full run's.
+        assert_eq!(rec.get("gap").unwrap().ys()[0], full.get("gap").unwrap().ys()[0]);
+    }
+
+    #[test]
+    fn observer_early_stop_works_on_all_three_families() {
+        for family in ["exact", "gossip", "local"] {
+            let cfg = family_cfg(family);
+            let mut session = Session::builder(cfg.clone())
+                .observer(Box::new(StopAtGap(f64::INFINITY)))
+                .build()
+                .unwrap();
+            while !session.done() {
+                session.step().unwrap();
+            }
+            assert_eq!(
+                session.iteration(),
+                cfg.eval_every,
+                "{family}: infinite threshold stops at the first eval step"
+            );
+            let rec = session.into_recorder();
+            assert!(rec.scalar("total_bits").unwrap() > 0.0, "{family}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted_run_on_all_families() {
+        for family in ["exact", "gossip", "local"] {
+            let cfg = family_cfg(family);
+            let whole = run_experiment(&cfg).unwrap();
+
+            let mut first = Session::builder(cfg.clone()).build().unwrap();
+            first.run_to(cfg.iters / 2).unwrap();
+            let cp = first.checkpoint().unwrap();
+            drop(first);
+            let mut resumed = Session::resume(cp);
+            resumed.run_to(cfg.iters).unwrap();
+            let rec = resumed.into_recorder();
+
+            for series in ["gap", "dist", "bits_cum"] {
+                assert_eq!(
+                    whole.get(series).unwrap().ys(),
+                    rec.get(series).unwrap().ys(),
+                    "{family}/{series}: resumed run must match bit-for-bit"
+                );
+            }
+            if family != "exact" {
+                assert_eq!(
+                    whole.get("consensus_dist").unwrap().ys(),
+                    rec.get("consensus_dist").unwrap().ys(),
+                    "{family}: consensus series must match"
+                );
+            }
+            if family == "local" {
+                assert_eq!(
+                    whole.get("sync_drift").unwrap().ys(),
+                    rec.get("sync_drift").unwrap().ys(),
+                    "local: sync accounting must match"
+                );
+                assert_eq!(whole.scalar("syncs"), rec.scalar("syncs"));
+            }
+            assert_eq!(whole.scalar("total_bits"), rec.scalar("total_bits"), "{family}");
+            assert_eq!(whole.scalar("level_updates"), rec.scalar("level_updates"), "{family}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_covers_the_sgda_baseline_too() {
+        let cfg = base_cfg();
+        let whole = crate::coordinator::inline::run_qsgda_baseline(&cfg).unwrap();
+        let mut first = Session::builder(cfg.clone()).algorithm(Algorithm::Sgda).build().unwrap();
+        first.run_to(77).unwrap();
+        let mut resumed = Session::resume(first.checkpoint().unwrap());
+        resumed.run_to(cfg.iters).unwrap();
+        let rec = resumed.into_recorder();
+        assert_eq!(whole.get("gap").unwrap().ys(), rec.get("gap").unwrap().ys());
+        assert_eq!(whole.get("dist_last").unwrap().ys(), rec.get("dist_last").unwrap().ys());
+        assert_eq!(whole.scalar("total_bits"), rec.scalar("total_bits"));
+    }
+
+    #[test]
+    fn transport_sessions_refuse_checkpoint() {
+        let cfg = base_cfg();
+        let transport = AllGather::new(cfg.workers);
+        // Rank sessions block on the barrier, so exercise the refusal
+        // before any stepping (construction alone attaches the fabric).
+        let session =
+            Session::builder(cfg).transport(transport, 1).build().unwrap();
+        assert!(session.checkpoint().is_err());
+    }
+
+    #[test]
+    fn transport_builder_validates_group_size() {
+        let cfg = base_cfg(); // workers = 3
+        let transport = AllGather::new(2);
+        assert!(Session::builder(cfg.clone()).transport(transport, 0).build().is_err());
+        let transport = AllGather::new(3);
+        assert!(Session::builder(cfg).transport(transport, 7).build().is_err());
+    }
+
+    #[test]
+    fn unified_stat_schedule_keeps_inline_and_threaded_round_counts_equal() {
+        // The satellite bugfix's cross-coordinator parity contract: an
+        // adaptive-config fp32 run must pay the same (zero) stat rounds in
+        // both execution modes, and an adaptive quantized run the same
+        // positive number.
+        for mode_quantized in [false, true] {
+            let mut cfg = base_cfg();
+            cfg.iters = 150;
+            if !mode_quantized {
+                cfg.quant.mode = crate::config::QuantMode::Fp32;
+            }
+            let inline_rec = run_experiment(&cfg).unwrap();
+            let threaded = run_threaded(&cfg).unwrap();
+            assert_eq!(
+                inline_rec.scalar("rounds").unwrap(),
+                threaded.recorder.scalar("rounds").unwrap(),
+                "quantized={mode_quantized}: stat-round schedules must agree across coordinators"
+            );
+            assert_eq!(
+                inline_rec.scalar("level_updates").unwrap(),
+                threaded.recorder.scalar("level_updates").unwrap(),
+                "quantized={mode_quantized}"
+            );
+        }
+    }
+
+    #[test]
+    fn custom_oracle_factory_is_honored() {
+        use crate::oracle::ExactOracle;
+        let mut cfg = base_cfg();
+        cfg.iters = 40;
+        cfg.eval_every = 20;
+        // Noise-free oracles through the factory hook: the run becomes
+        // variance-free apart from quantization noise.
+        let rec = Session::builder(cfg)
+            .oracle(|_rank, op, _cfg| Ok(Box::new(ExactOracle::new(op))))
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(rec.get("gap").unwrap().last().unwrap().is_finite());
+    }
+
+    #[test]
+    fn run_to_pauses_and_continues_in_place() {
+        let cfg = base_cfg();
+        let whole = run_experiment(&cfg).unwrap();
+        let mut s = Session::builder(cfg.clone()).build().unwrap();
+        s.run_to(50).unwrap();
+        assert_eq!(s.iteration(), 50);
+        assert!(!s.done());
+        s.run_to(usize::MAX).unwrap(); // clamped to cfg.iters
+        assert!(s.done());
+        let rec = s.into_recorder();
+        assert_eq!(whole.get("gap").unwrap().ys(), rec.get("gap").unwrap().ys());
+    }
+}

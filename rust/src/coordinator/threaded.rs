@@ -1,54 +1,48 @@
-//! Threaded coordinator: `K` real worker threads, replicated Q-GenX state,
-//! actual encoded bytes through the [`AllGather`] transport, delivered over
-//! the configured [`Topology`] by a [`Collective`].
+//! Threaded coordinator: `K` real worker threads, replicated state,
+//! actual encoded bytes through the [`AllGather`] transport, delivered
+//! over the configured topology.
+//!
+//! [`run_threaded`] is a thin wrapper over [`crate::coordinator::Session`]:
+//! it spawns one **transport-fabric session per rank** against a shared
+//! [`AllGather`] group, steps each to completion, and checks the
+//! replication invariant. Every rank runs the *same*
+//! `ExchangePolicy`/`RoundEngine` code as the inline wrapper — the
+//! execution mode is a fabric choice, not a second implementation.
 //!
 //! Replication invariant (exact topologies — mesh/star/ring/hierarchical):
-//! every worker decodes the *same* payload set in the same rank order, runs
-//! the same deterministic state update, and pools the same sufficient
-//! statistics at level-update steps — so all replicas of `QGenX`, `Levels`
-//! and the Huffman tables stay bit-identical without a parameter server.
-//! The invariant is asserted at the end of every run by comparing replica
-//! iterates across workers.
+//! every worker decodes the *same* payload set in the same rank order,
+//! runs the same deterministic state update, and pools the same sufficient
+//! statistics at level-update steps — so all replicas of `QGenX`, the
+//! levels and the Huffman tables stay bit-identical without a parameter
+//! server. Asserted at the end of every run by comparing
+//! [`Session::replica`] across workers (the local family reports sync
+//! bases — the raw iterate can sit an origin-shift rounding ulp off the
+//! consensus point; see `algo::local`).
 //!
-//! Gossip topologies are *inexact by design*: each worker averages dual
-//! vectors over its closed graph neighborhood only, replicas drift, and the
-//! run records [`crate::metrics::consensus_distance`] instead of asserting
-//! replica equality (series via an out-of-band diagnostic exchange at eval
-//! steps — not billed to traffic — plus a final scalar). Codec/level state
-//! stays global (see `coordinator::mod` docs), so every worker can still
-//! decode every neighbor.
+//! Gossip topologies are *inexact by design*: replicas drift, and the run
+//! records [`crate::metrics::consensus_distance`] instead of asserting
+//! replica equality (series via the engine's out-of-band diagnostic
+//! exchange at eval steps — not billed to traffic — plus a final scalar).
 //!
-//! Local-steps mode (`local.steps ≥ 2`) swaps the per-iteration protocol
-//! for the local worker loop (`worker_local_loop`): `H` private
-//! extra-gradient iterations, then
-//! one quantized model-delta exchange and a resync by averaging. Under
-//! exact topologies replicas drift *within* a segment but re-agree on a
-//! bit-identical consensus point at every sync; the end-of-run invariant
-//! compares those sync bases (the raw iterate can sit an origin-shift
-//! rounding ulp off the consensus point — see `algo::local`). Under gossip
-//! the delta averaging is neighborhood-local and replicas drift
-//! persistently.
+//! Fault behavior: each rank session's engine holds a transport
+//! [`crate::net::PoisonGuard`]; if one worker panics or errors mid-round
+//! its peers' exchanges error out instead of deadlocking, and
+//! `run_threaded` surfaces the failure.
 //!
-//! Fault behavior: each worker holds a transport
-//! [`crate::net::PoisonGuard`]; if one
-//! worker panics mid-round its peers' `exchange` calls error out instead of
-//! deadlocking, and `run_threaded` surfaces the failure.
+//! Direct `Session` use in threaded form (observers on chosen ranks,
+//! partial stepping) is available through
+//! [`crate::coordinator::SessionBuilder::transport`] — see `docs/API.md`
+//! for the lockstep rules.
 
-use super::pipeline::Compressor;
-use super::schedule::UpdateSchedule;
-use crate::algo::{LocalQGenX, QGenX};
+use super::session::Session;
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
-use crate::metrics::{consensus_distance, Recorder, SyncAccounting};
-use crate::net::{AllGather, NetModel, TrafficStats};
-use crate::oracle::{build_operator, build_oracle, GapEvaluator};
-use crate::topo::{build_collective, Collective, LinkTraffic, Topology};
-use crate::util::Rng;
-use std::sync::Arc;
-use std::time::Instant;
+use crate::metrics::{consensus_distance, Recorder};
+use crate::net::AllGather;
+use crate::topo::Topology;
 
-/// Outcome of one threaded run: rank-0 recorder plus the final iterate of
-/// every replica (for the replication invariant check and tests).
+/// Outcome of one threaded run: rank-0 recorder plus the final replica
+/// state of every worker (for the replication invariant check and tests).
 pub struct ThreadedRun {
     pub recorder: Recorder,
     pub replicas: Vec<Vec<f32>>,
@@ -56,45 +50,29 @@ pub struct ThreadedRun {
 
 /// Run Algorithm 1 on `K` OS threads over the configured topology.
 /// Functionally equivalent to [`super::inline::run_experiment`] modulo RNG
-/// stream interleaving.
+/// stream interleaving (the transport accounts whole wire bytes where the
+/// inline encoder reports exact code bits — the seed's split, preserved).
 pub fn run_threaded(cfg: &ExperimentConfig) -> Result<ThreadedRun> {
     cfg.validate()?;
     let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
-    let collective = build_collective(topo, cfg.workers)?;
-    let op = build_operator(&cfg.problem, cfg.seed)?;
-    let d = op.dim();
     let k = cfg.workers;
     let transport = AllGather::new(k);
-    let net = NetModel::from_config(&cfg.net);
-    let schedule = if cfg.quant.adapts() {
-        UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
-    } else {
-        UpdateSchedule::never()
-    };
 
     let handles: Vec<std::thread::JoinHandle<Result<(Recorder, Vec<f32>)>>> = (0..k)
         .map(|rank| {
-            let op = op.clone();
             let cfg = cfg.clone();
             let transport = transport.clone();
-            let collective = collective.clone();
             std::thread::Builder::new()
                 .name(format!("qgenx-worker-{rank}"))
                 .spawn(move || {
-                    let out = if cfg.local.steps > 1 {
-                        worker_local_loop(rank, &cfg, op, transport.clone(), collective, net, d)
-                    } else {
-                        worker_loop(
-                            rank,
-                            &cfg,
-                            op,
-                            transport.clone(),
-                            collective,
-                            net,
-                            schedule,
-                            d,
-                        )
-                    };
+                    let out = (|| -> Result<(Recorder, Vec<f32>)> {
+                        let mut session = Session::builder(cfg.clone())
+                            .transport(transport.clone(), rank)
+                            .build()?;
+                        session.run_to(cfg.iters)?;
+                        let replica = session.replica();
+                        Ok((session.into_recorder(), replica))
+                    })();
                     // An Err return (codec/oracle failure) must release the
                     // peers just like a panic does — otherwise they block at
                     // the barrier forever waiting for this worker's deposit.
@@ -118,7 +96,7 @@ pub fn run_threaded(cfg: &ExperimentConfig) -> Result<ThreadedRun> {
     }
     let mut recorder = recorders.swap_remove(0);
     if topo.is_exact() {
-        // Replication invariant: all replicas ended at the same iterate.
+        // Replication invariant: all replicas ended at the same state.
         for r in 1..k {
             if replicas[r] != replicas[0] {
                 return Err(Error::Coordinator(format!(
@@ -130,338 +108,6 @@ pub fn run_threaded(cfg: &ExperimentConfig) -> Result<ThreadedRun> {
         recorder.set_scalar("consensus_dist", consensus_distance(&replicas));
     }
     Ok(ThreadedRun { recorder, replicas })
-}
-
-/// Out-of-band diagnostic allgather at eval steps: every rank contributes
-/// `[X_t ‖ X̄]` as raw f32 (deliberately NOT billed to traffic — it exists
-/// so rank 0 can evaluate cross-replica metrics, not as protocol traffic);
-/// every rank must call it at the same step so the barrier matches.
-/// Returns `Some((per-rank iterates, mean ergodic average))` on rank 0,
-/// `None` elsewhere.
-fn diag_exchange(
-    rank: usize,
-    k: usize,
-    d: usize,
-    transport: &AllGather,
-    x_world: &[f32],
-    ergodic: &[f32],
-) -> Result<Option<(Vec<Vec<f32>>, Vec<f32>)>> {
-    let mut diag = Vec::with_capacity(8 * d);
-    for &x in x_world.iter().chain(ergodic.iter()) {
-        diag.extend_from_slice(&x.to_le_bytes());
-    }
-    let got = transport.exchange(rank, diag)?;
-    if rank != 0 {
-        return Ok(None);
-    }
-    let mut iterates = Vec::with_capacity(k);
-    let mut mean_avg = vec![0.0f32; d];
-    for p in &got {
-        let f: Vec<f32> = p
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        if f.len() != 2 * d {
-            return Err(Error::Coordinator("bad diagnostic payload".into()));
-        }
-        iterates.push(f[..d].to_vec());
-        for (m, &x) in mean_avg.iter_mut().zip(f[d..].iter()) {
-            *m += x / k as f32;
-        }
-    }
-    Ok(Some((iterates, mean_avg)))
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker_loop(
-    rank: usize,
-    cfg: &ExperimentConfig,
-    op: Arc<dyn crate::oracle::Operator>,
-    transport: Arc<AllGather>,
-    collective: Arc<dyn Collective>,
-    net: NetModel,
-    schedule: UpdateSchedule,
-    d: usize,
-) -> Result<(Recorder, Vec<f32>)> {
-    // A panic anywhere below must not strand peers at the barrier.
-    let _poison = transport.guard();
-    let k = cfg.workers;
-    let exact = collective.topology().is_exact();
-    // Ranks whose payloads this worker consumes (all K for exact
-    // topologies; the closed neighborhood under gossip).
-    let recv_ranks = collective.recipients(rank);
-    let k_local = recv_ranks.len();
-    let root = Rng::seed_from(cfg.seed);
-    let mut oracle = build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (rank as u64 + 1) * 0x9e37)?;
-    let mut comp = Compressor::from_config(&cfg.quant, root.fork(rank as u64 + 101))?;
-    let mut state = QGenX::new(
-        cfg.algo.variant,
-        &vec![0.0f32; d],
-        k_local,
-        cfg.algo.gamma0,
-        cfg.algo.adaptive_step,
-    );
-    let gap_eval = if rank == 0 { GapEvaluator::around_solution(op.as_ref(), 2.0) } else { None };
-    let mut traffic = TrafficStats::default();
-    let mut links = LinkTraffic::new();
-    let mut rec = Recorder::new();
-    let mut g_buf = vec![0.0f32; d];
-    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
-
-    // One exchange round: contribute my wire bytes through the collective
-    // and decode the payloads it logically delivers into `decoded`
-    // (sender-indexed). Callers read `decoded` directly when exact —
-    // zero-copy, as the seed did — and take the `recv_ranks` view under
-    // gossip.
-    let exchange = |payload: Vec<u8>,
-                    comp: &Compressor,
-                    decoded: &mut Vec<Vec<f32>>,
-                    traffic: &mut TrafficStats,
-                    links: &mut LinkTraffic|
-     -> Result<()> {
-        let (recv, bits) = collective.exchange(&transport, rank, payload)?;
-        collective.record_round(&bits, &net, traffic);
-        if rank == 0 {
-            links.record(collective.as_ref(), &bits);
-        }
-        for (sender, bytes) in &recv {
-            comp.decompress(bytes, &mut decoded[*sender])?;
-        }
-        Ok(())
-    };
-    let neighborhood_view = |decoded: &[Vec<f32>]| -> Vec<Vec<f32>> {
-        recv_ranks.iter().map(|&r| decoded[r].clone()).collect()
-    };
-
-    for t in 1..=cfg.iters {
-        // (1) stat exchange + synchronized level update — always global
-        //     (full-mesh), so codecs stay identical on every worker.
-        if schedule.is_update(t) && comp.is_quantized() {
-            let payload = comp.stats_payload();
-            let got = transport.exchange(rank, payload)?;
-            let bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
-            traffic.record_allgather(&bits, &net);
-            let rank_order: Vec<&[u8]> = got.iter().map(|p| p.as_slice()).collect();
-            comp.update_levels(&rank_order)?;
-        }
-
-        // (2) base exchange
-        let base_vecs: Vec<Vec<f32>> = if let Some(xq) = state.base_query() {
-            let t0 = Instant::now();
-            oracle.sample(&xq, &mut g_buf);
-            let (bytes, _) = comp.compress(&g_buf)?;
-            traffic.add_compute(t0.elapsed().as_secs_f64());
-            exchange(bytes, &comp, &mut decoded, &mut traffic, &mut links)?;
-            if exact { decoded.clone() } else { neighborhood_view(&decoded) }
-        } else {
-            Vec::new()
-        };
-
-        // (3) extrapolate (identical on every replica when exact; the
-        //     replica's own neighborhood mean under gossip)
-        let x_half = state.extrapolate(&base_vecs)?;
-
-        // (4) half-step exchange
-        let t0 = Instant::now();
-        oracle.sample(&x_half, &mut g_buf);
-        let (bytes, _) = comp.compress(&g_buf)?;
-        traffic.add_compute(t0.elapsed().as_secs_f64());
-        exchange(bytes, &comp, &mut decoded, &mut traffic, &mut links)?;
-        if exact {
-            state.update(&decoded)?;
-        } else {
-            state.update(&neighborhood_view(&decoded))?;
-        }
-
-        // (5) evaluation
-        let eval_now = t % cfg.eval_every.max(1) == 0 || t == cfg.iters;
-        if eval_now && !exact {
-            if let Some((iterates, mean_avg)) = diag_exchange(
-                rank,
-                k,
-                d,
-                &transport,
-                &state.x_world(),
-                &state.ergodic_average(),
-            )? {
-                rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
-                if let Some(ev) = &gap_eval {
-                    rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
-                    rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
-                }
-            }
-        } else if eval_now && rank == 0 {
-            let avg = state.ergodic_average();
-            if let Some(ev) = &gap_eval {
-                rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
-                rec.push("dist", t as f64, ev.dist_to_center(&avg));
-            }
-        }
-        if eval_now && rank == 0 {
-            rec.push("gamma", t as f64, state.gamma());
-            rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
-            rec.push("sim_time_cum", t as f64, traffic.total_time());
-            comp.record_layer_series(&mut rec, t as f64);
-        }
-    }
-    if rank == 0 {
-        rec.set_scalar("total_bits", traffic.bits_sent as f64);
-        rec.set_scalar("rounds", traffic.rounds as f64);
-        rec.set_scalar("level_updates", comp.updates() as f64);
-        rec.set_scalar("sim_net_time", traffic.sim_net_time);
-        rec.set_scalar("compute_time", traffic.compute_time);
-        rec.set_scalar("wire_links", links.links() as f64);
-        rec.set_scalar("max_link_bytes", links.max_link_bytes());
-        comp.emit_layer_scalars(&mut rec);
-    }
-    Ok((rec, state.x_world()))
-}
-
-/// Local-steps worker loop (`local.steps = H ≥ 2`): `H` private
-/// extra-gradient iterations per communication round, then a quantized
-/// **model-delta** exchange over the collective and a resync onto the
-/// (neighborhood-)averaged delta. The threaded twin of
-/// [`super::inline::run_experiment`]'s local runner; see that runner's
-/// docs for the algorithm and the `coordinator::mod` docs for the
-/// exact / gossip / local runner split.
-///
-/// Diagnostics: the `sync_drift` series is computed on rank 0 from the
-/// *decoded* deltas it already holds (no extra barrier) — under exact
-/// topologies that is the global pre-averaging drift up to quantization
-/// noise; under gossip it is rank 0's neighborhood view.
-#[allow(clippy::too_many_arguments)]
-fn worker_local_loop(
-    rank: usize,
-    cfg: &ExperimentConfig,
-    op: Arc<dyn crate::oracle::Operator>,
-    transport: Arc<AllGather>,
-    collective: Arc<dyn Collective>,
-    net: NetModel,
-    d: usize,
-) -> Result<(Recorder, Vec<f32>)> {
-    // A panic anywhere below must not strand peers at the barrier.
-    let _poison = transport.guard();
-    let k = cfg.workers;
-    let h = cfg.local.steps;
-    let recv_ranks = collective.recipients(rank);
-    let root = Rng::seed_from(cfg.seed);
-    let mut oracle = build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (rank as u64 + 1) * 0x9e37)?;
-    let mut comp = Compressor::from_config(&cfg.quant, root.fork(rank as u64 + 101))?;
-    let mut rep = LocalQGenX::new(
-        cfg.algo.variant,
-        &vec![0.0f32; d],
-        cfg.algo.gamma0,
-        cfg.algo.adaptive_step,
-    );
-    let gap_eval = if rank == 0 { GapEvaluator::around_solution(op.as_ref(), 2.0) } else { None };
-    let adaptive = cfg.quant.adapts() && comp.is_quantized();
-    let update_every = cfg.quant.update_every;
-    // Same early-warmup due point as the inline local runner (and, in
-    // spirit, the per-step runners' UpdateSchedule) — deterministic in t,
-    // so every rank fires the stat barrier at the same syncs.
-    let mut next_stat_due = update_every.min(10);
-    let mut traffic = TrafficStats::default();
-    let mut links = LinkTraffic::new();
-    let mut rec = Recorder::new();
-    let mut sync_acc = SyncAccounting::new();
-    let mut g_buf = vec![0.0f32; d];
-    let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
-
-    for t in 1..=cfg.iters {
-        // (1) One private extra-gradient iteration — no wire.
-        let t0 = Instant::now();
-        rep.local_round(oracle.as_mut(), &mut g_buf)?;
-        traffic.add_compute(t0.elapsed().as_secs_f64());
-
-        // (2) Delta synchronization every H iterations (plus final).
-        if t % h == 0 || t == cfg.iters {
-            let t0 = Instant::now();
-            let delta = rep.delta();
-            let (bytes, _) = comp.compress(&delta)?;
-            traffic.add_compute(t0.elapsed().as_secs_f64());
-            let (recv, bits) = collective.exchange(&transport, rank, bytes)?;
-            let bits_before = traffic.bits_sent;
-            collective.record_round(&bits, &net, &mut traffic);
-            for (sender, payload) in &recv {
-                comp.decompress(payload, &mut decoded[*sender])?;
-            }
-            if rank == 0 {
-                links.record(collective.as_ref(), &bits);
-                // Drift of the decoded deltas == drift of the pre-averaging
-                // iterates (the common sync base cancels in the deviations).
-                let view: Vec<Vec<f32>> =
-                    recv_ranks.iter().map(|&r| decoded[r].clone()).collect();
-                sync_acc.record(
-                    &mut rec,
-                    t,
-                    consensus_distance(&view),
-                    traffic.bits_sent - bits_before,
-                );
-            }
-            let mut mean = vec![0.0f32; d];
-            for &w in &recv_ranks {
-                for (m, &x) in mean.iter_mut().zip(decoded[w].iter()) {
-                    *m += x / recv_ranks.len() as f32;
-                }
-            }
-            rep.resync(&mean)?;
-
-            // Control plane: global stat pooling at the first sync on or
-            // after each due point (identical schedule on all ranks).
-            if adaptive && update_every != 0 && t >= next_stat_due {
-                let payload = comp.stats_payload();
-                let got = transport.exchange(rank, payload)?;
-                let stat_bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
-                traffic.record_allgather(&stat_bits, &net);
-                let rank_order: Vec<&[u8]> = got.iter().map(|p| p.as_slice()).collect();
-                comp.update_levels(&rank_order)?;
-                next_stat_due = t + update_every;
-            }
-        }
-
-        // (3) Evaluation via the shared out-of-band diagnostic exchange
-        //     (every rank calls it so the barrier matches; local mode
-        //     evaluates at the mean ergodic average across replicas, like
-        //     the inline local runner).
-        if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
-            if let Some((iterates, mean_avg)) = diag_exchange(
-                rank,
-                k,
-                d,
-                &transport,
-                &rep.x_world(),
-                &rep.ergodic_average(),
-            )? {
-                rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
-                if let Some(ev) = &gap_eval {
-                    rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
-                    rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
-                }
-                rec.push("gamma", t as f64, rep.gamma());
-                rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
-                rec.push("sim_time_cum", t as f64, traffic.total_time());
-                comp.record_layer_series(&mut rec, t as f64);
-            }
-        }
-    }
-    if rank == 0 {
-        rec.set_scalar("total_bits", traffic.bits_sent as f64);
-        rec.set_scalar("rounds", traffic.rounds as f64);
-        rec.set_scalar("level_updates", comp.updates() as f64);
-        rec.set_scalar("sim_net_time", traffic.sim_net_time);
-        rec.set_scalar("compute_time", traffic.compute_time);
-        rec.set_scalar("wire_links", links.links() as f64);
-        rec.set_scalar("max_link_bytes", links.max_link_bytes());
-        rec.set_scalar("local_steps", h as f64);
-        sync_acc.emit_scalars(&mut rec);
-        comp.emit_layer_scalars(&mut rec);
-    }
-    // Report the final *sync base* as this replica's end state: the run
-    // ends on a sync, the consensus point is computed by identical
-    // arithmetic on every rank (bit-identical under exact topologies — the
-    // replication invariant `run_threaded` asserts), whereas the raw
-    // iterate can sit an origin-shift rounding ulp off it.
-    Ok((rec, rep.sync_base().to_vec()))
 }
 
 #[cfg(test)]

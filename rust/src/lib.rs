@@ -32,15 +32,17 @@
 //! | [`algo`] | Q-GenX template (DA/DE/OptDA) with adaptive step-size, local-steps replica wrapper, baselines (EG, SGDA, QSGDA) |
 //! | [`net`] | simulated α-β transport, exact bit accounting |
 //! | [`topo`] | topology-aware collectives: full-mesh / star / ring / hierarchical / gossip exchange graphs, per-topology α-β cost, per-link traffic |
-//! | [`coordinator`] | leader/worker synchronous rounds (Algorithm 1); exact / gossip / local runner families |
+//! | [`coordinator`] | the steppable `Session` run API over the shared round engine (Algorithm 1); exact / gossip / local exchange policies + SGDA baseline; one-shot wrappers |
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
 //! | [`train`] | GAN / LM training drivers over the runtime |
 //! | [`metrics`] | time-series recorder, CSV emission |
 //! | [`benchkit`] | bench harness (no `criterion` offline) |
 //!
 //! User-facing references: `rust/README.md` (crate tour, scenario
-//! families, bench ↔ theorem map), `docs/CONFIG.md` (every TOML table and
-//! CLI flag), `docs/WIRE.md` (payload and stat wire formats).
+//! families, bench ↔ theorem map), `docs/API.md` (the Session run API:
+//! lifecycle, Observer contract, checkpoint/resume, migration table),
+//! `docs/CONFIG.md` (every TOML table and CLI flag), `docs/WIRE.md`
+//! (payload and stat wire formats).
 
 pub mod algo;
 pub mod benchkit;

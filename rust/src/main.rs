@@ -15,7 +15,7 @@
 //! in the offline build image.
 
 use qgenx::config::{ExperimentConfig, QuantMode};
-use qgenx::coordinator::{run_experiment, run_threaded};
+use qgenx::coordinator::{run_threaded, Control, Observer, Session, StepReport, StopAtGap};
 use qgenx::net::NetModel;
 use qgenx::runtime::{default_artifacts_dir, Runtime};
 use qgenx::train::{GanMode, GanTrainConfig, GanTrainer, LmOptimizer, LmTrainConfig, LmTrainer};
@@ -66,12 +66,29 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H] [--layers N|name:end,...,last]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H] [--layers N|name:end,...,last] [--watch] [--stop-at-gap g]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K] [--layerwise]\n\
            lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N]\n\
            info   print the artifact manifest summary\n\
            help   this message"
     );
+}
+
+/// `--watch`: stream every eval step's report as the run progresses.
+struct WatchProgress;
+
+impl Observer for WatchProgress {
+    fn on_step(&mut self, r: &StepReport) -> Control {
+        if r.evaluated {
+            let gap = r.gap.map(|g| format!("{g:.6e}")).unwrap_or_else(|| "-".into());
+            let cons = r.consensus.map(|c| format!("  consensus={c:.5}")).unwrap_or_default();
+            println!(
+                "  [watch] t={:>6}/{} gap={gap} gamma={:.5} bits={}{cons}",
+                r.t, r.iters, r.gamma, r.bits_cum
+            );
+        }
+        Control::Continue
+    }
 }
 
 type Flags = HashMap<String, String>;
@@ -131,6 +148,11 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     if flags.contains_key("qsgda") && cfg.local.steps > 1 {
         return Err("--qsgda has no local-steps path; drop --local".into());
     }
+    if (flags.contains_key("watch") || flags.contains_key("stop-at-gap"))
+        && (flags.contains_key("qsgda") || flags.contains_key("threaded"))
+    {
+        return Err("--watch/--stop-at-gap drive an inline Session; drop --qsgda/--threaded".into());
+    }
     println!(
         "run: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={} layers={}",
         cfg.problem.kind,
@@ -152,7 +174,17 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     } else if flags.contains_key("threaded") {
         run_threaded(&cfg).map_err(|e| e.to_string())?.recorder
     } else {
-        run_experiment(&cfg).map_err(|e| e.to_string())?
+        // The steppable Session is the run API; wire up the CLI's streaming
+        // and early-stop hooks as observers (docs/API.md).
+        let mut builder = Session::builder(cfg.clone());
+        if flags.contains_key("watch") {
+            builder = builder.observer(Box::new(WatchProgress));
+        }
+        if let Some(g) = flags.get("stop-at-gap") {
+            let g: f64 = g.parse().map_err(|_| "bad --stop-at-gap")?;
+            builder = builder.observer(Box::new(StopAtGap(g)));
+        }
+        builder.build().map_err(|e| e.to_string())?.run().map_err(|e| e.to_string())?
     };
     if let Some(gaps) = rec.get("gap") {
         println!("  iter        gap");

@@ -22,6 +22,7 @@ use super::problems::Operator;
 use crate::util::{norm2, Rng};
 
 /// Evaluator for `Gap_{B(center, radius)}`.
+#[derive(Clone)]
 pub struct GapEvaluator {
     center: Vec<f32>,
     radius: f64,

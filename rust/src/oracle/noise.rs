@@ -26,9 +26,15 @@ pub trait Oracle: Send {
 
     /// The underlying deterministic operator.
     fn operator(&self) -> &dyn Operator;
+
+    /// Deep copy including the private RNG state, so a cloned oracle
+    /// continues the *same* noise stream — the primitive behind
+    /// [`crate::coordinator::Session::checkpoint`]'s bit-for-bit resume.
+    fn clone_box(&self) -> Box<dyn Oracle>;
 }
 
 /// Noise-free oracle: `g = A(x)` (the deterministic baseline).
+#[derive(Clone)]
 pub struct ExactOracle {
     op: Arc<dyn Operator>,
 }
@@ -51,11 +57,16 @@ impl Oracle for ExactOracle {
     fn operator(&self) -> &dyn Operator {
         self.op.as_ref()
     }
+
+    fn clone_box(&self) -> Box<dyn Oracle> {
+        Box::new(self.clone())
+    }
 }
 
 /// Absolute noise: `g = A(x) + σ ζ`, ζ i.i.d. truncated standard normal
 /// (|ζ_i| ≤ 5 — so ‖U‖ is a.s. bounded as Assumption 2 requires, while the
 /// first two moments match N(0,1) to < 1e−5).
+#[derive(Clone)]
 pub struct AbsoluteNoiseOracle {
     op: Arc<dyn Operator>,
     sigma: f64,
@@ -94,10 +105,15 @@ impl Oracle for AbsoluteNoiseOracle {
     fn operator(&self) -> &dyn Operator {
         self.op.as_ref()
     }
+
+    fn clone_box(&self) -> Box<dyn Oracle> {
+        Box::new(self.clone())
+    }
 }
 
 /// Relative noise: `g_i = A_i(x) (1 + √c ε_i)` with ε_i Rademacher.
 /// Unbiased, and `E‖U‖² = c ‖A(x)‖²` exactly — Assumption 3 with equality.
+#[derive(Clone)]
 pub struct RelativeNoiseOracle {
     op: Arc<dyn Operator>,
     c: f64,
@@ -131,12 +147,17 @@ impl Oracle for RelativeNoiseOracle {
     fn operator(&self) -> &dyn Operator {
         self.op.as_ref()
     }
+
+    fn clone_box(&self) -> Box<dyn Oracle> {
+        Box::new(self.clone())
+    }
 }
 
 /// Random coordinate descent oracle (paper Example J.1):
 /// `g = d · A_{i}(x) e_i` for a uniformly random coordinate `i`.
 /// Unbiased with `E‖g − A‖² = (d − 1)‖A(x)‖²` — relative noise with
 /// `c = d − 1`.
+#[derive(Clone)]
 pub struct RcdOracle {
     op: Arc<dyn Operator>,
     rng: Rng,
@@ -171,12 +192,17 @@ impl Oracle for RcdOracle {
     fn operator(&self) -> &dyn Operator {
         self.op.as_ref()
     }
+
+    fn clone_box(&self) -> Box<dyn Oracle> {
+        Box::new(self.clone())
+    }
 }
 
 /// Random player updating (paper Example J.2): the coordinate space is
 /// split into `players` contiguous blocks; one block is sampled per query
 /// (probability ∝ block size) and its component of `A` returned scaled by
 /// `1/p_i`. Unbiased; variance vanishes at equilibria (Assumption 3).
+#[derive(Clone)]
 pub struct RandomPlayerOracle {
     op: Arc<dyn Operator>,
     rng: Rng,
@@ -224,6 +250,10 @@ impl Oracle for RandomPlayerOracle {
 
     fn operator(&self) -> &dyn Operator {
         self.op.as_ref()
+    }
+
+    fn clone_box(&self) -> Box<dyn Oracle> {
+        Box::new(self.clone())
     }
 }
 

@@ -308,17 +308,9 @@ impl<'rt> GanTrainer<'rt> {
         if every == 0 || t % every != 0 {
             return Ok(());
         }
-        let payloads: Vec<Vec<u8>> = self.comps.iter().map(|c| c.stats_payload()).collect();
-        if payloads.iter().all(|p| p.is_empty()) {
-            return Ok(());
-        }
-        let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
-        self.traffic.record_allgather(&bits, &self.net);
-        let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
-        for comp in self.comps.iter_mut() {
-            comp.update_levels(&rank_order)?;
-        }
-        Ok(())
+        // Shared with the coordinator engine and the LM trainer; a no-op
+        // for the fixed-level UQ modes (all payloads empty).
+        crate::coordinator::pool_local_stats(&mut self.comps, &self.net, &mut self.traffic)
     }
 
     /// One extra-gradient step (two oracle rounds, two exchanges).

@@ -118,17 +118,10 @@ impl<'rt> LmTrainer<'rt> {
         if !fire {
             return Ok(());
         }
-        let payloads: Vec<Vec<u8>> = self.comps.iter().map(|c| c.stats_payload()).collect();
-        if payloads.iter().all(|p| p.is_empty()) {
-            return Ok(());
-        }
-        let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
-        self.traffic.record_allgather(&bits, &self.net);
-        let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
-        for comp in self.comps.iter_mut() {
-            comp.update_levels(&rank_order)?;
-        }
-        Ok(())
+        // The pooled exchange is the coordinator engine's shared stat round
+        // (one home for the gather-record-refresh body; a no-op for the
+        // fixed-level modes whose payloads are all empty).
+        crate::coordinator::pool_local_stats(&mut self.comps, &self.net, &mut self.traffic)
     }
 
     /// All K workers' local gradients at `params` (measured).

@@ -1,0 +1,1183 @@
+//! Per-family regression suite: the Session-based runners must be
+//! **bit-identical** — trajectories and wire accounting — to the
+//! pre-Session coordinators.
+//!
+//! The `legacy` module below is a frozen, verbatim copy of the seed's six
+//! run loops (inline exact/gossip/local + QSGDA, threaded per-step +
+//! local worker loops) as they stood before the `Session` refactor,
+//! re-expressed against the crate's public API. The tests run each runner
+//! family through both the legacy loop and the new wrapper and compare:
+//!
+//! * every recorded series point-for-point (`sim_time_cum` exempt — it
+//!   contains measured wall-clock compute), including the series *name
+//!   sets*, so the wrappers can neither drop nor invent metrics;
+//! * every summary scalar (`compute_time` exempt, same reason);
+//! * the threaded replicas (the replication-invariant payload).
+//!
+//! If a Session change breaks any of these, the break is intentional API
+//! surface work and this frozen copy is the place to prove it.
+#![allow(clippy::too_many_arguments)]
+
+use qgenx::metrics::Recorder;
+
+/// The pre-Session coordinators, frozen. Do not "clean up" — fidelity to
+/// the seed is the point.
+mod legacy {
+    use qgenx::algo::{LocalQGenX, QGenX, Sgda};
+    use qgenx::config::ExperimentConfig;
+    use qgenx::coordinator::{Compressor, UpdateSchedule};
+    use qgenx::error::{Error, Result};
+    use qgenx::metrics::{consensus_distance, Recorder, SyncAccounting};
+    use qgenx::net::{AllGather, NetModel, TrafficStats};
+    use qgenx::oracle::{build_operator, build_oracle, GapEvaluator, Oracle};
+    use qgenx::topo::{build_collective, Collective, LinkTraffic, Topology};
+    use qgenx::util::Rng;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    /// Stat-exchange schedule shared by the exact and gossip runners: active
+    /// only when something adapts (level placement or Huffman tables) and the
+    /// pipeline is actually quantized.
+    fn adaptive_schedule(cfg: &ExperimentConfig, comps: &[Compressor]) -> UpdateSchedule {
+        if cfg.quant.adapts() && comps[0].is_quantized() {
+            UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
+        } else {
+            UpdateSchedule::never()
+        }
+    }
+
+    /// Summary scalars shared by the exact and gossip runners — one emission
+    /// point so cross-topology CSV columns cannot drift apart.
+    fn emit_summary_scalars(
+        rec: &mut Recorder,
+        traffic: &TrafficStats,
+        links: &LinkTraffic,
+        comps: &[Compressor],
+        k: usize,
+        d: usize,
+    ) {
+        rec.set_scalar("total_bits", traffic.bits_sent as f64);
+        rec.set_scalar("bits_per_round_per_worker", traffic.bits_per_round_per_worker(k));
+        rec.set_scalar("sim_net_time", traffic.sim_net_time);
+        rec.set_scalar("compute_time", traffic.compute_time);
+        rec.set_scalar("rounds", traffic.rounds as f64);
+        rec.set_scalar("level_updates", comps[0].updates() as f64);
+        rec.set_scalar("epsilon_q", comps[0].epsilon_q(d));
+        rec.set_scalar("wire_links", links.links() as f64);
+        rec.set_scalar("max_link_bytes", links.max_link_bytes());
+        // Layer-wise pipelines additionally report per-layer scalars
+        // (layer_bits/<name>, layer_variance/<name>, layer_levels/<name>);
+        // no-op otherwise.
+        comps[0].emit_layer_scalars(rec);
+    }
+
+    /// Run one Q-GenX experiment per the config; returns the metric recorder
+    /// with series `gap`, `dist`, `residual`, `gamma`, `bits_cum`,
+    /// `sim_time_cum` and summary scalars. The exchange rounds run over the
+    /// configured [`Topology`]; the config selects one of three runner
+    /// families:
+    ///
+    /// * **exact** (this function's body) — per-step dual exchange over an
+    ///   exact topology, the seed's Algorithm 1;
+    /// * **gossip** (the private `run_gossip`) — inexact topologies: per-step
+    ///   dual exchange averaged over graph neighborhoods, plus `consensus_dist`;
+    /// * **local** (the private `run_local`) — `local.steps ≥ 2`: private extra-gradient
+    ///   iterations between syncs, quantized model-delta averaging at syncs.
+    ///
+    /// `local.steps = 1` deliberately does *not* engage the delta-sync
+    /// machinery: with one local step the algorithm communicates every
+    /// iteration anyway, and the per-step dual exchange is the trajectory the
+    /// paper's theorems describe — so it runs the exact (or gossip) path,
+    /// bit-for-bit identical to the seed.
+    pub fn run_experiment(cfg: &ExperimentConfig) -> Result<Recorder> {
+        cfg.validate()?;
+        let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
+        let collective = build_collective(topo, cfg.workers)?;
+        if cfg.local.steps > 1 {
+            return run_local(cfg, collective);
+        }
+        if !topo.is_exact() {
+            return run_gossip(cfg, collective);
+        }
+        let op = build_operator(&cfg.problem, cfg.seed)?;
+        let d = op.dim();
+        let k = cfg.workers;
+        let root = Rng::seed_from(cfg.seed);
+
+        // K private oracles + K compression endpoints.
+        let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+            .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+            .collect::<Result<_>>()?;
+        let mut comps: Vec<Compressor> = (0..k)
+            .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+            .collect::<Result<_>>()?;
+
+        let schedule = adaptive_schedule(cfg, &comps);
+
+        let x0 = vec![0.0f32; d];
+        let mut state =
+            QGenX::new(cfg.algo.variant, &x0, k, cfg.algo.gamma0, cfg.algo.adaptive_step);
+
+        let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+        let net = NetModel::from_config(&cfg.net);
+        let mut traffic = TrafficStats::default();
+        let mut links = LinkTraffic::new();
+        let mut rec = Recorder::new();
+
+        // Scratch buffers reused across iterations.
+        let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+        let mut g_buf = vec![0.0f32; d];
+
+        for t in 1..=cfg.iters {
+            // (1) Level-update step: exchange sufficient statistics, pool,
+            //     re-optimize — identical on all workers.
+            if schedule.is_update(t) {
+                let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
+                let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
+                traffic.record_allgather(&bits, &net);
+                let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                for comp in comps.iter_mut() {
+                    comp.update_levels(&rank_order)?;
+                }
+            }
+
+            // (2) Base exchange (variant-dependent).
+            let base_vecs: Vec<Vec<f32>> = if let Some(xq) = state.base_query() {
+                let t0 = Instant::now();
+                let mut bits = Vec::with_capacity(k);
+                let mut wires = Vec::with_capacity(k);
+                for w in 0..k {
+                    oracles[w].sample(&xq, &mut g_buf);
+                    let (bytes, b) = comps[w].compress(&g_buf)?;
+                    bits.push(b);
+                    wires.push(bytes);
+                }
+                // Everyone decodes everyone (we decode once — identical everywhere).
+                for w in 0..k {
+                    comps[w].decompress(&wires[w], &mut decoded[w])?;
+                }
+                traffic.add_compute(t0.elapsed().as_secs_f64());
+                collective.record_round(&bits, &net, &mut traffic);
+                links.record(collective.as_ref(), &bits);
+                decoded.clone()
+            } else {
+                Vec::new()
+            };
+
+            // (3) Extrapolate.
+            let x_half = state.extrapolate(&base_vecs)?;
+
+            // (4) Half-step exchange.
+            let t0 = Instant::now();
+            let mut bits = Vec::with_capacity(k);
+            let mut wires = Vec::with_capacity(k);
+            for w in 0..k {
+                oracles[w].sample(&x_half, &mut g_buf);
+                let (bytes, b) = comps[w].compress(&g_buf)?;
+                bits.push(b);
+                wires.push(bytes);
+            }
+            for w in 0..k {
+                comps[w].decompress(&wires[w], &mut decoded[w])?;
+            }
+            traffic.add_compute(t0.elapsed().as_secs_f64());
+            collective.record_round(&bits, &net, &mut traffic);
+            links.record(collective.as_ref(), &bits);
+            state.update(&decoded)?;
+
+            // (5) Evaluation.
+            if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+                let avg = state.ergodic_average();
+                if let Some(ev) = &gap_eval {
+                    rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
+                    rec.push("dist", t as f64, ev.dist_to_center(&avg));
+                }
+                rec.push("residual", t as f64, op.residual(&avg));
+                rec.push("gamma", t as f64, state.gamma());
+                rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+                rec.push("sim_time_cum", t as f64, traffic.total_time());
+                comps[0].record_layer_series(&mut rec, t as f64);
+            }
+        }
+
+        emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
+        Ok(rec)
+    }
+
+    /// Inexact (gossip) runner: `K` genuinely distinct replicas, each
+    /// averaging dual vectors over its closed graph neighborhood only. The
+    /// exchange still moves real encoded wire bytes (decode is
+    /// sender-deterministic, so decoding once per sender is exact); traffic
+    /// follows the gossip α-β cost. Level updates stay *global* — the decode
+    /// side of the wire format requires identical codecs on every replica, so
+    /// the control plane (small, infrequent stat payloads) is pooled full-mesh
+    /// while the data plane gossips; see `coordinator::mod` docs.
+    fn run_gossip(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result<Recorder> {
+        let op = build_operator(&cfg.problem, cfg.seed)?;
+        let d = op.dim();
+        let k = cfg.workers;
+        let root = Rng::seed_from(cfg.seed);
+        let neigh: Vec<Vec<usize>> = (0..k).map(|r| collective.recipients(r)).collect();
+
+        let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+            .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+            .collect::<Result<_>>()?;
+        let mut comps: Vec<Compressor> = (0..k)
+            .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+            .collect::<Result<_>>()?;
+
+        let schedule = adaptive_schedule(cfg, &comps);
+
+        let x0 = vec![0.0f32; d];
+        let mut states: Vec<QGenX> = neigh
+            .iter()
+            .map(|n| {
+                QGenX::new(cfg.algo.variant, &x0, n.len(), cfg.algo.gamma0, cfg.algo.adaptive_step)
+            })
+            .collect();
+
+        let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+        let net = NetModel::from_config(&cfg.net);
+        let mut traffic = TrafficStats::default();
+        let mut links = LinkTraffic::new();
+        let mut rec = Recorder::new();
+        let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+        let mut g_buf = vec![0.0f32; d];
+
+        // Compress every worker's sample, decode once per sender, and hand each
+        // replica its neighborhood view (rank order within the neighborhood).
+        let exchange_views = |queries: &[Vec<f32>],
+                                  oracles: &mut [Box<dyn Oracle>],
+                                  comps: &mut [Compressor],
+                                  decoded: &mut [Vec<f32>],
+                                  traffic: &mut TrafficStats,
+                                  links: &mut LinkTraffic,
+                                  g_buf: &mut [f32]|
+         -> Result<Vec<Vec<Vec<f32>>>> {
+            let t0 = Instant::now();
+            let mut bits = Vec::with_capacity(k);
+            let mut wires = Vec::with_capacity(k);
+            for w in 0..k {
+                oracles[w].sample(&queries[w], g_buf);
+                let (bytes, b) = comps[w].compress(g_buf)?;
+                bits.push(b);
+                wires.push(bytes);
+            }
+            for w in 0..k {
+                comps[w].decompress(&wires[w], &mut decoded[w])?;
+            }
+            traffic.add_compute(t0.elapsed().as_secs_f64());
+            collective.record_round(&bits, &net, traffic);
+            links.record(collective.as_ref(), &bits);
+            Ok(neigh
+                .iter()
+                .map(|n| n.iter().map(|&w| decoded[w].clone()).collect())
+                .collect())
+        };
+
+        for t in 1..=cfg.iters {
+            // (1) Global (full-mesh) stat pooling keeps all codecs identical.
+            if schedule.is_update(t) {
+                let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
+                let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
+                traffic.record_allgather(&bits, &net);
+                let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                for comp in comps.iter_mut() {
+                    comp.update_levels(&rank_order)?;
+                }
+            }
+
+            // (2) Base exchange: each replica queries at its *own* iterate.
+            let base_views: Vec<Vec<Vec<f32>>> = if states[0].base_query().is_some() {
+                let queries: Vec<Vec<f32>> =
+                    states.iter().map(|s| s.base_query().expect("DE variant")).collect();
+                exchange_views(
+                    &queries,
+                    &mut oracles,
+                    &mut comps,
+                    &mut decoded,
+                    &mut traffic,
+                    &mut links,
+                    &mut g_buf,
+                )?
+            } else {
+                vec![Vec::new(); k]
+            };
+
+            // (3) Per-replica extrapolation to its own half-step point.
+            let x_halves: Vec<Vec<f32>> = states
+                .iter_mut()
+                .zip(base_views.iter())
+                .map(|(s, v)| s.extrapolate(v))
+                .collect::<Result<_>>()?;
+
+            // (4) Half-step exchange at the per-replica half points.
+            let half_views = exchange_views(
+                &x_halves,
+                &mut oracles,
+                &mut comps,
+                &mut decoded,
+                &mut traffic,
+                &mut links,
+                &mut g_buf,
+            )?;
+            for (s, v) in states.iter_mut().zip(half_views.iter()) {
+                s.update(v)?;
+            }
+
+            // (5) Evaluation at the mean ergodic average + consensus tracking.
+            if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+                let averages: Vec<Vec<f32>> = states.iter().map(|s| s.ergodic_average()).collect();
+                let mut mean_avg = vec![0.0f32; d];
+                for a in &averages {
+                    for (m, &x) in mean_avg.iter_mut().zip(a.iter()) {
+                        *m += x / k as f32;
+                    }
+                }
+                let iterates: Vec<Vec<f32>> = states.iter().map(|s| s.x_world()).collect();
+                if let Some(ev) = &gap_eval {
+                    rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
+                    rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
+                }
+                rec.push("residual", t as f64, op.residual(&mean_avg));
+                rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
+                rec.push("gamma", t as f64, states[0].gamma());
+                rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+                rec.push("sim_time_cum", t as f64, traffic.total_time());
+                comps[0].record_layer_series(&mut rec, t as f64);
+            }
+        }
+
+        // Same scalar set as the exact path (bits_per_round_per_worker is the
+        // mesh-normalized figure Theorems 3/4 reference; under gossip it is a
+        // comparison yardstick, not a per-edge quantity), plus the consensus
+        // scalar only this runner can produce.
+        let final_iterates: Vec<Vec<f32>> = states.iter().map(|s| s.x_world()).collect();
+        emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
+        rec.set_scalar("consensus_dist", consensus_distance(&final_iterates));
+        Ok(rec)
+    }
+
+    /// Local-steps runner (`local.steps = H ≥ 2`): each worker runs `H`
+    /// extra-gradient iterations against its *private* oracle between
+    /// communication rounds, then the replicas exchange quantized **model
+    /// deltas** (`X_t − X_sync`, one vector per worker per sync — not one or
+    /// two duals per iteration) over the configured collective and
+    /// re-synchronize by averaging the decoded deltas.
+    ///
+    /// * Exact topologies: every replica averages all `K` decoded deltas, so
+    ///   replicas are bit-identical immediately after every sync; the
+    ///   `sync_drift` series tracks how far they diverged *within* each local
+    ///   segment.
+    /// * Gossip: each replica averages deltas over its closed neighborhood
+    ///   only — replicas drift persistently, tracked by `consensus_dist` just
+    ///   like [`run_gossip`].
+    ///
+    /// The control plane (stat pooling for QAda / Huffman refreshes) stays
+    /// global and fires at the first sync on or after each due point — the
+    /// early warmup `update_every.min(10)` the per-step runners also use, then
+    /// every `update_every` — because between syncs there is no wire to carry
+    /// stats. Note the statistics now describe *delta* coordinates (that is
+    /// what the codec compresses in this mode), so the refreshed levels/tables
+    /// fit the actual wire distribution.
+    fn run_local(cfg: &ExperimentConfig, collective: Arc<dyn Collective>) -> Result<Recorder> {
+        let op = build_operator(&cfg.problem, cfg.seed)?;
+        let d = op.dim();
+        let k = cfg.workers;
+        let h = cfg.local.steps;
+        let root = Rng::seed_from(cfg.seed);
+        let neigh: Vec<Vec<usize>> = (0..k).map(|r| collective.recipients(r)).collect();
+
+        let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+            .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+            .collect::<Result<_>>()?;
+        let mut comps: Vec<Compressor> = (0..k)
+            .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+            .collect::<Result<_>>()?;
+
+        let adaptive = cfg.quant.adapts() && comps[0].is_quantized();
+        let update_every = cfg.quant.update_every;
+        // First refresh at the first sync on or after the same early warmup
+        // point the per-step runners use (update_every.min(10)) — without it,
+        // runs shorter than update_every would never refresh at all.
+        let mut next_stat_due = update_every.min(10);
+
+        let x0 = vec![0.0f32; d];
+        let mut replicas: Vec<LocalQGenX> = (0..k)
+            .map(|_| {
+                LocalQGenX::new(cfg.algo.variant, &x0, cfg.algo.gamma0, cfg.algo.adaptive_step)
+            })
+            .collect();
+
+        let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+        let net = NetModel::from_config(&cfg.net);
+        let mut traffic = TrafficStats::default();
+        let mut links = LinkTraffic::new();
+        let mut rec = Recorder::new();
+        let mut sync_acc = SyncAccounting::new();
+        let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+        let mut g_buf = vec![0.0f32; d];
+
+        for t in 1..=cfg.iters {
+            // (1) One private extra-gradient iteration per replica — no wire.
+            let t0 = Instant::now();
+            for (rep, oracle) in replicas.iter_mut().zip(oracles.iter_mut()) {
+                rep.local_round(oracle.as_mut(), &mut g_buf)?;
+            }
+            traffic.add_compute(t0.elapsed().as_secs_f64());
+
+            // (2) Synchronization every H local iterations (plus a final sync
+            //     so the run always ends on a consensus point).
+            if t % h == 0 || t == cfg.iters {
+                // (2a) Quantize + exchange the model deltas.
+                let t0 = Instant::now();
+                let mut bits = Vec::with_capacity(k);
+                let mut wires = Vec::with_capacity(k);
+                for w in 0..k {
+                    let delta = replicas[w].delta();
+                    let (bytes, b) = comps[w].compress(&delta)?;
+                    bits.push(b);
+                    wires.push(bytes);
+                }
+                for w in 0..k {
+                    comps[w].decompress(&wires[w], &mut decoded[w])?;
+                }
+                traffic.add_compute(t0.elapsed().as_secs_f64());
+                let bits_before = traffic.bits_sent;
+                collective.record_round(&bits, &net, &mut traffic);
+                links.record(collective.as_ref(), &bits);
+
+                // (2b) Pre-averaging drift + per-sync bit accounting.
+                let iterates: Vec<Vec<f32>> = replicas.iter().map(|r| r.x_world()).collect();
+                sync_acc.record(
+                    &mut rec,
+                    t,
+                    consensus_distance(&iterates),
+                    traffic.bits_sent - bits_before,
+                );
+
+                // (2c) Resync each replica onto its neighborhood-averaged delta
+                //      (all K under exact topologies).
+                for (rep, n) in replicas.iter_mut().zip(neigh.iter()) {
+                    let mut mean = vec![0.0f32; d];
+                    for &w in n {
+                        for (m, &x) in mean.iter_mut().zip(decoded[w].iter()) {
+                            *m += x / n.len() as f32;
+                        }
+                    }
+                    rep.resync(&mean)?;
+                }
+
+                // (2d) Control plane: pooled stat exchange at the first sync on
+                //      or after each due point (always full-mesh — the wire
+                //      format needs identical codecs everywhere).
+                if adaptive && update_every != 0 && t >= next_stat_due {
+                    let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
+                    let stat_bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
+                    traffic.record_allgather(&stat_bits, &net);
+                    let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+                    for comp in comps.iter_mut() {
+                        comp.update_levels(&rank_order)?;
+                    }
+                    next_stat_due = t + update_every;
+                }
+            }
+
+            // (3) Evaluation at the mean ergodic average across replicas.
+            if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+                let mut mean_avg = vec![0.0f32; d];
+                for rep in &replicas {
+                    for (m, &x) in mean_avg.iter_mut().zip(rep.ergodic_average().iter()) {
+                        *m += x / k as f32;
+                    }
+                }
+                let iterates: Vec<Vec<f32>> = replicas.iter().map(|r| r.x_world()).collect();
+                if let Some(ev) = &gap_eval {
+                    rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
+                    rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
+                }
+                rec.push("residual", t as f64, op.residual(&mean_avg));
+                rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
+                rec.push("gamma", t as f64, replicas[0].gamma());
+                rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+                rec.push("sim_time_cum", t as f64, traffic.total_time());
+                comps[0].record_layer_series(&mut rec, t as f64);
+            }
+        }
+
+        // Final consensus over the *sync bases*: the run ends on a sync, and
+        // the consensus point is computed by identical arithmetic on every
+        // replica — exactly 0 under exact topologies (the raw iterates can sit
+        // an origin-shift rounding ulp off it; see `algo::local` docs).
+        let final_bases: Vec<Vec<f32>> = replicas.iter().map(|r| r.sync_base().to_vec()).collect();
+        emit_summary_scalars(&mut rec, &traffic, &links, &comps, k, d);
+        sync_acc.emit_scalars(&mut rec);
+        rec.set_scalar("local_steps", h as f64);
+        rec.set_scalar("consensus_dist", consensus_distance(&final_bases));
+        Ok(rec)
+    }
+
+    /// QSGDA baseline (Beznosikov et al. 2022): quantized SGDA with γ_t = γ₀/√t,
+    /// same oracles/compressors/network — only the update rule differs
+    /// (no extrapolation, no adaptive step). The Figure-4 comparator.
+    pub fn run_qsgda_baseline(cfg: &ExperimentConfig) -> Result<Recorder> {
+        cfg.validate()?;
+        let op = build_operator(&cfg.problem, cfg.seed)?;
+        let d = op.dim();
+        let k = cfg.workers;
+        let root = Rng::seed_from(cfg.seed);
+        let mut oracles: Vec<Box<dyn Oracle>> = (0..k)
+            .map(|w| build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (w as u64 + 1) * 0x9e37))
+            .collect::<Result<_>>()?;
+        let mut comps: Vec<Compressor> = (0..k)
+            .map(|w| Compressor::from_config(&cfg.quant, root.fork(w as u64 + 101)))
+            .collect::<Result<_>>()?;
+        let x0 = vec![0.0f32; d];
+        let mut sgda = Sgda::new(&x0, cfg.algo.gamma0, true);
+        let gap_eval = GapEvaluator::around_solution(op.as_ref(), 2.0);
+        let net = NetModel::from_config(&cfg.net);
+        let mut traffic = TrafficStats::default();
+        let mut rec = Recorder::new();
+        let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+        let mut g_buf = vec![0.0f32; d];
+
+        for t in 1..=cfg.iters {
+            let xq = sgda.query();
+            let mut bits = Vec::with_capacity(k);
+            let mut wires = Vec::with_capacity(k);
+            for w in 0..k {
+                oracles[w].sample(&xq, &mut g_buf);
+                let (bytes, b) = comps[w].compress(&g_buf)?;
+                bits.push(b);
+                wires.push(bytes);
+            }
+            for w in 0..k {
+                comps[w].decompress(&wires[w], &mut decoded[w])?;
+            }
+            traffic.record_allgather(&bits, &net);
+            sgda.update(&decoded);
+            if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+                let avg = sgda.ergodic_average();
+                if let Some(ev) = &gap_eval {
+                    rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
+                    rec.push("dist", t as f64, ev.dist_to_center(&avg));
+                    rec.push("dist_last", t as f64, ev.dist_to_center(sgda.x()));
+                }
+                rec.push("residual", t as f64, op.residual(&avg));
+                rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+            }
+        }
+        rec.set_scalar("total_bits", traffic.bits_sent as f64);
+        Ok(rec)
+    }
+
+
+    /// Outcome of one threaded run: rank-0 recorder plus the final iterate of
+    /// every replica (for the replication invariant check and tests).
+    pub struct ThreadedRun {
+        pub recorder: Recorder,
+        pub replicas: Vec<Vec<f32>>,
+    }
+
+    /// Run Algorithm 1 on `K` OS threads over the configured topology.
+    /// Functionally equivalent to [`super::inline::run_experiment`] modulo RNG
+    /// stream interleaving.
+    pub fn run_threaded(cfg: &ExperimentConfig) -> Result<ThreadedRun> {
+        cfg.validate()?;
+        let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
+        let collective = build_collective(topo, cfg.workers)?;
+        let op = build_operator(&cfg.problem, cfg.seed)?;
+        let d = op.dim();
+        let k = cfg.workers;
+        let transport = AllGather::new(k);
+        let net = NetModel::from_config(&cfg.net);
+        let schedule = if cfg.quant.adapts() {
+            UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
+        } else {
+            UpdateSchedule::never()
+        };
+
+        let handles: Vec<std::thread::JoinHandle<Result<(Recorder, Vec<f32>)>>> = (0..k)
+            .map(|rank| {
+                let op = op.clone();
+                let cfg = cfg.clone();
+                let transport = transport.clone();
+                let collective = collective.clone();
+                std::thread::Builder::new()
+                    .name(format!("qgenx-worker-{rank}"))
+                    .spawn(move || {
+                        let out = if cfg.local.steps > 1 {
+                            worker_local_loop(rank, &cfg, op, transport.clone(), collective, net, d)
+                        } else {
+                            worker_loop(
+                                rank,
+                                &cfg,
+                                op,
+                                transport.clone(),
+                                collective,
+                                net,
+                                schedule,
+                                d,
+                            )
+                        };
+                        // An Err return (codec/oracle failure) must release the
+                        // peers just like a panic does — otherwise they block at
+                        // the barrier forever waiting for this worker's deposit.
+                        if out.is_err() {
+                            transport.poison();
+                        }
+                        out
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        let mut recorders = Vec::with_capacity(k);
+        let mut replicas = Vec::with_capacity(k);
+        for h in handles {
+            let (rec, x) = h
+                .join()
+                .map_err(|_| Error::Coordinator("worker thread panicked".into()))??;
+            recorders.push(rec);
+            replicas.push(x);
+        }
+        let mut recorder = recorders.swap_remove(0);
+        if topo.is_exact() {
+            // Replication invariant: all replicas ended at the same iterate.
+            for r in 1..k {
+                if replicas[r] != replicas[0] {
+                    return Err(Error::Coordinator(format!(
+                        "replica divergence: worker {r} differs from worker 0"
+                    )));
+                }
+            }
+        } else {
+            recorder.set_scalar("consensus_dist", consensus_distance(&replicas));
+        }
+        Ok(ThreadedRun { recorder, replicas })
+    }
+
+    /// Out-of-band diagnostic allgather at eval steps: every rank contributes
+    /// `[X_t ‖ X̄]` as raw f32 (deliberately NOT billed to traffic — it exists
+    /// so rank 0 can evaluate cross-replica metrics, not as protocol traffic);
+    /// every rank must call it at the same step so the barrier matches.
+    /// Returns `Some((per-rank iterates, mean ergodic average))` on rank 0,
+    /// `None` elsewhere.
+    fn diag_exchange(
+        rank: usize,
+        k: usize,
+        d: usize,
+        transport: &AllGather,
+        x_world: &[f32],
+        ergodic: &[f32],
+    ) -> Result<Option<(Vec<Vec<f32>>, Vec<f32>)>> {
+        let mut diag = Vec::with_capacity(8 * d);
+        for &x in x_world.iter().chain(ergodic.iter()) {
+            diag.extend_from_slice(&x.to_le_bytes());
+        }
+        let got = transport.exchange(rank, diag)?;
+        if rank != 0 {
+            return Ok(None);
+        }
+        let mut iterates = Vec::with_capacity(k);
+        let mut mean_avg = vec![0.0f32; d];
+        for p in &got {
+            let f: Vec<f32> = p
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            if f.len() != 2 * d {
+                return Err(Error::Coordinator("bad diagnostic payload".into()));
+            }
+            iterates.push(f[..d].to_vec());
+            for (m, &x) in mean_avg.iter_mut().zip(f[d..].iter()) {
+                *m += x / k as f32;
+            }
+        }
+        Ok(Some((iterates, mean_avg)))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn worker_loop(
+        rank: usize,
+        cfg: &ExperimentConfig,
+        op: Arc<dyn qgenx::oracle::Operator>,
+        transport: Arc<AllGather>,
+        collective: Arc<dyn Collective>,
+        net: NetModel,
+        schedule: UpdateSchedule,
+        d: usize,
+    ) -> Result<(Recorder, Vec<f32>)> {
+        // A panic anywhere below must not strand peers at the barrier.
+        let _poison = transport.guard();
+        let k = cfg.workers;
+        let exact = collective.topology().is_exact();
+        // Ranks whose payloads this worker consumes (all K for exact
+        // topologies; the closed neighborhood under gossip).
+        let recv_ranks = collective.recipients(rank);
+        let k_local = recv_ranks.len();
+        let root = Rng::seed_from(cfg.seed);
+        let mut oracle =
+            build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (rank as u64 + 1) * 0x9e37)?;
+        let mut comp = Compressor::from_config(&cfg.quant, root.fork(rank as u64 + 101))?;
+        let mut state = QGenX::new(
+            cfg.algo.variant,
+            &vec![0.0f32; d],
+            k_local,
+            cfg.algo.gamma0,
+            cfg.algo.adaptive_step,
+        );
+        let gap_eval =
+            if rank == 0 { GapEvaluator::around_solution(op.as_ref(), 2.0) } else { None };
+        let mut traffic = TrafficStats::default();
+        let mut links = LinkTraffic::new();
+        let mut rec = Recorder::new();
+        let mut g_buf = vec![0.0f32; d];
+        let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+
+        // One exchange round: contribute my wire bytes through the collective
+        // and decode the payloads it logically delivers into `decoded`
+        // (sender-indexed). Callers read `decoded` directly when exact —
+        // zero-copy, as the seed did — and take the `recv_ranks` view under
+        // gossip.
+        let exchange = |payload: Vec<u8>,
+                        comp: &Compressor,
+                        decoded: &mut Vec<Vec<f32>>,
+                        traffic: &mut TrafficStats,
+                        links: &mut LinkTraffic|
+         -> Result<()> {
+            let (recv, bits) = collective.exchange(&transport, rank, payload)?;
+            collective.record_round(&bits, &net, traffic);
+            if rank == 0 {
+                links.record(collective.as_ref(), &bits);
+            }
+            for (sender, bytes) in &recv {
+                comp.decompress(bytes, &mut decoded[*sender])?;
+            }
+            Ok(())
+        };
+        let neighborhood_view = |decoded: &[Vec<f32>]| -> Vec<Vec<f32>> {
+            recv_ranks.iter().map(|&r| decoded[r].clone()).collect()
+        };
+
+        for t in 1..=cfg.iters {
+            // (1) stat exchange + synchronized level update — always global
+            //     (full-mesh), so codecs stay identical on every worker.
+            if schedule.is_update(t) && comp.is_quantized() {
+                let payload = comp.stats_payload();
+                let got = transport.exchange(rank, payload)?;
+                let bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
+                traffic.record_allgather(&bits, &net);
+                let rank_order: Vec<&[u8]> = got.iter().map(|p| p.as_slice()).collect();
+                comp.update_levels(&rank_order)?;
+            }
+
+            // (2) base exchange
+            let base_vecs: Vec<Vec<f32>> = if let Some(xq) = state.base_query() {
+                let t0 = Instant::now();
+                oracle.sample(&xq, &mut g_buf);
+                let (bytes, _) = comp.compress(&g_buf)?;
+                traffic.add_compute(t0.elapsed().as_secs_f64());
+                exchange(bytes, &comp, &mut decoded, &mut traffic, &mut links)?;
+                if exact { decoded.clone() } else { neighborhood_view(&decoded) }
+            } else {
+                Vec::new()
+            };
+
+            // (3) extrapolate (identical on every replica when exact; the
+            //     replica's own neighborhood mean under gossip)
+            let x_half = state.extrapolate(&base_vecs)?;
+
+            // (4) half-step exchange
+            let t0 = Instant::now();
+            oracle.sample(&x_half, &mut g_buf);
+            let (bytes, _) = comp.compress(&g_buf)?;
+            traffic.add_compute(t0.elapsed().as_secs_f64());
+            exchange(bytes, &comp, &mut decoded, &mut traffic, &mut links)?;
+            if exact {
+                state.update(&decoded)?;
+            } else {
+                state.update(&neighborhood_view(&decoded))?;
+            }
+
+            // (5) evaluation
+            let eval_now = t % cfg.eval_every.max(1) == 0 || t == cfg.iters;
+            if eval_now && !exact {
+                if let Some((iterates, mean_avg)) = diag_exchange(
+                    rank,
+                    k,
+                    d,
+                    &transport,
+                    &state.x_world(),
+                    &state.ergodic_average(),
+                )? {
+                    rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
+                    if let Some(ev) = &gap_eval {
+                        rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
+                        rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
+                    }
+                }
+            } else if eval_now && rank == 0 {
+                let avg = state.ergodic_average();
+                if let Some(ev) = &gap_eval {
+                    rec.push("gap", t as f64, ev.gap(op.as_ref(), &avg));
+                    rec.push("dist", t as f64, ev.dist_to_center(&avg));
+                }
+            }
+            if eval_now && rank == 0 {
+                rec.push("gamma", t as f64, state.gamma());
+                rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+                rec.push("sim_time_cum", t as f64, traffic.total_time());
+                comp.record_layer_series(&mut rec, t as f64);
+            }
+        }
+        if rank == 0 {
+            rec.set_scalar("total_bits", traffic.bits_sent as f64);
+            rec.set_scalar("rounds", traffic.rounds as f64);
+            rec.set_scalar("level_updates", comp.updates() as f64);
+            rec.set_scalar("sim_net_time", traffic.sim_net_time);
+            rec.set_scalar("compute_time", traffic.compute_time);
+            rec.set_scalar("wire_links", links.links() as f64);
+            rec.set_scalar("max_link_bytes", links.max_link_bytes());
+            comp.emit_layer_scalars(&mut rec);
+        }
+        Ok((rec, state.x_world()))
+    }
+
+    /// Local-steps worker loop (`local.steps = H ≥ 2`): `H` private
+    /// extra-gradient iterations per communication round, then a quantized
+    /// **model-delta** exchange over the collective and a resync onto the
+    /// (neighborhood-)averaged delta. The threaded twin of
+    /// [`super::inline::run_experiment`]'s local runner; see that runner's
+    /// docs for the algorithm and the `coordinator::mod` docs for the
+    /// exact / gossip / local runner split.
+    ///
+    /// Diagnostics: the `sync_drift` series is computed on rank 0 from the
+    /// *decoded* deltas it already holds (no extra barrier) — under exact
+    /// topologies that is the global pre-averaging drift up to quantization
+    /// noise; under gossip it is rank 0's neighborhood view.
+    #[allow(clippy::too_many_arguments)]
+    fn worker_local_loop(
+        rank: usize,
+        cfg: &ExperimentConfig,
+        op: Arc<dyn qgenx::oracle::Operator>,
+        transport: Arc<AllGather>,
+        collective: Arc<dyn Collective>,
+        net: NetModel,
+        d: usize,
+    ) -> Result<(Recorder, Vec<f32>)> {
+        // A panic anywhere below must not strand peers at the barrier.
+        let _poison = transport.guard();
+        let k = cfg.workers;
+        let h = cfg.local.steps;
+        let recv_ranks = collective.recipients(rank);
+        let root = Rng::seed_from(cfg.seed);
+        let mut oracle =
+            build_oracle(op.clone(), &cfg.problem, cfg.seed ^ (rank as u64 + 1) * 0x9e37)?;
+        let mut comp = Compressor::from_config(&cfg.quant, root.fork(rank as u64 + 101))?;
+        let mut rep = LocalQGenX::new(
+            cfg.algo.variant,
+            &vec![0.0f32; d],
+            cfg.algo.gamma0,
+            cfg.algo.adaptive_step,
+        );
+        let gap_eval =
+            if rank == 0 { GapEvaluator::around_solution(op.as_ref(), 2.0) } else { None };
+        let adaptive = cfg.quant.adapts() && comp.is_quantized();
+        let update_every = cfg.quant.update_every;
+        // Same early-warmup due point as the inline local runner (and, in
+        // spirit, the per-step runners' UpdateSchedule) — deterministic in t,
+        // so every rank fires the stat barrier at the same syncs.
+        let mut next_stat_due = update_every.min(10);
+        let mut traffic = TrafficStats::default();
+        let mut links = LinkTraffic::new();
+        let mut rec = Recorder::new();
+        let mut sync_acc = SyncAccounting::new();
+        let mut g_buf = vec![0.0f32; d];
+        let mut decoded: Vec<Vec<f32>> = vec![vec![0.0f32; d]; k];
+
+        for t in 1..=cfg.iters {
+            // (1) One private extra-gradient iteration — no wire.
+            let t0 = Instant::now();
+            rep.local_round(oracle.as_mut(), &mut g_buf)?;
+            traffic.add_compute(t0.elapsed().as_secs_f64());
+
+            // (2) Delta synchronization every H iterations (plus final).
+            if t % h == 0 || t == cfg.iters {
+                let t0 = Instant::now();
+                let delta = rep.delta();
+                let (bytes, _) = comp.compress(&delta)?;
+                traffic.add_compute(t0.elapsed().as_secs_f64());
+                let (recv, bits) = collective.exchange(&transport, rank, bytes)?;
+                let bits_before = traffic.bits_sent;
+                collective.record_round(&bits, &net, &mut traffic);
+                for (sender, payload) in &recv {
+                    comp.decompress(payload, &mut decoded[*sender])?;
+                }
+                if rank == 0 {
+                    links.record(collective.as_ref(), &bits);
+                    // Drift of the decoded deltas == drift of the pre-averaging
+                    // iterates (the common sync base cancels in the deviations).
+                    let view: Vec<Vec<f32>> =
+                        recv_ranks.iter().map(|&r| decoded[r].clone()).collect();
+                    sync_acc.record(
+                        &mut rec,
+                        t,
+                        consensus_distance(&view),
+                        traffic.bits_sent - bits_before,
+                    );
+                }
+                let mut mean = vec![0.0f32; d];
+                for &w in &recv_ranks {
+                    for (m, &x) in mean.iter_mut().zip(decoded[w].iter()) {
+                        *m += x / recv_ranks.len() as f32;
+                    }
+                }
+                rep.resync(&mean)?;
+
+                // Control plane: global stat pooling at the first sync on or
+                // after each due point (identical schedule on all ranks).
+                if adaptive && update_every != 0 && t >= next_stat_due {
+                    let payload = comp.stats_payload();
+                    let got = transport.exchange(rank, payload)?;
+                    let stat_bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
+                    traffic.record_allgather(&stat_bits, &net);
+                    let rank_order: Vec<&[u8]> = got.iter().map(|p| p.as_slice()).collect();
+                    comp.update_levels(&rank_order)?;
+                    next_stat_due = t + update_every;
+                }
+            }
+
+            // (3) Evaluation via the shared out-of-band diagnostic exchange
+            //     (every rank calls it so the barrier matches; local mode
+            //     evaluates at the mean ergodic average across replicas, like
+            //     the inline local runner).
+            if t % cfg.eval_every.max(1) == 0 || t == cfg.iters {
+                if let Some((iterates, mean_avg)) = diag_exchange(
+                    rank,
+                    k,
+                    d,
+                    &transport,
+                    &rep.x_world(),
+                    &rep.ergodic_average(),
+                )? {
+                    rec.push("consensus_dist", t as f64, consensus_distance(&iterates));
+                    if let Some(ev) = &gap_eval {
+                        rec.push("gap", t as f64, ev.gap(op.as_ref(), &mean_avg));
+                        rec.push("dist", t as f64, ev.dist_to_center(&mean_avg));
+                    }
+                    rec.push("gamma", t as f64, rep.gamma());
+                    rec.push("bits_cum", t as f64, traffic.bits_sent as f64);
+                    rec.push("sim_time_cum", t as f64, traffic.total_time());
+                    comp.record_layer_series(&mut rec, t as f64);
+                }
+            }
+        }
+        if rank == 0 {
+            rec.set_scalar("total_bits", traffic.bits_sent as f64);
+            rec.set_scalar("rounds", traffic.rounds as f64);
+            rec.set_scalar("level_updates", comp.updates() as f64);
+            rec.set_scalar("sim_net_time", traffic.sim_net_time);
+            rec.set_scalar("compute_time", traffic.compute_time);
+            rec.set_scalar("wire_links", links.links() as f64);
+            rec.set_scalar("max_link_bytes", links.max_link_bytes());
+            rec.set_scalar("local_steps", h as f64);
+            sync_acc.emit_scalars(&mut rec);
+            comp.emit_layer_scalars(&mut rec);
+        }
+        // Report the final *sync base* as this replica's end state: the run
+        // ends on a sync, the consensus point is computed by identical
+        // arithmetic on every rank (bit-identical under exact topologies — the
+        // replication invariant `run_threaded` asserts), whereas the raw
+        // iterate can sit an origin-shift rounding ulp off it.
+        Ok((rec, rep.sync_base().to_vec()))
+    }
+
+}
+
+// ---------------------------------------------------------------------------
+// Comparison contract: everything deterministic must match exactly.
+// ---------------------------------------------------------------------------
+
+/// Series and scalars must match point-for-point and name-for-name.
+/// Exemptions: `sim_time_cum` (series) and `compute_time` (scalar) contain
+/// measured wall-clock compute, which no refactor can reproduce.
+fn assert_recorders_match(tag: &str, legacy: &Recorder, new: &Recorder) {
+    let ka: Vec<&String> = legacy.series.keys().collect();
+    let kb: Vec<&String> = new.series.keys().collect();
+    assert_eq!(ka, kb, "{tag}: series name sets must match");
+    for (name, s) in &legacy.series {
+        if name == "sim_time_cum" {
+            continue;
+        }
+        let n = new.get(name).unwrap();
+        assert_eq!(s.xs(), n.xs(), "{tag}/{name}: eval steps must match");
+        assert_eq!(s.ys(), n.ys(), "{tag}/{name}: values must match bit-for-bit");
+    }
+    let sa: Vec<&String> = legacy.scalars.keys().collect();
+    let sb: Vec<&String> = new.scalars.keys().collect();
+    assert_eq!(sa, sb, "{tag}: scalar name sets must match");
+    for (name, v) in &legacy.scalars {
+        if name == "compute_time" {
+            continue;
+        }
+        assert_eq!(*v, new.scalar(name).unwrap(), "{tag}/{name}: scalar must match");
+    }
+}
+
+fn base_cfg() -> qgenx::config::ExperimentConfig {
+    let mut cfg = qgenx::config::ExperimentConfig::default();
+    cfg.workers = 3;
+    cfg.iters = 300;
+    cfg.eval_every = 75;
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.dim = 16;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 0.3;
+    cfg.quant.update_every = 100;
+    cfg
+}
+
+// ------------------------------------------------------------ inline -------
+
+#[test]
+fn inline_exact_matches_legacy_for_all_variants() {
+    use qgenx::config::Variant;
+    for v in [Variant::DualAveraging, Variant::DualExtrapolation, Variant::OptimisticDualAveraging]
+    {
+        let mut cfg = base_cfg();
+        cfg.algo.variant = v;
+        cfg.iters = 250;
+        let old = legacy::run_experiment(&cfg).unwrap();
+        let new = qgenx::coordinator::run_experiment(&cfg).unwrap();
+        assert_recorders_match(&format!("exact/{v:?}"), &old, &new);
+    }
+}
+
+#[test]
+fn inline_exact_aggregating_topologies_match_legacy() {
+    for kind in ["star", "ring", "hierarchical"] {
+        let mut cfg = base_cfg();
+        cfg.workers = 6;
+        cfg.iters = 150;
+        cfg.eval_every = 50;
+        cfg.topo.kind = kind.into();
+        let old = legacy::run_experiment(&cfg).unwrap();
+        let new = qgenx::coordinator::run_experiment(&cfg).unwrap();
+        assert_recorders_match(&format!("exact/{kind}"), &old, &new);
+    }
+}
+
+#[test]
+fn inline_exact_layerwise_matches_legacy() {
+    let mut cfg = base_cfg();
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    cfg.quant.bucket_size = 8;
+    cfg.quant.layers.names = vec!["lo".into(), "hi".into()];
+    cfg.quant.layers.bounds = vec![8];
+    cfg.quant.layers.budget = 4.0;
+    let old = legacy::run_experiment(&cfg).unwrap();
+    let new = qgenx::coordinator::run_experiment(&cfg).unwrap();
+    assert_recorders_match("exact/layerwise", &old, &new);
+}
+
+#[test]
+fn inline_gossip_matches_legacy() {
+    let mut cfg = base_cfg();
+    cfg.workers = 8;
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    cfg.topo.kind = "gossip".into();
+    cfg.topo.degree = 3;
+    let old = legacy::run_experiment(&cfg).unwrap();
+    let new = qgenx::coordinator::run_experiment(&cfg).unwrap();
+    assert_recorders_match("gossip", &old, &new);
+}
+
+#[test]
+fn inline_local_matches_legacy() {
+    let mut cfg = base_cfg();
+    cfg.local.steps = 4;
+    let old = legacy::run_experiment(&cfg).unwrap();
+    let new = qgenx::coordinator::run_experiment(&cfg).unwrap();
+    assert_recorders_match("local", &old, &new);
+}
+
+#[test]
+fn inline_local_composed_with_gossip_matches_legacy() {
+    let mut cfg = base_cfg();
+    cfg.workers = 8;
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    cfg.local.steps = 5;
+    cfg.topo.kind = "gossip".into();
+    cfg.topo.degree = 3;
+    let old = legacy::run_experiment(&cfg).unwrap();
+    let new = qgenx::coordinator::run_experiment(&cfg).unwrap();
+    assert_recorders_match("local+gossip", &old, &new);
+}
+
+#[test]
+fn qsgda_matches_legacy() {
+    let cfg = base_cfg();
+    let old = legacy::run_qsgda_baseline(&cfg).unwrap();
+    let new = qgenx::coordinator::run_qsgda_baseline(&cfg).unwrap();
+    assert_recorders_match("qsgda", &old, &new);
+    // The baseline's CLI contract: exactly one summary scalar, as seeded.
+    assert_eq!(new.scalars.len(), 1, "qsgda must emit only total_bits");
+}
+
+// ---------------------------------------------------------- threaded -------
+
+#[test]
+fn threaded_exact_matches_legacy() {
+    let mut cfg = base_cfg();
+    cfg.iters = 150;
+    cfg.eval_every = 50;
+    cfg.quant.update_every = 60;
+    let old = legacy::run_threaded(&cfg).unwrap();
+    let new = qgenx::coordinator::run_threaded(&cfg).unwrap();
+    assert_eq!(old.replicas, new.replicas, "exact replicas must match bit-for-bit");
+    assert_recorders_match("threaded/exact", &old.recorder, &new.recorder);
+}
+
+#[test]
+fn threaded_gossip_matches_legacy() {
+    let mut cfg = base_cfg();
+    cfg.workers = 5;
+    cfg.iters = 120;
+    cfg.eval_every = 40;
+    cfg.topo.kind = "gossip".into();
+    cfg.topo.degree = 2;
+    let old = legacy::run_threaded(&cfg).unwrap();
+    let new = qgenx::coordinator::run_threaded(&cfg).unwrap();
+    assert_eq!(old.replicas, new.replicas, "gossip replicas are deterministic per rank");
+    assert_recorders_match("threaded/gossip", &old.recorder, &new.recorder);
+}
+
+#[test]
+fn threaded_local_matches_legacy() {
+    let mut cfg = base_cfg();
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    cfg.local.steps = 4;
+    let old = legacy::run_threaded(&cfg).unwrap();
+    let new = qgenx::coordinator::run_threaded(&cfg).unwrap();
+    assert_eq!(old.replicas, new.replicas, "local sync bases must match bit-for-bit");
+    assert_recorders_match("threaded/local", &old.recorder, &new.recorder);
+}
+
+#[test]
+fn threaded_fp32_bit_accounting_matches_legacy_exactly() {
+    // fp32 payloads are deterministic in size, so even the transport
+    // fabric's whole-byte accounting must agree to the bit.
+    let mut cfg = base_cfg();
+    cfg.iters = 60;
+    cfg.eval_every = 30;
+    cfg.quant.mode = qgenx::config::QuantMode::Fp32;
+    let old = legacy::run_threaded(&cfg).unwrap();
+    let new = qgenx::coordinator::run_threaded(&cfg).unwrap();
+    assert_eq!(old.replicas, new.replicas);
+    assert_recorders_match("threaded/fp32", &old.recorder, &new.recorder);
+}
