@@ -1,82 +1,287 @@
 //! §Perf — L3 hot-path microbenchmarks: quantize, entropy-encode, decode,
-//! dequantize, and the whole compressor round-trip, at model-scale d.
+//! dequantize, and the whole compressor round-trip, across the
+//! UQ4/UQ8 × Ψ-codec × bucket-size matrix.
+//!
+//! Besides the printed table this emits `results/BENCH_hotpath.json`
+//! (schema in `docs/PERF.md`) — ns/coordinate and allocations/message per
+//! stage — seeding the repo's perf trajectory so future PRs can show
+//! "measurably faster" against a baseline instead of an anecdote.
+//!
+//! Knobs: `QGENX_BENCH_FAST=1` shrinks the workload for smoke runs (the
+//! CI `perf-smoke` job), `QGENX_BENCH_DIM` pins `d` explicitly, and
+//! `QGENX_BENCH_OUT` moves the JSON artifact.
 //!
 //! Targets (DESIGN.md §Perf): single-thread quantize+encode ≥ 400 MB/s so
 //! the wire path is never the bottleneck against a 1 GbE (≈ 117 MiB/s)
-//! link; the compressor round trip must cost well below the modeled
-//! network saving it buys.
+//! link; steady-state compress/decompress must not allocate; the LUT
+//! Huffman decoder must beat the per-bit reference ≥ 2×.
 
-use qgenx::benchkit::{bench, fmt_secs, fmt_throughput, scaled, Table};
-use qgenx::coding::SymbolCodec;
+use qgenx::benchkit::{
+    bench, env_usize, fmt_secs, fmt_throughput, scaled, write_json, Table,
+};
+use qgenx::coding::{BitReader, HuffmanCode, SymbolCodec};
 use qgenx::config::{LevelScheme, QuantConfig, QuantMode};
 use qgenx::coordinator::Compressor;
 use qgenx::net::NetModel;
 use qgenx::quant::{
-    decode_vector, dequantize, encode_vector, quantize, symbol_probs, Levels, SufficientStats,
-    WireCodec,
+    decode_vector_into, dequantize_into, encode_vector_into, quantize_into, symbol_probs,
+    Levels, QuantizedVector, SufficientStats,
 };
+use qgenx::runtime::json::Json;
 use qgenx::util::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counting wrapper over the system allocator: `allocs()` deltas give the
+/// allocations-per-message numbers in the JSON (alloc/realloc/alloc_zeroed
+/// each count once; frees are not counted).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Allocations across `calls` invocations of `f`, averaged.
+fn allocs_per_call<F: FnMut()>(calls: u64, mut f: F) -> f64 {
+    let before = allocs();
+    for _ in 0..calls {
+        f();
+    }
+    (allocs() - before) as f64 / calls as f64
+}
+
+fn case(
+    stage: &str,
+    quant: &str,
+    codec: Option<&str>,
+    bucket: usize,
+    d: usize,
+    secs: f64,
+    allocs_msg: f64,
+    extra: &[(&str, Json)],
+) -> Json {
+    let mut m = BTreeMap::from([
+        ("stage".to_string(), Json::Str(stage.into())),
+        ("quant".to_string(), Json::Str(quant.into())),
+        (
+            "codec".to_string(),
+            codec.map(|c| Json::Str(c.into())).unwrap_or(Json::Null),
+        ),
+        ("bucket".to_string(), Json::Num(bucket as f64)),
+        ("ns_per_coord".to_string(), Json::Num(secs * 1e9 / d as f64)),
+        ("mb_per_s".to_string(), Json::Num(4.0 * d as f64 / secs / 1e6)),
+        ("allocs_per_message".to_string(), Json::Num(allocs_msg)),
+    ]);
+    for (k, v) in extra {
+        m.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(m)
+}
+
+/// The frozen per-bit reference decode walk (what `decode_vector` did
+/// before the LUT): canonical first-code Huffman symbol by symbol, one
+/// sign bit per nonzero. Fills a caller-owned arena so the comparison
+/// against the LUT path is allocation-for-allocation fair.
+fn ref_decode_huffman(
+    bytes: &[u8],
+    d: usize,
+    bucket: usize,
+    huff: &HuffmanCode,
+    out: &mut QuantizedVector,
+) {
+    let b = if bucket == 0 { d } else { bucket };
+    out.d = d;
+    out.bucket_size = b;
+    out.norms.clear();
+    out.symbols.clear();
+    out.symbols.resize(d, 0);
+    out.sign_words.clear();
+    out.sign_words.resize(d.div_ceil(64), 0);
+    let mut r = BitReader::new(bytes);
+    for bi in 0..d.div_ceil(b) {
+        let norm = r.read_f32().unwrap();
+        out.norms.push(norm);
+        if norm == 0.0 {
+            continue;
+        }
+        for i in bi * b..((bi + 1) * b).min(d) {
+            let sym = huff.decode_linear(&mut r).unwrap() as u16;
+            out.symbols[i] = sym;
+            if sym != 0 && r.read_bit().unwrap() {
+                out.sign_words[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+    }
+}
 
 fn main() {
     println!("== §Perf: wire-path microbenchmarks ==\n");
-    let d = scaled(4_000_000, 400_000);
+    let fast = qgenx::benchkit::fast_mode();
+    let d = env_usize("QGENX_BENCH_DIM", scaled(1_000_000, 20_000));
     let bytes = 4 * d;
-    let reps = scaled(10, 3);
+    let reps = scaled(7, 2);
+    let alloc_calls = 3u64;
     let mut rng = Rng::seed_from(0x9e7f);
     let v = rng.gaussian_vec(d, 1.0);
-    let levels = Levels::uniform(14);
 
-    let mut stats = SufficientStats::new(256, 2);
-    stats.observe_bucketed(&v, 1024);
-    let probs = symbol_probs(&stats, &levels);
+    let mut table =
+        Table::new(&["stage", "quant", "codec", "bucket", "median", "ns/coord", "allocs/msg"]);
+    let mut cases: Vec<Json> = Vec::new();
+    let mut huffman_speedups: Vec<f64> = Vec::new();
 
-    let mut table = Table::new(&["stage", "median", "throughput (vs f32 input)"]);
+    for (quant, s) in [("uq4", 14usize), ("uq8", 254usize)] {
+        let levels = Levels::uniform(s);
+        let mut stats = SufficientStats::new(256, 2);
+        stats.observe_bucketed(&v, 1024);
+        let probs = symbol_probs(&stats, &levels);
+        for bucket in [256usize, 1024] {
+            // -- quantize (codec-independent) --------------------------
+            let mut q_rng = Rng::seed_from(1);
+            let mut arena = QuantizedVector::default();
+            quantize_into(&v, &levels, 2, bucket, &mut q_rng, &mut arena).unwrap();
+            let t = bench("quantize", 1, reps, || {
+                quantize_into(&v, &levels, 2, bucket, &mut q_rng, &mut arena).unwrap();
+                std::hint::black_box(arena.symbols.len());
+            });
+            let a = allocs_per_call(alloc_calls, || {
+                quantize_into(&v, &levels, 2, bucket, &mut q_rng, &mut arena).unwrap();
+            });
+            push_row(&mut table, "quantize", quant, "-", bucket, &t, d, a);
+            cases.push(case("quantize", quant, None, bucket, d, t.median(), a, &[]));
 
-    // quantize
-    let mut q_rng = Rng::seed_from(1);
-    let t = bench("quantize", 1, reps, || {
-        let qv = quantize(&v, &levels, 2, 1024, &mut q_rng).unwrap();
-        std::hint::black_box(qv.symbols.len());
-    });
-    table.row(&["quantize (bucketed L2)".into(), fmt_secs(t.median()), fmt_throughput(bytes, t.median())]);
+            // -- dequantize (codec-independent) ------------------------
+            let mut out = vec![0.0f32; d];
+            let t = bench("dequantize", 1, reps, || {
+                dequantize_into(&arena, &levels, &mut out);
+                std::hint::black_box(out[0]);
+            });
+            let a = allocs_per_call(alloc_calls, || {
+                dequantize_into(&arena, &levels, &mut out);
+            });
+            push_row(&mut table, "dequantize", quant, "-", bucket, &t, d, a);
+            cases.push(case("dequantize", quant, None, bucket, d, t.median(), a, &[]));
 
-    let qv = quantize(&v, &levels, 2, 1024, &mut q_rng).unwrap();
+            for kind in [
+                SymbolCodec::Fixed,
+                SymbolCodec::EliasGamma,
+                SymbolCodec::EliasDelta,
+                SymbolCodec::Huffman,
+            ] {
+                let codec = match kind {
+                    SymbolCodec::Huffman => {
+                        qgenx::quant::WireCodec::new(kind, &levels, Some(&probs)).unwrap()
+                    }
+                    _ => qgenx::quant::WireCodec::new(kind, &levels, None).unwrap(),
+                };
+                // -- encode -------------------------------------------
+                let mut wire = Vec::new();
+                encode_vector_into(&arena, &codec, &mut wire).unwrap();
+                let wire_bytes = wire.len();
+                let t = bench("encode", 1, reps, || {
+                    wire.clear();
+                    encode_vector_into(&arena, &codec, &mut wire).unwrap();
+                    std::hint::black_box(wire.len());
+                });
+                let a = allocs_per_call(alloc_calls, || {
+                    wire.clear();
+                    encode_vector_into(&arena, &codec, &mut wire).unwrap();
+                });
+                push_row(&mut table, "encode", quant, kind.name(), bucket, &t, d, a);
+                cases.push(case(
+                    "encode",
+                    quant,
+                    Some(kind.name()),
+                    bucket,
+                    d,
+                    t.median(),
+                    a,
+                    &[("wire_bytes", Json::Num(wire_bytes as f64))],
+                ));
 
-    // encode per codec
-    for kind in [SymbolCodec::Fixed, SymbolCodec::EliasGamma, SymbolCodec::Huffman] {
-        let codec = match kind {
-            SymbolCodec::Huffman => WireCodec::new(kind, &levels, Some(&probs)).unwrap(),
-            _ => WireCodec::new(kind, &levels, None).unwrap(),
-        };
-        let t = bench(kind.name(), 1, reps, || {
-            let (b, _) = encode_vector(&qv, &codec).unwrap();
-            std::hint::black_box(b.len());
-        });
-        table.row(&[
-            format!("encode ({})", kind.name()),
-            fmt_secs(t.median()),
-            fmt_throughput(bytes, t.median()),
-        ]);
-        let (wire, _) = encode_vector(&qv, &codec).unwrap();
-        let t = bench("decode", 1, reps, || {
-            let out = decode_vector(&wire, d, 1024, &codec).unwrap();
-            std::hint::black_box(out.symbols.len());
-        });
-        table.row(&[
-            format!("decode ({})", kind.name()),
-            fmt_secs(t.median()),
-            fmt_throughput(bytes, t.median()),
-        ]);
+                // -- decode -------------------------------------------
+                let mut dec = QuantizedVector::default();
+                decode_vector_into(&wire, d, bucket, &codec, &mut dec).unwrap();
+                assert_eq!(dec, arena, "decode must invert encode");
+                let t = bench("decode", 1, reps, || {
+                    decode_vector_into(&wire, d, bucket, &codec, &mut dec).unwrap();
+                    std::hint::black_box(dec.symbols.len());
+                });
+                let a = allocs_per_call(alloc_calls, || {
+                    decode_vector_into(&wire, d, bucket, &codec, &mut dec).unwrap();
+                });
+                let mut extra = vec![("wire_bytes", Json::Num(wire_bytes as f64))];
+                if kind == SymbolCodec::Huffman {
+                    // Per-bit reference decoder: the ≥ 2× claim's baseline.
+                    let huff = HuffmanCode::from_weights(
+                        &probs.iter().map(|p| p.max(1e-9)).collect::<Vec<_>>(),
+                    )
+                    .unwrap();
+                    let mut ref_dec = QuantizedVector::default();
+                    ref_decode_huffman(&wire, d, bucket, &huff, &mut ref_dec);
+                    assert_eq!(ref_dec, arena, "reference decode must agree");
+                    let t_ref = bench("decode-ref", 1, reps, || {
+                        ref_decode_huffman(&wire, d, bucket, &huff, &mut ref_dec);
+                        std::hint::black_box(ref_dec.symbols.len());
+                    });
+                    let speedup = t_ref.median() / t.median();
+                    huffman_speedups.push(speedup);
+                    extra.push((
+                        "ref_ns_per_coord",
+                        Json::Num(t_ref.median() * 1e9 / d as f64),
+                    ));
+                    extra.push(("speedup_vs_ref", Json::Num(speedup)));
+                    push_row(
+                        &mut table,
+                        "decode-ref",
+                        quant,
+                        "huffman/bit",
+                        bucket,
+                        &t_ref,
+                        d,
+                        0.0,
+                    );
+                }
+                push_row(&mut table, "decode", quant, kind.name(), bucket, &t, d, a);
+                cases.push(case(
+                    "decode",
+                    quant,
+                    Some(kind.name()),
+                    bucket,
+                    d,
+                    t.median(),
+                    a,
+                    &extra,
+                ));
+            }
+        }
     }
+    table.print();
 
-    // dequantize
-    let t = bench("dequantize", 1, reps, || {
-        let out = dequantize(&qv, &levels);
-        std::hint::black_box(out.len());
-    });
-    table.row(&["dequantize".into(), fmt_secs(t.median()), fmt_throughput(bytes, t.median())]);
-
-    // full compressor round trip (what the coordinator actually runs)
+    // -- full compressor round trip (what the coordinator actually runs) --
     let mut comp = Compressor::from_config(
         &QuantConfig {
             mode: QuantMode::Quantized { levels: 14 },
@@ -88,38 +293,92 @@ fn main() {
         Rng::seed_from(2),
     )
     .unwrap();
-    // prime Huffman with real probabilities via one update
-    let _ = comp.compress(&v).unwrap();
+    let mut wire = Vec::new();
     let mut out = vec![0.0f32; d];
+    comp.compress_into(&v, &mut wire).unwrap();
+    comp.decompress_into(&wire, &mut out).unwrap();
     let t_rt = bench("roundtrip", 1, reps, || {
-        let (wire, _) = comp.compress(&v).unwrap();
-        comp.decompress(&wire, &mut out).unwrap();
+        comp.compress_into(&v, &mut wire).unwrap();
+        comp.decompress_into(&wire, &mut out).unwrap();
         std::hint::black_box(out[0]);
     });
-    table.row(&[
-        "compressor round-trip".into(),
+    let rt_allocs = allocs_per_call(alloc_calls, || {
+        comp.compress_into(&v, &mut wire).unwrap();
+        comp.decompress_into(&wire, &mut out).unwrap();
+    });
+    println!(
+        "\ncompressor round-trip: {} ({}), {} allocs/message",
         fmt_secs(t_rt.median()),
         fmt_throughput(bytes, t_rt.median()),
-    ]);
-    table.print();
+        rt_allocs,
+    );
+    assert_eq!(
+        rt_allocs, 0.0,
+        "steady-state compress/decompress must not allocate"
+    );
 
     // Economics: is the codec cheaper than the network saving it buys?
     let net = NetModel::gbe();
-    let (wire, _) = comp.compress(&v).unwrap();
     let t_fp32 = net.allgather_time(&[bytes; 3]);
     let t_q = net.allgather_time(&[wire.len(); 3]);
     let saving = t_fp32 - t_q;
     let cost = t_rt.median();
     println!(
-        "\neconomics at d={d}, K=3, 1GbE: network saving {}/round vs codec cost {}/vector — {}",
+        "economics at d={d}, K=3, 1GbE: network saving {}/round vs codec cost {}/vector — {}",
         fmt_secs(saving),
         fmt_secs(cost),
         if cost < saving { "PROFITABLE" } else { "NOT profitable at this scale" },
     );
+
+    let speedup_min =
+        huffman_speedups.iter().cloned().fold(f64::INFINITY, f64::min);
     println!(
-        "wire size: {:.2} MB vs {:.2} MB fp32 ({:.1}x)",
-        wire.len() as f64 / 1e6,
-        bytes as f64 / 1e6,
-        bytes as f64 / wire.len() as f64
+        "huffman LUT decode speedup vs per-bit reference: min {:.2}x across {} configs",
+        speedup_min,
+        huffman_speedups.len()
     );
+
+    let doc = Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("perf_hotpath".into())),
+        ("schema".to_string(), Json::Num(1.0)),
+        ("mode".to_string(), Json::Str(if fast { "fast".into() } else { "full".into() })),
+        ("d".to_string(), Json::Num(d as f64)),
+        ("reps".to_string(), Json::Num(reps as f64)),
+        ("cases".to_string(), Json::Arr(cases)),
+        ("huffman_decode_speedup_min".to_string(), Json::Num(speedup_min)),
+        (
+            "roundtrip".to_string(),
+            Json::Obj(BTreeMap::from([
+                ("ns_per_coord".to_string(), Json::Num(t_rt.median() * 1e9 / d as f64)),
+                ("allocs_per_message".to_string(), Json::Num(rt_allocs)),
+                ("wire_bytes".to_string(), Json::Num(wire.len() as f64)),
+            ])),
+        ),
+    ]));
+    let out_path = std::env::var("QGENX_BENCH_OUT")
+        .unwrap_or_else(|_| "results/BENCH_hotpath.json".to_string());
+    write_json(&out_path, &doc).unwrap();
+    println!("json -> {out_path}");
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    table: &mut Table,
+    stage: &str,
+    quant: &str,
+    codec: &str,
+    bucket: usize,
+    t: &qgenx::benchkit::Timing,
+    d: usize,
+    allocs_msg: f64,
+) {
+    table.row(&[
+        stage.to_string(),
+        quant.to_string(),
+        codec.to_string(),
+        bucket.to_string(),
+        fmt_secs(t.median()),
+        format!("{:.2}", t.median() * 1e9 / d as f64),
+        format!("{allocs_msg:.1}"),
+    ]);
 }

@@ -80,6 +80,28 @@ pub fn scaled(n: usize, fast: usize) -> usize {
     }
 }
 
+/// Read a `usize` knob from the environment (the `QGENX_EXAMPLE_ITERS`
+/// pattern, generalized): unset or unparsable values fall back to
+/// `default`. The perf harness uses `QGENX_BENCH_DIM` to pin the workload
+/// size explicitly (e.g. the CI `perf-smoke` job).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Write a JSON document (creating parent dirs), trailing newline
+/// included. Content is [`crate::runtime::json::Json::dump`] — sorted
+/// keys, deterministic, re-parsable by the same module. This is how
+/// benches emit the machine-readable `BENCH_*.json` trajectory files next
+/// to their printed tables.
+pub fn write_json(path: &str, doc: &crate::runtime::json::Json) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut out = doc.dump();
+    out.push('\n');
+    std::fs::write(path, out)
+}
+
 /// Time `f` with `warmup` unmeasured runs then `reps` measured runs.
 pub fn bench<F: FnMut()>(label: &str, warmup: usize, reps: usize, mut f: F) -> Timing {
     for _ in 0..warmup {
@@ -250,6 +272,27 @@ mod tests {
         let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(-0.5)).collect();
         let s = loglog_slope(&xs, &ys);
         assert!((s + 0.5).abs() < 1e-9, "slope={s}");
+    }
+
+    #[test]
+    fn env_usize_falls_back_on_missing_or_garbage() {
+        assert_eq!(env_usize("QGENX_TEST_KNOB_THAT_IS_NEVER_SET", 7), 7);
+    }
+
+    #[test]
+    fn write_json_emits_reparsable_document() {
+        use crate::runtime::json::Json;
+        use std::collections::BTreeMap;
+        let doc = Json::Obj(BTreeMap::from([
+            ("bench".to_string(), Json::Str("x".into())),
+            ("n".to_string(), Json::Num(3.0)),
+        ]));
+        let path = std::env::temp_dir().join("qgenx_benchkit_write_json.json");
+        let path = path.to_str().unwrap();
+        write_json(path, &doc).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(back, doc);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -7,10 +7,22 @@
 
 use crate::error::{Error, Result};
 
+/// Reverse the low `n` bits of `v`. The LSB-first writer emits a value's
+/// bit 0 first, so an MSB-first codeword (canonical Huffman, Elias
+/// mantissas) goes on the wire as its bit-reversal — shared by both
+/// codecs' word-at-a-time fast paths.
+#[inline]
+pub(crate) fn reverse_low_bits(v: u64, n: u32) -> u64 {
+    debug_assert!(n >= 1 && n <= 64);
+    v.reverse_bits() >> (64 - n)
+}
+
 /// Append-only bit sink backed by `Vec<u8>`.
 #[derive(Default, Debug)]
 pub struct BitWriter {
     buf: Vec<u8>,
+    /// bytes already present when this writer took over (see [`Self::over`])
+    base: usize,
     /// staging register, LSB-first
     acc: u64,
     /// number of valid bits in `acc`
@@ -23,13 +35,25 @@ impl BitWriter {
     }
 
     pub fn with_capacity(bytes: usize) -> Self {
-        BitWriter { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0 }
+        BitWriter { buf: Vec::with_capacity(bytes), base: 0, acc: 0, nbits: 0 }
     }
 
-    /// Total bits written so far.
+    /// Take over an existing buffer and *append* to it. Existing content is
+    /// kept verbatim (it must be byte-aligned by construction — this writer
+    /// starts at a byte boundary) and excluded from [`Self::bit_len`].
+    /// The zero-allocation hot path hands its reusable payload buffer
+    /// through here via `std::mem::take`, then reclaims it from
+    /// [`Self::finish`].
+    pub fn over(buf: Vec<u8>) -> Self {
+        let base = buf.len();
+        BitWriter { buf, base, acc: 0, nbits: 0 }
+    }
+
+    /// Bits written *by this writer* (content predating [`Self::over`] is
+    /// not counted).
     #[inline]
     pub fn bit_len(&self) -> u64 {
-        (self.buf.len() as u64) * 8 + self.nbits as u64
+        ((self.buf.len() - self.base) as u64) * 8 + self.nbits as u64
     }
 
     /// Write the low `n` bits of `value` (n <= 57 to keep the staging
@@ -147,10 +171,16 @@ impl<'a> BitReader<'a> {
         (self.acc & mask, avail)
     }
 
-    /// Consume `n` bits previously peeked.
+    /// Consume `n` bits previously peeked, clamped to the bits actually
+    /// buffered. A [`Self::peek_bits`] can return fewer bits than requested
+    /// near the end of the stream; skipping more than that is a caller bug,
+    /// but it must not corrupt the stream — the old `debug_assert!`-only
+    /// guard let `self.nbits` wrap in release builds, silently turning the
+    /// rest of the message into garbage. Clamping instead leaves the reader
+    /// drained, so the next read reports truncation.
     #[inline]
     pub fn skip_bits(&mut self, n: u32) {
-        debug_assert!(self.nbits >= n);
+        let n = n.min(self.nbits);
         self.acc >>= n;
         self.nbits -= n;
     }
@@ -221,6 +251,59 @@ mod tests {
                 assert_eq!(r.read_bits(n).unwrap(), v);
             }
         });
+    }
+
+    #[test]
+    fn skip_more_than_buffered_saturates_instead_of_wrapping() {
+        // Regression: skip_bits(n) with n > buffered bits used to wrap
+        // `nbits` (u32 underflow) in release builds and silently corrupt
+        // every subsequent read. It must drain the reader instead, so the
+        // next read reports truncation.
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        let (_, avail) = r.peek_bits(8);
+        assert_eq!(avail, 8); // one padded byte buffered
+        r.skip_bits(13); // more than buffered: clamps to 8
+        assert_eq!(r.bits_read(), 8);
+        assert!(r.read_bits(1).is_err(), "drained reader must report truncation");
+        // An entirely fresh reader skipping past the end behaves the same.
+        let mut r2 = BitReader::new(&bytes);
+        r2.skip_bits(64);
+        assert_eq!(r2.bits_read(), 0, "nothing buffered yet: nothing skipped");
+        assert_eq!(r2.read_bits(3).unwrap(), 0b101);
+    }
+
+    #[test]
+    fn over_appends_and_counts_only_new_bits() {
+        let mut w = BitWriter::new();
+        w.write_u32(0xAABB_CCDD);
+        let bytes = w.finish();
+        let mut w2 = BitWriter::over(bytes);
+        assert_eq!(w2.bit_len(), 0, "pre-existing bytes are not counted");
+        w2.write_bits(0b11, 2);
+        assert_eq!(w2.bit_len(), 2);
+        let all = w2.finish();
+        assert_eq!(all.len(), 5);
+        let mut r = BitReader::new(&all);
+        assert_eq!(r.read_u32().unwrap(), 0xAABB_CCDD);
+        assert_eq!(r.read_bits(2).unwrap(), 0b11);
+    }
+
+    #[test]
+    fn over_reuses_capacity_without_reallocating() {
+        let mut buf = Vec::with_capacity(64);
+        for round in 0..3u64 {
+            buf.clear();
+            let ptr = buf.as_ptr();
+            let mut w = BitWriter::over(std::mem::take(&mut buf));
+            w.write_bits(round, 7);
+            w.write_u32(round as u32);
+            buf = w.finish();
+            assert_eq!(buf.as_ptr(), ptr, "steady state must reuse the buffer");
+            assert_eq!(buf.capacity(), 64);
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!   bits, asymptotically shorter than γ.
 //! * ω(n): Elias' recursive code ("recursive coding" in Appendix K).
 
-use super::bitio::{BitReader, BitWriter};
+use super::bitio::{reverse_low_bits, BitReader, BitWriter};
 use crate::error::{Error, Result};
 
 #[inline]
@@ -23,14 +23,21 @@ fn ilog2(n: u64) -> u32 {
 pub fn gamma_encode(w: &mut BitWriter, n: u64) {
     assert!(n >= 1, "Elias gamma needs n >= 1");
     let nb = ilog2(n);
-    // nb zeros (LSB-first writer: bits come out in write order)
+    if nb <= 28 {
+        // Whole codeword in one call (2·nb+1 ≤ 57): nb zeros, then the
+        // nb+1 significant bits of n MSB-first — i.e. their bit-reversal
+        // shifted past the zero run. Bit-identical to the per-bit loop
+        // below (pinned by `tests/encode_parity.rs`).
+        let rev = reverse_low_bits(n, nb + 1);
+        w.write_bits(rev << nb, 2 * nb + 1);
+        return;
+    }
+    // Rare big-n path (symbols here are small): the original per-bit loop.
     w.write_bits(0, nb.min(57));
     if nb > 57 {
         w.write_bits(0, nb - 57);
     }
-    // then the number itself MSB-first: emit the leading 1 then remaining bits.
     w.write_bit(true);
-    // remaining nb bits, MSB first
     for i in (0..nb).rev() {
         w.write_bit((n >> i) & 1 == 1);
     }
@@ -38,6 +45,22 @@ pub fn gamma_encode(w: &mut BitWriter, n: u64) {
 
 /// Decode γ.
 pub fn gamma_decode(r: &mut BitReader) -> Result<u64> {
+    // Fast path: when the whole codeword sits in one peek, resolve the
+    // zero run with `trailing_zeros` and the mantissa with one more peek.
+    let (peek, avail) = r.peek_bits(57);
+    if peek != 0 {
+        let nb = peek.trailing_zeros();
+        if 2 * nb + 1 <= avail {
+            r.skip_bits(nb + 1); // the zero run and the leading 1
+            if nb == 0 {
+                return Ok(1);
+            }
+            let (body, body_avail) = r.peek_bits(nb);
+            debug_assert_eq!(body_avail, nb);
+            r.skip_bits(nb);
+            return Ok((1u64 << nb) | reverse_low_bits(body, nb));
+        }
+    }
     let mut nb = 0u32;
     loop {
         if r.read_bit()? {
@@ -66,8 +89,18 @@ pub fn delta_encode(w: &mut BitWriter, n: u64) {
     assert!(n >= 1);
     let nb = ilog2(n);
     gamma_encode(w, nb as u64 + 1);
-    for i in (0..nb).rev() {
-        w.write_bit((n >> i) & 1 == 1);
+    if nb == 0 {
+        return;
+    }
+    // The nb mantissa bits (below the leading 1) MSB-first, emitted as
+    // their bit-reversal in at most two calls (write_bits caps at 57).
+    let mantissa = n & ((1u64 << nb) - 1);
+    let rev = reverse_low_bits(mantissa, nb);
+    if nb <= 57 {
+        w.write_bits(rev, nb);
+    } else {
+        w.write_bits(rev & ((1u64 << 57) - 1), 57);
+        w.write_bits(rev >> 57, nb - 57);
     }
 }
 
@@ -76,6 +109,17 @@ pub fn delta_decode(r: &mut BitReader) -> Result<u64> {
     let nb = gamma_decode(r)? - 1;
     if nb > 63 {
         return Err(Error::Codec("delta: length field too large".into()));
+    }
+    if nb == 0 {
+        return Ok(1);
+    }
+    if nb <= 57 {
+        // Fast path: the whole mantissa in one peek.
+        let (body, avail) = r.peek_bits(nb as u32);
+        if avail == nb as u32 {
+            r.skip_bits(nb as u32);
+            return Ok((1u64 << nb) | reverse_low_bits(body, nb as u32));
+        }
     }
     let mut n = 1u64;
     for _ in 0..nb {
@@ -226,6 +270,32 @@ mod tests {
                 assert_eq!(gamma_decode(&mut r).unwrap(), n);
             }
         });
+    }
+
+    #[test]
+    fn roundtrip_across_fast_slow_boundaries() {
+        // gamma's one-call fast path covers nb ≤ 28; exercise both sides
+        // of that boundary plus the 57-bit mantissa split in delta.
+        for n in [
+            (1u64 << 28) - 1,
+            1 << 28,
+            (1 << 29) - 1,
+            1 << 29,
+            (1 << 57) + 12345,
+            u64::MAX / 2,
+        ] {
+            let mut w = BitWriter::new();
+            gamma_encode(&mut w, n);
+            delta_encode(&mut w, n);
+            let bytes = w.finish();
+            assert_eq!(w_len_check(&bytes, n), n);
+        }
+    }
+
+    fn w_len_check(bytes: &[u8], n: u64) -> u64 {
+        let mut r = BitReader::new(bytes);
+        assert_eq!(gamma_decode(&mut r).unwrap(), n);
+        delta_decode(&mut r).unwrap()
     }
 
     #[test]

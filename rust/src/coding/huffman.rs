@@ -10,12 +10,21 @@
 //! be shipped to peers when levels are re-optimized (schedule `U`), and
 //! decoding can use the fast canonical per-length first-code method.
 
-use super::bitio::{BitReader, BitWriter};
+use super::bitio::{reverse_low_bits, BitReader, BitWriter};
 use crate::error::{Error, Result};
 
 /// Maximum codeword length we allow (alphabets here are ≤ a few hundred
-/// symbols; 32 is generous and keeps the decoder tables tiny).
+/// symbols; 32 is generous and keeps the decoder tables tiny). Codes that
+/// would exceed it are flattened by the Kraft-rebalancing fallback in
+/// [`HuffmanCode::from_weights`].
 pub const MAX_CODE_LEN: u32 = 32;
+
+/// Width of the one-shot decode LUT: a peek of this many stream bits
+/// resolves every codeword of length ≤ `DECODE_LUT_BITS` in one table
+/// load. 12 bits ⇒ 4096 entries × 4 bytes = 16 KiB per table — covers
+/// essentially every symbol of the gradient-index distributions here
+/// (longer codes take the canonical first-code fallback).
+const DECODE_LUT_BITS: u32 = 12;
 
 /// A canonical Huffman code over symbols `0..n`.
 #[derive(Clone, Debug)]
@@ -24,11 +33,19 @@ pub struct HuffmanCode {
     lengths: Vec<u32>,
     /// canonical codeword per symbol, MSB-first value
     codes: Vec<u64>,
+    /// bit-reversed codeword per symbol: the exact value `write_bits`
+    /// emits so encoding is one call, not a per-bit loop
+    rev_codes: Vec<u64>,
     /// decode tables: for each length L, (first_code[L], index into
     /// `symbols_by_code` where codes of length L start)
     first_code: Vec<u64>,
     first_index: Vec<usize>,
     symbols_by_code: Vec<u32>,
+    /// effective LUT width: `min(max_len, DECODE_LUT_BITS)`
+    lut_bits: u32,
+    /// one-shot decode LUT indexed by the next `lut_bits` stream bits
+    /// (LSB-first): `(symbol << 8) | length`, 0 = no short code here
+    lut: Vec<u32>,
 }
 
 impl HuffmanCode {
@@ -116,7 +133,11 @@ impl HuffmanCode {
                 let root = heap.pop().unwrap();
                 walk(&root, 0, &mut lengths);
                 if lengths.iter().any(|&l| l > MAX_CODE_LEN) {
-                    return Err(Error::Codec("huffman: code length overflow".into()));
+                    // Length-limited fallback: with 256-symbol UQ8 alphabets
+                    // and exponentially-decaying probabilities floored at
+                    // 1e-9, plain Huffman can exceed MAX_CODE_LEN — this
+                    // used to hard-error and kill a run mid-training.
+                    limit_lengths(&mut lengths, weights, MAX_CODE_LEN);
                 }
             }
         }
@@ -173,12 +194,36 @@ impl HuffmanCode {
             next[l] += 1;
         }
 
+        // Word-at-a-time tables: per-symbol bit-reversed codewords for the
+        // single-call encoder, and the one-shot decode LUT. Every stream
+        // position whose low `l` bits equal a codeword's reversal decodes
+        // to that symbol, so each short code fills a stride of entries.
+        let lut_bits = max_len.min(DECODE_LUT_BITS);
+        let mut rev_codes = vec![0u64; lengths.len()];
+        let mut lut = vec![0u32; 1usize << lut_bits];
+        for &s in &symbols {
+            let l = lengths[s as usize];
+            let rev = reverse_low_bits(codes[s as usize], l);
+            rev_codes[s as usize] = rev;
+            if l <= lut_bits {
+                let entry = (s << 8) | l;
+                let mut idx = rev;
+                while idx < (1u64 << lut_bits) {
+                    lut[idx as usize] = entry;
+                    idx += 1u64 << l;
+                }
+            }
+        }
+
         Ok(HuffmanCode {
             lengths,
             codes,
+            rev_codes,
             first_code: fc,
             first_index: fi,
             symbols_by_code: symbols,
+            lut_bits,
+            lut,
         })
     }
 
@@ -189,6 +234,12 @@ impl HuffmanCode {
     /// Code length of `symbol` in bits (0 = unencodable).
     pub fn len_of(&self, symbol: usize) -> u32 {
         self.lengths[symbol]
+    }
+
+    /// The canonical (MSB-first) codeword of `symbol` — diagnostics and the
+    /// encode-parity tests' per-bit reference emission.
+    pub fn code_of(&self, symbol: usize) -> u64 {
+        self.codes[symbol]
     }
 
     /// The length vector (ship this to peers on level updates).
@@ -206,24 +257,56 @@ impl HuffmanCode {
             .sum()
     }
 
-    /// Encode one symbol.
+    /// The wire emission of `symbol`: its bit-reversed codeword and length,
+    /// ready for a single `write_bits` call (the LSB-first writer emits a
+    /// value's bit 0 first, which is the codeword's MSB). Errors for
+    /// unencodable (length-0) symbols. The wire layer uses this to fuse the
+    /// trailing sign bit into the same call.
     #[inline]
-    pub fn encode(&self, w: &mut BitWriter, symbol: usize) -> Result<()> {
+    pub fn emission_of(&self, symbol: usize) -> Result<(u64, u32)> {
         let l = self.lengths[symbol];
         if l == 0 {
             return Err(Error::Codec(format!("huffman: symbol {symbol} has no code")));
         }
-        // MSB-first emission of the canonical code.
-        let code = self.codes[symbol];
-        for i in (0..l).rev() {
-            w.write_bit((code >> i) & 1 == 1);
-        }
+        Ok((self.rev_codes[symbol], l))
+    }
+
+    /// Encode one symbol — MSB-first emission of the canonical code, as a
+    /// single multi-bit write (bit-identical to the per-bit loop it
+    /// replaced; `tests/encode_parity.rs` pins that).
+    #[inline]
+    pub fn encode(&self, w: &mut BitWriter, symbol: usize) -> Result<()> {
+        let (rev, l) = self.emission_of(symbol)?;
+        w.write_bits(rev, l);
         Ok(())
     }
 
-    /// Decode one symbol (canonical first-code method).
+    /// Decode one symbol: peek `DECODE_LUT_BITS` stream bits into the
+    /// one-shot LUT; codes longer than the LUT (and reads near the end of
+    /// a truncated stream) fall back to [`Self::decode_linear`].
     #[inline]
     pub fn decode(&self, r: &mut BitReader) -> Result<u32> {
+        let (peek, avail) = r.peek_bits(self.lut_bits);
+        if avail > 0 {
+            let entry = self.lut[peek as usize];
+            let l = entry & 0xFF;
+            // A hit is only valid when the full codeword was actually
+            // buffered: with fewer bits the zero-extended peek could alias
+            // a short code that the real (truncated) stream does not spell.
+            if entry != 0 && l <= avail {
+                r.skip_bits(l);
+                return Ok(entry >> 8);
+            }
+        }
+        self.decode_linear(r)
+    }
+
+    /// The canonical per-length first-code decoder — one bit at a time.
+    /// Reference implementation (the seed's decode path, against which the
+    /// LUT is property-tested and benchmarked) and the fallback for codes
+    /// longer than the LUT width.
+    #[inline]
+    pub fn decode_linear(&self, r: &mut BitReader) -> Result<u32> {
         let mut code = 0u64;
         let max_len = self.first_code.len() as u32 - 2;
         for l in 1..=max_len {
@@ -242,6 +325,50 @@ impl HuffmanCode {
             }
         }
         Err(Error::Codec("huffman: invalid codeword".into()))
+    }
+}
+
+/// Kraft-rebalancing length limiter: clamp every length to `max_len`, then
+/// restore the Kraft inequality by deepening the lightest still-clampable
+/// symbols (cheapest in expected length), and finally spend any slack
+/// shortening the heaviest ones. Deterministic (weight ties break on the
+/// smaller symbol index) so replicated workers build identical tables from
+/// identical pooled statistics. The result is a valid prefix code within
+/// `max_len`; near-optimal rather than optimal, which is fine — this path
+/// only runs when plain Huffman overflows `max_len`, i.e. for symbols
+/// whose probabilities are ≲ 2^-32 anyway.
+fn limit_lengths(lengths: &mut [u32], weights: &[f64], max_len: u32) {
+    for l in lengths.iter_mut() {
+        *l = (*l).min(max_len);
+    }
+    // Integer Kraft sum in units of 2^-max_len (max_len ≤ 32, so the live
+    // symbol count can never overflow u64).
+    let budget = 1u64 << max_len;
+    let mut kraft: u64 =
+        lengths.iter().filter(|&&l| l > 0).map(|&l| 1u64 << (max_len - l)).sum();
+    while kraft > budget {
+        let i = (0..lengths.len())
+            .filter(|&i| lengths[i] > 0 && lengths[i] < max_len)
+            .min_by(|&a, &b| {
+                weights[a].partial_cmp(&weights[b]).unwrap().then(a.cmp(&b))
+            })
+            .expect("overfull Kraft implies a symbol shallower than max_len");
+        kraft -= 1u64 << (max_len - lengths[i] - 1);
+        lengths[i] += 1;
+    }
+    loop {
+        let candidate = (0..lengths.len())
+            .filter(|&i| lengths[i] > 1 && kraft + (1u64 << (max_len - lengths[i])) <= budget)
+            .max_by(|&a, &b| {
+                weights[a].partial_cmp(&weights[b]).unwrap().then(b.cmp(&a))
+            });
+        match candidate {
+            Some(i) => {
+                kraft += 1u64 << (max_len - lengths[i]);
+                lengths[i] -= 1;
+            }
+            None => break,
+        }
     }
 }
 
@@ -352,6 +479,97 @@ mod tests {
             let h = entropy_bits(&probs);
             assert!(el < h + 1.0 && el >= h - 1e-9, "E[L]={el} H={h}");
         });
+    }
+
+    #[test]
+    fn adversarial_weights_take_length_limited_fallback() {
+        // Regression: a 256-symbol UQ8 alphabet with exponentially-decaying
+        // probabilities floored at 1e-9 (exactly what `WireCodec::new`
+        // produces from a peaked QAda estimate) drives plain Huffman past
+        // MAX_CODE_LEN — the old code hard-errored here and killed the run.
+        let weights: Vec<f64> = (0..256).map(|i| 0.5f64.powi(i).max(1e-9)).collect();
+        let code = HuffmanCode::from_weights(&weights).unwrap();
+        let max = code.lengths().iter().copied().max().unwrap();
+        assert!(max <= MAX_CODE_LEN, "fallback must respect MAX_CODE_LEN, got {max}");
+        let kraft: f64 =
+            code.lengths().iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!(kraft <= 1.0 + 1e-9, "fallback must keep a valid prefix code ({kraft})");
+        // Frequent symbols keep short codes; the whole alphabet round-trips.
+        assert_eq!(code.len_of(0), 1);
+        let symbols: Vec<usize> = (0..256).chain((0..256).rev()).collect();
+        roundtrip(&code, &symbols);
+        // The same lengths rebuild canonically (the peer-side path).
+        let rebuilt = HuffmanCode::from_lengths(code.lengths().to_vec()).unwrap();
+        roundtrip(&rebuilt, &symbols);
+    }
+
+    #[test]
+    fn prop_limit_lengths_all_decay_rates() {
+        // Sweep decay rates and alphabet sizes across the overflow
+        // boundary: every resulting code must satisfy Kraft within
+        // MAX_CODE_LEN and round-trip.
+        forall("length-limited huffman", 40, |g| {
+            let n = g.usize_in(2, 300);
+            let rate = g.f64_in(0.05, 0.95);
+            let floor = *g.choose(&[1e-9, 1e-12, 0.0]);
+            let weights: Vec<f64> =
+                (0..n).map(|i| rate.powi(i.min(1000) as i32).max(floor)).collect();
+            let code = HuffmanCode::from_weights(&weights).unwrap();
+            assert!(code.lengths().iter().all(|&l| l <= MAX_CODE_LEN));
+            let kraft: f64 = code
+                .lengths()
+                .iter()
+                .filter(|&&l| l > 0)
+                .map(|&l| 2f64.powi(-(l as i32)))
+                .sum();
+            assert!(kraft <= 1.0 + 1e-9);
+            let encodable: Vec<usize> =
+                (0..n).filter(|&s| code.len_of(s) > 0).collect();
+            roundtrip(&code, &encodable);
+        });
+    }
+
+    #[test]
+    fn prop_lut_decode_matches_linear_reference() {
+        // The one-shot LUT and the canonical first-code loop are the same
+        // decoder: identical symbols, identical bit positions, on streams
+        // that mix short (LUT-hit) and long (fallback) codewords.
+        forall("huffman lut == linear", 60, |g| {
+            let n = g.usize_in(2, 300);
+            let rate = g.f64_in(0.3, 0.99);
+            let weights: Vec<f64> = (0..n).map(|i| rate.powi(i as i32).max(1e-9)).collect();
+            let code = HuffmanCode::from_weights(&weights).unwrap();
+            let mut rng = Rng::seed_from(g.case as u64 + 7);
+            let symbols: Vec<usize> = (0..400).map(|_| rng.categorical(&weights)).collect();
+            let mut w = BitWriter::new();
+            for &s in &symbols {
+                code.encode(&mut w, s).unwrap();
+            }
+            let bytes = w.finish();
+            let mut fast = BitReader::new(&bytes);
+            let mut slow = BitReader::new(&bytes);
+            for &s in &symbols {
+                assert_eq!(code.decode(&mut fast).unwrap() as usize, s);
+                assert_eq!(code.decode_linear(&mut slow).unwrap() as usize, s);
+                assert_eq!(fast.bits_read(), slow.bits_read());
+            }
+        });
+    }
+
+    #[test]
+    fn truncated_stream_fails_in_both_decoders() {
+        let code = HuffmanCode::from_weights(&[0.5, 0.25, 0.125, 0.125]).unwrap();
+        let mut w = BitWriter::new();
+        for s in [3usize, 3, 3] {
+            code.encode(&mut w, s).unwrap();
+        }
+        let bytes = w.finish();
+        // Cut mid-codeword: 3 three-bit codes = 9 bits → 1 byte holds 8.
+        let cut = &bytes[..1];
+        let mut r = BitReader::new(cut);
+        assert_eq!(code.decode(&mut r).unwrap(), 3);
+        assert_eq!(code.decode(&mut r).unwrap(), 3);
+        assert!(code.decode(&mut r).is_err(), "partial trailing codeword must error");
     }
 
     #[test]

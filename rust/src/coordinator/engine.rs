@@ -165,6 +165,13 @@ pub struct RoundEngine {
     /// Decoded payloads of the last data round, indexed by sender.
     pub(crate) decoded: Vec<Vec<f32>>,
     pub(crate) g_buf: Vec<f32>,
+    /// Reusable wire buffers, one per owned rank: together with the
+    /// compressor scratch arenas these make the loopback data round
+    /// allocation-free in steady state (the transport fabric necessarily
+    /// hands an owned payload to the barrier each round).
+    wire_bufs: Vec<Vec<u8>>,
+    /// Reusable per-round exact-bit counts (rank order of `owned`).
+    bits_buf: Vec<u64>,
     pub(crate) traffic: TrafficStats,
     pub(crate) links: LinkTraffic,
     /// Per-step stat schedule `U` (exact / gossip families).
@@ -209,6 +216,7 @@ impl RoundEngine {
             .collect::<Result<_>>()?;
         // THE stat-exchange predicate — one home for both fabrics and all
         // families ("does anything adapt" × "is the pipeline quantized").
+        let n_owned = owned.len();
         let adaptive = cfg.quant.adapts() && comps[0].is_quantized();
         let schedule = if adaptive {
             UpdateSchedule::new(cfg.quant.update_every.min(10), cfg.quant.update_every)
@@ -225,6 +233,8 @@ impl RoundEngine {
             net: NetModel::from_config(&cfg.net),
             owned,
             recv,
+            wire_bufs: vec![Vec::new(); n_owned],
+            bits_buf: Vec::with_capacity(n_owned),
             oracles,
             comps,
             decoded: vec![vec![0.0f32; d]; k],
@@ -257,20 +267,18 @@ impl RoundEngine {
     pub(crate) fn dual_exchange(&mut self, q: Query<'_>) -> Result<u64> {
         let t0 = Instant::now();
         let n = self.owned.len();
-        let mut wires = Vec::with_capacity(n);
-        let mut bits = Vec::with_capacity(n);
+        self.bits_buf.clear();
         for i in 0..n {
             let x: &[f32] = match &q {
                 Query::Shared(x) => x,
                 Query::PerOwned(xs) => &xs[i],
             };
             self.oracles[i].sample(x, &mut self.g_buf);
-            let (bytes, b) = self.comps[i].compress(&self.g_buf)?;
-            wires.push(bytes);
-            bits.push(b);
+            let b = self.comps[i].compress_into(&self.g_buf, &mut self.wire_bufs[i])?;
+            self.bits_buf.push(b);
         }
         self.traffic.add_compute(t0.elapsed().as_secs_f64());
-        self.data_round(wires, bits)
+        self.data_round()
     }
 
     /// One data-plane round for caller-provided vectors (model deltas).
@@ -278,36 +286,39 @@ impl RoundEngine {
     pub(crate) fn vector_exchange(&mut self, vecs: &[Vec<f32>]) -> Result<u64> {
         debug_assert_eq!(vecs.len(), self.owned.len());
         let t0 = Instant::now();
-        let mut wires = Vec::with_capacity(vecs.len());
-        let mut bits = Vec::with_capacity(vecs.len());
+        self.bits_buf.clear();
         for (i, v) in vecs.iter().enumerate() {
-            let (bytes, b) = self.comps[i].compress(v)?;
-            wires.push(bytes);
-            bits.push(b);
+            let b = self.comps[i].compress_into(v, &mut self.wire_bufs[i])?;
+            self.bits_buf.push(b);
         }
         self.traffic.add_compute(t0.elapsed().as_secs_f64());
-        self.data_round(wires, bits)
+        self.data_round()
     }
 
-    /// Move one round of encoded payloads (one per owned rank, rank order)
-    /// and decode by sender into `self.decoded`. `exact_bits` are the
-    /// encoder-reported bit counts (used verbatim by the loopback fabric;
-    /// the transport fabric accounts whole wire bytes — see module docs).
-    fn data_round(&mut self, wires: Vec<Vec<u8>>, exact_bits: Vec<u64>) -> Result<u64> {
+    /// Move one round of encoded payloads (`self.wire_bufs`, one per owned
+    /// rank, rank order) and decode by sender into `self.decoded`.
+    /// `self.bits_buf` holds the encoder-reported exact bit counts (used
+    /// verbatim by the loopback fabric; the transport fabric accounts whole
+    /// wire bytes — see module docs). Loopback steady state is
+    /// allocation-free: reused wire buffers in, arena decodes out.
+    fn data_round(&mut self) -> Result<u64> {
         let before = self.traffic.bits_sent;
         match &self.fabric {
             Fabric::Loopback => {
                 let t0 = Instant::now();
                 for w in 0..self.k {
-                    self.comps[w].decompress(&wires[w], &mut self.decoded[w])?;
+                    self.comps[w].decompress_into(&self.wire_bufs[w], &mut self.decoded[w])?;
                 }
                 self.traffic.add_compute(t0.elapsed().as_secs_f64());
-                self.collective.record_round(&exact_bits, &self.net, &mut self.traffic);
-                self.links.record(self.collective.as_ref(), &exact_bits);
+                self.collective.record_round(&self.bits_buf, &self.net, &mut self.traffic);
+                self.links.record(self.collective.as_ref(), &self.bits_buf);
             }
             Fabric::Transport { transport, rank } => {
                 let rank = *rank;
-                let payload = wires.into_iter().next().expect("one owned payload");
+                // The barrier takes ownership of the payload; the buffer is
+                // rebuilt next round (a per-round allocation inherent to
+                // moving bytes across threads).
+                let payload = std::mem::take(&mut self.wire_bufs[0]);
                 let (recv, bits) = self.collective.exchange(transport, rank, payload)?;
                 self.collective.record_round(&bits, &self.net, &mut self.traffic);
                 if rank == 0 {
@@ -315,7 +326,7 @@ impl RoundEngine {
                 }
                 let t0 = Instant::now();
                 for (sender, bytes) in &recv {
-                    self.comps[0].decompress(bytes, &mut self.decoded[*sender])?;
+                    self.comps[0].decompress_into(bytes, &mut self.decoded[*sender])?;
                 }
                 self.traffic.add_compute(t0.elapsed().as_secs_f64());
             }
@@ -425,6 +436,8 @@ impl Clone for RoundEngine {
             comps: self.comps.clone(),
             decoded: self.decoded.clone(),
             g_buf: self.g_buf.clone(),
+            wire_bufs: self.wire_bufs.clone(),
+            bits_buf: self.bits_buf.clone(),
             traffic: self.traffic,
             links: self.links.clone(),
             schedule: self.schedule,

@@ -96,6 +96,42 @@ impl WireCodec {
         }
     }
 
+    /// Emit one symbol and, when it is nonzero, its sign bit — fused into a
+    /// single `write_bits` call for Fixed and Huffman (the sign bit follows
+    /// the codeword on the wire, which under the LSB-first writer is the
+    /// next-higher bit of the same emission). Bit-identical to
+    /// `encode_symbol` + `write_bit` (pinned by `tests/encode_parity.rs`).
+    #[inline]
+    fn encode_symbol_and_sign(&self, w: &mut BitWriter, sym: u16, neg: bool) -> Result<()> {
+        match self.kind {
+            SymbolCodec::Fixed => {
+                let width = self.fixed_width;
+                if sym == 0 {
+                    w.write_bits(0, width);
+                } else {
+                    w.write_bits(sym as u64 | (neg as u64) << width, width + 1);
+                }
+                Ok(())
+            }
+            SymbolCodec::Huffman => {
+                let (rev, l) = self.huffman.as_ref().unwrap().emission_of(sym as usize)?;
+                if sym == 0 {
+                    w.write_bits(rev, l);
+                } else {
+                    w.write_bits(rev | (neg as u64) << l, l + 1);
+                }
+                Ok(())
+            }
+            SymbolCodec::EliasGamma | SymbolCodec::EliasDelta => {
+                self.encode_symbol(w, sym)?;
+                if sym != 0 {
+                    w.write_bit(neg);
+                }
+                Ok(())
+            }
+        }
+    }
+
     #[inline]
     fn decode_symbol(&self, r: &mut BitReader) -> Result<u16> {
         match self.kind {
@@ -111,7 +147,34 @@ impl WireCodec {
 /// exact bit count (pre-padding) is `bytes.1`.
 pub fn encode_vector(qv: &QuantizedVector, codec: &WireCodec) -> Result<(Vec<u8>, u64)> {
     // Capacity guess: norms + ~6 bits/coordinate.
-    let mut w = BitWriter::with_capacity(4 * qv.norms.len() + qv.d);
+    let mut buf = Vec::with_capacity(4 * qv.norms.len() + qv.d);
+    let bits = encode_vector_into(qv, codec, &mut buf)?;
+    Ok((buf, bits))
+}
+
+/// [`encode_vector`] *appending* to a caller-owned buffer: identical wire
+/// bytes, zero allocations once the buffer has grown to the steady-state
+/// message size. Existing content is kept (the layer-wise pipeline writes
+/// its length frame first); callers encoding a whole message clear first.
+/// Returns this vector's exact bit count (pre-padding). On error the
+/// buffer's contents are unspecified but its allocation is retained.
+pub fn encode_vector_into(
+    qv: &QuantizedVector,
+    codec: &WireCodec,
+    buf: &mut Vec<u8>,
+) -> Result<u64> {
+    buf.reserve(4 * qv.norms.len() + qv.d / 2);
+    let mut w = BitWriter::over(std::mem::take(buf));
+    // The buffer must be handed back to the caller even when a symbol
+    // fails to encode — otherwise an error would silently replace the
+    // caller's steady-state allocation with a fresh empty Vec.
+    let result = encode_body(qv, codec, &mut w);
+    let bits = w.bit_len();
+    *buf = w.finish();
+    result.map(|()| bits)
+}
+
+fn encode_body(qv: &QuantizedVector, codec: &WireCodec, w: &mut BitWriter) -> Result<()> {
     let b = qv.bucket_size;
     for (bi, &norm) in qv.norms.iter().enumerate() {
         w.write_f32(norm);
@@ -121,15 +184,10 @@ pub fn encode_vector(qv: &QuantizedVector, codec: &WireCodec) -> Result<(Vec<u8>
             continue; // empty bucket: decoder reconstructs zeros, no symbols
         }
         for i in lo..hi {
-            let sym = qv.symbols[i];
-            codec.encode_symbol(&mut w, sym)?;
-            if sym != 0 {
-                w.write_bit(qv.sign_is_neg(i));
-            }
+            codec.encode_symbol_and_sign(w, qv.symbols[i], qv.sign_is_neg(i))?;
         }
     }
-    let bits = w.bit_len();
-    Ok((w.finish(), bits))
+    Ok(())
 }
 
 /// `DEQ ∘ CODE`: parse wire bytes back into a [`QuantizedVector`].
@@ -139,18 +197,33 @@ pub fn decode_vector(
     bucket_size: usize,
     codec: &WireCodec,
 ) -> Result<QuantizedVector> {
+    let mut out = QuantizedVector::default();
+    decode_vector_into(bytes, d, bucket_size, codec, &mut out)?;
+    Ok(out)
+}
+
+/// [`decode_vector`] into a reusable arena (zero allocations in steady
+/// state), with a strict tail check: after the last symbol, only byte
+/// padding may remain — at most 7 bits, all zero. The check is what lets
+/// the layer-wise frame reader detect a frame-length/`d` mismatch instead
+/// of "successfully" decoding a wrong vector from a misaligned stream.
+pub fn decode_vector_into(
+    bytes: &[u8],
+    d: usize,
+    bucket_size: usize,
+    codec: &WireCodec,
+    out: &mut QuantizedVector,
+) -> Result<()> {
     let b = if bucket_size == 0 { d } else { bucket_size };
     let nb = d.div_ceil(b);
     let mut r = BitReader::new(bytes);
-    let mut norms = Vec::with_capacity(nb);
-    let mut symbols = vec![0u16; d];
-    let mut sign_words = vec![0u64; d.div_ceil(64)];
+    out.reset(d, b);
     for bi in 0..nb {
         let norm = r.read_f32()?;
         if !norm.is_finite() || norm < 0.0 {
             return Err(Error::Codec(format!("bad bucket norm {norm}")));
         }
-        norms.push(norm);
+        out.norms.push(norm);
         let lo = bi * b;
         let hi = ((bi + 1) * b).min(d);
         if norm == 0.0 {
@@ -158,13 +231,28 @@ pub fn decode_vector(
         }
         for i in lo..hi {
             let sym = codec.decode_symbol(&mut r)?;
-            symbols[i] = sym;
+            out.symbols[i] = sym;
             if sym != 0 && r.read_bit()? {
-                sign_words[i / 64] |= 1u64 << (i % 64);
+                out.sign_words[i / 64] |= 1u64 << (i % 64);
             }
         }
     }
-    Ok(QuantizedVector { d, bucket_size: b, norms, symbols, sign_words })
+    // Strict tail: anything beyond zero byte-padding means the caller's
+    // side information (d, bucket size, frame length) disagrees with the
+    // stream — reject rather than return a silently wrong vector.
+    let consumed = r.bits_read();
+    let total = bytes.len() as u64 * 8;
+    if total - consumed >= 8 {
+        return Err(Error::Codec(format!(
+            "wire has {} trailing bytes after the last symbol",
+            (total - consumed) / 8
+        )));
+    }
+    let pad = (total - consumed) as u32;
+    if pad > 0 && r.read_bits(pad)? != 0 {
+        return Err(Error::Codec("nonzero padding bits after the last symbol".into()));
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -273,6 +361,101 @@ mod tests {
         let (bytes, _) = encode_vector(&qv, &codec).unwrap();
         let cut = &bytes[..bytes.len() / 2];
         assert!(decode_vector(cut, 64, 0, &codec).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        // Regression: decode_vector used to accept any bytes after the last
+        // symbol, so a layer-wise frame-length/`d` mismatch "successfully"
+        // decoded to a wrong vector. Strict tail: ≤ 7 padding bits, all 0.
+        let levels = Levels::uniform(14);
+        let mut rng = Rng::seed_from(8);
+        let v = rng.gaussian_vec(128, 1.0);
+        let qv = quantize(&v, &levels, 2, 32, &mut rng).unwrap();
+        let probs = gaussian_probs(&levels, 128);
+        for codec in all_codecs(&levels, &probs) {
+            let (bytes, bits) = encode_vector(&qv, &codec).unwrap();
+            // The honest wire still decodes.
+            assert_eq!(decode_vector(&bytes, 128, 32, &codec).unwrap(), qv);
+            // One appended garbage byte must be rejected...
+            let mut padded = bytes.clone();
+            padded.push(0xFF);
+            assert!(
+                decode_vector(&padded, 128, 32, &codec).is_err(),
+                "trailing byte accepted ({:?})",
+                codec.kind
+            );
+            // ...as must an appended zero byte (frame-length mismatch)...
+            let mut zero_padded = bytes.clone();
+            zero_padded.push(0x00);
+            assert!(
+                decode_vector(&zero_padded, 128, 32, &codec).is_err(),
+                "trailing zero byte accepted ({:?})",
+                codec.kind
+            );
+            // ...and nonzero bits inside the final padding.
+            let pad = (8 - (bits % 8) as u32) % 8;
+            if pad > 0 {
+                let mut corrupt = bytes.clone();
+                let last = corrupt.len() - 1;
+                corrupt[last] |= 0x80; // flip the top padding bit
+                assert!(
+                    decode_vector(&corrupt, 128, 32, &codec).is_err(),
+                    "nonzero padding accepted ({:?})",
+                    codec.kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decoding_with_wrong_dim_errors_instead_of_misreading() {
+        // A d mismatch (the frame-reader scenario) leaves the stream
+        // misaligned: either a decode error or the strict tail check fires.
+        // All-(-1) under L∞ quantizes every coordinate to the top symbol
+        // (1111₂ + sign under UQ4/fixed) deterministically: 1312 wire bits,
+        // zero padding — both mismatch directions are guaranteed to trip.
+        let levels = Levels::uniform(14);
+        let v = vec![-1.0f32; 256];
+        let mut rng = Rng::seed_from(9);
+        let qv = quantize(&v, &levels, u32::MAX, 0, &mut rng).unwrap();
+        assert!(qv.symbols.iter().all(|&s| s == 15), "setup: saturated symbols");
+        let codec = WireCodec::new(SymbolCodec::Fixed, &levels, None).unwrap();
+        let (bytes, bits) = encode_vector(&qv, &codec).unwrap();
+        assert_eq!(bits, 32 + 256 * 5);
+        assert!(decode_vector(&bytes, 255, 0, &codec).is_err(), "short d must not pass");
+        assert!(decode_vector(&bytes, 257, 0, &codec).is_err(), "long d must not pass");
+    }
+
+    #[test]
+    fn encode_into_appends_and_reuses_without_reallocating() {
+        let levels = Levels::uniform(14);
+        let probs = gaussian_probs(&levels, 512);
+        let mut rng = Rng::seed_from(10);
+        let v = rng.gaussian_vec(512, 1.0);
+        let qv = quantize(&v, &levels, 2, 128, &mut rng).unwrap();
+        for codec in all_codecs(&levels, &probs) {
+            let (fresh, bits) = encode_vector(&qv, &codec).unwrap();
+            // Append semantics: pre-existing prefix is preserved verbatim.
+            let mut buf = vec![0xAB, 0xCD];
+            let bits2 = encode_vector_into(&qv, &codec, &mut buf).unwrap();
+            assert_eq!(bits, bits2);
+            assert_eq!(&buf[..2], &[0xAB, 0xCD]);
+            assert_eq!(&buf[2..], &fresh[..], "codec {:?}", codec.kind);
+            // Steady state: clearing and re-encoding reuses the allocation.
+            let cap = buf.capacity();
+            let ptr = buf.as_ptr();
+            buf.clear();
+            let bits3 = encode_vector_into(&qv, &codec, &mut buf).unwrap();
+            assert_eq!(bits3, bits);
+            assert_eq!(buf, fresh);
+            assert_eq!(buf.capacity(), cap);
+            assert_eq!(buf.as_ptr(), ptr);
+            // Arena decode matches the allocating decode.
+            let mut arena = QuantizedVector::default();
+            decode_vector_into(&buf, 512, 128, &codec, &mut arena).unwrap();
+            assert_eq!(arena, qv);
+        }
     }
 
     #[test]

@@ -39,9 +39,12 @@ pub mod quantizer;
 pub use adaptive::{optimize_levels, symbol_probs, SufficientStats};
 pub use alloc::{allocate, Allocation, LayerProfile};
 pub use bounds::{code_length_bound, epsilon_q, nuqsgd_variance_bound, qsgd_variance_bound};
-pub use encode::{decode_vector, encode_vector, WireCodec};
+pub use encode::{
+    decode_vector, decode_vector_into, encode_vector, encode_vector_into, WireCodec,
+};
 pub use layers::{LayerMap, LayerStats};
 pub use levels::Levels;
 pub use quantizer::{
-    dequantize, dequantize_into, quantize, quantize_with_uniforms, QuantizedVector,
+    dequantize, dequantize_into, quantize, quantize_into, quantize_with_uniforms,
+    QuantizedVector,
 };

@@ -22,7 +22,12 @@ use crate::util::{norm_q, Rng};
 
 /// A quantized dual vector: per-bucket norms + per-coordinate level symbols
 /// and signs. `symbols[i] ∈ 0..=s+1` indexes into the level sequence.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// `Default` is the empty arena: the `_into` functions
+/// ([`quantize_into`], [`crate::quant::decode_vector_into`]) clear and
+/// refill one of these in place, so a long-lived instance never
+/// reallocates in steady state.
+#[derive(Clone, Debug, PartialEq, Default)]
 pub struct QuantizedVector {
     /// Original dimension d.
     pub d: usize,
@@ -39,6 +44,19 @@ pub struct QuantizedVector {
 impl QuantizedVector {
     pub fn num_buckets(&self) -> usize {
         self.norms.len()
+    }
+
+    /// Reset to dimension `d` / bucket size `b` with all symbols, signs and
+    /// norms cleared, reusing the existing allocations.
+    pub(crate) fn reset(&mut self, d: usize, b: usize) {
+        self.d = d;
+        self.bucket_size = b;
+        self.norms.clear();
+        self.norms.reserve(d.div_ceil(b.max(1)));
+        self.symbols.clear();
+        self.symbols.resize(d, 0);
+        self.sign_words.clear();
+        self.sign_words.resize(d.div_ceil(64), 0);
     }
 
     #[inline]
@@ -70,9 +88,25 @@ pub fn quantize(
     bucket_size: usize,
     rng: &mut Rng,
 ) -> Result<QuantizedVector> {
+    let mut out = QuantizedVector::default();
+    quantize_into(v, levels, q, bucket_size, rng, &mut out)?;
+    Ok(out)
+}
+
+/// [`quantize`] into a reusable arena: identical RNG consumption and
+/// output, zero allocations once `out`'s buffers have grown to `d`. The
+/// compressor hot path lives here.
+pub fn quantize_into(
+    v: &[f32],
+    levels: &Levels,
+    q: u32,
+    bucket_size: usize,
+    rng: &mut Rng,
+    out: &mut QuantizedVector,
+) -> Result<()> {
     // §Perf: uniforms are drawn inline per coordinate — materializing a
     // d-sized temp costs ~2 extra memory passes at model scale.
-    quantize_core(v, levels, q, bucket_size, |_| rng.uniform_f32())
+    quantize_core(v, levels, q, bucket_size, |_| rng.uniform_f32(), out)
 }
 
 /// Deterministic quantization given explicit uniforms (one per coordinate).
@@ -92,11 +126,14 @@ pub fn quantize_with_uniforms(
             v.len()
         )));
     }
-    quantize_core(v, levels, q, bucket_size, |i| uniforms[i])
+    let mut out = QuantizedVector::default();
+    quantize_core(v, levels, q, bucket_size, |i| uniforms[i], &mut out)?;
+    Ok(out)
 }
 
 /// Shared implementation over a per-coordinate uniform source
-/// (monomorphized per caller — no indirect call in the inner loop).
+/// (monomorphized per caller — no indirect call in the inner loop),
+/// filling a caller-owned arena.
 #[inline]
 fn quantize_core<F: FnMut(usize) -> f32>(
     v: &[f32],
@@ -104,16 +141,18 @@ fn quantize_core<F: FnMut(usize) -> f32>(
     q: u32,
     bucket_size: usize,
     mut uniform_at: F,
-) -> Result<QuantizedVector> {
+    out: &mut QuantizedVector,
+) -> Result<()> {
     if v.is_empty() {
         return Err(Error::Quant("cannot quantize an empty vector".into()));
     }
     let d = v.len();
     let b = if bucket_size == 0 { d } else { bucket_size };
     let nb = d.div_ceil(b);
-    let mut norms = Vec::with_capacity(nb);
-    let mut symbols = vec![0u16; d];
-    let mut sign_words = vec![0u64; d.div_ceil(64)];
+    out.reset(d, b);
+    let norms = &mut out.norms;
+    let symbols = &mut out.symbols;
+    let sign_words = &mut out.sign_words;
 
     for bi in 0..nb {
         let lo = bi * b;
@@ -141,7 +180,7 @@ fn quantize_core<F: FnMut(usize) -> f32>(
                 let up = uniform_at(i) < xi;
                 let sym = t + up as usize;
                 symbols[i] = sym as u16;
-                QuantizedVector::set_sign(&mut sign_words, i, sym != 0 && x < 0.0);
+                QuantizedVector::set_sign(sign_words, i, sym != 0 && x < 0.0);
             }
         } else {
             for i in lo..hi {
@@ -161,11 +200,11 @@ fn quantize_core<F: FnMut(usize) -> f32>(
                 symbols[i] = sym as u16;
                 // Signs are canonical: only nonzero symbols carry one (the
                 // wire sends no sign for zeros — Lemma 3).
-                QuantizedVector::set_sign(&mut sign_words, i, sym != 0 && x < 0.0);
+                QuantizedVector::set_sign(sign_words, i, sym != 0 && x < 0.0);
             }
         }
     }
-    Ok(QuantizedVector { d, bucket_size: b, norms, symbols, sign_words })
+    Ok(())
 }
 
 /// Reconstruct the (still unbiased) dequantized vector
@@ -297,6 +336,34 @@ mod tests {
         for i in 0..4 {
             assert!(back[i].abs() <= qv.norms[0] * 1.0 + 1e-9);
         }
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_and_reuses_buffers() {
+        let levels = Levels::uniform(14);
+        let mut rng_a = Rng::seed_from(42);
+        let mut rng_b = Rng::seed_from(42);
+        let mut arena = QuantizedVector::default();
+        let mut rng_v = Rng::seed_from(43);
+        for _ in 0..4 {
+            let v = rng_v.gaussian_vec(300, 1.0);
+            let fresh = quantize(&v, &levels, 2, 64, &mut rng_a).unwrap();
+            quantize_into(&v, &levels, 2, 64, &mut rng_b, &mut arena).unwrap();
+            assert_eq!(fresh, arena, "arena fill must be bit-identical (incl. RNG stream)");
+        }
+        // Steady state: refilling at the same d must not reallocate.
+        let symbols_ptr = arena.symbols.as_ptr();
+        let v = rng_v.gaussian_vec(300, 1.0);
+        quantize_into(&v, &levels, 2, 64, &mut rng_b, &mut arena).unwrap();
+        assert_eq!(arena.symbols.as_ptr(), symbols_ptr);
+        // Stale state from a larger previous message must not leak into a
+        // smaller one (symbols/signs cleared by reset).
+        let small = [0.0f32, -1.0];
+        quantize_into(&small, &levels, 2, 0, &mut rng_b, &mut arena).unwrap();
+        assert_eq!(arena.d, 2);
+        assert_eq!(arena.symbols.len(), 2);
+        assert_eq!(arena.sign_words.len(), 1);
+        assert_eq!(arena.num_zeros(), 1);
     }
 
     #[test]

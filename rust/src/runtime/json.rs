@@ -78,6 +78,77 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize back to JSON text. Object keys come out in `BTreeMap`
+    /// order (sorted — deterministic output for artifact diffing). Numbers
+    /// print shortest-roundtrip via Rust's f64 `Display`; non-finite
+    /// numbers (not representable in JSON) serialize as `null`. This is
+    /// what the bench harness uses to emit `BENCH_*.json` trajectories
+    /// (see `docs/PERF.md`) with the same module that can re-parse them.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_into(&mut out);
+        out
+    }
+
+    fn dump_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    if n.fract() == 0.0 && n.abs() < 9e15 {
+                        out.push_str(&(*n as i64).to_string());
+                    } else {
+                        out.push_str(&n.to_string());
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => dump_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.dump_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    dump_str(k, out);
+                    out.push(':');
+                    v.dump_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Escape and quote one JSON string (shared by the `Str` arm and object
+/// keys — no throwaway allocation per key).
+fn dump_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -317,5 +388,27 @@ mod tests {
         assert_eq!(Json::parse("1.5").unwrap().as_usize(), None);
         assert_eq!(Json::parse("-2").unwrap().as_usize(), None);
         assert_eq!(Json::parse("7").unwrap().as_usize(), Some(7));
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let src = r#"{
+            "bench": "perf_hotpath",
+            "cases": [{"stage": "decode", "ns_per_coord": 1.25, "allocs": 0}],
+            "d": 4000000, "ok": true, "note": "a\n\"b\"", "none": null,
+            "neg": -0.5
+        }"#;
+        let j = Json::parse(src).unwrap();
+        let dumped = j.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), j, "dump must re-parse to itself");
+        // Integers stay integral; keys come out sorted (BTreeMap order).
+        assert!(dumped.contains("\"d\":4000000"));
+        assert!(dumped.contains("\"allocs\":0"));
+        let bench_pos = dumped.find("\"bench\"").unwrap();
+        let ok_pos = dumped.find("\"ok\"").unwrap();
+        assert!(bench_pos < ok_pos);
+        // Non-finite numbers degrade to null instead of invalid JSON.
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
     }
 }

@@ -1,0 +1,250 @@
+//! Encode-parity pins: the word-at-a-time `CODE ∘ Q` encoder (multi-bit
+//! Huffman/Elias emission, fused sign bits, buffer reuse) must produce
+//! **byte-identical wire output and identical exact bit counts** to the
+//! seed's per-bit encoder, across all four codecs × bucket sizes × ragged
+//! dims × alphabet sizes.
+//!
+//! The reference below is a *frozen verbatim copy* of the pre-PR-5 encode
+//! path (`encode_vector` + per-bit `HuffmanCode::encode` + per-bit Elias
+//! emission + the canonical code derivation), deliberately independent of
+//! the library's current internals: it rebuilds canonical codewords from
+//! the shipped length vector itself. If the hot path ever drifts by one
+//! bit, these tests name the codec and configuration that moved.
+
+use qgenx::coding::{BitWriter, HuffmanCode, SymbolCodec};
+use qgenx::quant::{
+    decode_vector, encode_vector, encode_vector_into, quantize_with_uniforms, Levels,
+    QuantizedVector, WireCodec,
+};
+use qgenx::util::Rng;
+
+// ---------------------------------------------------------------------
+// Frozen reference (pre-PR-5 bit emission) — do not "modernize".
+// ---------------------------------------------------------------------
+
+fn ref_ilog2(n: u64) -> u32 {
+    63 - n.leading_zeros()
+}
+
+/// Frozen per-bit Elias γ emission (seed `elias::gamma_encode`).
+fn ref_gamma_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    let nb = ref_ilog2(n);
+    w.write_bits(0, nb.min(57));
+    if nb > 57 {
+        w.write_bits(0, nb - 57);
+    }
+    w.write_bit(true);
+    for i in (0..nb).rev() {
+        w.write_bit((n >> i) & 1 == 1);
+    }
+}
+
+/// Frozen per-bit Elias δ emission (seed `elias::delta_encode`).
+fn ref_delta_encode(w: &mut BitWriter, n: u64) {
+    assert!(n >= 1);
+    let nb = ref_ilog2(n);
+    ref_gamma_encode(w, nb as u64 + 1);
+    for i in (0..nb).rev() {
+        w.write_bit((n >> i) & 1 == 1);
+    }
+}
+
+/// Frozen canonical-code derivation from a length vector (seed
+/// `HuffmanCode::from_lengths` code-assignment loop), kept independent of
+/// the library so the parity holds even if the library's tables change.
+struct RefHuffman {
+    lengths: Vec<u32>,
+    codes: Vec<u64>,
+}
+
+impl RefHuffman {
+    fn from_lengths(lengths: &[u32]) -> Self {
+        let max_len = lengths.iter().copied().max().unwrap() as usize;
+        let mut count = vec![0u64; max_len + 1];
+        for &l in lengths {
+            if l > 0 {
+                count[l as usize] += 1;
+            }
+        }
+        let mut next = vec![0u64; max_len + 1];
+        let mut c = 0u64;
+        for l in 1..=max_len {
+            c = (c + if l > 1 { count[l - 1] } else { 0 }) << 1;
+            next[l] = c;
+        }
+        let mut symbols: Vec<u32> =
+            (0..lengths.len() as u32).filter(|&i| lengths[i as usize] > 0).collect();
+        symbols.sort_by_key(|&s| (lengths[s as usize], s));
+        let mut codes = vec![0u64; lengths.len()];
+        for &s in &symbols {
+            let l = lengths[s as usize] as usize;
+            codes[s as usize] = next[l];
+            next[l] += 1;
+        }
+        RefHuffman { lengths: lengths.to_vec(), codes }
+    }
+
+    /// Frozen per-bit MSB-first emission (seed `HuffmanCode::encode`).
+    fn encode(&self, w: &mut BitWriter, symbol: usize) {
+        let l = self.lengths[symbol];
+        assert!(l > 0, "symbol {symbol} has no code");
+        let code = self.codes[symbol];
+        for i in (0..l).rev() {
+            w.write_bit((code >> i) & 1 == 1);
+        }
+    }
+}
+
+enum RefCodec {
+    Fixed(u32),
+    Gamma,
+    Delta,
+    Huffman(RefHuffman),
+}
+
+/// Frozen copy of the seed `encode_vector` loop: per-bucket norm, per
+/// coordinate the symbol then — separately — one sign bit iff nonzero.
+fn ref_encode_vector(qv: &QuantizedVector, codec: &RefCodec) -> (Vec<u8>, u64) {
+    let mut w = BitWriter::with_capacity(4 * qv.norms.len() + qv.d);
+    let b = qv.bucket_size;
+    for (bi, &norm) in qv.norms.iter().enumerate() {
+        w.write_f32(norm);
+        let lo = bi * b;
+        let hi = ((bi + 1) * b).min(qv.d);
+        if norm == 0.0 {
+            continue;
+        }
+        for i in lo..hi {
+            let sym = qv.symbols[i];
+            match codec {
+                RefCodec::Fixed(width) => w.write_bits(sym as u64, *width),
+                RefCodec::Gamma => ref_gamma_encode(&mut w, sym as u64 + 1),
+                RefCodec::Delta => ref_delta_encode(&mut w, sym as u64 + 1),
+                RefCodec::Huffman(h) => h.encode(&mut w, sym as usize),
+            }
+            if sym != 0 {
+                w.write_bit(qv.sign_is_neg(i));
+            }
+        }
+    }
+    let bits = w.bit_len();
+    (w.finish(), bits)
+}
+
+// ---------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------
+
+/// Fixed width exactly as `WireCodec::new` derives it.
+fn fixed_width(alphabet: usize) -> u32 {
+    (usize::BITS - (alphabet - 1).leading_zeros()).max(1)
+}
+
+/// Geometric symbol probabilities (the Huffman bootstrap prior shape) —
+/// skewed enough to give ragged code lengths.
+fn geometric_probs(alphabet: usize) -> Vec<f64> {
+    (0..alphabet).map(|j| 0.5f64.powi(j.min(60) as i32)).collect()
+}
+
+fn check_parity(qv: &QuantizedVector, kind: SymbolCodec, levels: &Levels, probs: Option<&[f64]>) {
+    let codec = WireCodec::new(kind, levels, probs).unwrap();
+    let reference = match kind {
+        SymbolCodec::Fixed => RefCodec::Fixed(fixed_width(levels.alphabet_size())),
+        SymbolCodec::EliasGamma => RefCodec::Gamma,
+        SymbolCodec::EliasDelta => RefCodec::Delta,
+        SymbolCodec::Huffman => {
+            // Same floor + build as WireCodec::new, then take the *length
+            // vector* (the side information peers receive) and derive the
+            // canonical codewords with the frozen algorithm above.
+            let floored: Vec<f64> = probs.unwrap().iter().map(|&p| p.max(1e-9)).collect();
+            let code = HuffmanCode::from_weights(&floored).unwrap();
+            RefCodec::Huffman(RefHuffman::from_lengths(code.lengths()))
+        }
+    };
+    let (ref_bytes, ref_bits) = ref_encode_vector(qv, &reference);
+    let (new_bytes, new_bits) = encode_vector(qv, &codec).unwrap();
+    assert_eq!(
+        ref_bytes, new_bytes,
+        "wire bytes drifted: codec {kind:?}, d {}, bucket {}",
+        qv.d, qv.bucket_size
+    );
+    assert_eq!(ref_bits, new_bits, "bit count drifted: codec {kind:?}");
+    // The buffer-reuse entry point is the same encoder.
+    let mut buf = Vec::new();
+    let into_bits = encode_vector_into(qv, &codec, &mut buf).unwrap();
+    assert_eq!(buf, new_bytes);
+    assert_eq!(into_bits, new_bits);
+    // And the (LUT) decoder inverts the reference bytes exactly.
+    let back = decode_vector(&ref_bytes, qv.d, qv.bucket_size, &codec).unwrap();
+    assert_eq!(&back, qv, "decode must invert the frozen wire: codec {kind:?}");
+}
+
+#[test]
+fn parity_across_codecs_buckets_dims_alphabets() {
+    let mut rng = Rng::seed_from(0xC0DE);
+    for s in [2usize, 14, 254] {
+        let levels = Levels::uniform(s);
+        let probs = geometric_probs(levels.alphabet_size());
+        for d in [1usize, 5, 63, 64, 65, 257, 1000] {
+            for bucket in [0usize, 3, 64, 333] {
+                let v: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32 * 1.5).collect();
+                let uniforms: Vec<f32> = (0..d).map(|_| rng.uniform_f32()).collect();
+                let qv = quantize_with_uniforms(&v, &levels, 2, bucket, &uniforms).unwrap();
+                for kind in [
+                    SymbolCodec::Fixed,
+                    SymbolCodec::EliasGamma,
+                    SymbolCodec::EliasDelta,
+                    SymbolCodec::Huffman,
+                ] {
+                    let p = (kind == SymbolCodec::Huffman).then_some(probs.as_slice());
+                    check_parity(&qv, kind, &levels, p);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_with_empty_and_mixed_buckets() {
+    // Zero buckets emit only their norm; the parity must hold through the
+    // skip logic too.
+    let levels = Levels::uniform(14);
+    let probs = geometric_probs(levels.alphabet_size());
+    let mut v = vec![0.0f32; 64]; // first bucket all-zero
+    let mut rng = Rng::seed_from(7);
+    v.extend((0..130).map(|_| rng.gaussian() as f32));
+    let uniforms: Vec<f32> = (0..v.len()).map(|_| rng.uniform_f32()).collect();
+    let qv = quantize_with_uniforms(&v, &levels, 2, 64, &uniforms).unwrap();
+    assert_eq!(qv.norms[0], 0.0, "setup: first bucket must be empty");
+    for kind in [
+        SymbolCodec::Fixed,
+        SymbolCodec::EliasGamma,
+        SymbolCodec::EliasDelta,
+        SymbolCodec::Huffman,
+    ] {
+        let p = (kind == SymbolCodec::Huffman).then_some(probs.as_slice());
+        check_parity(&qv, kind, &levels, p);
+    }
+}
+
+#[test]
+fn parity_under_adaptive_probability_models() {
+    // Huffman tables from *estimated* (non-geometric) probabilities, the
+    // steady-state shape after a stat exchange: still bit-identical.
+    use qgenx::quant::{symbol_probs, SufficientStats};
+    let levels = Levels::uniform(14);
+    let mut stats = SufficientStats::new(128, 2);
+    let mut rng = Rng::seed_from(0xADA);
+    for _ in 0..6 {
+        let g: Vec<f32> = (0..512).map(|_| rng.gaussian() as f32).collect();
+        stats.observe(&g);
+    }
+    let probs = symbol_probs(&stats, &levels);
+    let v: Vec<f32> = (0..777).map(|_| rng.gaussian() as f32).collect();
+    let uniforms: Vec<f32> = (0..777).map(|_| rng.uniform_f32()).collect();
+    for bucket in [0usize, 128] {
+        let qv = quantize_with_uniforms(&v, &levels, 2, bucket, &uniforms).unwrap();
+        check_parity(&qv, SymbolCodec::Huffman, &levels, Some(&probs));
+    }
+}
