@@ -11,7 +11,15 @@
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! Both runs honour the `QGENX_TELEMETRY` knob (read in
+//! `SessionBuilder::build`): set it to `mem` for the in-memory ring or to
+//! a path for a JSONL event stream — no code change needed. CI does
+//! exactly that to validate the emitted schema. For the explicit
+//! `TelemetryConfig`/`TelemetryObserver` API, see `examples/telemetry.rs`
+//! and `docs/OBSERVABILITY.md`.
 
+use qgenx::benchkit::example_iters;
 use qgenx::config::{ExperimentConfig, QuantMode};
 use qgenx::coordinator::{Control, Observer, Session, StepReport};
 
@@ -43,8 +51,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     cfg.problem.noise = "absolute".into();
     cfg.problem.sigma = 0.5;
     cfg.workers = 4;
-    cfg.iters = 2000;
-    cfg.eval_every = 200;
+    cfg.iters = example_iters(2000);
+    cfg.eval_every = (cfg.iters / 10).max(1);
 
     println!("Q-GenX on a {}-dim bilinear saddle, K = {} workers", cfg.problem.dim, cfg.workers);
     println!("== adaptive 4-bit quantization (UQ4 + QAda + Huffman) ==");

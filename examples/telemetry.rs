@@ -1,0 +1,109 @@
+//! Observability walkthrough: the run-telemetry subsystem end to end.
+//!
+//! Every session family emits the same structured telemetry from the one
+//! `RoundEngine` seam: per-stage spans (sample / quantize / encode /
+//! exchange / decode / apply / stat), run counters (wire bits per plane,
+//! stat rounds, level updates, codec refreshes), and per-link traffic.
+//! Two sinks are demonstrated here:
+//!
+//! 1. the **in-memory ring** (`TelemetryConfig::memory()`) — zero
+//!    steady-state allocations, inspected after the run through
+//!    `Session::telemetry()`, plus the `TelemetryObserver` bridge that
+//!    streams compact lines while the run progresses;
+//! 2. the **JSONL event stream** (`TelemetryConfig::jsonl(path)`) — one
+//!    deterministic JSON object per line (`manifest`, then `step`*, then
+//!    `summary`), parsed back below with the same in-tree JSON.
+//!
+//! Telemetry is *neutral*: trajectories and wire bytes are bit-identical
+//! with it on or off (`rust/tests/telemetry.rs` pins this). Schema and
+//! overhead contract: `docs/OBSERVABILITY.md`. The same machinery is one
+//! flag away on the CLI (`qgenx run --telemetry mem|path.jsonl`) or one
+//! env var away anywhere (`QGENX_TELEMETRY`).
+//!
+//! ```bash
+//! cargo run --release --example telemetry
+//! ```
+
+use qgenx::benchkit::{example_iters, fmt_secs};
+use qgenx::config::ExperimentConfig;
+use qgenx::coordinator::Session;
+use qgenx::runtime::json::Json;
+use qgenx::telemetry::{TelemetryConfig, TelemetryObserver, TELEMETRY_SCHEMA};
+use std::collections::BTreeMap;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "telemetry".into();
+    cfg.problem.kind = "bilinear".into();
+    cfg.problem.dim = 96;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 0.5;
+    cfg.workers = 4;
+    cfg.topo.kind = "ring".into();
+    cfg.iters = example_iters(600);
+    cfg.eval_every = (cfg.iters / 4).max(1);
+
+    // ---- 1. In-memory ring + streaming observer --------------------------
+    println!("== in-memory telemetry: ring + TelemetryObserver ==");
+    let mut session = Session::builder(cfg.clone())
+        .telemetry(TelemetryConfig::memory())
+        .observer(Box::new(TelemetryObserver::every((cfg.iters / 6).max(1))))
+        .build()?;
+    session.run_to(cfg.iters)?;
+
+    let tele = session.telemetry();
+    let c = tele.counters();
+    println!("\nrun counters:");
+    println!(
+        "  steps={}  data rounds={}  stat rounds={}",
+        c.steps, c.data_rounds, c.stat_rounds
+    );
+    println!(
+        "  data bits={}  stat bits={}  level updates={}  codec refreshes={}",
+        c.data_bits, c.stat_bits, c.level_updates, c.codec_refreshes
+    );
+    println!("stage spans (run totals; `exchange` is modeled α-β time):");
+    for (stage, secs) in tele.totals().iter() {
+        if secs > 0.0 {
+            println!("  {:<9} {}", stage.name(), fmt_secs(secs));
+        }
+    }
+    if let Some(last) = tele.ring().latest() {
+        println!(
+            "last step t={}: {} data bits over {} links; hottest link ({},{}) carried {:.0} B",
+            last.t, last.data_bits, last.links, last.hot_link.0, last.hot_link.1, last.hot_link_bytes
+        );
+    }
+    let gap = session.recorder().get("gap").and_then(|s| s.last()).unwrap_or(f64::NAN);
+    println!("final gap {gap:.5} — identical with telemetry off (neutrality contract)");
+
+    // ---- 2. JSONL event stream ------------------------------------------
+    let path = "results/telemetry_example.jsonl";
+    println!("\n== JSONL telemetry sink -> {path} ==");
+    Session::builder(cfg.clone()).telemetry(TelemetryConfig::jsonl(path)).build()?.run()?;
+
+    // The stream is one JSON object per line, serialized deterministically
+    // (sorted keys) by the in-tree JSON — so it parses back with the same.
+    let text = std::fs::read_to_string(path)?;
+    let first = Json::parse(text.lines().next().ok_or("empty telemetry stream")?)?;
+    assert_eq!(first.get("event").and_then(|e| e.as_str()), Some("manifest"));
+    assert_eq!(first.get("schema").and_then(|s| s.as_usize()), Some(TELEMETRY_SCHEMA as usize));
+    let mut kinds: BTreeMap<String, usize> = BTreeMap::new();
+    let mut last_kind = String::new();
+    for line in text.lines() {
+        let kind = Json::parse(line)?
+            .get("event")
+            .and_then(|e| e.as_str())
+            .unwrap_or("?")
+            .to_string();
+        *kinds.entry(kind.clone()).or_insert(0) += 1;
+        last_kind = kind;
+    }
+    assert_eq!(last_kind, "summary", "stream must close with the summary event");
+    print!("events:");
+    for (kind, n) in &kinds {
+        print!("  {kind} x{n}");
+    }
+    println!("  (schema v{TELEMETRY_SCHEMA}, docs/OBSERVABILITY.md)");
+    Ok(())
+}

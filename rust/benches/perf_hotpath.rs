@@ -17,7 +17,8 @@
 //! Huffman decoder must beat the per-bit reference ≥ 2×.
 
 use qgenx::benchkit::{
-    bench, env_usize, fmt_secs, fmt_throughput, scaled, write_json, Table,
+    allocs_per_call, bench, env_usize, fmt_secs, fmt_throughput, scaled, write_json,
+    CountingAlloc, Table,
 };
 use qgenx::coding::{BitReader, HuffmanCode, SymbolCodec};
 use qgenx::config::{LevelScheme, QuantConfig, QuantMode};
@@ -29,50 +30,14 @@ use qgenx::quant::{
 };
 use qgenx::runtime::json::Json;
 use qgenx::util::Rng;
-use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Counting wrapper over the system allocator: `allocs()` deltas give the
-/// allocations-per-message numbers in the JSON (alloc/realloc/alloc_zeroed
-/// each count once; frees are not counted).
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-}
-
+// The shared counting wrapper over the system allocator (benchkit):
+// `allocs_per_call` deltas give the allocations-per-message numbers in
+// the JSON. Installing it here makes this binary's counts real; the same
+// counter feeds telemetry's `allocs` field.
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
-
-fn allocs() -> u64 {
-    ALLOCS.load(Ordering::Relaxed)
-}
-
-/// Allocations across `calls` invocations of `f`, averaged.
-fn allocs_per_call<F: FnMut()>(calls: u64, mut f: F) -> f64 {
-    let before = allocs();
-    for _ in 0..calls {
-        f();
-    }
-    (allocs() - before) as f64 / calls as f64
-}
 
 fn case(
     stage: &str,

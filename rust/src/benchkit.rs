@@ -5,6 +5,8 @@
 //! and an aligned-table printer so bench output reads like the paper's
 //! tables. Set `QGENX_BENCH_FAST=1` to shrink workloads for smoke runs.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Result of timing one benchmark case.
@@ -14,31 +16,41 @@ pub struct Timing {
     pub samples: Vec<f64>, // seconds
 }
 
+/// Median of an already-sorted slice (empty ⇒ 0.0).
+fn median_of_sorted(s: &[f64]) -> f64 {
+    let n = s.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
 impl Timing {
-    pub fn median(&self) -> f64 {
+    /// One sorted copy of the samples, shared by [`Self::median`] and
+    /// [`Self::mad`] (which used to clone-and-sort independently per
+    /// call). `total_cmp` keeps the sort total even if a sample is NaN —
+    /// the old `partial_cmp().unwrap()` panicked there.
+    fn sorted(&self) -> Vec<f64> {
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        if s.is_empty() {
-            return 0.0;
-        }
-        let n = s.len();
-        if n % 2 == 1 {
-            s[n / 2]
-        } else {
-            0.5 * (s[n / 2 - 1] + s[n / 2])
-        }
+        s.sort_by(f64::total_cmp);
+        s
+    }
+
+    pub fn median(&self) -> f64 {
+        median_of_sorted(&self.sorted())
     }
 
     /// Median absolute deviation (robust spread).
     pub fn mad(&self) -> f64 {
-        let m = self.median();
-        let mut devs: Vec<f64> = self.samples.iter().map(|x| (x - m).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        if devs.is_empty() {
-            0.0
-        } else {
-            devs[devs.len() / 2]
-        }
+        let sorted = self.sorted();
+        let m = median_of_sorted(&sorted);
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - m).abs()).collect();
+        devs.sort_by(f64::total_cmp);
+        median_of_sorted(&devs)
     }
 
     pub fn mean(&self) -> f64 {
@@ -49,9 +61,67 @@ impl Timing {
         }
     }
 
+    /// Fastest sample. Empty timings report 0.0 like the other stats (the
+    /// old fold seeded with `f64::INFINITY` leaked `inf` into tables and
+    /// JSON, where [`crate::runtime::json::Json::dump`] turns it into
+    /// `null`).
     pub fn min(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.samples.iter().copied().min_by(f64::total_cmp).unwrap_or(0.0)
     }
+}
+
+/// Counting global allocator (§Perf, PR 5): every `alloc`/`realloc`/
+/// `alloc_zeroed` bumps a process-wide counter, so hot paths can assert
+/// "zero allocations in steady state" and telemetry can report allocation
+/// deltas per round.
+///
+/// Rust allows exactly one `#[global_allocator]` per binary, so this
+/// module exports the *type* and the counter; each bench or test binary
+/// that wants counting installs its own:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static GLOBAL: qgenx::benchkit::CountingAlloc = qgenx::benchkit::CountingAlloc;
+/// ```
+///
+/// Binaries that don't install it still link fine — [`allocs`] just stays
+/// at 0, which [`crate::telemetry`] treats as "counter not installed".
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Total allocation events since process start (0 unless the binary
+/// installed [`CountingAlloc`] as its global allocator).
+pub fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Mean allocation events per call of `f` over `calls` invocations.
+/// Meaningful only under an installed [`CountingAlloc`].
+pub fn allocs_per_call<F: FnMut()>(calls: u64, mut f: F) -> f64 {
+    let before = allocs();
+    for _ in 0..calls {
+        f();
+    }
+    (allocs() - before) as f64 / calls.max(1) as f64
 }
 
 /// True when the fast/smoke mode is requested (CI and `make bench-fast`).
@@ -255,6 +325,44 @@ mod tests {
         assert_eq!(t.median(), 3.0);
         assert_eq!(t.min(), 1.0);
         assert!(t.mad() <= 2.0); // robust to the outlier
+    }
+
+    #[test]
+    fn timing_empty_is_all_zeros() {
+        // Regression: `min()` used to report `f64::INFINITY` on an empty
+        // timing (a bench whose budget admitted zero samples), which JSON
+        // output then rendered as null.
+        let t = Timing { label: "empty".into(), samples: vec![] };
+        assert_eq!(t.min(), 0.0);
+        assert_eq!(t.median(), 0.0);
+        assert_eq!(t.mad(), 0.0);
+        assert_eq!(t.mean(), 0.0);
+    }
+
+    #[test]
+    fn timing_tolerates_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` panicked inside the sort
+        // when a sample was NaN (e.g. a derived rate dividing by zero).
+        // `total_cmp` orders NaN after every finite value, so the finite
+        // half of the distribution still produces sane statistics.
+        let t = Timing { label: "nan".into(), samples: vec![2.0, f64::NAN, 1.0] };
+        assert_eq!(t.median(), 2.0); // sorted: [1.0, 2.0, NaN]
+        assert_eq!(t.min(), 1.0);
+        let _ = t.mad(); // must not panic
+    }
+
+    #[test]
+    fn counting_alloc_counter_is_monotonic() {
+        // The test binary does not install CountingAlloc, so the counter
+        // just holds still — the telemetry-side contract for "counter not
+        // installed" is exactly this monotonic-from-zero behavior.
+        let a = allocs();
+        let b = allocs();
+        assert!(b >= a);
+        let per = allocs_per_call(4, || {
+            std::hint::black_box(7);
+        });
+        assert_eq!(per, 0.0);
     }
 
     #[test]

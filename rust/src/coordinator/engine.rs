@@ -50,6 +50,7 @@ use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
 use crate::net::{AllGather, NetModel, PoisonGuard, TrafficStats};
 use crate::oracle::{build_oracle, Operator, Oracle};
+use crate::telemetry::{Stage, StepRecord, Telemetry};
 use crate::topo::{Collective, LinkTraffic};
 use crate::util::Rng;
 use std::sync::Arc;
@@ -87,23 +88,26 @@ pub(crate) enum Query<'a> {
 /// schedule is gated on the adapts predicate and an adapting statistic
 /// always serializes its header). Otherwise records the payload bits as
 /// allgather traffic, then drives [`Compressor::update_levels`] on every
-/// endpoint.
+/// endpoint. Returns whether any endpoint's level placement changed
+/// (callers that only care about the side effect can `?;` or `map` it
+/// away; the telemetry layer reports it as `level_update`).
 pub fn pool_local_stats(
     comps: &mut [Compressor],
     net: &NetModel,
     traffic: &mut TrafficStats,
-) -> Result<()> {
+) -> Result<bool> {
     let payloads: Vec<Vec<u8>> = comps.iter().map(|c| c.stats_payload()).collect();
     if payloads.iter().all(|p| p.is_empty()) {
-        return Ok(());
+        return Ok(false);
     }
     let bits: Vec<u64> = payloads.iter().map(|p| 8 * p.len() as u64).collect();
     traffic.record_allgather(&bits, net);
     let rank_order: Vec<&[u8]> = payloads.iter().map(|p| p.as_slice()).collect();
+    let mut changed = false;
     for comp in comps.iter_mut() {
-        comp.update_levels(&rank_order)?;
+        changed |= comp.update_levels(&rank_order)?;
     }
-    Ok(())
+    Ok(changed)
 }
 
 /// Out-of-band diagnostic allgather at eval steps (transport fabric):
@@ -174,6 +178,10 @@ pub struct RoundEngine {
     bits_buf: Vec<u64>,
     pub(crate) traffic: TrafficStats,
     pub(crate) links: LinkTraffic,
+    /// The run-telemetry recorder (disabled by default; see
+    /// [`crate::telemetry`]). Owned here so every family and both fabrics
+    /// share one instrumentation seam.
+    pub(crate) tele: Telemetry,
     /// Per-step stat schedule `U` (exact / gossip families).
     pub(crate) schedule: UpdateSchedule,
     /// Does this pipeline exchange statistics at all (local family)?
@@ -241,6 +249,7 @@ impl RoundEngine {
             g_buf: vec![0.0f32; d],
             traffic: TrafficStats::default(),
             links: LinkTraffic::new(),
+            tele: Telemetry::off(),
             schedule,
             adaptive,
             update_every: cfg.quant.update_every,
@@ -273,8 +282,14 @@ impl RoundEngine {
                 Query::Shared(x) => x,
                 Query::PerOwned(xs) => &xs[i],
             };
+            let c0 = self.tele.clock();
             self.oracles[i].sample(x, &mut self.g_buf);
-            let b = self.comps[i].compress_into(&self.g_buf, &mut self.wire_bufs[i])?;
+            self.tele.lap(c0, Stage::Sample);
+            let b = self.comps[i].compress_timed(
+                &self.g_buf,
+                &mut self.wire_bufs[i],
+                self.tele.spans_mut(),
+            )?;
             self.bits_buf.push(b);
         }
         self.traffic.add_compute(t0.elapsed().as_secs_f64());
@@ -288,7 +303,8 @@ impl RoundEngine {
         let t0 = Instant::now();
         self.bits_buf.clear();
         for (i, v) in vecs.iter().enumerate() {
-            let b = self.comps[i].compress_into(v, &mut self.wire_bufs[i])?;
+            let b =
+                self.comps[i].compress_timed(v, &mut self.wire_bufs[i], self.tele.spans_mut())?;
             self.bits_buf.push(b);
         }
         self.traffic.add_compute(t0.elapsed().as_secs_f64());
@@ -309,9 +325,15 @@ impl RoundEngine {
                 for w in 0..self.k {
                     self.comps[w].decompress_into(&self.wire_bufs[w], &mut self.decoded[w])?;
                 }
-                self.traffic.add_compute(t0.elapsed().as_secs_f64());
-                self.collective.record_round(&self.bits_buf, &self.net, &mut self.traffic);
+                let dt = t0.elapsed().as_secs_f64();
+                self.traffic.add_compute(dt);
+                self.tele.span_secs(Stage::Decode, dt);
+                // The same accounting `Collective::record_round` performs,
+                // inlined so the modeled cost is visible to telemetry.
+                let cost = self.collective.round_cost(&self.net, &self.bits_buf);
+                self.traffic.record_modeled(cost.wire_bits, cost.messages, cost.secs);
                 self.links.record(self.collective.as_ref(), &self.bits_buf);
+                self.tele.on_data_round(cost.wire_bits, cost.secs, self.links.last_round());
             }
             Fabric::Transport { transport, rank } => {
                 let rank = *rank;
@@ -320,7 +342,8 @@ impl RoundEngine {
                 // moving bytes across threads).
                 let payload = std::mem::take(&mut self.wire_bufs[0]);
                 let (recv, bits) = self.collective.exchange(transport, rank, payload)?;
-                self.collective.record_round(&bits, &self.net, &mut self.traffic);
+                let cost = self.collective.round_cost(&self.net, &bits);
+                self.traffic.record_modeled(cost.wire_bits, cost.messages, cost.secs);
                 if rank == 0 {
                     self.links.record(self.collective.as_ref(), &bits);
                 }
@@ -328,7 +351,15 @@ impl RoundEngine {
                 for (sender, bytes) in &recv {
                     self.comps[0].decompress_into(bytes, &mut self.decoded[*sender])?;
                 }
-                self.traffic.add_compute(t0.elapsed().as_secs_f64());
+                let dt = t0.elapsed().as_secs_f64();
+                self.traffic.add_compute(dt);
+                self.tele.span_secs(Stage::Decode, dt);
+                // Per-link deltas exist on the link-accounting rank only.
+                if rank == 0 {
+                    self.tele.on_data_round(cost.wire_bits, cost.secs, self.links.last_round());
+                } else {
+                    self.tele.on_data_round(cost.wire_bits, cost.secs, &[]);
+                }
             }
         }
         Ok(self.traffic.bits_sent - before)
@@ -338,18 +369,27 @@ impl RoundEngine {
     /// sufficient statistics (always accounted as a full-mesh round) and
     /// re-optimize levels / codecs / allocations in lockstep.
     pub(crate) fn stat_round(&mut self) -> Result<()> {
-        match &self.fabric {
-            Fabric::Loopback => pool_local_stats(&mut self.comps, &self.net, &mut self.traffic),
+        let c0 = self.tele.clock();
+        let bits_before = self.traffic.bits_sent;
+        // `refreshed` = an update actually ran (codecs rebuilt) — observed
+        // as an `updates()` delta so empty-payload no-ops stay invisible;
+        // `changed` = some endpoint's level placement moved.
+        let updates_before = self.comps[0].updates();
+        let changed = match &self.fabric {
+            Fabric::Loopback => pool_local_stats(&mut self.comps, &self.net, &mut self.traffic)?,
             Fabric::Transport { transport, rank } => {
                 let payload = self.comps[0].stats_payload();
                 let got = transport.exchange(*rank, payload)?;
                 let bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
                 self.traffic.record_allgather(&bits, &self.net);
                 let rank_order: Vec<&[u8]> = got.iter().map(|p| p.as_slice()).collect();
-                self.comps[0].update_levels(&rank_order)?;
-                Ok(())
+                self.comps[0].update_levels(&rank_order)?
             }
-        }
+        };
+        let refreshed = self.comps[0].updates() > updates_before;
+        self.tele.lap(c0, Stage::Stat);
+        self.tele.on_stat_round(self.traffic.bits_sent - bits_before, refreshed, changed);
+        Ok(())
     }
 
     /// Per-step schedule `U` (exact / gossip families): stat round when
@@ -415,6 +455,42 @@ impl RoundEngine {
     ) -> Result<()> {
         rep.local_round(self.oracles[i].as_mut(), &mut self.g_buf)
     }
+
+    // --- telemetry seam (see `crate::telemetry`) ---
+
+    /// Install the telemetry recorder (SessionBuilder wiring).
+    pub(crate) fn set_telemetry(&mut self, tele: Telemetry) {
+        self.tele = tele;
+    }
+
+    /// The engine's telemetry recorder (disabled recorder when off).
+    pub(crate) fn telemetry(&self) -> &Telemetry {
+        &self.tele
+    }
+
+    /// Close telemetry step `t` — the session's end-of-step hook. Returns
+    /// the closed [`StepRecord`] (None when telemetry is off).
+    pub(crate) fn end_telemetry_step(&mut self, t: u64) -> Option<StepRecord> {
+        self.tele.end_step(t)
+    }
+
+    /// Emit the telemetry `summary` event (per-layer cumulative bits for
+    /// layer-wise pipelines, cumulative per-link bytes) and flush the
+    /// JSONL sink. Safe to call more than once; no-op when off.
+    pub(crate) fn finish_telemetry(&mut self) {
+        if !self.tele.is_enabled() {
+            return;
+        }
+        let link_totals = self.links.totals();
+        match (self.comps[0].layer_names(), self.comps[0].layer_wire_bits()) {
+            (Some(names), Some(bits)) => {
+                let names = names.to_vec();
+                let bits = bits.to_vec();
+                self.tele.finish(Some((&names, &bits)), &link_totals);
+            }
+            _ => self.tele.finish(None, &link_totals),
+        }
+    }
 }
 
 impl Clone for RoundEngine {
@@ -440,6 +516,7 @@ impl Clone for RoundEngine {
             bits_buf: self.bits_buf.clone(),
             traffic: self.traffic,
             links: self.links.clone(),
+            tele: self.tele.clone(),
             schedule: self.schedule,
             adaptive: self.adaptive,
             update_every: self.update_every,

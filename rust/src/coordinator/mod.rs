@@ -76,6 +76,17 @@
 //! Timing: compute (oracle + encode + decode) is *measured*; network time
 //! is *modeled* (α-β on the exact encoded byte counts). Measured times
 //! are exempt from the bit-for-bit reproducibility contract.
+//!
+//! ## Observability
+//!
+//! The engine owns a [`crate::telemetry::Telemetry`] recorder (off by
+//! default): stage spans, bit/round counters, and per-link traffic
+//! streams, emitted identically by every family and both fabrics. Enable
+//! it with [`SessionBuilder::telemetry`] or the `QGENX_TELEMETRY`
+//! environment knob; each [`StepReport`] then carries the step's closed
+//! [`crate::telemetry::StepRecord`]. Telemetry is *neutral*: trajectories
+//! and wire bytes are bit-identical with it on or off
+//! (`tests/telemetry.rs`). Full schema: `docs/OBSERVABILITY.md`.
 
 pub mod engine;
 pub mod inline;

@@ -32,7 +32,9 @@ use crate::quant::{
     optimize_levels, quantize_into, symbol_probs, LayerMap, LayerProfile, LayerStats, Levels,
     QuantizedVector, SufficientStats, WireCodec,
 };
+use crate::telemetry::{Stage, StageSpans};
 use crate::util::Rng;
+use std::time::Instant;
 
 /// A worker's (de)compression endpoint.
 #[derive(Clone)]
@@ -92,7 +94,31 @@ impl QuantCompressor {
     /// `CODE ∘ Q` one vector (or one layer slice) with this state,
     /// *appending* the wire bytes to `out`. Quantizes into the encode
     /// arena and emits word-at-a-time — zero allocations in steady state.
-    fn compress_vec_into(&mut self, v: &[f32], out: &mut Vec<u8>) -> Result<u64> {
+    ///
+    /// `spans` is the telemetry quantize/encode span split: identical wire
+    /// bytes and RNG stream either way; the `Instant` reads only happen
+    /// when a span accumulator is handed in.
+    fn compress_vec_timed(
+        &mut self,
+        v: &[f32],
+        out: &mut Vec<u8>,
+        spans: Option<&mut StageSpans>,
+    ) -> Result<u64> {
+        let spans = match spans {
+            Some(s) => s,
+            None => {
+                quantize_into(
+                    v,
+                    &self.levels,
+                    self.cfg.norm_q,
+                    self.cfg.bucket_size,
+                    &mut self.rng,
+                    &mut self.scratch.enc,
+                )?;
+                return encode_vector_into(&self.scratch.enc, &self.codec, out);
+            }
+        };
+        let t0 = Instant::now();
         quantize_into(
             v,
             &self.levels,
@@ -101,7 +127,11 @@ impl QuantCompressor {
             &mut self.rng,
             &mut self.scratch.enc,
         )?;
-        encode_vector_into(&self.scratch.enc, &self.codec, out)
+        let t1 = Instant::now();
+        spans.add(Stage::Quantize, (t1 - t0).as_secs_f64());
+        let bits = encode_vector_into(&self.scratch.enc, &self.codec, out)?;
+        spans.add(Stage::Encode, t1.elapsed().as_secs_f64());
+        Ok(bits)
     }
 
     /// `DEQ ∘ CODE` one payload through the decode arena into `out`.
@@ -214,12 +244,31 @@ impl Compressor {
     /// identical wire bytes and RNG stream, zero allocations per message
     /// once the scratch arenas and `out` reach steady-state size.
     pub fn compress_into(&mut self, v: &[f32], out: &mut Vec<u8>) -> Result<u64> {
+        self.compress_timed(v, out, None)
+    }
+
+    /// [`Self::compress_into`] with the telemetry quantize/encode span
+    /// split (see [`crate::telemetry::Stage`]). `spans: None` is the exact
+    /// untimed hot path — no `Instant` reads at all; `Some` accumulates
+    /// `quantize` and `encode` seconds (FP32 serialization counts as
+    /// `encode`). Wire bytes and RNG stream are identical either way —
+    /// the telemetry neutrality contract.
+    pub fn compress_timed(
+        &mut self,
+        v: &[f32],
+        out: &mut Vec<u8>,
+        mut spans: Option<&mut StageSpans>,
+    ) -> Result<u64> {
         out.clear();
         match self {
             Compressor::Fp32 => {
+                let t0 = spans.is_some().then(Instant::now);
                 out.reserve(4 * v.len());
                 for &x in v {
                     out.extend_from_slice(&x.to_le_bytes());
+                }
+                if let (Some(s), Some(t0)) = (spans.as_deref_mut(), t0) {
+                    s.add(Stage::Encode, t0.elapsed().as_secs_f64());
                 }
                 Ok(32 * v.len() as u64)
             }
@@ -230,9 +279,9 @@ impl Compressor {
                 if q.cfg.adapts() {
                     q.observe_for_stats(v);
                 }
-                q.compress_vec_into(v, out)
+                q.compress_vec_timed(v, out, spans)
             }
-            Compressor::LayerWise(lw) => lw.compress_into(v, out),
+            Compressor::LayerWise(lw) => lw.compress_timed(v, out, spans),
         }
     }
 
@@ -479,8 +528,14 @@ impl LayerWiseCompressor {
     /// pairs to `out` (the caller clears; wire bytes identical to the
     /// historical allocating path). Each layer's stream is encoded straight
     /// into `out` — the frame length is patched in afterwards — so steady
-    /// state allocates nothing.
-    fn compress_into(&mut self, v: &[f32], out: &mut Vec<u8>) -> Result<u64> {
+    /// state allocates nothing. `spans` threads the telemetry
+    /// quantize/encode split into every layer's sub-pipeline.
+    fn compress_timed(
+        &mut self,
+        v: &[f32],
+        out: &mut Vec<u8>,
+        mut spans: Option<&mut StageSpans>,
+    ) -> Result<u64> {
         if let Some(m) = &self.map {
             if m.d() != v.len() {
                 return Err(Error::Quant(format!(
@@ -509,7 +564,7 @@ impl LayerWiseCompressor {
             let frame_at = out.len();
             out.extend_from_slice(&[0u8; 4]);
             let body_at = out.len();
-            let bits = sub.compress_vec_into(slice, out)?;
+            let bits = sub.compress_vec_timed(slice, out, spans.as_deref_mut())?;
             let frame = ((out.len() - body_at) as u32).to_le_bytes();
             out[frame_at..frame_at + 4].copy_from_slice(&frame);
             total_bits += 32 + bits;

@@ -34,6 +34,7 @@ use crate::config::ExperimentConfig;
 use crate::error::Result;
 use crate::metrics::{consensus_distance, Recorder, SyncAccounting};
 use crate::oracle::GapEvaluator;
+use crate::telemetry::Stage;
 use std::time::Instant;
 
 /// One runner family's per-iteration protocol (see module docs).
@@ -155,12 +156,20 @@ impl ExchangePolicy for ExactPolicy {
         // did — no per-iteration K×d clone on the hottest loop.
         let x_half = if let Some(xq) = self.state.base_query() {
             eng.dual_exchange(Query::Shared(&xq))?;
-            self.state.extrapolate(&eng.decoded)?
+            let c = eng.tele.clock();
+            let xh = self.state.extrapolate(&eng.decoded)?;
+            eng.tele.lap(c, Stage::Apply);
+            xh
         } else {
-            self.state.extrapolate(&[])?
+            let c = eng.tele.clock();
+            let xh = self.state.extrapolate(&[])?;
+            eng.tele.lap(c, Stage::Apply);
+            xh
         };
         eng.dual_exchange(Query::Shared(&x_half))?;
+        let c = eng.tele.clock();
         self.state.update(&eng.decoded)?;
+        eng.tele.lap(c, Stage::Apply);
         Ok(())
     }
 
@@ -259,16 +268,20 @@ impl ExchangePolicy for GossipPolicy {
         } else {
             vec![Vec::new(); self.states.len()]
         };
+        let c = eng.tele.clock();
         let x_halves: Vec<Vec<f32>> = self
             .states
             .iter_mut()
             .zip(base_views.iter())
             .map(|(s, v)| s.extrapolate(v))
             .collect::<Result<_>>()?;
+        eng.tele.lap(c, Stage::Apply);
         eng.dual_exchange(Query::PerOwned(&x_halves))?;
+        let c = eng.tele.clock();
         for (i, s) in self.states.iter_mut().enumerate() {
             s.update(&eng.view_of(i))?;
         }
+        eng.tele.lap(c, Stage::Apply);
         Ok(())
     }
 
@@ -381,7 +394,9 @@ impl ExchangePolicy for LocalPolicy {
         for (i, r) in self.reps.iter_mut().enumerate() {
             eng.local_round(i, r)?;
         }
-        eng.traffic.add_compute(t0.elapsed().as_secs_f64());
+        let dt = t0.elapsed().as_secs_f64();
+        eng.traffic.add_compute(dt);
+        eng.tele.span_secs(Stage::Apply, dt);
 
         // (2) Delta synchronization every H iterations (plus a final sync
         //     so the run always ends on a consensus point).
@@ -406,6 +421,7 @@ impl ExchangePolicy for LocalPolicy {
 
             // Resync each replica onto its neighborhood-averaged delta
             // (all K under exact topologies).
+            let c = eng.tele.clock();
             for (i, r) in self.reps.iter_mut().enumerate() {
                 let n = &eng.recv[i];
                 let mut mean = vec![0.0f32; eng.d];
@@ -416,6 +432,7 @@ impl ExchangePolicy for LocalPolicy {
                 }
                 r.resync(&mean)?;
             }
+            eng.tele.lap(c, Stage::Apply);
 
             // Control plane: pooled stat exchange at the first sync on or
             // after each due point.
@@ -519,7 +536,9 @@ impl ExchangePolicy for SgdaPolicy {
     ) -> Result<()> {
         let xq = self.sgda.query();
         eng.dual_exchange(Query::Shared(&xq))?;
+        let c = eng.tele.clock();
         self.sgda.update(&eng.decoded);
+        eng.tele.lap(c, Stage::Apply);
         Ok(())
     }
 

@@ -39,6 +39,7 @@ use crate::error::{Error, Result};
 use crate::metrics::Recorder;
 use crate::net::AllGather;
 use crate::oracle::{Oracle, Operator};
+use crate::telemetry::{self, Telemetry, TelemetryConfig};
 use crate::topo::{build_collective, Collective, Topology};
 use std::sync::Arc;
 
@@ -132,6 +133,9 @@ pub struct StepReport {
     pub done: bool,
     /// `true` when an observer stopped the run at this step.
     pub stopped: bool,
+    /// The closed telemetry record for this step (`None` when telemetry
+    /// is off — the default). See [`crate::telemetry`].
+    pub telemetry: Option<crate::telemetry::StepRecord>,
 }
 
 /// A deep copy of a paused session's full state — algorithm iterates,
@@ -158,6 +162,7 @@ pub struct SessionBuilder {
     oracle_factory: Option<Box<OracleFactory>>,
     collective: Option<Arc<dyn Collective>>,
     transport: Option<(Arc<AllGather>, usize)>,
+    telemetry: Option<TelemetryConfig>,
 }
 
 impl SessionBuilder {
@@ -203,6 +208,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Enable run telemetry (stage spans, counters, per-link streams —
+    /// [`crate::telemetry`]). Without this call, `build` falls back to the
+    /// `QGENX_TELEMETRY` environment knob, so every session consumer
+    /// (examples, benches, the CLI) can be instrumented without code
+    /// changes; unset (or `0`) means telemetry stays off.
+    pub fn telemetry(mut self, cfg: TelemetryConfig) -> Self {
+        self.telemetry = Some(cfg);
+        self
+    }
+
     /// Validate the configuration and construct the steppable session.
     pub fn build(self) -> Result<Session> {
         let cfg = self.cfg;
@@ -236,7 +251,16 @@ impl SessionBuilder {
             Some((transport, rank)) => Fabric::Transport { transport, rank },
             None => Fabric::Loopback,
         };
-        let eng = RoundEngine::new(&cfg, fabric, collective, self.oracle_factory.as_deref())?;
+        let mut eng = RoundEngine::new(&cfg, fabric, collective, self.oracle_factory.as_deref())?;
+        if let Some(mut tcfg) = self.telemetry.or_else(TelemetryConfig::from_env) {
+            // One JSONL file, one writer: only the metrics rank (loopback,
+            // or rank 0 of a transport group) attaches the sink; other
+            // ranks keep their in-memory ring.
+            if !eng.is_metrics_rank() {
+                tcfg.jsonl = None;
+            }
+            eng.set_telemetry(Telemetry::new(&tcfg, &telemetry::manifest_event(&cfg))?);
+        }
         let policy: Box<dyn ExchangePolicy> = match self.algorithm {
             Algorithm::Sgda => Box::new(SgdaPolicy::new(&cfg, &eng)),
             Algorithm::QGenX => {
@@ -285,6 +309,7 @@ impl Session {
             oracle_factory: None,
             collective: None,
             transport: None,
+            telemetry: None,
         }
     }
 
@@ -306,6 +331,13 @@ impl Session {
     /// The metrics recorded so far.
     pub fn recorder(&self) -> &Recorder {
         &self.rec
+    }
+
+    /// The telemetry recorder (a disabled recorder when telemetry is off):
+    /// run-total counters, per-stage seconds, and the in-memory ring of
+    /// recent [`crate::telemetry::StepRecord`]s.
+    pub fn telemetry(&self) -> &Telemetry {
+        self.eng.telemetry()
     }
 
     /// This endpoint's current replica state (the threaded replication
@@ -341,6 +373,10 @@ impl Session {
         rep.bits_cum = self.eng.traffic.bits_sent;
         rep.rounds = self.eng.traffic.rounds;
         rep.done = last;
+        // Close the telemetry step before observers run, so a streaming
+        // observer (e.g. `telemetry::TelemetryObserver`) sees this step's
+        // record on the report it is handed.
+        rep.telemetry = self.eng.end_telemetry_step(t as u64);
         let mut stop = false;
         for obs in self.observers.iter_mut() {
             if obs.on_step(&rep) == Control::Stop {
@@ -385,6 +421,7 @@ impl Session {
             return Ok(());
         }
         self.policy.finish(&mut self.eng, &mut self.rec)?;
+        self.eng.finish_telemetry();
         self.finalized = true;
         for obs in self.observers.iter_mut() {
             obs.on_finish(&self.rec);

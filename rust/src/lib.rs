@@ -36,13 +36,15 @@
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
 //! | [`train`] | GAN / LM training drivers over the runtime |
 //! | [`metrics`] | time-series recorder, CSV emission |
-//! | [`benchkit`] | bench harness (no `criterion` offline) |
+//! | [`telemetry`] | run telemetry: stage spans, counters, per-link streams, ring + JSONL sinks |
+//! | [`benchkit`] | bench harness (no `criterion` offline), counting allocator |
 //!
 //! User-facing references: `rust/README.md` (crate tour, scenario
 //! families, bench ↔ theorem map), `docs/API.md` (the Session run API:
 //! lifecycle, Observer contract, checkpoint/resume, migration table),
 //! `docs/CONFIG.md` (every TOML table and CLI flag), `docs/WIRE.md`
-//! (payload and stat wire formats).
+//! (payload and stat wire formats), `docs/OBSERVABILITY.md` (telemetry
+//! event schema, span taxonomy, sinks, overhead contract).
 
 pub mod algo;
 pub mod benchkit;
@@ -55,6 +57,7 @@ pub mod net;
 pub mod oracle;
 pub mod quant;
 pub mod runtime;
+pub mod telemetry;
 pub mod testkit;
 pub mod topo;
 pub mod train;

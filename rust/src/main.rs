@@ -66,7 +66,7 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H] [--layers N|name:end,...,last] [--watch] [--stop-at-gap g]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H] [--layers N|name:end,...,last] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K] [--layerwise]\n\
            lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N]\n\
            info   print the artifact manifest summary\n\
@@ -148,10 +148,16 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     if flags.contains_key("qsgda") && cfg.local.steps > 1 {
         return Err("--qsgda has no local-steps path; drop --local".into());
     }
-    if (flags.contains_key("watch") || flags.contains_key("stop-at-gap"))
+    if (flags.contains_key("watch")
+        || flags.contains_key("stop-at-gap")
+        || flags.contains_key("telemetry"))
         && (flags.contains_key("qsgda") || flags.contains_key("threaded"))
     {
-        return Err("--watch/--stop-at-gap drive an inline Session; drop --qsgda/--threaded".into());
+        return Err(
+            "--watch/--stop-at-gap/--telemetry drive an inline Session; drop --qsgda/--threaded \
+             (threaded runs honour the QGENX_TELEMETRY env knob instead)"
+                .into(),
+        );
     }
     println!(
         "run: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={} layers={}",
@@ -183,6 +189,15 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
         if let Some(g) = flags.get("stop-at-gap") {
             let g: f64 = g.parse().map_err(|_| "bad --stop-at-gap")?;
             builder = builder.observer(Box::new(StopAtGap(g)));
+        }
+        if let Some(v) = flags.get("telemetry") {
+            // Same grammar as QGENX_TELEMETRY: `mem`/`1` for the in-memory
+            // ring, anything else is a JSONL sink path (docs/OBSERVABILITY.md).
+            // A bare `--telemetry` parses as "true" — treat it as `mem`.
+            let v = if v == "true" { "mem" } else { v.as_str() };
+            let tcfg = qgenx::telemetry::TelemetryConfig::parse(v)
+                .ok_or("bad --telemetry: use `mem` or a JSONL path")?;
+            builder = builder.telemetry(tcfg);
         }
         builder.build().map_err(|e| e.to_string())?.run().map_err(|e| e.to_string())?
     };

@@ -20,6 +20,14 @@ pub enum Json {
 }
 
 impl Json {
+    /// Build an object from `(key, value)` pairs — the constructor the
+    /// telemetry sink and the benches use instead of spelling
+    /// `Json::Obj(BTreeMap::from([...]))` with per-key `.to_string()`
+    /// noise at every call site. Later duplicates win (BTreeMap insert).
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
     pub fn parse(src: &str) -> Result<Json> {
         let mut p = Parser { bytes: src.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -375,6 +383,14 @@ mod tests {
     fn string_escapes() {
         let j = Json::parse(r#""a\nb\t\"c\" A""#).unwrap();
         assert_eq!(j.as_str(), Some("a\nb\t\"c\" A"));
+    }
+
+    #[test]
+    fn obj_constructor_builds_sorted_objects() {
+        let j = Json::obj([("b", Json::Num(2.0)), ("a", Json::Str("x".into()))]);
+        assert_eq!(j.get("a").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("b").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.dump(), r#"{"a":"x","b":2}"#);
     }
 
     #[test]

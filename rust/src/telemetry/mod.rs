@@ -1,0 +1,842 @@
+//! Run telemetry: stage spans, counters, and per-link traffic streams
+//! over the one [`crate::coordinator`] round seam.
+//!
+//! The paper's claims are rates and budgets — O(1/T) vs O(1/√T), Theorem-2
+//! code lengths, wall-clock speedup from distribution — so the question a
+//! run has to answer is "where did the bits and the microseconds go, per
+//! round, per link, per stage". This module is the substrate: a cheap,
+//! always-compiled recorder owned by the `RoundEngine`, so every session
+//! family (exact / gossip / local / sgda, inline and threaded) emits the
+//! same structured events with zero hand-copied instrumentation.
+//!
+//! ## Taxonomy
+//!
+//! * **Stage spans** ([`Stage`], [`StageSpans`]) — per-step seconds in
+//!   `sample` (oracle draws), `quantize` (Q_ℓ), `encode` (CODE),
+//!   `exchange` (the *modeled* α-β round time — network time is simulated,
+//!   see [`crate::net`]), `decode` (DEQ ∘ CODE), `apply` (iterate math in
+//!   the policies), and `stat` (control-plane stat rounds, measured).
+//!   All spans except `exchange` are wall-clock measurements and therefore
+//!   — like `compute_time` — exempt from the bit-for-bit reproducibility
+//!   contract. Everything else in this module is deterministic.
+//! * **Counters** ([`Counters`]) — wire bits split data-plane vs
+//!   control-plane, data/stat round counts, adaptive level updates, codec
+//!   (Huffman) refreshes, and allocation events (the PR 5
+//!   [`crate::benchkit::CountingAlloc`] counter; reads 0 unless the binary
+//!   installed it).
+//! * **Per-link streams** — [`crate::topo::LinkTraffic`] keeps per-round
+//!   deltas next to its cumulative totals; the recorder snapshots the
+//!   hottest link per step so hot-spotting is visible per topology.
+//!
+//! ## Sinks
+//!
+//! * The **ring recorder** (default): a fixed-capacity ring of `Copy`
+//!   [`StepRecord`]s, preallocated at session build — recording a
+//!   steady-state loopback round performs **zero heap allocations**
+//!   (asserted by `tests/telemetry.rs` under the counting allocator).
+//! * The **JSONL sink** ([`sink::JsonlSink`]): one event object per line
+//!   (`manifest`, then `step`*, then `summary`), built on
+//!   [`crate::runtime::json::Json`] so the output is deterministic,
+//!   sorted-key, and re-parsable by the same crate. Schema:
+//!   `docs/OBSERVABILITY.md`, version [`TELEMETRY_SCHEMA`].
+//! * The [`TelemetryObserver`] bridge: streams per-step summaries through
+//!   the existing [`crate::coordinator::Observer`] trait.
+//!
+//! ## Surface
+//!
+//! `Session::builder(..).telemetry(TelemetryConfig::jsonl(path))`, the
+//! `qgenx run --telemetry <path>` flag, or the `QGENX_TELEMETRY`
+//! environment variable (`1`/`mem` = ring only, anything else = JSONL
+//! path). The env knob is read in `SessionBuilder::build`, which is why
+//! every example and every session-driven bench picks it up for free.
+//! Threaded runs attach the JSONL sink on rank 0 only (one file, one
+//! writer); every rank still keeps its in-memory ring.
+//!
+//! Neutrality contract: telemetry on vs off changes **no** trajectory,
+//! wire byte, or deterministic metric — it only reads what the engine
+//! already computed (`tests/telemetry.rs` pins this for inline and
+//! threaded coordinators).
+
+pub mod sink;
+
+use crate::error::Result;
+use crate::runtime::json::Json;
+use crate::topo::collective::Link;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub use sink::JsonlSink;
+
+/// JSONL event-schema version (bump on breaking event/field changes; see
+/// `docs/OBSERVABILITY.md`).
+pub const TELEMETRY_SCHEMA: u32 = 1;
+
+/// Pipeline stages a round spends time in (span taxonomy — module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Oracle draws (`V̂(X)` sampling).
+    Sample,
+    /// `Q_ℓ` — quantization into the symbol arena.
+    Quantize,
+    /// `CODE` — entropy-coding symbols onto the wire.
+    Encode,
+    /// The synchronous round itself — *modeled* α-β seconds, not measured.
+    Exchange,
+    /// `DEQ ∘ CODE` — decoding received payloads.
+    Decode,
+    /// Iterate math in the policy (extrapolate / update / local segments).
+    Apply,
+    /// Control-plane stat rounds (pool + re-optimize + codec rebuild).
+    Stat,
+}
+
+/// Number of [`Stage`] variants (array-accumulator width).
+pub const N_STAGES: usize = 7;
+
+/// All stages, in canonical report order.
+pub const STAGES: [Stage; N_STAGES] = [
+    Stage::Sample,
+    Stage::Quantize,
+    Stage::Encode,
+    Stage::Exchange,
+    Stage::Decode,
+    Stage::Apply,
+    Stage::Stat,
+];
+
+impl Stage {
+    /// Stable lowercase name (JSONL field key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Sample => "sample",
+            Stage::Quantize => "quantize",
+            Stage::Encode => "encode",
+            Stage::Exchange => "exchange",
+            Stage::Decode => "decode",
+            Stage::Apply => "apply",
+            Stage::Stat => "stat",
+        }
+    }
+
+    #[inline]
+    fn idx(self) -> usize {
+        match self {
+            Stage::Sample => 0,
+            Stage::Quantize => 1,
+            Stage::Encode => 2,
+            Stage::Exchange => 3,
+            Stage::Decode => 4,
+            Stage::Apply => 5,
+            Stage::Stat => 6,
+        }
+    }
+}
+
+/// Fixed-width per-stage seconds accumulator (`Copy`, allocation-free).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageSpans {
+    secs: [f64; N_STAGES],
+}
+
+impl StageSpans {
+    #[inline]
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage.idx()] += secs;
+    }
+
+    #[inline]
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.secs[stage.idx()]
+    }
+
+    /// Sum over all stages.
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &StageSpans) {
+        for i in 0..N_STAGES {
+            self.secs[i] += other.secs[i];
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.secs = [0.0; N_STAGES];
+    }
+
+    /// `(stage, seconds)` in canonical order.
+    pub fn iter(&self) -> impl Iterator<Item = (Stage, f64)> + '_ {
+        STAGES.iter().map(move |&s| (s, self.secs[s.idx()]))
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(self.iter().map(|(s, v)| (s.name(), Json::Num(v))))
+    }
+}
+
+/// Run-total event counters (all deterministic except `allocs`, which is
+/// measured — and exactly 0 when no counting allocator is installed).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// Steps closed by [`Telemetry::end_step`].
+    pub steps: u64,
+    /// Data-plane exchange rounds.
+    pub data_rounds: u64,
+    /// Control-plane stat rounds that actually fired.
+    pub stat_rounds: u64,
+    /// Wire bits moved by data rounds.
+    pub data_bits: u64,
+    /// Wire bits moved by stat rounds.
+    pub stat_bits: u64,
+    /// Stat rounds after which some endpoint's level placement changed.
+    pub level_updates: u64,
+    /// Stat rounds that rebuilt codecs (Huffman probability refreshes —
+    /// counts even when the level placement held still).
+    pub codec_refreshes: u64,
+    /// Allocation events while telemetry was active.
+    pub allocs: u64,
+}
+
+/// One closed step of telemetry (`Copy` — ring storage is allocation-free).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepRecord {
+    /// Session step index (1-based, like `StepReport::t`).
+    pub t: u64,
+    /// Seconds per stage within this step.
+    pub spans: StageSpans,
+    /// Data-plane wire bits this step.
+    pub data_bits: u64,
+    /// Control-plane wire bits this step.
+    pub stat_bits: u64,
+    /// Data rounds this step (2 per step for the exact family, 1 for
+    /// sgda, 1 per sync for local).
+    pub rounds: u32,
+    /// Stat rounds that fired this step.
+    pub stat_rounds: u32,
+    /// Did a stat round change some endpoint's levels this step?
+    pub level_update: bool,
+    /// Did a stat round rebuild codecs this step?
+    pub codec_refresh: bool,
+    /// Allocation events this step (0 without a counting allocator).
+    pub allocs: u64,
+    /// Hottest directed link of this step's rounds.
+    pub hot_link: Link,
+    /// Bytes that link carried in its hottest round this step.
+    pub hot_link_bytes: f64,
+    /// Distinct links touched by the last round of this step.
+    pub links: u32,
+}
+
+/// Fixed-capacity ring of [`StepRecord`]s — the default in-memory sink.
+/// Preallocated at construction; pushing overwrites the oldest record, so
+/// steady-state recording never allocates.
+#[derive(Clone, Debug, Default)]
+pub struct Ring {
+    buf: Vec<StepRecord>,
+    cap: usize,
+    /// Index of the next write.
+    head: usize,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Self {
+        Ring { buf: Vec::with_capacity(cap), cap, head: 0 }
+    }
+
+    fn push(&mut self, r: StepRecord) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(r);
+        } else {
+            self.buf[self.head] = r;
+        }
+        self.head = (self.head + 1) % self.cap;
+    }
+
+    /// Records currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Most recently pushed record.
+    pub fn latest(&self) -> Option<&StepRecord> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        // `head` is the next write slot; the previous slot (mod the filled
+        // length) is the newest record, whether or not we have wrapped.
+        let i = if self.head == 0 { self.buf.len() - 1 } else { self.head - 1 };
+        Some(&self.buf[i])
+    }
+
+    /// Records oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &StepRecord> + '_ {
+        let n = self.buf.len();
+        let start = if n < self.cap { 0 } else { self.head };
+        (0..n).map(move |i| &self.buf[(start + i) % n.max(1)])
+    }
+}
+
+/// How a session's telemetry is configured.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Ring capacity (step records kept in memory). 0 keeps counters and
+    /// spans only.
+    pub ring: usize,
+    /// JSONL event-stream path (None = in-memory only).
+    pub jsonl: Option<String>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { ring: 1024, jsonl: None }
+    }
+}
+
+impl TelemetryConfig {
+    /// In-memory ring + counters only.
+    pub fn memory() -> Self {
+        TelemetryConfig::default()
+    }
+
+    /// Ring + JSONL event stream at `path`.
+    pub fn jsonl(path: impl Into<String>) -> Self {
+        TelemetryConfig { jsonl: Some(path.into()), ..TelemetryConfig::default() }
+    }
+
+    /// Parse a `QGENX_TELEMETRY` value: `0`/empty = disabled, `1`/`mem`/
+    /// `memory` = in-memory, anything else = JSONL path.
+    pub fn parse(value: &str) -> Option<Self> {
+        match value.trim() {
+            "" | "0" => None,
+            "1" | "mem" | "memory" => Some(TelemetryConfig::memory()),
+            path => Some(TelemetryConfig::jsonl(path)),
+        }
+    }
+
+    /// The `QGENX_TELEMETRY` environment knob (module docs).
+    pub fn from_env() -> Option<Self> {
+        std::env::var("QGENX_TELEMETRY").ok().and_then(|v| TelemetryConfig::parse(&v))
+    }
+}
+
+/// The per-engine telemetry recorder (see module docs). Disabled is the
+/// default and costs one branch per hook; enabled it accumulates spans /
+/// counters / ring records without allocating, and optionally streams
+/// JSONL events.
+///
+/// Cloning (checkpoints, engine clones) deep-copies the in-memory state
+/// and *shares* the JSONL sink handle — a resumed session appends to the
+/// same stream rather than truncating it.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    enabled: bool,
+    /// Spans of the step currently being accumulated.
+    spans: StageSpans,
+    /// Run-total spans (merged at each `end_step`).
+    totals: StageSpans,
+    counters: Counters,
+    ring: Ring,
+    sink: Option<Arc<Mutex<JsonlSink>>>,
+    // --- per-step marks, reset by `end_step` ---
+    step_data_bits: u64,
+    step_stat_bits: u64,
+    step_rounds: u32,
+    step_stat_rounds: u32,
+    step_level_update: bool,
+    step_codec_refresh: bool,
+    step_hot_link: Link,
+    step_hot_bytes: f64,
+    step_links: u32,
+    alloc_mark: u64,
+}
+
+impl Telemetry {
+    /// The disabled recorder (every hook is a cheap no-op).
+    pub fn off() -> Self {
+        Telemetry::default()
+    }
+
+    /// An enabled recorder. `manifest` is written as the JSONL stream's
+    /// first event when a path is configured.
+    pub fn new(cfg: &TelemetryConfig, manifest: &Json) -> Result<Self> {
+        let sink = match &cfg.jsonl {
+            Some(path) => {
+                Some(Arc::new(Mutex::new(JsonlSink::create(path, manifest)?)))
+            }
+            None => None,
+        };
+        Ok(Telemetry {
+            enabled: true,
+            ring: Ring::with_capacity(cfg.ring),
+            sink,
+            alloc_mark: crate::benchkit::allocs(),
+            ..Telemetry::default()
+        })
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Start a measured span: `Some(now)` when enabled, `None` (free)
+    /// otherwise. Close it with [`Self::lap`].
+    #[inline]
+    pub fn clock(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened by [`Self::clock`].
+    #[inline]
+    pub fn lap(&mut self, t0: Option<Instant>, stage: Stage) {
+        if let Some(t0) = t0 {
+            self.spans.add(stage, t0.elapsed().as_secs_f64());
+        }
+    }
+
+    /// Add already-known seconds to a stage (the modeled `exchange` span).
+    #[inline]
+    pub fn span_secs(&mut self, stage: Stage, secs: f64) {
+        if self.enabled {
+            self.spans.add(stage, secs);
+        }
+    }
+
+    /// Current-step span accumulator for callees that time sub-stages
+    /// themselves (the compressor's quantize/encode split). `None` when
+    /// disabled so the hot path can skip its `Instant` reads entirely.
+    #[inline]
+    pub fn spans_mut(&mut self) -> Option<&mut StageSpans> {
+        if self.enabled {
+            Some(&mut self.spans)
+        } else {
+            None
+        }
+    }
+
+    /// Record one data-plane round: its wire bits, its modeled α-β
+    /// seconds (accumulated into the `exchange` span), and the per-link
+    /// loads of the round (per-round deltas from
+    /// [`crate::topo::LinkTraffic::last_round`]).
+    pub fn on_data_round(&mut self, wire_bits: u64, modeled_secs: f64, links: &[(Link, f64)]) {
+        if !self.enabled {
+            return;
+        }
+        self.counters.data_rounds += 1;
+        self.counters.data_bits += wire_bits;
+        self.step_data_bits += wire_bits;
+        self.step_rounds += 1;
+        self.spans.add(Stage::Exchange, modeled_secs);
+        self.step_links = links.len() as u32;
+        for &(link, bytes) in links {
+            if bytes > self.step_hot_bytes {
+                self.step_hot_bytes = bytes;
+                self.step_hot_link = link;
+            }
+        }
+    }
+
+    /// Record one control-plane stat round. `refreshed` = some endpoint
+    /// rebuilt its codec (an update actually ran); `changed` = some
+    /// endpoint's level placement moved.
+    pub fn on_stat_round(&mut self, wire_bits: u64, refreshed: bool, changed: bool) {
+        if !self.enabled {
+            return;
+        }
+        self.counters.stat_rounds += 1;
+        self.counters.stat_bits += wire_bits;
+        self.step_stat_bits += wire_bits;
+        self.step_stat_rounds += 1;
+        if refreshed {
+            self.counters.codec_refreshes += 1;
+            self.step_codec_refresh = true;
+        }
+        if changed {
+            self.counters.level_updates += 1;
+            self.step_level_update = true;
+        }
+    }
+
+    /// Close step `t`: fold the per-step marks into a [`StepRecord`],
+    /// merge spans into the run totals, push the record into the ring,
+    /// stream it to the JSONL sink if one is attached, and reset the
+    /// per-step state. Returns the record (None when disabled).
+    pub fn end_step(&mut self, t: u64) -> Option<StepRecord> {
+        if !self.enabled {
+            return None;
+        }
+        let allocs_now = crate::benchkit::allocs();
+        let rec = StepRecord {
+            t,
+            spans: self.spans,
+            data_bits: self.step_data_bits,
+            stat_bits: self.step_stat_bits,
+            rounds: self.step_rounds,
+            stat_rounds: self.step_stat_rounds,
+            level_update: self.step_level_update,
+            codec_refresh: self.step_codec_refresh,
+            allocs: allocs_now - self.alloc_mark,
+            hot_link: self.step_hot_link,
+            hot_link_bytes: self.step_hot_bytes,
+            links: self.step_links,
+        };
+        self.counters.steps += 1;
+        self.counters.allocs += rec.allocs;
+        self.totals.merge(&self.spans);
+        self.ring.push(rec);
+        if let Some(sink) = &self.sink {
+            if let Ok(mut s) = sink.lock() {
+                s.write(&step_event(&rec));
+            }
+        }
+        self.spans.reset();
+        self.step_data_bits = 0;
+        self.step_stat_bits = 0;
+        self.step_rounds = 0;
+        self.step_stat_rounds = 0;
+        self.step_level_update = false;
+        self.step_codec_refresh = false;
+        self.step_hot_link = (0, 0);
+        self.step_hot_bytes = 0.0;
+        self.step_links = 0;
+        self.alloc_mark = allocs_now;
+        Some(rec)
+    }
+
+    /// Emit the run `summary` event and flush the sink. `layers` carries
+    /// the per-layer cumulative wire bits of a layer-wise pipeline;
+    /// `link_totals` the run's cumulative per-link bytes.
+    pub fn finish(
+        &mut self,
+        layers: Option<(&[String], &[u64])>,
+        link_totals: &[(Link, f64)],
+    ) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(sink) = &self.sink {
+            if let Ok(mut s) = sink.lock() {
+                s.write(&self.summary_event(layers, link_totals));
+                s.flush();
+            }
+        }
+    }
+
+    /// Run-total counters so far.
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    /// Run-total per-stage seconds so far.
+    pub fn totals(&self) -> &StageSpans {
+        &self.totals
+    }
+
+    /// The in-memory ring of recent step records.
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+
+    fn summary_event(
+        &self,
+        layers: Option<(&[String], &[u64])>,
+        link_totals: &[(Link, f64)],
+    ) -> Json {
+        let c = &self.counters;
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("event", Json::Str("summary".into())),
+            ("steps", Json::Num(c.steps as f64)),
+            ("data_rounds", Json::Num(c.data_rounds as f64)),
+            ("stat_rounds", Json::Num(c.stat_rounds as f64)),
+            ("data_bits", Json::Num(c.data_bits as f64)),
+            ("stat_bits", Json::Num(c.stat_bits as f64)),
+            ("level_updates", Json::Num(c.level_updates as f64)),
+            ("codec_refreshes", Json::Num(c.codec_refreshes as f64)),
+            ("allocs", Json::Num(c.allocs as f64)),
+            ("spans", self.totals.to_json()),
+            ("links", Json::Num(link_totals.len() as f64)),
+        ];
+        let hottest = link_totals
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .copied()
+            .unwrap_or(((0, 0), 0.0));
+        fields.push(("hot_link", link_json(hottest.0)));
+        fields.push(("hot_link_bytes", Json::Num(hottest.1)));
+        if let Some((names, bits)) = layers {
+            fields.push((
+                "layer_bits",
+                Json::obj(
+                    names
+                        .iter()
+                        .zip(bits.iter())
+                        .map(|(n, &b)| (n.clone(), Json::Num(b as f64))),
+                ),
+            ));
+        }
+        Json::obj(fields)
+    }
+}
+
+fn link_json(link: Link) -> Json {
+    Json::Arr(vec![Json::Num(link.0 as f64), Json::Num(link.1 as f64)])
+}
+
+/// The JSONL `step` event for one record (schema: `docs/OBSERVABILITY.md`).
+fn step_event(r: &StepRecord) -> Json {
+    Json::obj([
+        ("event", Json::Str("step".into())),
+        ("t", Json::Num(r.t as f64)),
+        ("spans", r.spans.to_json()),
+        ("data_bits", Json::Num(r.data_bits as f64)),
+        ("stat_bits", Json::Num(r.stat_bits as f64)),
+        ("rounds", Json::Num(r.rounds as f64)),
+        ("stat_rounds", Json::Num(r.stat_rounds as f64)),
+        ("level_update", Json::Bool(r.level_update)),
+        ("codec_refresh", Json::Bool(r.codec_refresh)),
+        ("allocs", Json::Num(r.allocs as f64)),
+        ("links", Json::Num(r.links as f64)),
+        ("hot_link", link_json(r.hot_link)),
+        ("hot_link_bytes", Json::Num(r.hot_link_bytes)),
+    ])
+}
+
+/// Build the JSONL `manifest` event (the stream's first line).
+pub fn manifest_event(cfg: &crate::config::ExperimentConfig) -> Json {
+    Json::obj([
+        ("event", Json::Str("manifest".into())),
+        ("schema", Json::Num(TELEMETRY_SCHEMA as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("iters", Json::Num(cfg.iters as f64)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("topo", Json::Str(cfg.topo.kind.clone())),
+        ("problem", Json::Str(cfg.problem.kind.clone())),
+        (
+            "quant",
+            Json::Str(match cfg.quant.mode {
+                crate::config::QuantMode::Fp32 => "fp32".into(),
+                crate::config::QuantMode::Quantized { levels } => format!("q{levels}"),
+            }),
+        ),
+        (
+            "stages",
+            Json::Arr(STAGES.iter().map(|s| Json::Str(s.name().into())).collect()),
+        ),
+    ])
+}
+
+/// [`crate::coordinator::Observer`] bridge: streams one compact line per
+/// `every` steps from the [`StepRecord`] attached to each
+/// [`crate::coordinator::StepReport`], and a stage/counter summary at
+/// finish. Purely additive — it reads records, never the engine.
+pub struct TelemetryObserver {
+    every: usize,
+    totals: StageSpans,
+    data_bits: u64,
+    stat_bits: u64,
+    steps: u64,
+}
+
+impl TelemetryObserver {
+    /// Print a line every `every` steps (0 = summary only).
+    pub fn every(every: usize) -> Self {
+        TelemetryObserver { every, totals: StageSpans::default(), data_bits: 0, stat_bits: 0, steps: 0 }
+    }
+}
+
+impl Default for TelemetryObserver {
+    fn default() -> Self {
+        TelemetryObserver::every(100)
+    }
+}
+
+impl crate::coordinator::Observer for TelemetryObserver {
+    fn on_step(&mut self, rep: &crate::coordinator::StepReport) -> crate::coordinator::Control {
+        if let Some(rec) = &rep.telemetry {
+            self.steps += 1;
+            self.totals.merge(&rec.spans);
+            self.data_bits += rec.data_bits;
+            self.stat_bits += rec.stat_bits;
+            if self.every != 0 && (rep.t % self.every == 0 || rep.done) {
+                println!(
+                    "[telemetry] t={:>6}  data {:>8} b  stat {:>6} b  hot ({},{}) {:>9.0} B  spans {}",
+                    rec.t,
+                    rec.data_bits,
+                    rec.stat_bits,
+                    rec.hot_link.0,
+                    rec.hot_link.1,
+                    rec.hot_link_bytes,
+                    crate::benchkit::fmt_secs(rec.spans.total()),
+                );
+            }
+        }
+        crate::coordinator::Control::Continue
+    }
+
+    fn on_finish(&mut self, _rec: &crate::metrics::Recorder) {
+        if self.steps == 0 {
+            return;
+        }
+        println!("[telemetry] {} steps, {} data bits, {} stat bits", self.steps, self.data_bits, self.stat_bits);
+        for (stage, secs) in self.totals.iter() {
+            if secs > 0.0 {
+                println!("[telemetry]   {:<9} {}", stage.name(), crate::benchkit::fmt_secs(secs));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_spans_accumulate_and_merge() {
+        let mut a = StageSpans::default();
+        a.add(Stage::Quantize, 0.5);
+        a.add(Stage::Quantize, 0.25);
+        a.add(Stage::Decode, 1.0);
+        assert_eq!(a.get(Stage::Quantize), 0.75);
+        assert_eq!(a.total(), 1.75);
+        let mut b = StageSpans::default();
+        b.add(Stage::Decode, 1.0);
+        b.merge(&a);
+        assert_eq!(b.get(Stage::Decode), 2.0);
+        assert_eq!(STAGES.len(), N_STAGES);
+        // idx is a bijection onto 0..N_STAGES (the array contract).
+        let mut seen = [false; N_STAGES];
+        for s in STAGES {
+            assert!(!seen[s.idx()], "duplicate idx for {:?}", s);
+            seen[s.idx()] = true;
+        }
+    }
+
+    #[test]
+    fn ring_wraps_and_iterates_in_order() {
+        let mut r = Ring::with_capacity(3);
+        assert!(r.is_empty() && r.latest().is_none());
+        for t in 1..=5u64 {
+            r.push(StepRecord { t, ..Default::default() });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        let ts: Vec<u64> = r.iter().map(|x| x.t).collect();
+        assert_eq!(ts, vec![3, 4, 5], "oldest → newest after wrap");
+        assert_eq!(r.latest().unwrap().t, 5);
+        // capacity 0: pushes are dropped, never panic
+        let mut z = Ring::with_capacity(0);
+        z.push(StepRecord::default());
+        assert!(z.is_empty());
+    }
+
+    #[test]
+    fn config_parse_covers_the_knob_grammar() {
+        assert_eq!(TelemetryConfig::parse(""), None);
+        assert_eq!(TelemetryConfig::parse("0"), None);
+        assert_eq!(TelemetryConfig::parse("1"), Some(TelemetryConfig::memory()));
+        assert_eq!(TelemetryConfig::parse("mem"), Some(TelemetryConfig::memory()));
+        let j = TelemetryConfig::parse("/tmp/run.jsonl").unwrap();
+        assert_eq!(j.jsonl.as_deref(), Some("/tmp/run.jsonl"));
+        assert_eq!(j.ring, TelemetryConfig::default().ring);
+    }
+
+    #[test]
+    fn disabled_recorder_is_inert() {
+        let mut t = Telemetry::off();
+        assert!(!t.is_enabled());
+        assert!(t.clock().is_none());
+        assert!(t.spans_mut().is_none());
+        t.on_data_round(100, 1.0, &[((0, 1), 10.0)]);
+        t.on_stat_round(10, true, true);
+        assert_eq!(t.end_step(1), None);
+        assert_eq!(*t.counters(), Counters::default());
+    }
+
+    #[test]
+    fn recorder_accumulates_rounds_into_step_records() {
+        let mut t = Telemetry::new(&TelemetryConfig::memory(), &Json::Null).unwrap();
+        assert!(t.is_enabled());
+        t.on_data_round(800, 0.25, &[((0, 1), 50.0), ((1, 0), 100.0)]);
+        t.on_data_round(400, 0.25, &[((0, 1), 25.0), ((1, 0), 50.0)]);
+        t.on_stat_round(64, true, false);
+        let rec = t.end_step(1).unwrap();
+        assert_eq!(rec.t, 1);
+        assert_eq!(rec.data_bits, 1200);
+        assert_eq!(rec.stat_bits, 64);
+        assert_eq!(rec.rounds, 2);
+        assert_eq!(rec.stat_rounds, 1);
+        assert!(rec.codec_refresh && !rec.level_update);
+        assert_eq!(rec.hot_link, (1, 0));
+        assert_eq!(rec.hot_link_bytes, 100.0);
+        assert_eq!(rec.links, 2);
+        assert_eq!(rec.spans.get(Stage::Exchange), 0.5);
+        // step state resets; run totals persist
+        let rec2 = t.end_step(2).unwrap();
+        assert_eq!(rec2.data_bits, 0);
+        assert_eq!(rec2.hot_link_bytes, 0.0);
+        assert_eq!(t.counters().data_bits, 1200);
+        assert_eq!(t.counters().steps, 2);
+        assert_eq!(t.counters().codec_refreshes, 1);
+        assert_eq!(t.totals().get(Stage::Exchange), 0.5);
+        assert_eq!(t.ring().len(), 2);
+    }
+
+    #[test]
+    fn step_and_summary_events_are_valid_json() {
+        let rec = StepRecord {
+            t: 7,
+            data_bits: 123,
+            hot_link: (2, 0),
+            hot_link_bytes: 9.5,
+            links: 6,
+            ..Default::default()
+        };
+        let ev = step_event(&rec);
+        let back = Json::parse(&ev.dump()).unwrap();
+        assert_eq!(back.get("event").unwrap().as_str(), Some("step"));
+        assert_eq!(back.get("t").unwrap().as_usize(), Some(7));
+        assert_eq!(back.at(&["spans", "exchange"]).unwrap().as_f64(), Some(0.0));
+        assert_eq!(back.get("hot_link").unwrap().as_array().unwrap().len(), 2);
+
+        let mut t = Telemetry::new(&TelemetryConfig::memory(), &Json::Null).unwrap();
+        t.on_data_round(8, 0.0, &[]);
+        t.end_step(1);
+        let names = vec!["embed".to_string(), "head".to_string()];
+        let bits = vec![100u64, 300];
+        let s = t.summary_event(Some((&names, &bits)), &[((0, 1), 5.0)]);
+        let back = Json::parse(&s.dump()).unwrap();
+        assert_eq!(back.get("event").unwrap().as_str(), Some("summary"));
+        assert_eq!(back.get("data_bits").unwrap().as_usize(), Some(8));
+        assert_eq!(back.at(&["layer_bits", "head"]).unwrap().as_usize(), Some(300));
+        assert_eq!(back.get("links").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn clone_deep_copies_in_memory_state() {
+        let mut a = Telemetry::new(&TelemetryConfig::memory(), &Json::Null).unwrap();
+        a.on_data_round(100, 0.0, &[]);
+        a.end_step(1);
+        let mut b = a.clone();
+        b.on_data_round(100, 0.0, &[]);
+        b.end_step(2);
+        assert_eq!(a.counters().steps, 1, "clone must not share counters");
+        assert_eq!(b.counters().steps, 2);
+        assert_eq!(a.ring().len(), 1);
+        assert_eq!(b.ring().len(), 2);
+    }
+}

@@ -1,0 +1,113 @@
+//! The JSONL event sink: one [`Json`] object per line, `manifest` first,
+//! then `step` events, closed by a `summary` (schema:
+//! `docs/OBSERVABILITY.md`, version [`crate::telemetry::TELEMETRY_SCHEMA`]).
+//!
+//! Writes are buffered and best-effort: a failed write marks the sink dead
+//! and reports once to stderr instead of aborting a multi-hour run over a
+//! full disk. The run itself never depends on sink health — telemetry is
+//! observation, not state.
+
+use crate::runtime::json::Json;
+use std::io::Write;
+
+/// A line-oriented JSON event stream on disk.
+pub struct JsonlSink {
+    out: std::io::BufWriter<std::fs::File>,
+    path: String,
+    dead: bool,
+}
+
+impl JsonlSink {
+    /// Create/truncate the stream at `path` (parent dirs created) and
+    /// write `manifest` as its first event.
+    pub fn create(path: &str, manifest: &Json) -> std::io::Result<Self> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file = std::fs::File::create(path)?;
+        let mut sink =
+            JsonlSink { out: std::io::BufWriter::new(file), path: path.to_string(), dead: false };
+        sink.write(manifest);
+        Ok(sink)
+    }
+
+    /// Path this sink writes to.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    /// Append one event line (best-effort; see module docs).
+    pub fn write(&mut self, event: &Json) {
+        if self.dead {
+            return;
+        }
+        let mut line = event.dump();
+        line.push('\n');
+        if let Err(e) = self.out.write_all(line.as_bytes()) {
+            eprintln!("telemetry: dropping JSONL sink {}: {e}", self.path);
+            self.dead = true;
+        }
+    }
+
+    /// Flush buffered events to disk.
+    pub fn flush(&mut self) {
+        if !self.dead {
+            let _ = self.out.flush();
+        }
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_one_parsable_event_per_line_manifest_first() {
+        let path = std::env::temp_dir().join("qgenx_telemetry_sink_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        {
+            let manifest = Json::obj([
+                ("event", Json::Str("manifest".into())),
+                ("schema", Json::Num(1.0)),
+            ]);
+            let mut s = JsonlSink::create(&path, &manifest).unwrap();
+            assert_eq!(s.path(), path);
+            s.write(&Json::obj([("event", Json::Str("step".into())), ("t", Json::Num(1.0))]));
+            s.write(&Json::obj([("event", Json::Str("summary".into()))]));
+            // drop flushes
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let events: Vec<String> = lines
+            .iter()
+            .map(|l| {
+                Json::parse(l).unwrap().get("event").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(events, ["manifest", "step", "summary"]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn create_makes_parent_dirs_and_truncates() {
+        let dir = std::env::temp_dir().join("qgenx_telemetry_sink_dir");
+        let path = dir.join("sub/run.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        for _ in 0..2 {
+            let mut s = JsonlSink::create(&path, &Json::Null).unwrap();
+            s.flush();
+        }
+        // second create truncated: exactly one manifest line
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

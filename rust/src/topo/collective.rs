@@ -37,8 +37,18 @@ pub trait Collective: Send + Sync {
     /// α-β cost of one round given everyone's exact payload bits.
     fn round_cost(&self, model: &NetModel, bits_each: &[u64]) -> RoundCost;
 
-    /// Modeled payload bytes per directed link for one round.
-    fn link_loads(&self, bits_each: &[u64]) -> Vec<(Link, f64)>;
+    /// Modeled payload bytes per directed link for one round, written into
+    /// `out` (cleared first). The buffer-reuse form is what
+    /// [`LinkTraffic::record`] calls on every data round, so implementations
+    /// keep the hot topologies (mesh, star, ring, gossip) allocation-free.
+    fn link_loads_into(&self, bits_each: &[u64], out: &mut Vec<(Link, f64)>);
+
+    /// Allocating convenience wrapper around [`Self::link_loads_into`].
+    fn link_loads(&self, bits_each: &[u64]) -> Vec<(Link, f64)> {
+        let mut out = Vec::new();
+        self.link_loads_into(bits_each, &mut out);
+        out
+    }
 
     /// Execute one round through the in-process transport: deposit
     /// `payload`, block for the barrier, and return the payloads this rank
@@ -107,22 +117,23 @@ impl Collective for ExactCollective {
         }
     }
 
-    fn link_loads(&self, bits_each: &[u64]) -> Vec<(Link, f64)> {
+    fn link_loads_into(&self, bits_each: &[u64], out: &mut Vec<(Link, f64)>) {
+        out.clear();
         let k = self.k;
         if k <= 1 {
-            return Vec::new();
+            return;
         }
-        let bytes: Vec<f64> =
-            bits_each.iter().map(|&b| bits_to_bytes(b) as f64).collect();
+        // §Perf: per-sender bytes are recomputed at each use instead of
+        // collected into a Vec — mesh/star/ring stay allocation-free.
+        let byte = |i: usize| bits_to_bytes(bits_each[i]) as f64;
         let agg = (bits_each.iter().map(|&b| bits_to_bytes(b)).max().unwrap_or(0)
             + AGG_PIGGYBACK_BYTES) as f64;
-        let mut out = Vec::new();
         match self.topo {
             Topology::FullMesh => {
                 for i in 0..k {
                     for j in 0..k {
                         if i != j {
-                            out.push(((i, j), bytes[i]));
+                            out.push(((i, j), byte(i)));
                         }
                     }
                 }
@@ -133,7 +144,7 @@ impl Collective for ExactCollective {
                 for i in 0..k {
                     for j in 0..k {
                         if i != j {
-                            out.push(((i, j), bytes[i] / k as f64 + agg / k as f64));
+                            out.push(((i, j), byte(i) / k as f64 + agg / k as f64));
                         }
                     }
                 }
@@ -146,25 +157,23 @@ impl Collective for ExactCollective {
             }
             Topology::Hierarchical { groups } => {
                 let ranges = super::group_ranges(k, groups);
-                let leaders: Vec<usize> = ranges.iter().map(|r| r.start).collect();
                 for range in &ranges {
                     let leader = range.start;
                     for r in range.start + 1..range.end {
-                        out.push(((r, leader), bytes[r])); // up, exact leaf
+                        out.push(((r, leader), byte(r))); // up, exact leaf
                         out.push(((leader, r), agg)); // down, aggregate
                     }
                 }
-                for &a in &leaders {
-                    for &b in &leaders {
-                        if a != b {
-                            out.push(((a, b), agg));
+                for ra in &ranges {
+                    for rb in &ranges {
+                        if ra.start != rb.start {
+                            out.push(((ra.start, rb.start), agg));
                         }
                     }
                 }
             }
             Topology::Gossip { .. } => unreachable!("gossip uses GossipCollective"),
         }
-        out
     }
 }
 
@@ -220,8 +229,8 @@ impl Collective for GossipCollective {
         cost::gossip(model, bits_each, &self.degrees)
     }
 
-    fn link_loads(&self, bits_each: &[u64]) -> Vec<(Link, f64)> {
-        let mut out = Vec::new();
+    fn link_loads_into(&self, bits_each: &[u64], out: &mut Vec<(Link, f64)>) {
+        out.clear();
         for (i, neigh) in self.closed.iter().enumerate() {
             for &j in neigh {
                 if j != i {
@@ -229,16 +238,20 @@ impl Collective for GossipCollective {
                 }
             }
         }
-        out
     }
 }
 
-/// Accumulated per-directed-link payload bytes across a run — the
-/// per-link half of the traffic accounting (totals live in
-/// [`TrafficStats`]). Answers "which wire is hot under this topology?".
+/// Per-directed-link payload bytes — both the cumulative totals across a
+/// run and the per-round delta stream (the most recent round's loads,
+/// kept in a reusable scratch buffer so steady-state recording does not
+/// allocate). Totals answer "which wire is hot under this topology?";
+/// [`Self::last_round`] feeds the telemetry per-link time series.
 #[derive(Clone, Debug, Default)]
 pub struct LinkTraffic {
     loads: BTreeMap<Link, f64>,
+    /// Most recent round's `(link, bytes)` deltas; reused across rounds.
+    last: Vec<(Link, f64)>,
+    rounds: u64,
 }
 
 impl LinkTraffic {
@@ -246,11 +259,25 @@ impl LinkTraffic {
         Self::default()
     }
 
-    /// Accumulate one round's link loads.
+    /// Accumulate one round's link loads and expose them as the current
+    /// per-round delta ([`Self::last_round`]).
     pub fn record(&mut self, coll: &dyn Collective, bits_each: &[u64]) {
-        for (link, bytes) in coll.link_loads(bits_each) {
+        coll.link_loads_into(bits_each, &mut self.last);
+        for &(link, bytes) in &self.last {
             *self.loads.entry(link).or_insert(0.0) += bytes;
         }
+        self.rounds += 1;
+    }
+
+    /// The most recent round's `(link, bytes)` deltas, in the
+    /// collective's deterministic link order. Empty before any round.
+    pub fn last_round(&self) -> &[(Link, f64)] {
+        &self.last
+    }
+
+    /// Number of rounds recorded.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
     }
 
     /// Number of distinct directed links that carried traffic.
@@ -263,11 +290,16 @@ impl LinkTraffic {
         self.loads.values().sum()
     }
 
+    /// Cumulative `(link, bytes)` totals in deterministic link order.
+    pub fn totals(&self) -> Vec<(Link, f64)> {
+        self.loads.iter().map(|(&l, &b)| (l, b)).collect()
+    }
+
     /// Hottest link and its bytes.
     pub fn hottest(&self) -> Option<(Link, f64)> {
         self.loads
             .iter()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(&l, &b)| (l, b))
     }
 
@@ -397,5 +429,29 @@ mod tests {
         lr.record(ring.as_ref(), &bits);
         assert_eq!(lr.links(), 6);
         assert!((lr.max_link_bytes() - lr.total_bytes() / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_traffic_exposes_per_round_deltas() {
+        let coll = mk("ring", 4);
+        let mut lt = LinkTraffic::new();
+        assert!(lt.last_round().is_empty());
+        assert_eq!(lt.rounds(), 0);
+
+        lt.record(coll.as_ref(), &[8 * 100u64; 4]);
+        let first: Vec<(Link, f64)> = lt.last_round().to_vec();
+        assert_eq!(first.len(), 4);
+        assert!(first.iter().all(|&(_, b)| (b - 100.0).abs() < 1e-9));
+
+        // A second, larger round replaces the delta but accumulates totals.
+        lt.record(coll.as_ref(), &[8 * 300u64; 4]);
+        assert_eq!(lt.rounds(), 2);
+        assert!(lt.last_round().iter().all(|&(_, b)| (b - 300.0).abs() < 1e-9));
+        assert!((lt.total_bytes() - 4.0 * 400.0).abs() < 1e-9);
+        assert!((lt.max_link_bytes() - 400.0).abs() < 1e-9);
+
+        // Delta stream order matches the collective's deterministic order.
+        let again = coll.link_loads(&[8 * 300u64; 4]);
+        assert_eq!(lt.last_round(), &again[..]);
     }
 }

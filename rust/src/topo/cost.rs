@@ -53,14 +53,24 @@ fn aggregate_bytes(bits_each: &[u64]) -> usize {
 /// node serializes `K−1` copies of its payload over its NIC:
 /// `max_i (α + (K−1)·b_i/β)`. Bit-identical accounting to the seed's
 /// `TrafficStats::record_allgather`.
+///
+/// This runs on *every* loopback data round, so it is allocation-free: the
+/// fold below is `NetModel::allgather_time` inlined term-by-term (same
+/// per-sender expression, same `fold(0.0, f64::max)` order — bit-identical
+/// `secs`) without materializing the intermediate byte vector.
 pub fn full_mesh(model: &NetModel, bits_each: &[u64]) -> RoundCost {
     let k = bits_each.len();
     if k <= 1 {
         return RoundCost::default();
     }
-    let bytes: Vec<usize> = bits_each.iter().map(|&b| bits_to_bytes(b)).collect();
+    let secs = bits_each
+        .iter()
+        .map(|&b| {
+            model.latency_s + ((k - 1) * bits_to_bytes(b)) as f64 / model.bandwidth_bps
+        })
+        .fold(0.0, f64::max);
     RoundCost {
-        secs: model.allgather_time(&bytes),
+        secs,
         wire_bits: bits_each.iter().map(|&b| b * (k - 1) as u64).sum(),
         messages: (k * (k - 1)) as u64,
     }
@@ -220,6 +230,20 @@ mod tests {
         assert_eq!(c.messages, 6);
         assert!((c.secs - 2.0 * 100.0 / 1e6).abs() < 1e-12);
         assert_eq!(full_mesh(&m, &[1234]), RoundCost::default());
+    }
+
+    #[test]
+    fn mesh_secs_bit_identical_to_allgather_time() {
+        // The allocation-free fold must reproduce NetModel::allgather_time
+        // to the last bit (same float-op order), or `sim_net_time` would
+        // drift off the reproducibility contract.
+        let m = NetModel::new(117.0 * 1024.0 * 1024.0, 50e-6);
+        let bits = [801u64, 17, 123_456, 0, 800];
+        let bytes: Vec<usize> = bits.iter().map(|&b| bits_to_bytes(b)).collect();
+        assert_eq!(
+            full_mesh(&m, &bits).secs.to_bits(),
+            m.allgather_time(&bytes).to_bits()
+        );
     }
 
     #[test]

@@ -33,7 +33,7 @@
 pub mod collective;
 pub mod cost;
 
-pub use collective::{build_collective, Collective, LinkTraffic};
+pub use collective::{build_collective, Collective, Link, LinkTraffic};
 pub use cost::{RoundCost, AGG_PIGGYBACK_BYTES};
 
 use crate::config::TopoConfig;

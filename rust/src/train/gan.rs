@@ -311,6 +311,7 @@ impl<'rt> GanTrainer<'rt> {
         // Shared with the coordinator engine and the LM trainer; a no-op
         // for the fixed-level UQ modes (all payloads empty).
         crate::coordinator::pool_local_stats(&mut self.comps, &self.net, &mut self.traffic)
+            .map(|_| ())
     }
 
     /// One extra-gradient step (two oracle rounds, two exchanges).

@@ -122,6 +122,7 @@ impl<'rt> LmTrainer<'rt> {
         // (one home for the gather-record-refresh body; a no-op for the
         // fixed-level modes whose payloads are all empty).
         crate::coordinator::pool_local_stats(&mut self.comps, &self.net, &mut self.traffic)
+            .map(|_| ())
     }
 
     /// All K workers' local gradients at `params` (measured).

@@ -1,0 +1,246 @@
+//! Telemetry contract suite (docs/OBSERVABILITY.md):
+//!
+//! * **Neutrality** — telemetry on vs off is bit-identical on every
+//!   trajectory point, every deterministic scalar, every wire byte, and
+//!   the final replicas, for the inline and the threaded coordinator.
+//!   Exemptions mirror `session_parity.rs`: `sim_time_cum` (series) and
+//!   `compute_time` (scalar) hold measured wall-clock compute.
+//! * **Overhead** — a steady-state loopback data round with the default
+//!   in-memory recorder performs **zero heap allocations**, asserted
+//!   under the counting allocator this binary installs.
+//! * **Accounting** — the recorder's wire-bit counters reconcile exactly
+//!   with the traffic totals the metrics surface reports, and the JSONL
+//!   stream is `manifest`, then one `step` per iteration, then `summary`.
+
+use qgenx::benchkit::{allocs, CountingAlloc};
+use qgenx::config::ExperimentConfig;
+use qgenx::coordinator::{run_threaded, Algorithm, Session};
+use qgenx::metrics::Recorder;
+use qgenx::net::AllGather;
+use qgenx::runtime::json::Json;
+use qgenx::telemetry::{TelemetryConfig, TELEMETRY_SCHEMA};
+
+// Makes `benchkit::allocs()` count for this whole test binary (the
+// zero-allocation assertions below are vacuous without it).
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 3;
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.dim = 16;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 0.3;
+    cfg.quant.update_every = 60;
+    cfg
+}
+
+/// Point-for-point, name-for-name equality, minus the measured-time
+/// exemptions (the same contract `session_parity.rs` pins).
+fn assert_recorders_match(tag: &str, off: &Recorder, on: &Recorder) {
+    let ka: Vec<&String> = off.series.keys().collect();
+    let kb: Vec<&String> = on.series.keys().collect();
+    assert_eq!(ka, kb, "{tag}: series name sets must match");
+    for (name, s) in &off.series {
+        if name == "sim_time_cum" {
+            continue;
+        }
+        let n = on.get(name).unwrap();
+        assert_eq!(s.xs(), n.xs(), "{tag}/{name}: eval steps must match");
+        assert_eq!(s.ys(), n.ys(), "{tag}/{name}: values must match bit-for-bit");
+    }
+    let sa: Vec<&String> = off.scalars.keys().collect();
+    let sb: Vec<&String> = on.scalars.keys().collect();
+    assert_eq!(sa, sb, "{tag}: scalar name sets must match");
+    for (name, v) in &off.scalars {
+        if name == "compute_time" {
+            continue;
+        }
+        assert_eq!(*v, on.scalar(name).unwrap(), "{tag}/{name}: scalar must match");
+    }
+}
+
+/// Run one inline session to completion; `telemetry` = None leaves the
+/// recorder off (modulo a QGENX_TELEMETRY env override, which is neutral
+/// by exactly the contract under test).
+fn run_inline(
+    cfg: &ExperimentConfig,
+    algorithm: Algorithm,
+    telemetry: Option<TelemetryConfig>,
+) -> (Recorder, Vec<f32>) {
+    let mut b = Session::builder(cfg.clone()).algorithm(algorithm);
+    if let Some(t) = telemetry {
+        b = b.telemetry(t);
+    }
+    let mut s = b.build().unwrap();
+    s.run_to(cfg.iters).unwrap();
+    let replica = s.replica();
+    (s.into_recorder(), replica)
+}
+
+#[test]
+fn telemetry_is_neutral_inline_across_families() {
+    let exact = base_cfg();
+    let mut gossip = base_cfg();
+    gossip.workers = 5;
+    gossip.topo.kind = "gossip".into();
+    gossip.topo.degree = 2;
+    let mut local = base_cfg();
+    local.local.steps = 4;
+    for (tag, cfg, algo) in [
+        ("exact", &exact, Algorithm::QGenX),
+        ("gossip", &gossip, Algorithm::QGenX),
+        ("local", &local, Algorithm::QGenX),
+        ("sgda", &exact, Algorithm::Sgda),
+    ] {
+        let (rec_off, x_off) = run_inline(cfg, algo, None);
+        let (rec_on, x_on) = run_inline(cfg, algo, Some(TelemetryConfig::memory()));
+        assert_recorders_match(tag, &rec_off, &rec_on);
+        assert_eq!(x_off, x_on, "{tag}: replicas must match bit-for-bit");
+    }
+}
+
+/// `run_threaded` with per-rank telemetry explicitly enabled — the same
+/// harness shape as `coordinator::threaded`, minus the invariant checks
+/// it already owns.
+fn run_threaded_with_telemetry(cfg: &ExperimentConfig) -> (Recorder, Vec<Vec<f32>>) {
+    let k = cfg.workers;
+    let transport = AllGather::new(k);
+    let handles: Vec<_> = (0..k)
+        .map(|rank| {
+            let cfg = cfg.clone();
+            let transport = transport.clone();
+            std::thread::spawn(move || {
+                let mut s = Session::builder(cfg.clone())
+                    .transport(transport, rank)
+                    .telemetry(TelemetryConfig::memory())
+                    .build()
+                    .unwrap();
+                s.run_to(cfg.iters).unwrap();
+                let replica = s.replica();
+                (s.into_recorder(), replica)
+            })
+        })
+        .collect();
+    let mut recorders = Vec::new();
+    let mut replicas = Vec::new();
+    for h in handles {
+        let (rec, x) = h.join().unwrap();
+        recorders.push(rec);
+        replicas.push(x);
+    }
+    (recorders.swap_remove(0), replicas)
+}
+
+#[test]
+fn telemetry_is_neutral_threaded() {
+    let cfg = base_cfg();
+    let off = run_threaded(&cfg).unwrap();
+    let (rec_on, replicas_on) = run_threaded_with_telemetry(&cfg);
+    assert_eq!(off.replicas, replicas_on, "threaded replicas must match bit-for-bit");
+    assert_recorders_match("threaded", &off.recorder, &rec_on);
+}
+
+#[test]
+fn steady_state_loopback_step_allocates_zero() {
+    // Steady state: arenas sized, ring preallocated, codecs built. Stat
+    // rounds and eval steps legitimately allocate (they are not data
+    // rounds), so take the *minimum* allocation count over a window of
+    // steps — the acceptance criterion is that plain data steps hit 0.
+    let mut cfg = base_cfg();
+    cfg.iters = 200;
+    cfg.eval_every = 200;
+    cfg.quant.update_every = 60;
+    let mut s = Session::builder(cfg).telemetry(TelemetryConfig::memory()).build().unwrap();
+    for _ in 0..80 {
+        s.step().unwrap(); // warmup: first messages size every buffer
+    }
+    let mut min_allocs = u64::MAX;
+    for _ in 0..40 {
+        let before = allocs();
+        s.step().unwrap();
+        min_allocs = min_allocs.min(allocs() - before);
+    }
+    assert_eq!(
+        min_allocs, 0,
+        "a steady-state loopback data round with in-memory telemetry must not allocate"
+    );
+}
+
+#[test]
+fn step_reports_carry_records_and_counters_reconcile() {
+    let cfg = base_cfg();
+    let iters = cfg.iters;
+    let mut s = Session::builder(cfg).telemetry(TelemetryConfig::memory()).build().unwrap();
+    let mut rounds = 0u64;
+    for _ in 0..iters {
+        let rep = s.step().unwrap();
+        let rec = rep.telemetry.expect("every step must carry a StepRecord");
+        assert_eq!(rec.t as usize, rep.t);
+        rounds += rec.rounds as u64;
+    }
+    let tele = s.telemetry();
+    let c = *tele.counters();
+    assert_eq!(c.steps, iters as u64);
+    assert_eq!(c.data_rounds, rounds);
+    assert_eq!(c.data_rounds, 2 * iters as u64, "exact family: 2 data rounds per step");
+    assert!(c.stat_rounds >= 1, "update_every=60 over 200 iters must fire stat rounds");
+    assert!(c.codec_refreshes >= 1);
+    assert_eq!(tele.ring().latest().unwrap().t as usize, iters);
+    assert!(tele.totals().total() > 0.0, "spans must accumulate measured time");
+    // Wire-bit reconciliation: data + stat plane counters must equal the
+    // run's total wire bits, exactly.
+    let rec = s.into_recorder();
+    let total_bits = rec.scalar("total_bits").unwrap();
+    assert_eq!((c.data_bits + c.stat_bits) as f64, total_bits);
+}
+
+#[test]
+fn jsonl_stream_is_manifest_steps_summary() {
+    let path = std::env::temp_dir().join(format!("qgenx_tele_{}.jsonl", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    let mut cfg = base_cfg();
+    cfg.iters = 60;
+    cfg.eval_every = 30;
+    let rec = Session::builder(cfg.clone())
+        .telemetry(TelemetryConfig::jsonl(&path_s))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let events: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let kind = |e: &Json| e.get("event").and_then(|v| v.as_str()).unwrap().to_string();
+    assert_eq!(kind(&events[0]), "manifest");
+    assert_eq!(
+        events[0].get("schema").and_then(|v| v.as_usize()),
+        Some(TELEMETRY_SCHEMA as usize)
+    );
+    assert_eq!(kind(events.last().unwrap()), "summary");
+    let steps: Vec<&Json> = events.iter().filter(|e| kind(e) == "step").collect();
+    assert_eq!(steps.len(), cfg.iters, "one step event per iteration");
+    assert_eq!(events.len(), cfg.iters + 2, "manifest + steps + summary, nothing else");
+    // Per-step spans cover the full taxonomy; bits reconcile with the run.
+    for s in &steps {
+        let spans = s.get("spans").unwrap();
+        for stage in ["sample", "quantize", "encode", "exchange", "decode", "apply", "stat"] {
+            assert!(spans.get(stage).is_some(), "span {stage} missing");
+        }
+    }
+    let summary = events.last().unwrap();
+    let sum_bits = summary.get("data_bits").and_then(|v| v.as_f64()).unwrap()
+        + summary.get("stat_bits").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(sum_bits, rec.scalar("total_bits").unwrap());
+    let step_bits: f64 = steps
+        .iter()
+        .map(|s| {
+            s.get("data_bits").and_then(|v| v.as_f64()).unwrap()
+                + s.get("stat_bits").and_then(|v| v.as_f64()).unwrap()
+        })
+        .sum();
+    assert_eq!(step_bits, sum_bits, "summary totals must equal the sum of step events");
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Perf regression gate over BENCH_hotpath.json (stdlib only).
+
+Compares a fresh bench emission against the committed baseline
+(`results/BENCH_hotpath.json` at the repo root) and fails on regression:
+
+  python3 tools/perf_gate.py ../results/BENCH_hotpath.json results/BENCH_hotpath.json
+
+Gates, from hard to soft:
+
+* **schema / shape** — same `bench`, same `schema` version, identical
+  case set keyed by (stage, quant, codec, bucket). A vanished case is a
+  regression (a stage or codec stopped being measured).
+* **allocations (exact)** — every case the baseline records at
+  0 allocs/message must still be 0; the compressor round trip must be 0.
+  These are machine-independent and gate bit-exactly.
+* **huffman decode speedup (floor)** — `huffman_decode_speedup_min` must
+  stay >= PERF_GATE_SPEEDUP_MIN (default 2.0, the documented >= 2x LUT
+  criterion in docs/PERF.md).
+* **timing ratios (tolerance band)** — per-case and round-trip
+  `ns_per_coord` must stay <= baseline * PERF_GATE_TOL (default 10.0).
+  The band is deliberately wide: CI runners are shared and noisy, so this
+  catches order-of-magnitude hot-path regressions (an accidental
+  per-symbol allocation, a debug-path fallback), not single-digit noise.
+  Ratios only apply when both files ran the same `mode` (fast vs full).
+
+Environment overrides: PERF_GATE_TOL, PERF_GATE_SPEEDUP_MIN.
+Exit status: 0 = pass, 1 = regression(s), 2 = usage/parse error.
+"""
+
+import json
+import os
+import sys
+
+
+def key(case):
+    return (case["stage"], case["quant"], case["codec"], case["bucket"])
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"perf_gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    tol = float(os.environ.get("PERF_GATE_TOL", "10.0"))
+    speedup_min = float(os.environ.get("PERF_GATE_SPEEDUP_MIN", "2.0"))
+    base = load(sys.argv[1])
+    fresh = load(sys.argv[2])
+    failures = []
+
+    # -- schema / shape ----------------------------------------------------
+    for field in ("bench", "schema"):
+        if base.get(field) != fresh.get(field):
+            failures.append(
+                f"{field} mismatch: baseline {base.get(field)!r} vs fresh {fresh.get(field)!r}"
+            )
+    base_cases = {key(c): c for c in base.get("cases", [])}
+    fresh_cases = {key(c): c for c in fresh.get("cases", [])}
+    for k in sorted(set(base_cases) - set(fresh_cases)):
+        failures.append(f"case vanished from fresh run: {k}")
+    for k in sorted(set(fresh_cases) - set(base_cases)):
+        # New cases are fine (a new codec under test) but worth surfacing.
+        print(f"note: new case not in baseline: {k}")
+
+    # -- allocations (machine-independent, exact) --------------------------
+    for k in sorted(set(base_cases) & set(fresh_cases)):
+        b, f = base_cases[k], fresh_cases[k]
+        if b.get("allocs_per_message") == 0 and f.get("allocs_per_message") != 0:
+            failures.append(
+                f"{k}: allocs/message regressed 0 -> {f.get('allocs_per_message')}"
+            )
+    rt = fresh.get("roundtrip", {})
+    if rt.get("allocs_per_message") != 0:
+        failures.append(
+            f"roundtrip allocs/message must be 0, got {rt.get('allocs_per_message')}"
+        )
+
+    # -- huffman decode speedup floor --------------------------------------
+    got = fresh.get("huffman_decode_speedup_min", 0.0)
+    if got < speedup_min:
+        failures.append(
+            f"huffman_decode_speedup_min {got:.2f}x below floor {speedup_min:.2f}x"
+        )
+
+    # -- timing ratios (same-mode runs only) -------------------------------
+    if base.get("mode") == fresh.get("mode"):
+        checked = 0
+        for k in sorted(set(base_cases) & set(fresh_cases)):
+            b_ns = base_cases[k].get("ns_per_coord")
+            f_ns = fresh_cases[k].get("ns_per_coord")
+            if not b_ns or f_ns is None:
+                continue
+            checked += 1
+            if f_ns > b_ns * tol:
+                failures.append(
+                    f"{k}: ns/coord {f_ns:.2f} vs baseline {b_ns:.2f} "
+                    f"(> {tol:.1f}x tolerance)"
+                )
+        b_rt = base.get("roundtrip", {}).get("ns_per_coord")
+        f_rt = rt.get("ns_per_coord")
+        if b_rt and f_rt is not None and f_rt > b_rt * tol:
+            failures.append(
+                f"roundtrip: ns/coord {f_rt:.2f} vs baseline {b_rt:.2f} "
+                f"(> {tol:.1f}x tolerance)"
+            )
+        print(
+            f"timing: {checked} cases + roundtrip within {tol:.1f}x of baseline"
+            if not any("tolerance" in f for f in failures)
+            else f"timing: regressions found (tolerance {tol:.1f}x)"
+        )
+    else:
+        print(
+            f"timing: skipped ratio checks (baseline mode {base.get('mode')!r} "
+            f"vs fresh {fresh.get('mode')!r})"
+        )
+
+    if failures:
+        print(f"\nperf_gate: {len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print(
+        f"perf_gate: ok — {len(fresh_cases)} cases, "
+        f"huffman decode speedup min {got:.2f}x, round-trip allocs 0"
+    )
+
+
+if __name__ == "__main__":
+    main()
