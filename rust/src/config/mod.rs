@@ -431,7 +431,7 @@ impl Default for LocalConfig {
     }
 }
 
-/// Simulated network (α-β model).
+/// Simulated network (α-β model) plus real-transport knobs.
 #[derive(Clone, Debug)]
 pub struct NetConfig {
     /// Link bandwidth in bytes/second (default 1 GbE ≈ 117 MiB/s usable).
@@ -440,11 +440,29 @@ pub struct NetConfig {
     pub latency_s: f64,
     /// All-to-all (true, paper's broadcast model) vs star via leader.
     pub all_to_all: bool,
+    /// Real-transport exchange timeout in milliseconds: how long one rank
+    /// waits for its peers in a synchronous round before poisoning the
+    /// group (`0` = wait forever on the in-process barrier; the socket
+    /// fabric substitutes its own 30 s default).
+    pub timeout_ms: u64,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
-        NetConfig { bandwidth_bps: 117.0 * 1024.0 * 1024.0, latency_s: 50e-6, all_to_all: true }
+        NetConfig {
+            bandwidth_bps: 117.0 * 1024.0 * 1024.0,
+            latency_s: 50e-6,
+            all_to_all: true,
+            timeout_ms: 0,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The configured exchange timeout as a [`std::time::Duration`]
+    /// (`None` when `timeout_ms = 0`, i.e. no cap configured).
+    pub fn exchange_timeout(&self) -> Option<std::time::Duration> {
+        (self.timeout_ms > 0).then(|| std::time::Duration::from_millis(self.timeout_ms))
     }
 }
 
@@ -568,6 +586,7 @@ impl ExperimentConfig {
                     * 1e6,
                 latency_s: doc.get_f64("net.latency_us", d.net.latency_s * 1e6)? * 1e-6,
                 all_to_all: doc.get_bool("net.all_to_all", d.net.all_to_all)?,
+                timeout_ms: doc.get_usize("net.timeout_ms", d.net.timeout_ms as usize)? as u64,
             },
             topo: {
                 // Back-compat: `net.all_to_all = false` predates the [topo]
@@ -758,6 +777,7 @@ adaptive_step = true
 [net]
 bandwidth_mbps = 125.0
 latency_us = 20.0
+timeout_ms = 1500
 
 [problem]
 kind = "quadratic"
@@ -773,7 +793,16 @@ noise = "relative"
         assert_eq!(cfg.algo.variant, Variant::OptimisticDualAveraging);
         assert!((cfg.net.bandwidth_bps - 125e6).abs() < 1.0);
         assert!((cfg.net.latency_s - 20e-6).abs() < 1e-12);
+        assert_eq!(cfg.net.timeout_ms, 1500);
+        assert_eq!(cfg.net.exchange_timeout(), Some(std::time::Duration::from_millis(1500)));
         assert_eq!(cfg.problem.kind, "quadratic");
+    }
+
+    #[test]
+    fn exchange_timeout_zero_means_uncapped() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.net.timeout_ms, 0);
+        assert_eq!(cfg.net.exchange_timeout(), None);
     }
 
     #[test]

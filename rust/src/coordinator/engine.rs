@@ -23,12 +23,14 @@
 //! * `Loopback` — this engine owns **all `K` endpoints** in one thread (the
 //!   inline simulation). Payloads never move; every sender is decoded once
 //!   with its own endpoint, exactly as the seed runner did.
-//! * `Transport` — this engine owns **one rank** of a `K`-thread group and
-//!   moves real encoded bytes through the [`AllGather`] barrier transport.
-//!   Exact payload-bit accounting differs from loopback by design: the
-//!   transport sees whole wire bytes (`8 · len`), the loopback encoder
-//!   reports exact code bits — the same split the seed's two coordinators
-//!   had.
+//! * `Transport` — this engine owns **one rank** of a `K`-endpoint group
+//!   and moves real encoded bytes through a [`Transport`] fabric: the
+//!   in-process [`crate::net::AllGather`] barrier (threads) or the
+//!   multi-process [`crate::net::SocketTransport`] (framed sockets) —
+//!   the engine cannot tell them apart, which is the point. Exact
+//!   payload-bit accounting differs from loopback by design: a transport
+//!   sees whole wire bytes (`8 · len`), the loopback encoder reports exact
+//!   code bits — the same split the seed's two coordinators had.
 //!
 //! The per-step stat schedule is built from **one predicate** —
 //! `QuantConfig::adapts() && Compressor::is_quantized()` — for both
@@ -48,7 +50,7 @@ use super::pipeline::Compressor;
 use super::schedule::UpdateSchedule;
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
-use crate::net::{AllGather, NetModel, PoisonGuard, TrafficStats};
+use crate::net::{MeasuredWire, NetModel, Plane, PoisonGuard, TrafficStats, Transport};
 use crate::oracle::{build_oracle, Operator, Oracle};
 use crate::telemetry::{Stage, StepRecord, Telemetry};
 use crate::topo::{Collective, LinkTraffic};
@@ -67,8 +69,9 @@ pub type OracleFactory =
 pub(crate) enum Fabric {
     /// All `K` endpoints in-process; decode is a loopback.
     Loopback,
-    /// One rank of a `K`-thread group over the barrier transport.
-    Transport { transport: Arc<AllGather>, rank: usize },
+    /// One rank of a `K`-endpoint group over any [`Transport`] fabric
+    /// (in-process barrier or multi-process sockets).
+    Transport { transport: Arc<dyn Transport>, rank: usize },
 }
 
 /// A query-point set for one dual exchange round.
@@ -111,42 +114,73 @@ pub fn pool_local_stats(
 }
 
 /// Out-of-band diagnostic allgather at eval steps (transport fabric):
-/// every rank contributes `[X_t ‖ X̄]` as raw f32 — deliberately NOT billed
-/// to traffic; it exists so rank 0 can evaluate cross-replica metrics.
-/// Every rank must call it at the same step so the barrier matches.
-/// Returns `Some((per-rank iterates, mean ergodic average))` on rank 0.
+/// every rank contributes `[X_t ‖ X̄]` through the shared f32 wire helpers
+/// ([`crate::net::put_f32s`]) on the out-of-band plane — deliberately NOT
+/// billed to traffic; it exists so rank 0 can evaluate cross-replica
+/// metrics. Every rank must call it at the same step so the group stays in
+/// lockstep. Returns `Some((per-rank iterates, mean ergodic average))` on
+/// rank 0.
 fn diag_exchange(
     rank: usize,
     k: usize,
     d: usize,
-    transport: &AllGather,
+    transport: &dyn Transport,
     x_world: &[f32],
     ergodic: &[f32],
 ) -> Result<Option<(Vec<Vec<f32>>, Vec<f32>)>> {
     let mut diag = Vec::with_capacity(8 * d);
-    for &x in x_world.iter().chain(ergodic.iter()) {
-        diag.extend_from_slice(&x.to_le_bytes());
-    }
-    let got = transport.exchange(rank, diag)?;
+    crate::net::put_f32s(&mut diag, x_world);
+    crate::net::put_f32s(&mut diag, ergodic);
+    let got = transport.exchange(rank, diag, Plane::Oob)?;
     if rank != 0 {
         return Ok(None);
     }
     let mut iterates = Vec::with_capacity(k);
     let mut mean_avg = vec![0.0f32; d];
     for p in &got {
-        let f: Vec<f32> = p
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        if f.len() != 2 * d {
-            return Err(Error::Coordinator("bad diagnostic payload".into()));
-        }
+        let mut f = vec![0.0f32; 2 * d];
+        crate::net::get_f32s_into(p, &mut f)
+            .map_err(|e| Error::Coordinator(format!("bad diagnostic payload: {e}")))?;
         iterates.push(f[..d].to_vec());
         for (m, &x) in mean_avg.iter_mut().zip(f[d..].iter()) {
             *m += x / k as f32;
         }
     }
     Ok(Some((iterates, mean_avg)))
+}
+
+/// The 20-byte out-of-band checkpoint-barrier marker every rank of a
+/// transport group contributes before a coordinated group checkpoint:
+/// `b"QCKP" ‖ k u32 ‖ rank u32 ‖ step u64` (little-endian).
+pub(crate) fn ckpt_marker(rank: usize, k: usize, t: u64) -> Vec<u8> {
+    let mut m = Vec::with_capacity(20);
+    m.extend_from_slice(b"QCKP");
+    m.extend_from_slice(&(k as u32).to_le_bytes());
+    m.extend_from_slice(&(rank as u32).to_le_bytes());
+    m.extend_from_slice(&t.to_le_bytes());
+    m
+}
+
+/// Validate a full set of checkpoint markers: every rank present, same
+/// group size, same step. A mismatch means some rank called
+/// `checkpoint()` at a different iteration — a programming error that
+/// must surface loudly, not silently skew the restart point.
+pub(crate) fn check_ckpt_markers(k: usize, t: u64, got: &[Arc<Vec<u8>>]) -> Result<()> {
+    if got.len() != k {
+        return Err(Error::Net(format!(
+            "checkpoint barrier saw {} markers for a group of {k}",
+            got.len()
+        )));
+    }
+    for (r, p) in got.iter().enumerate() {
+        if p.as_slice() != ckpt_marker(r, k, t).as_slice() {
+            return Err(Error::Net(format!(
+                "checkpoint barrier mismatch: rank {r} is not checkpointing step {t} \
+                 (every rank must call checkpoint() at the same iteration)"
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// The shared round engine (see module docs). Fields are crate-visible:
@@ -208,7 +242,7 @@ impl RoundEngine {
         };
         let guard = match &fabric {
             Fabric::Loopback => None,
-            Fabric::Transport { transport, .. } => Some(transport.guard()),
+            Fabric::Transport { transport, .. } => Some(PoisonGuard::new(transport.clone())),
         };
         let recv: Vec<Vec<usize>> = owned.iter().map(|&w| collective.recipients(w)).collect();
         let oracles: Vec<Box<dyn Oracle>> = owned
@@ -268,6 +302,78 @@ impl RoundEngine {
         match &self.fabric {
             Fabric::Loopback => true,
             Fabric::Transport { rank, .. } => *rank == 0,
+        }
+    }
+
+    /// The rank this engine drives under a transport fabric (`None` for
+    /// loopback, which drives all of them).
+    pub(crate) fn transport_rank(&self) -> Option<usize> {
+        match &self.fabric {
+            Fabric::Loopback => None,
+            Fabric::Transport { rank, .. } => Some(*rank),
+        }
+    }
+
+    /// Physical wire bytes this endpoint has observed, if the fabric
+    /// actually moves bytes over a wire (socket transport). `None` for
+    /// loopback and the in-process barrier.
+    pub(crate) fn measured_wire(&self) -> Option<MeasuredWire> {
+        match &self.fabric {
+            Fabric::Loopback => None,
+            Fabric::Transport { transport, .. } => transport.measured(),
+        }
+    }
+
+    /// Rank-coordinated checkpoint barrier: every rank of a transport
+    /// group contributes an out-of-band [`ckpt_marker`] for step `t` and
+    /// validates everyone else's. After this returns `Ok`, all ranks are
+    /// provably at the same iteration and no data/stat round is in flight
+    /// — each rank's in-memory engine clone is one consistent global
+    /// snapshot. Unbilled (out-of-band plane); no-op under loopback,
+    /// where the single engine *is* the global state.
+    pub(crate) fn checkpoint_barrier(&self, t: u64) -> Result<()> {
+        match &self.fabric {
+            Fabric::Loopback => Ok(()),
+            Fabric::Transport { transport, rank } => {
+                let got = transport.exchange(*rank, ckpt_marker(*rank, self.k, t), Plane::Oob)?;
+                check_ckpt_markers(self.k, t, &got)
+            }
+        }
+    }
+
+    /// Re-attach a checkpointed transport-rank engine to a fresh
+    /// [`Transport`] group — the elastic-restart primitive: kill a worker,
+    /// rebuild the group (same `K`), resume every rank from its
+    /// checkpoint. The engine state (oracles, compressors, RNG streams)
+    /// belongs to one rank, so the checkpoint can only resume as that
+    /// same rank.
+    pub(crate) fn rebind_transport(
+        &mut self,
+        transport: Arc<dyn Transport>,
+        rank: usize,
+    ) -> Result<()> {
+        match &self.fabric {
+            Fabric::Loopback => Err(Error::Coordinator(
+                "loopback checkpoints resume in-process; they have no transport rank to rebind"
+                    .into(),
+            )),
+            Fabric::Transport { rank: own, .. } => {
+                if *own != rank {
+                    return Err(Error::Coordinator(format!(
+                        "checkpoint holds rank {own}'s state; it cannot resume as rank {rank}"
+                    )));
+                }
+                if transport.peers() != self.k {
+                    return Err(Error::Coordinator(format!(
+                        "transport group of {} for a {}-worker checkpoint",
+                        transport.peers(),
+                        self.k
+                    )));
+                }
+                self._guard = Some(PoisonGuard::new(transport.clone()));
+                self.fabric = Fabric::Transport { transport, rank };
+                Ok(())
+            }
         }
     }
 
@@ -341,7 +447,7 @@ impl RoundEngine {
                 // rebuilt next round (a per-round allocation inherent to
                 // moving bytes across threads).
                 let payload = std::mem::take(&mut self.wire_bufs[0]);
-                let (recv, bits) = self.collective.exchange(transport, rank, payload)?;
+                let (recv, bits) = self.collective.exchange(transport.as_ref(), rank, payload)?;
                 let cost = self.collective.round_cost(&self.net, &bits);
                 self.traffic.record_modeled(cost.wire_bits, cost.messages, cost.secs);
                 if rank == 0 {
@@ -379,7 +485,7 @@ impl RoundEngine {
             Fabric::Loopback => pool_local_stats(&mut self.comps, &self.net, &mut self.traffic)?,
             Fabric::Transport { transport, rank } => {
                 let payload = self.comps[0].stats_payload();
-                let got = transport.exchange(*rank, payload)?;
+                let got = transport.exchange(*rank, payload, Plane::Control)?;
                 let bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
                 self.traffic.record_allgather(&bits, &self.net);
                 let rank_order: Vec<&[u8]> = got.iter().map(|p| p.as_slice()).collect();
@@ -441,7 +547,7 @@ impl RoundEngine {
             }
             Fabric::Transport { transport, rank } => {
                 let (x, erg) = &pairs[0];
-                diag_exchange(*rank, self.k, self.d, transport, x, erg)
+                diag_exchange(*rank, self.k, self.d, transport.as_ref(), x, erg)
             }
         }
     }
@@ -475,20 +581,22 @@ impl RoundEngine {
     }
 
     /// Emit the telemetry `summary` event (per-layer cumulative bits for
-    /// layer-wise pipelines, cumulative per-link bytes) and flush the
-    /// JSONL sink. Safe to call more than once; no-op when off.
+    /// layer-wise pipelines, cumulative modeled per-link bytes, and — on
+    /// a physical fabric — the endpoint's measured wire counters) and
+    /// flush the JSONL sink. Safe to call more than once; no-op when off.
     pub(crate) fn finish_telemetry(&mut self) {
         if !self.tele.is_enabled() {
             return;
         }
         let link_totals = self.links.totals();
+        let measured = self.measured_wire();
         match (self.comps[0].layer_names(), self.comps[0].layer_wire_bits()) {
             (Some(names), Some(bits)) => {
                 let names = names.to_vec();
                 let bits = bits.to_vec();
-                self.tele.finish(Some((&names, &bits)), &link_totals);
+                self.tele.finish(Some((&names, &bits)), &link_totals, measured.as_ref());
             }
-            _ => self.tele.finish(None, &link_totals),
+            _ => self.tele.finish(None, &link_totals, measured.as_ref()),
         }
     }
 }
@@ -502,7 +610,9 @@ impl Clone for RoundEngine {
             fabric: self.fabric.clone(),
             _guard: match &self.fabric {
                 Fabric::Loopback => None,
-                Fabric::Transport { transport, .. } => Some(transport.guard()),
+                Fabric::Transport { transport, .. } => {
+                    Some(PoisonGuard::new(transport.clone()))
+                }
             },
             collective: self.collective.clone(),
             net: self.net,
@@ -590,6 +700,68 @@ mod tests {
         assert_eq!(bits_a, bits_b);
         assert_eq!(a.decoded, b.decoded);
         assert_eq!(a.traffic.bits_sent, b.traffic.bits_sent);
+    }
+
+    #[test]
+    fn ckpt_markers_validate_rank_group_and_step() {
+        let k = 3;
+        let t = 42u64;
+        let good: Vec<Arc<Vec<u8>>> =
+            (0..k).map(|r| Arc::new(ckpt_marker(r, k, t))).collect();
+        check_ckpt_markers(k, t, &good).unwrap();
+        // Wrong step on one rank → loud mismatch naming the rank.
+        let mut skew = good.clone();
+        skew[1] = Arc::new(ckpt_marker(1, k, t + 1));
+        let err = check_ckpt_markers(k, t, &skew).expect_err("step skew");
+        assert!(err.to_string().contains("rank 1"), "got: {err}");
+        // Wrong cardinality.
+        assert!(check_ckpt_markers(k, t, &good[..2]).is_err());
+        // Marker layout is the documented 20 bytes.
+        let m = ckpt_marker(2, 4, 7);
+        assert_eq!(m.len(), 20);
+        assert_eq!(&m[..4], b"QCKP");
+    }
+
+    #[test]
+    fn checkpoint_barrier_is_a_loopback_noop_and_syncs_transport_ranks() {
+        let cfg = base_cfg();
+        let eng = engine(&cfg);
+        eng.checkpoint_barrier(5).unwrap();
+        // Transport ranks: all three barriers at the same step succeed...
+        let transport = crate::net::AllGather::new(cfg.workers);
+        let engines: Vec<RoundEngine> = (0..cfg.workers)
+            .map(|rank| {
+                let topo = Topology::from_config(&cfg.topo, cfg.workers).unwrap();
+                let collective = build_collective(topo, cfg.workers).unwrap();
+                RoundEngine::new(
+                    &cfg,
+                    Fabric::Transport { transport: transport.clone(), rank },
+                    collective,
+                    None,
+                )
+                .unwrap()
+            })
+            .collect();
+        std::thread::scope(|s| {
+            for eng in &engines {
+                s.spawn(move || eng.checkpoint_barrier(9).unwrap());
+            }
+        });
+        // ... and a skewed step errors on every rank instead of silently
+        // passing (the exchange itself succeeds; validation rejects).
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = engines
+                .iter()
+                .enumerate()
+                .map(|(rank, eng)| {
+                    s.spawn(move || eng.checkpoint_barrier(if rank == 2 { 11 } else { 10 }))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(results.iter().all(|r| r.is_err()), "every rank must observe the skew");
+        let msg = results[0].as_ref().unwrap_err().to_string();
+        assert!(msg.contains("checkpoint barrier"), "got: {msg}");
     }
 
     #[test]

@@ -26,11 +26,17 @@
 //!
 //! * **loopback** — all `K` endpoints in one thread (the inline
 //!   simulation; deterministic, allocation-light, used by the
-//!   rate/figure benches where thousands of runs are swept). Supports
-//!   `checkpoint()`/`resume()`.
-//! * **transport** — one rank per OS thread over the
-//!   [`crate::net::AllGather`] barrier, real encoded bytes on the wire
-//!   ([`SessionBuilder::transport`]).
+//!   rate/figure benches where thousands of runs are swept).
+//! * **transport** — one rank per endpoint over a [`crate::net::Transport`],
+//!   real encoded bytes on the wire ([`SessionBuilder::transport`]):
+//!   threads sharing the in-process [`crate::net::AllGather`] barrier, or
+//!   separate OS processes over [`crate::net::SocketTransport`]
+//!   (`qgenx worker` / `qgenx launch`; framing in `docs/WIRE.md` §4).
+//!
+//! Both fabrics support `checkpoint()`/`resume()`; a transport rank's
+//! checkpoint is barrier-coordinated across the group, and
+//! [`Session::resume_with_transport`] restarts a rank onto a fresh
+//! fabric (`docs/API.md`).
 //!
 //! The one-shot wrappers — [`run_experiment`], [`run_threaded`],
 //! [`run_qsgda_baseline`] — survive as thin `Session` consumers with

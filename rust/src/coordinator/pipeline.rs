@@ -263,10 +263,7 @@ impl Compressor {
         match self {
             Compressor::Fp32 => {
                 let t0 = spans.is_some().then(Instant::now);
-                out.reserve(4 * v.len());
-                for &x in v {
-                    out.extend_from_slice(&x.to_le_bytes());
-                }
+                crate::net::put_f32s(out, v);
                 if let (Some(s), Some(t0)) = (spans.as_deref_mut(), t0) {
                     s.add(Stage::Encode, t0.elapsed().as_secs_f64());
                 }
@@ -311,17 +308,7 @@ impl Compressor {
     }
 
     fn decompress_fp32(bytes: &[u8], out: &mut [f32]) -> Result<()> {
-        if bytes.len() != 4 * out.len() {
-            return Err(Error::Codec(format!(
-                "fp32 payload {} bytes for d = {}",
-                bytes.len(),
-                out.len()
-            )));
-        }
-        for (i, c) in bytes.chunks_exact(4).enumerate() {
-            out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-        }
-        Ok(())
+        crate::net::get_f32s_into(bytes, out)
     }
 
     /// Serialize local sufficient statistics for the stat exchange.

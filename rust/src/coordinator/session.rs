@@ -37,7 +37,7 @@ use super::policy::{ExactPolicy, ExchangePolicy, GossipPolicy, LocalPolicy, Sgda
 use crate::config::ExperimentConfig;
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
-use crate::net::AllGather;
+use crate::net::Transport;
 use crate::oracle::{Oracle, Operator};
 use crate::telemetry::{self, Telemetry, TelemetryConfig};
 use crate::topo::{build_collective, Collective, Topology};
@@ -142,8 +142,15 @@ pub struct StepReport {
 /// compressor levels/codecs/RNGs, oracle noise streams, traffic and
 /// recorder — from which [`Session::resume`] continues **bit-for-bit**
 /// (deterministic series and wire accounting; measured wall-clock times
-/// are exempt). Loopback sessions only: a transport rank cannot be
-/// meaningfully checkpointed without its peer group.
+/// are exempt).
+///
+/// Loopback checkpoints capture the whole `K`-worker run in one object.
+/// A transport rank's checkpoint captures *that rank's* shard of the
+/// global state; [`Session::checkpoint`] first runs a rank-coordinated
+/// out-of-band barrier so the `K` per-rank checkpoints taken at the same
+/// iteration form one consistent global snapshot. Rebind such a shard to
+/// a fresh group with [`Session::resume_with_transport`] — the elastic
+/// worker-restart primitive.
 pub struct Checkpoint {
     cfg: ExperimentConfig,
     eng: RoundEngine,
@@ -154,6 +161,20 @@ pub struct Checkpoint {
     stopped: bool,
 }
 
+impl Checkpoint {
+    /// Completed iterations at the moment of capture — all ranks of a
+    /// coordinated group checkpoint share this value.
+    pub fn iteration(&self) -> usize {
+        self.t
+    }
+
+    /// The transport rank whose state shard this is (`None` for a loopback
+    /// checkpoint, which holds the whole group).
+    pub fn rank(&self) -> Option<usize> {
+        self.eng.transport_rank()
+    }
+}
+
 /// Builder for [`Session`]: configure once, validate once.
 pub struct SessionBuilder {
     cfg: ExperimentConfig,
@@ -161,7 +182,7 @@ pub struct SessionBuilder {
     observers: Vec<Box<dyn Observer>>,
     oracle_factory: Option<Box<OracleFactory>>,
     collective: Option<Arc<dyn Collective>>,
-    transport: Option<(Arc<AllGather>, usize)>,
+    transport: Option<(Arc<dyn Transport>, usize)>,
     telemetry: Option<TelemetryConfig>,
 }
 
@@ -198,12 +219,14 @@ impl SessionBuilder {
         self
     }
 
-    /// Attach this session as rank `rank` of a `K`-thread transport group
-    /// (the threaded execution mode): real encoded bytes move through the
-    /// shared [`AllGather`] barrier. Every rank of the group must build a
-    /// session against the same transport and step in lockstep —
-    /// [`super::threaded::run_threaded`] is the packaged form.
-    pub fn transport(mut self, transport: Arc<AllGather>, rank: usize) -> Self {
+    /// Attach this session as rank `rank` of a `K`-endpoint [`Transport`]
+    /// group: real encoded bytes move through the fabric — the in-process
+    /// [`crate::net::AllGather`] barrier (threaded execution;
+    /// [`super::threaded::run_threaded`] is the packaged form) or a
+    /// [`crate::net::SocketTransport`] endpoint in its own process (the
+    /// `qgenx worker` CLI). Every rank of the group must build a session
+    /// against the same logical group and step in lockstep.
+    pub fn transport(mut self, transport: Arc<dyn Transport>, rank: usize) -> Self {
         self.transport = Some((transport, rank));
         self
     }
@@ -438,17 +461,19 @@ impl Session {
         self.rec
     }
 
-    /// Deep-copy the full run state for a later bit-for-bit [`Self::resume`].
-    /// Loopback sessions only (observers are not captured — re-attach them
-    /// on the resumed session).
+    /// Deep-copy the full run state for a later bit-for-bit [`Self::resume`]
+    /// (observers are not captured — re-attach them on the resumed
+    /// session).
+    ///
+    /// On a transport rank this first runs the out-of-band checkpoint
+    /// barrier ([`super::engine::RoundEngine::checkpoint_barrier`]): every
+    /// rank of the group must call `checkpoint()` at the **same completed
+    /// iteration**, and the call fails if any peer is at a different step
+    /// (or the fabric is poisoned). The returned per-rank checkpoints are
+    /// then one consistent global snapshot; resume each of them onto a
+    /// fresh group with [`Self::resume_with_transport`].
     pub fn checkpoint(&self) -> Result<Checkpoint> {
-        if !self.eng.is_loopback() {
-            return Err(Error::Coordinator(
-                "checkpoint requires an in-process (loopback) session; a transport rank \
-                 cannot be checkpointed without its peer group"
-                    .into(),
-            ));
-        }
+        self.eng.checkpoint_barrier(self.t as u64)?;
         Ok(Checkpoint {
             cfg: self.cfg.clone(),
             eng: self.eng.clone(),
@@ -462,7 +487,9 @@ impl Session {
 
     /// Rebuild a session from a [`Checkpoint`]; the continuation matches an
     /// uninterrupted run bit-for-bit on every deterministic series and on
-    /// the wire accounting.
+    /// the wire accounting. A transport-rank checkpoint resumed this way
+    /// keeps its original transport handle — use
+    /// [`Self::resume_with_transport`] after a group restart.
     pub fn resume(cp: Checkpoint) -> Session {
         Session {
             cfg: cp.cfg,
@@ -476,6 +503,24 @@ impl Session {
         }
     }
 
+    /// Rebuild a transport rank's session from its [`Checkpoint`], attached
+    /// to a **fresh** transport group — the elastic restart primitive:
+    /// kill a worker (its peers' rounds poison instead of hanging),
+    /// rebuild the `K`-endpoint group, and resume every rank from the last
+    /// coordinated checkpoint. The continuation is bit-for-bit identical
+    /// to the uninterrupted run. The checkpoint holds one rank's state
+    /// shard, so `rank` must equal [`Checkpoint::rank`] and the new group
+    /// must have the same `K`; loopback checkpoints are refused (use
+    /// [`Self::resume`]).
+    pub fn resume_with_transport(
+        mut cp: Checkpoint,
+        transport: Arc<dyn Transport>,
+        rank: usize,
+    ) -> Result<Session> {
+        cp.eng.rebind_transport(transport, rank)?;
+        Ok(Session::resume(cp))
+    }
+
     /// Attach an observer to a running (e.g. freshly resumed) session.
     pub fn observe(&mut self, obs: Box<dyn Observer>) {
         self.observers.push(obs);
@@ -487,6 +532,7 @@ mod tests {
     use super::*;
     use crate::coordinator::inline::run_experiment;
     use crate::coordinator::threaded::run_threaded;
+    use crate::net::AllGather;
 
     fn base_cfg() -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();
@@ -666,14 +712,103 @@ mod tests {
     }
 
     #[test]
-    fn transport_sessions_refuse_checkpoint() {
+    fn transport_group_checkpoint_and_elastic_resume_is_bit_identical() {
         let cfg = base_cfg();
-        let transport = AllGather::new(cfg.workers);
-        // Rank sessions block on the barrier, so exercise the refusal
-        // before any stepping (construction alone attaches the fabric).
-        let session =
-            Session::builder(cfg).transport(transport, 1).build().unwrap();
-        assert!(session.checkpoint().is_err());
+        let k = cfg.workers;
+        let whole = run_experiment(&cfg).unwrap();
+        let half = cfg.iters / 2;
+
+        // Phase 1: a K-rank in-process transport group runs to the halfway
+        // point and takes a coordinated group checkpoint (every rank calls
+        // checkpoint() at the same completed iteration).
+        let first = AllGather::new(k);
+        let cps: Vec<Checkpoint> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..k)
+                .map(|rank| {
+                    let cfg = cfg.clone();
+                    let tr = first.clone();
+                    s.spawn(move || {
+                        let mut sess =
+                            Session::builder(cfg).transport(tr, rank).build().unwrap();
+                        sess.run_to(half).unwrap();
+                        sess.checkpoint().unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (rank, cp) in cps.iter().enumerate() {
+            assert_eq!(cp.rank(), Some(rank));
+            assert_eq!(cp.iteration(), half);
+        }
+
+        // Phase 2: the original group is gone (workers "died"); a fresh
+        // transport group resumes every rank from its checkpoint shard.
+        drop(first);
+        let fresh = AllGather::new(k);
+        let recs: Vec<Recorder> = std::thread::scope(|s| {
+            let handles: Vec<_> = cps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, cp)| {
+                    let tr = fresh.clone();
+                    let iters = cfg.iters;
+                    s.spawn(move || {
+                        let mut sess = Session::resume_with_transport(cp, tr, rank).unwrap();
+                        sess.run_to(iters).unwrap();
+                        sess.into_recorder()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            whole.get("gap").unwrap().ys(),
+            recs[0].get("gap").unwrap().ys(),
+            "elastic resume must continue the trajectory bit-for-bit"
+        );
+        assert_eq!(whole.scalar("total_bits"), recs[0].scalar("total_bits"));
+        assert_eq!(whole.scalar("rounds"), recs[0].scalar("rounds"));
+    }
+
+    #[test]
+    fn resume_with_transport_validates_fabric_rank_and_group_size() {
+        let mut cfg = base_cfg();
+        cfg.workers = 1; // single-rank group: barriers complete inline
+        cfg.iters = 20;
+        cfg.eval_every = 10;
+        let whole = run_experiment(&cfg).unwrap();
+
+        // Loopback checkpoints have no rank to rebind.
+        let lb = Session::builder(cfg.clone()).build().unwrap();
+        let cp = lb.checkpoint().unwrap();
+        assert!(cp.rank().is_none());
+        let err = Session::resume_with_transport(cp, AllGather::new(1), 0)
+            .expect_err("loopback checkpoint must not rebind");
+        assert!(err.to_string().contains("loopback"), "got: {err}");
+
+        // A rank's checkpoint resumes only as that rank, in a same-K group.
+        let mut s =
+            Session::builder(cfg.clone()).transport(AllGather::new(1), 0).build().unwrap();
+        s.run_to(5).unwrap();
+        let cp = s.checkpoint().unwrap();
+        assert_eq!((cp.rank(), cp.iteration()), (Some(0), 5));
+        let err = Session::resume_with_transport(cp, AllGather::new(1), 1)
+            .expect_err("rank mismatch");
+        assert!(err.to_string().contains("cannot resume as rank"), "got: {err}");
+        let cp = s.checkpoint().unwrap();
+        let err = Session::resume_with_transport(cp, AllGather::new(2), 0)
+            .expect_err("group-size mismatch");
+        assert!(err.to_string().contains("transport group"), "got: {err}");
+
+        // The happy path continues bit-for-bit on a fresh group.
+        let cp = s.checkpoint().unwrap();
+        drop(s);
+        let mut resumed = Session::resume_with_transport(cp, AllGather::new(1), 0).unwrap();
+        resumed.run_to(cfg.iters).unwrap();
+        let rec = resumed.into_recorder();
+        assert_eq!(whole.get("gap").unwrap().ys(), rec.get("gap").unwrap().ys());
+        assert_eq!(whole.scalar("total_bits"), rec.scalar("total_bits"));
     }
 
     #[test]

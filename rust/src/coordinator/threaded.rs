@@ -1,13 +1,15 @@
 //! Threaded coordinator: `K` real worker threads, replicated state,
-//! actual encoded bytes through the [`AllGather`] transport, delivered
-//! over the configured topology.
+//! actual encoded bytes through the in-process [`AllGather`]
+//! [`crate::net::Transport`], delivered over the configured topology.
 //!
 //! [`run_threaded`] is a thin wrapper over [`crate::coordinator::Session`]:
 //! it spawns one **transport-fabric session per rank** against a shared
 //! [`AllGather`] group, steps each to completion, and checks the
 //! replication invariant. Every rank runs the *same*
 //! `ExchangePolicy`/`RoundEngine` code as the inline wrapper — the
-//! execution mode is a fabric choice, not a second implementation.
+//! execution mode is a fabric choice, not a second implementation. (The
+//! same sessions run unchanged over [`crate::net::SocketTransport`] when
+//! each rank is its own OS process — the `qgenx worker` CLI.)
 //!
 //! Replication invariant (exact topologies — mesh/star/ring/hierarchical):
 //! every worker decodes the *same* payload set in the same rank order,
@@ -56,7 +58,7 @@ pub fn run_threaded(cfg: &ExperimentConfig) -> Result<ThreadedRun> {
     cfg.validate()?;
     let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
     let k = cfg.workers;
-    let transport = AllGather::new(k);
+    let transport = AllGather::with_timeout(k, cfg.net.exchange_timeout());
 
     let handles: Vec<std::thread::JoinHandle<Result<(Recorder, Vec<f32>)>>> = (0..k)
         .map(|rank| {
@@ -76,8 +78,8 @@ pub fn run_threaded(cfg: &ExperimentConfig) -> Result<ThreadedRun> {
                     // An Err return (codec/oracle failure) must release the
                     // peers just like a panic does — otherwise they block at
                     // the barrier forever waiting for this worker's deposit.
-                    if out.is_err() {
-                        transport.poison();
+                    if let Err(e) = &out {
+                        transport.poison(&format!("worker {rank} failed: {e}"));
                     }
                     out
                 })

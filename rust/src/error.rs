@@ -22,8 +22,13 @@ pub enum Error {
     /// Problem / oracle construction error (dimension mismatch etc.).
     Oracle(String),
 
-    /// Coordinator / transport failure (worker panic, channel closed...).
+    /// Coordinator failure (worker panic, lockstep violation...).
     Coordinator(String),
+
+    /// Transport / wire failure (poisoned group, exchange timeout, dead
+    /// peer, framing violation...). Carries enough context to tell a local
+    /// barrier fault from a socket-level one.
+    Net(String),
 
     /// Topology construction / collective execution error.
     Topology(String),
@@ -49,6 +54,7 @@ impl fmt::Display for Error {
             Error::Quant(m) => write!(f, "quantization error: {m}"),
             Error::Oracle(m) => write!(f, "oracle error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Net(m) => write!(f, "net error: {m}"),
             Error::Topology(m) => write!(f, "topology error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Manifest(m) => write!(f, "manifest error: {m}"),
@@ -90,6 +96,7 @@ mod tests {
     fn display_prefixes_layer() {
         assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
         assert_eq!(Error::Topology("bad graph".into()).to_string(), "topology error: bad graph");
+        assert_eq!(Error::Net("peer gone".into()).to_string(), "net error: peer gone");
     }
 
     #[test]

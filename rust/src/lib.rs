@@ -30,7 +30,7 @@
 //! | [`quant`] | `Q_ℓ` random quantization (Def. 1), wire format (`CODE∘Q`), QAda adaptive levels, layer-wise partition + Theorem-1 bit-budget allocator (Q-GenX-LW), Thm-1/Thm-2 bound calculators |
 //! | [`oracle`] | monotone VI problem suite, absolute/relative noise oracles, restricted gap function |
 //! | [`algo`] | Q-GenX template (DA/DE/OptDA) with adaptive step-size, local-steps replica wrapper, baselines (EG, SGDA, QSGDA) |
-//! | [`net`] | simulated α-β transport, exact bit accounting |
+//! | [`net`] | transport fabrics: α-β cost model, in-process `AllGather` barrier, socket transport (length-framed TCP / Unix-domain mesh), measured-byte accounting |
 //! | [`topo`] | topology-aware collectives: full-mesh / star / ring / hierarchical / gossip exchange graphs, per-topology α-β cost, per-link traffic |
 //! | [`coordinator`] | the steppable `Session` run API over the shared round engine (Algorithm 1); exact / gossip / local exchange policies + SGDA baseline; one-shot wrappers |
 //! | [`runtime`] | PJRT client: load + execute AOT HLO artifacts |
@@ -43,8 +43,9 @@
 //! families, bench ↔ theorem map), `docs/API.md` (the Session run API:
 //! lifecycle, Observer contract, checkpoint/resume, migration table),
 //! `docs/CONFIG.md` (every TOML table and CLI flag), `docs/WIRE.md`
-//! (payload and stat wire formats), `docs/OBSERVABILITY.md` (telemetry
-//! event schema, span taxonomy, sinks, overhead contract).
+//! (payload and stat wire formats + the socket frame envelope),
+//! `docs/OBSERVABILITY.md` (telemetry event schema, span taxonomy,
+//! sinks, overhead contract).
 
 pub mod algo;
 pub mod benchkit;

@@ -9,6 +9,11 @@
 //!   WGAN-GP experiment on the AOT artifacts.
 //! * `lm [--steps N] [--workers K] [--optimizer msgd|qgenx] [--mode ...]`
 //!   — distributed quantized LM training (the E2E driver).
+//! * `worker --rank R --connect ADDR [run flags]` — one rank of a
+//!   socket-transport group in this process (rank 0 hosts the rendezvous
+//!   and prints the run summary; see `docs/WIRE.md`).
+//! * `launch [--addr ADDR] [run flags]` — spawn `K` local `worker`
+//!   subprocesses over a Unix-domain (default) or TCP socket and wait.
 //! * `info` — print the artifact manifest summary.
 //!
 //! The argument parser is hand-rolled (`--key value` / `--flag`); no clap
@@ -16,7 +21,8 @@
 
 use qgenx::config::{ExperimentConfig, QuantMode};
 use qgenx::coordinator::{run_threaded, Control, Observer, Session, StepReport, StopAtGap};
-use qgenx::net::NetModel;
+use qgenx::metrics::Recorder;
+use qgenx::net::{NetModel, SocketHub, SocketOpts, SocketTransport};
 use qgenx::runtime::{default_artifacts_dir, Runtime};
 use qgenx::train::{GanMode, GanTrainConfig, GanTrainer, LmOptimizer, LmTrainConfig, LmTrainer};
 use std::collections::HashMap;
@@ -39,6 +45,8 @@ fn main() -> ExitCode {
         "run" => cmd_run(&flags),
         "gan" => cmd_gan(&flags),
         "lm" => cmd_lm(&flags),
+        "worker" => cmd_worker(&flags),
+        "launch" => cmd_launch(&flags),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_help();
@@ -69,6 +77,8 @@ fn print_help() {
            run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H] [--layers N|name:end,...,last] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K] [--layerwise]\n\
            lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N]\n\
+           worker one socket-transport rank           --rank R --connect HOST:PORT|unix:PATH [--timeout-ms N] [run flags; rank 0 hosts the rendezvous and reports]\n\
+           launch spawn K local socket workers        [--addr HOST:PORT|unix:PATH] [run flags, forwarded to every worker]\n\
            info   print the artifact manifest summary\n\
            help   this message"
     );
@@ -116,7 +126,9 @@ fn flag_usize(flags: &Flags, key: &str, default: usize) -> usize {
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn cmd_run(flags: &Flags) -> Result<(), String> {
+/// Build the VI experiment config shared by `run`, `worker` and `launch`:
+/// `--config` file, then the common flag overrides on top.
+fn run_cfg_from_flags(flags: &Flags) -> Result<ExperimentConfig, String> {
     let mut cfg = match flags.get("config") {
         Some(path) => ExperimentConfig::load(path).map_err(|e| e.to_string())?,
         None => ExperimentConfig::default(),
@@ -136,6 +148,9 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     if let Some(h) = flags.get("local") {
         cfg.local.steps = h.parse().map_err(|_| "bad --local")?;
     }
+    if let Some(t) = flags.get("timeout-ms") {
+        cfg.net.timeout_ms = t.parse().map_err(|_| "bad --timeout-ms")?;
+    }
     if let Some(spec) = flags.get("layers") {
         // Replace the partition (names + bounds) but keep a config file's
         // budget — the flag is the quick way to try a different split.
@@ -145,22 +160,13 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
         cfg.quant.layers.bounds = parsed.bounds;
         cfg.quant.layers.overrides.clear();
     }
-    if flags.contains_key("qsgda") && cfg.local.steps > 1 {
-        return Err("--qsgda has no local-steps path; drop --local".into());
-    }
-    if (flags.contains_key("watch")
-        || flags.contains_key("stop-at-gap")
-        || flags.contains_key("telemetry"))
-        && (flags.contains_key("qsgda") || flags.contains_key("threaded"))
-    {
-        return Err(
-            "--watch/--stop-at-gap/--telemetry drive an inline Session; drop --qsgda/--threaded \
-             (threaded runs honour the QGENX_TELEMETRY env knob instead)"
-                .into(),
-        );
-    }
+    Ok(cfg)
+}
+
+/// The one-line run header every coordinator entrypoint prints.
+fn print_run_header(kind: &str, cfg: &ExperimentConfig) {
     println!(
-        "run: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={} layers={}",
+        "{kind}: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={} layers={}",
         cfg.problem.kind,
         cfg.problem.dim,
         cfg.workers,
@@ -175,32 +181,12 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
             cfg.quant.layers.names.join(",")
         }
     );
-    let rec = if flags.contains_key("qsgda") {
-        qgenx::coordinator::run_qsgda_baseline(&cfg).map_err(|e| e.to_string())?
-    } else if flags.contains_key("threaded") {
-        run_threaded(&cfg).map_err(|e| e.to_string())?.recorder
-    } else {
-        // The steppable Session is the run API; wire up the CLI's streaming
-        // and early-stop hooks as observers (docs/API.md).
-        let mut builder = Session::builder(cfg.clone());
-        if flags.contains_key("watch") {
-            builder = builder.observer(Box::new(WatchProgress));
-        }
-        if let Some(g) = flags.get("stop-at-gap") {
-            let g: f64 = g.parse().map_err(|_| "bad --stop-at-gap")?;
-            builder = builder.observer(Box::new(StopAtGap(g)));
-        }
-        if let Some(v) = flags.get("telemetry") {
-            // Same grammar as QGENX_TELEMETRY: `mem`/`1` for the in-memory
-            // ring, anything else is a JSONL sink path (docs/OBSERVABILITY.md).
-            // A bare `--telemetry` parses as "true" — treat it as `mem`.
-            let v = if v == "true" { "mem" } else { v.as_str() };
-            let tcfg = qgenx::telemetry::TelemetryConfig::parse(v)
-                .ok_or("bad --telemetry: use `mem` or a JSONL path")?;
-            builder = builder.telemetry(tcfg);
-        }
-        builder.build().map_err(|e| e.to_string())?.run().map_err(|e| e.to_string())?
-    };
+}
+
+/// Gap trajectory + summary scalars + CSV, shared by `run` and `worker`
+/// (rank 0): identical output lets the CI transport-smoke job diff the
+/// two execution modes textually.
+fn print_run_summary(cfg: &ExperimentConfig, rec: &Recorder) -> Result<(), String> {
     if let Some(gaps) = rec.get("gap") {
         println!("  iter        gap");
         for (x, y) in &gaps.points {
@@ -228,6 +214,176 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     rec.to_csv(&out).map_err(|e| e.to_string())?;
     println!("  csv -> {out}");
     Ok(())
+}
+
+fn cmd_run(flags: &Flags) -> Result<(), String> {
+    let cfg = run_cfg_from_flags(flags)?;
+    if flags.contains_key("qsgda") && cfg.local.steps > 1 {
+        return Err("--qsgda has no local-steps path; drop --local".into());
+    }
+    if (flags.contains_key("watch")
+        || flags.contains_key("stop-at-gap")
+        || flags.contains_key("telemetry"))
+        && (flags.contains_key("qsgda") || flags.contains_key("threaded"))
+    {
+        return Err(
+            "--watch/--stop-at-gap/--telemetry drive an inline Session; drop --qsgda/--threaded \
+             (threaded runs honour the QGENX_TELEMETRY env knob instead)"
+                .into(),
+        );
+    }
+    print_run_header("run", &cfg);
+    let rec = if flags.contains_key("qsgda") {
+        qgenx::coordinator::run_qsgda_baseline(&cfg).map_err(|e| e.to_string())?
+    } else if flags.contains_key("threaded") {
+        run_threaded(&cfg).map_err(|e| e.to_string())?.recorder
+    } else {
+        // The steppable Session is the run API; wire up the CLI's streaming
+        // and early-stop hooks as observers (docs/API.md).
+        let mut builder = Session::builder(cfg.clone());
+        if flags.contains_key("watch") {
+            builder = builder.observer(Box::new(WatchProgress));
+        }
+        if let Some(g) = flags.get("stop-at-gap") {
+            let g: f64 = g.parse().map_err(|_| "bad --stop-at-gap")?;
+            builder = builder.observer(Box::new(StopAtGap(g)));
+        }
+        if let Some(v) = flags.get("telemetry") {
+            // Same grammar as QGENX_TELEMETRY: `mem`/`1` for the in-memory
+            // ring, anything else is a JSONL sink path (docs/OBSERVABILITY.md).
+            // A bare `--telemetry` parses as "true" — treat it as `mem`.
+            let v = if v == "true" { "mem" } else { v.as_str() };
+            let tcfg = qgenx::telemetry::TelemetryConfig::parse(v)
+                .ok_or("bad --telemetry: use `mem` or a JSONL path")?;
+            builder = builder.telemetry(tcfg);
+        }
+        builder.build().map_err(|e| e.to_string())?.run().map_err(|e| e.to_string())?
+    };
+    print_run_summary(&cfg, &rec)
+}
+
+/// One rank of a socket-transport group: rank 0 binds the rendezvous at
+/// `--connect` and accepts its peers; every other rank dials in. All ranks
+/// then drive the same [`Session`] the in-process coordinators use — only
+/// rank 0 prints the summary and writes the CSV (and, with `--telemetry`,
+/// owns the JSONL sink).
+fn cmd_worker(flags: &Flags) -> Result<(), String> {
+    let cfg = run_cfg_from_flags(flags)?;
+    let rank: usize = flags
+        .get("rank")
+        .ok_or("worker needs --rank")?
+        .parse()
+        .map_err(|_| "bad --rank")?;
+    let addr = flags.get("connect").ok_or("worker needs --connect (HOST:PORT or unix:PATH)")?;
+    if rank >= cfg.workers {
+        return Err(format!("--rank {rank} out of range for K = {}", cfg.workers));
+    }
+    let opts = SocketOpts::from_config(&cfg.net);
+    let transport = if rank == 0 {
+        let hub = SocketHub::bind(addr, cfg.workers, opts).map_err(|e| e.to_string())?;
+        hub.accept().map_err(|e| e.to_string())?
+    } else {
+        SocketTransport::connect(addr, rank, cfg.workers, opts).map_err(|e| e.to_string())?
+    };
+    let mut builder = Session::builder(cfg.clone()).transport(transport, rank);
+    if let Some(v) = flags.get("telemetry") {
+        let v = if v == "true" { "mem" } else { v.as_str() };
+        let tcfg = qgenx::telemetry::TelemetryConfig::parse(v)
+            .ok_or("bad --telemetry: use `mem` or a JSONL path")?;
+        builder = builder.telemetry(tcfg);
+    }
+    if rank == 0 {
+        print_run_header("worker", &cfg);
+    }
+    let mut session = builder.build().map_err(|e| e.to_string())?;
+    session.run_to(cfg.iters).map_err(|e| e.to_string())?;
+    let rec = session.into_recorder();
+    if rank == 0 {
+        print_run_summary(&cfg, &rec)?;
+    }
+    Ok(())
+}
+
+/// Spawn `K` `worker` subprocesses of this binary against one rendezvous
+/// address and wait for all of them; the first failure kills the rest of
+/// the group (their rounds have already poisoned — the kill only reaps).
+fn cmd_launch(flags: &Flags) -> Result<(), String> {
+    let cfg = run_cfg_from_flags(flags)?;
+    let addr = match flags.get("addr") {
+        Some(a) => a.clone(),
+        #[cfg(unix)]
+        None => format!(
+            "unix:{}/qgenx-{}.sock",
+            std::env::temp_dir().display(),
+            std::process::id()
+        ),
+        #[cfg(not(unix))]
+        None => return Err("launch needs --addr HOST:PORT on this platform".into()),
+    };
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    // Forward every run flag to every worker; `--addr` is launch-local and
+    // `--rank`/`--connect` are per-worker (set below, not forwardable).
+    let mut forwarded: Vec<String> = Vec::new();
+    let mut keys: Vec<&String> = flags
+        .keys()
+        .filter(|k| !matches!(k.as_str(), "addr" | "rank" | "connect"))
+        .collect();
+    keys.sort();
+    for key in keys {
+        forwarded.push(format!("--{key}"));
+        let v = &flags[key];
+        if v != "true" {
+            forwarded.push(v.clone());
+        }
+    }
+    println!("launch: K={} addr={addr}", cfg.workers);
+    let mut children: Vec<(usize, std::process::Child)> = Vec::with_capacity(cfg.workers);
+    for rank in 0..cfg.workers {
+        // Rank 0 first: it binds the rendezvous; later ranks dial with
+        // retry until the handshake deadline, so start order beyond that
+        // doesn't matter.
+        let child = std::process::Command::new(&exe)
+            .arg("worker")
+            .args(["--rank", &rank.to_string(), "--connect", &addr])
+            .args(&forwarded)
+            .spawn()
+            .map_err(|e| format!("spawn worker {rank}: {e}"));
+        match child {
+            Ok(c) => children.push((rank, c)),
+            Err(e) => {
+                for (_, c) in children.iter_mut() {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                return Err(e);
+            }
+        }
+    }
+    let mut failure: Option<String> = None;
+    for i in 0..children.len() {
+        let (rank, child) = &mut children[i];
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failure = Some(format!("worker {rank} exited with {status}")),
+            Err(e) => failure = Some(format!("wait on worker {rank}: {e}")),
+        }
+        if failure.is_some() {
+            break;
+        }
+    }
+    if failure.is_some() {
+        // Peers of a dead worker error out of their next round (poison
+        // semantics), so these kills are belt-and-braces against a worker
+        // wedged before its first exchange.
+        for (_, c) in children.iter_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+    match failure {
+        Some(msg) => Err(msg),
+        None => Ok(()),
+    }
 }
 
 fn open_runtime() -> Result<Runtime, String> {

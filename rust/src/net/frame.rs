@@ -1,0 +1,284 @@
+//! Length-framed wire messages for the socket transport.
+//!
+//! Every message on a [`crate::net::SocketTransport`] connection is one
+//! frame: a fixed 24-byte header followed by `len` payload bytes. The
+//! payload of a [`FrameKind::Data`] frame is exactly the docs/WIRE.md
+//! encoded payload (data wire v1/v2, stat wire v1–v3) — framing adds
+//! transport envelope, never touches the encoded formats.
+//!
+//! Header layout (all little-endian, matching the WIRE.md convention):
+//!
+//! | offset | size | field   | meaning                                   |
+//! |--------|------|---------|-------------------------------------------|
+//! | 0      | 4    | magic   | `0x584E4751` (`b"QGNX"` read as LE u32)   |
+//! | 4      | 2    | version | frame protocol version, currently `1`     |
+//! | 6      | 1    | kind    | [`FrameKind`] discriminant                |
+//! | 7      | 1    | flags   | reserved, must be `0`                     |
+//! | 8      | 4    | rank    | sender's rank                             |
+//! | 12     | 8    | round   | sender's round counter (lockstep check)   |
+//! | 20     | 4    | len     | payload length in bytes                   |
+//!
+//! The header is deliberately self-checking: magic/version reject
+//! cross-protocol garbage, `kind` + `round` give every receiver a free
+//! lockstep assertion (all ranks must be in the same round of the same
+//! plane), and `len` is bounded by [`MAX_FRAME_PAYLOAD`] so a corrupt
+//! header cannot trigger a multi-gigabyte allocation.
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+
+/// `b"QGNX"` interpreted as a little-endian u32.
+pub const FRAME_MAGIC: u32 = 0x584E_4751;
+
+/// Current frame protocol version.
+pub const FRAME_VERSION: u16 = 1;
+
+/// Fixed header size in bytes.
+pub const FRAME_HEADER_LEN: usize = 24;
+
+/// Upper bound on a single frame payload (1 GiB). Real payloads are
+/// kilobytes; this only exists to bound allocation on a corrupt header.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 30;
+
+/// What a frame carries. Handshake kinds (`Hello`/`Welcome`/`Peer`) appear
+/// only during connection setup; `Data`/`Control`/`Oob` mirror
+/// [`crate::net::Plane`] for exchange rounds; `Goodbye`/`Abort` end a
+/// connection cleanly or with a poison reason.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Worker → rank 0 rendezvous: "rank R of a group of K, my peer
+    /// listener is at ADDR".
+    Hello = 0,
+    /// Rank 0 → worker: the full peer directory once everyone arrived.
+    Welcome = 1,
+    /// Worker → worker mesh link identification after dialing.
+    Peer = 2,
+    /// Data-plane exchange payload ([`crate::net::Plane::Data`]).
+    Data = 3,
+    /// Clean shutdown; payload empty.
+    Goodbye = 4,
+    /// Group poisoned; payload is the UTF-8 reason.
+    Abort = 5,
+    /// Control-plane exchange payload ([`crate::net::Plane::Control`]).
+    Control = 6,
+    /// Out-of-band exchange payload ([`crate::net::Plane::Oob`]).
+    Oob = 7,
+}
+
+impl FrameKind {
+    /// The frame kind carrying an exchange round of the given plane.
+    pub fn for_plane(plane: crate::net::Plane) -> FrameKind {
+        match plane {
+            crate::net::Plane::Data => FrameKind::Data,
+            crate::net::Plane::Control => FrameKind::Control,
+            crate::net::Plane::Oob => FrameKind::Oob,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<FrameKind> {
+        Ok(match v {
+            0 => FrameKind::Hello,
+            1 => FrameKind::Welcome,
+            2 => FrameKind::Peer,
+            3 => FrameKind::Data,
+            4 => FrameKind::Goodbye,
+            5 => FrameKind::Abort,
+            6 => FrameKind::Control,
+            7 => FrameKind::Oob,
+            _ => return Err(Error::Net(format!("unknown frame kind {v}"))),
+        })
+    }
+}
+
+/// Decoded frame header. `len` is carried separately by [`read_frame`];
+/// the header keeps only the fields receivers validate against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub rank: u32,
+    pub round: u64,
+    pub len: u32,
+}
+
+impl FrameHeader {
+    pub fn encode(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        h[4..6].copy_from_slice(&FRAME_VERSION.to_le_bytes());
+        h[6] = self.kind as u8;
+        h[7] = 0; // flags, reserved
+        h[8..12].copy_from_slice(&self.rank.to_le_bytes());
+        h[12..20].copy_from_slice(&self.round.to_le_bytes());
+        h[20..24].copy_from_slice(&self.len.to_le_bytes());
+        h
+    }
+
+    pub fn decode(h: &[u8; FRAME_HEADER_LEN]) -> Result<FrameHeader> {
+        let magic = u32::from_le_bytes(h[0..4].try_into().expect("4 bytes"));
+        if magic != FRAME_MAGIC {
+            return Err(Error::Net(format!(
+                "bad frame magic {magic:#010x} (expected {FRAME_MAGIC:#010x}) — \
+                 not a qgenx transport stream"
+            )));
+        }
+        let version = u16::from_le_bytes(h[4..6].try_into().expect("2 bytes"));
+        if version != FRAME_VERSION {
+            return Err(Error::Net(format!(
+                "unsupported frame version {version} (this build speaks {FRAME_VERSION})"
+            )));
+        }
+        let kind = FrameKind::from_u8(h[6])?;
+        if h[7] != 0 {
+            return Err(Error::Net(format!("reserved frame flags set: {:#04x}", h[7])));
+        }
+        let rank = u32::from_le_bytes(h[8..12].try_into().expect("4 bytes"));
+        let round = u64::from_le_bytes(h[12..20].try_into().expect("8 bytes"));
+        let len = u32::from_le_bytes(h[20..24].try_into().expect("4 bytes"));
+        if len as usize > MAX_FRAME_PAYLOAD {
+            return Err(Error::Net(format!(
+                "frame payload of {len} bytes exceeds the {MAX_FRAME_PAYLOAD}-byte cap \
+                 — corrupt header?"
+            )));
+        }
+        Ok(FrameHeader { kind, rank, round, len })
+    }
+}
+
+/// Write one frame (header + payload) to `w`. IO failures surface as
+/// [`Error::Net`] with the peer context baked in by the caller's `what`.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: FrameKind,
+    rank: u32,
+    round: u64,
+    payload: &[u8],
+) -> Result<()> {
+    if payload.len() > MAX_FRAME_PAYLOAD {
+        return Err(Error::Net(format!(
+            "refusing to send a {}-byte frame payload (cap {MAX_FRAME_PAYLOAD})",
+            payload.len()
+        )));
+    }
+    let hdr = FrameHeader { kind, rank, round, len: payload.len() as u32 };
+    let h = hdr.encode();
+    w.write_all(&h).map_err(|e| Error::Net(format!("writing frame header: {e}")))?;
+    w.write_all(payload).map_err(|e| Error::Net(format!("writing frame payload: {e}")))?;
+    w.flush().map_err(|e| Error::Net(format!("flushing frame: {e}")))?;
+    Ok(())
+}
+
+/// Read exactly one frame header from `r`.
+pub fn read_header(r: &mut impl Read) -> Result<FrameHeader> {
+    let mut h = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut h).map_err(|e| Error::Net(format!("reading frame header: {e}")))?;
+    FrameHeader::decode(&h)
+}
+
+/// Read one full frame: header, then its `len` payload bytes.
+pub fn read_frame(r: &mut impl Read) -> Result<(FrameHeader, Vec<u8>)> {
+    let hdr = read_header(r)?;
+    let mut payload = vec![0u8; hdr.len as usize];
+    r.read_exact(&mut payload)
+        .map_err(|e| Error::Net(format!("reading {}-byte frame payload: {e}", hdr.len)))?;
+    Ok((hdr, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrips_through_encode_decode() {
+        let hdr = FrameHeader { kind: FrameKind::Data, rank: 3, round: 0xDEAD_BEEF_01, len: 4096 };
+        let decoded = FrameHeader::decode(&hdr.encode()).unwrap();
+        assert_eq!(decoded, hdr);
+    }
+
+    #[test]
+    fn frame_roundtrips_through_a_byte_stream() {
+        let mut buf = Vec::new();
+        let payload = vec![0xAB; 17];
+        write_frame(&mut buf, FrameKind::Control, 2, 9, &payload).unwrap();
+        assert_eq!(buf.len(), FRAME_HEADER_LEN + 17);
+        let (hdr, got) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(hdr.kind, FrameKind::Control);
+        assert_eq!(hdr.rank, 2);
+        assert_eq!(hdr.round, 9);
+        assert_eq!(got, payload);
+        // Empty payloads (Goodbye) also roundtrip.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Goodbye, 0, 0, &[]).unwrap();
+        let (hdr, got) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(hdr.kind, FrameKind::Goodbye);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let hdr = FrameHeader { kind: FrameKind::Hello, rank: 0, round: 0, len: 0 };
+        let mut h = hdr.encode();
+        h[0] ^= 0xFF;
+        let err = FrameHeader::decode(&h).expect_err("bad magic");
+        assert!(err.to_string().contains("magic"), "got: {err}");
+
+        let mut h = hdr.encode();
+        h[4] = 0xFE; // version 0x__FE
+        let err = FrameHeader::decode(&h).expect_err("bad version");
+        assert!(err.to_string().contains("version"), "got: {err}");
+
+        let mut h = hdr.encode();
+        h[6] = 200; // unknown kind
+        let err = FrameHeader::decode(&h).expect_err("bad kind");
+        assert!(err.to_string().contains("kind"), "got: {err}");
+
+        let mut h = hdr.encode();
+        h[7] = 1; // reserved flags
+        let err = FrameHeader::decode(&h).expect_err("reserved flags");
+        assert!(err.to_string().contains("flags"), "got: {err}");
+    }
+
+    #[test]
+    fn truncated_streams_error_instead_of_hanging() {
+        // Truncated header.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Data, 1, 1, &[1, 2, 3]).unwrap();
+        let short = &buf[..FRAME_HEADER_LEN - 5];
+        let err = read_frame(&mut &short[..]).expect_err("short header");
+        assert!(err.to_string().contains("header"), "got: {err}");
+        // Truncated payload.
+        let short = &buf[..FRAME_HEADER_LEN + 1];
+        let err = read_frame(&mut &short[..]).expect_err("short payload");
+        assert!(err.to_string().contains("payload"), "got: {err}");
+    }
+
+    #[test]
+    fn oversized_len_is_rejected_before_allocation() {
+        let hdr = FrameHeader { kind: FrameKind::Data, rank: 0, round: 0, len: 0 };
+        let mut h = hdr.encode();
+        h[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = FrameHeader::decode(&h).expect_err("oversized");
+        assert!(err.to_string().contains("cap"), "got: {err}");
+    }
+
+    #[test]
+    fn kinds_map_planes_and_roundtrip_u8() {
+        use crate::net::Plane;
+        assert_eq!(FrameKind::for_plane(Plane::Data), FrameKind::Data);
+        assert_eq!(FrameKind::for_plane(Plane::Control), FrameKind::Control);
+        assert_eq!(FrameKind::for_plane(Plane::Oob), FrameKind::Oob);
+        for k in [
+            FrameKind::Hello,
+            FrameKind::Welcome,
+            FrameKind::Peer,
+            FrameKind::Data,
+            FrameKind::Goodbye,
+            FrameKind::Abort,
+            FrameKind::Control,
+            FrameKind::Oob,
+        ] {
+            assert_eq!(FrameKind::from_u8(k as u8).unwrap(), k);
+        }
+        assert!(FrameKind::from_u8(99).is_err());
+    }
+}

@@ -1,21 +1,54 @@
-//! Simulated network substrate.
+//! Network substrate: the [`Transport`] seam, its two fabrics, framing,
+//! and the α-β cost model.
 //!
-//! The paper's testbed is 3 nodes over Ethernet with OpenMPI; ours is a
-//! single machine, so wire *time* is modeled while wire *contents* are
-//! exact: every message goes through the real `CODE ∘ Q` encoder, and the
-//! transport counts its exact bit length. The α-β cost model
-//! (`latency + bytes / bandwidth`) is the standard collective-communication
-//! model; defaults are calibrated to the paper's setup (1 GbE, 3 nodes).
+//! Wire *contents* are always exact — every message goes through the real
+//! `CODE ∘ Q` encoder and the transport counts its exact length. Wire
+//! *time* is modeled (the α-β `latency + bytes / bandwidth` model
+//! calibrated to the paper's 1 GbE / 3-node setup), but wire *movement*
+//! now has two real options:
 //!
+//! * [`transport`] — the [`Transport`] trait plus [`AllGather`], the
+//!   in-process barrier fabric for the threaded coordinator.
+//! * [`socket`] — [`SocketTransport`]: separate worker processes over
+//!   TCP or Unix-domain sockets, rank-0 rendezvous, full-mesh framed
+//!   connections, measured per-link bytes ([`MeasuredWire`]).
+//! * [`frame`] — the versioned length-framed message envelope the socket
+//!   fabric speaks (docs/WIRE.md).
 //! * [`NetModel`] — α-β timing for point-to-point and all-to-all rounds.
 //! * [`TrafficStats`] — exact bits/messages/simulated-seconds accounting.
-//! * [`transport`] — a real in-process allgather for the threaded
-//!   coordinator (shared slots + barrier), with the timing model layered on
-//!   top.
 
+pub mod frame;
+pub mod socket;
 pub mod transport;
 
-pub use transport::{AllGather, PoisonGuard};
+pub use socket::{connect_group, SocketHub, SocketOpts, SocketTransport};
+pub use transport::{AllGather, MeasuredWire, Plane, PoisonGuard, Transport};
+
+/// Serialize a slice of `f32` into little-endian wire bytes, appending to
+/// `out`. The shared primitive behind the fp32 compressor payloads and the
+/// out-of-band diagnostic exchange — one encoding, every fabric.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(4 * xs.len());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Decode little-endian `f32` wire bytes into `out`, requiring an exact
+/// length match (`bytes.len() == 4 * out.len()`).
+pub fn get_f32s_into(bytes: &[u8], out: &mut [f32]) -> crate::error::Result<()> {
+    if bytes.len() != 4 * out.len() {
+        return Err(crate::error::Error::Codec(format!(
+            "fp32 payload {} bytes for d = {}",
+            bytes.len(),
+            out.len()
+        )));
+    }
+    for (chunk, slot) in bytes.chunks_exact(4).zip(out.iter_mut()) {
+        *slot = f32::from_le_bytes(chunk.try_into().expect("4-byte chunk"));
+    }
+    Ok(())
+}
 
 /// Exact payload bits → wire bytes (the wire rounds every payload up to a
 /// whole byte). The one place this conversion lives; callers throughout
@@ -216,6 +249,25 @@ mod tests {
         assert_eq!(s.messages, 18);
         assert_eq!(s.rounds, 2);
         assert!((s.sim_net_time - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_wire_helpers_roundtrip_and_validate() {
+        let xs = [1.5f32, -0.25, f32::MIN_POSITIVE, 3.4e38];
+        let mut wire = Vec::new();
+        put_f32s(&mut wire, &xs);
+        assert_eq!(wire.len(), 16);
+        let mut back = [0f32; 4];
+        get_f32s_into(&wire, &mut back).unwrap();
+        assert_eq!(back, xs);
+        // Length mismatches are codec errors, not panics.
+        let mut short = [0f32; 3];
+        let err = get_f32s_into(&wire, &mut short).expect_err("length mismatch");
+        assert!(err.to_string().contains("fp32 payload"), "got: {err}");
+        // Empty roundtrip.
+        let mut empty = Vec::new();
+        put_f32s(&mut empty, &[]);
+        get_f32s_into(&empty, &mut []).unwrap();
     }
 
     #[test]

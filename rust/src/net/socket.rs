@@ -1,0 +1,1149 @@
+//! Multi-process socket transport: real length-framed wire messages
+//! between worker processes over TCP or Unix-domain sockets.
+//!
+//! Roles and handshake (see docs/WIRE.md §"Transport framing"):
+//!
+//! 1. Rank 0 binds the rendezvous address ([`SocketHub::bind`]) and waits
+//!    for `K-1` workers ([`SocketHub::accept`]).
+//! 2. Each rank `i ≥ 1` dials the rendezvous, binds its own peer listener,
+//!    and sends `HELLO {k, listener-addr}` ([`SocketTransport::connect`]).
+//! 3. Once everyone has arrived, rank 0 broadcasts `WELCOME` with the full
+//!    peer directory; the rendezvous connection itself becomes the
+//!    `(0, i)` mesh link.
+//! 4. Rank `i` then dials every lower rank `1 ≤ j < i` (sending a `PEER`
+//!    frame to identify itself) and accepts one connection from every
+//!    higher rank — a full mesh of `K·(K-1)/2` duplex connections.
+//!
+//! Exchanges are synchronous all-to-all rounds like the in-process
+//! [`crate::net::AllGather`]: every endpoint writes its payload to all
+//! peers (on a scoped writer thread, so no write-write deadlock) and
+//! reads one frame from each peer in rank order, validating
+//! kind/rank/round lockstep. A dead peer (EOF, `GOODBYE`/`ABORT`
+//! mid-round, read timeout) poisons the group: the local endpoint
+//! broadcasts `ABORT` with the reason and every subsequent exchange fails
+//! fast with [`Error::Net`] — the same semantics the threaded fabric gets
+//! from `PoisonGuard`, mapped onto real connections.
+//!
+//! The transport also *measures* what it moves: per-link data-plane
+//! payload bytes, aggregate control/out-of-band bytes, and frame-header
+//! overhead ([`Transport::measured`]) — the physical side of the ledger
+//! that tests and telemetry reconcile against the modeled
+//! [`crate::topo::LinkTraffic`].
+
+use crate::error::{Error, Result};
+use crate::net::frame::{read_frame, write_frame, FrameKind, FRAME_HEADER_LEN};
+use crate::net::transport::{MeasuredWire, Plane, Transport};
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{IpAddr, Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Socket transport tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SocketOpts {
+    /// Per-read/write socket timeout and handshake budget. A peer that
+    /// stays silent longer than this poisons the group instead of hanging
+    /// it. `None` disables socket timeouts (reads block forever — only
+    /// sensible in tests that control both ends).
+    pub timeout: Option<Duration>,
+}
+
+impl Default for SocketOpts {
+    fn default() -> Self {
+        SocketOpts { timeout: Some(Duration::from_secs(30)) }
+    }
+}
+
+impl SocketOpts {
+    /// Derive options from `[net]` config: `timeout_ms > 0` is used
+    /// verbatim; the block-forever default (`0`) falls back to this
+    /// type's 30 s default — a socket fabric should never hang on a dead
+    /// peer unless explicitly asked to.
+    pub fn from_config(net: &crate::config::NetConfig) -> SocketOpts {
+        SocketOpts { timeout: net.exchange_timeout().or(SocketOpts::default().timeout) }
+    }
+
+    fn handshake_deadline(&self) -> Instant {
+        Instant::now() + self.timeout.unwrap_or(Duration::from_secs(30))
+    }
+}
+
+/// A parsed transport address: `HOST:PORT` (TCP) or `unix:PATH`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Addr {
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl Addr {
+    pub fn parse(s: &str) -> Result<Addr> {
+        if let Some(path) = s.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                if path.is_empty() {
+                    return Err(Error::Net("empty unix socket path".into()));
+                }
+                return Ok(Addr::Unix(PathBuf::from(path)));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(Error::Net(
+                    "unix-domain sockets are not available on this platform".into(),
+                ));
+            }
+        }
+        let tcp_like =
+            s.rsplit_once(':').map(|(host, port)| !host.is_empty() && port.parse::<u16>().is_ok());
+        if tcp_like == Some(true) {
+            Ok(Addr::Tcp(s.to_string()))
+        } else {
+            Err(Error::Net(format!(
+                "bad transport address {s:?}: expected HOST:PORT or unix:PATH"
+            )))
+        }
+    }
+}
+
+impl fmt::Display for Addr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Addr::Tcp(a) => write!(f, "{a}"),
+            #[cfg(unix)]
+            Addr::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// One duplex connection, TCP or Unix-domain.
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn try_clone(&self) -> Result<Stream> {
+        let cloned = match self {
+            Stream::Tcp(s) => s.try_clone().map(Stream::Tcp),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.try_clone().map(Stream::Unix),
+        };
+        cloned.map_err(|e| Error::Net(format!("splitting connection into read/write halves: {e}")))
+    }
+
+    fn set_timeouts(&self, t: Option<Duration>) -> Result<()> {
+        let r = match self {
+            Stream::Tcp(s) => s.set_read_timeout(t).and_then(|_| s.set_write_timeout(t)),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t).and_then(|_| s.set_write_timeout(t)),
+        };
+        r.map_err(|e| Error::Net(format!("setting socket timeouts: {e}")))
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn shutdown(&self) {
+        match self {
+            Stream::Tcp(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            #[cfg(unix)]
+            Stream::Unix(s) => {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+    }
+
+    /// The local IP this connection uses (TCP only) — the address peer
+    /// listeners should bind so other ranks can reach them the same way.
+    fn local_ip(&self) -> Option<IpAddr> {
+        match self {
+            Stream::Tcp(s) => s.local_addr().ok().map(|a| a.ip()),
+            #[cfg(unix)]
+            Stream::Unix(_) => None,
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A listener on either family; Unix listeners unlink their path on drop.
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    fn bind(addr: &Addr) -> Result<Listener> {
+        match addr {
+            Addr::Tcp(a) => TcpListener::bind(a)
+                .map(Listener::Tcp)
+                .map_err(|e| Error::Net(format!("binding tcp listener on {a}: {e}"))),
+            #[cfg(unix)]
+            Addr::Unix(p) => {
+                // A stale socket file from a crashed previous run would
+                // make bind fail; it is dead by construction, remove it.
+                let _ = std::fs::remove_file(p);
+                UnixListener::bind(p).map(|l| Listener::Unix(l, p.clone())).map_err(|e| {
+                    Error::Net(format!("binding unix listener at {}: {e}", p.display()))
+                })
+            }
+        }
+    }
+
+    /// Bind the peer listener rank `rank` advertises in its HELLO: an
+    /// ephemeral TCP port on the same interface the rendezvous dial used,
+    /// or `<rendezvous-path>.r<rank>` for Unix sockets.
+    fn bind_peer(rendezvous: &Addr, conn: &Stream, rank: usize) -> Result<Listener> {
+        match rendezvous {
+            Addr::Tcp(_) => {
+                let ip = conn.local_ip().unwrap_or(IpAddr::from([127, 0, 0, 1]));
+                TcpListener::bind((ip, 0))
+                    .map(Listener::Tcp)
+                    .map_err(|e| Error::Net(format!("binding peer listener on {ip}: {e}")))
+            }
+            #[cfg(unix)]
+            Addr::Unix(p) => {
+                let mut path = p.as_os_str().to_os_string();
+                path.push(format!(".r{rank}"));
+                Listener::bind(&Addr::Unix(PathBuf::from(path)))
+            }
+        }
+    }
+
+    /// The address peers should dial, in [`Addr::parse`] syntax.
+    fn advertised(&self) -> Result<String> {
+        match self {
+            Listener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .map_err(|e| Error::Net(format!("reading bound tcp address: {e}"))),
+            #[cfg(unix)]
+            Listener::Unix(_, p) => Ok(format!("unix:{}", p.display())),
+        }
+    }
+
+    fn accept_deadline(&self, deadline: Instant, what: &str) -> Result<Stream> {
+        let set_nb = |nb: bool| match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.set_nonblocking(nb),
+        };
+        set_nb(true).map_err(|e| Error::Net(format!("listener nonblocking mode: {e}")))?;
+        loop {
+            let attempt = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+                #[cfg(unix)]
+                Listener::Unix(l, _) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            };
+            match attempt {
+                Ok(s) => {
+                    let _ = set_nb(false);
+                    s.set_nonblocking(false)
+                        .map_err(|e| Error::Net(format!("accepted stream blocking mode: {e}")))?;
+                    return Ok(s);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Net(format!("timed out {what}")));
+                    }
+                    thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(Error::Net(format!("accepting {what}: {e}"))),
+            }
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Dial `addr`, retrying until `deadline` — the target process may not
+/// have bound its listener yet (process startup is racy by nature).
+fn dial(addr: &Addr, deadline: Instant) -> Result<Stream> {
+    loop {
+        let attempt = match addr {
+            Addr::Tcp(a) => TcpStream::connect(a).map(Stream::Tcp),
+            #[cfg(unix)]
+            Addr::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
+        };
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(Error::Net(format!(
+                        "dialing {addr}: {e} (gave up at the handshake deadline)"
+                    )));
+                }
+                thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Time left until `deadline`, clamped to ≥ 1 ms (a zero socket timeout
+/// means "no timeout" to the OS, the opposite of what we want).
+fn remaining(deadline: Instant) -> Duration {
+    deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1))
+}
+
+// ---------------------------------------------------------------------------
+// Handshake payloads (HELLO / WELCOME / PEER bodies)
+// ---------------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    let b = s.as_bytes();
+    if b.len() > u16::MAX as usize {
+        return Err(Error::Net(format!("address too long for the wire: {s:?}")));
+    }
+    out.extend_from_slice(&(b.len() as u16).to_le_bytes());
+    out.extend_from_slice(b);
+    Ok(())
+}
+
+/// Bounds-checked little-endian reader for handshake payloads.
+struct HsReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> HsReader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        HsReader { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            return Err(Error::Net("truncated handshake payload".into()));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| Error::Net("non-UTF-8 address in handshake".into()))
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos != self.b.len() {
+            return Err(Error::Net("trailing bytes in handshake payload".into()));
+        }
+        Ok(())
+    }
+}
+
+/// HELLO body: `[k u32][addr_len u16][addr]` (sender rank is in the header).
+fn hello_payload(k: usize, addr: &str) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(6 + addr.len());
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    put_str(&mut out, addr)?;
+    Ok(out)
+}
+
+fn parse_hello(b: &[u8]) -> Result<(usize, String)> {
+    let mut r = HsReader::new(b);
+    let k = r.u32()? as usize;
+    let addr = r.string()?;
+    r.finish()?;
+    Ok((k, addr))
+}
+
+/// WELCOME body: `[k u32][n u32]` then `n × ([rank u32][addr_len u16][addr])`.
+fn welcome_payload(k: usize, peers: &[(usize, String)]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    out.extend_from_slice(&(peers.len() as u32).to_le_bytes());
+    for (rank, addr) in peers {
+        out.extend_from_slice(&(*rank as u32).to_le_bytes());
+        put_str(&mut out, addr)?;
+    }
+    Ok(out)
+}
+
+fn parse_welcome(b: &[u8]) -> Result<(usize, Vec<(usize, String)>)> {
+    let mut r = HsReader::new(b);
+    let k = r.u32()? as usize;
+    let n = r.u32()? as usize;
+    if n > k {
+        return Err(Error::Net(format!("WELCOME directory of {n} entries for a group of {k}")));
+    }
+    let mut peers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rank = r.u32()? as usize;
+        let addr = r.string()?;
+        peers.push((rank, addr));
+    }
+    r.finish()?;
+    Ok((k, peers))
+}
+
+// ---------------------------------------------------------------------------
+// Measured-byte bookkeeping
+// ---------------------------------------------------------------------------
+
+/// Raw byte/frame counters, updated under the connection lock. Link
+/// vectors are indexed by peer rank.
+struct Tally {
+    data_rounds: u64,
+    frames_sent: u64,
+    frames_recv: u64,
+    header_bytes: u64,
+    data_sent: Vec<u64>,
+    data_recv: Vec<u64>,
+    control_sent: u64,
+    control_recv: u64,
+    oob_sent: u64,
+    oob_recv: u64,
+}
+
+impl Tally {
+    fn new(k: usize) -> Tally {
+        Tally {
+            data_rounds: 0,
+            frames_sent: 0,
+            frames_recv: 0,
+            header_bytes: 0,
+            data_sent: vec![0; k],
+            data_recv: vec![0; k],
+            control_sent: 0,
+            control_recv: 0,
+            oob_sent: 0,
+            oob_recv: 0,
+        }
+    }
+
+    /// Handshake frames bill as out-of-band traffic.
+    fn on_send_handshake(&mut self, payload: usize) {
+        self.frames_sent += 1;
+        self.header_bytes += FRAME_HEADER_LEN as u64;
+        self.oob_sent += payload as u64;
+    }
+
+    fn on_recv_handshake(&mut self, payload: usize) {
+        self.frames_recv += 1;
+        self.header_bytes += FRAME_HEADER_LEN as u64;
+        self.oob_recv += payload as u64;
+    }
+
+    fn to_measured(&self, rank: usize) -> MeasuredWire {
+        let links = |v: &[u64], incoming: bool| {
+            v.iter()
+                .enumerate()
+                .filter(|&(p, &b)| p != rank && b > 0)
+                .map(|(p, &b)| (if incoming { (p, rank) } else { (rank, p) }, b))
+                .collect()
+        };
+        MeasuredWire {
+            rank,
+            data_rounds: self.data_rounds,
+            frames_sent: self.frames_sent,
+            frames_recv: self.frames_recv,
+            header_bytes: self.header_bytes,
+            data_sent: links(&self.data_sent, false),
+            data_recv: links(&self.data_recv, true),
+            control_sent: self.control_sent,
+            control_recv: self.control_recv,
+            oob_sent: self.oob_sent,
+            oob_recv: self.oob_recv,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous hub (rank 0)
+// ---------------------------------------------------------------------------
+
+/// Rank 0's side of the rendezvous: bind the group address, then
+/// [`SocketHub::accept`] blocks until all `K-1` workers have said HELLO
+/// and returns rank 0's assembled [`SocketTransport`].
+pub struct SocketHub {
+    listener: Listener,
+    k: usize,
+    opts: SocketOpts,
+}
+
+impl SocketHub {
+    pub fn bind(addr: &str, k: usize, opts: SocketOpts) -> Result<SocketHub> {
+        if k < 1 {
+            return Err(Error::Net("group size must be at least 1".into()));
+        }
+        let addr = Addr::parse(addr)?;
+        Ok(SocketHub { listener: Listener::bind(&addr)?, k, opts })
+    }
+
+    /// The actual bound address (ephemeral TCP ports resolved) — pass this
+    /// to the workers' `--connect`.
+    pub fn addr(&self) -> Result<String> {
+        self.listener.advertised()
+    }
+
+    /// Run the rendezvous to completion: collect HELLOs from ranks
+    /// `1..k`, broadcast the WELCOME directory, and become rank 0's
+    /// transport endpoint.
+    pub fn accept(self) -> Result<Arc<SocketTransport>> {
+        let k = self.k;
+        let deadline = self.opts.handshake_deadline();
+        let mut conns: Vec<Option<Stream>> = (0..k).map(|_| None).collect();
+        let mut dir: Vec<Option<String>> = vec![None; k];
+        let mut tally = Tally::new(k);
+        for _ in 1..k {
+            let mut s =
+                self.listener.accept_deadline(deadline, "waiting for workers at the rendezvous")?;
+            s.set_timeouts(Some(remaining(deadline)))?;
+            let (hdr, body) = read_frame(&mut s)?;
+            if hdr.kind != FrameKind::Hello {
+                return Err(Error::Net(format!(
+                    "expected HELLO at the rendezvous, got {:?}",
+                    hdr.kind
+                )));
+            }
+            let r = hdr.rank as usize;
+            if r == 0 || r >= k {
+                return Err(Error::Net(format!(
+                    "HELLO from out-of-range rank {r} (group of {k})"
+                )));
+            }
+            if conns[r].is_some() {
+                return Err(Error::Net(format!("two workers claimed rank {r}")));
+            }
+            let (their_k, peer_addr) = parse_hello(&body)?;
+            if their_k != k {
+                return Err(Error::Net(format!(
+                    "rank {r} thinks the group has {their_k} workers, the rendezvous expects {k}"
+                )));
+            }
+            tally.on_recv_handshake(body.len());
+            dir[r] = Some(peer_addr);
+            conns[r] = Some(s);
+        }
+        let peers: Vec<(usize, String)> =
+            (1..k).map(|r| (r, dir[r].clone().expect("rendezvous filled every slot"))).collect();
+        let welcome = welcome_payload(k, &peers)?;
+        for r in 1..k {
+            let s = conns[r].as_mut().expect("rendezvous filled every slot");
+            write_frame(s, FrameKind::Welcome, 0, 0, &welcome)?;
+            tally.on_send_handshake(welcome.len());
+        }
+        SocketTransport::assemble(0, k, conns, self.opts, tally)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The transport endpoint
+// ---------------------------------------------------------------------------
+
+/// Per-connection state: read/write halves per peer rank (own slot is
+/// `None`), the lockstep round counter, and the measured-byte tally.
+struct Io {
+    readers: Vec<Option<Stream>>,
+    writers: Vec<Option<Stream>>,
+    round: u64,
+    tally: Tally,
+}
+
+fn lock_io(m: &Mutex<Io>) -> MutexGuard<'_, Io> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One rank's endpoint of a multi-process socket group. Implements
+/// [`Transport`]; see the module docs for handshake and failure semantics.
+pub struct SocketTransport {
+    rank: usize,
+    k: usize,
+    io: Mutex<Io>,
+    poisoned: Mutex<Option<String>>,
+}
+
+impl SocketTransport {
+    /// Join the group as rank `rank ≥ 1`: dial the rank-0 rendezvous at
+    /// `addr`, handshake, and wire up the peer mesh. Blocks until the
+    /// whole group is connected or the handshake deadline passes.
+    pub fn connect(
+        addr: &str,
+        rank: usize,
+        k: usize,
+        opts: SocketOpts,
+    ) -> Result<Arc<SocketTransport>> {
+        if rank == 0 {
+            return Err(Error::Net(
+                "rank 0 hosts the rendezvous: use SocketHub::bind + accept".into(),
+            ));
+        }
+        if rank >= k {
+            return Err(Error::Net(format!("rank {rank} out of range for a group of {k}")));
+        }
+        let addr = Addr::parse(addr)?;
+        let deadline = opts.handshake_deadline();
+        let mut tally = Tally::new(k);
+        let mut rendezvous = dial(&addr, deadline)?;
+        rendezvous.set_timeouts(Some(remaining(deadline)))?;
+        let listener = Listener::bind_peer(&addr, &rendezvous, rank)?;
+        let my_addr = listener.advertised()?;
+        let hello = hello_payload(k, &my_addr)?;
+        write_frame(&mut rendezvous, FrameKind::Hello, rank as u32, 0, &hello)?;
+        tally.on_send_handshake(hello.len());
+        let (hdr, body) = read_frame(&mut rendezvous)?;
+        if hdr.kind != FrameKind::Welcome {
+            return Err(Error::Net(format!(
+                "expected WELCOME from the rendezvous, got {:?}",
+                hdr.kind
+            )));
+        }
+        if hdr.rank != 0 {
+            return Err(Error::Net(format!("WELCOME must come from rank 0, not {}", hdr.rank)));
+        }
+        tally.on_recv_handshake(body.len());
+        let (their_k, peer_dir) = parse_welcome(&body)?;
+        if their_k != k {
+            return Err(Error::Net(format!(
+                "rendezvous runs a group of {their_k}, this worker expected {k}"
+            )));
+        }
+        let mut conns: Vec<Option<Stream>> = (0..k).map(|_| None).collect();
+        conns[0] = Some(rendezvous);
+        // Mesh rule: rank i dials every lower rank 1 ≤ j < i; the PEER
+        // frame tells the listener who arrived.
+        for (peer, peer_addr) in &peer_dir {
+            let peer = *peer;
+            if peer == 0 || peer >= k {
+                return Err(Error::Net(format!(
+                    "WELCOME directory names out-of-range rank {peer}"
+                )));
+            }
+            if peer >= rank {
+                continue;
+            }
+            let mut s = dial(&Addr::parse(peer_addr)?, deadline)?;
+            s.set_timeouts(Some(remaining(deadline)))?;
+            write_frame(&mut s, FrameKind::Peer, rank as u32, 0, &(k as u32).to_le_bytes())?;
+            tally.on_send_handshake(4);
+            if conns[peer].is_some() {
+                return Err(Error::Net(format!("duplicate directory entry for rank {peer}")));
+            }
+            conns[peer] = Some(s);
+        }
+        // ... and accepts one connection from every higher rank.
+        for _ in rank + 1..k {
+            let mut s = listener.accept_deadline(deadline, "waiting for higher-rank peers")?;
+            s.set_timeouts(Some(remaining(deadline)))?;
+            let (hdr, body) = read_frame(&mut s)?;
+            if hdr.kind != FrameKind::Peer {
+                return Err(Error::Net(format!(
+                    "expected PEER on the mesh listener, got {:?}",
+                    hdr.kind
+                )));
+            }
+            let peer = hdr.rank as usize;
+            if peer <= rank || peer >= k {
+                return Err(Error::Net(format!(
+                    "PEER from unexpected rank {peer} (I am rank {rank} of {k})"
+                )));
+            }
+            if body.len() != 4
+                || u32::from_le_bytes(body[..4].try_into().expect("4 bytes")) != k as u32
+            {
+                return Err(Error::Net(format!("PEER from rank {peer} disagrees on group size")));
+            }
+            if conns[peer].is_some() {
+                return Err(Error::Net(format!("rank {peer} connected twice")));
+            }
+            tally.on_recv_handshake(body.len());
+            conns[peer] = Some(s);
+        }
+        // The listener drops here, unlinking its unix path if any.
+        Self::assemble(rank, k, conns, opts, tally)
+    }
+
+    /// Split every connection into read/write halves and box up the
+    /// endpoint. `conns[rank]` must be `None` (no connection to self).
+    fn assemble(
+        rank: usize,
+        k: usize,
+        conns: Vec<Option<Stream>>,
+        opts: SocketOpts,
+        tally: Tally,
+    ) -> Result<Arc<SocketTransport>> {
+        let mut readers = Vec::with_capacity(k);
+        let mut writers = Vec::with_capacity(k);
+        for (p, conn) in conns.into_iter().enumerate() {
+            match conn {
+                None => {
+                    debug_assert_eq!(p, rank, "only the own-rank slot may be empty");
+                    readers.push(None);
+                    writers.push(None);
+                }
+                Some(s) => {
+                    s.set_timeouts(opts.timeout)?;
+                    readers.push(Some(s.try_clone()?));
+                    writers.push(Some(s));
+                }
+            }
+        }
+        Ok(Arc::new(SocketTransport {
+            rank,
+            k,
+            io: Mutex::new(Io { readers, writers, round: 0, tally }),
+            poisoned: Mutex::new(None),
+        }))
+    }
+
+    /// The rank this endpoint was wired up as.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poison_reason(&self) -> Option<String> {
+        self.poisoned.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Record the first poison reason (later ones lose).
+    fn set_poisoned(&self, reason: &str) {
+        let mut p = self.poisoned.lock().unwrap_or_else(|e| e.into_inner());
+        if p.is_none() {
+            *p = Some(reason.to_string());
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn peers(&self) -> usize {
+        self.k
+    }
+
+    fn exchange(&self, rank: usize, payload: Vec<u8>, plane: Plane) -> Result<Vec<Arc<Vec<u8>>>> {
+        if rank != self.rank {
+            return Err(Error::Net(format!(
+                "this endpoint is rank {}, cannot exchange as rank {rank}",
+                self.rank
+            )));
+        }
+        if let Some(why) = self.poison_reason() {
+            return Err(Error::Net(format!("transport poisoned: {why}")));
+        }
+        let k = self.k;
+        let mut io = lock_io(&self.io);
+        let Io { readers, writers, round, tally } = &mut *io;
+        let this_round = *round;
+        let kind = FrameKind::for_plane(plane);
+        let payload = Arc::new(payload);
+
+        // Writer runs on a scoped thread while this thread reads: with
+        // everyone writing to everyone, a sequential write-then-read would
+        // deadlock once payloads outgrow the OS socket buffers.
+        let outcome: std::result::Result<Vec<Arc<Vec<u8>>>, String> = thread::scope(|s| {
+            let to_send = payload.clone();
+            let writer = s.spawn(move || -> std::result::Result<(), String> {
+                for p in 0..k {
+                    if p == rank {
+                        continue;
+                    }
+                    let w = writers[p].as_mut().expect("mesh has a conn per peer");
+                    write_frame(w, kind, rank as u32, this_round, &to_send)
+                        .map_err(|e| format!("round {this_round}: sending to peer {p}: {e}"))?;
+                }
+                Ok(())
+            });
+            let mut slots: Vec<Option<Arc<Vec<u8>>>> = vec![None; k];
+            slots[rank] = Some(payload.clone());
+            let mut read_err: Option<String> = None;
+            for p in 0..k {
+                if p == rank {
+                    continue;
+                }
+                let r = readers[p].as_mut().expect("mesh has a conn per peer");
+                match read_frame(r) {
+                    Err(e) => {
+                        read_err =
+                            Some(format!("round {this_round}: receiving from peer {p}: {e}"));
+                        break;
+                    }
+                    Ok((hdr, body)) => {
+                        if hdr.kind == FrameKind::Abort {
+                            read_err = Some(format!(
+                                "peer {p} aborted: {}",
+                                String::from_utf8_lossy(&body)
+                            ));
+                            break;
+                        }
+                        if hdr.kind == FrameKind::Goodbye {
+                            read_err = Some(format!(
+                                "peer {p} closed the connection during round {this_round}"
+                            ));
+                            break;
+                        }
+                        if hdr.kind != kind || hdr.rank as usize != p || hdr.round != this_round {
+                            read_err = Some(format!(
+                                "lockstep violation: expected {kind:?} rank {p} round \
+                                 {this_round}, got {:?} rank {} round {}",
+                                hdr.kind, hdr.rank, hdr.round
+                            ));
+                            break;
+                        }
+                        slots[p] = Some(Arc::new(body));
+                    }
+                }
+            }
+            let wrote = writer.join().unwrap_or_else(|_| Err("writer thread panicked".into()));
+            if let Some(e) = read_err {
+                return Err(e);
+            }
+            wrote?;
+            Ok(slots.into_iter().map(|s| s.expect("all slots filled")).collect())
+        });
+
+        match outcome {
+            Ok(out) => {
+                let n = (k - 1) as u64;
+                tally.frames_sent += n;
+                tally.frames_recv += n;
+                tally.header_bytes += (FRAME_HEADER_LEN as u64) * 2 * n;
+                let sent = payload.len() as u64;
+                let recv: u64 = out
+                    .iter()
+                    .enumerate()
+                    .filter(|&(p, _)| p != rank)
+                    .map(|(_, b)| b.len() as u64)
+                    .sum();
+                match plane {
+                    Plane::Data => {
+                        tally.data_rounds += 1;
+                        for p in 0..k {
+                            if p != rank {
+                                tally.data_sent[p] += sent;
+                                tally.data_recv[p] += out[p].len() as u64;
+                            }
+                        }
+                    }
+                    Plane::Control => {
+                        tally.control_sent += sent * n;
+                        tally.control_recv += recv;
+                    }
+                    Plane::Oob => {
+                        tally.oob_sent += sent * n;
+                        tally.oob_recv += recv;
+                    }
+                }
+                *round += 1;
+                Ok(out)
+            }
+            Err(reason) => {
+                // Tell everyone why before surfacing the error; peers
+                // blocked mid-read get the ABORT instead of a timeout.
+                self.set_poisoned(&reason);
+                for p in 0..k {
+                    if p == rank {
+                        continue;
+                    }
+                    if let Some(w) = writers[p].as_mut() {
+                        let _ = write_frame(
+                            w,
+                            FrameKind::Abort,
+                            rank as u32,
+                            this_round,
+                            reason.as_bytes(),
+                        );
+                    }
+                }
+                Err(Error::Net(format!("transport poisoned: {reason}")))
+            }
+        }
+    }
+
+    fn poison(&self, reason: &str) {
+        self.set_poisoned(reason);
+        // Best effort: if an exchange currently holds the lock it will
+        // broadcast its own ABORT on the way out; otherwise tell peers now.
+        if let Ok(mut io) = self.io.try_lock() {
+            let Io { writers, round, .. } = &mut *io;
+            for w in writers.iter_mut().flatten() {
+                let _ =
+                    write_frame(w, FrameKind::Abort, self.rank as u32, *round, reason.as_bytes());
+            }
+        }
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poison_reason().is_some()
+    }
+
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+
+    fn measured(&self) -> Option<MeasuredWire> {
+        Some(lock_io(&self.io).tally.to_measured(self.rank))
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        // &mut self: no other thread can hold the locks.
+        let reason = match self.poisoned.get_mut() {
+            Ok(g) => g.clone(),
+            Err(e) => e.into_inner().clone(),
+        };
+        let io = match self.io.get_mut() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        };
+        let round = io.round;
+        for w in io.writers.iter_mut().flatten() {
+            let _ = match &reason {
+                None => write_frame(w, FrameKind::Goodbye, self.rank as u32, round, &[]),
+                Some(r) => write_frame(w, FrameKind::Abort, self.rank as u32, round, r.as_bytes()),
+            };
+        }
+        for s in io.writers.iter().flatten().chain(io.readers.iter().flatten()) {
+            s.shutdown();
+        }
+    }
+}
+
+/// Spin up a whole socket group inside one process (rank 0's hub plus
+/// `k-1` connecting threads) — the building block for tests and the
+/// in-process side of parity checks. Returned endpoints are ordered by
+/// rank.
+pub fn connect_group(addr: &str, k: usize, opts: SocketOpts) -> Result<Vec<Arc<SocketTransport>>> {
+    let hub = SocketHub::bind(addr, k, opts)?;
+    let actual = hub.addr()?;
+    thread::scope(|s| -> Result<Vec<Arc<SocketTransport>>> {
+        let joiners: Vec<_> = (1..k)
+            .map(|r| {
+                let a = actual.clone();
+                s.spawn(move || SocketTransport::connect(&a, r, k, opts))
+            })
+            .collect();
+        let mut group = vec![hub.accept()?];
+        for j in joiners {
+            group.push(j.join().map_err(|_| Error::Net("connector thread panicked".into()))??);
+        }
+        Ok(group)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unique per-test unix socket address (no global clock/randomness:
+    /// pid + a process-local counter is collision-free enough).
+    #[cfg(unix)]
+    fn uds_addr() -> String {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static N: AtomicUsize = AtomicUsize::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        format!(
+            "unix:{}/qgenx-sock-test-{}-{n}.sock",
+            std::env::temp_dir().display(),
+            std::process::id()
+        )
+    }
+
+    #[test]
+    fn addr_parse_accepts_tcp_and_unix_rejects_garbage() {
+        assert_eq!(Addr::parse("127.0.0.1:4000").unwrap(), Addr::Tcp("127.0.0.1:4000".into()));
+        assert_eq!(Addr::parse("node7:9").unwrap(), Addr::Tcp("node7:9".into()));
+        #[cfg(unix)]
+        assert_eq!(Addr::parse("unix:/tmp/x.sock").unwrap(), Addr::Unix("/tmp/x.sock".into()));
+        for bad in ["", "no-port", ":4000", "host:notaport", "unix:"] {
+            assert!(Addr::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn handshake_payloads_roundtrip() {
+        let h = hello_payload(4, "10.0.0.7:5000").unwrap();
+        assert_eq!(parse_hello(&h).unwrap(), (4, "10.0.0.7:5000".to_string()));
+        let w = welcome_payload(3, &[(1, "a:1".into()), (2, "b:2".into())]).unwrap();
+        let (k, dir) = parse_welcome(&w).unwrap();
+        assert_eq!(k, 3);
+        assert_eq!(dir, vec![(1, "a:1".to_string()), (2, "b:2".to_string())]);
+        // Truncations error instead of panicking.
+        assert!(parse_hello(&h[..3]).is_err());
+        assert!(parse_welcome(&w[..w.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn tcp_group_exchanges_all_planes_and_measures() {
+        let k = 3;
+        let group = connect_group("127.0.0.1:0", k, SocketOpts::default()).unwrap();
+        thread::scope(|s| {
+            for (rank, t) in group.iter().enumerate() {
+                let t = t.clone();
+                s.spawn(move || {
+                    for _round in 0..2 {
+                        // Rank r contributes (r+1)*3 bytes of its own label.
+                        let payload = vec![rank as u8; (rank + 1) * 3];
+                        let got = t.exchange(rank, payload, Plane::Data).unwrap();
+                        assert_eq!(got.len(), k);
+                        for (p, b) in got.iter().enumerate() {
+                            assert_eq!(b.as_slice(), &vec![p as u8; (p + 1) * 3][..]);
+                        }
+                    }
+                    let got = t.exchange(rank, vec![0xC0, rank as u8], Plane::Control).unwrap();
+                    assert_eq!(got[1].as_slice(), &[0xC0, 1]);
+                });
+            }
+        });
+        let views: Vec<_> = group.iter().map(|t| t.measured().unwrap()).collect();
+        for (rank, v) in views.iter().enumerate() {
+            assert_eq!(v.rank, rank);
+            assert_eq!(v.data_rounds, 2);
+            assert_eq!(v.data_bytes_sent(), (2 * (rank + 1) * 3 * (k - 1)) as u64);
+            assert_eq!(v.control_sent, (2 * (k - 1)) as u64);
+            assert!(v.header_bytes > 0, "handshake + rounds have framed overhead");
+        }
+        // Directed-link totals: every (src, dst) carries src's two payloads,
+        // and receivers saw exactly what senders measured.
+        let links = MeasuredWire::merge_links(&views);
+        assert_eq!(links.len(), k * (k - 1));
+        assert_eq!(links[&(2, 0)], 18);
+        for v in &views {
+            for &((src, dst), b) in &v.data_recv {
+                assert_eq!(links[&(src, dst)], b, "recv view of ({src},{dst}) matches send view");
+            }
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_domain_group_smoke() {
+        let addr = uds_addr();
+        let group = connect_group(&addr, 2, SocketOpts::default()).unwrap();
+        assert_eq!(group[0].kind(), "socket");
+        assert_eq!(group[1].rank(), 1);
+        thread::scope(|s| {
+            let a = group[0].clone();
+            let b = group[1].clone();
+            s.spawn(move || {
+                let got = a.exchange(0, vec![10], Plane::Data).unwrap();
+                assert_eq!(got[1].as_slice(), &[11]);
+            });
+            s.spawn(move || {
+                let got = b.exchange(1, vec![11], Plane::Data).unwrap();
+                assert_eq!(got[0].as_slice(), &[10]);
+            });
+        });
+    }
+
+    #[test]
+    fn departed_peer_poisons_the_round() {
+        let k = 3;
+        let mut group = connect_group("127.0.0.1:0", k, SocketOpts::default()).unwrap();
+        // Rank 2 leaves cleanly (GOODBYE) before the round starts.
+        drop(group.remove(2));
+        thread::scope(|s| {
+            for (rank, t) in group.iter().enumerate() {
+                let t = t.clone();
+                s.spawn(move || {
+                    let err = t
+                        .exchange(rank, vec![rank as u8], Plane::Data)
+                        .expect_err("round with a departed peer must fail");
+                    let msg = err.to_string();
+                    assert!(msg.contains("poisoned"), "got: {msg}");
+                    assert!(
+                        msg.contains("closed the connection") || msg.contains("aborted"),
+                        "got: {msg}"
+                    );
+                });
+            }
+        });
+        assert!(group[0].is_poisoned());
+        // Fails fast forever after.
+        let err = group[0].exchange(0, vec![0], Plane::Data).expect_err("dead group");
+        assert!(err.to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn poison_reason_reaches_blocked_peers() {
+        let group = connect_group("127.0.0.1:0", 2, SocketOpts::default()).unwrap();
+        let t1 = group[1].clone();
+        let blocked = thread::spawn(move || t1.exchange(1, vec![1], Plane::Data));
+        group[0].poison("operator kill");
+        let err = blocked.join().unwrap().expect_err("poison interrupts the round");
+        let msg = err.to_string();
+        assert!(msg.contains("operator kill"), "reason travels on the ABORT frame: {msg}");
+        assert!(group[0].exchange(0, vec![0], Plane::Data).is_err(), "poisoner is dead too");
+    }
+
+    #[test]
+    fn connect_gives_up_at_the_deadline() {
+        let opts = SocketOpts { timeout: Some(Duration::from_millis(200)) };
+        let begun = Instant::now();
+        // Port 1 (tcpmux) is never bound in the test environment.
+        let err =
+            SocketTransport::connect("127.0.0.1:1", 1, 2, opts).expect_err("nobody listening");
+        assert!(begun.elapsed() < Duration::from_secs(20), "deadline must bound the retry loop");
+        assert!(err.to_string().contains("dialing"), "got: {err}");
+    }
+
+    #[test]
+    fn single_rank_group_is_trivial() {
+        // k = 1 wires no connections; exchange returns the own payload.
+        // (Useful for misuse tests higher up the stack.)
+        let group = connect_group("127.0.0.1:0", 1, SocketOpts::default()).unwrap();
+        let got = group[0].exchange(0, vec![5, 5], Plane::Data).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].as_slice(), &[5, 5]);
+        let err = group[0].exchange(1, vec![0], Plane::Data).expect_err("wrong rank");
+        assert!(err.to_string().contains("rank"), "got: {err}");
+    }
+}

@@ -1,6 +1,6 @@
-//! In-process synchronous allgather for the threaded coordinator.
+//! The [`Transport`] seam and its in-process implementation.
 //!
-//! `K` worker threads each deposit one payload per round and receive
+//! `K` worker endpoints each deposit one payload per round and receive
 //! everyone's payloads — the exact communication pattern of Algorithm 1
 //! ("each processor receives stochastic dual vectors from all other
 //! processors"). Payloads are `Vec<u8>` — real encoded wire bytes, so the
@@ -9,21 +9,143 @@
 //! [`crate::topo::Collective`], which uses this full exchange as the
 //! physical substrate and applies the logical delivery pattern.
 //!
-//! Implementation: a two-phase (deposit → read) sense-reversing barrier on
-//! one mutex + condvar. A worker that panics mid-round would leave its
-//! peers blocked forever with a plain `std::sync::Barrier`; instead every
-//! worker holds a [`PoisonGuard`] whose `Drop` during a panic marks the
-//! group poisoned and wakes all waiters, which then return
-//! [`Error::Coordinator`] — the failure propagates instead of deadlocking.
-//! (Clean `Err` returns don't unwind, so the coordinator additionally calls
-//! [`AllGather::poison`] when a worker exits with an error.)
+//! Two implementations share the trait:
+//!
+//! * [`AllGather`] — the in-process (loopback-of-threads) barrier below:
+//!   a two-phase (deposit → read) sense-reversing barrier on one mutex +
+//!   condvar. The historical threaded fabric; zero wire overhead.
+//! * [`crate::net::SocketTransport`] — real length-framed messages over
+//!   TCP or Unix-domain sockets between separate OS processes.
+//!
+//! Failure semantics are shared: a worker that panics mid-round would
+//! leave its peers blocked forever with a plain `std::sync::Barrier`;
+//! instead every worker holds a [`PoisonGuard`] whose `Drop` during a
+//! panic marks the group poisoned and wakes/aborts all waiters, which then
+//! return [`Error::Net`] — the failure propagates instead of deadlocking.
+//! (Clean `Err` returns don't unwind, so coordinators additionally call
+//! [`Transport::poison`] when a worker exits with an error.) A peer that
+//! simply never arrives is covered by the configurable exchange timeout
+//! ([`AllGather::with_timeout`], socket read timeouts), which feeds the
+//! same poison path.
 
 use crate::error::{Error, Result};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
-/// One synchronous allgather group of `k` participants.
+/// Which plane a round belongs to. The socket transport stamps it into the
+/// frame header (a cheap lockstep check: every rank must be exchanging the
+/// same kind of round) and splits its measured byte tallies by it, so the
+/// *measured* data-plane bytes reconcile against the *modeled*
+/// [`crate::topo::LinkTraffic`] without control/diagnostic contamination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    /// Data-plane payloads (encoded dual vectors / model deltas) — the
+    /// traffic the paper's theorems bound; billed per link.
+    Data,
+    /// Control-plane pooled sufficient statistics — billed full-mesh in
+    /// aggregate ([`crate::net::TrafficStats`]).
+    Control,
+    /// Out-of-band rounds (eval diagnostics, checkpoint barriers) —
+    /// deliberately never billed to traffic.
+    Oob,
+}
+
+/// Byte counts actually observed on a physical wire by one endpoint,
+/// split by [`Plane`]. `None` for in-process transports (nothing crosses a
+/// wire); the socket transport reports framed reality here, reconciled in
+/// tests and telemetry against the modeled `LinkTraffic` accounting.
+///
+/// Links are directed `(sender, receiver)` pairs, matching
+/// [`crate::topo::Link`]. Each endpoint sees only its incident links;
+/// [`MeasuredWire::merge_links`] unions a whole group's views.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MeasuredWire {
+    /// The reporting endpoint's rank.
+    pub rank: usize,
+    /// Data-plane rounds completed.
+    pub data_rounds: u64,
+    /// Frames written / read by this endpoint (all planes).
+    pub frames_sent: u64,
+    pub frames_recv: u64,
+    /// Frame-header overhead bytes, both directions.
+    pub header_bytes: u64,
+    /// Data-plane payload bytes per outgoing link `(rank, peer)`.
+    pub data_sent: Vec<((usize, usize), u64)>,
+    /// Data-plane payload bytes per incoming link `(peer, rank)`.
+    pub data_recv: Vec<((usize, usize), u64)>,
+    /// Control-plane payload bytes, both directions (aggregate).
+    pub control_sent: u64,
+    pub control_recv: u64,
+    /// Out-of-band payload bytes, both directions (aggregate).
+    pub oob_sent: u64,
+    pub oob_recv: u64,
+}
+
+impl MeasuredWire {
+    /// Total data-plane payload bytes this endpoint put on the wire.
+    pub fn data_bytes_sent(&self) -> u64 {
+        self.data_sent.iter().map(|&(_, b)| b).sum()
+    }
+
+    /// Total data-plane payload bytes this endpoint received.
+    pub fn data_bytes_recv(&self) -> u64 {
+        self.data_recv.iter().map(|&(_, b)| b).sum()
+    }
+
+    /// Union the *sent* link tallies of every endpoint of a group into
+    /// global directed-link totals — the measured counterpart of
+    /// [`crate::topo::LinkTraffic::totals`] on a full-mesh physical fabric.
+    pub fn merge_links(
+        views: &[MeasuredWire],
+    ) -> std::collections::BTreeMap<(usize, usize), u64> {
+        let mut out = std::collections::BTreeMap::new();
+        for v in views {
+            for &(link, bytes) in &v.data_sent {
+                *out.entry(link).or_insert(0) += bytes;
+            }
+        }
+        out
+    }
+}
+
+/// How one round of encoded payloads moves between `K` ranks: the seam the
+/// [`crate::coordinator::RoundEngine`]'s `Fabric::Transport` arm and every
+/// [`crate::topo::Collective`] run over, with two implementations — the
+/// in-process [`AllGather`] barrier and the multi-process
+/// [`crate::net::SocketTransport`]. See the module docs for the shared
+/// poison/lifecycle semantics.
+pub trait Transport: Send + Sync {
+    /// Group size `K`.
+    fn peers(&self) -> usize;
+
+    /// Exchange: endpoint `rank` contributes `payload`, gets back all `K`
+    /// payloads (rank-indexed, including its own). Blocks until everyone
+    /// arrives, the configured timeout elapses, or the group is poisoned —
+    /// the latter two surface as [`Error::Net`].
+    fn exchange(&self, rank: usize, payload: Vec<u8>, plane: Plane) -> Result<Vec<Arc<Vec<u8>>>>;
+
+    /// Mark the group poisoned (sticky, first reason wins) and release
+    /// every blocked or future exchange with an error.
+    fn poison(&self, reason: &str);
+
+    fn is_poisoned(&self) -> bool;
+
+    /// Implementation name for diagnostics/telemetry (`"inproc"`, `"socket"`).
+    fn kind(&self) -> &'static str;
+
+    /// Physical wire bytes observed by this endpoint; `None` when nothing
+    /// actually crosses a wire (in-process transports).
+    fn measured(&self) -> Option<MeasuredWire> {
+        None
+    }
+}
+
+/// One in-process synchronous allgather group of `k` participants — the
+/// [`Transport`] implementation behind the threaded coordinator.
 pub struct AllGather {
     k: usize,
+    /// Max wait for peers inside one exchange; `None` blocks forever.
+    timeout: Option<Duration>,
     state: Mutex<State>,
     cv: Condvar,
 }
@@ -36,21 +158,31 @@ struct State {
     read: usize,
     /// Round counter; readers wait on it to flip before re-entering.
     generation: u64,
-    /// Set when any participant panicked; sticky.
-    poisoned: bool,
+    /// First poison reason; sticky.
+    poisoned: Option<String>,
 }
 
 impl AllGather {
     pub fn new(k: usize) -> Arc<Self> {
+        Self::with_timeout(k, None)
+    }
+
+    /// Like [`Self::new`], with a cap on how long one [`Self::exchange`]
+    /// waits for its peers. A peer that never arrives (wedged oracle, dead
+    /// thread that neither panicked nor errored) then poisons the group
+    /// with a timeout [`Error::Net`] instead of blocking forever.
+    /// `None` preserves the historical block-forever behavior.
+    pub fn with_timeout(k: usize, timeout: Option<Duration>) -> Arc<Self> {
         assert!(k >= 1);
         Arc::new(AllGather {
             k,
+            timeout,
             state: Mutex::new(State {
                 payloads: vec![None; k],
                 deposited: 0,
                 read: 0,
                 generation: 0,
-                poisoned: false,
+                poisoned: None,
             }),
             cv: Condvar::new(),
         })
@@ -63,18 +195,20 @@ impl AllGather {
     /// RAII handle that poisons the group if dropped during a panic.
     /// Every worker thread should hold one for the duration of its run.
     pub fn guard(self: &Arc<Self>) -> PoisonGuard {
-        PoisonGuard(self.clone())
+        PoisonGuard::new(self.clone())
     }
 
-    /// Mark the group poisoned and wake all waiters.
-    pub fn poison(&self) {
+    /// Mark the group poisoned (first reason sticks) and wake all waiters.
+    pub fn poison(&self, reason: &str) {
         let mut s = self.lock();
-        s.poisoned = true;
+        if s.poisoned.is_none() {
+            s.poisoned = Some(reason.to_string());
+        }
         self.cv.notify_all();
     }
 
     pub fn is_poisoned(&self) -> bool {
-        self.lock().poisoned
+        self.lock().poisoned.is_some()
     }
 
     /// Deposits outstanding in the current round (diagnostics/tests).
@@ -88,24 +222,57 @@ impl AllGather {
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    fn wait<'a>(&self, g: MutexGuard<'a, State>) -> MutexGuard<'a, State> {
-        self.cv.wait(g).unwrap_or_else(|e| e.into_inner())
+    fn poison_err(s: &State) -> Error {
+        let why = s.poisoned.as_deref().unwrap_or("a peer worker panicked mid-round");
+        Error::Net(format!("transport poisoned: {why}"))
     }
 
-    fn poison_err() -> Error {
-        Error::Coordinator("allgather poisoned: a peer worker panicked mid-round".into())
+    /// One condvar wait bounded by `deadline`. On expiry the group is
+    /// poisoned in place (peers must not keep waiting for us either) and
+    /// the timeout surfaces as [`Error::Net`].
+    fn wait_deadline<'a>(
+        &self,
+        g: MutexGuard<'a, State>,
+        deadline: Option<Instant>,
+        phase: &str,
+    ) -> Result<MutexGuard<'a, State>> {
+        match deadline {
+            None => Ok(self.cv.wait(g).unwrap_or_else(|e| e.into_inner())),
+            Some(dl) => {
+                let left = dl.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    let mut g = g;
+                    let reason = format!(
+                        "exchange timed out after {:?} {phase} ({}/{} deposits in)",
+                        self.timeout.unwrap_or_default(),
+                        g.deposited,
+                        self.k
+                    );
+                    if g.poisoned.is_none() {
+                        g.poisoned = Some(reason.clone());
+                    }
+                    self.cv.notify_all();
+                    return Err(Error::Net(format!("transport poisoned: {reason}")));
+                }
+                let (g, _timed_out) =
+                    self.cv.wait_timeout(g, left).unwrap_or_else(|e| e.into_inner());
+                Ok(g)
+            }
+        }
     }
 
     /// Exchange: worker `rank` contributes `payload`, gets back all `k`
     /// payloads (rank-indexed, including its own). Blocks until everyone
-    /// arrives. Errors on double-deposit within a round and when the group
-    /// is poisoned by a peer's panic.
+    /// arrives or the configured timeout elapses. Errors on double-deposit
+    /// within a round and when the group is poisoned (peer panic, peer
+    /// error exit, or a timed-out peer).
     pub fn exchange(&self, rank: usize, payload: Vec<u8>) -> Result<Vec<Arc<Vec<u8>>>> {
         assert!(rank < self.k);
+        let deadline = self.timeout.map(|d| Instant::now() + d);
         // Phase 1: deposit, then wait until all k deposits are in.
         let mut s = self.lock();
-        if s.poisoned {
-            return Err(Self::poison_err());
+        if s.poisoned.is_some() {
+            return Err(Self::poison_err(&s));
         }
         if s.payloads[rank].is_some() {
             return Err(Error::Coordinator(format!(
@@ -117,11 +284,11 @@ impl AllGather {
         if s.deposited == self.k {
             self.cv.notify_all();
         }
-        while s.deposited < self.k && !s.poisoned {
-            s = self.wait(s);
+        while s.deposited < self.k && s.poisoned.is_none() {
+            s = self.wait_deadline(s, deadline, "waiting for peer deposits")?;
         }
-        if s.poisoned {
-            return Err(Self::poison_err());
+        if s.poisoned.is_some() {
+            return Err(Self::poison_err(&s));
         }
         let out: Vec<Arc<Vec<u8>>> =
             s.payloads.iter().map(|p| p.clone().expect("slot must be filled")).collect();
@@ -139,25 +306,55 @@ impl AllGather {
             self.cv.notify_all();
         } else {
             let gen = s.generation;
-            while s.generation == gen && !s.poisoned {
-                s = self.wait(s);
+            while s.generation == gen && s.poisoned.is_none() {
+                s = self.wait_deadline(s, deadline, "waiting for peers to finish reading")?;
             }
-            if s.poisoned {
-                return Err(Self::poison_err());
+            if s.poisoned.is_some() {
+                return Err(Self::poison_err(&s));
             }
         }
         Ok(out)
     }
 }
 
-/// Dropping this during a panic poisons the [`AllGather`] group so peers
-/// blocked in [`AllGather::exchange`] error out instead of deadlocking.
-pub struct PoisonGuard(Arc<AllGather>);
+impl Transport for AllGather {
+    fn peers(&self) -> usize {
+        self.k
+    }
+
+    fn exchange(&self, rank: usize, payload: Vec<u8>, _plane: Plane) -> Result<Vec<Arc<Vec<u8>>>> {
+        // In-process slots carry no frames; the plane only matters to
+        // transports that bill a physical wire.
+        AllGather::exchange(self, rank, payload)
+    }
+
+    fn poison(&self, reason: &str) {
+        AllGather::poison(self, reason)
+    }
+
+    fn is_poisoned(&self) -> bool {
+        AllGather::is_poisoned(self)
+    }
+
+    fn kind(&self) -> &'static str {
+        "inproc"
+    }
+}
+
+/// Dropping this during a panic poisons the [`Transport`] group so peers
+/// blocked in an exchange error out instead of deadlocking.
+pub struct PoisonGuard(Arc<dyn Transport>);
+
+impl PoisonGuard {
+    pub fn new(transport: Arc<dyn Transport>) -> Self {
+        PoisonGuard(transport)
+    }
+}
 
 impl Drop for PoisonGuard {
     fn drop(&mut self) {
         if std::thread::panicking() {
-            self.0.poison();
+            self.0.poison("a peer worker panicked mid-round");
         }
     }
 }
@@ -278,5 +475,68 @@ mod tests {
         let got = ag.exchange(1, vec![1]).unwrap();
         assert_eq!(got.len(), 2);
         t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn exchange_timeout_poisons_instead_of_hanging() {
+        // The satellite bug: a peer that never arrives (no panic, no Err)
+        // used to block its peers forever. With a timeout the waiter
+        // surfaces a NetError through the poison path instead.
+        let ag = AllGather::with_timeout(2, Some(Duration::from_millis(50)));
+        let t0 = Instant::now();
+        let err = ag.exchange(0, vec![0]).expect_err("peer never arrives");
+        assert!(t0.elapsed() < Duration::from_secs(10), "must not block forever");
+        let msg = err.to_string();
+        assert!(msg.contains("net error"), "timeout is a NetError: {msg}");
+        assert!(msg.contains("timed out"), "got: {msg}");
+        assert!(msg.contains("poisoned"), "propagates via poison: {msg}");
+        assert!(ag.is_poisoned());
+        // The late peer observes the poisoning, not a fresh round.
+        let late = ag.exchange(1, vec![1]).expect_err("group is dead");
+        assert!(late.to_string().contains("poisoned"), "got: {late}");
+    }
+
+    #[test]
+    fn timeout_does_not_fire_when_peers_arrive() {
+        let ag = AllGather::with_timeout(2, Some(Duration::from_secs(30)));
+        let ag2 = ag.clone();
+        let t = thread::spawn(move || ag2.exchange(1, vec![1]));
+        let got = ag.exchange(0, vec![0]).unwrap();
+        assert_eq!(got.len(), 2);
+        t.join().unwrap().unwrap();
+        assert!(!ag.is_poisoned());
+    }
+
+    #[test]
+    fn allgather_is_a_transport_object() {
+        // The trait-object surface the engine's Fabric uses.
+        let t: Arc<dyn Transport> = AllGather::new(1);
+        assert_eq!(t.peers(), 1);
+        assert_eq!(t.kind(), "inproc");
+        assert!(t.measured().is_none(), "nothing crosses a wire in-process");
+        let got = t.exchange(0, vec![3, 1], Plane::Data).unwrap();
+        assert_eq!(got[0].as_slice(), &[3, 1]);
+        let _guard = PoisonGuard::new(t.clone());
+        t.poison("test reason");
+        let err = t.exchange(0, vec![0], Plane::Control).expect_err("poisoned");
+        assert!(err.to_string().contains("test reason"), "reason carried: {err}");
+    }
+
+    #[test]
+    fn merge_links_unions_endpoint_views() {
+        let a = MeasuredWire {
+            rank: 0,
+            data_sent: vec![((0, 1), 10), ((0, 2), 10)],
+            ..MeasuredWire::default()
+        };
+        let b = MeasuredWire {
+            rank: 1,
+            data_sent: vec![((1, 0), 7), ((1, 2), 7)],
+            ..MeasuredWire::default()
+        };
+        let merged = MeasuredWire::merge_links(&[a, b]);
+        assert_eq!(merged.len(), 4);
+        assert_eq!(merged[&(0, 1)], 10);
+        assert_eq!(merged[&(1, 2)], 7);
     }
 }

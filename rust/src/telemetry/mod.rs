@@ -520,18 +520,23 @@ impl Telemetry {
 
     /// Emit the run `summary` event and flush the sink. `layers` carries
     /// the per-layer cumulative wire bits of a layer-wise pipeline;
-    /// `link_totals` the run's cumulative per-link bytes.
+    /// `link_totals` the run's cumulative *modeled* per-link bytes;
+    /// `measured` this endpoint's physical framed-byte counters when the
+    /// fabric actually moves bytes over a wire (socket transport) — the
+    /// pair is what lets an observer reconcile measured against modeled
+    /// traffic per link (`docs/OBSERVABILITY.md`).
     pub fn finish(
         &mut self,
         layers: Option<(&[String], &[u64])>,
         link_totals: &[(Link, f64)],
+        measured: Option<&crate::net::MeasuredWire>,
     ) {
         if !self.enabled {
             return;
         }
         if let Some(sink) = &self.sink {
             if let Ok(mut s) = sink.lock() {
-                s.write(&self.summary_event(layers, link_totals));
+                s.write(&self.summary_event(layers, link_totals, measured));
                 s.flush();
             }
         }
@@ -556,6 +561,7 @@ impl Telemetry {
         &self,
         layers: Option<(&[String], &[u64])>,
         link_totals: &[(Link, f64)],
+        measured: Option<&crate::net::MeasuredWire>,
     ) -> Json {
         let c = &self.counters;
         let mut fields: Vec<(&str, Json)> = vec![
@@ -578,6 +584,28 @@ impl Telemetry {
             .unwrap_or(((0, 0), 0.0));
         fields.push(("hot_link", link_json(hottest.0)));
         fields.push(("hot_link_bytes", Json::Num(hottest.1)));
+        // Modeled per-link totals as `[src, dst, bytes]` triples, sorted by
+        // endpoint pair so streams from different runs diff cleanly.
+        let mut totals: Vec<(Link, f64)> = link_totals.to_vec();
+        totals.sort_by_key(|(l, _)| *l);
+        fields.push((
+            "link_totals",
+            Json::Arr(
+                totals
+                    .iter()
+                    .map(|&((i, j), b)| {
+                        Json::Arr(vec![
+                            Json::Num(i as f64),
+                            Json::Num(j as f64),
+                            Json::Num(b),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ));
+        if let Some(m) = measured {
+            fields.push(("measured", measured_json(m)));
+        }
         if let Some((names, bits)) = layers {
             fields.push((
                 "layer_bits",
@@ -595,6 +623,40 @@ impl Telemetry {
 
 fn link_json(link: Link) -> Json {
     Json::Arr(vec![Json::Num(link.0 as f64), Json::Num(link.1 as f64)])
+}
+
+/// This endpoint's physical framed-byte counters (socket fabric), as the
+/// summary's `measured` object: per-plane payload bytes, frame/header
+/// overhead, and the endpoint's per-link data-plane view (`links_sent` /
+/// `links_recv` as `[src, dst, bytes]` triples) for measured-vs-modeled
+/// reconciliation.
+fn measured_json(m: &crate::net::MeasuredWire) -> Json {
+    let links = |v: &[(Link, u64)]| {
+        let mut v = v.to_vec();
+        v.sort_by_key(|(l, _)| *l);
+        Json::Arr(
+            v.iter()
+                .map(|&((i, j), b)| {
+                    Json::Arr(vec![Json::Num(i as f64), Json::Num(j as f64), Json::Num(b as f64)])
+                })
+                .collect(),
+        )
+    };
+    Json::obj([
+        ("rank", Json::Num(m.rank as f64)),
+        ("data_rounds", Json::Num(m.data_rounds as f64)),
+        ("frames_sent", Json::Num(m.frames_sent as f64)),
+        ("frames_recv", Json::Num(m.frames_recv as f64)),
+        ("header_bytes", Json::Num(m.header_bytes as f64)),
+        ("data_bytes_sent", Json::Num(m.data_bytes_sent() as f64)),
+        ("data_bytes_recv", Json::Num(m.data_bytes_recv() as f64)),
+        ("control_bytes_sent", Json::Num(m.control_sent as f64)),
+        ("control_bytes_recv", Json::Num(m.control_recv as f64)),
+        ("oob_bytes_sent", Json::Num(m.oob_sent as f64)),
+        ("oob_bytes_recv", Json::Num(m.oob_recv as f64)),
+        ("links_sent", links(&m.data_sent)),
+        ("links_recv", links(&m.data_recv)),
+    ])
 }
 
 /// The JSONL `step` event for one record (schema: `docs/OBSERVABILITY.md`).
@@ -818,12 +880,48 @@ mod tests {
         t.end_step(1);
         let names = vec!["embed".to_string(), "head".to_string()];
         let bits = vec![100u64, 300];
-        let s = t.summary_event(Some((&names, &bits)), &[((0, 1), 5.0)]);
+        let s = t.summary_event(Some((&names, &bits)), &[((0, 1), 5.0)], None);
         let back = Json::parse(&s.dump()).unwrap();
         assert_eq!(back.get("event").unwrap().as_str(), Some("summary"));
         assert_eq!(back.get("data_bits").unwrap().as_usize(), Some(8));
         assert_eq!(back.at(&["layer_bits", "head"]).unwrap().as_usize(), Some(300));
         assert_eq!(back.get("links").unwrap().as_usize(), Some(1));
+        let lt = back.get("link_totals").unwrap().as_array().unwrap();
+        assert_eq!(lt.len(), 1);
+        assert_eq!(lt[0].as_array().unwrap().len(), 3, "[src, dst, bytes] triples");
+        assert!(back.get("measured").is_none(), "no measured object without a wire");
+    }
+
+    #[test]
+    fn summary_embeds_measured_wire_counters() {
+        let t = Telemetry::new(&TelemetryConfig::memory(), &Json::Null).unwrap();
+        let m = crate::net::MeasuredWire {
+            rank: 1,
+            data_rounds: 4,
+            frames_sent: 10,
+            frames_recv: 10,
+            header_bytes: 480,
+            data_sent: vec![((1, 0), 64), ((1, 2), 64)],
+            data_recv: vec![((0, 1), 32), ((2, 1), 96)],
+            control_sent: 24,
+            control_recv: 48,
+            oob_sent: 40,
+            oob_recv: 80,
+        };
+        let s = t.summary_event(None, &[((1, 0), 64.0), ((1, 2), 64.0)], Some(&m));
+        let back = Json::parse(&s.dump()).unwrap();
+        assert_eq!(back.at(&["measured", "rank"]).unwrap().as_usize(), Some(1));
+        assert_eq!(back.at(&["measured", "data_rounds"]).unwrap().as_usize(), Some(4));
+        assert_eq!(back.at(&["measured", "data_bytes_sent"]).unwrap().as_usize(), Some(128));
+        assert_eq!(back.at(&["measured", "data_bytes_recv"]).unwrap().as_usize(), Some(128));
+        assert_eq!(back.at(&["measured", "header_bytes"]).unwrap().as_usize(), Some(480));
+        assert_eq!(back.at(&["measured", "oob_bytes_recv"]).unwrap().as_usize(), Some(80));
+        let links = back.at(&["measured", "links_sent"]).unwrap().as_array().unwrap();
+        assert_eq!(links.len(), 2);
+        assert_eq!(
+            links[0].as_array().unwrap().iter().map(|j| j.as_f64().unwrap()).collect::<Vec<_>>(),
+            vec![1.0, 0.0, 64.0]
+        );
     }
 
     #[test]

@@ -1,21 +1,27 @@
 //! The [`Collective`] trait: one exchange round of real encoded wire bytes
 //! over a [`Topology`], generalizing the seed's flat `AllGather`.
 //!
-//! Physical vs logical: in-process, every worker's payload lands in the
-//! shared-slot [`AllGather`] transport (that is our wire). The collective
-//! decides (a) which payloads each rank *logically* receives —
+//! Physical vs logical: every worker's payload lands in a full
+//! [`crate::net::Transport`] exchange — the in-process barrier or the
+//! multi-process socket mesh, interchangeably (that is our wire). The
+//! collective decides (a) which payloads each rank *logically* receives —
 //! [`Collective::recipients`] — (b) what the round costs under the α-β
 //! model — [`Collective::round_cost`] — and (c) how the round's bytes land
 //! on individual directed links — [`Collective::link_loads`], accumulated
 //! by [`LinkTraffic`]. Exact topologies deliver every rank the full `K`
 //! payload set (the simulation's stand-in for in-network aggregation of
 //! the rank-order mean — see the module doc of [`crate::topo`]); gossip
-//! delivers closed neighborhoods only.
+//! delivers closed neighborhoods only. Note that both real fabrics move
+//! every payload over a physical full mesh (the logical pattern filters
+//! afterwards), while the modeled star/ring loads assume in-network
+//! aggregation and gossip bills neighborhood links only — so *measured*
+//! link bytes equal the *modeled* ones exactly on full mesh, and are a
+//! diagnostic (not an identity) elsewhere.
 
 use super::cost::{self, RoundCost, AGG_PIGGYBACK_BYTES};
 use super::{gossip_neighbors, Topology};
 use crate::error::Result;
-use crate::net::{bits_to_bytes, AllGather, NetModel, TrafficStats};
+use crate::net::{bits_to_bytes, NetModel, Plane, TrafficStats, Transport};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -50,18 +56,18 @@ pub trait Collective: Send + Sync {
         out
     }
 
-    /// Execute one round through the in-process transport: deposit
-    /// `payload`, block for the barrier, and return the payloads this rank
+    /// Execute one data round through any [`Transport`] fabric: deposit
+    /// `payload`, block for the group, and return the payloads this rank
     /// logically receives as `(sender, bytes)` plus everyone's exact
     /// payload bit counts (every rank sees the same `bits` vector, so
-    /// accounting stays replica-identical).
+    /// accounting stays replica-identical across fabrics).
     fn exchange(
         &self,
-        transport: &AllGather,
+        transport: &dyn Transport,
         rank: usize,
         payload: Vec<u8>,
     ) -> Result<(Vec<(usize, Arc<Vec<u8>>)>, Vec<u64>)> {
-        let got = transport.exchange(rank, payload)?;
+        let got = transport.exchange(rank, payload, Plane::Data)?;
         let bits: Vec<u64> = got.iter().map(|p| 8 * p.len() as u64).collect();
         let recv =
             self.recipients(rank).into_iter().map(|r| (r, got[r].clone())).collect();
@@ -313,6 +319,7 @@ impl LinkTraffic {
 mod tests {
     use super::*;
     use crate::config::TopoConfig;
+    use crate::net::AllGather;
 
     fn mk(kind: &str, k: usize) -> Arc<dyn Collective> {
         let mut cfg = TopoConfig::default();
@@ -375,7 +382,7 @@ mod tests {
             let transport = transport.clone();
             handles.push(std::thread::spawn(move || {
                 let (recv, bits) =
-                    coll.exchange(&transport, rank, vec![rank as u8; rank + 1]).unwrap();
+                    coll.exchange(transport.as_ref(), rank, vec![rank as u8; rank + 1]).unwrap();
                 assert_eq!(bits.len(), k);
                 for (w, &b) in bits.iter().enumerate() {
                     assert_eq!(b, 8 * (w as u64 + 1), "exact sizes visible to all");

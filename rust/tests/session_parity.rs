@@ -623,8 +623,8 @@ mod legacy {
                         // An Err return (codec/oracle failure) must release the
                         // peers just like a panic does — otherwise they block at
                         // the barrier forever waiting for this worker's deposit.
-                        if out.is_err() {
-                            transport.poison();
+                        if let Err(e) = &out {
+                            transport.poison(&format!("worker {rank} failed: {e}"));
                         }
                         out
                     })
@@ -746,7 +746,7 @@ mod legacy {
                         traffic: &mut TrafficStats,
                         links: &mut LinkTraffic|
          -> Result<()> {
-            let (recv, bits) = collective.exchange(&transport, rank, payload)?;
+            let (recv, bits) = collective.exchange(transport.as_ref(), rank, payload)?;
             collective.record_round(&bits, &net, traffic);
             if rank == 0 {
                 links.record(collective.as_ref(), &bits);
@@ -908,7 +908,7 @@ mod legacy {
                 let delta = rep.delta();
                 let (bytes, _) = comp.compress(&delta)?;
                 traffic.add_compute(t0.elapsed().as_secs_f64());
-                let (recv, bits) = collective.exchange(&transport, rank, bytes)?;
+                let (recv, bits) = collective.exchange(transport.as_ref(), rank, bytes)?;
                 let bits_before = traffic.bits_sent;
                 collective.record_round(&bits, &net, &mut traffic);
                 for (sender, payload) in &recv {
