@@ -307,10 +307,14 @@ impl Drop for Listener {
 
 /// Dial `addr`, retrying until `deadline` — the target process may not
 /// have bound its listener yet (process startup is racy by nature).
+/// Each TCP attempt is individually bounded by the time left: a
+/// blackholed address (SYN drop, no RST) must not pin one attempt on
+/// the OS default connect timeout long past our deadline. Unix sockets
+/// connect locally and need no per-attempt bound.
 fn dial(addr: &Addr, deadline: Instant) -> Result<Stream> {
     loop {
         let attempt = match addr {
-            Addr::Tcp(a) => TcpStream::connect(a).map(Stream::Tcp),
+            Addr::Tcp(a) => dial_tcp(a, deadline).map(Stream::Tcp),
             #[cfg(unix)]
             Addr::Unix(p) => UnixStream::connect(p).map(Stream::Unix),
         };
@@ -326,6 +330,22 @@ fn dial(addr: &Addr, deadline: Instant) -> Result<Stream> {
             }
         }
     }
+}
+
+/// One deadline-bounded TCP connect attempt: resolve, then
+/// `connect_timeout` each candidate address with the time remaining.
+fn dial_tcp(addr: &str, deadline: Instant) -> std::io::Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let mut last = None;
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, remaining(deadline)) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.unwrap_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::InvalidInput, "address resolved to nothing")
+    }))
 }
 
 /// Time left until `deadline`, clamped to ≥ 1 ms (a zero socket timeout
@@ -790,16 +810,22 @@ impl Transport for SocketTransport {
         // deadlock once payloads outgrow the OS socket buffers.
         let outcome: std::result::Result<Vec<Arc<Vec<u8>>>, String> = thread::scope(|s| {
             let to_send = payload.clone();
-            let writer = s.spawn(move || -> std::result::Result<(), String> {
-                for p in 0..k {
-                    if p == rank {
-                        continue;
+            // Move a reborrow into the closure, not `writers` itself: the
+            // reborrow expires when the scope ends, leaving the original
+            // binding usable for the ABORT broadcast in the Err arm below.
+            let writer = s.spawn({
+                let writers = &mut *writers;
+                move || -> std::result::Result<(), String> {
+                    for p in 0..k {
+                        if p == rank {
+                            continue;
+                        }
+                        let w = writers[p].as_mut().expect("mesh has a conn per peer");
+                        write_frame(w, kind, rank as u32, this_round, &to_send)
+                            .map_err(|e| format!("round {this_round}: sending to peer {p}: {e}"))?;
                     }
-                    let w = writers[p].as_mut().expect("mesh has a conn per peer");
-                    write_frame(w, kind, rank as u32, this_round, &to_send)
-                        .map_err(|e| format!("round {this_round}: sending to peer {p}: {e}"))?;
+                    Ok(())
                 }
-                Ok(())
             });
             let mut slots: Vec<Option<Arc<Vec<u8>>>> = vec![None; k];
             slots[rank] = Some(payload.clone());
@@ -909,14 +935,28 @@ impl Transport for SocketTransport {
 
     fn poison(&self, reason: &str) {
         self.set_poisoned(reason);
-        // Best effort: if an exchange currently holds the lock it will
-        // broadcast its own ABORT on the way out; otherwise tell peers now.
-        if let Ok(mut io) = self.io.try_lock() {
-            let Io { writers, round, .. } = &mut *io;
-            for w in writers.iter_mut().flatten() {
-                let _ =
-                    write_frame(w, FrameKind::Abort, self.rank as u32, *round, reason.as_bytes());
+        // Notifying peers is best-effort: an in-flight exchange holds the
+        // io lock and will broadcast its own ABORT on the way out (it sees
+        // the poison flag), so we must not block here. But a *transient*
+        // holder (e.g. `measured()` snapshotting the tally) releases the
+        // lock quickly — retry briefly rather than silently skipping the
+        // broadcast and leaving peers to discover the poison only via
+        // their read timeout.
+        for _ in 0..50 {
+            if let Ok(mut io) = self.io.try_lock() {
+                let Io { writers, round, .. } = &mut *io;
+                for w in writers.iter_mut().flatten() {
+                    let _ = write_frame(
+                        w,
+                        FrameKind::Abort,
+                        self.rank as u32,
+                        *round,
+                        reason.as_bytes(),
+                    );
+                }
+                return;
             }
+            thread::sleep(Duration::from_millis(2));
         }
     }
 
