@@ -402,11 +402,16 @@ pub struct TopoConfig {
     pub degree: usize,
     /// Gossip: chord-placement seed; 0 = derived from `degree`.
     pub seed: u64,
+    /// Gossip: re-draw the edge set every this many steps (time-varying
+    /// schedule; see [`crate::topo::RewiringGossip`]). 0 = static graph
+    /// (the default, bit-identical to the pre-schedule behavior). Only
+    /// meaningful with `kind = "gossip"` — rejected elsewhere.
+    pub rewire_every: usize,
 }
 
 impl Default for TopoConfig {
     fn default() -> Self {
-        TopoConfig { kind: "full-mesh".into(), groups: 0, degree: 3, seed: 0 }
+        TopoConfig { kind: "full-mesh".into(), groups: 0, degree: 3, seed: 0, rewire_every: 0 }
     }
 }
 
@@ -423,11 +428,23 @@ impl Default for TopoConfig {
 pub struct LocalConfig {
     /// Local extra-gradient iterations per communication round (H ≥ 1).
     pub steps: usize,
+    /// Bounded-staleness cap for semi-async delta syncs: a worker that
+    /// misses the (modeled) sync deadline may have its previous delta
+    /// carried forward for at most this many consecutive syncs before the
+    /// sync falls back to the blocking barrier for it. 0 disables the
+    /// semi-async path entirely (the default; fully synchronous syncs,
+    /// bit-identical to the pre-staleness behavior).
+    pub staleness: usize,
+    /// Probability in `[0, 1)` that a worker misses a sync deadline
+    /// (deterministic per `(seed, step, worker)` — a modeled straggler,
+    /// not wall-clock racing). 0.0 = nobody straggles. Requires
+    /// `staleness >= 1` when positive.
+    pub straggler_rate: f64,
 }
 
 impl Default for LocalConfig {
     fn default() -> Self {
-        LocalConfig { steps: 1 }
+        LocalConfig { steps: 1, staleness: 0, straggler_rate: 0.0 }
     }
 }
 
@@ -613,9 +630,14 @@ impl ExperimentConfig {
                     groups: doc.get_usize("topo.groups", d.topo.groups)?,
                     degree: doc.get_usize("topo.degree", d.topo.degree)?,
                     seed: doc.get_i64("topo.seed", d.topo.seed as i64)? as u64,
+                    rewire_every: doc.get_usize("topo.rewire_every", d.topo.rewire_every)?,
                 }
             },
-            local: LocalConfig { steps: doc.get_usize("local.steps", d.local.steps)? },
+            local: LocalConfig {
+                steps: doc.get_usize("local.steps", d.local.steps)?,
+                staleness: doc.get_usize("local.staleness", d.local.staleness)?,
+                straggler_rate: doc.get_f64("local.straggler_rate", d.local.straggler_rate)?,
+            },
             problem: ProblemConfig {
                 kind: doc.get_str("problem.kind", &d.problem.kind)?,
                 dim: doc.get_usize("problem.dim", d.problem.dim)?,
@@ -670,9 +692,42 @@ impl ExperimentConfig {
         if self.local.steps == 0 {
             return Err(Error::Config("local.steps must be >= 1".into()));
         }
+        if !(0.0..1.0).contains(&self.local.straggler_rate) {
+            return Err(Error::Config(format!(
+                "local.straggler_rate = {} must be in [0, 1)",
+                self.local.straggler_rate
+            )));
+        }
+        if self.local.straggler_rate > 0.0 && self.local.staleness == 0 {
+            return Err(Error::Config(
+                "local.straggler_rate > 0 needs local.staleness >= 1 \
+                 (a staleness cap of 0 means fully synchronous syncs)"
+                    .into(),
+            ));
+        }
+        // A timeout below the floor cannot cover even a local round trip —
+        // it would poison healthy groups. 0 stays valid: it means
+        // "uncapped" (the socket fabric substitutes its own 30 s default).
+        if self.net.timeout_ms != 0 && self.net.timeout_ms < 10 {
+            return Err(Error::Config(format!(
+                "net.timeout_ms = {} is absurdly small (minimum 10 ms; \
+                 0 = no cap)",
+                self.net.timeout_ms
+            )));
+        }
         // Topology must resolve for this worker count (kind known, groups /
         // degree in range); surfaced at config time, not mid-run.
-        crate::topo::Topology::from_config(&self.topo, self.workers)?;
+        let topo = crate::topo::Topology::from_config(&self.topo, self.workers)?;
+        if self.topo.rewire_every > 0
+            && !matches!(topo, crate::topo::Topology::Gossip { .. })
+        {
+            return Err(Error::Config(format!(
+                "topo.rewire_every = {} needs topo.kind = \"gossip\" \
+                 (exact topologies have no edge schedule to rewire); got `{}`",
+                self.topo.rewire_every,
+                topo.name()
+            )));
+        }
         Ok(())
     }
 }
@@ -803,6 +858,69 @@ noise = "relative"
         let cfg = ExperimentConfig::default();
         assert_eq!(cfg.net.timeout_ms, 0);
         assert_eq!(cfg.net.exchange_timeout(), None);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn absurdly_small_timeouts_are_rejected_at_load() {
+        // The satellite bugfix: 1–9 ms cannot cover even a local round
+        // trip and would poison healthy groups; reject at config load.
+        for ms in [1u64, 5, 9] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.net.timeout_ms = ms;
+            let err = cfg.validate().expect_err("sub-10ms timeout");
+            assert!(err.to_string().contains("timeout_ms"), "got: {err}");
+            assert!(err.to_string().contains("absurdly small"), "got: {err}");
+            let err = ExperimentConfig::from_toml(&format!("[net]\ntimeout_ms = {ms}\n"))
+                .expect_err("rejected at parse too");
+            assert!(err.to_string().contains("timeout_ms"), "got: {err}");
+        }
+        // The floor itself and 0 (= uncapped) stay valid.
+        for ms in [0u64, 10, 1500] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.net.timeout_ms = ms;
+            cfg.validate().unwrap_or_else(|e| panic!("timeout_ms = {ms} valid: {e}"));
+        }
+    }
+
+    #[test]
+    fn parses_rewire_schedule_and_requires_gossip() {
+        assert_eq!(ExperimentConfig::default().topo.rewire_every, 0);
+        let cfg = ExperimentConfig::from_toml(
+            "workers = 8\n[topo]\nkind = \"gossip\"\ndegree = 4\nrewire_every = 25\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.topo.rewire_every, 25);
+        // rewiring an exact topology is a config error, not a silent no-op
+        let err = ExperimentConfig::from_toml("[topo]\nkind = \"ring\"\nrewire_every = 25\n")
+            .expect_err("exact topologies have no schedule");
+        assert!(err.to_string().contains("rewire_every"), "got: {err}");
+        assert!(err.to_string().contains("gossip"), "got: {err}");
+    }
+
+    #[test]
+    fn parses_staleness_knobs_and_validates_bounds() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.local.staleness, 0);
+        assert_eq!(d.local.straggler_rate, 0.0);
+        let cfg = ExperimentConfig::from_toml(
+            "workers = 4\n[local]\nsteps = 4\nstaleness = 2\nstraggler_rate = 0.3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.local.staleness, 2);
+        assert!((cfg.local.straggler_rate - 0.3).abs() < 1e-12);
+        // rate outside [0, 1) rejected
+        for rate in ["1.0", "1.5", "-0.1"] {
+            let err = ExperimentConfig::from_toml(&format!(
+                "[local]\nsteps = 4\nstaleness = 2\nstraggler_rate = {rate}\n"
+            ))
+            .expect_err(rate);
+            assert!(err.to_string().contains("straggler_rate"), "{rate}: {err}");
+        }
+        // a positive rate without a staleness cap cannot work
+        let err = ExperimentConfig::from_toml("[local]\nsteps = 4\nstraggler_rate = 0.3\n")
+            .expect_err("rate without staleness");
+        assert!(err.to_string().contains("staleness"), "got: {err}");
     }
 
     #[test]

@@ -212,6 +212,9 @@ pub struct RoundEngine {
     bits_buf: Vec<u64>,
     pub(crate) traffic: TrafficStats,
     pub(crate) links: LinkTraffic,
+    /// Time-varying topology: edge-set changes observed so far (0 under
+    /// static collectives; emitted as the `rewires` summary scalar).
+    pub(crate) rewires: u64,
     /// The run-telemetry recorder (disabled by default; see
     /// [`crate::telemetry`]). Owned here so every family and both fabrics
     /// share one instrumentation seam.
@@ -283,6 +286,7 @@ impl RoundEngine {
             g_buf: vec![0.0f32; d],
             traffic: TrafficStats::default(),
             links: LinkTraffic::new(),
+            rewires: 0,
             tele: Telemetry::off(),
             schedule,
             adaptive,
@@ -357,10 +361,17 @@ impl RoundEngine {
                 "loopback checkpoints resume in-process; they have no transport rank to rebind"
                     .into(),
             )),
-            Fabric::Transport { rank: own, .. } => {
+            Fabric::Transport { rank: own, transport: old } => {
                 if *own != rank {
                     return Err(Error::Coordinator(format!(
                         "checkpoint holds rank {own}'s state; it cannot resume as rank {rank}"
+                    )));
+                }
+                if old.kind() != transport.kind() {
+                    return Err(Error::Coordinator(format!(
+                        "checkpoint was taken on a `{}` fabric; it cannot resume on `{}`",
+                        old.kind(),
+                        transport.kind()
                     )));
                 }
                 if transport.peers() != self.k {
@@ -374,6 +385,23 @@ impl RoundEngine {
                 self.fabric = Fabric::Transport { transport, rank };
                 Ok(())
             }
+        }
+    }
+
+    /// Advance the collective's edge schedule to iteration `t`. Under a
+    /// time-varying topology ([`crate::topo::RewiringGossip`]) the engine's
+    /// cached receive sets are rebuilt whenever an epoch boundary is
+    /// crossed; static collectives make this a no-op. Must run before the
+    /// iteration's first data round so every rank swaps edge sets at the
+    /// same `t`.
+    pub(crate) fn begin_step(&mut self, t: u64) {
+        if self.collective.advance_round(t) {
+            for (i, &w) in self.owned.iter().enumerate() {
+                self.recv[i] = self.collective.recipients(w);
+            }
+            self.rewires += 1;
+            let rank = self.transport_rank().unwrap_or(0);
+            self.tele.on_fault("rewire", rank, t);
         }
     }
 
@@ -626,6 +654,7 @@ impl Clone for RoundEngine {
             bits_buf: self.bits_buf.clone(),
             traffic: self.traffic,
             links: self.links.clone(),
+            rewires: self.rewires,
             tele: self.tele.clone(),
             schedule: self.schedule,
             adaptive: self.adaptive,

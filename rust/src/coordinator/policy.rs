@@ -84,6 +84,9 @@ fn emit_loopback_summary(rec: &mut Recorder, eng: &RoundEngine) {
     rec.set_scalar("epsilon_q", eng.comps[0].epsilon_q(eng.d));
     rec.set_scalar("wire_links", eng.links.links() as f64);
     rec.set_scalar("max_link_bytes", eng.links.max_link_bytes());
+    if eng.rewires > 0 {
+        rec.set_scalar("rewires", eng.rewires as f64);
+    }
     eng.comps[0].emit_layer_scalars(rec);
 }
 
@@ -96,6 +99,9 @@ fn emit_transport_summary(rec: &mut Recorder, eng: &RoundEngine) {
     rec.set_scalar("compute_time", eng.traffic.compute_time);
     rec.set_scalar("wire_links", eng.links.links() as f64);
     rec.set_scalar("max_link_bytes", eng.links.max_link_bytes());
+    if eng.rewires > 0 {
+        rec.set_scalar("rewires", eng.rewires as f64);
+    }
     eng.comps[0].emit_layer_scalars(rec);
 }
 
@@ -353,12 +359,34 @@ impl ExchangePolicy for GossipPolicy {
 /// iterations per replica, then one quantized model-delta exchange and a
 /// resync by (neighborhood-)averaging. See `algo::local` for the replica
 /// invariances and why agreement is asserted on sync bases.
+///
+/// With `local.straggler_rate > 0` the sync becomes **bounded-staleness
+/// semi-async**: a seeded per-(step, worker) draw models which senders
+/// miss the sync deadline; their *previous* delta is carried forward
+/// instead (up to `local.staleness` consecutive substitutions, after
+/// which the sync falls back to the blocking barrier and uses the fresh
+/// delta). The physical exchange is unchanged — the deadline is modeled,
+/// so every rank makes the identical substitution decision and runs stay
+/// bit-for-bit reproducible. `straggler_rate = 0` (default) skips the
+/// whole path: no allocations, no RNG draws, bit-identical to the
+/// fully-synchronous family.
 #[derive(Clone)]
 pub(crate) struct LocalPolicy {
     reps: Vec<LocalQGenX>,
     sync_acc: SyncAccounting,
     gap_eval: Option<GapEvaluator>,
     h: usize,
+    /// Max consecutive stale substitutions per sender before blocking.
+    staleness: usize,
+    /// Modeled probability a sender misses each sync deadline.
+    straggler_rate: f64,
+    /// Seed for the per-(step, worker) deadline draws.
+    fault_seed: u64,
+    /// Last fresh delta seen from each worker (only workers this endpoint
+    /// actually receives from are ever populated).
+    carried: Vec<Option<Vec<f32>>>,
+    /// Consecutive substitutions per worker since its last fresh delta.
+    missed: Vec<u32>,
 }
 
 impl LocalPolicy {
@@ -376,7 +404,59 @@ impl LocalPolicy {
             sync_acc: SyncAccounting::new(),
             gap_eval: gap_eval_for(eng),
             h: cfg.local.steps,
+            staleness: cfg.local.staleness,
+            straggler_rate: cfg.local.straggler_rate,
+            fault_seed: cfg.seed ^ 0x5354_414c_455f_5351,
+            carried: vec![None; eng.k],
+            missed: vec![0; eng.k],
         }
+    }
+
+    /// Decide this sync's stale substitutions (straggler model; see the
+    /// type docs). Returns the per-worker substitution mask, or `None`
+    /// when the semi-async path is disabled. Updates `carried`/`missed`
+    /// and emits `stale` fault telemetry for each substitution.
+    fn stale_mask(&mut self, t: usize, eng: &mut RoundEngine) -> Option<Vec<bool>> {
+        if self.straggler_rate <= 0.0 {
+            return None;
+        }
+        // Workers this endpoint receives from (union over owned replicas —
+        // all K under loopback/exact, the closed neighborhood per rank
+        // under gossip+transport). Carried deltas exist only for these.
+        let mut received = vec![false; eng.k];
+        for n in &eng.recv {
+            for &w in n {
+                received[w] = true;
+            }
+        }
+        let mut mask = vec![false; eng.k];
+        let mut stale_now = 0u64;
+        for (w, slot) in mask.iter_mut().enumerate() {
+            if !received[w] {
+                continue;
+            }
+            // One seeded draw per (sync step, sender): identical on every
+            // rank, so all endpoints substitute the same senders.
+            let mut s = self.fault_seed ^ ((t as u64) << 20) ^ w as u64;
+            let u = (crate::util::rng::splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64;
+            let straggles = u < self.straggler_rate;
+            if straggles && (self.missed[w] as usize) < self.staleness && self.carried[w].is_some()
+            {
+                *slot = true;
+                self.missed[w] += 1;
+                stale_now += 1;
+                eng.tele.on_fault("stale", w, t as u64);
+            } else {
+                // Fresh delta arrived in time (or the staleness cap forced
+                // the blocking barrier): adopt it and reset the debt.
+                self.carried[w] = Some(eng.decoded[w].clone());
+                self.missed[w] = 0;
+            }
+        }
+        if stale_now > 0 {
+            self.sync_acc.add_stale(stale_now);
+        }
+        Some(mask)
     }
 }
 
@@ -419,14 +499,23 @@ impl ExchangePolicy for LocalPolicy {
                 self.sync_acc.record(rec, t, drift, round_bits);
             }
 
+            // Bounded-staleness deadline model: which senders' deltas are
+            // replaced by their carried (stale) predecessor this sync.
+            let stale = self.stale_mask(t, eng);
+
             // Resync each replica onto its neighborhood-averaged delta
-            // (all K under exact topologies).
+            // (all K under exact topologies), substituting carried deltas
+            // for modeled stragglers.
             let c = eng.tele.clock();
             for (i, r) in self.reps.iter_mut().enumerate() {
                 let n = &eng.recv[i];
                 let mut mean = vec![0.0f32; eng.d];
                 for &w in n {
-                    for (m, &x) in mean.iter_mut().zip(eng.decoded[w].iter()) {
+                    let src: &[f32] = match (&stale, &self.carried[w]) {
+                        (Some(mask), Some(old)) if mask[w] => old,
+                        _ => &eng.decoded[w],
+                    };
+                    for (m, &x) in mean.iter_mut().zip(src.iter()) {
                         *m += x / n.len() as f32;
                     }
                 }

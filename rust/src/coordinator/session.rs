@@ -40,7 +40,7 @@ use crate::metrics::Recorder;
 use crate::net::Transport;
 use crate::oracle::{Oracle, Operator};
 use crate::telemetry::{self, Telemetry, TelemetryConfig};
-use crate::topo::{build_collective, Collective, Topology};
+use crate::topo::{build_collective, build_collective_dynamic, Collective, Topology};
 use std::sync::Arc;
 
 /// Algorithm driven by the session: the paper's Q-GenX template (exact /
@@ -267,7 +267,9 @@ impl SessionBuilder {
             }
             (None, Algorithm::QGenX) => {
                 let topo = Topology::from_config(&cfg.topo, cfg.workers)?;
-                (topo, build_collective(topo, cfg.workers)?)
+                // `topo.rewire_every > 0` selects the time-varying gossip
+                // schedule; 0 (default) is the static collective, unchanged.
+                (topo, build_collective_dynamic(topo, cfg.workers, cfg.topo.rewire_every as u64)?)
             }
         };
         let fabric = match self.transport {
@@ -384,6 +386,9 @@ impl Session {
         let last = t == self.cfg.iters;
         let mut rep = StepReport { t, iters: self.cfg.iters, ..StepReport::default() };
         let bits_before = self.eng.traffic.bits_sent;
+        // Advance a time-varying topology's edge schedule (no-op for
+        // static collectives) before the iteration's first exchange.
+        self.eng.begin_step(t as u64);
         self.policy.step(t, last, &mut self.eng, &mut self.rec, &mut rep)?;
         let eval_now = t % self.cfg.eval_every.max(1) == 0 || last;
         if eval_now {
@@ -809,6 +814,75 @@ mod tests {
         let rec = resumed.into_recorder();
         assert_eq!(whole.get("gap").unwrap().ys(), rec.get("gap").unwrap().ys());
         assert_eq!(whole.scalar("total_bits"), rec.scalar("total_bits"));
+    }
+
+    #[test]
+    fn resume_with_transport_rejects_a_different_fabric_kind() {
+        use crate::net::Plane;
+
+        /// An [`AllGather`] masquerading as a socket fabric: same group
+        /// semantics, different `kind()` — the cross-fabric resume probe.
+        struct SocketFaced(Arc<AllGather>);
+        impl Transport for SocketFaced {
+            fn peers(&self) -> usize {
+                self.0.peers()
+            }
+            fn exchange(
+                &self,
+                rank: usize,
+                payload: Vec<u8>,
+                plane: Plane,
+            ) -> Result<Vec<Arc<Vec<u8>>>> {
+                self.0.exchange(rank, payload, plane)
+            }
+            fn poison(&self, reason: &str) {
+                self.0.poison(reason)
+            }
+            fn is_poisoned(&self) -> bool {
+                self.0.is_poisoned()
+            }
+            fn kind(&self) -> &'static str {
+                "socket"
+            }
+        }
+
+        let mut cfg = base_cfg();
+        cfg.workers = 1;
+        cfg.iters = 20;
+        cfg.eval_every = 10;
+        let mut s = Session::builder(cfg).transport(AllGather::new(1), 0).build().unwrap();
+        s.run_to(5).unwrap();
+        let cp = s.checkpoint().unwrap();
+        let fake: Arc<dyn Transport> = Arc::new(SocketFaced(AllGather::new(1)));
+        let err = Session::resume_with_transport(cp, fake, 0)
+            .expect_err("an inproc checkpoint must not resume on a socket fabric");
+        assert!(
+            err.to_string().contains("`inproc` fabric") && err.to_string().contains("`socket`"),
+            "got: {err}"
+        );
+        // The original session is still usable on its own fabric.
+        s.run_to(20).unwrap();
+        assert!(s.done());
+    }
+
+    #[test]
+    fn coordinated_checkpoint_rejects_iteration_marker_mismatch() {
+        use super::super::engine::ckpt_marker;
+        use crate::net::Plane;
+
+        // Rank 0 checkpoints at t = 0 while "rank 1" (a raw deposit on the
+        // out-of-band plane) claims to be checkpointing step 3: the barrier
+        // must refuse the inconsistent snapshot on rank 0.
+        let mut cfg = base_cfg();
+        cfg.workers = 2;
+        let tr = AllGather::new(2);
+        let sess = Session::builder(cfg).transport(tr.clone(), 0).build().unwrap();
+        let peer = tr.clone();
+        let h = std::thread::spawn(move || peer.exchange(1, ckpt_marker(1, 2, 3), Plane::Oob));
+        let err = sess.checkpoint().expect_err("marker mismatch must fail the barrier");
+        assert!(err.to_string().contains("is not checkpointing step 0"), "got: {err}");
+        // The impostor's own exchange completed; nothing hangs.
+        h.join().unwrap().unwrap();
     }
 
     #[test]

@@ -22,7 +22,9 @@
 use qgenx::config::{ExperimentConfig, QuantMode};
 use qgenx::coordinator::{run_threaded, Control, Observer, Session, StepReport, StopAtGap};
 use qgenx::metrics::Recorder;
-use qgenx::net::{NetModel, SocketHub, SocketOpts, SocketTransport};
+use qgenx::net::{
+    FaultPlan, FaultyTransport, NetModel, SocketHub, SocketOpts, SocketTransport, Transport,
+};
 use qgenx::runtime::{default_artifacts_dir, Runtime};
 use qgenx::train::{GanMode, GanTrainConfig, GanTrainer, LmOptimizer, LmTrainConfig, LmTrainer};
 use std::collections::HashMap;
@@ -74,11 +76,11 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--local H] [--layers N|name:end,...,last] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--rewire-every N] [--local H] [--staleness S] [--straggler-rate p] [--layers N|name:end,...,last] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K] [--layerwise]\n\
            lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N]\n\
-           worker one socket-transport rank           --rank R --connect HOST:PORT|unix:PATH [--timeout-ms N] [run flags; rank 0 hosts the rendezvous and reports]\n\
-           launch spawn K local socket workers        [--addr HOST:PORT|unix:PATH] [run flags, forwarded to every worker]\n\
+           worker one socket-transport rank           --rank R --connect HOST:PORT|unix:PATH [--timeout-ms N] [--fault kind@rank:round[:arg],...] [run flags; rank 0 hosts the rendezvous and reports]\n\
+           launch spawn K local socket workers        [--addr HOST:PORT|unix:PATH] [run flags incl. --fault, forwarded to every worker]\n\
            info   print the artifact manifest summary\n\
            help   this message"
     );
@@ -150,6 +152,15 @@ fn run_cfg_from_flags(flags: &Flags) -> Result<ExperimentConfig, String> {
     }
     if let Some(t) = flags.get("timeout-ms") {
         cfg.net.timeout_ms = t.parse().map_err(|_| "bad --timeout-ms")?;
+    }
+    if let Some(r) = flags.get("rewire-every") {
+        cfg.topo.rewire_every = r.parse().map_err(|_| "bad --rewire-every")?;
+    }
+    if let Some(s) = flags.get("staleness") {
+        cfg.local.staleness = s.parse().map_err(|_| "bad --staleness")?;
+    }
+    if let Some(r) = flags.get("straggler-rate") {
+        cfg.local.straggler_rate = r.parse().map_err(|_| "bad --straggler-rate")?;
     }
     if let Some(spec) = flags.get("layers") {
         // Replace the partition (names + bounds) but keep a config file's
@@ -279,12 +290,19 @@ fn cmd_worker(flags: &Flags) -> Result<(), String> {
         return Err(format!("--rank {rank} out of range for K = {}", cfg.workers));
     }
     let opts = SocketOpts::from_config(&cfg.net);
-    let transport = if rank == 0 {
+    let mut transport: std::sync::Arc<dyn Transport> = if rank == 0 {
         let hub = SocketHub::bind(addr, cfg.workers, opts).map_err(|e| e.to_string())?;
         hub.accept().map_err(|e| e.to_string())?
     } else {
         SocketTransport::connect(addr, rank, cfg.workers, opts).map_err(|e| e.to_string())?
     };
+    // `--fault` wraps this rank's endpoint in the deterministic chaos
+    // decorator (docs/SCENARIOS.md); the schedule names the ranks it hits,
+    // so the same spec is safely forwarded to every worker by `launch`.
+    if let Some(spec) = flags.get("fault") {
+        let plan = FaultPlan::parse(spec).map_err(|e| e.to_string())?;
+        transport = FaultyTransport::wrap(transport, plan);
+    }
     let mut builder = Session::builder(cfg.clone()).transport(transport, rank);
     if let Some(v) = flags.get("telemetry") {
         let v = if v == "true" { "mem" } else { v.as_str() };

@@ -54,6 +54,7 @@ pub struct SyncAccounting {
     syncs: u64,
     bits: u64,
     drift_sum: f64,
+    stale: u64,
 }
 
 impl SyncAccounting {
@@ -77,12 +78,29 @@ impl SyncAccounting {
         self.syncs
     }
 
-    /// Emit the summary scalars (call once at the end of a run).
+    /// Count `n` stale substitutions: sync slots where a straggler missed
+    /// the bounded-staleness deadline and a carried-forward delta stood in
+    /// for its fresh one (the semi-async local-steps path).
+    pub fn add_stale(&mut self, n: u64) {
+        self.stale += n;
+    }
+
+    pub fn stale(&self) -> u64 {
+        self.stale
+    }
+
+    /// Emit the summary scalars (call once at the end of a run). The
+    /// `stale_syncs` scalar only appears when substitutions happened, so
+    /// fully-synchronous runs keep their scalar set (and parity baselines)
+    /// unchanged.
     pub fn emit_scalars(&self, rec: &mut Recorder) {
         rec.set_scalar("syncs", self.syncs as f64);
         if self.syncs > 0 {
             rec.set_scalar("bits_per_sync", self.bits as f64 / self.syncs as f64);
             rec.set_scalar("mean_sync_drift", self.drift_sum / self.syncs as f64);
+        }
+        if self.stale > 0 {
+            rec.set_scalar("stale_syncs", self.stale as f64);
         }
     }
 }
@@ -239,6 +257,21 @@ mod tests {
         SyncAccounting::new().emit_scalars(&mut rec2);
         assert_eq!(rec2.scalar("syncs"), Some(0.0));
         assert_eq!(rec2.scalar("bits_per_sync"), None);
+    }
+
+    #[test]
+    fn stale_syncs_scalar_only_appears_after_substitutions() {
+        let mut rec = Recorder::new();
+        let mut acc = SyncAccounting::new();
+        acc.record(&mut rec, 4, 0.5, 1000);
+        acc.emit_scalars(&mut rec);
+        assert_eq!(rec.scalar("stale_syncs"), None, "fully-sync run adds no scalar");
+        acc.add_stale(2);
+        acc.add_stale(1);
+        assert_eq!(acc.stale(), 3);
+        let mut rec2 = Recorder::new();
+        acc.emit_scalars(&mut rec2);
+        assert_eq!(rec2.scalar("stale_syncs"), Some(3.0));
     }
 
     #[test]

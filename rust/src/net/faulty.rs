@@ -1,0 +1,342 @@
+//! Deterministic fault injection at the [`Transport`] seam.
+//!
+//! [`FaultyTransport`] decorates any transport — the in-process
+//! [`crate::net::AllGather`] barrier (the "loopback wrapper" case: one
+//! shared decorator serves every thread of a threaded group) or a
+//! per-process [`crate::net::SocketTransport`] — and perturbs data-plane
+//! exchanges according to a scripted [`FaultPlan`]: link delays
+//! (stragglers), dropped or truncated payloads, and worker death at a
+//! chosen round. Faults fire on the *sender* side, before the payload is
+//! deposited, so every rank of the group observes the identical mangled
+//! bytes in the identical round and fails (or recovers) in lockstep —
+//! a corrupted round can never leave half the group waiting on a barrier
+//! the other half already abandoned. Worker death goes through the
+//! poison path exactly like a real crash, so peers surface
+//! `transport poisoned` instead of hanging.
+//!
+//! Plans come from a compact scenario string (`kill@2:5,delay@0:3:40`) or
+//! from a seeded per-rank schedule ([`FaultPlan::seeded_delays`]); both are
+//! pure functions of their inputs, so the same scenario reproduces the
+//! same failure bit-for-bit. Rounds are counted per exchanging rank on the
+//! data plane only — control and out-of-band rounds pass through
+//! untouched. See docs/SCENARIOS.md for the scenario format.
+
+use crate::error::{Error, Result};
+use crate::net::transport::{MeasuredWire, Plane, Transport};
+use crate::util::rng::splitmix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// One injected failure mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Stall the sender for `ms` milliseconds before the exchange — a slow
+    /// link / straggler. Trajectory-neutral: the payload is untouched.
+    Delay { ms: u64 },
+    /// Replace the payload with zero bytes — a lost message whose frame
+    /// still arrives (decoders must reject it, not panic).
+    Drop,
+    /// Keep only the first `keep` bytes of the payload — a torn write.
+    Truncate { keep: usize },
+    /// The worker dies mid-round: the group is poisoned and the exchange
+    /// returns the poison error, exactly like a peer crash.
+    Kill,
+}
+
+/// [`Fault`] scheduled at one `(rank, round)` cell of the exchange grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultRule {
+    /// Rank whose exchange is perturbed.
+    pub rank: usize,
+    /// Zero-based data-plane round index at which the fault fires.
+    pub round: u64,
+    pub fault: Fault,
+}
+
+/// A deterministic schedule of [`FaultRule`]s.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    pub fn new(rules: Vec<FaultRule>) -> Self {
+        FaultPlan { rules }
+    }
+
+    /// Parse a comma-separated scenario string. Each entry is
+    /// `kind@rank:round[:arg]` with kinds `delay` (arg = milliseconds,
+    /// default 10), `drop`, `trunc` (arg = bytes kept, default 0) and
+    /// `kill`: `"kill@2:5,delay@0:3:40,drop@1:2,trunc@1:4:7"`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let bad = |entry: &str, why: &str| {
+            Error::Config(format!(
+                "bad fault spec `{entry}`: {why} (expected kind@rank:round[:arg], \
+                 kinds: delay/drop/trunc/kill)"
+            ))
+        };
+        let mut rules = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, at) = entry
+                .split_once('@')
+                .ok_or_else(|| bad(entry, "missing `@`"))?;
+            let mut parts = at.split(':');
+            let rank: usize = parts
+                .next()
+                .and_then(|p| p.parse().ok())
+                .ok_or_else(|| bad(entry, "rank is not a number"))?;
+            let round: u64 = parts
+                .next()
+                .and_then(|p| p.parse().ok())
+                .ok_or_else(|| bad(entry, "round is not a number"))?;
+            let arg: Option<u64> = match parts.next() {
+                None => None,
+                Some(a) => Some(a.parse().map_err(|_| bad(entry, "arg is not a number"))?),
+            };
+            if parts.next().is_some() {
+                return Err(bad(entry, "too many `:` fields"));
+            }
+            let fault = match kind {
+                "delay" => Fault::Delay { ms: arg.unwrap_or(10) },
+                "drop" => Fault::Drop,
+                "trunc" => Fault::Truncate { keep: arg.unwrap_or(0) as usize },
+                "kill" => Fault::Kill,
+                other => return Err(bad(entry, &format!("unknown kind `{other}`"))),
+            };
+            rules.push(FaultRule { rank, round, fault });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// A seeded per-rank straggler schedule: each `(rank, round)` cell of a
+    /// `k × rounds` grid independently delays with probability `rate`,
+    /// drawn from `splitmix64(seed, rank, round)` — the same seed always
+    /// yields the same schedule on every process of the group.
+    pub fn seeded_delays(seed: u64, k: usize, rounds: u64, rate: f64, delay_ms: u64) -> Self {
+        let mut rules = Vec::new();
+        for rank in 0..k {
+            for round in 0..rounds {
+                let mut s = seed ^ ((rank as u64) << 40) ^ round;
+                let draw = (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64;
+                if draw < rate {
+                    rules.push(FaultRule { rank, round, fault: Fault::Delay { ms: delay_ms } });
+                }
+            }
+        }
+        FaultPlan { rules }
+    }
+
+    /// The fault scheduled for `(rank, round)`, if any (first match wins).
+    pub fn fault_for(&self, rank: usize, round: u64) -> Option<Fault> {
+        self.rules
+            .iter()
+            .find(|r| r.rank == rank && r.round == round)
+            .map(|r| r.fault)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn rules(&self) -> &[FaultRule] {
+        &self.rules
+    }
+}
+
+/// A [`Transport`] decorator that executes a [`FaultPlan`]. Wraps either
+/// fabric; see the module docs for the sender-side lockstep guarantee.
+pub struct FaultyTransport {
+    inner: Arc<dyn Transport>,
+    plan: FaultPlan,
+    /// Data-plane rounds completed, per exchanging rank. Indexed by the
+    /// `rank` argument of [`Transport::exchange`], so one shared decorator
+    /// over the in-process barrier counts each thread independently, and a
+    /// per-process decorator over a socket endpoint counts its own rank.
+    rounds: Vec<AtomicU64>,
+}
+
+impl FaultyTransport {
+    pub fn wrap(inner: Arc<dyn Transport>, plan: FaultPlan) -> Arc<Self> {
+        let k = inner.peers();
+        Arc::new(FaultyTransport {
+            inner,
+            plan,
+            rounds: (0..k).map(|_| AtomicU64::new(0)).collect(),
+        })
+    }
+
+    /// Data-plane rounds rank `rank` has entered so far.
+    pub fn rounds_entered(&self, rank: usize) -> u64 {
+        self.rounds[rank].load(Ordering::SeqCst)
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn peers(&self) -> usize {
+        self.inner.peers()
+    }
+
+    fn exchange(&self, rank: usize, mut payload: Vec<u8>, plane: Plane) -> Result<Vec<Arc<Vec<u8>>>> {
+        if plane == Plane::Data {
+            let round = self.rounds[rank].fetch_add(1, Ordering::SeqCst);
+            match self.plan.fault_for(rank, round) {
+                None => {}
+                Some(Fault::Delay { ms }) => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                Some(Fault::Drop) => {
+                    payload.clear();
+                }
+                Some(Fault::Truncate { keep }) => {
+                    payload.truncate(keep);
+                }
+                Some(Fault::Kill) => {
+                    let reason = format!(
+                        "injected fault: worker {rank} killed at data round {round}"
+                    );
+                    self.inner.poison(&reason);
+                    return Err(Error::Net(format!("transport poisoned: {reason}")));
+                }
+            }
+        }
+        self.inner.exchange(rank, payload, plane)
+    }
+
+    fn poison(&self, reason: &str) {
+        self.inner.poison(reason)
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.inner.is_poisoned()
+    }
+
+    fn kind(&self) -> &'static str {
+        self.inner.kind()
+    }
+
+    fn measured(&self) -> Option<MeasuredWire> {
+        self.inner.measured()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::AllGather;
+    use std::thread;
+
+    #[test]
+    fn parse_covers_every_kind_and_rejects_garbage() {
+        let plan = FaultPlan::parse("kill@2:5, delay@0:3:40 ,drop@1:2,trunc@1:4:7").unwrap();
+        assert_eq!(plan.rules().len(), 4);
+        assert_eq!(plan.fault_for(2, 5), Some(Fault::Kill));
+        assert_eq!(plan.fault_for(0, 3), Some(Fault::Delay { ms: 40 }));
+        assert_eq!(plan.fault_for(1, 2), Some(Fault::Drop));
+        assert_eq!(plan.fault_for(1, 4), Some(Fault::Truncate { keep: 7 }));
+        assert_eq!(plan.fault_for(0, 0), None);
+        // defaults
+        let plan = FaultPlan::parse("delay@0:1,trunc@0:2").unwrap();
+        assert_eq!(plan.fault_for(0, 1), Some(Fault::Delay { ms: 10 }));
+        assert_eq!(plan.fault_for(0, 2), Some(Fault::Truncate { keep: 0 }));
+        // empty spec is a valid no-op plan
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        for bad in ["kill", "kill@x:1", "kill@1:y", "warp@1:2", "delay@1:2:z", "kill@1:2:3:4"] {
+            let err = FaultPlan::parse(bad).expect_err(bad);
+            assert!(err.to_string().contains("bad fault spec"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic_and_rate_scaled() {
+        let a = FaultPlan::seeded_delays(42, 4, 100, 0.25, 5);
+        let b = FaultPlan::seeded_delays(42, 4, 100, 0.25, 5);
+        assert_eq!(a, b, "same seed, same schedule");
+        let c = FaultPlan::seeded_delays(43, 4, 100, 0.25, 5);
+        assert_ne!(a, c, "different seed, different schedule");
+        // ~25% of 400 cells; loose bounds to stay robust to the generator.
+        let n = a.rules().len();
+        assert!((40..=180).contains(&n), "rate 0.25 over 400 cells gave {n}");
+        assert!(FaultPlan::seeded_delays(7, 4, 100, 0.0, 5).is_empty());
+    }
+
+    #[test]
+    fn mangled_payload_reaches_every_rank_in_lockstep() {
+        let k = 3;
+        let plan = FaultPlan::parse("drop@1:1,trunc@2:2:1").unwrap();
+        let ft = FaultyTransport::wrap(AllGather::new(k), plan);
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let ft = ft.clone();
+                thread::spawn(move || {
+                    let mut seen = Vec::new();
+                    for _round in 0..3 {
+                        let got = ft.exchange(rank, vec![rank as u8; 4], Plane::Data).unwrap();
+                        seen.push(got.iter().map(|p| p.len()).collect::<Vec<_>>());
+                    }
+                    seen
+                })
+            })
+            .collect();
+        let views: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for v in &views {
+            assert_eq!(v, &views[0], "every rank sees identical bytes per round");
+        }
+        assert_eq!(views[0][0], vec![4, 4, 4], "round 0 untouched");
+        assert_eq!(views[0][1], vec![4, 0, 4], "round 1: rank 1 dropped");
+        assert_eq!(views[0][2], vec![4, 4, 1], "round 2: rank 2 truncated to 1");
+    }
+
+    #[test]
+    fn kill_poisons_the_group_instead_of_hanging() {
+        let k = 3;
+        let ft = FaultyTransport::wrap(AllGather::new(k), FaultPlan::parse("kill@2:1").unwrap());
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let ft = ft.clone();
+                thread::spawn(move || {
+                    let mut errs = Vec::new();
+                    for _round in 0..2 {
+                        if let Err(e) = ft.exchange(rank, vec![rank as u8], Plane::Data) {
+                            errs.push(e.to_string());
+                            break;
+                        }
+                    }
+                    errs
+                })
+            })
+            .collect();
+        for h in handles {
+            let errs = h.join().unwrap();
+            assert_eq!(errs.len(), 1, "every rank errors in round 1");
+            assert!(errs[0].contains("poisoned"), "got: {}", errs[0]);
+            assert!(errs[0].contains("killed at data round 1"), "got: {}", errs[0]);
+        }
+        assert!(ft.is_poisoned());
+    }
+
+    #[test]
+    fn control_and_oob_rounds_pass_through_unscathed() {
+        // The plan targets data round 0; the same payload on the control
+        // and OOB planes is untouched and does not advance the round count.
+        let ft = FaultyTransport::wrap(AllGather::new(1), FaultPlan::parse("drop@0:0").unwrap());
+        let got = ft.exchange(0, vec![9; 8], Plane::Control).unwrap();
+        assert_eq!(got[0].len(), 8);
+        let got = ft.exchange(0, vec![9; 8], Plane::Oob).unwrap();
+        assert_eq!(got[0].len(), 8);
+        assert_eq!(ft.rounds_entered(0), 0);
+        let got = ft.exchange(0, vec![9; 8], Plane::Data).unwrap();
+        assert_eq!(got[0].len(), 0, "data round 0 dropped");
+        assert_eq!(ft.rounds_entered(0), 1);
+    }
+
+    #[test]
+    fn delay_is_trajectory_neutral() {
+        let ft = FaultyTransport::wrap(AllGather::new(1), FaultPlan::parse("delay@0:0:1").unwrap());
+        let got = ft.exchange(0, vec![1, 2, 3], Plane::Data).unwrap();
+        assert_eq!(got[0].as_slice(), &[1, 2, 3]);
+    }
+}

@@ -262,6 +262,92 @@ mod tests {
     }
 
     #[test]
+    fn fuzzed_headers_and_streams_never_panic_or_over_read() {
+        use crate::util::Rng;
+        let mut rng = Rng::seed_from(0xF4A2_2E01);
+
+        // (1) Random byte soup as a header: decode must return Ok or a
+        // structured error — never panic. Random magic almost never
+        // matches, so also exercise the deeper checks by starting from a
+        // valid header and flipping random bytes.
+        for trial in 0..2000u32 {
+            let mut h = [0u8; FRAME_HEADER_LEN];
+            if trial % 2 == 0 {
+                for b in h.iter_mut() {
+                    *b = rng.next_u64() as u8;
+                }
+            } else {
+                let hdr = FrameHeader {
+                    kind: FrameKind::Data,
+                    rank: rng.next_u64() as u32,
+                    round: rng.next_u64(),
+                    len: (rng.below(MAX_FRAME_PAYLOAD as u64 + 1)) as u32,
+                };
+                h = hdr.encode();
+                let flips = 1 + rng.below(3) as usize;
+                for _ in 0..flips {
+                    let at = rng.below(FRAME_HEADER_LEN as u64) as usize;
+                    h[at] ^= (rng.next_u64() as u8) | 1;
+                }
+            }
+            if let Ok(hdr) = FrameHeader::decode(&h) {
+                // Anything decode accepts must satisfy its own invariants.
+                assert!(hdr.len as usize <= MAX_FRAME_PAYLOAD);
+                assert_eq!(FrameKind::from_u8(hdr.kind as u8).unwrap(), hdr.kind);
+            }
+        }
+
+        // (2) Random truncations/extensions of a valid frame stream: the
+        // reader must consume at most one frame's bytes, never hang on a
+        // finite cursor, and return structured errors for short input.
+        let payload: Vec<u8> = (0..257u32).map(|i| i as u8).collect();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, FrameKind::Oob, 7, 41, &payload).unwrap();
+        for _ in 0..500 {
+            let cut = rng.below(wire.len() as u64 + 1) as usize;
+            let mut cursor = &wire[..cut];
+            match read_frame(&mut cursor) {
+                Ok((hdr, got)) => {
+                    assert_eq!(cut, wire.len(), "a partial stream must not parse");
+                    assert_eq!((hdr.kind, hdr.rank, hdr.round), (FrameKind::Oob, 7, 41));
+                    assert_eq!(got, payload);
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    assert!(
+                        msg.contains("header") || msg.contains("payload"),
+                        "structured error expected, got: {msg}"
+                    );
+                }
+            }
+            // Over-read check: the cursor advanced by at most one frame.
+            assert!(wire[..cut].len() - cursor.len() <= FRAME_HEADER_LEN + payload.len());
+        }
+
+        // (3) Corrupt `len` fields over a real payload: the reader either
+        // errors or returns exactly the advertised bytes — bounded by the
+        // cap, so a corrupt header cannot force a giant allocation.
+        for _ in 0..200 {
+            let mut bad = wire.clone();
+            let fake_len = rng.next_u64() as u32;
+            bad[20..24].copy_from_slice(&fake_len.to_le_bytes());
+            match read_frame(&mut bad.as_slice()) {
+                Ok((hdr, got)) => {
+                    assert_eq!(got.len(), hdr.len as usize);
+                    assert!(got.len() <= payload.len());
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    assert!(
+                        msg.contains("cap") || msg.contains("payload"),
+                        "structured error expected, got: {msg}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn kinds_map_planes_and_roundtrip_u8() {
         use crate::net::Plane;
         assert_eq!(FrameKind::for_plane(Plane::Data), FrameKind::Data);

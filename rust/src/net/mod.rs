@@ -14,13 +14,18 @@
 //!   connections, measured per-link bytes ([`MeasuredWire`]).
 //! * [`frame`] — the versioned length-framed message envelope the socket
 //!   fabric speaks (docs/WIRE.md).
+//! * [`faulty`] — [`FaultyTransport`]: a deterministic fault-injection
+//!   decorator over either fabric (delays, drops, truncation, worker
+//!   death), scripted by a [`FaultPlan`] (docs/SCENARIOS.md).
 //! * [`NetModel`] — α-β timing for point-to-point and all-to-all rounds.
 //! * [`TrafficStats`] — exact bits/messages/simulated-seconds accounting.
 
+pub mod faulty;
 pub mod frame;
 pub mod socket;
 pub mod transport;
 
+pub use faulty::{Fault, FaultPlan, FaultRule, FaultyTransport};
 pub use socket::{connect_group, SocketHub, SocketOpts, SocketTransport};
 pub use transport::{AllGather, MeasuredWire, Plane, PoisonGuard, Transport};
 

@@ -1165,6 +1165,40 @@ mod tests {
     }
 
     #[test]
+    fn poison_broadcast_survives_concurrent_measured_snapshots() {
+        // Regression: `poison()` takes the io lock with a bounded
+        // try_lock retry loop so a *transient* holder — `measured()`
+        // snapshotting the byte tally — cannot make it silently skip the
+        // peer ABORT broadcast. Hammer `measured()` on the poisoner while
+        // a peer is blocked mid-round: the reason must still travel on the
+        // ABORT frame instead of the peer timing out.
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let group = connect_group("127.0.0.1:0", 2, SocketOpts::default()).unwrap();
+        let t1 = group[1].clone();
+        let blocked = thread::spawn(move || t1.exchange(1, vec![1], Plane::Data));
+        let stop = Arc::new(AtomicBool::new(false));
+        let hammer = {
+            let t0 = group[0].clone();
+            let stop = stop.clone();
+            thread::spawn(move || {
+                let mut snaps = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let m = t0.measured().expect("socket fabric always measures");
+                    assert_eq!(m.rank, 0);
+                    snaps += 1;
+                }
+                snaps
+            })
+        };
+        group[0].poison("chaos kill");
+        let err = blocked.join().unwrap().expect_err("poison interrupts the round");
+        let msg = err.to_string();
+        assert!(msg.contains("chaos kill"), "ABORT must not be skipped under contention: {msg}");
+        stop.store(true, Ordering::Relaxed);
+        assert!(hammer.join().unwrap() > 0, "snapshots actually contended the io lock");
+    }
+
+    #[test]
     fn connect_gives_up_at_the_deadline() {
         let opts = SocketOpts { timeout: Some(Duration::from_millis(200)) };
         let begun = Instant::now();

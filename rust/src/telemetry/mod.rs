@@ -195,6 +195,9 @@ pub struct Counters {
     pub codec_refreshes: u64,
     /// Allocation events while telemetry was active.
     pub allocs: u64,
+    /// Fault events observed (injected faults, topology rewires, stale
+    /// sync substitutions). Exactly 0 on a fault-free static run.
+    pub faults: u64,
 }
 
 /// One closed step of telemetry (`Copy` — ring storage is allocation-free).
@@ -472,6 +475,29 @@ impl Telemetry {
         }
     }
 
+    /// Record one fault event — an injected network fault taking effect,
+    /// a time-varying-topology rewire, or a stale-sync substitution.
+    /// Streams an additive `{"event":"fault",...}` record to the JSONL
+    /// sink (schema stays 1: fault events are a new event kind, existing
+    /// kinds are unchanged) and bumps the `faults` run counter. Fault-free
+    /// runs emit none, so event streams stay bit-identical without faults.
+    pub fn on_fault(&mut self, kind: &str, rank: usize, t: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.counters.faults += 1;
+        if let Some(sink) = &self.sink {
+            if let Ok(mut s) = sink.lock() {
+                s.write(&Json::obj([
+                    ("event", Json::Str("fault".into())),
+                    ("kind", Json::Str(kind.into())),
+                    ("rank", Json::Num(rank as f64)),
+                    ("t", Json::Num(t as f64)),
+                ]));
+            }
+        }
+    }
+
     /// Close step `t`: fold the per-step marks into a [`StepRecord`],
     /// merge spans into the run totals, push the record into the ring,
     /// stream it to the JSONL sink if one is attached, and reset the
@@ -574,6 +600,7 @@ impl Telemetry {
             ("level_updates", Json::Num(c.level_updates as f64)),
             ("codec_refreshes", Json::Num(c.codec_refreshes as f64)),
             ("allocs", Json::Num(c.allocs as f64)),
+            ("faults", Json::Num(c.faults as f64)),
             ("spans", self.totals.to_json()),
             ("links", Json::Num(link_totals.len() as f64)),
         ];
@@ -922,6 +949,22 @@ mod tests {
             links[0].as_array().unwrap().iter().map(|j| j.as_f64().unwrap()).collect::<Vec<_>>(),
             vec![1.0, 0.0, 64.0]
         );
+    }
+
+    #[test]
+    fn fault_events_count_and_surface_in_the_summary() {
+        // Disabled recorder: inert, no counter movement.
+        let mut off = Telemetry::off();
+        off.on_fault("kill", 2, 5);
+        assert_eq!(off.counters().faults, 0);
+
+        let mut t = Telemetry::new(&TelemetryConfig::memory(), &Json::Null).unwrap();
+        t.on_fault("rewire", 0, 10);
+        t.on_fault("stale", 3, 12);
+        assert_eq!(t.counters().faults, 2);
+        let s = t.summary_event(None, &[], None);
+        let back = Json::parse(&s.dump()).unwrap();
+        assert_eq!(back.get("faults").unwrap().as_usize(), Some(2));
     }
 
     #[test]

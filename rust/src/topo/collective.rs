@@ -19,11 +19,12 @@
 //! diagnostic (not an identity) elsewhere.
 
 use super::cost::{self, RoundCost, AGG_PIGGYBACK_BYTES};
-use super::{gossip_neighbors, Topology};
+use super::{circulant_neighbors, gossip_neighbors, Topology};
 use crate::error::Result;
 use crate::net::{bits_to_bytes, NetModel, Plane, TrafficStats, Transport};
+use crate::util::rng::splitmix64;
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// A directed link `(sender, receiver)`.
 pub type Link = (usize, usize);
@@ -79,6 +80,17 @@ pub trait Collective: Send + Sync {
         let c = self.round_cost(model, bits_each);
         traffic.record_modeled(c.wire_bits, c.messages, c.secs);
     }
+
+    /// Advance a time-varying schedule to step `t` (1-based). Returns
+    /// `true` when the edge set changed — callers must then refresh any
+    /// cached [`Self::recipients`] sets. Static collectives never change;
+    /// [`RewiringGossip`] re-draws its graph every `rewire_every` steps.
+    /// Deterministic in `t`, so every rank of a group converges on the
+    /// same graph without communicating.
+    fn advance_round(&self, t: u64) -> bool {
+        let _ = t;
+        false
+    }
 }
 
 /// Build the collective for a topology over `k` ranks.
@@ -88,6 +100,25 @@ pub fn build_collective(topo: Topology, k: usize) -> Result<Arc<dyn Collective>>
             Ok(Arc::new(GossipCollective::new(k, degree, seed)))
         }
         _ => Ok(Arc::new(ExactCollective { topo, k })),
+    }
+}
+
+/// Like [`build_collective`], with an optional time-varying schedule:
+/// `rewire_every > 0` over a gossip topology yields a [`RewiringGossip`]
+/// whose edge set is re-drawn every `rewire_every` steps (driven by
+/// [`Collective::advance_round`]). Exact topologies and `rewire_every = 0`
+/// fall through to the static builder unchanged — the default config is
+/// bit-identical to the pre-schedule behavior.
+pub fn build_collective_dynamic(
+    topo: Topology,
+    k: usize,
+    rewire_every: u64,
+) -> Result<Arc<dyn Collective>> {
+    match topo {
+        Topology::Gossip { degree, seed } if rewire_every > 0 => {
+            Ok(Arc::new(RewiringGossip::new(k, degree, seed, rewire_every)))
+        }
+        _ => build_collective(topo, k),
     }
 }
 
@@ -244,6 +275,118 @@ impl Collective for GossipCollective {
                 }
             }
         }
+    }
+}
+
+/// Time-varying gossip: the graph is re-drawn every `rewire_every` steps
+/// from a per-epoch seed (à la decentralized SEG on time-varying networks,
+/// Beznosikov et al. 2021). Epoch graphs are *degree-regular* circulants
+/// ([`circulant_neighbors`]) so neighborhood membership churns while every
+/// node's neighborhood size stays fixed — per-replica algorithm states
+/// (sized once at build) remain valid across rewires. The schedule is a
+/// pure function of `(seed, epoch)`: every rank derives the same epoch
+/// graph from its own clock, no coordination round needed, and the same
+/// seed reproduces the same churn bit-for-bit.
+pub struct RewiringGossip {
+    k: usize,
+    degree: usize,
+    seed: u64,
+    rewire_every: u64,
+    state: Mutex<RewireState>,
+}
+
+struct RewireState {
+    epoch: u64,
+    /// Closed neighborhoods of the current epoch (sorted, self included).
+    closed: Vec<Vec<usize>>,
+    /// Open degree per rank (uniform by construction).
+    degrees: Vec<usize>,
+}
+
+impl RewiringGossip {
+    pub fn new(k: usize, degree: usize, seed: u64, rewire_every: u64) -> Self {
+        assert!(rewire_every > 0, "rewire_every = 0 means a static graph");
+        let (closed, degrees) = Self::epoch_graph(k, degree, seed, 0);
+        RewiringGossip {
+            k,
+            degree,
+            seed,
+            rewire_every,
+            state: Mutex::new(RewireState { epoch: 0, closed, degrees }),
+        }
+    }
+
+    /// The epoch active at 1-based step `t`: steps `1..=rewire_every` run
+    /// epoch 0, the next `rewire_every` steps epoch 1, and so on.
+    pub fn epoch_at(&self, t: u64) -> u64 {
+        t.saturating_sub(1) / self.rewire_every
+    }
+
+    fn epoch_graph(
+        k: usize,
+        degree: usize,
+        seed: u64,
+        epoch: u64,
+    ) -> (Vec<Vec<usize>>, Vec<usize>) {
+        let mut s = seed ^ epoch.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let open = circulant_neighbors(k, degree, splitmix64(&mut s));
+        let degrees: Vec<usize> = open.iter().map(|n| n.len()).collect();
+        let closed = open
+            .into_iter()
+            .enumerate()
+            .map(|(i, mut n)| {
+                n.push(i);
+                n.sort_unstable();
+                n
+            })
+            .collect();
+        (closed, degrees)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RewireState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Collective for RewiringGossip {
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn topology(&self) -> Topology {
+        Topology::Gossip { degree: self.degree, seed: self.seed }
+    }
+
+    fn recipients(&self, rank: usize) -> Vec<usize> {
+        self.lock().closed[rank].clone()
+    }
+
+    fn round_cost(&self, model: &NetModel, bits_each: &[u64]) -> RoundCost {
+        cost::gossip(model, bits_each, &self.lock().degrees)
+    }
+
+    fn link_loads_into(&self, bits_each: &[u64], out: &mut Vec<(Link, f64)>) {
+        out.clear();
+        for (i, neigh) in self.lock().closed.iter().enumerate() {
+            for &j in neigh {
+                if j != i {
+                    out.push(((i, j), bits_to_bytes(bits_each[i]) as f64));
+                }
+            }
+        }
+    }
+
+    fn advance_round(&self, t: u64) -> bool {
+        let epoch = self.epoch_at(t);
+        let mut st = self.lock();
+        if epoch == st.epoch {
+            return false;
+        }
+        let (closed, degrees) = Self::epoch_graph(self.k, self.degree, self.seed, epoch);
+        st.closed = closed;
+        st.degrees = degrees;
+        st.epoch = epoch;
+        true
     }
 }
 
@@ -436,6 +579,69 @@ mod tests {
         lr.record(ring.as_ref(), &bits);
         assert_eq!(lr.links(), 6);
         assert!((lr.max_link_bytes() - lr.total_bytes() / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_collectives_never_advance() {
+        for kind in ["full-mesh", "star", "ring", "hierarchical", "gossip"] {
+            let coll = mk(kind, 6);
+            for t in 1..=50 {
+                assert!(!coll.advance_round(t), "{kind} rewired at t={t}");
+            }
+        }
+        // build_collective_dynamic with rewire_every = 0 is the static path
+        let topo = Topology::Gossip { degree: 3, seed: 9 };
+        let coll = build_collective_dynamic(topo, 8, 0).unwrap();
+        assert!(!coll.advance_round(100));
+        assert_eq!(coll.recipients(0), build_collective(topo, 8).unwrap().recipients(0));
+    }
+
+    #[test]
+    fn rewiring_gossip_advances_exactly_at_epoch_boundaries() {
+        let topo = Topology::Gossip { degree: 4, seed: 11 };
+        let coll = build_collective_dynamic(topo, 12, 5).unwrap();
+        assert!(!coll.topology().is_exact());
+        for t in 1..=5 {
+            assert!(!coll.advance_round(t), "epoch 0 covers steps 1..=5, t={t}");
+        }
+        assert!(coll.advance_round(6), "step 6 opens epoch 1");
+        for t in 7..=10 {
+            assert!(!coll.advance_round(t), "epoch 1 covers steps 6..=10, t={t}");
+        }
+        assert!(coll.advance_round(11), "step 11 opens epoch 2");
+    }
+
+    #[test]
+    fn rewiring_gossip_is_deterministic_and_size_preserving() {
+        let k = 12;
+        let mk_dyn = || {
+            build_collective_dynamic(Topology::Gossip { degree: 4, seed: 11 }, k, 5).unwrap()
+        };
+        let (a, b) = (mk_dyn(), mk_dyn());
+        let size0 = a.recipients(0).len();
+        let mut membership = Vec::new();
+        for t in 1..=100u64 {
+            a.advance_round(t);
+            b.advance_round(t);
+            for r in 0..k {
+                let (ra, rb) = (a.recipients(r), b.recipients(r));
+                assert_eq!(ra, rb, "two instances diverged at t={t} rank {r}");
+                assert!(ra.contains(&r), "self always included");
+                assert!(ra.windows(2).all(|w| w[0] < w[1]), "sorted");
+                assert_eq!(ra.len(), size0, "neighborhood size drifted at t={t}");
+            }
+            membership.push(a.recipients(0));
+        }
+        assert!(
+            membership.iter().any(|m| m != &membership[0]),
+            "20 epochs never changed rank 0's neighborhood"
+        );
+        // cost model and link loads follow the current epoch's degrees
+        let model = NetModel::gbe();
+        let bits = vec![8 * 100u64; k];
+        let cost = a.round_cost(&model, &bits);
+        let total: f64 = a.link_loads(&bits).iter().map(|(_, b)| b).sum();
+        assert!((total - cost.wire_bits as f64 / 8.0).abs() < 1e-6);
     }
 
     #[test]

@@ -33,7 +33,9 @@
 pub mod collective;
 pub mod cost;
 
-pub use collective::{build_collective, Collective, Link, LinkTraffic};
+pub use collective::{
+    build_collective, build_collective_dynamic, Collective, Link, LinkTraffic, RewiringGossip,
+};
 pub use cost::{RoundCost, AGG_PIGGYBACK_BYTES};
 
 use crate::config::TopoConfig;
@@ -186,6 +188,57 @@ pub fn gossip_neighbors(k: usize, degree: usize, seed: u64) -> Vec<Vec<usize>> {
     adj.into_iter().map(|s| s.into_iter().collect()).collect()
 }
 
+/// Build one epoch of a time-varying gossip schedule: a *degree-regular*
+/// circulant graph where `v`'s neighbors are `v ± o (mod k)` for a seeded
+/// offset set. Unlike [`gossip_neighbors`], every node gets exactly the
+/// same open degree — the invariant that lets per-replica algorithm states
+/// survive rewiring (neighborhood *membership* churns between epochs,
+/// neighborhood *size* never does). At least one offset is coprime with
+/// `k`, so every epoch's graph is connected. The realized degree is the
+/// request rounded down to what a circulant on `k` nodes can hit exactly
+/// (`2·⌊degree/2⌋`, plus 1 via the diameter offset when `k` is even),
+/// after clamping the request into `[2, k−1]`. Returns open neighborhoods,
+/// symmetric and sorted; deterministic in `(k, degree, seed)`.
+pub fn circulant_neighbors(k: usize, degree: usize, seed: u64) -> Vec<Vec<usize>> {
+    if k <= 1 {
+        return vec![Vec::new(); k];
+    }
+    let degree = degree.max(2).min(k - 1);
+    // Offsets 1..=⌊(k−1)/2⌋ contribute two neighbors each; k/2 (k even)
+    // contributes one. Shuffle the two-sided candidates, then make sure a
+    // k-coprime offset is among the picks (connectivity).
+    let mut cands: Vec<usize> = (1..=(k - 1) / 2).collect();
+    let mut rng = Rng::seed_from(seed ^ (k as u64) << 32 ^ (degree as u64) << 1);
+    rng.shuffle(&mut cands);
+    let take = (degree / 2).min(cands.len());
+    if take > 0 && !cands[..take].iter().any(|&o| gcd(o, k) == 1) {
+        if let Some(pos) = cands.iter().position(|&o| gcd(o, k) == 1) {
+            cands.swap(take - 1, pos);
+        }
+    }
+    let mut offsets: Vec<usize> = cands.into_iter().take(take).collect();
+    if degree % 2 == 1 && k % 2 == 0 {
+        offsets.push(k / 2);
+    }
+    let mut adj = vec![std::collections::BTreeSet::new(); k];
+    for (v, nv) in adj.iter_mut().enumerate() {
+        for &o in &offsets {
+            nv.insert((v + o) % k);
+            nv.insert((v + k - o) % k);
+        }
+    }
+    adj.into_iter().map(|s| s.into_iter().collect()).collect()
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,5 +367,56 @@ mod tests {
         let a = gossip_neighbors(16, 5, 1);
         let b = gossip_neighbors(16, 5, 2);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn circulant_is_degree_regular_symmetric_connected_deterministic() {
+        for (k, deg) in [(2usize, 2usize), (3, 2), (5, 2), (6, 2), (8, 3), (12, 4), (16, 5)] {
+            for seed in 0..8u64 {
+                let a = circulant_neighbors(k, deg, seed);
+                assert_eq!(a, circulant_neighbors(k, deg, seed), "deterministic k={k}");
+                // degree-regular: every node has the same open degree
+                let d0 = a[0].len();
+                for (i, n) in a.iter().enumerate() {
+                    assert_eq!(n.len(), d0, "irregular at node {i}, k={k} seed={seed}");
+                    assert!(!n.contains(&i), "self loop at {i}");
+                    assert!(n.windows(2).all(|w| w[0] < w[1]), "unsorted");
+                    for &j in n {
+                        assert!(a[j].contains(&i), "edge {i}-{j} not symmetric");
+                    }
+                }
+                assert!(d0 >= 1 && d0 <= deg.max(2), "k={k} deg={deg} got {d0}");
+                // connectivity via BFS (a coprime offset is always included)
+                let mut seen = vec![false; k];
+                let mut stack = vec![0usize];
+                seen[0] = true;
+                while let Some(i) = stack.pop() {
+                    for &j in &a[i] {
+                        if !seen[j] {
+                            seen[j] = true;
+                            stack.push(j);
+                        }
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "disconnected k={k} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn circulant_membership_varies_across_seeds_but_size_does_not() {
+        // The rewiring invariant: across epochs (here: seeds) the edge set
+        // churns while every node's neighborhood size stays fixed.
+        let graphs: Vec<_> = (0..20u64).map(|s| circulant_neighbors(12, 4, s)).collect();
+        let size = graphs[0][0].len();
+        for g in &graphs {
+            for n in g {
+                assert_eq!(n.len(), size);
+            }
+        }
+        assert!(
+            graphs.iter().any(|g| g != &graphs[0]),
+            "20 seeds never rewired the k=12 degree-4 circulant"
+        );
     }
 }

@@ -1,0 +1,344 @@
+//! Hostile-network scenario suite: deterministic fault injection at the
+//! [`qgenx::net::Transport`] seam, time-varying gossip schedules, and the
+//! bounded-staleness semi-async local family (docs/SCENARIOS.md).
+//!
+//! Every scenario must terminate with either a structured error or a
+//! converged run — never a deadlock or a panic — and the same seed must
+//! reproduce the same outcome bit-for-bit:
+//!
+//! * slow link (seeded straggler delays): trajectory-neutral — delays cost
+//!   wall-clock only, the bits and the gap series are untouched;
+//! * dropped / truncated payload: every rank of the group decodes the
+//!   identical mangled bytes in the identical round and fails in lockstep
+//!   with a structured codec error;
+//! * kill-at-round-k: the group poisons instead of hanging, on both the
+//!   in-process barrier and the framed socket fabric;
+//! * restart-from-shards: a coordinated checkpoint taken before an
+//!   injected kill resumes on a fresh fabric and matches the fault-free
+//!   run bit-for-bit;
+//! * time-varying gossip: a rewiring edge schedule stays reproducible and
+//!   converges, and the static default emits no rewire accounting at all;
+//! * bounded staleness: modeled deadline misses substitute carried deltas
+//!   deterministically; rate 0 is bit-identical to the synchronous family.
+
+use qgenx::config::ExperimentConfig;
+use qgenx::coordinator::{run_experiment, Checkpoint, Session};
+use qgenx::metrics::Recorder;
+use qgenx::net::{connect_group, AllGather, FaultPlan, FaultyTransport, SocketOpts, Transport};
+use std::sync::Arc;
+use std::thread;
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 3;
+    cfg.iters = 60;
+    cfg.eval_every = 20;
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.dim = 12;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 0.3;
+    cfg.quant.update_every = 30;
+    cfg
+}
+
+/// Step until the session errors; returns (iteration, error message).
+/// A session that finishes cleanly returns its "already completed" error,
+/// which no fault assertion matches — so a fault that fails to fire shows
+/// up as a loud assertion failure, not a false pass.
+fn step_until_err(sess: &mut Session) -> (usize, String) {
+    loop {
+        if let Err(e) = sess.step() {
+            return (sess.iteration(), e.to_string());
+        }
+    }
+}
+
+/// Drive one full K-thread run over the given shared transport; returns
+/// every rank's recorder.
+fn run_group(cfg: &ExperimentConfig, tr: &Arc<dyn Transport>) -> Vec<Recorder> {
+    thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.workers)
+            .map(|rank| {
+                let cfg = cfg.clone();
+                let tr = tr.clone();
+                s.spawn(move || {
+                    let mut sess = Session::builder(cfg.clone()).transport(tr, rank).build().unwrap();
+                    sess.run_to(cfg.iters).unwrap();
+                    sess.into_recorder()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn seeded_straggler_delays_are_trajectory_neutral() {
+    let cfg = base_cfg();
+    let reference = run_experiment(&cfg).unwrap();
+
+    // ~20% of the first 40 (rank, round) cells stall for 2 ms each.
+    let plan = FaultPlan::seeded_delays(0xC1A05, cfg.workers, 40, 0.2, 2);
+    assert!(!plan.is_empty(), "the schedule must actually inject delays");
+    let slow: Arc<dyn Transport> = FaultyTransport::wrap(AllGather::new(cfg.workers), plan);
+    let recs = run_group(&cfg, &slow);
+
+    // Delays cost wall-clock only: the gap trajectory and the exact wire
+    // accounting match the fault-free loopback run bit-for-bit.
+    assert_eq!(
+        reference.get("gap").unwrap().ys(),
+        recs[0].get("gap").unwrap().ys(),
+        "stragglers must not change the trajectory"
+    );
+    assert_eq!(reference.scalar("rounds"), recs[0].scalar("rounds"));
+}
+
+#[test]
+fn dropped_payload_fails_every_rank_in_lockstep_with_a_codec_error() {
+    // fp32 mode: a dropped (zero-byte) payload is a structured length
+    // mismatch on decode — the same error, at the same step, on every
+    // rank, because the fault mangles the payload *before* the deposit.
+    let mut cfg = base_cfg();
+    cfg.quant.mode = qgenx::config::QuantMode::Fp32;
+    for spec in ["drop@1:5", "trunc@1:5:3"] {
+        let plan = FaultPlan::parse(spec).unwrap();
+        let tr: Arc<dyn Transport> = FaultyTransport::wrap(AllGather::new(cfg.workers), plan);
+        let outcomes: Vec<(usize, String)> = thread::scope(|s| {
+            let handles: Vec<_> = (0..cfg.workers)
+                .map(|rank| {
+                    let cfg = cfg.clone();
+                    let tr = tr.clone();
+                    s.spawn(move || {
+                        let mut sess =
+                            Session::builder(cfg).transport(tr, rank).build().unwrap();
+                        step_until_err(&mut sess)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (t, msg) in &outcomes {
+            assert_eq!((*t, msg), (outcomes[0].0, &outcomes[0].1), "{spec}: lockstep failure");
+            assert!(msg.contains("fp32 payload"), "{spec}: structured codec error, got: {msg}");
+        }
+        assert!(outcomes[0].0 < cfg.iters, "{spec}: the fault fired mid-run");
+    }
+}
+
+#[test]
+fn kill_at_round_k_poisons_the_group_on_the_inprocess_fabric() {
+    let cfg = base_cfg();
+    let plan = FaultPlan::parse("kill@2:7").unwrap();
+    let tr: Arc<dyn Transport> = FaultyTransport::wrap(AllGather::new(cfg.workers), plan);
+    let outcomes: Vec<(usize, String)> = thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.workers)
+            .map(|rank| {
+                let cfg = cfg.clone();
+                let tr = tr.clone();
+                s.spawn(move || {
+                    let mut sess = Session::builder(cfg).transport(tr, rank).build().unwrap();
+                    step_until_err(&mut sess)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, (_, msg)) in outcomes.iter().enumerate() {
+        assert!(msg.contains("poisoned"), "rank {rank}: {msg}");
+        assert!(msg.contains("killed at data round 7"), "rank {rank}: {msg}");
+    }
+    assert!(tr.is_poisoned());
+}
+
+#[test]
+fn kill_at_round_k_poisons_the_group_on_the_socket_fabric() {
+    // Same scenario over real framed sockets: each endpoint wears its own
+    // decorator with the same plan (the multi-process shape `qgenx worker
+    // --fault` uses). The killed rank poisons its endpoint, the ABORT
+    // frame carries the reason to every blocked peer — nobody hangs.
+    let cfg = base_cfg();
+    let plan = FaultPlan::parse("kill@1:2").unwrap();
+    let group = connect_group("127.0.0.1:0", cfg.workers, SocketOpts::default()).unwrap();
+    let outcomes: Vec<(usize, String)> = thread::scope(|s| {
+        let handles: Vec<_> = group
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(rank, sock)| {
+                let cfg = cfg.clone();
+                let plan = plan.clone();
+                s.spawn(move || {
+                    let tr: Arc<dyn Transport> = FaultyTransport::wrap(sock, plan);
+                    let mut sess = Session::builder(cfg).transport(tr, rank).build().unwrap();
+                    step_until_err(&mut sess)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, (_, msg)) in outcomes.iter().enumerate() {
+        assert!(msg.contains("poisoned"), "rank {rank}: {msg}");
+        assert!(msg.contains("killed at data round 2"), "rank {rank}: {msg}");
+    }
+}
+
+#[test]
+fn restart_from_shards_after_an_injected_kill_matches_the_fault_free_run() {
+    let cfg = base_cfg();
+    let k = cfg.workers;
+    let half = cfg.iters / 2;
+    let reference = run_experiment(&cfg).unwrap();
+
+    // Phase 1: a clean group runs to the halfway point and takes TWO
+    // coordinated checkpoints at the same iteration (both barriers agree):
+    // one shard set to feed the killed continuation, one to restart from.
+    let clean = AllGather::new(k);
+    let cps: Vec<(Checkpoint, Checkpoint)> = thread::scope(|s| {
+        let handles: Vec<_> = (0..k)
+            .map(|rank| {
+                let cfg = cfg.clone();
+                let tr = clean.clone();
+                s.spawn(move || {
+                    let mut sess = Session::builder(cfg).transport(tr, rank).build().unwrap();
+                    sess.run_to(half).unwrap();
+                    (sess.checkpoint().unwrap(), sess.checkpoint().unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    drop(clean);
+    let (cps_doomed, cps_fresh): (Vec<Checkpoint>, Vec<Checkpoint>) = cps.into_iter().unzip();
+
+    // Phase 2: resume on a faulty fabric whose plan kills rank 1 three
+    // data rounds in — every rank errors with the poison reason.
+    let plan = FaultPlan::parse("kill@1:3").unwrap();
+    let doomed: Arc<dyn Transport> = FaultyTransport::wrap(AllGather::new(k), plan);
+    let msgs: Vec<String> = thread::scope(|s| {
+        let handles: Vec<_> = cps_doomed
+            .into_iter()
+            .enumerate()
+            .map(|(rank, cp)| {
+                let tr = doomed.clone();
+                s.spawn(move || {
+                    let mut sess = Session::resume_with_transport(cp, tr, rank).unwrap();
+                    step_until_err(&mut sess).1
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (rank, msg) in msgs.iter().enumerate() {
+        assert!(msg.contains("poisoned"), "rank {rank}: {msg}");
+        assert!(msg.contains("killed at data round 3"), "rank {rank}: {msg}");
+    }
+
+    // Phase 3: the surviving shard set restarts on a fresh clean fabric
+    // and finishes the run — bit-for-bit the fault-free trajectory.
+    let fresh = AllGather::new(k);
+    let recs: Vec<Recorder> = thread::scope(|s| {
+        let handles: Vec<_> = cps_fresh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, cp)| {
+                let tr = fresh.clone();
+                let iters = cfg.iters;
+                s.spawn(move || {
+                    let mut sess = Session::resume_with_transport(cp, tr, rank).unwrap();
+                    sess.run_to(iters).unwrap();
+                    sess.into_recorder()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(
+        reference.get("gap").unwrap().ys(),
+        recs[0].get("gap").unwrap().ys(),
+        "restart-from-shards must continue the fault-free trajectory bit-for-bit"
+    );
+    assert_eq!(reference.scalar("rounds"), recs[0].scalar("rounds"));
+    assert_eq!(reference.scalar("level_updates"), recs[0].scalar("level_updates"));
+}
+
+#[test]
+fn time_varying_gossip_is_reproducible_and_converges() {
+    let mut cfg = base_cfg();
+    cfg.workers = 12;
+    cfg.iters = 150;
+    cfg.eval_every = 50;
+    cfg.topo.kind = "gossip".into();
+    cfg.topo.degree = 4;
+    cfg.topo.rewire_every = 5;
+
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(
+        a.get("gap").unwrap().ys(),
+        b.get("gap").unwrap().ys(),
+        "same seed, same rewire schedule, same trajectory"
+    );
+    assert_eq!(a.get("consensus_dist").unwrap().ys(), b.get("consensus_dist").unwrap().ys());
+    assert_eq!(a.scalar("total_bits"), b.scalar("total_bits"));
+
+    // 150 steps / 5-step epochs = 30 epochs → 29 edge-set advances, all
+    // surfaced in the run summary.
+    assert_eq!(a.scalar("rewires"), Some(29.0));
+
+    // The run stays a run: finite gap that does not blow up under churn.
+    let gaps = a.get("gap").unwrap().ys();
+    assert!(gaps.iter().all(|g| g.is_finite()), "gap must stay finite under churn: {gaps:?}");
+    let cons = a.get("consensus_dist").unwrap().ys();
+    assert!(cons.iter().all(|c| c.is_finite()));
+
+    // The static default emits no rewire accounting at all — fault-free
+    // runs keep their scalar set (and frozen parity baselines) unchanged.
+    cfg.topo.rewire_every = 0;
+    let static_run = run_experiment(&cfg).unwrap();
+    assert_eq!(static_run.scalar("rewires"), None);
+    assert!(static_run.get("gap").unwrap().last().unwrap().is_finite());
+}
+
+#[test]
+fn bounded_staleness_is_reproducible_and_counts_substitutions() {
+    let mut cfg = base_cfg();
+    cfg.iters = 120;
+    cfg.eval_every = 40;
+    cfg.local.steps = 4;
+    cfg.local.staleness = 2;
+    cfg.local.straggler_rate = 0.3;
+
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(
+        a.get("gap").unwrap().ys(),
+        b.get("gap").unwrap().ys(),
+        "modeled deadlines are seeded: same run, same substitutions, same trajectory"
+    );
+    assert_eq!(a.scalar("stale_syncs"), b.scalar("stale_syncs"));
+    let stale = a.scalar("stale_syncs").expect("rate 0.3 over 30 syncs must substitute");
+    assert!(stale > 0.0);
+    // Substitutions change the resync means, so the semi-async trajectory
+    // genuinely differs from the synchronous one — but the deadline is
+    // modeled, not physical: every payload still moves exactly once, so
+    // the round/sync structure is rate-invariant (encoded bit counts may
+    // drift with the trajectory under the adaptive codec).
+    let mut sync_cfg = cfg.clone();
+    sync_cfg.local.straggler_rate = 0.0;
+    let sync = run_experiment(&sync_cfg).unwrap();
+    assert_ne!(a.get("gap").unwrap().ys(), sync.get("gap").unwrap().ys());
+    assert_eq!(a.scalar("rounds"), sync.scalar("rounds"));
+    assert_eq!(a.scalar("syncs"), sync.scalar("syncs"));
+
+    // Rate 0 with a staleness cap configured is bit-identical to the plain
+    // synchronous local family — the semi-async path is fully dormant.
+    let mut plain = base_cfg();
+    plain.iters = 120;
+    plain.eval_every = 40;
+    plain.local.steps = 4;
+    let reference = run_experiment(&plain).unwrap();
+    assert_eq!(reference.get("gap").unwrap().ys(), sync.get("gap").unwrap().ys());
+    assert_eq!(reference.get("sync_drift").unwrap().ys(), sync.get("sync_drift").unwrap().ys());
+    assert_eq!(reference.scalar("total_bits"), sync.scalar("total_bits"));
+    assert_eq!(sync.scalar("stale_syncs"), None, "no substitutions, no scalar");
+}
