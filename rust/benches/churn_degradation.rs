@@ -17,7 +17,7 @@
 //! off), and every sweep point converges to a finite gap. Emits
 //! `results/BENCH_churn.json` with both curves.
 
-use qgenx::benchkit::{scaled, write_json, Table};
+use qgenx::benchkit::{fast_mode, scaled, write_json, Table};
 use qgenx::config::ExperimentConfig;
 use qgenx::coordinator::run_experiment;
 use qgenx::runtime::json::Json;
@@ -134,6 +134,7 @@ fn main() {
     let doc = Json::obj([
         ("bench", Json::Str("churn_degradation".into())),
         ("schema", Json::Num(1.0)),
+        ("mode", Json::Str(if fast_mode() { "fast".into() } else { "full".into() })),
         ("straggler_curve", Json::Arr(straggler_curve)),
         ("rewire_curve", Json::Arr(rewire_curve)),
     ]);

@@ -1,0 +1,212 @@
+//! E14 — error-feedback contractive compression vs the unbiased bit floor.
+//!
+//! The unbiased `CODE ∘ Q` stack cannot spend fewer matched-gap bits than
+//! the Theorem-2 expected code length allows, no matter the codec. Biased
+//! δ-contractive operators (top-k, rank-r) break that floor: they ship a
+//! fraction of the coordinates and let the per-worker error memory
+//! `e_{t+1} = e_t + g_t − C(e_t + g_t)` repair the bias over time
+//! (Beznosikov et al. 2023; Zhang et al. 2023 — PAPERS.md). Method:
+//!
+//! 1. Three runs per oracle, identical everything except the compressor:
+//!    * **uq4-huffman** — the repo's best unbiased operating point
+//!      (4-bit uniform levels + Huffman codec), the floor to beat;
+//!    * **ef-topk** — `[quant.ef] scheme = "topk"`, `k = d/16` (½ bit per
+//!      coordinate before index overhead);
+//!    * **ef-rankr** — `scheme = "rankr"`, rank 2 on the auto-shaped
+//!      near-square factorisation of the dual.
+//! 2. Oracles are the LM/GAN-shaped [`BlockScaledQuadratic`] proxies under
+//!    relative noise, exactly as `benches/layerwise_tradeoff.rs`.
+//! 3. Matched-gap accounting: the target gap is 1.05 × the worst final
+//!    gap across the triple; a run's cost is `bits_cum` at its first eval
+//!    point at or below the target.
+//!
+//! Acceptance (full-scale mode): on `lm-proxy`, EF-top-k and/or rank-r
+//! reaches the matched gap with strictly fewer total wire bits than the
+//! unbiased uq4/huffman configuration. Contractive runs must also stay
+//! non-adaptive (zero level updates) and carry the `ef_*` summary scalars.
+//! Emits `results/BENCH_ef.json`.
+//!
+//! [`BlockScaledQuadratic`]: qgenx::oracle::BlockScaledQuadratic
+
+use qgenx::benchkit::{fast_mode, scaled, write_json, Table};
+use qgenx::coding::SymbolCodec;
+use qgenx::config::{EfConfig, EfScheme, ExperimentConfig, LevelScheme, QuantMode};
+use qgenx::coordinator::run_experiment;
+use qgenx::metrics::Recorder;
+use qgenx::runtime::json::Json;
+
+struct OracleCase {
+    kind: &'static str,
+    dim: usize,
+}
+
+fn cases() -> Vec<OracleCase> {
+    vec![
+        OracleCase { kind: "lm-proxy", dim: 1280 },
+        OracleCase { kind: "gan-proxy", dim: 1024 },
+    ]
+}
+
+fn base_cfg(case: &OracleCase, iters: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.problem.kind = case.kind.into();
+    cfg.problem.dim = case.dim;
+    cfg.problem.noise = "relative".into();
+    cfg.problem.rel_c = 0.5;
+    cfg.workers = 4;
+    cfg.iters = iters;
+    cfg.eval_every = (iters / 50).max(1);
+    cfg.seed = 17;
+    cfg
+}
+
+/// The unbiased floor: 4-bit uniform levels + Huffman codec.
+fn unbiased_cfg(case: &OracleCase, iters: usize) -> ExperimentConfig {
+    let mut cfg = base_cfg(case, iters);
+    cfg.name = format!("ef_{}_uq4_huffman", case.kind);
+    cfg.quant.mode = QuantMode::parse("uq4").unwrap();
+    cfg.quant.scheme = LevelScheme::Uniform;
+    cfg.quant.codec = SymbolCodec::Huffman;
+    cfg.quant.bucket_size = 128;
+    cfg.quant.hist_bins = 128;
+    cfg.quant.update_every = 100;
+    cfg
+}
+
+fn ef_cfg(case: &OracleCase, iters: usize, label: &str, ef: EfConfig) -> ExperimentConfig {
+    let mut cfg = base_cfg(case, iters);
+    cfg.name = format!("ef_{}_{label}", case.kind);
+    cfg.quant.ef = ef;
+    cfg
+}
+
+/// `bits_cum` at the first eval point whose gap is at or below `target`
+/// (identical eval grids across the triple make this a fair match).
+fn bits_to_gap(rec: &Recorder, target: f64) -> Option<f64> {
+    let gaps = rec.get("gap").unwrap();
+    let bits = rec.get("bits_cum").unwrap();
+    gaps.points
+        .iter()
+        .zip(bits.points.iter())
+        .find(|((_, g), _)| *g <= target)
+        .map(|(_, (_, b))| *b)
+}
+
+fn main() {
+    println!("== E14: error feedback vs the unbiased bit floor — bits at matched gap ==\n");
+    let iters = scaled(1500, 250);
+    let mut curves = Vec::new();
+    let mut lm_win = false;
+
+    for case in cases() {
+        let k = case.dim / 16;
+        let runs: Vec<(&str, Recorder)> = vec![
+            ("uq4-huffman", run_experiment(&unbiased_cfg(&case, iters)).expect("unbiased run")),
+            (
+                "ef-topk",
+                run_experiment(&ef_cfg(
+                    &case,
+                    iters,
+                    "topk",
+                    EfConfig { scheme: EfScheme::TopK, k, ..Default::default() },
+                ))
+                .expect("ef-topk run"),
+            ),
+            (
+                "ef-rankr",
+                run_experiment(&ef_cfg(
+                    &case,
+                    iters,
+                    "rankr",
+                    EfConfig { scheme: EfScheme::RankR, rank: 2, ..Default::default() },
+                ))
+                .expect("ef-rankr run"),
+            ),
+        ];
+
+        let target = 1.05
+            * runs
+                .iter()
+                .map(|(_, r)| r.get("gap").unwrap().last().unwrap())
+                .fold(f64::MIN, f64::max);
+
+        let mut table = Table::new(&["compressor", "final gap", "bits@gap", "x vs unbiased"]);
+        let bits_u = bits_to_gap(&runs[0].1, target).expect("unbiased reaches the matched gap");
+        let mut configs = Vec::new();
+        for (name, rec) in &runs {
+            let final_gap = rec.get("gap").unwrap().last().unwrap();
+            let bits = bits_to_gap(rec, target).expect("every run reaches its own final gap");
+            let total = rec.scalar("total_bits").unwrap();
+            if *name != "uq4-huffman" {
+                // Contractive pipelines are non-adaptive and carry the EF
+                // diagnostics; the unbiased floor must carry neither.
+                assert_eq!(rec.scalar("level_updates"), Some(0.0), "{name}: no stat rounds");
+                assert!(rec.scalar("ef_err_norm").is_some(), "{name}: ef_err_norm scalar");
+                assert!(rec.scalar("ef_delta").is_some(), "{name}: ef_delta scalar");
+                if case.kind == "lm-proxy" && bits < bits_u {
+                    lm_win = true;
+                }
+            } else {
+                assert!(rec.scalar("ef_err_norm").is_none(), "unbiased runs carry no ef_*");
+            }
+            table.row(&[
+                name.to_string(),
+                format!("{final_gap:.4}"),
+                format!("{bits:.3e}"),
+                format!("{:.2}", bits_u / bits),
+            ]);
+            let mut fields = vec![
+                ("name", Json::Str(name.to_string())),
+                ("final_gap", Json::Num(final_gap)),
+                ("bits_at_gap", Json::Num(bits)),
+                ("total_bits", Json::Num(total)),
+            ];
+            if let Some(en) = rec.scalar("ef_err_norm") {
+                fields.push(("ef_err_norm", Json::Num(en)));
+                fields.push(("ef_delta", Json::Num(rec.scalar("ef_delta").unwrap())));
+            }
+            configs.push(Json::obj(fields));
+        }
+        println!(
+            "-- oracle = {} (d = {}, k = {k}, matched gap {target:.4}, T = {iters}) --",
+            case.kind, case.dim
+        );
+        table.print();
+        println!();
+
+        curves.push(Json::obj([
+            ("oracle", Json::Str(case.kind.into())),
+            ("dim", Json::Num(case.dim as f64)),
+            ("target_gap", Json::Num(target)),
+            ("configs", Json::Arr(configs)),
+        ]));
+    }
+
+    let doc = Json::obj([
+        ("bench", Json::Str("ef_tradeoff".into())),
+        ("schema", Json::Num(1.0)),
+        ("mode", Json::Str(if fast_mode() { "fast".into() } else { "full".into() })),
+        ("curves", Json::Arr(curves)),
+    ]);
+    write_json("results/BENCH_ef.json", &doc).unwrap();
+    println!("wrote results/BENCH_ef.json");
+
+    if fast_mode() {
+        println!("acceptance check skipped in QGENX_BENCH_FAST mode (budget too small)");
+    } else {
+        println!(
+            "acceptance: EF-top-k and/or rank-r reaches the matched gap on lm-proxy\n\
+             with strictly fewer total wire bits than unbiased uq4/huffman: {}",
+            if lm_win { "YES" } else { "NO" }
+        );
+        assert!(lm_win, "error feedback must beat the unbiased floor on lm-proxy");
+    }
+    println!(
+        "\npaper shape: an unbiased quantizer pays the Theorem-2 code length on\n\
+         every coordinate every round. A δ-contractive operator ships only the\n\
+         heavy fraction and banks the remainder in the error memory, whose norm\n\
+         stays bounded (‖e‖² ≤ (1−δ)/δ · sup‖g‖²), so the trajectory converges\n\
+         on strictly fewer wire bits in the low-bit regime — the Three-Pillars\n\
+         trade the variance floor for a bias that feedback repairs."
+    );
+}

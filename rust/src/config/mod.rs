@@ -276,6 +276,233 @@ impl LayersConfig {
     }
 }
 
+/// Which contractive operator the error-feedback pipeline applies.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EfScheme {
+    /// Error feedback disabled — the unbiased `CODE∘Q` pipeline runs
+    /// untouched (the default; bit-identical to configs predating
+    /// `[quant.ef]`).
+    #[default]
+    Off,
+    /// Deterministic top-k by magnitude (index-ascending tie-break).
+    TopK,
+    /// Seeded random-k; the support travels on the wire.
+    RandK,
+    /// Rank-r subspace-iteration projection of the matrix-shaped dual.
+    RankR,
+}
+
+impl EfScheme {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" | "none" => Ok(EfScheme::Off),
+            "topk" | "top-k" => Ok(EfScheme::TopK),
+            "randk" | "rand-k" => Ok(EfScheme::RandK),
+            "rankr" | "rank-r" => Ok(EfScheme::RankR),
+            other => {
+                Err(Error::Config(format!("unknown ef scheme `{other}` (off|topk|randk|rankr)")))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EfScheme::Off => "off",
+            EfScheme::TopK => "topk",
+            EfScheme::RandK => "randk",
+            EfScheme::RankR => "rankr",
+        }
+    }
+}
+
+/// Per-layer overrides from a `[quant.ef.<name>]` table; `None` fields
+/// inherit the base `[quant.ef]` value. The scheme itself stays global —
+/// mixing sparsifiers and low-rank projections across layers of one dual
+/// vector is not supported.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EfOverride {
+    pub k: Option<usize>,
+    pub rank: Option<usize>,
+}
+
+/// Contractive compression with error feedback (`[quant.ef]` table /
+/// `--ef` CLI flag). When enabled, the biased-compressor pipeline
+/// (`Compressor::Contractive`) replaces the unbiased `CODE∘Q` stack:
+/// `quant.mode`/`scheme`/`codec` are bypassed, nothing adapts
+/// ([`QuantConfig::adapts`] is false) and stat rounds stay at zero. The
+/// per-worker error memory `e_{t+1} = e_t + g_t − C(e_t + g_t)` repairs
+/// the compression bias over time; see `quant::contractive` for the
+/// operator family and `docs/WIRE.md` §5 for the frames.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EfConfig {
+    /// Operator family; `Off` (default) disables the subsystem entirely.
+    pub scheme: EfScheme,
+    /// Coordinates kept per (layer) vector for `topk`/`randk`; required
+    /// (≥ 1) when one of those schemes is active.
+    pub k: usize,
+    /// Target rank for `rankr`; required (≥ 1) when active.
+    pub rank: usize,
+    /// Matrix rows for `rankr` on an unpartitioned dual (`0` = automatic
+    /// near-square factorisation, [`crate::quant::auto_shape`]). Must
+    /// divide the problem dimension. With `[quant.layers]` active every
+    /// layer is auto-shaped and `rows` must stay 0.
+    pub rows: usize,
+    /// Per-layer `k`/`rank` overrides keyed by `[quant.layers]` names.
+    pub overrides: Vec<(String, EfOverride)>,
+}
+
+impl EfConfig {
+    /// True when the contractive pipeline replaces the unbiased one.
+    pub fn enabled(&self) -> bool {
+        self.scheme != EfScheme::Off
+    }
+
+    /// The override for layer `name`, if any.
+    pub fn override_for(&self, name: &str) -> EfOverride {
+        self.overrides
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, ov)| *ov)
+            .unwrap_or_default()
+    }
+
+    /// Resolve the concrete operator for one (layer) vector of dimension
+    /// `d`. `name = None` is the unpartitioned single-vector pipeline.
+    pub fn resolve_op(&self, name: Option<&str>, d: usize) -> Result<crate::quant::ContractiveOp> {
+        use crate::quant::ContractiveOp;
+        let ov = name.map(|n| self.override_for(n)).unwrap_or_default();
+        let where_ = |k: &str| match name {
+            Some(n) => format!("quant.ef.{n}.{k}"),
+            None => format!("quant.ef.{k}"),
+        };
+        match self.scheme {
+            EfScheme::Off => Err(Error::Config("quant.ef: scheme is off".into())),
+            EfScheme::TopK | EfScheme::RandK => {
+                let k = ov.k.unwrap_or(self.k);
+                if k == 0 {
+                    return Err(Error::Config(format!(
+                        "{}: k must be >= 1 for scheme `{}`",
+                        where_("k"),
+                        self.scheme.name()
+                    )));
+                }
+                if self.scheme == EfScheme::TopK {
+                    Ok(ContractiveOp::TopK { k })
+                } else {
+                    Ok(ContractiveOp::RandK { k })
+                }
+            }
+            EfScheme::RankR => {
+                let rank = ov.rank.unwrap_or(self.rank);
+                if rank == 0 {
+                    return Err(Error::Config(format!(
+                        "{}: rank must be >= 1 for scheme `rankr`",
+                        where_("rank")
+                    )));
+                }
+                let (rows, cols) = if self.rows > 0 && name.is_none() {
+                    if d % self.rows != 0 {
+                        return Err(Error::Config(format!(
+                            "quant.ef.rows = {} does not divide dimension {d}",
+                            self.rows
+                        )));
+                    }
+                    (self.rows, d / self.rows)
+                } else {
+                    crate::quant::auto_shape(d)
+                };
+                Ok(ContractiveOp::RankR { rank, rows, cols })
+            }
+        }
+    }
+
+    /// Validate against the base `[quant]` config and the problem
+    /// dimension; every resolved operator must fit its (layer) vector.
+    pub fn validate(&self, base: &QuantConfig, d: usize) -> Result<()> {
+        if !self.enabled() {
+            if self.k != 0 || self.rank != 0 || self.rows != 0 || !self.overrides.is_empty() {
+                return Err(Error::Config(
+                    "quant.ef: k/rank/rows/overrides set while scheme = \"off\"".into(),
+                ));
+            }
+            return Ok(());
+        }
+        if base.layers.budget > 0.0 {
+            return Err(Error::Config(
+                "quant.ef is incompatible with quant.layers.budget (the bit-budget \
+                 allocator is unbiased-pipeline machinery and nothing adapts under EF)"
+                    .into(),
+            ));
+        }
+        for (name, _) in &self.overrides {
+            if !base.layers.names.iter().any(|n| n == name) {
+                return Err(Error::Config(format!(
+                    "quant.ef.{name}: no such layer in quant.layers.names"
+                )));
+            }
+        }
+        if !self.overrides.is_empty() && !base.layers.enabled() {
+            return Err(Error::Config(
+                "quant.ef: per-layer overrides need quant.layers with >= 2 names".into(),
+            ));
+        }
+        if self.rows > 0 && self.scheme != EfScheme::RankR {
+            return Err(Error::Config("quant.ef.rows only applies to scheme = \"rankr\"".into()));
+        }
+        if self.rows > 0 && base.layers.enabled() {
+            return Err(Error::Config(
+                "quant.ef.rows is for the unpartitioned dual; layered rankr auto-shapes \
+                 each layer"
+                    .into(),
+            ));
+        }
+        if base.layers.enabled() {
+            let map = base.layers.resolve_map(d, base.bucket_size)?;
+            for i in 0..map.len() {
+                let op = self.resolve_op(Some(map.name(i)), map.dim(i))?;
+                op.validate(map.dim(i)).map_err(|e| {
+                    Error::Config(format!("quant.ef (layer `{}`): {e}", map.name(i)))
+                })?;
+            }
+        } else {
+            let op = self.resolve_op(None, d)?;
+            op.validate(d).map_err(|e| Error::Config(format!("quant.ef: {e}")))?;
+        }
+        Ok(())
+    }
+
+    /// Parse the `--ef` CLI spec: `off`, `topk:<k>`, `randk:<k>`,
+    /// `rankr:<rank>` or `rankr:<rank>:<rows>`.
+    pub fn parse_cli(spec: &str) -> Result<EfConfig> {
+        let mut parts = spec.split(':');
+        let scheme = EfScheme::parse(parts.next().unwrap_or("").trim())?;
+        let mut cfg = EfConfig { scheme, ..Default::default() };
+        let arg = |p: Option<&str>, what: &str| -> Result<usize> {
+            p.map(str::trim)
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| Error::Config(format!("--ef: `{spec}` is missing {what}")))?
+                .parse::<usize>()
+                .map_err(|_| Error::Config(format!("--ef: bad {what} in `{spec}`")))
+        };
+        match scheme {
+            EfScheme::Off => {}
+            EfScheme::TopK | EfScheme::RandK => {
+                cfg.k = arg(parts.next(), "k (e.g. `topk:64`)")?;
+            }
+            EfScheme::RankR => {
+                cfg.rank = arg(parts.next(), "rank (e.g. `rankr:4`)")?;
+                if let Some(rows) = parts.next() {
+                    cfg.rows = arg(Some(rows), "rows")?;
+                }
+            }
+        }
+        if parts.next().is_some() {
+            return Err(Error::Config(format!("--ef: trailing fields in `{spec}`")));
+        }
+        Ok(cfg)
+    }
+}
+
 /// Quantization + wire-format configuration.
 #[derive(Clone, Debug)]
 pub struct QuantConfig {
@@ -300,6 +527,9 @@ pub struct QuantConfig {
     /// dual vector with per-layer overrides and an optional bit budget.
     /// Default (no names) = the single-codec pipeline.
     pub layers: LayersConfig,
+    /// Contractive compression with error feedback (`[quant.ef]`). When
+    /// enabled it *replaces* the unbiased pipeline; default = off.
+    pub ef: EfConfig,
 }
 
 impl QuantConfig {
@@ -313,6 +543,12 @@ impl QuantConfig {
     /// Huffman-with-fixed-levels runs paid for stat rounds whose payloads
     /// were all empty).
     pub fn adapts(&self) -> bool {
+        if self.ef.enabled() {
+            // Contractive modes are non-adaptive by construction: no level
+            // placement, no probability model, no stat payloads. Asserted
+            // again in `Compressor::from_config` and pinned by tests.
+            return false;
+        }
         if self.layers.names.is_empty() {
             return self.scheme == LevelScheme::Adaptive || self.codec == SymbolCodec::Huffman;
         }
@@ -337,6 +573,7 @@ impl Default for QuantConfig {
             hist_bins: 256,
             stat_samples: 0,
             layers: LayersConfig::default(),
+            ef: EfConfig::default(),
         }
     }
 }
@@ -572,6 +809,8 @@ impl ExperimentConfig {
 
     pub fn from_doc(doc: &Doc) -> Result<Self> {
         let d = ExperimentConfig::default();
+        let layers = parse_layers(doc)?;
+        let ef = parse_ef(doc, &layers.names)?;
         let cfg = ExperimentConfig {
             name: doc.get_str("name", &d.name)?,
             seed: doc.get_i64("seed", d.seed as i64)? as u64,
@@ -591,7 +830,8 @@ impl ExperimentConfig {
                 update_every: doc.get_usize("quant.update_every", d.quant.update_every)?,
                 hist_bins: doc.get_usize("quant.hist_bins", d.quant.hist_bins)?,
                 stat_samples: doc.get_usize("quant.stat_samples", d.quant.stat_samples)?,
-                layers: parse_layers(doc)?,
+                layers,
+                ef,
             },
             algo: AlgoConfig {
                 variant: Variant::parse(&doc.get_str("algo.variant", d.algo.variant.name())?)?,
@@ -680,6 +920,7 @@ impl ExperimentConfig {
                 .resolve_map(self.problem.dim, self.quant.bucket_size)
                 .map_err(|e| Error::Config(format!("quant.layers: {e}")))?;
         }
+        self.quant.ef.validate(&self.quant, self.problem.dim)?;
         if !(self.net.bandwidth_bps > 0.0) {
             return Err(Error::Config("net.bandwidth must be positive".into()));
         }
@@ -780,6 +1021,36 @@ fn parse_layers(doc: &Doc) -> Result<LayersConfig> {
         names,
         bounds: doc.get_usize_array("quant.layers.bounds")?.unwrap_or_default(),
         budget: doc.get_f64("quant.layers.budget", 0.0)?,
+        overrides,
+    })
+}
+
+/// Parse the `[quant.ef]` table (+ per-layer `[quant.ef.<name>]` override
+/// tables keyed by the `[quant.layers]` names) into an [`EfConfig`].
+/// Reserved keys inside `[quant.ef]`: `scheme`, `k`, `rank`, `rows`.
+fn parse_ef(doc: &Doc, layer_names: &[String]) -> Result<EfConfig> {
+    let scheme = EfScheme::parse(&doc.get_str("quant.ef.scheme", "off")?)?;
+    const RESERVED: [&str; 4] = ["scheme", "k", "rank", "rows"];
+    let mut overrides = Vec::new();
+    if scheme != EfScheme::Off {
+        for name in layer_names {
+            if RESERVED.contains(&name.as_str()) {
+                return Err(Error::Config(format!("quant.ef: `{name}` is a reserved key")));
+            }
+            let key = |k: &str| format!("quant.ef.{name}.{k}");
+            let k = doc.contains(&key("k")).then(|| doc.get_usize(&key("k"), 0)).transpose()?;
+            let rank =
+                doc.contains(&key("rank")).then(|| doc.get_usize(&key("rank"), 0)).transpose()?;
+            if k.is_some() || rank.is_some() {
+                overrides.push((name.clone(), EfOverride { k, rank }));
+            }
+        }
+    }
+    Ok(EfConfig {
+        scheme,
+        k: doc.get_usize("quant.ef.k", 0)?,
+        rank: doc.get_usize("quant.ef.rank", 0)?,
+        rows: doc.get_usize("quant.ef.rows", 0)?,
         overrides,
     })
 }
@@ -1171,6 +1442,130 @@ bucket_size = 64
         let mut q = QuantConfig::default();
         q.layers.names = vec!["a".into(), "b".into()];
         assert!(q.adapts());
+    }
+
+    #[test]
+    fn parses_quant_ef_table_with_overrides() {
+        let src = r#"
+workers = 4
+[problem]
+dim = 512
+
+[quant]
+mode = "uq4"
+bucket_size = 128
+
+[quant.layers]
+names = ["embed", "body", "head"]
+bounds = [128, 384]
+
+[quant.ef]
+scheme = "topk"
+k = 32
+
+[quant.ef.embed]
+k = 8
+"#;
+        let cfg = ExperimentConfig::from_toml(src).unwrap();
+        let ef = &cfg.quant.ef;
+        assert!(ef.enabled());
+        assert_eq!(ef.scheme, EfScheme::TopK);
+        assert_eq!(ef.k, 32);
+        assert_eq!(ef.override_for("embed").k, Some(8));
+        assert_eq!(ef.override_for("body"), EfOverride::default());
+        assert_eq!(
+            ef.resolve_op(Some("embed"), 128).unwrap(),
+            crate::quant::ContractiveOp::TopK { k: 8 }
+        );
+        assert_eq!(
+            ef.resolve_op(Some("body"), 256).unwrap(),
+            crate::quant::ContractiveOp::TopK { k: 32 }
+        );
+        // Nothing adapts under EF, whatever the base scheme/codec say.
+        assert!(!cfg.quant.adapts());
+        // Flat rankr with an explicit shape.
+        let cfg = ExperimentConfig::from_toml(
+            "[problem]\ndim = 64\n[quant.ef]\nscheme = \"rankr\"\nrank = 2\nrows = 4\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.quant.ef.resolve_op(None, 64).unwrap(),
+            crate::quant::ContractiveOp::RankR { rank: 2, rows: 4, cols: 16 }
+        );
+        // rows = 0 auto-shapes near-square.
+        let ef = EfConfig { scheme: EfScheme::RankR, rank: 2, ..Default::default() };
+        assert_eq!(
+            ef.resolve_op(None, 64).unwrap(),
+            crate::quant::ContractiveOp::RankR { rank: 2, rows: 8, cols: 8 }
+        );
+    }
+
+    #[test]
+    fn ef_validation_rejects_bad_tables() {
+        // k missing for topk
+        assert!(ExperimentConfig::from_toml("[quant.ef]\nscheme = \"topk\"\n").is_err());
+        // k beyond the dimension
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\ndim = 16\n[quant.ef]\nscheme = \"topk\"\nk = 17\n"
+        )
+        .is_err());
+        // rank missing / rows not dividing d / rows without rankr
+        assert!(ExperimentConfig::from_toml("[quant.ef]\nscheme = \"rankr\"\n").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\ndim = 64\n[quant.ef]\nscheme = \"rankr\"\nrank = 2\nrows = 7\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[quant.ef]\nscheme = \"topk\"\nk = 8\nrows = 8\n"
+        )
+        .is_err());
+        // knobs without a scheme (typo safety)
+        assert!(ExperimentConfig::from_toml("[quant.ef]\nk = 8\n").is_err());
+        // unknown scheme
+        assert!(ExperimentConfig::from_toml("[quant.ef]\nscheme = \"svd\"\n").is_err());
+        // override for a layer that does not exist
+        assert!(ExperimentConfig::from_toml(
+            "[quant.ef]\nscheme = \"topk\"\nk = 8\n[quant.ef.embed]\nk = 4\n"
+        )
+        .is_err());
+        // incompatible with the bit-budget allocator
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\ndim = 512\n[quant]\nbucket_size = 128\n\
+             [quant.layers]\nnames = [\"a\", \"b\"]\nbudget = 4.0\n\
+             [quant.ef]\nscheme = \"topk\"\nk = 8\n"
+        )
+        .is_err());
+        // per-layer k larger than that layer's dimension
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\ndim = 512\n[quant]\nbucket_size = 128\n\
+             [quant.layers]\nnames = [\"a\", \"b\"]\nbounds = [128]\n\
+             [quant.ef]\nscheme = \"topk\"\nk = 8\n[quant.ef.a]\nk = 129\n"
+        )
+        .is_err());
+        // a valid layered EF config still parses
+        assert!(ExperimentConfig::from_toml(
+            "[problem]\ndim = 512\n[quant]\nbucket_size = 128\n\
+             [quant.layers]\nnames = [\"a\", \"b\"]\nbounds = [128]\n\
+             [quant.ef]\nscheme = \"topk\"\nk = 8\n"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn ef_cli_spec_parses() {
+        assert_eq!(EfConfig::parse_cli("off").unwrap(), EfConfig::default());
+        let ef = EfConfig::parse_cli("topk:64").unwrap();
+        assert_eq!((ef.scheme, ef.k), (EfScheme::TopK, 64));
+        let ef = EfConfig::parse_cli("randk:128").unwrap();
+        assert_eq!((ef.scheme, ef.k), (EfScheme::RandK, 128));
+        let ef = EfConfig::parse_cli("rankr:4").unwrap();
+        assert_eq!((ef.scheme, ef.rank, ef.rows), (EfScheme::RankR, 4, 0));
+        let ef = EfConfig::parse_cli("rankr:4:32").unwrap();
+        assert_eq!((ef.scheme, ef.rank, ef.rows), (EfScheme::RankR, 4, 32));
+        assert!(EfConfig::parse_cli("topk").is_err(), "missing k");
+        assert!(EfConfig::parse_cli("topk:x").is_err());
+        assert!(EfConfig::parse_cli("topk:8:9").is_err(), "trailing fields");
+        assert!(EfConfig::parse_cli("svd:3").is_err());
     }
 
     #[test]

@@ -427,6 +427,7 @@ impl RoundEngine {
             self.bits_buf.push(b);
         }
         self.traffic.add_compute(t0.elapsed().as_secs_f64());
+        self.note_ef();
         self.data_round()
     }
 
@@ -442,7 +443,17 @@ impl RoundEngine {
             self.bits_buf.push(b);
         }
         self.traffic.add_compute(t0.elapsed().as_secs_f64());
+        self.note_ef();
         self.data_round()
+    }
+
+    /// Forward rank 0's error-feedback diagnostics (if the pipeline runs
+    /// error feedback) to telemetry. Non-contractive pipelines report
+    /// `None`, so EF-off runs never touch the `ef_*` telemetry marks.
+    fn note_ef(&mut self) {
+        if let Some((err_norm, delta)) = self.comps[0].ef_scalars() {
+            self.tele.on_ef(err_norm, delta);
+        }
     }
 
     /// Move one round of encoded payloads (`self.wire_bufs`, one per owned

@@ -7,7 +7,7 @@
 //! statistics first) so that all replicas hold the same levels/codec — the
 //! decode side of the wire format depends on them.
 //!
-//! Three pipeline shapes, selected by the config:
+//! Four pipeline shapes, selected by the config:
 //!
 //! * **FP32** — raw little-endian f32 payloads, no state.
 //! * **Single-codec** (the seed pipeline) — one level sequence + codec for
@@ -22,15 +22,21 @@
 //!   level update re-runs the Theorem-1 bit-budget allocator
 //!   ([`crate::quant::alloc`]) on the pooled per-layer weights before
 //!   re-optimizing levels, so bits follow the norm profile as it drifts.
+//! * **Contractive** (`[quant.ef]`) — the biased δ-contractive family
+//!   ([`crate::quant::contractive`]: top-k / rand-k / rank-r) with the
+//!   per-worker error-feedback memory `e_{t+1} = e_t + g_t − C(e_t + g_t)`.
+//!   Entirely static: nothing adapts, stat rounds stay at zero, and the
+//!   wire carries sparse/low-rank frames (`docs/WIRE.md` §5) instead of
+//!   `CODE ∘ Q` streams.
 
 use crate::coding::SymbolCodec;
-use crate::config::{LayersConfig, LevelScheme, QuantConfig, QuantMode};
+use crate::config::{EfConfig, LayersConfig, LevelScheme, QuantConfig, QuantMode};
 use crate::error::{Error, Result};
 use crate::metrics::Recorder;
 use crate::quant::{
-    alloc, decode_vector, decode_vector_into, dequantize_into, encode_vector_into,
-    optimize_levels, quantize_into, symbol_probs, LayerMap, LayerProfile, LayerStats, Levels,
-    QuantizedVector, SufficientStats, WireCodec,
+    alloc, contractive, decode_vector, decode_vector_into, dequantize_into, encode_vector_into,
+    optimize_levels, quantize_into, symbol_probs, ContractiveOp, LayerMap, LayerProfile,
+    LayerStats, Levels, QuantizedVector, SufficientStats, WireCodec,
 };
 use crate::telemetry::{Stage, StageSpans};
 use crate::util::Rng;
@@ -45,6 +51,8 @@ pub enum Compressor {
     Quant(Box<QuantCompressor>),
     /// Layer-wise heterogeneous quantization (Q-GenX-LW).
     LayerWise(Box<LayerWiseCompressor>),
+    /// Biased δ-contractive compression with error feedback (`[quant.ef]`).
+    Contractive(Box<ContractiveCompressor>),
 }
 
 #[derive(Clone)]
@@ -155,6 +163,15 @@ impl Compressor {
     /// ordinary single-codec pipeline — bit-identical to no layer map.
     pub fn from_config(cfg: &QuantConfig, rng: Rng) -> Result<Self> {
         cfg.layers.validate(cfg)?;
+        if cfg.ef.enabled() {
+            // Contractive modes replace the unbiased stack wholesale and
+            // must never engage the stat machinery ([`QuantConfig::adapts`]
+            // is the single source of truth; re-asserted here).
+            debug_assert!(!cfg.adapts(), "contractive pipelines are non-adaptive");
+            return Ok(Compressor::Contractive(Box::new(ContractiveCompressor::from_config(
+                cfg, rng,
+            ))));
+        }
         if cfg.layers.enabled() && cfg.mode != QuantMode::Fp32 {
             return LayerWiseCompressor::from_config(cfg, rng)
                 .map(|lw| Compressor::LayerWise(Box::new(lw)));
@@ -193,11 +210,16 @@ impl Compressor {
         matches!(self, Compressor::LayerWise(_))
     }
 
+    /// True when the biased error-feedback pipeline is engaged.
+    pub fn is_contractive(&self) -> bool {
+        matches!(self, Compressor::Contractive(_))
+    }
+
     /// Current levels (None for FP32 and for the layer-wise pipeline,
     /// which has one sequence *per layer* — see [`Self::layer_levels`]).
     pub fn levels(&self) -> Option<&Levels> {
         match self {
-            Compressor::Fp32 | Compressor::LayerWise(_) => None,
+            Compressor::Fp32 | Compressor::LayerWise(_) | Compressor::Contractive(_) => None,
             Compressor::Quant(q) => Some(&q.levels),
         }
     }
@@ -216,6 +238,9 @@ impl Compressor {
     pub fn epsilon_q(&self, d: usize) -> f64 {
         match self {
             Compressor::Fp32 => 0.0,
+            // Biased compression has no Theorem-1 unbiased variance factor;
+            // its contraction is surfaced via [`Self::ef_scalars`] instead.
+            Compressor::Contractive(_) => 0.0,
             Compressor::Quant(q) => {
                 let per_bucket = if q.cfg.bucket_size == 0 { d } else { q.cfg.bucket_size.min(d) };
                 crate::quant::epsilon_q(&q.levels, per_bucket, q.cfg.norm_q)
@@ -279,6 +304,7 @@ impl Compressor {
                 q.compress_vec_timed(v, out, spans)
             }
             Compressor::LayerWise(lw) => lw.compress_timed(v, out, spans),
+            Compressor::Contractive(ct) => ct.compress_timed(v, out, spans),
         }
     }
 
@@ -294,6 +320,7 @@ impl Compressor {
                 Ok(())
             }
             Compressor::LayerWise(lw) => lw.decompress(bytes, out),
+            Compressor::Contractive(ct) => ct.decompress(bytes, out),
         }
     }
 
@@ -304,6 +331,7 @@ impl Compressor {
             Compressor::Fp32 => Self::decompress_fp32(bytes, out),
             Compressor::Quant(q) => q.decompress_into(bytes, out),
             Compressor::LayerWise(lw) => lw.decompress_into(bytes, out),
+            Compressor::Contractive(ct) => ct.decompress_into(bytes, out),
         }
     }
 
@@ -344,7 +372,7 @@ impl Compressor {
     /// levels actually changed.
     pub fn update_levels(&mut self, all_stats_rank_order: &[&[u8]]) -> Result<bool> {
         let q = match self {
-            Compressor::Fp32 => return Ok(false),
+            Compressor::Fp32 | Compressor::Contractive(_) => return Ok(false),
             Compressor::LayerWise(lw) => return lw.update_levels(all_stats_rank_order),
             Compressor::Quant(q) => q,
         };
@@ -378,7 +406,7 @@ impl Compressor {
     /// Number of level updates performed so far (the `J` of Theorems 3/4).
     pub fn updates(&self) -> usize {
         match self {
-            Compressor::Fp32 => 0,
+            Compressor::Fp32 | Compressor::Contractive(_) => 0,
             Compressor::Quant(q) => q.updates,
             Compressor::LayerWise(lw) => lw.updates,
         }
@@ -424,6 +452,63 @@ impl Compressor {
             rec.set_scalar(&format!("layer_variance/{name}"), lw.layer_epsilon_auto(i));
             rec.set_scalar(&format!("layer_levels/{name}"), lw.subs[i].levels.s() as f64);
         }
+    }
+
+    /// Error-feedback diagnostics of the last compressed vector:
+    /// `(‖e_{t+1}‖₂, effective δ)` where the effective contraction is
+    /// `1 − ‖e_{t+1}‖² / ‖e_t + g_t‖²` (1.0 on an all-zero input). `None`
+    /// for non-contractive pipelines and before the first compress, so
+    /// callers can emit conditionally and EF-off telemetry stays
+    /// byte-identical.
+    pub fn ef_scalars(&self) -> Option<(f64, f64)> {
+        match self {
+            Compressor::Contractive(ct) if ct.steps > 0 => Some((ct.last_err_norm, ct.last_delta)),
+            _ => None,
+        }
+    }
+
+    /// The per-worker error memory `e_t` (tests/diagnostics). `None` for
+    /// non-contractive pipelines or before the partition is resolved.
+    pub fn ef_error_memory(&self) -> Option<&[f32]> {
+        match self {
+            Compressor::Contractive(ct) if !ct.err.is_empty() => Some(&ct.err),
+            _ => None,
+        }
+    }
+
+    /// Worst-case contraction factor δ of the configured operator(s) —
+    /// the dimension-weighted mean across layers. `None` for
+    /// non-contractive pipelines or before the partition is resolved.
+    pub fn ef_delta_bound(&self) -> Option<f64> {
+        let Compressor::Contractive(ct) = self else { return None };
+        let map = ct.map.as_ref()?;
+        let d = map.d().max(1);
+        Some(
+            (0..map.len())
+                .map(|i| map.dim(i) as f64 / d as f64 * ct.ops[i].delta(map.dim(i)))
+                .sum(),
+        )
+    }
+
+    /// Emit the EF summary scalars (`ef_err_norm`, `ef_delta`,
+    /// `ef_delta_bound`). No-op for non-contractive pipelines, so every
+    /// runner calls it unconditionally — the neutrality contract that
+    /// keeps EF-off summaries byte-identical.
+    pub fn emit_ef_scalars(&self, rec: &mut Recorder) {
+        let Some((err_norm, delta)) = self.ef_scalars() else { return };
+        rec.set_scalar("ef_err_norm", err_norm);
+        rec.set_scalar("ef_delta", delta);
+        if let Some(bound) = self.ef_delta_bound() {
+            rec.set_scalar("ef_delta_bound", bound);
+        }
+    }
+
+    /// Push the EF metric series (`ef_err_norm`, `ef_delta`) at eval step
+    /// `t`. No-op for non-contractive pipelines.
+    pub fn record_ef_series(&self, rec: &mut Recorder, t: f64) {
+        let Some((err_norm, delta)) = self.ef_scalars() else { return };
+        rec.push("ef_err_norm", t, err_norm);
+        rec.push("ef_delta", t, delta);
     }
 }
 
@@ -710,6 +795,318 @@ impl LayerWiseCompressor {
     }
 }
 
+/// Contractive compression with per-worker error feedback (`[quant.ef]`).
+///
+/// Per step: `a_t = e_t + g_t` is compressed with the configured
+/// δ-contractive operator ([`crate::quant::contractive`]); the wire
+/// carries `C(a_t)` and the memory keeps `e_{t+1} = a_t − Ĉ(a_t)`. The
+/// sender computes the residual from the *decoder's* reconstruction
+/// (shared kernels), so what every receiver adds to its iterate is
+/// exactly what the memory no longer carries.
+///
+/// Wire format (`docs/WIRE.md` §5): an unpartitioned dual ships one bare
+/// sparse/low-rank frame; with `[quant.layers]` each layer's frame rides
+/// behind the same `[u32 length]` framing as the layer-wise pipeline
+/// (parsed by the shared [`for_each_frame`]). Decoding is stateless — the
+/// support (sparse) or factors (low-rank) travel on the wire — so any
+/// replica decodes any sender's payload identically.
+///
+/// The error memory is *semantic* state: `Clone` (the checkpoint path)
+/// must and does carry it, so resumed runs continue bit-for-bit. The
+/// remaining buffers are §Perf scratch arenas — contents overwritten per
+/// message, zero allocations in steady state.
+#[derive(Clone)]
+pub struct ContractiveCompressor {
+    ef: EfConfig,
+    layers_cfg: LayersConfig,
+    /// Alignment hint for auto-split layer maps (the base bucket size).
+    base_bucket: usize,
+    /// Seeded support draws for rand-k; only the sender's stream is ever
+    /// consumed (the support travels on the wire).
+    rng: Rng,
+    /// Error memory `e_t` (length d once resolved). Semantic state.
+    err: Vec<f32>,
+    /// Resolved per-layer operators, parallel to the map (a single entry
+    /// for the unpartitioned pipeline).
+    ops: Vec<ContractiveOp>,
+    /// Partition, resolved from the first vector's dimension
+    /// ([`LayerMap::single`] when `[quant.layers]` is off).
+    map: Option<LayerMap>,
+    // §Perf scratch arenas (encode and decode directions kept separate so
+    // a compress between two decompresses cannot clobber state mid-use).
+    acc: Vec<f32>,
+    recon: Vec<f32>,
+    idx: Vec<u32>,
+    perm: Vec<u32>,
+    fac_u: Vec<f32>,
+    fac_v: Vec<f32>,
+    dec_idx: Vec<u32>,
+    dec_u: Vec<f32>,
+    dec_v: Vec<f32>,
+    frame: Vec<u8>,
+    /// Number of vectors compressed (gates the diagnostics).
+    steps: u64,
+    /// ‖e_{t+1}‖₂ after the last compress.
+    last_err_norm: f64,
+    /// Effective contraction `1 − ‖e_{t+1}‖²/‖a_t‖²` of the last compress.
+    last_delta: f64,
+}
+
+impl ContractiveCompressor {
+    fn from_config(cfg: &QuantConfig, rng: Rng) -> Self {
+        ContractiveCompressor {
+            ef: cfg.ef.clone(),
+            layers_cfg: cfg.layers.clone(),
+            base_bucket: cfg.bucket_size,
+            rng,
+            err: Vec::new(),
+            ops: Vec::new(),
+            map: None,
+            acc: Vec::new(),
+            recon: Vec::new(),
+            idx: Vec::new(),
+            perm: Vec::new(),
+            fac_u: Vec::new(),
+            fac_v: Vec::new(),
+            dec_idx: Vec::new(),
+            dec_u: Vec::new(),
+            dec_v: Vec::new(),
+            frame: Vec::new(),
+            steps: 0,
+            last_err_norm: 0.0,
+            last_delta: 0.0,
+        }
+    }
+
+    /// Resolve the partition and per-layer operators for dimension `d`
+    /// without touching cached state (the `&self` decompress path calls
+    /// this directly).
+    fn resolve(&self, d: usize) -> Result<(LayerMap, Vec<ContractiveOp>)> {
+        let layered = self.layers_cfg.enabled();
+        let map = if layered {
+            self.layers_cfg.resolve_map(d, self.base_bucket)?
+        } else {
+            LayerMap::single(d)?
+        };
+        let mut ops = Vec::with_capacity(map.len());
+        for i in 0..map.len() {
+            let name = if layered { Some(map.name(i)) } else { None };
+            let op = self.ef.resolve_op(name, map.dim(i))?;
+            op.validate(map.dim(i))?;
+            ops.push(op);
+        }
+        Ok((map, ops))
+    }
+
+    /// Resolve and cache the partition/operators for dimension `d`; sizes
+    /// the error memory on first contact (all-zero start). A changed `d`
+    /// mid-run is a caller bug, as in the other pipelines.
+    fn ensure(&mut self, d: usize) -> Result<()> {
+        match &self.map {
+            Some(m) if m.d() == d => return Ok(()),
+            Some(m) => {
+                return Err(Error::Quant(format!(
+                    "ef map resolved for d = {}, got a vector of d = {d}",
+                    m.d()
+                )))
+            }
+            None => {}
+        }
+        let (map, ops) = self.resolve(d)?;
+        self.map = Some(map);
+        self.ops = ops;
+        self.err = vec![0.0; d];
+        self.acc = vec![0.0; d];
+        Ok(())
+    }
+
+    /// Compress one vector: accumulate the error memory into `a_t`,
+    /// apply the operator per layer, append the §5 frame(s) to `out`
+    /// (the caller clears) and keep the dropped residual. Zero
+    /// allocations in steady state. `spans` charges the whole step to
+    /// `encode` — there is no quantize stage; wire bytes and RNG stream
+    /// are identical either way (the telemetry neutrality contract).
+    fn compress_timed(
+        &mut self,
+        v: &[f32],
+        out: &mut Vec<u8>,
+        spans: Option<&mut StageSpans>,
+    ) -> Result<u64> {
+        let t0 = spans.is_some().then(Instant::now);
+        self.ensure(v.len())?;
+        for (a, (&e, &g)) in self.acc.iter_mut().zip(self.err.iter().zip(v.iter())) {
+            *a = e + g;
+        }
+        let acc_sq = crate::util::norm2_sq(&self.acc);
+        // e_{t+1} starts as a_t; each layer then removes what it shipped.
+        self.err.copy_from_slice(&self.acc);
+        let layered = self.layers_cfg.enabled();
+        let n = self.ops.len();
+        let mut total_bits = 0u64;
+        for i in 0..n {
+            // Copy the range out so the map borrow does not overlap the
+            // scratch borrows (same idiom as the layer-wise pipeline).
+            let r = self.map.as_ref().unwrap().range(i);
+            let bits = match self.ops[i] {
+                ContractiveOp::TopK { k } => {
+                    contractive::select_top_k(&self.acc[r.clone()], k, &mut self.idx);
+                    let b = contractive::encode_sparse_into(
+                        &self.acc[r.clone()],
+                        &self.idx,
+                        &mut self.frame,
+                    );
+                    for &ix in &self.idx {
+                        self.err[r.start + ix as usize] = 0.0;
+                    }
+                    b
+                }
+                ContractiveOp::RandK { k } => {
+                    contractive::select_rand_k(
+                        r.len(),
+                        k,
+                        &mut self.rng,
+                        &mut self.perm,
+                        &mut self.idx,
+                    );
+                    let b = contractive::encode_sparse_into(
+                        &self.acc[r.clone()],
+                        &self.idx,
+                        &mut self.frame,
+                    );
+                    for &ix in &self.idx {
+                        self.err[r.start + ix as usize] = 0.0;
+                    }
+                    b
+                }
+                ContractiveOp::RankR { rank, rows, cols } => {
+                    contractive::low_rank_project(
+                        &self.acc[r.clone()],
+                        rows,
+                        cols,
+                        rank,
+                        &mut self.fac_u,
+                        &mut self.fac_v,
+                    );
+                    let b = contractive::encode_low_rank_into(
+                        &self.fac_u,
+                        &self.fac_v,
+                        rank,
+                        &mut self.frame,
+                    );
+                    // Ĉ(a) is defined by the decoder: reuse its kernel so
+                    // the kept residual is exact.
+                    self.recon.resize(r.len(), 0.0);
+                    contractive::reconstruct_low_rank(
+                        &self.fac_u,
+                        &self.fac_v,
+                        rows,
+                        cols,
+                        rank,
+                        &mut self.recon,
+                    );
+                    for (j, g) in r.clone().enumerate() {
+                        self.err[g] = self.acc[g] - self.recon[j];
+                    }
+                    b
+                }
+            };
+            if layered {
+                out.extend_from_slice(&(self.frame.len() as u32).to_le_bytes());
+                out.extend_from_slice(&self.frame);
+                total_bits += 32 + bits;
+            } else {
+                out.extend_from_slice(&self.frame);
+                total_bits += bits;
+            }
+        }
+        let err_sq = crate::util::norm2_sq(&self.err);
+        self.last_err_norm = err_sq.sqrt();
+        self.last_delta = if acc_sq > 0.0 { (1.0 - err_sq / acc_sq).clamp(0.0, 1.0) } else { 1.0 };
+        self.steps += 1;
+        if let (Some(s), Some(t0)) = (spans, t0) {
+            s.add(Stage::Encode, t0.elapsed().as_secs_f64());
+        }
+        Ok(total_bits)
+    }
+
+    /// Decode one payload through the reusable decode scratch into `out`.
+    /// Resolves and caches the map on a receive-only endpoint's first
+    /// payload; never touches the error memory or the rand-k stream.
+    fn decompress_into(&mut self, bytes: &[u8], out: &mut [f32]) -> Result<()> {
+        self.ensure(out.len())?;
+        let map = self.map.as_ref().unwrap();
+        let ops = &self.ops;
+        let idx = &mut self.dec_idx;
+        let fu = &mut self.dec_u;
+        let fv = &mut self.dec_v;
+        if self.layers_cfg.enabled() {
+            for_each_frame(map.len(), bytes, |i, body| {
+                decode_contractive_frame(ops[i], body, idx, fu, fv, map.slice_mut(i, out))
+            })
+        } else {
+            decode_contractive_frame(ops[0], bytes, idx, fu, fv, out)
+        }
+    }
+
+    /// Allocating (`&self`) decode path — resolves a fresh map/operator
+    /// set when none is cached yet and uses local scratch.
+    fn decompress(&self, bytes: &[u8], out: &mut [f32]) -> Result<()> {
+        let resolved;
+        let (map, ops): (&LayerMap, &[ContractiveOp]) = match &self.map {
+            Some(m) if m.d() == out.len() => (m, &self.ops),
+            Some(m) => {
+                return Err(Error::Quant(format!(
+                    "ef map resolved for d = {}, got a vector of d = {}",
+                    m.d(),
+                    out.len()
+                )))
+            }
+            None => {
+                resolved = self.resolve(out.len())?;
+                (&resolved.0, &resolved.1)
+            }
+        };
+        let mut idx = Vec::new();
+        let (mut fu, mut fv) = (Vec::new(), Vec::new());
+        if self.layers_cfg.enabled() {
+            for_each_frame(map.len(), bytes, |i, body| {
+                decode_contractive_frame(
+                    ops[i],
+                    body,
+                    &mut idx,
+                    &mut fu,
+                    &mut fv,
+                    map.slice_mut(i, out),
+                )
+            })
+        } else {
+            decode_contractive_frame(ops[0], bytes, &mut idx, &mut fu, &mut fv, out)
+        }
+    }
+}
+
+/// Decode one contractive frame body (sparse or low-rank, by operator)
+/// into `out` — THE one decode shared by the arena and allocating paths
+/// and by the flat and layered framings, so format handling cannot
+/// diverge between them.
+fn decode_contractive_frame(
+    op: ContractiveOp,
+    body: &[u8],
+    idx: &mut Vec<u32>,
+    fu: &mut Vec<f32>,
+    fv: &mut Vec<f32>,
+    out: &mut [f32],
+) -> Result<()> {
+    match op {
+        ContractiveOp::TopK { .. } | ContractiveOp::RandK { .. } => {
+            contractive::decode_sparse_into(body, idx, out).map(|_| ())
+        }
+        ContractiveOp::RankR { rank: _, rows, cols } => {
+            contractive::decode_low_rank_into(body, rows, cols, fu, fv, out).map(|_| ())
+        }
+    }
+}
+
 /// Walk the layer-wise `[u32 frame][payload]` wire (see `docs/WIRE.md`),
 /// calling `f(layer index, frame body)` in map order. THE one copy of the
 /// frame parser — both the allocating and arena decompress paths go
@@ -801,6 +1198,19 @@ mod tests {
             hist_bins: 128,
             stat_samples: 8,
             layers: Default::default(),
+            ef: Default::default(),
+        }
+    }
+
+    fn ef_cfg(ef: crate::config::EfConfig) -> QuantConfig {
+        QuantConfig { ef, ..Default::default() }
+    }
+
+    fn topk_ef(k: usize) -> crate::config::EfConfig {
+        crate::config::EfConfig {
+            scheme: crate::config::EfScheme::TopK,
+            k,
+            ..Default::default()
         }
     }
 
@@ -1302,5 +1712,218 @@ mod tests {
         .unwrap();
         let mut out = vec![0.0f32; 4];
         assert!(c.decompress(&[0u8; 7], &mut out).is_err());
+    }
+
+    #[test]
+    fn contractive_topk_feeds_back_the_dropped_error() {
+        let cfg = ef_cfg(topk_ef(4));
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(300)).unwrap();
+        assert!(c.is_contractive() && !c.is_quantized());
+        let g1 = Rng::seed_from(301).gaussian_vec(32, 1.0);
+        let (wire, bits) = c.compress(&g1).unwrap();
+        assert!(bits < 32 * 32, "4 of 32 coordinates must beat fp32: {bits}");
+        let mut out = vec![0.0f32; 32];
+        c.decompress(&wire, &mut out).unwrap();
+        // First step: e_0 = 0, so the wire carries top-4 of g1 exactly.
+        let mut idx = Vec::new();
+        contractive::select_top_k(&g1, 4, &mut idx);
+        for i in 0..32 {
+            if idx.contains(&(i as u32)) {
+                assert_eq!(out[i], g1[i]);
+            } else {
+                assert_eq!(out[i], 0.0);
+            }
+        }
+        // The memory holds exactly what was dropped…
+        let err: Vec<f32> = c.ef_error_memory().unwrap().to_vec();
+        for i in 0..32 {
+            assert_eq!(err[i], g1[i] - out[i]);
+        }
+        // …and the next step compresses e_1 + g_2, not g_2 alone.
+        let g2 = Rng::seed_from(302).gaussian_vec(32, 1.0);
+        let (wire2, _) = c.compress(&g2).unwrap();
+        let mut out2 = vec![0.0f32; 32];
+        c.decompress(&wire2, &mut out2).unwrap();
+        let acc: Vec<f32> = (0..32).map(|i| err[i] + g2[i]).collect();
+        contractive::select_top_k(&acc, 4, &mut idx);
+        for &ix in &idx {
+            assert_eq!(out2[ix as usize], acc[ix as usize]);
+        }
+        let (err_norm, delta) = c.ef_scalars().unwrap();
+        assert!(err_norm > 0.0 && delta > 0.0 && delta <= 1.0);
+        assert_eq!(c.ef_delta_bound(), Some(4.0 / 32.0));
+    }
+
+    #[test]
+    fn contractive_full_k_is_exact_with_empty_memory() {
+        let d = 24;
+        let cfg = ef_cfg(topk_ef(d));
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(310)).unwrap();
+        let mut rng = Rng::seed_from(311);
+        let mut out = vec![0.0f32; d];
+        for _ in 0..5 {
+            let v = rng.gaussian_vec(d, 1.5);
+            let (wire, _) = c.compress(&v).unwrap();
+            c.decompress(&wire, &mut out).unwrap();
+            assert_eq!(out, v, "k = d decodes the raw vector exactly");
+            let (err_norm, delta) = c.ef_scalars().unwrap();
+            assert_eq!(err_norm, 0.0, "full feedback never accumulates error");
+            assert_eq!(delta, 1.0);
+        }
+    }
+
+    #[test]
+    fn contractive_randk_decode_is_stateless_across_ranks() {
+        let ef = crate::config::EfConfig {
+            scheme: crate::config::EfScheme::RandK,
+            k: 6,
+            ..Default::default()
+        };
+        let cfg = ef_cfg(ef);
+        let mut a = Compressor::from_config(&cfg, Rng::seed_from(320)).unwrap();
+        let mut b = Compressor::from_config(&cfg, Rng::seed_from(321)).unwrap();
+        let v = Rng::seed_from(322).gaussian_vec(40, 1.0);
+        let (wire, _) = a.compress(&v).unwrap();
+        // The support travels on the wire: ranks with *different* rng
+        // streams decode identically, via both decode paths.
+        let mut out_a = vec![0.0f32; 40];
+        a.decompress(&wire, &mut out_a).unwrap();
+        let mut out_b = vec![0.0f32; 40];
+        b.decompress_into(&wire, &mut out_b).unwrap();
+        assert_eq!(out_a, out_b);
+        let mut out_c = vec![0.0f32; 40];
+        Compressor::from_config(&cfg, Rng::seed_from(323))
+            .unwrap()
+            .decompress(&wire, &mut out_c)
+            .unwrap();
+        assert_eq!(out_a, out_c);
+        assert_eq!(out_a.iter().filter(|x| **x != 0.0).count(), 6);
+    }
+
+    #[test]
+    fn contractive_pipelines_never_adapt() {
+        // The default config adapts (QAda + Huffman); [quant.ef] must
+        // force the fully static path regardless.
+        let cfg = ef_cfg(topk_ef(3));
+        assert!(!cfg.adapts(), "[quant.ef] must disable adaptation");
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(330)).unwrap();
+        let v = Rng::seed_from(331).gaussian_vec(16, 1.0);
+        let _ = c.compress(&v).unwrap();
+        assert!(c.stats_payload().is_empty(), "no stat payloads, ever");
+        assert!(!c.update_levels(&[]).unwrap());
+        assert_eq!(c.updates(), 0);
+        assert!(c.levels().is_none() && c.layer_levels(0).is_none());
+        assert_eq!(c.epsilon_q(16), 0.0);
+        assert!(c.layer_names().is_none() && c.layer_wire_bits().is_none());
+    }
+
+    #[test]
+    fn contractive_rankr_matches_sender_reconstruction() {
+        let ef = crate::config::EfConfig {
+            scheme: crate::config::EfScheme::RankR,
+            rank: 2,
+            rows: 6,
+            ..Default::default()
+        };
+        let cfg = ef_cfg(ef);
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(340)).unwrap();
+        let v = Rng::seed_from(341).gaussian_vec(48, 1.0);
+        let (wire, bits) = c.compress(&v).unwrap();
+        // [u32 r] + 32 · (rows + cols) · r = 32 + 32 · 14 · 2.
+        assert_eq!(bits, 928);
+        let mut out = vec![0.0f32; 48];
+        c.decompress(&wire, &mut out).unwrap();
+        // e_1 = a_1 − Ĉ(a_1) with the decoder's own reconstruction: the
+        // memory plus the decode reassembles g_1 (up to f32 rounding of
+        // the subtraction itself).
+        let err = c.ef_error_memory().unwrap();
+        for i in 0..48 {
+            assert!((err[i] + out[i] - v[i]).abs() < 1e-5, "coordinate {i}");
+        }
+        let (_, delta) = c.ef_scalars().unwrap();
+        assert!(delta > 0.0 && delta <= 1.0);
+    }
+
+    #[test]
+    fn contractive_layered_frames_ride_the_shared_framing() {
+        let mut cfg = layered_cfg(LevelScheme::Uniform, SymbolCodec::Fixed);
+        cfg.ef = topk_ef(16);
+        let ov = crate::config::EfOverride { k: Some(4), ..Default::default() };
+        cfg.ef.overrides = vec![("embed".into(), ov)];
+        let mut a = Compressor::from_config(&cfg, Rng::seed_from(350)).unwrap();
+        let mut b = Compressor::from_config(&cfg, Rng::seed_from(351)).unwrap();
+        assert!(a.is_contractive() && !a.is_layerwise());
+        let v = Rng::seed_from(352).gaussian_vec(512, 1.0);
+        let (wire, bits) = a.compress(&v).unwrap();
+        // 3 frames of 32 bits ride on top of the sparse payloads.
+        assert!(bits >= 96);
+        let mut out_a = vec![0.0f32; 512];
+        a.decompress(&wire, &mut out_a).unwrap();
+        let mut out_b = vec![0.0f32; 512];
+        b.decompress_into(&wire, &mut out_b).unwrap();
+        assert_eq!(out_a, out_b);
+        // embed (128 coords) keeps its override k = 4; body/head keep 16.
+        let nz = |r: std::ops::Range<usize>| out_a[r].iter().filter(|x| **x != 0.0).count();
+        assert_eq!(nz(0..128), 4);
+        assert_eq!(nz(128..448), 16);
+        assert_eq!(nz(448..512), 16);
+        // Truncation and trailing garbage are rejected.
+        assert!(b.decompress_into(&wire[..wire.len() - 1], &mut out_b).is_err());
+        let mut padded = wire.clone();
+        padded.push(0);
+        assert!(b.decompress_into(&padded, &mut out_b).is_err());
+    }
+
+    #[test]
+    fn contractive_clone_carries_the_error_memory() {
+        // The checkpoint path is a deep clone: a compressor cloned mid-run
+        // must continue bit-for-bit (nonzero memory and rand-k stream).
+        for scheme in [crate::config::EfScheme::TopK, crate::config::EfScheme::RandK] {
+            let ef = crate::config::EfConfig { scheme, k: 5, ..Default::default() };
+            let cfg = ef_cfg(ef);
+            let mut c = Compressor::from_config(&cfg, Rng::seed_from(360)).unwrap();
+            let mut rng = Rng::seed_from(361);
+            for _ in 0..3 {
+                let _ = c.compress(&rng.gaussian_vec(33, 1.0)).unwrap();
+            }
+            assert!(c.ef_scalars().unwrap().0 > 0.0, "memory must be nonzero");
+            let mut resumed = c.clone();
+            for _ in 0..4 {
+                let v = rng.gaussian_vec(33, 1.0);
+                assert_eq!(c.compress(&v).unwrap(), resumed.compress(&v).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn ef_metrics_emit_only_for_contractive_pipelines() {
+        let cfg = ef_cfg(topk_ef(2));
+        let mut c = Compressor::from_config(&cfg, Rng::seed_from(370)).unwrap();
+        // Before any compress: nothing to report (receive-only endpoints
+        // stay silent in summaries).
+        let mut rec = Recorder::new();
+        c.emit_ef_scalars(&mut rec);
+        assert!(rec.scalars.is_empty());
+        let _ = c.compress(&Rng::seed_from(371).gaussian_vec(16, 1.0)).unwrap();
+        c.emit_ef_scalars(&mut rec);
+        c.record_ef_series(&mut rec, 1.0);
+        assert!(rec.scalar("ef_err_norm").unwrap() > 0.0);
+        let delta = rec.scalar("ef_delta").unwrap();
+        assert!(delta > 0.0 && delta <= 1.0);
+        assert_eq!(rec.scalar("ef_delta_bound"), Some(2.0 / 16.0));
+        assert_eq!(rec.get("ef_err_norm").unwrap().len(), 1);
+        // Non-contractive pipelines: silent no-ops, keeping EF-off
+        // telemetry byte-identical.
+        let flat = Compressor::from_config(
+            &quant_cfg(LevelScheme::Uniform, SymbolCodec::Fixed),
+            Rng::seed_from(372),
+        )
+        .unwrap();
+        let mut rec2 = Recorder::new();
+        flat.emit_ef_scalars(&mut rec2);
+        flat.record_ef_series(&mut rec2, 1.0);
+        assert!(rec2.series.is_empty() && rec2.scalars.is_empty());
+        assert!(flat.ef_scalars().is_none() && flat.ef_error_memory().is_none());
+        assert!(flat.ef_delta_bound().is_none());
     }
 }

@@ -88,6 +88,7 @@ fn emit_loopback_summary(rec: &mut Recorder, eng: &RoundEngine) {
         rec.set_scalar("rewires", eng.rewires as f64);
     }
     eng.comps[0].emit_layer_scalars(rec);
+    eng.comps[0].emit_ef_scalars(rec);
 }
 
 /// The threaded workers' rank-0 summary scalar set (transport fabric).
@@ -103,6 +104,7 @@ fn emit_transport_summary(rec: &mut Recorder, eng: &RoundEngine) {
         rec.set_scalar("rewires", eng.rewires as f64);
     }
     eng.comps[0].emit_layer_scalars(rec);
+    eng.comps[0].emit_ef_scalars(rec);
 }
 
 fn gap_eval_for(eng: &RoundEngine) -> Option<GapEvaluator> {
@@ -120,6 +122,7 @@ fn push_step_diagnostics(rec: &mut Recorder, eng: &RoundEngine, tf: f64, gamma: 
     rec.push("bits_cum", tf, eng.traffic.bits_sent as f64);
     rec.push("sim_time_cum", tf, eng.traffic.total_time());
     eng.comps[0].record_layer_series(rec, tf);
+    eng.comps[0].record_ef_series(rec, tf);
 }
 
 // ---------------------------------------------------------------- exact --

@@ -76,9 +76,9 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--rewire-every N] [--local H] [--staleness S] [--straggler-rate p] [--layers N|name:end,...,last] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--rewire-every N] [--local H] [--staleness S] [--straggler-rate p] [--layers N|name:end,...,last] [--ef off|topk:k|randk:k|rankr:r[:rows]] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K] [--layerwise]\n\
-           lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N]\n\
+           lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N] [--ef off|topk:k|randk:k|rankr:r[:rows]]\n\
            worker one socket-transport rank           --rank R --connect HOST:PORT|unix:PATH [--timeout-ms N] [--fault kind@rank:round[:arg],...] [run flags; rank 0 hosts the rendezvous and reports]\n\
            launch spawn K local socket workers        [--addr HOST:PORT|unix:PATH] [run flags incl. --fault, forwarded to every worker]\n\
            info   print the artifact manifest summary\n\
@@ -170,6 +170,11 @@ fn run_cfg_from_flags(flags: &Flags) -> Result<ExperimentConfig, String> {
         cfg.quant.layers.names = parsed.names;
         cfg.quant.layers.bounds = parsed.bounds;
         cfg.quant.layers.overrides.clear();
+    }
+    if let Some(spec) = flags.get("ef") {
+        // `off` | `topk:<k>` | `randk:<k>` | `rankr:<rank>[:<rows>]` —
+        // replaces a config file's [quant.ef] table (docs/CONFIG.md).
+        cfg.quant.ef = qgenx::config::EfConfig::parse_cli(spec).map_err(|e| e.to_string())?;
     }
     Ok(cfg)
 }
@@ -468,6 +473,9 @@ fn cmd_lm(flags: &Flags) -> Result<(), String> {
             qgenx::config::LayersConfig::parse_cli(spec).map_err(|e| e.to_string())?;
         quant.layers.names = parsed.names;
         quant.layers.bounds = parsed.bounds;
+    }
+    if let Some(spec) = flags.get("ef") {
+        quant.ef = qgenx::config::EfConfig::parse_cli(spec).map_err(|e| e.to_string())?;
     }
     let cfg = LmTrainConfig {
         optimizer,

@@ -1,0 +1,661 @@
+//! Contractive (biased) compressors — the algorithmic core of the
+//! error-feedback pipeline (`[quant.ef]`, `Compressor::Contractive`).
+//!
+//! Unlike the unbiased `CODE ∘ Q` stack (Definition 1 + Theorem 2), these
+//! operators are *biased* but δ-contractive:
+//!
+//! ```text
+//!   ‖x − C(x)‖² ≤ (1 − δ) ‖x‖²        for some δ ∈ (0, 1]
+//! ```
+//!
+//! which is exactly the compressor class of the Three-Pillars analysis
+//! (Beznosikov et al., 2023) and the unified local-GDA treatment (Zhang et
+//! al., 2023) for VI / min-max problems. Bias is repaired by the per-worker
+//! error-feedback recursion held in
+//! [`crate::coordinator::pipeline`]:
+//!
+//! ```text
+//!   a_t     = e_t + g_t                (accumulate)
+//!   wire    = C(a_t)                   (compress, ship)
+//!   e_{t+1} = a_t − Ĉ(a_t)             (remember what was dropped)
+//! ```
+//!
+//! Three operators, each with its worst-case contraction factor exposed
+//! via [`ContractiveOp::delta`]:
+//!
+//! * **top-k** — the k largest-magnitude coordinates, δ = k/d. Ties are
+//!   broken by *ascending index* under a total order (see
+//!   [`select_top_k`]), so replicated compressors on different ranks
+//!   select identical supports — magnitude ties must never make gossip
+//!   replicas diverge.
+//! * **rand-k** — k distinct coordinates drawn from the compressor's own
+//!   seeded PRNG, E[δ] = k/d. The chosen support travels on the wire, so
+//!   decoding never replays the draw.
+//! * **rank-r** — a subspace-iteration low-rank projection `U Uᵀ A` of the
+//!   matrix-shaped dual (GAN / LM-proxy oracles), δ = r / min(rows, cols).
+//!   Initialisation is a deterministic splitmix64 stream keyed on the
+//!   shape — no PRNG state to checkpoint, identical on every replica.
+//!
+//! Wire frames (docs/WIRE.md §5):
+//!
+//! ```text
+//!   sparse:   [u32 k][Elias-γ(gap_i + 1) …][k × f32 raw values]
+//!   low-rank: [u32 r][rows·r × f32 U][cols·r × f32 V]
+//! ```
+//!
+//! Sparse indices are delta-coded ascending (`gap_0 = idx_0`,
+//! `gap_i = idx_i − idx_{i−1} − 1`); values are raw IEEE f32, so `k = d`
+//! reproduces the uncompressed trajectory bit-for-bit. Both decoders use
+//! the strict-tail convention: at most 7 padding bits, all zero.
+
+use crate::coding::{elias, BitReader, BitWriter};
+use crate::error::{Error, Result};
+use crate::util::rng::{splitmix64, Rng};
+
+/// One contractive operator, fully resolved (absolute `k` / shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ContractiveOp {
+    /// Deterministic top-k by magnitude, index-ascending tie-break.
+    TopK {
+        /// Number of coordinates kept (1 ≤ k ≤ d).
+        k: usize,
+    },
+    /// Seeded random-k with on-wire support.
+    RandK {
+        /// Number of coordinates kept (1 ≤ k ≤ d).
+        k: usize,
+    },
+    /// Rank-r subspace-iteration projection of the `rows × cols` dual.
+    RankR {
+        /// Target rank (1 ≤ r ≤ min(rows, cols)).
+        rank: usize,
+        /// Matrix rows; `rows * cols` must equal the (layer) dimension.
+        rows: usize,
+        /// Matrix columns.
+        cols: usize,
+    },
+}
+
+impl ContractiveOp {
+    /// Scheme name as it appears in config / telemetry.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ContractiveOp::TopK { .. } => "topk",
+            ContractiveOp::RandK { .. } => "randk",
+            ContractiveOp::RankR { .. } => "rankr",
+        }
+    }
+
+    /// Worst-case contraction factor δ for a `d`-dimensional input:
+    /// `k/d` for the sparsifiers, `r / min(rows, cols)` for rank-r
+    /// (the top r of min(rows, cols) singular values carry at least an
+    /// r/min share of the squared Frobenius norm).
+    pub fn delta(&self, d: usize) -> f64 {
+        match *self {
+            ContractiveOp::TopK { k } | ContractiveOp::RandK { k } => {
+                if d == 0 {
+                    1.0
+                } else {
+                    k.min(d) as f64 / d as f64
+                }
+            }
+            ContractiveOp::RankR { rank, rows, cols } => {
+                let n = rows.min(cols).max(1);
+                rank.min(n) as f64 / n as f64
+            }
+        }
+    }
+
+    /// Validate the operator against a concrete (layer) dimension `d`.
+    pub fn validate(&self, d: usize) -> Result<()> {
+        match *self {
+            ContractiveOp::TopK { k } | ContractiveOp::RandK { k } => {
+                if k == 0 || k > d {
+                    return Err(Error::Quant(format!(
+                        "{}: k = {k} out of range for dimension {d} (need 1 ≤ k ≤ d)",
+                        self.name()
+                    )));
+                }
+            }
+            ContractiveOp::RankR { rank, rows, cols } => {
+                if rows * cols != d {
+                    return Err(Error::Quant(format!(
+                        "rankr: shape {rows}×{cols} does not match dimension {d}"
+                    )));
+                }
+                if rank == 0 || rank > rows.min(cols) {
+                    return Err(Error::Quant(format!(
+                        "rankr: rank = {rank} out of range for shape {rows}×{cols} \
+                         (need 1 ≤ r ≤ min(rows, cols))"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Exact wire cost in bits of one frame produced by this operator on a
+    /// `d`-dimensional input with the given selected support (sparse) —
+    /// rank-r cost is shape-determined.
+    pub fn frame_bits(&self, idx: &[u32]) -> u64 {
+        match *self {
+            ContractiveOp::TopK { .. } | ContractiveOp::RandK { .. } => {
+                let mut bits = 32 + 32 * idx.len() as u64;
+                let mut prev = 0u64;
+                for (i, &ix) in idx.iter().enumerate() {
+                    let gap = if i == 0 { ix as u64 } else { ix as u64 - prev - 1 };
+                    bits += elias::gamma_len(gap + 1);
+                    prev = ix as u64;
+                }
+                bits
+            }
+            ContractiveOp::RankR { rank, rows, cols } => {
+                32 + 32 * ((rows + cols) * rank) as u64
+            }
+        }
+    }
+}
+
+/// Deterministic near-square factorisation of `d`: the largest divisor
+/// `rows ≤ √d` (so `rows ≤ cols` always). Used when `[quant.ef] rows = 0`.
+pub fn auto_shape(d: usize) -> (usize, usize) {
+    if d == 0 {
+        return (1, 0);
+    }
+    let mut rows = (d as f64).sqrt().floor() as usize;
+    while rows > 1 && d % rows != 0 {
+        rows -= 1;
+    }
+    let rows = rows.max(1);
+    (rows, d / rows)
+}
+
+/// Select the `k` largest-magnitude coordinates of `v` into `idx`
+/// (ascending index order on return).
+///
+/// The selection is a *total order*: magnitude descending via
+/// `f32::total_cmp`, then index ascending. Under magnitude ties the
+/// lower index always wins, so the selected support is a pure function
+/// of `v` — identical on every rank that holds a replica of the same
+/// vector, independent of `select_nth_unstable_by` internals.
+pub fn select_top_k(v: &[f32], k: usize, idx: &mut Vec<u32>) {
+    idx.clear();
+    idx.extend(0..v.len() as u32);
+    let k = k.min(v.len());
+    if k == 0 {
+        idx.clear();
+        return;
+    }
+    if k < v.len() {
+        let by_rank = |&a: &u32, &b: &u32| {
+            v[b as usize]
+                .abs()
+                .total_cmp(&v[a as usize].abs())
+                .then(a.cmp(&b))
+        };
+        idx.select_nth_unstable_by(k - 1, by_rank);
+        idx.truncate(k);
+    }
+    idx.sort_unstable();
+}
+
+/// Draw `k` distinct coordinates of a `d`-dimensional vector from `rng`
+/// (partial Fisher–Yates over `perm`, a reusable scratch permutation).
+/// `idx` holds the support in ascending order on return.
+pub fn select_rand_k(d: usize, k: usize, rng: &mut Rng, perm: &mut Vec<u32>, idx: &mut Vec<u32>) {
+    perm.clear();
+    perm.extend(0..d as u32);
+    let k = k.min(d);
+    for i in 0..k {
+        let j = i + rng.below((d - i) as u64) as usize;
+        perm.swap(i, j);
+    }
+    idx.clear();
+    idx.extend_from_slice(&perm[..k]);
+    idx.sort_unstable();
+}
+
+/// Encode one sparse frame (WIRE.md §5) into `buf` (reused, cleared):
+/// `[u32 k][γ(gap+1) …][f32 values]`, indices ascending. Returns the
+/// exact payload length in bits (before byte padding).
+pub fn encode_sparse_into(v: &[f32], idx: &[u32], buf: &mut Vec<u8>) -> u64 {
+    buf.clear();
+    let mut w = BitWriter::over(std::mem::take(buf));
+    w.write_u32(idx.len() as u32);
+    let mut prev = 0u64;
+    for (i, &ix) in idx.iter().enumerate() {
+        let gap = if i == 0 { ix as u64 } else { ix as u64 - prev - 1 };
+        elias::gamma_encode(&mut w, gap + 1);
+        prev = ix as u64;
+    }
+    for &ix in idx {
+        w.write_f32(v[ix as usize]);
+    }
+    let bits = w.bit_len();
+    *buf = w.finish();
+    bits
+}
+
+/// Decode one sparse frame into `out` (zero-filled first, then the
+/// carried values scattered onto their indices). `idx` is reusable
+/// scratch that holds the decoded support on return. Returns `k`.
+pub fn decode_sparse_into(bytes: &[u8], idx: &mut Vec<u32>, out: &mut [f32]) -> Result<usize> {
+    out.fill(0.0);
+    let mut r = BitReader::new(bytes);
+    let k = r.read_u32()? as usize;
+    if k > out.len() {
+        return Err(Error::Codec(format!(
+            "sparse frame: k = {k} exceeds dimension {}",
+            out.len()
+        )));
+    }
+    idx.clear();
+    let mut prev = 0u64;
+    for i in 0..k {
+        let gap = elias::gamma_decode(&mut r)? - 1;
+        let ix = if i == 0 { gap } else { prev + 1 + gap };
+        if ix >= out.len() as u64 {
+            return Err(Error::Codec(format!(
+                "sparse frame: index {ix} out of bounds for dimension {}",
+                out.len()
+            )));
+        }
+        idx.push(ix as u32);
+        prev = ix;
+    }
+    for &ix in idx.iter() {
+        out[ix as usize] = r.read_f32()?;
+    }
+    strict_tail(r, bytes)?;
+    Ok(k)
+}
+
+/// Rank-r subspace iteration: computes an orthonormal `U` (`rows × r`,
+/// row-major) and `V = Aᵀ U` (`cols × r`, carrying the singular values)
+/// such that `U Vᵀ = U Uᵀ A` is the projection of `A` onto the iterated
+/// subspace. Initialisation is a splitmix64 stream keyed on the shape —
+/// fully deterministic, no PRNG state consumed or stored.
+pub fn low_rank_project(
+    a: &[f32],
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    u: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+) {
+    debug_assert_eq!(a.len(), rows * cols);
+    let r = rank.min(rows).min(cols).max(1);
+    v.clear();
+    v.resize(cols * r, 0.0);
+    let mut state = 0x9e37_79b9_7f4a_7c15u64
+        ^ ((rows as u64) << 32)
+        ^ ((cols as u64) << 16)
+        ^ r as u64;
+    for x in v.iter_mut() {
+        // 24 high bits → uniform in [-1, 1): enough spread to seed the
+        // subspace, exactly reproducible everywhere.
+        *x = (splitmix64(&mut state) >> 40) as f32 / (1u64 << 23) as f32 - 1.0;
+    }
+    orthonormalize(v, cols, r);
+    u.clear();
+    u.resize(rows * r, 0.0);
+    for _ in 0..2 {
+        mat_ab(a, rows, cols, v, r, u);
+        orthonormalize(u, rows, r);
+        mat_atb(a, rows, cols, u, r, v);
+        orthonormalize(v, cols, r);
+    }
+    mat_ab(a, rows, cols, v, r, u);
+    orthonormalize(u, rows, r);
+    mat_atb(a, rows, cols, u, r, v);
+}
+
+/// `out = U Vᵀ` — the shared reconstruction used by *both* the encoder's
+/// error-memory update and the decoder, so sender and receiver agree on
+/// `Ĉ(a)` bit-for-bit.
+pub fn reconstruct_low_rank(
+    u: &[f32],
+    v: &[f32],
+    rows: usize,
+    cols: usize,
+    rank: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), rows * cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            let mut acc = 0.0f32;
+            for l in 0..rank {
+                acc += u[i * rank + l] * v[j * rank + l];
+            }
+            out[i * cols + j] = acc;
+        }
+    }
+}
+
+/// Encode one low-rank frame (WIRE.md §5): `[u32 r][U block][V block]`.
+/// Returns the exact payload length in bits.
+pub fn encode_low_rank_into(u: &[f32], v: &[f32], rank: usize, buf: &mut Vec<u8>) -> u64 {
+    buf.clear();
+    let mut w = BitWriter::over(std::mem::take(buf));
+    w.write_u32(rank as u32);
+    for &x in u {
+        w.write_f32(x);
+    }
+    for &x in v {
+        w.write_f32(x);
+    }
+    let bits = w.bit_len();
+    *buf = w.finish();
+    bits
+}
+
+/// Decode one low-rank frame into `out = U Vᵀ` (`rows × cols`). `u`/`v`
+/// are reusable scratch holding the decoded factors on return.
+pub fn decode_low_rank_into(
+    bytes: &[u8],
+    rows: usize,
+    cols: usize,
+    u: &mut Vec<f32>,
+    v: &mut Vec<f32>,
+    out: &mut [f32],
+) -> Result<usize> {
+    let mut r = BitReader::new(bytes);
+    let rank = r.read_u32()? as usize;
+    if rank == 0 || rank > rows.min(cols) {
+        return Err(Error::Codec(format!(
+            "low-rank frame: rank {rank} out of range for shape {rows}×{cols}"
+        )));
+    }
+    u.clear();
+    for _ in 0..rows * rank {
+        u.push(r.read_f32()?);
+    }
+    v.clear();
+    for _ in 0..cols * rank {
+        v.push(r.read_f32()?);
+    }
+    strict_tail(r, bytes)?;
+    reconstruct_low_rank(u, v, rows, cols, rank, out);
+    Ok(rank)
+}
+
+/// Strict-tail check shared by both decoders: at most 7 residual bits,
+/// all zero — truncated or oversized frames are wire errors, not noise.
+fn strict_tail(mut r: BitReader, bytes: &[u8]) -> Result<()> {
+    let consumed = r.bits_read();
+    let total = bytes.len() as u64 * 8;
+    if total < consumed || total - consumed >= 8 {
+        return Err(Error::Codec(format!(
+            "contractive frame: {} trailing bits after payload",
+            total.saturating_sub(consumed)
+        )));
+    }
+    let pad = (total - consumed) as u32;
+    if pad > 0 && r.read_bits(pad)? != 0 {
+        return Err(Error::Codec("contractive frame: nonzero padding".into()));
+    }
+    Ok(())
+}
+
+/// `u[·][l] = A v[·][l]` for each of the `r` columns (row-major blocks).
+fn mat_ab(a: &[f32], rows: usize, cols: usize, v: &[f32], r: usize, u: &mut [f32]) {
+    for i in 0..rows {
+        for l in 0..r {
+            let mut acc = 0.0f32;
+            for j in 0..cols {
+                acc += a[i * cols + j] * v[j * r + l];
+            }
+            u[i * r + l] = acc;
+        }
+    }
+}
+
+/// `v[·][l] = Aᵀ u[·][l]` for each of the `r` columns.
+fn mat_atb(a: &[f32], rows: usize, cols: usize, u: &[f32], r: usize, v: &mut [f32]) {
+    for j in 0..cols {
+        for l in 0..r {
+            let mut acc = 0.0f32;
+            for i in 0..rows {
+                acc += a[i * cols + j] * u[i * r + l];
+            }
+            v[j * r + l] = acc;
+        }
+    }
+}
+
+/// Modified Gram–Schmidt over the `r` columns of the `n × r` row-major
+/// block `m`; near-zero columns are zeroed rather than normalised so the
+/// projection degrades gracefully on (near-)zero inputs.
+fn orthonormalize(m: &mut [f32], n: usize, r: usize) {
+    for l in 0..r {
+        for p in 0..l {
+            let mut dot = 0.0f64;
+            for i in 0..n {
+                dot += m[i * r + l] as f64 * m[i * r + p] as f64;
+            }
+            let dot = dot as f32;
+            for i in 0..n {
+                m[i * r + l] -= dot * m[i * r + p];
+            }
+        }
+        let mut nrm = 0.0f64;
+        for i in 0..n {
+            nrm += (m[i * r + l] as f64) * (m[i * r + l] as f64);
+        }
+        let nrm = nrm.sqrt();
+        if nrm > 1e-12 {
+            let inv = (1.0 / nrm) as f32;
+            for i in 0..n {
+                m[i * r + l] *= inv;
+            }
+        } else {
+            for i in 0..n {
+                m[i * r + l] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_sparse(v: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+        let mut idx = Vec::new();
+        select_top_k(v, k, &mut idx);
+        let mut buf = Vec::new();
+        let bits = encode_sparse_into(v, &idx, &mut buf);
+        assert_eq!(bits, ContractiveOp::TopK { k }.frame_bits(&idx));
+        assert_eq!(buf.len() as u64, bits.div_ceil(8));
+        let mut out = vec![f32::NAN; v.len()];
+        let mut dec_idx = Vec::new();
+        let got = decode_sparse_into(&buf, &mut dec_idx, &mut out).unwrap();
+        assert_eq!(got, idx.len());
+        assert_eq!(dec_idx, idx);
+        (idx, out)
+    }
+
+    #[test]
+    fn top_k_breaks_magnitude_ties_by_ascending_index() {
+        // Four coordinates share |v| = 2.0; k = 2 must take the two
+        // lowest indices among them, on every call, regardless of sign.
+        let v = [2.0f32, -2.0, 0.5, 2.0, -2.0, 1.0];
+        let mut idx = Vec::new();
+        for _ in 0..8 {
+            select_top_k(&v, 2, &mut idx);
+            assert_eq!(idx, vec![0, 1]);
+        }
+        select_top_k(&v, 4, &mut idx);
+        assert_eq!(idx, vec![0, 1, 3, 4]);
+        // k = 5 pulls in the next-largest magnitude (index 5, |v| = 1).
+        select_top_k(&v, 5, &mut idx);
+        assert_eq!(idx, vec![0, 1, 3, 4, 5]);
+    }
+
+    #[test]
+    fn top_k_is_identical_across_shuffled_replicas() {
+        // Same vector on two "ranks" (independently allocated), heavy
+        // ties: selections must agree element-for-element.
+        let mut rng = Rng::seed_from(7);
+        let mut v = vec![0.0f32; 257];
+        for x in v.iter_mut() {
+            // Quantized magnitudes → many exact ties.
+            *x = ((rng.below(5) as f32) - 2.0) * 0.25;
+        }
+        let replica = v.clone();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for k in [1usize, 16, 128, 257] {
+            select_top_k(&v, k, &mut a);
+            select_top_k(&replica, k, &mut b);
+            assert_eq!(a, b, "k = {k}");
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip_scatters_exact_values() {
+        let mut rng = Rng::seed_from(11);
+        let v = rng.gaussian_vec(64, 1.0);
+        let (idx, out) = roundtrip_sparse(&v, 9);
+        for i in 0..v.len() {
+            if idx.contains(&(i as u32)) {
+                assert_eq!(out[i], v[i], "selected values are raw f32");
+            } else {
+                assert_eq!(out[i], 0.0, "unselected coordinates decode to zero");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_k_equals_d_is_the_identity() {
+        let mut rng = Rng::seed_from(3);
+        let v = rng.gaussian_vec(33, 2.0);
+        let (_, out) = roundtrip_sparse(&v, 33);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn sparse_decoder_rejects_corrupt_frames() {
+        let v = [1.0f32, -2.0, 3.0, 0.0];
+        let mut idx = Vec::new();
+        select_top_k(&v, 2, &mut idx);
+        let mut buf = Vec::new();
+        encode_sparse_into(&v, &idx, &mut buf);
+        let mut out = vec![0.0f32; 4];
+        let mut scratch = Vec::new();
+        // Truncation.
+        let t = &buf[..buf.len() - 1];
+        assert!(decode_sparse_into(t, &mut scratch, &mut out).is_err());
+        // Trailing garbage byte.
+        let mut long = buf.clone();
+        long.push(0xAB);
+        assert!(decode_sparse_into(&long, &mut scratch, &mut out).is_err());
+        // k beyond the dimension.
+        let mut big = buf.clone();
+        big[..4].copy_from_slice(&400u32.to_le_bytes());
+        assert!(decode_sparse_into(&big, &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn rand_k_is_seed_deterministic_with_distinct_indices() {
+        let (mut perm, mut idx) = (Vec::new(), Vec::new());
+        let mut r1 = Rng::seed_from(42);
+        select_rand_k(100, 17, &mut r1, &mut perm, &mut idx);
+        let first = idx.clone();
+        assert_eq!(first.len(), 17);
+        for w in first.windows(2) {
+            assert!(w[0] < w[1], "ascending and distinct");
+        }
+        let mut r2 = Rng::seed_from(42);
+        select_rand_k(100, 17, &mut r2, &mut perm, &mut idx);
+        assert_eq!(idx, first, "same seed → same support");
+        let mut r3 = Rng::seed_from(43);
+        select_rand_k(100, 17, &mut r3, &mut perm, &mut idx);
+        assert_ne!(idx, first, "different seed → different support");
+    }
+
+    #[test]
+    fn low_rank_recovers_an_exactly_rank_one_matrix() {
+        let (rows, cols) = (6, 5);
+        let mut a = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                a[i * cols + j] = (i as f32 + 1.0) * (0.5 * j as f32 - 1.0);
+            }
+        }
+        let (mut u, mut v) = (Vec::new(), Vec::new());
+        low_rank_project(&a, rows, cols, 1, &mut u, &mut v);
+        let mut out = vec![0.0f32; rows * cols];
+        reconstruct_low_rank(&u, &v, rows, cols, 1, &mut out);
+        for (x, y) in a.iter().zip(out.iter()) {
+            assert!((x - y).abs() < 1e-4, "rank-1 input is reproduced: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn low_rank_projection_is_contractive() {
+        let mut rng = Rng::seed_from(19);
+        let (rows, cols) = (8, 12);
+        let a = rng.gaussian_vec(rows * cols, 1.0);
+        for rank in [1usize, 2, 4, 8] {
+            let (mut u, mut v) = (Vec::new(), Vec::new());
+            low_rank_project(&a, rows, cols, rank, &mut u, &mut v);
+            let mut c = vec![0.0f32; rows * cols];
+            reconstruct_low_rank(&u, &v, rows, cols, rank, &mut c);
+            let norm: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum();
+            let resid: f64 = a.iter().zip(c.iter()).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+            assert!(
+                resid <= norm * (1.0 + 1e-9),
+                "rank {rank}: ‖a − C(a)‖² = {resid} must not exceed ‖a‖² = {norm}"
+            );
+        }
+        // Full rank reproduces the matrix (up to subspace-iteration f32 noise).
+        let (mut u, mut v) = (Vec::new(), Vec::new());
+        low_rank_project(&a, rows, cols, rows.min(cols), &mut u, &mut v);
+        let mut c = vec![0.0f32; rows * cols];
+        reconstruct_low_rank(&u, &v, rows, cols, rows.min(cols), &mut c);
+        let resid: f64 = a.iter().zip(c.iter()).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+        assert!(resid < 1e-6, "full-rank residual {resid}");
+    }
+
+    #[test]
+    fn low_rank_roundtrip_matches_sender_side_reconstruction() {
+        let mut rng = Rng::seed_from(23);
+        let (rows, cols, rank) = (6, 8, 2);
+        let a = rng.gaussian_vec(rows * cols, 0.7);
+        let (mut u, mut v) = (Vec::new(), Vec::new());
+        low_rank_project(&a, rows, cols, rank, &mut u, &mut v);
+        let mut sender = vec![0.0f32; rows * cols];
+        reconstruct_low_rank(&u, &v, rows, cols, rank, &mut sender);
+        let mut buf = Vec::new();
+        let bits = encode_low_rank_into(&u, &v, rank, &mut buf);
+        assert_eq!(bits, 32 + 32 * ((rows + cols) * rank) as u64);
+        let (mut du, mut dv) = (Vec::new(), Vec::new());
+        let mut receiver = vec![0.0f32; rows * cols];
+        let got = decode_low_rank_into(&buf, rows, cols, &mut du, &mut dv, &mut receiver).unwrap();
+        assert_eq!(got, rank);
+        assert_eq!(receiver, sender, "both sides agree on Ĉ(a) bit-for-bit");
+        // Corruption is rejected.
+        let t = &buf[..buf.len() - 2];
+        assert!(decode_low_rank_into(t, rows, cols, &mut du, &mut dv, &mut receiver).is_err());
+    }
+
+    #[test]
+    fn delta_and_auto_shape_are_sane() {
+        assert_eq!(ContractiveOp::TopK { k: 16 }.delta(64), 0.25);
+        assert_eq!(ContractiveOp::RandK { k: 64 }.delta(64), 1.0);
+        assert_eq!(
+            ContractiveOp::RankR { rank: 4, rows: 32, cols: 40 }.delta(1280),
+            4.0 / 32.0
+        );
+        assert_eq!(auto_shape(1024), (32, 32));
+        assert_eq!(auto_shape(1280), (32, 40));
+        assert_eq!(auto_shape(12), (3, 4));
+        assert_eq!(auto_shape(13), (1, 13)); // prime → degenerate shape
+        assert!(ContractiveOp::TopK { k: 0 }.validate(8).is_err());
+        assert!(ContractiveOp::TopK { k: 9 }.validate(8).is_err());
+        assert!(ContractiveOp::RankR { rank: 3, rows: 2, cols: 4 }.validate(8).is_err());
+        assert!(ContractiveOp::RankR { rank: 2, rows: 2, cols: 4 }.validate(8).is_ok());
+        assert!(ContractiveOp::RankR { rank: 2, rows: 3, cols: 4 }.validate(8).is_err());
+    }
+}

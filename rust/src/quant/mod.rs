@@ -23,6 +23,11 @@
 //!   objective (configured via `[quant.layers] budget`, `docs/CONFIG.md`).
 //! * [`bounds`] — Theorem 1 variance bound `ε_Q`, the QSGD/NUQSGD
 //!   comparison bounds, Theorem 2 expected code length.
+//! * [`contractive`] — the biased δ-contractive operator family (top-k,
+//!   rand-k, rank-r) behind the `[quant.ef]` error-feedback pipeline:
+//!   rank-stable top-k selection, seeded rand-k, subspace-iteration
+//!   low-rank projection, and the sparse/low-rank wire frames
+//!   (`docs/WIRE.md` §5).
 //!
 //! The per-worker state machine that drives all of this — including the
 //! single-layer/FP32 paths and the layer-wise compressor — lives in
@@ -31,6 +36,7 @@
 pub mod adaptive;
 pub mod alloc;
 pub mod bounds;
+pub mod contractive;
 pub mod encode;
 pub mod layers;
 pub mod levels;
@@ -39,6 +45,7 @@ pub mod quantizer;
 pub use adaptive::{optimize_levels, symbol_probs, SufficientStats};
 pub use alloc::{allocate, Allocation, LayerProfile};
 pub use bounds::{code_length_bound, epsilon_q, nuqsgd_variance_bound, qsgd_variance_bound};
+pub use contractive::{auto_shape, ContractiveOp};
 pub use encode::{
     decode_vector, decode_vector_into, encode_vector, encode_vector_into, WireCodec,
 };

@@ -228,6 +228,13 @@ pub struct StepRecord {
     pub hot_link_bytes: f64,
     /// Distinct links touched by the last round of this step.
     pub links: u32,
+    /// Did an error-feedback compressor report this step? (Gates the
+    /// `ef_*` JSONL fields so EF-off streams stay byte-identical.)
+    pub ef: bool,
+    /// ‖e_{t+1}‖₂ of rank 0's error memory after this step's compress.
+    pub ef_err_norm: f64,
+    /// Effective contraction `1 − ‖e‖²/‖a‖²` observed this step.
+    pub ef_delta: f64,
 }
 
 /// Fixed-capacity ring of [`StepRecord`]s — the default in-memory sink.
@@ -361,6 +368,9 @@ pub struct Telemetry {
     step_hot_link: Link,
     step_hot_bytes: f64,
     step_links: u32,
+    step_ef: bool,
+    step_ef_err_norm: f64,
+    step_ef_delta: f64,
     alloc_mark: u64,
 }
 
@@ -475,6 +485,20 @@ impl Telemetry {
         }
     }
 
+    /// Record the error-feedback diagnostics of this step's compress
+    /// (rank 0's endpoint): error-memory norm and effective contraction.
+    /// Called only by engines whose pipeline actually runs error feedback,
+    /// so EF-off runs never set the marks and their step events carry no
+    /// `ef_*` fields (schema stays 1: the fields are additive and gated).
+    pub fn on_ef(&mut self, err_norm: f64, delta: f64) {
+        if !self.enabled {
+            return;
+        }
+        self.step_ef = true;
+        self.step_ef_err_norm = err_norm;
+        self.step_ef_delta = delta;
+    }
+
     /// Record one fault event — an injected network fault taking effect,
     /// a time-varying-topology rewire, or a stale-sync substitution.
     /// Streams an additive `{"event":"fault",...}` record to the JSONL
@@ -520,6 +544,9 @@ impl Telemetry {
             hot_link: self.step_hot_link,
             hot_link_bytes: self.step_hot_bytes,
             links: self.step_links,
+            ef: self.step_ef,
+            ef_err_norm: self.step_ef_err_norm,
+            ef_delta: self.step_ef_delta,
         };
         self.counters.steps += 1;
         self.counters.allocs += rec.allocs;
@@ -540,6 +567,9 @@ impl Telemetry {
         self.step_hot_link = (0, 0);
         self.step_hot_bytes = 0.0;
         self.step_links = 0;
+        self.step_ef = false;
+        self.step_ef_err_norm = 0.0;
+        self.step_ef_delta = 0.0;
         self.alloc_mark = allocs_now;
         Some(rec)
     }
@@ -687,8 +717,10 @@ fn measured_json(m: &crate::net::MeasuredWire) -> Json {
 }
 
 /// The JSONL `step` event for one record (schema: `docs/OBSERVABILITY.md`).
+/// The `ef_*` fields appear only on steps where an error-feedback
+/// compressor reported, so EF-off streams stay byte-identical.
 fn step_event(r: &StepRecord) -> Json {
-    Json::obj([
+    let mut fields: Vec<(&str, Json)> = vec![
         ("event", Json::Str("step".into())),
         ("t", Json::Num(r.t as f64)),
         ("spans", r.spans.to_json()),
@@ -702,7 +734,12 @@ fn step_event(r: &StepRecord) -> Json {
         ("links", Json::Num(r.links as f64)),
         ("hot_link", link_json(r.hot_link)),
         ("hot_link_bytes", Json::Num(r.hot_link_bytes)),
-    ])
+    ];
+    if r.ef {
+        fields.push(("ef_err_norm", Json::Num(r.ef_err_norm)));
+        fields.push(("ef_delta", Json::Num(r.ef_delta)));
+    }
+    Json::obj(fields)
 }
 
 /// Build the JSONL `manifest` event (the stream's first line).
@@ -949,6 +986,34 @@ mod tests {
             links[0].as_array().unwrap().iter().map(|j| j.as_f64().unwrap()).collect::<Vec<_>>(),
             vec![1.0, 0.0, 64.0]
         );
+    }
+
+    #[test]
+    fn ef_fields_appear_only_on_reported_steps() {
+        let mut t = Telemetry::new(&TelemetryConfig::memory(), &Json::Null).unwrap();
+        // No on_ef call: the step event must carry no ef_* fields at all.
+        t.on_data_round(8, 0.0, &[]);
+        let plain = t.end_step(1).unwrap();
+        assert!(!plain.ef);
+        let ev = Json::parse(&step_event(&plain).dump()).unwrap();
+        assert!(ev.get("ef_err_norm").is_none(), "EF-off steps stay byte-identical");
+        assert!(ev.get("ef_delta").is_none());
+        // Reported step: marks fold into the record and the event.
+        t.on_ef(0.75, 0.125);
+        let rec = t.end_step(2).unwrap();
+        assert!(rec.ef);
+        assert_eq!(rec.ef_err_norm, 0.75);
+        assert_eq!(rec.ef_delta, 0.125);
+        let ev = Json::parse(&step_event(&rec).dump()).unwrap();
+        assert_eq!(ev.get("ef_err_norm").unwrap().as_f64(), Some(0.75));
+        assert_eq!(ev.get("ef_delta").unwrap().as_f64(), Some(0.125));
+        // Marks reset with the step.
+        let rec3 = t.end_step(3).unwrap();
+        assert!(!rec3.ef);
+        // Disabled recorder: inert.
+        let mut off = Telemetry::off();
+        off.on_ef(1.0, 1.0);
+        assert_eq!(off.end_step(1), None);
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Error-feedback parity suite — the neutrality and determinism pins of
+//! the contractive compression subsystem (`[quant.ef]`, docs/CONFIG.md):
+//!
+//! * **Full feedback is exact**: with `k = d` the top-k operator keeps
+//!   every coordinate, the error memory stays identically zero, and the
+//!   trajectory is bit-identical to uncompressed fp32 on all three
+//!   runner families (only the wire accounting differs).
+//! * **Off means off**: a config that spells `[quant.ef] scheme = "off"`
+//!   runs bit-identically — gap, cumulative bits, stat rounds — to a
+//!   config that predates the table entirely, on all three families; a
+//!   disabled table with leftover operator parameters is rejected.
+//! * **Checkpoint / resume**: a session checkpointed mid-run with a
+//!   *nonzero* error memory continues bit-for-bit, so the memory
+//!   round-trips through the snapshot exactly.
+//! * **Per-rank replication**: on exact topologies the threaded fabric
+//!   (every rank owning its own compressor and decoding peers' frames
+//!   off the wire) must reproduce the single-engine loopback trajectory
+//!   for every scheme — the seeded random-k support and deterministic
+//!   tie-breaks included.
+
+use qgenx::config::{EfConfig, EfScheme, ExperimentConfig, QuantMode};
+use qgenx::coordinator::{run_experiment, run_threaded, Session};
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workers = 3;
+    cfg.iters = 200;
+    cfg.eval_every = 50;
+    cfg.problem.kind = "quadratic".into();
+    cfg.problem.dim = 12;
+    cfg.problem.noise = "absolute".into();
+    cfg.problem.sigma = 0.3;
+    cfg.quant.update_every = 60;
+    cfg
+}
+
+/// One config per runner family: synchronous exact, gossip averaging,
+/// and local steps with periodic sync.
+fn family_cfg(family: &str) -> ExperimentConfig {
+    let mut cfg = base_cfg();
+    match family {
+        "exact" => {}
+        "gossip" => {
+            cfg.workers = 6;
+            cfg.topo.kind = "gossip".into();
+            cfg.topo.degree = 2;
+        }
+        "local" => cfg.local.steps = 4,
+        other => panic!("unknown family {other}"),
+    }
+    cfg
+}
+
+fn ef(scheme: EfScheme, k: usize, rank: usize) -> EfConfig {
+    EfConfig { scheme, k, rank, ..Default::default() }
+}
+
+#[test]
+fn full_feedback_top_k_matches_the_uncompressed_trajectory() {
+    for family in ["exact", "gossip", "local"] {
+        let mut fp32 = family_cfg(family);
+        fp32.quant.mode = QuantMode::Fp32;
+        let mut full = family_cfg(family);
+        full.quant.ef = ef(EfScheme::TopK, fp32.problem.dim, 0); // k = d
+
+        let base = run_experiment(&fp32).unwrap();
+        let rec = run_experiment(&full).unwrap();
+        for series in ["gap", "dist"] {
+            assert_eq!(
+                base.get(series).unwrap().ys(),
+                rec.get(series).unwrap().ys(),
+                "{family}: k = d keeps every coordinate — same {series} trajectory as fp32"
+            );
+        }
+        assert_eq!(base.scalar("rounds"), rec.scalar("rounds"), "{family}");
+        // The memory never charges: e_t ≡ 0, effective δ = 1, and the
+        // worst-case bound δ = k/d = 1 as well.
+        assert_eq!(rec.scalar("ef_err_norm"), Some(0.0), "{family}");
+        assert_eq!(rec.scalar("ef_delta"), Some(1.0), "{family}");
+        assert_eq!(rec.scalar("ef_delta_bound"), Some(1.0), "{family}");
+        assert_eq!(rec.scalar("level_updates"), Some(0.0), "{family}: EF is non-adaptive");
+        // The fp32 comparator carries no EF diagnostics at all.
+        assert_eq!(base.scalar("ef_err_norm"), None, "{family}");
+    }
+}
+
+#[test]
+fn scheme_off_is_bit_identical_to_a_config_without_the_table() {
+    // The parse path: an explicit `scheme = "off"` table is the default
+    // disabled config, and leftover operator parameters under it are a
+    // config error rather than silent dead weight.
+    let off = ExperimentConfig::from_toml("[quant.ef]\nscheme = \"off\"\n").unwrap();
+    assert_eq!(off.quant.ef, EfConfig::default());
+    assert!(!off.quant.ef.enabled());
+    assert!(ExperimentConfig::from_toml("[quant.ef]\nscheme = \"off\"\nk = 3\n").is_err());
+    assert!(ExperimentConfig::from_toml("[quant.ef]\nscheme = \"topk\"\n").is_err());
+
+    for family in ["exact", "gossip", "local"] {
+        let plain = family_cfg(family);
+        let mut tabled = family_cfg(family);
+        tabled.quant.ef = off.quant.ef.clone();
+
+        let a = run_experiment(&plain).unwrap();
+        let b = run_experiment(&tabled).unwrap();
+        for series in ["gap", "dist", "bits_cum"] {
+            assert_eq!(
+                a.get(series).unwrap().ys(),
+                b.get(series).unwrap().ys(),
+                "{family}: scheme = \"off\" must leave the unbiased path untouched ({series})"
+            );
+        }
+        for scalar in ["total_bits", "level_updates", "rounds"] {
+            assert_eq!(a.scalar(scalar), b.scalar(scalar), "{family}: {scalar}");
+        }
+        assert_eq!(b.scalar("ef_err_norm"), None, "{family}: no EF telemetry when off");
+    }
+}
+
+#[test]
+fn checkpoint_resume_with_live_error_memory_continues_bit_for_bit() {
+    for family in ["exact", "gossip", "local"] {
+        let mut cfg = family_cfg(family);
+        cfg.quant.ef = ef(EfScheme::TopK, 3, 0); // k = d/4: heavy memory
+
+        let whole = run_experiment(&cfg).unwrap();
+        let err_norm = whole.scalar("ef_err_norm").unwrap();
+        let delta = whole.scalar("ef_delta").unwrap();
+        assert!(err_norm > 0.0, "{family}: k < d must leave a live error memory");
+        assert!((0.0..=1.0).contains(&delta), "{family}: effective δ in [0, 1], got {delta}");
+        assert_eq!(whole.scalar("level_updates"), Some(0.0), "{family}: zero stat rounds");
+
+        let mut first = Session::builder(cfg.clone()).build().unwrap();
+        first.run_to(cfg.iters / 2).unwrap();
+        let cp = first.checkpoint().unwrap();
+        drop(first);
+
+        let mut resumed = Session::resume(cp).unwrap();
+        resumed.run_to(cfg.iters).unwrap();
+        let rec = resumed.into_recorder();
+        for series in ["gap", "dist", "bits_cum"] {
+            assert_eq!(
+                whole.get(series).unwrap().ys(),
+                rec.get(series).unwrap().ys(),
+                "{family}: the error memory must round-trip the snapshot exactly ({series})"
+            );
+        }
+        assert_eq!(whole.scalar("total_bits"), rec.scalar("total_bits"), "{family}");
+        assert_eq!(rec.scalar("ef_err_norm"), Some(err_norm), "{family}");
+        assert_eq!(rec.scalar("ef_delta"), Some(delta), "{family}");
+    }
+}
+
+#[test]
+fn per_rank_compressors_reproduce_the_loopback_trajectory() {
+    let cases = [
+        ("topk", ef(EfScheme::TopK, 3, 0)),
+        ("randk", ef(EfScheme::RandK, 3, 0)),
+        ("rankr", ef(EfScheme::RankR, 0, 2)),
+    ];
+    // Inline-vs-threaded bit parity is an exact-topology contract (the
+    // inexact families replicate differently by design; see
+    // tests/transport_parity.rs), so the sweep stays on exact graphs.
+    for (name, ef_cfg) in cases {
+        for topo in ["full-mesh", "ring"] {
+            let mut cfg = family_cfg("exact");
+            cfg.topo.kind = topo.into();
+            cfg.quant.ef = ef_cfg.clone();
+            let inline_rec = run_experiment(&cfg).unwrap();
+            let threaded = run_threaded(&cfg).unwrap();
+            for series in ["gap", "dist"] {
+                assert_eq!(
+                    inline_rec.get(series).unwrap().ys(),
+                    threaded.recorder.get(series).unwrap().ys(),
+                    "{name}/{topo}: replicated per-rank compressors must agree ({series})"
+                );
+            }
+            // Rank 0's EF diagnostics are the same object in both
+            // fabrics: same seed fork, same frames decoded.
+            for scalar in ["ef_err_norm", "ef_delta", "rounds"] {
+                assert_eq!(
+                    inline_rec.scalar(scalar),
+                    threaded.recorder.scalar(scalar),
+                    "{name}/{topo}: {scalar}"
+                );
+            }
+        }
+    }
+}

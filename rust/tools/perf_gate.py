@@ -1,12 +1,13 @@
 #!/usr/bin/env python3
-"""Perf regression gate over BENCH_hotpath.json (stdlib only).
+"""Bench regression gate over committed BENCH_*.json baselines (stdlib only).
 
-Compares a fresh bench emission against the committed baseline
-(`results/BENCH_hotpath.json` at the repo root) and fails on regression:
+Compares a fresh bench emission against the committed baseline and fails
+on regression. The gate dispatches on the file's `bench` field:
 
   python3 tools/perf_gate.py ../results/BENCH_hotpath.json results/BENCH_hotpath.json
+  python3 tools/perf_gate.py ../results/BENCH_churn.json   results/BENCH_churn.json
 
-Gates, from hard to soft:
+## hotpath gates, from hard to soft
 
 * **schema / shape** — same `bench`, same `schema` version, identical
   case set keyed by (stage, quant, codec, bucket). A vanished case is a
@@ -24,11 +25,20 @@ Gates, from hard to soft:
   per-symbol allocation, a debug-path fallback), not single-digit noise.
   Ratios only apply when both files ran the same `mode` (fast vs full).
 
+## churn gates (all machine-independent)
+
+* **schema / shape** — same `bench`, same `schema`; identical sweep-point
+  sets (straggler rates and rewire cadences). A vanished sweep point is a
+  regression — the chaos axis stopped being measured.
+* **finiteness** — every fresh sweep point's `gap` must be finite
+  (degradation curves may move, divergence may not).
+
 Environment overrides: PERF_GATE_TOL, PERF_GATE_SPEEDUP_MIN.
 Exit status: 0 = pass, 1 = regression(s), 2 = usage/parse error.
 """
 
 import json
+import math
 import os
 import sys
 
@@ -46,22 +56,18 @@ def load(path):
         sys.exit(2)
 
 
-def main():
-    if len(sys.argv) != 3:
-        print(__doc__, file=sys.stderr)
-        sys.exit(2)
-    tol = float(os.environ.get("PERF_GATE_TOL", "10.0"))
-    speedup_min = float(os.environ.get("PERF_GATE_SPEEDUP_MIN", "2.0"))
-    base = load(sys.argv[1])
-    fresh = load(sys.argv[2])
-    failures = []
-
-    # -- schema / shape ----------------------------------------------------
+def check_shape(base, fresh, failures):
     for field in ("bench", "schema"):
         if base.get(field) != fresh.get(field):
             failures.append(
                 f"{field} mismatch: baseline {base.get(field)!r} vs fresh {fresh.get(field)!r}"
             )
+
+
+def gate_hotpath(base, fresh, failures):
+    tol = float(os.environ.get("PERF_GATE_TOL", "10.0"))
+    speedup_min = float(os.environ.get("PERF_GATE_SPEEDUP_MIN", "2.0"))
+
     base_cases = {key(c): c for c in base.get("cases", [])}
     fresh_cases = {key(c): c for c in fresh.get("cases", [])}
     for k in sorted(set(base_cases) - set(fresh_cases)):
@@ -122,15 +128,55 @@ def main():
             f"vs fresh {fresh.get('mode')!r})"
         )
 
+    if not failures:
+        print(
+            f"perf_gate: ok — {len(fresh_cases)} cases, "
+            f"huffman decode speedup min {got:.2f}x, round-trip allocs 0"
+        )
+
+
+def gate_churn(base, fresh, failures):
+    sweeps = (("straggler_curve", "rate"), ("rewire_curve", "rewire_every"))
+    points = 0
+    for curve, axis in sweeps:
+        base_pts = {p[axis] for p in base.get(curve, [])}
+        fresh_pts = {p[axis] for p in fresh.get(curve, [])}
+        for p in sorted(base_pts - fresh_pts):
+            failures.append(f"{curve}: sweep point vanished from fresh run: {axis}={p}")
+        for p in sorted(fresh_pts - base_pts):
+            print(f"note: new sweep point not in baseline: {curve} {axis}={p}")
+        for p in fresh.get(curve, []):
+            points += 1
+            gap = p.get("gap")
+            if gap is None or not math.isfinite(gap):
+                failures.append(f"{curve} {axis}={p.get(axis)}: non-finite gap {gap!r}")
+    if not failures:
+        print(f"perf_gate: ok — churn case set intact ({points} sweep points, all finite)")
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__, file=sys.stderr)
+        sys.exit(2)
+    base = load(sys.argv[1])
+    fresh = load(sys.argv[2])
+    failures = []
+
+    check_shape(base, fresh, failures)
+    bench = base.get("bench")
+    if bench == "churn_degradation":
+        gate_churn(base, fresh, failures)
+    elif bench == "perf_hotpath":
+        gate_hotpath(base, fresh, failures)
+    else:
+        print(f"perf_gate: no gate for bench {bench!r}", file=sys.stderr)
+        sys.exit(2)
+
     if failures:
         print(f"\nperf_gate: {len(failures)} regression(s):", file=sys.stderr)
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         sys.exit(1)
-    print(
-        f"perf_gate: ok — {len(fresh_cases)} cases, "
-        f"huffman decode speedup min {got:.2f}x, round-trip allocs 0"
-    )
 
 
 if __name__ == "__main__":
