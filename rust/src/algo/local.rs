@@ -45,16 +45,21 @@
 //! coordinator dispatches `local.steps = 1` to the exact runner, which
 //! reproduces the seed bit-for-bit.
 
+use super::method::{method_state, MethodState};
 use super::qgenx::QGenX;
-use crate::config::Variant;
+use crate::config::{AlgoConfig, Variant};
 use crate::error::Result;
 use crate::oracle::Oracle;
 
-/// One worker's replica in local-steps mode: a `K = 1` [`QGenX`] plus the
+/// One worker's replica in local-steps mode: a `K = 1` method state
+/// (any [`MethodState`] — QGenX historically, hence the name) plus the
 /// last synchronization point.
 #[derive(Clone)]
 pub struct LocalQGenX {
-    state: QGenX,
+    state: Box<dyn MethodState>,
+    /// Which qgenx-family variant backs `state` (meaningful only for the
+    /// qgenx method; retained for the legacy accessor).
+    variant: Variant,
     /// World-coordinate iterate at the last sync (`X_sync`); deltas are
     /// measured against this and resync rebases it.
     sync_base: Vec<f32>,
@@ -65,7 +70,20 @@ pub struct LocalQGenX {
 impl LocalQGenX {
     pub fn new(variant: Variant, x0: &[f32], gamma0: f64, adaptive: bool) -> Self {
         LocalQGenX {
-            state: QGenX::new(variant, x0, 1, gamma0, adaptive),
+            state: Box::new(QGenX::new(variant, x0, 1, gamma0, adaptive)),
+            variant,
+            sync_base: x0.to_vec(),
+            steps_since_sync: 0,
+        }
+    }
+
+    /// Build a replica for whatever `[algo]` selects — the method-cadence
+    /// seam applied to the local-steps family. For the default method this
+    /// is identical to [`Self::new`] with the configured variant.
+    pub fn from_algo(algo: &AlgoConfig, x0: &[f32]) -> Self {
+        LocalQGenX {
+            state: method_state(algo, x0, 1),
+            variant: algo.variant,
             sync_base: x0.to_vec(),
             steps_since_sync: 0,
         }
@@ -137,8 +155,17 @@ impl LocalQGenX {
         self.steps_since_sync
     }
 
+    /// The qgenx-family variant backing this replica. Meaningful only
+    /// when the method is `qgenx` (the default); other methods carry the
+    /// config's (unused) variant along.
     pub fn variant(&self) -> Variant {
-        self.state.variant()
+        self.variant
+    }
+
+    /// Cumulative oracle calls made by this replica (cadence-dependent:
+    /// one per local round for single-call methods, two for EG-shaped).
+    pub fn oracle_calls(&self) -> u64 {
+        self.state.oracle_calls()
     }
 }
 
@@ -224,6 +251,29 @@ mod tests {
         }
         let ratio = dist_sq(&mean_avg, &xs) / d0.max(1e-12);
         assert!(ratio < 0.05, "local-steps consensus ratio {ratio}");
+    }
+
+    #[test]
+    fn all_methods_drive_local_rounds() {
+        // The cadence seam in the local family: PEG does one oracle call
+        // per local round, EG-AA two, and both sync/resync like QGenX.
+        use crate::config::Method;
+        let d = 6;
+        let op = problem(d);
+        for (method, calls_per_round) in [(Method::Peg, 3u64), (Method::EgAa, 6)] {
+            let algo = AlgoConfig { method, gamma0: 0.3, ..AlgoConfig::default() };
+            let mut oracle = ExactOracle::new(op.clone());
+            let mut rep = LocalQGenX::from_algo(&algo, &vec![0.0f32; d]);
+            let mut g = vec![0.0f32; d];
+            for _ in 0..3 {
+                rep.local_round(&mut oracle, &mut g).unwrap();
+            }
+            assert_eq!(rep.oracle_calls(), calls_per_round, "{method:?}");
+            assert!(rep.x_world().iter().all(|x| x.is_finite()));
+            let delta = rep.delta();
+            rep.resync(&delta).unwrap();
+            assert_eq!(rep.steps_since_sync(), 0);
+        }
     }
 
     #[test]

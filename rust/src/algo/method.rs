@@ -1,0 +1,224 @@
+//! The method-cadence seam.
+//!
+//! Every first-class algorithm is a [`MethodState`]: a phase machine that
+//! *owns* its per-iteration oracle-call/exchange cadence and exposes it to
+//! the coordinator as a round-plan —
+//!
+//! ```text
+//! base_query()  -> Option<query>   // None ⇒ no base exchange this step
+//! extrapolate(decoded base duals)  -> half-step query
+//! update(decoded half duals)
+//! ```
+//!
+//! The policies in `coordinator::policy` execute that plan verbatim; they
+//! no longer assume the Q-GenX two-call/two-exchange shape. A method that
+//! returns `None` from [`MethodState::base_query`] costs ONE oracle call
+//! and ONE quantized exchange per iteration, and every policy (exact,
+//! gossip, local-steps) picks that up for free.
+//!
+//! The adaptive step-size rule ([`crate::algo::AdaptiveStepSize`]) is
+//! shared across methods — it only needs the base/half dual pairs, which
+//! every cadence produces.
+//!
+//! Methods: [`crate::algo::QGenX`] (the paper template, all three
+//! variants), [`crate::algo::PastExtraGradient`] (`algo::past`, single
+//! call), [`crate::algo::AndersonEg`] (`algo::anderson`, safeguarded
+//! EG-AA(1)).
+
+use crate::algo::anderson::AndersonEg;
+use crate::algo::past::PastExtraGradient;
+use crate::algo::qgenx::QGenX;
+use crate::config::{AlgoConfig, Method};
+use crate::error::Result;
+
+/// One first-class algorithm behind the method-cadence seam.
+///
+/// Implementations are deterministic phase machines over *decoded* dual
+/// vectors — quantization, wire formats, topologies and fabrics all live
+/// on the policy side of the seam.
+pub trait MethodState: Send {
+    /// Where workers must evaluate the *base* oracle query this iteration,
+    /// or `None` if the method supplies its own base internally (no base
+    /// exchange happens at all — the single-call cadence).
+    fn base_query(&self) -> Option<Vec<f32>>;
+
+    /// Consume the decoded base duals (`&[]` iff [`Self::base_query`]
+    /// returned `None`) and produce the half-step query point.
+    fn extrapolate(&mut self, base_vectors: &[Vec<f32>]) -> Result<Vec<f32>>;
+
+    /// Consume the decoded half-step duals; completes the iteration.
+    fn update(&mut self, half_vectors: &[Vec<f32>]) -> Result<()>;
+
+    /// Current step-size γ_t.
+    fn gamma(&self) -> f64;
+
+    /// Completed iterations.
+    fn iteration(&self) -> usize;
+
+    /// Current iterate in world coordinates.
+    fn x_world(&self) -> Vec<f32>;
+
+    /// The averaged point the method's rate certifies (ergodic average of
+    /// the half-step/extrapolated iterates).
+    fn ergodic_average(&self) -> Vec<f32>;
+
+    /// Translate the iterate to `target` (world coordinates) — the
+    /// local-steps resynchronization primitive. Only legal between
+    /// iterations.
+    fn shift_world(&mut self, target: &[f32]) -> Result<()>;
+
+    /// Cumulative oracle calls *per worker* after [`Self::iteration`]
+    /// completed iterations.
+    fn oracle_calls(&self) -> u64;
+
+    /// Quantized data exchanges per iteration — a structural constant of
+    /// the cadence (2.0 for two-exchange methods, 1.0 for single-call).
+    fn exchanges_per_step(&self) -> f64;
+
+    /// Extra method-specific diagnostics to surface as run scalars
+    /// (name, value). Empty by default.
+    fn method_scalars(&self) -> Vec<(&'static str, f64)> {
+        Vec::new()
+    }
+
+    fn clone_box(&self) -> Box<dyn MethodState>;
+}
+
+impl Clone for Box<dyn MethodState> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+impl MethodState for QGenX {
+    fn base_query(&self) -> Option<Vec<f32>> {
+        QGenX::base_query(self)
+    }
+
+    fn extrapolate(&mut self, base_vectors: &[Vec<f32>]) -> Result<Vec<f32>> {
+        QGenX::extrapolate(self, base_vectors)
+    }
+
+    fn update(&mut self, half_vectors: &[Vec<f32>]) -> Result<()> {
+        QGenX::update(self, half_vectors)
+    }
+
+    fn gamma(&self) -> f64 {
+        QGenX::gamma(self)
+    }
+
+    fn iteration(&self) -> usize {
+        QGenX::iteration(self)
+    }
+
+    fn x_world(&self) -> Vec<f32> {
+        QGenX::x_world(self)
+    }
+
+    fn ergodic_average(&self) -> Vec<f32> {
+        QGenX::ergodic_average(self)
+    }
+
+    fn shift_world(&mut self, target: &[f32]) -> Result<()> {
+        QGenX::shift_world(self, target)
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        // DE queries base + half; DA skips the base (V̂_t ≡ 0); OptDA
+        // reuses the previous half — one call each.
+        let per_step = match self.variant() {
+            crate::config::Variant::DualExtrapolation => 2,
+            crate::config::Variant::DualAveraging
+            | crate::config::Variant::OptimisticDualAveraging => 1,
+        };
+        per_step * self.iteration() as u64
+    }
+
+    fn exchanges_per_step(&self) -> f64 {
+        match self.variant() {
+            crate::config::Variant::DualExtrapolation => 2.0,
+            crate::config::Variant::DualAveraging
+            | crate::config::Variant::OptimisticDualAveraging => 1.0,
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn MethodState> {
+        Box::new(self.clone())
+    }
+}
+
+/// Construct the configured method's state for `k` workers at `x0`.
+///
+/// This is the one dispatch point on [`Method`]; everything downstream
+/// (policies, the LM trainer, benches) is method-agnostic.
+pub fn method_state(algo: &AlgoConfig, x0: &[f32], k: usize) -> Box<dyn MethodState> {
+    match algo.method {
+        Method::QGenX => {
+            Box::new(QGenX::new(algo.variant, x0, k, algo.gamma0, algo.adaptive_step))
+        }
+        Method::Peg => Box::new(PastExtraGradient::new(x0, k, algo.gamma0, algo.adaptive_step)),
+        Method::EgAa => Box::new(AndersonEg::new(x0, k, algo.gamma0, algo.adaptive_step)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Variant;
+
+    fn algo(method: Method) -> AlgoConfig {
+        AlgoConfig { method, gamma0: 0.5, ..AlgoConfig::default() }
+    }
+
+    #[test]
+    fn factory_dispatches_on_method() {
+        let x0 = vec![0.5; 6];
+        let q = method_state(&algo(Method::QGenX), &x0, 3);
+        assert!(q.base_query().is_some(), "default DE queries a base");
+        assert_eq!(q.exchanges_per_step(), 2.0);
+        let p = method_state(&algo(Method::Peg), &x0, 3);
+        assert!(p.base_query().is_none(), "PEG never queries a base");
+        assert_eq!(p.exchanges_per_step(), 1.0);
+        let a = method_state(&algo(Method::EgAa), &x0, 3);
+        assert!(a.base_query().is_some());
+        assert_eq!(a.exchanges_per_step(), 2.0);
+        for s in [&q, &p, &a] {
+            assert_eq!(s.x_world(), x0);
+            assert_eq!(s.iteration(), 0);
+            assert_eq!(s.oracle_calls(), 0);
+        }
+    }
+
+    #[test]
+    fn qgenx_cadence_constants_track_the_variant() {
+        let x0 = vec![0.0; 4];
+        for (variant, calls, exch) in [
+            (Variant::DualExtrapolation, 4u64, 2.0),
+            (Variant::DualAveraging, 2, 1.0),
+            (Variant::OptimisticDualAveraging, 2, 1.0),
+        ] {
+            let mut s: Box<dyn MethodState> =
+                Box::new(QGenX::new(variant, &x0, 2, 0.5, true));
+            for _ in 0..2 {
+                let base = match s.base_query() {
+                    Some(_) => vec![vec![0.1; 4]; 2],
+                    None => Vec::new(),
+                };
+                s.extrapolate(&base).unwrap();
+                s.update(&[vec![0.2; 4], vec![0.3; 4]]).unwrap();
+            }
+            assert_eq!(s.oracle_calls(), calls, "{variant:?}");
+            assert_eq!(s.exchanges_per_step(), exch, "{variant:?}");
+        }
+    }
+
+    #[test]
+    fn boxed_state_clones_independently() {
+        let mut a = method_state(&algo(Method::Peg), &[1.0, 2.0], 1);
+        let b = a.clone();
+        a.extrapolate(&[]).unwrap();
+        a.update(&[vec![0.5, 0.5]]).unwrap();
+        assert_eq!(a.iteration(), 1);
+        assert_eq!(b.iteration(), 0, "clone is a deep copy");
+    }
+}

@@ -22,13 +22,31 @@
 //!   reduction axis next to compression and topology).
 //! * [`baselines`] — full-precision extra-gradient (Korpelevich), SGDA,
 //!   and QSGDA (Beznosikov et al. 2022) for the Figure-4 comparison.
+//! * [`method`] — the method-cadence seam: every first-class algorithm is
+//!   a [`MethodState`] phase machine owning its per-iteration oracle-call
+//!   and exchange cadence; the coordinator policies execute the plan it
+//!   exposes and never assume the two-call Q-GenX shape.
+//! * [`past`] — past extra-gradient / optimistic gradient
+//!   ([`PastExtraGradient`], `[algo] method = "peg"`): ONE oracle call and
+//!   ONE quantized exchange per iteration by reusing the previous
+//!   half-step dual (the `prev_half` idiom generalized from OptDA).
+//! * [`anderson`] — safeguarded EG-AA(1) ([`AndersonEg`],
+//!   `[algo] method = "eg-aa"`): extra-gradient cadence plus a depth-1
+//!   Anderson candidate behind a residual-decrease guard that can never
+//!   add a wire round.
 
+pub mod anderson;
 pub mod baselines;
 pub mod local;
+pub mod method;
+pub mod past;
 pub mod qgenx;
 pub mod stepsize;
 
+pub use anderson::AndersonEg;
 pub use baselines::{ExtraGradient, Sgda};
 pub use local::LocalQGenX;
+pub use method::{method_state, MethodState};
+pub use past::PastExtraGradient;
 pub use qgenx::{QGenX, QGenXPhase};
 pub use stepsize::AdaptiveStepSize;

@@ -1,0 +1,319 @@
+//! Past extra-gradient (PEG) / optimistic gradient — the single-call,
+//! single-exchange method behind the cadence seam.
+//!
+//! The recursion (Popov 1980; Hsieh et al. 2019; Gorbunov et al. 2022):
+//!
+//! ```text
+//! X̃_t     = X_t − γ_t (1/K) Σ_k V̂_{k, t−1/2}     // reuse the PAST dual
+//! X_{t+1} = X_t − γ_t (1/K) Σ_k V̂_{k, t+1/2}     // one fresh query, at X̃_t
+//! ```
+//!
+//! Only the half-step dual `V̂_{t+1/2}` is ever evaluated or exchanged:
+//! one oracle call and ONE quantized exchange per iteration — half the
+//! gradient and wire cost of extra-gradient at the same `O(1/T)` /
+//! `O(1/√T)` rates. This generalizes the `prev_half` idiom of the OptDA
+//! variant from the dual-averaging template to the primal extra-gradient
+//! update, so it composes with every topology, local steps, layer-wise
+//! quantization and EF compression exactly like the other methods.
+//!
+//! The adaptive step-size is the shared rule: it learns
+//! `Σ_k ‖V̂_{k,t−1/2} − V̂_{k,t+1/2}‖²` — for PEG the base slot of each
+//! pair *is* the reused past dual.
+
+use crate::algo::method::MethodState;
+use crate::algo::stepsize::AdaptiveStepSize;
+use crate::algo::qgenx::QGenXPhase;
+use crate::error::{Error, Result};
+use crate::util::{axpy, mean_into};
+
+/// Past extra-gradient state for `K` workers; implements
+/// [`MethodState`]. Lives in shifted coordinates around `x0` like
+/// [`crate::algo::QGenX`] (world points are re-derived as `x0 + X` on
+/// read; `shift_world` moves only the origin).
+#[derive(Clone, Debug)]
+pub struct PastExtraGradient {
+    d: usize,
+    k: usize,
+    x0: Vec<f32>,
+    /// X_t (shifted).
+    x: Vec<f32>,
+    /// X̃_t (shifted), the extrapolated point of the current iteration.
+    x_half: Vec<f32>,
+    /// Σ_t X̃_t in f64 for the ergodic average.
+    x_half_sum: Vec<f64>,
+    /// V̂_{k, t−1/2}: the previous half-step duals, reused as this step's
+    /// base. `None` only before the first update (PEG-1/2 starts from a
+    /// zero past dual, i.e. X̃_1 = X_1).
+    prev_half: Option<Vec<Vec<f32>>>,
+    /// The base actually used this iteration (feeds the step-size pair).
+    cur_base: Vec<Vec<f32>>,
+    step: AdaptiveStepSize,
+    /// γ_t captured at `extrapolate` so both legs of iteration `t` use the
+    /// same step-size (the classic PEG coupling).
+    gamma_t: f64,
+    t: usize,
+    phase: QGenXPhase,
+    mean_buf: Vec<f32>,
+}
+
+impl PastExtraGradient {
+    pub fn new(x0: &[f32], k: usize, gamma0: f64, adaptive: bool) -> Self {
+        let d = x0.len();
+        PastExtraGradient {
+            d,
+            k,
+            x0: x0.to_vec(),
+            x: vec![0.0; d],
+            x_half: vec![0.0; d],
+            x_half_sum: vec![0.0; d],
+            prev_half: None,
+            cur_base: Vec::new(),
+            step: AdaptiveStepSize::new(gamma0, k, adaptive),
+            gamma_t: 0.0,
+            t: 0,
+            phase: QGenXPhase::AwaitBase,
+            mean_buf: vec![0.0; d],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// X̃_t in world coordinates.
+    pub fn x_half_world(&self) -> Vec<f32> {
+        let mut out = self.x0.clone();
+        axpy(1.0, &self.x_half, &mut out);
+        out
+    }
+}
+
+impl MethodState for PastExtraGradient {
+    /// PEG never needs a fresh base query — that is the whole point.
+    fn base_query(&self) -> Option<Vec<f32>> {
+        None
+    }
+
+    fn extrapolate(&mut self, base_vectors: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if self.phase != QGenXPhase::AwaitBase {
+            return Err(Error::Coordinator("extrapolate called out of phase".into()));
+        }
+        if !base_vectors.is_empty() {
+            return Err(Error::Coordinator(
+                "PEG takes no base vectors (base_query is None); pass &[]".into(),
+            ));
+        }
+        self.cur_base = match self.prev_half.take() {
+            Some(prev) => prev,
+            None => vec![vec![0.0; self.d]; self.k], // V̂_{1/2} ≡ 0 at t = 1
+        };
+        self.gamma_t = self.step.gamma();
+        let refs: Vec<&[f32]> = self.cur_base.iter().map(|v| v.as_slice()).collect();
+        mean_into(&refs, &mut self.mean_buf);
+        self.x_half.copy_from_slice(&self.x);
+        axpy(-(self.gamma_t as f32), &self.mean_buf, &mut self.x_half);
+        self.phase = QGenXPhase::AwaitHalf;
+        Ok(self.x_half_world())
+    }
+
+    fn update(&mut self, half_vectors: &[Vec<f32>]) -> Result<()> {
+        if self.phase != QGenXPhase::AwaitHalf {
+            return Err(Error::Coordinator("update called out of phase".into()));
+        }
+        if half_vectors.len() != self.k {
+            return Err(Error::Coordinator(format!(
+                "need {} half vectors, got {}",
+                self.k,
+                half_vectors.len()
+            )));
+        }
+        for v in half_vectors {
+            if v.len() != self.d {
+                return Err(Error::Coordinator("half vector dim mismatch".into()));
+            }
+        }
+        // Ergodic average accumulates X̃_t.
+        for i in 0..self.d {
+            self.x_half_sum[i] += self.x_half[i] as f64;
+        }
+        // X_{t+1} = X_t − γ_t mean(V̂_{t+1/2}) — the same γ_t as the
+        // extrapolation leg.
+        let refs: Vec<&[f32]> = half_vectors.iter().map(|v| v.as_slice()).collect();
+        mean_into(&refs, &mut self.mean_buf);
+        axpy(-(self.gamma_t as f32), &self.mean_buf, &mut self.x);
+        // The shared adaptive rule learns ‖past − fresh‖² per worker.
+        self.step.observe_pairs(&self.cur_base, half_vectors);
+        self.prev_half = Some(half_vectors.to_vec());
+        self.t += 1;
+        self.phase = QGenXPhase::AwaitBase;
+        Ok(())
+    }
+
+    fn gamma(&self) -> f64 {
+        self.step.gamma()
+    }
+
+    fn iteration(&self) -> usize {
+        self.t
+    }
+
+    fn x_world(&self) -> Vec<f32> {
+        let mut out = self.x0.clone();
+        axpy(1.0, &self.x, &mut out);
+        out
+    }
+
+    fn ergodic_average(&self) -> Vec<f32> {
+        let t = self.t.max(1) as f64;
+        let mut out = self.x0.clone();
+        for i in 0..self.d {
+            out[i] += (self.x_half_sum[i] / t) as f32;
+        }
+        out
+    }
+
+    fn shift_world(&mut self, target: &[f32]) -> Result<()> {
+        if self.phase != QGenXPhase::AwaitBase {
+            return Err(Error::Coordinator("shift_world called mid-iteration".into()));
+        }
+        if target.len() != self.d {
+            return Err(Error::Coordinator("shift_world target dim mismatch".into()));
+        }
+        let cur = self.x_world();
+        for i in 0..self.d {
+            self.x0[i] += target[i] - cur[i];
+        }
+        Ok(())
+    }
+
+    fn oracle_calls(&self) -> u64 {
+        self.t as u64
+    }
+
+    fn exchanges_per_step(&self) -> f64 {
+        1.0
+    }
+
+    fn clone_box(&self) -> Box<dyn MethodState> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::oracle::{ExactOracle, MonotoneQuadratic, Operator, Oracle, RotationOperator};
+    use crate::util::{dist_sq, Rng};
+    use std::sync::Arc;
+
+    /// Drive PEG with `k` exact oracles for `iters` iterations.
+    fn run_exact(
+        op: Arc<dyn Operator>,
+        d: usize,
+        k: usize,
+        gamma0: f64,
+        iters: usize,
+    ) -> PastExtraGradient {
+        let x0 = vec![0.0f32; d];
+        let mut oracles: Vec<ExactOracle> = (0..k).map(|_| ExactOracle::new(op.clone())).collect();
+        let mut state = PastExtraGradient::new(&x0, k, gamma0, true);
+        for _ in 0..iters {
+            assert!(MethodState::base_query(&state).is_none());
+            let xh = state.extrapolate(&[]).unwrap();
+            let half: Vec<Vec<f32>> = oracles
+                .iter_mut()
+                .map(|o| {
+                    let mut g = vec![0.0f32; d];
+                    o.sample(&xh, &mut g);
+                    g
+                })
+                .collect();
+            state.update(&half).unwrap();
+        }
+        state
+    }
+
+    #[test]
+    fn converges_on_strongly_monotone_quadratic() {
+        let d = 12;
+        let mut rng = Rng::seed_from(42);
+        let op = Arc::new(MonotoneQuadratic::random(d, 0.3, 1.0, &mut rng).unwrap());
+        let xs = op.solution().unwrap();
+        let state = run_exact(op, d, 2, 0.25, 3000);
+        let d0 = dist_sq(&vec![0.0f32; d], &xs).max(1e-12);
+        let avg_ratio = dist_sq(&state.ergodic_average(), &xs) / d0;
+        let last_ratio = dist_sq(&MethodState::x_world(&state), &xs) / d0;
+        assert!(avg_ratio < 1e-2, "ergodic ratio {avg_ratio}");
+        assert!(last_ratio < 1.0, "last-iterate ratio {last_ratio}");
+    }
+
+    #[test]
+    fn converges_on_pure_rotation_where_gda_diverges() {
+        // The bilinear/rotation stress test: the reused past dual keeps
+        // the extra-gradient stability that plain descent lacks.
+        let d = 8;
+        let op = Arc::new(RotationOperator::new(d, 0.0, 1.0).unwrap());
+        let xs = op.solution().unwrap();
+        let state = run_exact(op, d, 1, 0.2, 4000);
+        let ratio = dist_sq(&state.ergodic_average(), &xs) / dist_sq(&vec![0.0f32; d], &xs);
+        assert!(ratio < 0.05, "rotation ergodic ratio {ratio}");
+    }
+
+    #[test]
+    fn first_extrapolation_is_identity_then_reuses_past_dual() {
+        // t = 1: no past dual yet, so X̃_1 = X_1. t = 2: the extrapolation
+        // must move by exactly −γ_2 · mean(V̂_{1+1/2}).
+        let mut state = PastExtraGradient::new(&[1.0, 1.0], 2, 0.5, false);
+        let x_half = state.extrapolate(&[]).unwrap();
+        assert_eq!(x_half, vec![1.0, 1.0], "zero past dual at t = 1");
+        state.update(&[vec![1.0, 0.0], vec![0.0, 1.0]]).unwrap();
+        let x1 = MethodState::x_world(&state);
+        let gamma = MethodState::gamma(&state) as f32;
+        let x_half2 = state.extrapolate(&[]).unwrap();
+        // mean of stored halves is (0.5, 0.5)
+        assert!((x_half2[0] - (x1[0] - gamma * 0.5)).abs() < 1e-6);
+        assert!((x_half2[1] - (x1[1] - gamma * 0.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn phase_protocol_is_enforced() {
+        let mut state = PastExtraGradient::new(&[0.0; 3], 1, 0.5, true);
+        assert!(state.update(&[vec![0.0; 3]]).is_err(), "update before extrapolate");
+        state.extrapolate(&[]).unwrap();
+        assert!(state.extrapolate(&[]).is_err(), "double extrapolate");
+        assert!(
+            state.shift_world(&[0.0; 3]).is_err(),
+            "shift mid-iteration"
+        );
+        // wrong worker count / dim at update
+        assert!(state.update(&[vec![0.0; 3], vec![0.0; 3]]).is_err());
+        assert!(state.update(&[vec![0.0; 2]]).is_err());
+        state.update(&[vec![0.0; 3]]).unwrap();
+        // base vectors are a protocol error for a single-call method
+        assert!(state.extrapolate(&[vec![0.0; 3]]).is_err());
+    }
+
+    #[test]
+    fn cadence_is_one_call_one_exchange() {
+        let mut rng = Rng::seed_from(7);
+        let op = Arc::new(MonotoneQuadratic::random(4, 0.3, 1.0, &mut rng).unwrap());
+        let state = run_exact(op, 4, 3, 0.25, 50);
+        assert_eq!(state.iteration(), 50);
+        assert_eq!(MethodState::oracle_calls(&state), 50, "one call per iteration");
+        assert_eq!(MethodState::exchanges_per_step(&state), 1.0);
+    }
+
+    #[test]
+    fn shift_world_moves_origin_only() {
+        let mut rng = Rng::seed_from(9);
+        let op = Arc::new(MonotoneQuadratic::random(4, 0.3, 1.0, &mut rng).unwrap());
+        let mut state = run_exact(op, 4, 1, 0.25, 10);
+        let target = vec![0.25; 4];
+        state.shift_world(&target).unwrap();
+        let moved = MethodState::x_world(&state);
+        for i in 0..4 {
+            assert!((moved[i] - target[i]).abs() < 1e-5);
+        }
+        assert_eq!(state.iteration(), 10, "counter untouched");
+    }
+}

@@ -610,9 +610,54 @@ impl Variant {
     }
 }
 
+/// Which algorithm family drives each iteration (`[algo] method`). The
+/// method owns the per-iteration cadence — how many oracle calls and
+/// quantized exchanges one step costs — while the policies only execute
+/// the round-plan it exposes (see `algo::method::MethodState`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Method {
+    /// The paper's Q-GenX template (Algorithm 1) in the configured
+    /// `variant`. Two oracle calls and up to two exchanges per step
+    /// (one each under DA/OptDA).
+    #[default]
+    QGenX,
+    /// Past extra-gradient / optimistic gradient: reuses the previous
+    /// half-step dual in the extrapolation, so ONE oracle call and ONE
+    /// quantized exchange per iteration.
+    Peg,
+    /// Extra-gradient with safeguarded Anderson acceleration, EG-AA(1):
+    /// same two-call/two-exchange cadence as extra-gradient, with a
+    /// depth-1 Anderson candidate accepted only under a residual-decrease
+    /// guard (the safeguard never adds wire rounds).
+    EgAa,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "qgenx" => Ok(Method::QGenX),
+            "peg" | "past" | "past-eg" | "optimistic-gradient" => Ok(Method::Peg),
+            "eg-aa" | "egaa" | "anderson" => Ok(Method::EgAa),
+            other => Err(Error::Config(format!("unknown method `{other}` (qgenx|peg|eg-aa)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::QGenX => "qgenx",
+            Method::Peg => "peg",
+            Method::EgAa => "eg-aa",
+        }
+    }
+}
+
 /// Algorithm configuration.
 #[derive(Clone, Debug)]
 pub struct AlgoConfig {
+    /// Algorithm family (`qgenx` | `peg` | `eg-aa`). The default is the
+    /// paper's template; anything else makes `variant` meaningless (and
+    /// setting both is rejected at parse time).
+    pub method: Method,
     pub variant: Variant,
     /// Base step scale multiplying the adaptive rule (γ0).
     pub gamma0: f64,
@@ -622,8 +667,42 @@ pub struct AlgoConfig {
 
 impl Default for AlgoConfig {
     fn default() -> Self {
-        AlgoConfig { variant: Variant::DualExtrapolation, gamma0: 1.0, adaptive_step: true }
+        AlgoConfig {
+            method: Method::QGenX,
+            variant: Variant::DualExtrapolation,
+            gamma0: 1.0,
+            adaptive_step: true,
+        }
     }
+}
+
+/// Strict `[algo]` table parsing: unknown keys are hard errors (matching
+/// the `[quant.ef]` strictness), and qgenx-family knobs cannot leak onto
+/// the single-call methods.
+fn parse_algo(doc: &toml::Doc, d: &AlgoConfig) -> Result<AlgoConfig> {
+    const KNOWN: [&str; 4] = ["method", "variant", "gamma0", "adaptive_step"];
+    for key in doc.keys_with_prefix("algo.") {
+        let bare = &key["algo.".len()..];
+        if !KNOWN.contains(&bare) {
+            return Err(Error::Config(format!(
+                "unknown key `{key}` in [algo] (known: method, variant, gamma0, adaptive_step)"
+            )));
+        }
+    }
+    let method = Method::parse(&doc.get_str("algo.method", d.method.name())?)?;
+    if method != Method::QGenX && doc.contains("algo.variant") {
+        return Err(Error::Config(format!(
+            "algo.variant is a qgenx-family knob; method = \"{}\" does not take one \
+             (drop the key or set method = \"qgenx\")",
+            method.name()
+        )));
+    }
+    Ok(AlgoConfig {
+        method,
+        variant: Variant::parse(&doc.get_str("algo.variant", d.variant.name())?)?,
+        gamma0: doc.get_f64("algo.gamma0", d.gamma0)?,
+        adaptive_step: doc.get_bool("algo.adaptive_step", d.adaptive_step)?,
+    })
 }
 
 /// Communication topology selection (`[topo]` table) — which graph carries
@@ -833,11 +912,7 @@ impl ExperimentConfig {
                 layers,
                 ef,
             },
-            algo: AlgoConfig {
-                variant: Variant::parse(&doc.get_str("algo.variant", d.algo.variant.name())?)?,
-                gamma0: doc.get_f64("algo.gamma0", d.algo.gamma0)?,
-                adaptive_step: doc.get_bool("algo.adaptive_step", d.algo.adaptive_step)?,
-            },
+            algo: parse_algo(doc, &d.algo)?,
             net: NetConfig {
                 bandwidth_bps: doc.get_f64("net.bandwidth_mbps", d.net.bandwidth_bps / 1e6)?
                     * 1e6,
@@ -1573,5 +1648,63 @@ k = 8
         assert_eq!(Variant::parse("eg").unwrap(), Variant::DualExtrapolation);
         assert_eq!(Variant::parse("da").unwrap(), Variant::DualAveraging);
         assert_eq!(Variant::parse("optimistic").unwrap(), Variant::OptimisticDualAveraging);
+    }
+
+    #[test]
+    fn method_parsing_aliases_and_default() {
+        assert_eq!(Method::parse("qgenx").unwrap(), Method::QGenX);
+        assert_eq!(Method::parse("peg").unwrap(), Method::Peg);
+        assert_eq!(Method::parse("past").unwrap(), Method::Peg);
+        assert_eq!(Method::parse("past-eg").unwrap(), Method::Peg);
+        assert_eq!(Method::parse("eg-aa").unwrap(), Method::EgAa);
+        assert_eq!(Method::parse("anderson").unwrap(), Method::EgAa);
+        assert!(Method::parse("momentum").is_err());
+        // absent [algo] method key stays on the paper template
+        assert_eq!(ExperimentConfig::default().algo.method, Method::QGenX);
+        assert_eq!(ExperimentConfig::from_toml("workers = 4\n").unwrap().algo.method, Method::QGenX);
+    }
+
+    #[test]
+    fn algo_table_parses_new_methods() {
+        let cfg = ExperimentConfig::from_toml("[algo]\nmethod = \"peg\"\ngamma0 = 0.5\n").unwrap();
+        assert_eq!(cfg.algo.method, Method::Peg);
+        assert!((cfg.algo.gamma0 - 0.5).abs() < 1e-12);
+        let cfg = ExperimentConfig::from_toml("[algo]\nmethod = \"eg-aa\"\n").unwrap();
+        assert_eq!(cfg.algo.method, Method::EgAa);
+        // explicit qgenx keeps the variant knob working
+        let cfg =
+            ExperimentConfig::from_toml("[algo]\nmethod = \"qgenx\"\nvariant = \"optda\"\n")
+                .unwrap();
+        assert_eq!(cfg.algo.method, Method::QGenX);
+        assert_eq!(cfg.algo.variant, Variant::OptimisticDualAveraging);
+    }
+
+    #[test]
+    fn algo_table_rejects_junk_keys() {
+        // The satellite bugfix: [algo] used to silently ignore unknown
+        // keys (warn-only), unlike the strict [quant.ef] table. A typo'd
+        // knob must be a hard error, with and without `method`.
+        let err = ExperimentConfig::from_toml("[algo]\ngama0 = 0.5\n").unwrap_err();
+        assert!(err.to_string().contains("gama0"), "{err}");
+        assert!(ExperimentConfig::from_toml("[algo]\nmethod = \"peg\"\nmomentum = 0.9\n").is_err());
+        assert!(ExperimentConfig::from_toml("[algo]\nvariant = \"de\"\nrho = 0.5\n").is_err());
+    }
+
+    #[test]
+    fn algo_table_rejects_variant_on_single_call_methods() {
+        // `variant` selects inside the qgenx family; combining it with a
+        // non-qgenx method is a contradiction, not a preference.
+        for method in ["peg", "eg-aa"] {
+            let src = format!("[algo]\nmethod = \"{method}\"\nvariant = \"optda\"\n");
+            let err = ExperimentConfig::from_toml(&src).unwrap_err();
+            assert!(err.to_string().contains("qgenx-family"), "{err}");
+        }
+        // gamma0/adaptive_step are shared (the adaptive rule is the seam's
+        // common stepsize) and stay legal on every method.
+        let cfg = ExperimentConfig::from_toml(
+            "[algo]\nmethod = \"peg\"\ngamma0 = 0.25\nadaptive_step = false\n",
+        )
+        .unwrap();
+        assert!(!cfg.algo.adaptive_step);
     }
 }

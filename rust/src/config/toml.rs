@@ -101,6 +101,14 @@ impl Doc {
         self.map.contains_key(key)
     }
 
+    /// All keys under a flattened-section prefix (e.g. `"algo."`), in
+    /// document order. Does not mark the keys as used — callers that
+    /// enumerate a table for validation still read accepted keys through
+    /// the typed getters.
+    pub fn keys_with_prefix(&self, prefix: &str) -> Vec<String> {
+        self.map.keys().filter(|k| k.starts_with(prefix)).cloned().collect()
+    }
+
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.mark(key);
         self.map.get(key)

@@ -29,8 +29,8 @@
 
 use super::engine::{Query, RoundEngine};
 use super::session::StepReport;
-use crate::algo::{LocalQGenX, QGenX, Sgda};
-use crate::config::ExperimentConfig;
+use crate::algo::{method_state, LocalQGenX, MethodState, Sgda};
+use crate::config::{ExperimentConfig, Method};
 use crate::error::Result;
 use crate::metrics::{consensus_distance, Recorder, SyncAccounting};
 use crate::oracle::GapEvaluator;
@@ -107,6 +107,21 @@ fn emit_transport_summary(rec: &mut Recorder, eng: &RoundEngine) {
     eng.comps[0].emit_ef_scalars(rec);
 }
 
+/// Per-method cadence scalars (`oracle_calls`, `exchanges_per_step`, plus
+/// method-specific diagnostics). Emitted ONLY off the default method: the
+/// frozen parity suite pins the default recorder's scalar name *set*, and
+/// the refactor must be invisible there.
+fn emit_method_summary(rec: &mut Recorder, method: Method, state: &dyn MethodState) {
+    if method == Method::QGenX {
+        return;
+    }
+    rec.set_scalar("oracle_calls", state.oracle_calls() as f64);
+    rec.set_scalar("exchanges_per_step", state.exchanges_per_step());
+    for (name, v) in state.method_scalars() {
+        rec.set_scalar(name, v);
+    }
+}
+
 fn gap_eval_for(eng: &RoundEngine) -> Option<GapEvaluator> {
     if eng.is_metrics_rank() {
         GapEvaluator::around_solution(eng.op.as_ref(), 2.0)
@@ -128,10 +143,14 @@ fn push_step_diagnostics(rec: &mut Recorder, eng: &RoundEngine, tf: f64, gamma: 
 // ---------------------------------------------------------------- exact --
 
 /// Exact topologies: every rank consumes all `K` decoded duals, so one
-/// [`QGenX`] replica per endpoint stays bit-identical everywhere.
+/// method replica per endpoint stays bit-identical everywhere. The
+/// replica is whatever [`crate::config::Method`] selects behind the
+/// cadence seam; the policy just executes its round-plan — a `None` base
+/// query skips the base exchange entirely (the single-call cadence).
 #[derive(Clone)]
 pub(crate) struct ExactPolicy {
-    state: QGenX,
+    state: Box<dyn MethodState>,
+    method: Method,
     gap_eval: Option<GapEvaluator>,
 }
 
@@ -140,14 +159,8 @@ impl ExactPolicy {
         let x0 = vec![0.0f32; eng.d];
         // recv[0] is all K under exact topologies — the replica averages
         // every worker's dual, in both fabrics.
-        let state = QGenX::new(
-            cfg.algo.variant,
-            &x0,
-            eng.recv[0].len(),
-            cfg.algo.gamma0,
-            cfg.algo.adaptive_step,
-        );
-        ExactPolicy { state, gap_eval: gap_eval_for(eng) }
+        let state = method_state(&cfg.algo, &x0, eng.recv[0].len());
+        ExactPolicy { state, method: cfg.algo.method, gap_eval: gap_eval_for(eng) }
     }
 }
 
@@ -216,6 +229,9 @@ impl ExchangePolicy for ExactPolicy {
         } else if eng.is_metrics_rank() {
             emit_transport_summary(rec, eng);
         }
+        if eng.is_metrics_rank() {
+            emit_method_summary(rec, self.method, self.state.as_ref());
+        }
         Ok(())
     }
 
@@ -240,21 +256,17 @@ impl ExchangePolicy for ExactPolicy {
 /// control plane pools full-mesh while the data plane gossips.
 #[derive(Clone)]
 pub(crate) struct GossipPolicy {
-    states: Vec<QGenX>,
+    states: Vec<Box<dyn MethodState>>,
+    method: Method,
     gap_eval: Option<GapEvaluator>,
 }
 
 impl GossipPolicy {
     pub(crate) fn new(cfg: &ExperimentConfig, eng: &RoundEngine) -> Self {
         let x0 = vec![0.0f32; eng.d];
-        let states = eng
-            .recv
-            .iter()
-            .map(|n| {
-                QGenX::new(cfg.algo.variant, &x0, n.len(), cfg.algo.gamma0, cfg.algo.adaptive_step)
-            })
-            .collect();
-        GossipPolicy { states, gap_eval: gap_eval_for(eng) }
+        let states =
+            eng.recv.iter().map(|n| method_state(&cfg.algo, &x0, n.len())).collect();
+        GossipPolicy { states, method: cfg.algo.method, gap_eval: gap_eval_for(eng) }
     }
 }
 
@@ -268,10 +280,12 @@ impl ExchangePolicy for GossipPolicy {
         rep: &mut StepReport,
     ) -> Result<()> {
         rep.level_update = eng.maybe_per_step_stat(t)?;
-        // Base exchange: each replica queries at its *own* iterate.
+        // Base exchange: each replica queries at its *own* iterate. A
+        // `None` base query (single-call cadence) skips the round for
+        // every replica — the method is uniform across them.
         let base_views: Vec<Vec<Vec<f32>>> = if self.states[0].base_query().is_some() {
             let queries: Vec<Vec<f32>> =
-                self.states.iter().map(|s| s.base_query().expect("DE variant")).collect();
+                self.states.iter().map(|s| s.base_query().expect("uniform cadence")).collect();
             eng.dual_exchange(Query::PerOwned(&queries))?;
             (0..self.states.len()).map(|i| eng.view_of(i)).collect()
         } else {
@@ -340,6 +354,9 @@ impl ExchangePolicy for GossipPolicy {
         } else if eng.is_metrics_rank() {
             emit_transport_summary(rec, eng);
         }
+        if eng.is_metrics_rank() {
+            emit_method_summary(rec, self.method, self.states[0].as_ref());
+        }
         Ok(())
     }
 
@@ -376,6 +393,7 @@ impl ExchangePolicy for GossipPolicy {
 #[derive(Clone)]
 pub(crate) struct LocalPolicy {
     reps: Vec<LocalQGenX>,
+    method: Method,
     sync_acc: SyncAccounting,
     gap_eval: Option<GapEvaluator>,
     h: usize,
@@ -395,15 +413,10 @@ pub(crate) struct LocalPolicy {
 impl LocalPolicy {
     pub(crate) fn new(cfg: &ExperimentConfig, eng: &RoundEngine) -> Self {
         let x0 = vec![0.0f32; eng.d];
-        let reps = eng
-            .owned
-            .iter()
-            .map(|_| {
-                LocalQGenX::new(cfg.algo.variant, &x0, cfg.algo.gamma0, cfg.algo.adaptive_step)
-            })
-            .collect();
+        let reps = eng.owned.iter().map(|_| LocalQGenX::from_algo(&cfg.algo, &x0)).collect();
         LocalPolicy {
             reps,
+            method: cfg.algo.method,
             sync_acc: SyncAccounting::new(),
             gap_eval: gap_eval_for(eng),
             h: cfg.local.steps,
@@ -581,6 +594,13 @@ impl ExchangePolicy for LocalPolicy {
             emit_transport_summary(rec, eng);
             rec.set_scalar("local_steps", self.h as f64);
             self.sync_acc.emit_scalars(rec);
+        }
+        // The local family exchanges model deltas every H steps, not
+        // per-iteration duals, so `exchanges_per_step` does not apply
+        // (sync cadence is already reported by `syncs`) — only the
+        // method's oracle-call count is meaningful here.
+        if eng.is_metrics_rank() && self.method != Method::QGenX {
+            rec.set_scalar("oracle_calls", self.reps[0].oracle_calls() as f64);
         }
         Ok(())
     }

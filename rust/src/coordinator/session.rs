@@ -245,6 +245,13 @@ impl SessionBuilder {
     pub fn build(self) -> Result<Session> {
         let cfg = self.cfg;
         cfg.validate()?;
+        if self.algorithm == Algorithm::Sgda && cfg.algo.method != crate::config::Method::QGenX {
+            return Err(Error::Coordinator(format!(
+                "the QSGDA baseline is its own update rule and ignores [algo]; \
+                 drop method = \"{}\"",
+                cfg.algo.method.name()
+            )));
+        }
         if let Some((transport, rank)) = &self.transport {
             if transport.peers() != cfg.workers {
                 return Err(Error::Coordinator(format!(
@@ -700,6 +707,101 @@ mod tests {
             assert_eq!(whole.scalar("total_bits"), rec.scalar("total_bits"), "{family}");
             assert_eq!(whole.scalar("level_updates"), rec.scalar("level_updates"), "{family}");
         }
+    }
+
+    #[test]
+    fn checkpoint_resume_carries_a_live_prev_half_bit_for_bit() {
+        // Both carriers of the previous half-step dual: the OptDA variant
+        // (qgenx family) and PEG (single-call method). The checkpoint is
+        // taken at an odd mid-run iteration so `prev_half` is live state
+        // the snapshot must capture — the default-variant drill above
+        // never exercises it.
+        for carrier in ["optda", "peg"] {
+            let mut cfg = base_cfg();
+            match carrier {
+                "optda" => cfg.algo.variant = crate::config::Variant::OptimisticDualAveraging,
+                _ => cfg.algo.method = crate::config::Method::Peg,
+            }
+            let whole = run_experiment(&cfg).unwrap();
+
+            let mut first = Session::builder(cfg.clone()).build().unwrap();
+            first.run_to(cfg.iters / 2 + 1).unwrap();
+            let cp = first.checkpoint().unwrap();
+            drop(first);
+            let mut resumed = Session::resume(cp);
+            resumed.run_to(cfg.iters).unwrap();
+            let rec = resumed.into_recorder();
+
+            for series in ["gap", "dist", "bits_cum"] {
+                assert_eq!(
+                    whole.get(series).unwrap().ys(),
+                    rec.get(series).unwrap().ys(),
+                    "{carrier}/{series}: resumed run must match bit-for-bit"
+                );
+            }
+            assert_eq!(whole.scalar("total_bits"), rec.scalar("total_bits"), "{carrier}");
+            assert_eq!(whole.scalar("rounds"), rec.scalar("rounds"), "{carrier}");
+        }
+    }
+
+    #[test]
+    fn new_methods_run_on_every_family_with_their_cadence() {
+        use crate::config::Method;
+        for method in [Method::Peg, Method::EgAa] {
+            for family in ["exact", "gossip", "local"] {
+                let mut cfg = family_cfg(family);
+                cfg.algo.method = method;
+                let rec = run_experiment(&cfg).unwrap();
+                let gap = *rec.get("gap").unwrap().ys().last().unwrap();
+                assert!(gap.is_finite() && gap > 0.0, "{method:?}/{family}: gap {gap}");
+                // The cadence scalars exist exactly off the default method.
+                assert!(
+                    rec.scalar("oracle_calls").unwrap() > 0.0,
+                    "{method:?}/{family}"
+                );
+                if family != "local" {
+                    let per = rec.scalar("exchanges_per_step").unwrap();
+                    let want = if method == Method::Peg { 1.0 } else { 2.0 };
+                    assert_eq!(per, want, "{method:?}/{family}");
+                }
+                if method == Method::EgAa {
+                    if family != "local" {
+                        assert!(rec.scalar("aa_accepted_steps").is_some(), "{family}");
+                    }
+                } else {
+                    assert!(rec.scalar("aa_accepted_steps").is_none(), "{family}");
+                }
+            }
+        }
+        // And the default stays clean: no cadence scalars on qgenx runs.
+        let rec = run_experiment(&base_cfg()).unwrap();
+        assert!(rec.scalar("oracle_calls").is_none());
+        assert!(rec.scalar("exchanges_per_step").is_none());
+    }
+
+    #[test]
+    fn peg_halves_the_data_plane_against_extragradient() {
+        // Same oracle stream, same quantizer: PEG's single exchange per
+        // iteration must land strictly below the two-exchange default in
+        // both wire bits and data rounds.
+        let de = run_experiment(&base_cfg()).unwrap();
+        let mut cfg = base_cfg();
+        cfg.algo.method = crate::config::Method::Peg;
+        let peg = run_experiment(&cfg).unwrap();
+        let (b_de, b_peg) =
+            (de.scalar("total_bits").unwrap(), peg.scalar("total_bits").unwrap());
+        assert!(b_peg < 0.7 * b_de, "PEG bits {b_peg} vs DE {b_de}");
+        assert!(peg.scalar("rounds").unwrap() < de.scalar("rounds").unwrap());
+        // One oracle call per iteration, per the method's own accounting.
+        assert_eq!(peg.scalar("oracle_calls").unwrap(), cfg.iters as f64);
+    }
+
+    #[test]
+    fn sgda_baseline_rejects_non_default_methods() {
+        let mut cfg = base_cfg();
+        cfg.algo.method = crate::config::Method::EgAa;
+        let err = Session::builder(cfg).algorithm(Algorithm::Sgda).build().unwrap_err();
+        assert!(err.to_string().contains("QSGDA"), "{err}");
     }
 
     #[test]

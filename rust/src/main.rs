@@ -76,9 +76,9 @@ fn print_help() {
          USAGE: qgenx <command> [--key value ...]\n\
          \n\
          COMMANDS:\n\
-           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--topo full-mesh|star|ring|hierarchical|gossip] [--rewire-every N] [--local H] [--staleness S] [--straggler-rate p] [--layers N|name:end,...,last] [--ef off|topk:k|randk:k|rankr:r[:rows]] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
+           run    VI experiment via the coordinator   [--config f.toml] [--threaded] [--qsgda] [--algo qgenx|peg|eg-aa] [--topo full-mesh|star|ring|hierarchical|gossip] [--rewire-every N] [--local H] [--staleness S] [--straggler-rate p] [--layers N|name:end,...,last] [--ef off|topk:k|randk:k|rankr:r[:rows]] [--watch] [--stop-at-gap g] [--telemetry mem|path.jsonl]\n\
            gan    WGAN-GP experiment (paper §5)       [--mode fp32|uq8|uq4] [--steps N] [--workers K] [--layerwise]\n\
-           lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--layers N] [--ef off|topk:k|randk:k|rankr:r[:rows]]\n\
+           lm     distributed quantized LM training   [--steps N] [--workers K] [--optimizer msgd|qgenx] [--algo qgenx|peg|eg-aa] [--layers N] [--ef off|topk:k|randk:k|rankr:r[:rows]]\n\
            worker one socket-transport rank           --rank R --connect HOST:PORT|unix:PATH [--timeout-ms N] [--fault kind@rank:round[:arg],...] [run flags; rank 0 hosts the rendezvous and reports]\n\
            launch spawn K local socket workers        [--addr HOST:PORT|unix:PATH] [run flags incl. --fault, forwarded to every worker]\n\
            info   print the artifact manifest summary\n\
@@ -147,6 +147,9 @@ fn run_cfg_from_flags(flags: &Flags) -> Result<ExperimentConfig, String> {
     if let Some(t) = flags.get("topo") {
         cfg.topo.kind = t.clone();
     }
+    if let Some(m) = flags.get("algo") {
+        cfg.algo.method = qgenx::config::Method::parse(m).map_err(|e| e.to_string())?;
+    }
     if let Some(h) = flags.get("local") {
         cfg.local.steps = h.parse().map_err(|_| "bad --local")?;
     }
@@ -182,12 +185,13 @@ fn run_cfg_from_flags(flags: &Flags) -> Result<ExperimentConfig, String> {
 /// The one-line run header every coordinator entrypoint prints.
 fn print_run_header(kind: &str, cfg: &ExperimentConfig) {
     println!(
-        "{kind}: problem={} dim={} K={} T={} mode={} variant={} topo={} local_steps={} layers={}",
+        "{kind}: problem={} dim={} K={} T={} mode={} algo={} variant={} topo={} local_steps={} layers={}",
         cfg.problem.kind,
         cfg.problem.dim,
         cfg.workers,
         cfg.iters,
         cfg.quant.mode.name(),
+        cfg.algo.method.name(),
         cfg.algo.variant.name(),
         cfg.topo.kind,
         cfg.local.steps,
@@ -236,6 +240,9 @@ fn cmd_run(flags: &Flags) -> Result<(), String> {
     let cfg = run_cfg_from_flags(flags)?;
     if flags.contains_key("qsgda") && cfg.local.steps > 1 {
         return Err("--qsgda has no local-steps path; drop --local".into());
+    }
+    if flags.contains_key("qsgda") && cfg.algo.method != qgenx::config::Method::QGenX {
+        return Err("--qsgda is its own baseline update rule; drop --algo".into());
     }
     if (flags.contains_key("watch")
         || flags.contains_key("stop-at-gap")
@@ -477,8 +484,16 @@ fn cmd_lm(flags: &Flags) -> Result<(), String> {
     if let Some(spec) = flags.get("ef") {
         quant.ef = qgenx::config::EfConfig::parse_cli(spec).map_err(|e| e.to_string())?;
     }
+    let method = match flags.get("algo") {
+        Some(m) => qgenx::config::Method::parse(m).map_err(|e| e.to_string())?,
+        None => qgenx::config::Method::QGenX,
+    };
+    if method != qgenx::config::Method::QGenX && !matches!(optimizer, LmOptimizer::QGenX) {
+        return Err("--algo selects a VI method; it needs --optimizer qgenx".into());
+    }
     let cfg = LmTrainConfig {
         optimizer,
+        method,
         quant,
         steps: flag_usize(flags, "steps", 200),
         workers: flag_usize(flags, "workers", 3),

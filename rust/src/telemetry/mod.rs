@@ -751,6 +751,7 @@ pub fn manifest_event(cfg: &crate::config::ExperimentConfig) -> Json {
         ("iters", Json::Num(cfg.iters as f64)),
         ("seed", Json::Num(cfg.seed as f64)),
         ("topo", Json::Str(cfg.topo.kind.clone())),
+        ("algo", Json::Str(cfg.algo.method.name().into())),
         ("problem", Json::Str(cfg.problem.kind.clone())),
         (
             "quant",

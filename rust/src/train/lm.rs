@@ -12,8 +12,8 @@
 //!   configuration used for the recorded loss-curve experiment.
 
 use super::data::TokenStream;
-use crate::algo::QGenX;
-use crate::config::{QuantConfig, Variant};
+use crate::algo::method_state;
+use crate::config::{AlgoConfig, Method, QuantConfig};
 use crate::coordinator::Compressor;
 use crate::error::Result;
 use crate::metrics::Recorder;
@@ -35,6 +35,9 @@ pub enum LmOptimizer {
 #[derive(Clone, Debug)]
 pub struct LmTrainConfig {
     pub optimizer: LmOptimizer,
+    /// VI method driving the QGenX optimizer path (`--algo`); ignored by
+    /// the MSGD baseline, which is its own update rule.
+    pub method: Method,
     pub quant: QuantConfig,
     pub workers: usize,
     pub steps: usize,
@@ -47,6 +50,7 @@ impl Default for LmTrainConfig {
     fn default() -> Self {
         LmTrainConfig {
             optimizer: LmOptimizer::Msgd { momentum_pct: 90 },
+            method: Method::QGenX,
             quant: QuantConfig::default(),
             workers: 3,
             steps: 200,
@@ -209,48 +213,67 @@ impl<'rt> LmTrainer<'rt> {
         Ok(rec)
     }
 
+    /// Quantize + allgather + decode, keeping all K per-worker vectors
+    /// (the method states need them, not the mean).
+    fn exchange_decode(&mut self, locals: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let d = self.params.len();
+        let t0 = Instant::now();
+        let mut bits = Vec::with_capacity(locals.len());
+        let mut decoded = vec![vec![0.0f32; d]; locals.len()];
+        for (w, v) in locals.iter().enumerate() {
+            let (bytes, b) = self.comps[w].compress(v)?;
+            bits.push(b);
+            self.comps[w].decompress(&bytes, &mut decoded[w])?;
+        }
+        self.comm_time += t0.elapsed().as_secs_f64();
+        self.traffic.record_allgather(&bits, &self.net);
+        Ok(decoded)
+    }
+
     fn train_qgenx(&mut self) -> Result<Recorder> {
         let mut rec = Recorder::new();
         let k = self.cfg.workers;
-        let mut state =
-            QGenX::new(Variant::DualExtrapolation, &self.params.clone(), k, self.cfg.lr, true);
+        let algo = AlgoConfig {
+            method: self.cfg.method,
+            gamma0: self.cfg.lr,
+            adaptive_step: true,
+            ..AlgoConfig::default()
+        };
+        let x0 = self.params.clone();
+        let mut state = method_state(&algo, &x0, k);
         for t in 1..=self.cfg.steps {
             self.maybe_update_levels(t)?;
-            let xq = state.base_query().expect("DE always queries");
-            let (loss, locals) = self.local_grads(&xq)?;
-            // decode per-worker (state needs all K vectors, not the mean)
-            let d = self.params.len();
-            let t0 = Instant::now();
-            let mut bits = Vec::with_capacity(k);
-            let mut decoded = vec![vec![0.0f32; d]; k];
-            for (w, v) in locals.iter().enumerate() {
-                let (bytes, b) = self.comps[w].compress(v)?;
-                bits.push(b);
-                self.comps[w].decompress(&bytes, &mut decoded[w])?;
-            }
-            self.comm_time += t0.elapsed().as_secs_f64();
-            self.traffic.record_allgather(&bits, &self.net);
-            let x_half = state.extrapolate(&decoded)?;
+            // Base leg — only methods whose cadence asks for it pay the
+            // oracle pass and the exchange (PEG skips both).
+            let mut base_loss = None;
+            let decoded_base = match state.base_query() {
+                Some(xq) => {
+                    let (loss, locals) = self.local_grads(&xq)?;
+                    base_loss = Some(loss);
+                    Some(self.exchange_decode(&locals)?)
+                }
+                None => None,
+            };
+            let x_half = state.extrapolate(decoded_base.as_deref().unwrap_or(&[]))?;
 
-            let (_lh, locals_half) = self.local_grads(&x_half)?;
-            let t1 = Instant::now();
-            let mut bits2 = Vec::with_capacity(k);
-            let mut decoded2 = vec![vec![0.0f32; d]; k];
-            for (w, v) in locals_half.iter().enumerate() {
-                let (bytes, b) = self.comps[w].compress(v)?;
-                bits2.push(b);
-                self.comps[w].decompress(&bytes, &mut decoded2[w])?;
-            }
-            self.comm_time += t1.elapsed().as_secs_f64();
-            self.traffic.record_allgather(&bits2, &self.net);
-            state.update(&decoded2)?;
+            let (half_loss, locals_half) = self.local_grads(&x_half)?;
+            let decoded_half = self.exchange_decode(&locals_half)?;
+            state.update(&decoded_half)?;
             self.params = state.x_world();
+            let loss = base_loss.unwrap_or(half_loss);
 
             if t % self.cfg.eval_every.max(1) == 0 || t == 1 || t == self.cfg.steps {
                 rec.push("loss", t as f64, loss);
                 rec.push("bits_cum", t as f64, self.traffic.bits_sent as f64);
                 rec.push("time_cum", t as f64, self.grad_time + self.comm_time);
                 rec.push("gamma", t as f64, state.gamma());
+            }
+        }
+        if self.cfg.method != Method::QGenX {
+            rec.set_scalar("oracle_calls", state.oracle_calls() as f64);
+            rec.set_scalar("exchanges_per_step", state.exchanges_per_step());
+            for (name, v) in state.method_scalars() {
+                rec.set_scalar(name, v);
             }
         }
         self.finalize(&mut rec);

@@ -18,7 +18,7 @@
 //! * A real multi-process run (`qgenx launch` spawning `qgenx worker`
 //!   subprocesses) reproduces the loopback CLI run's output.
 
-use qgenx::config::ExperimentConfig;
+use qgenx::config::{ExperimentConfig, Method};
 use qgenx::coordinator::{run_experiment, run_threaded, Checkpoint, Session};
 use qgenx::metrics::Recorder;
 use qgenx::net::{connect_group, MeasuredWire, SocketOpts, Transport};
@@ -121,6 +121,57 @@ fn socket_fabric_matches_loopback_and_threads_on_exact_topologies() {
         );
         assert_eq!(inline_rec.scalar("rounds"), recs[0].scalar("rounds"), "{topo}");
         assert_eq!(inline_rec.scalar("level_updates"), recs[0].scalar("level_updates"), "{topo}");
+    }
+}
+
+#[test]
+fn new_methods_are_fabric_invariant_on_exact_topologies() {
+    // The method-cadence seam must be fabric-blind: Past Extra-Gradient
+    // (one exchange per step, live `prev_half` state) and EG-AA (two
+    // exchanges plus the safeguarded secant mixing) produce the same
+    // trajectory, wire accounting, and cadence scalars whether the
+    // endpoints are in-engine, threads, or framed sockets.
+    for (i, method) in [Method::Peg, Method::EgAa].into_iter().enumerate() {
+        for (j, topo) in ["full-mesh", "ring"].iter().enumerate() {
+            let mut c = base_cfg();
+            c.topo.kind = topo.to_string();
+            c.algo.method = method;
+            let name = method.name();
+            let inline_rec = run_experiment(&c).unwrap();
+            let threaded = run_threaded(&c).unwrap();
+            let (recs, _) = run_socket_group(&c, &format!("algo{i}{j}"), None);
+            assert_eq!(
+                inline_rec.get("gap").unwrap().ys(),
+                threaded.recorder.get("gap").unwrap().ys(),
+                "{name}/{topo}: threads must reproduce the loopback trajectory"
+            );
+            assert_eq!(
+                inline_rec.get("gap").unwrap().ys(),
+                recs[0].get("gap").unwrap().ys(),
+                "{name}/{topo}: sockets must reproduce the loopback trajectory"
+            );
+            assert_eq!(
+                threaded.recorder.scalar("total_bits"),
+                recs[0].scalar("total_bits"),
+                "{name}/{topo}: AllGather and socket wire bytes must be identical"
+            );
+            // The cadence telemetry rides the same metrics rank on every
+            // fabric and must agree: one exchange/step for PEG, two for
+            // EG-AA, and the same oracle-call count everywhere.
+            for rec in [&inline_rec, &threaded.recorder, &recs[0]] {
+                assert_eq!(
+                    rec.scalar("exchanges_per_step"),
+                    Some(if method == Method::Peg { 1.0 } else { 2.0 }),
+                    "{name}/{topo}"
+                );
+            }
+            assert_eq!(
+                inline_rec.scalar("oracle_calls"),
+                recs[0].scalar("oracle_calls"),
+                "{name}/{topo}: oracle accounting must be fabric-invariant"
+            );
+            assert_eq!(inline_rec.scalar("rounds"), recs[0].scalar("rounds"), "{name}/{topo}");
+        }
     }
 }
 

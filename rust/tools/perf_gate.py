@@ -33,6 +33,18 @@ on regression. The gate dispatches on the file's `bench` field:
 * **finiteness** — every fresh sweep point's `gap` must be finite
   (degradation curves may move, divergence may not).
 
+## ef gates (all machine-independent)
+
+* **schema / shape** — same `bench`, same `schema`; identical config set
+  keyed by (oracle, config name). A vanished compressor config is a
+  regression — the error-feedback axis stopped being measured.
+* **finiteness** — every fresh config's `final_gap` and `bits_at_gap`
+  must be finite (the compressor may move the curve, not diverge it).
+* **floor (full mode only)** — when the fresh run is full-scale, at
+  least one contractive config must reach the matched gap on `lm-proxy`
+  with strictly fewer bits than the unbiased floor config (the bench's
+  headline claim, re-asserted against the fresh numbers).
+
 Environment overrides: PERF_GATE_TOL, PERF_GATE_SPEEDUP_MIN.
 Exit status: 0 = pass, 1 = regression(s), 2 = usage/parse error.
 """
@@ -154,6 +166,44 @@ def gate_churn(base, fresh, failures):
         print(f"perf_gate: ok — churn case set intact ({points} sweep points, all finite)")
 
 
+def gate_ef(base, fresh, failures):
+    base_cfgs = {
+        (c["oracle"], cfg["name"])
+        for c in base.get("curves", [])
+        for cfg in c.get("configs", [])
+    }
+    fresh_curves = {c.get("oracle"): c.get("configs", []) for c in fresh.get("curves", [])}
+    fresh_cfgs = {(o, cfg["name"]) for o, cfgs in fresh_curves.items() for cfg in cfgs}
+    for k in sorted(base_cfgs - fresh_cfgs):
+        failures.append(f"config vanished from fresh run: {k}")
+    for k in sorted(fresh_cfgs - base_cfgs):
+        print(f"note: new config not in baseline: {k}")
+
+    for oracle, cfgs in fresh_curves.items():
+        for cfg in cfgs:
+            for field in ("final_gap", "bits_at_gap"):
+                v = cfg.get(field)
+                if v is None or not math.isfinite(v):
+                    failures.append(f"{oracle}/{cfg.get('name')}: non-finite {field} {v!r}")
+
+    if fresh.get("mode") == "full":
+        lm = {cfg["name"]: cfg for cfg in fresh_curves.get("lm-proxy", [])}
+        floor = lm.get("uq4-huffman")
+        ef = [c for n, c in lm.items() if n != "uq4-huffman"]
+        if floor is None or not ef:
+            failures.append("lm-proxy floor/contractive configs missing from full run")
+        elif not any(c["bits_at_gap"] < floor["bits_at_gap"] for c in ef):
+            failures.append(
+                "no contractive config beats the unbiased floor on lm-proxy "
+                f"(floor bits_at_gap {floor['bits_at_gap']:.3e})"
+            )
+    else:
+        print(f"floor check: skipped (fresh mode {fresh.get('mode')!r}, needs 'full')")
+
+    if not failures:
+        print(f"perf_gate: ok — ef config set intact ({len(fresh_cfgs)} configs, all finite)")
+
+
 def main():
     if len(sys.argv) != 3:
         print(__doc__, file=sys.stderr)
@@ -166,6 +216,8 @@ def main():
     bench = base.get("bench")
     if bench == "churn_degradation":
         gate_churn(base, fresh, failures)
+    elif bench == "ef_tradeoff":
+        gate_ef(base, fresh, failures)
     elif bench == "perf_hotpath":
         gate_hotpath(base, fresh, failures)
     else:
